@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig. 2 (iterations-to-tolerance vs P, two rho regimes).
+//! `cargo bench --bench fig2_pstar` — scale via SHOTGUN_BENCH_SCALE.
+
+use shotgun::bench::{fig2, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig {
+        scale: std::env::var("SHOTGUN_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.15),
+        ..Default::default()
+    };
+    fig2::run(&cfg);
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 3 (Lasso runtime scatter, solvers vs Shotgun P=8).
+//! `cargo bench --bench fig3_lasso` — scale via SHOTGUN_BENCH_SCALE.
+
+use shotgun::bench::{fig3, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig {
+        scale: std::env::var("SHOTGUN_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.12),
+        max_seconds: 20.0,
+        ..Default::default()
+    };
+    fig3::run(&cfg);
+}

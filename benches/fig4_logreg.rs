@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 4 (logistic regression, objective/error vs time).
+//! `cargo bench --bench fig4_logreg` — scale via SHOTGUN_BENCH_SCALE.
+
+use shotgun::bench::{fig4, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig {
+        scale: std::env::var("SHOTGUN_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.15),
+        max_seconds: 20.0,
+        ..Default::default()
+    };
+    fig4::run(&cfg);
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 5 (self-speedup in iterations + simulated time),
+//! plus the bound-validation table (E5) and headline numbers (E6/E7).
+//! `cargo bench --bench fig5_speedup` — scale via SHOTGUN_BENCH_SCALE.
+
+use shotgun::bench::{bounds, fig5, headline, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig {
+        scale: std::env::var("SHOTGUN_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.15),
+        ..Default::default()
+    };
+    fig5::run(&cfg);
+    bounds::run(&cfg);
+    headline::run(&cfg);
+}

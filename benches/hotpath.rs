@@ -1,0 +1,118 @@
+//! Microbenchmarks of the L3 hot paths (criterion-substitute harness):
+//! the per-update column kernels, one synchronous Shotgun round, the
+//! threaded engine's CAS loop, and the XLA block-round dispatch.
+//!
+//! `cargo bench --bench hotpath` — these are the §Perf regression gates.
+
+use shotgun::coordinator::atomic::AtomicVec;
+use shotgun::coordinator::{ShotgunConfig, ShotgunExact};
+use shotgun::data::synth;
+use shotgun::metrics::harness::{bench_for, black_box};
+use shotgun::objective::LassoProblem;
+use shotgun::util::rng::Rng;
+
+fn main() {
+    let mut results = Vec::new();
+
+    // --- sparse column kernels (the per-update cost) ---
+    {
+        let ds = synth::sparse_imaging(4096, 8192, 0.01, 1);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let r = prob.residual(&vec![0.0; 8192]);
+        let mut rng = Rng::new(2);
+        results.push(bench_for("col_dot sparse (n=4096, ~41 nnz)", 0.5, 64, || {
+            let j = rng.below(8192);
+            black_box(ds.design.col_dot(j, &r))
+        }));
+        let mut r2 = r.clone();
+        let mut rng2 = Rng::new(3);
+        results.push(bench_for("col_axpy sparse", 0.5, 64, || {
+            let j = rng2.below(8192);
+            ds.design.col_axpy(j, 1e-9, &mut r2);
+        }));
+    }
+
+    // --- dense column kernels ---
+    {
+        let ds = synth::singlepix_pm1(1024, 2048, 4);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let r = prob.residual(&vec![0.0; 2048]);
+        let mut rng = Rng::new(5);
+        results.push(bench_for("col_dot dense (n=1024)", 0.5, 64, || {
+            let j = rng.below(2048);
+            black_box(ds.design.col_dot(j, &r))
+        }));
+    }
+
+    // --- one synchronous Shotgun round (P=8) ---
+    {
+        let ds = synth::sparse_imaging(2048, 4096, 0.01, 6);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.05);
+        let engine = ShotgunExact::new(ShotgunConfig {
+            p: 8,
+            ..Default::default()
+        });
+        let mut x = vec![0.0; 4096];
+        let mut r = prob.residual(&x);
+        let mut rng = Rng::new(7);
+        let mut draws = Vec::new();
+        let mut deltas = Vec::new();
+        results.push(bench_for("shotgun_round P=8 (sparse 2048x4096)", 1.0, 64, || {
+            engine.lasso_round(&prob, &mut x, &mut r, &mut rng, &mut draws, &mut deltas)
+        }));
+    }
+
+    // --- atomic CAS residual update (threaded engine inner op) ---
+    {
+        let v = AtomicVec::from_slice(&vec![0.0; 4096]);
+        let mut rng = Rng::new(8);
+        results.push(bench_for("atomic fetch_add x64", 0.5, 64, || {
+            for _ in 0..64 {
+                v.fetch_add(rng.below(4096), 1e-9);
+            }
+        }));
+    }
+
+    // --- power iteration step ---
+    {
+        let ds = synth::sparse_imaging(2048, 4096, 0.01, 9);
+        let mut v = vec![1.0 / (4096f64).sqrt(); 4096];
+        let mut av = vec![0.0; 2048];
+        let mut w = vec![0.0; 4096];
+        results.push(bench_for("power_iter step (sparse 2048x4096)", 0.5, 32, || {
+            ds.design.matvec(&v, &mut av);
+            ds.design.matvec_t(&av, &mut w);
+            let n = shotgun::sparsela::vecops::norm2(&w);
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / n.max(1e-30);
+            }
+        }));
+    }
+
+    // --- XLA block-round dispatch (when artifacts are built) ---
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use shotgun::runtime::XlaLassoEngine;
+        use shotgun::solvers::common::SolveOptions;
+        let mut engine = XlaLassoEngine::open(std::path::Path::new("artifacts"), "s").unwrap();
+        let ds = synth::singlepix_pm1(256, 512, 10);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.3);
+        let opts = SolveOptions {
+            max_iters: 8, // one device call (k=8 fused rounds)
+            tol: 0.0,
+            ..Default::default()
+        };
+        results.push(bench_for("xla lasso_rounds call (k=8, s profile)", 2.0, 8, || {
+            black_box(engine.solve_lasso(&prob, &vec![0.0; 512], &opts).unwrap())
+        }));
+    }
+
+    println!("\n=== hotpath microbenchmarks ===");
+    let mut json = String::new();
+    for r in &results {
+        println!("{}", r.report_line());
+        json.push_str(&r.to_json());
+        json.push('\n');
+    }
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/hotpath.jsonl", json);
+}

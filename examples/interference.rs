@@ -1,0 +1,83 @@
+//! Fig. 1 intuition, made quantitative (E8): parallel updates help when
+//! features are uncorrelated and fight when they are correlated.
+//!
+//!   cargo run --release --example interference
+//!
+//! Measures Theorem 3.1's decomposition directly: for one synchronous
+//! Shotgun round, F(x + Δx) - F(x) splits into a sequential-progress term
+//! -1/2 Σ δ_j² and an interference term 1/2 Σ_{j≠k} (A^T A)_{jk} δ_j δ_k.
+
+use shotgun::coordinator::{ShotgunConfig, ShotgunExact};
+use shotgun::data::synth;
+use shotgun::objective::LassoProblem;
+use shotgun::util::rng::Rng;
+
+/// One exact round; returns (actual ΔF, progress term, interference term).
+fn round_decomposition(ds: &shotgun::data::Dataset, lam: f64, p: usize, seed: u64) -> (f64, f64, f64) {
+    let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+    let d = ds.d();
+    // start from a few sequential steps so deltas are non-trivial
+    let mut x = vec![0.0; d];
+    let mut r = prob.residual(&x);
+    let mut rng = Rng::new(seed);
+    for _ in 0..d {
+        let j = rng.below(d);
+        let dx = prob.cd_step(j, x[j], &r);
+        prob.apply_step(j, dx, &mut x, &mut r);
+    }
+    let f_before = prob.objective_from_residual(&r, &x);
+
+    // one synchronous round of P updates
+    let engine = ShotgunExact::new(ShotgunConfig {
+        p,
+        ..Default::default()
+    });
+    let mut draws = Vec::new();
+    let mut deltas = Vec::new();
+    let mut x2 = x.clone();
+    let mut r2 = r.clone();
+    engine.lasso_round(&prob, &mut x2, &mut r2, &mut rng, &mut draws, &mut deltas);
+    let f_after = prob.objective_from_residual(&r2, &x2);
+
+    // Theorem 3.1 terms
+    let progress: f64 = -0.5 * deltas.iter().map(|d| d * d).sum::<f64>();
+    let mut interference = 0.0;
+    let dense = ds.design.to_dense();
+    for (a, (&ja, &da)) in draws.iter().zip(&deltas).enumerate().map(|(i, jd)| (i, jd)) {
+        for (b, (&jb, &db)) in draws.iter().zip(&deltas).enumerate().map(|(i, jd)| (i, jd)) {
+            if a != b {
+                let gram: f64 = (0..ds.n()).map(|i| dense.get(i, ja) * dense.get(i, jb)).sum();
+                interference += 0.5 * gram * da * db;
+            }
+        }
+    }
+    (f_after - f_before, progress, interference)
+}
+
+fn main() {
+    println!("Theorem 3.1: ΔF <= progress + interference, one Shotgun round (P=8)\n");
+    println!(
+        "{:<28} {:>12} {:>12} {:>14} {:>8}",
+        "design", "ΔF", "progress", "interference", "bound?"
+    );
+    for (name, c) in [
+        ("uncorrelated (c=0.0)", 0.0),
+        ("mild (c=0.3)", 0.3),
+        ("correlated (c=0.8)", 0.8),
+        ("near-duplicate (c=0.97)", 0.97),
+    ] {
+        let ds = synth::correlated(256, 64, c, 5);
+        let (df, prog, intf) = round_decomposition(&ds, 0.05, 8, 9);
+        let holds = df <= prog + intf + 1e-9;
+        println!(
+            "{name:<28} {df:>12.6} {prog:>12.6} {intf:>14.6} {holds:>8}"
+        );
+    }
+    println!("\nUncorrelated: interference ~ 0 and the full progress lands.");
+    println!("Correlated: positive interference eats the progress — the Fig. 1");
+    println!("right-hand panel, and the reason Theorem 3.2 caps P at d/rho.");
+    println!("\n(Caveat: Theorem 3.1 is proven in the non-negative duplicated-");
+    println!("feature space; our signed-coordinate measurement can slightly");
+    println!("violate the decomposition when a step crosses zero, as the");
+    println!("near-duplicate row sometimes shows at ~1e-4 magnitudes.)");
+}

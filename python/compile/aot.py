@@ -1,0 +1,136 @@
+"""AOT compile path: lower the L2 entrypoints to HLO text artifacts.
+
+Run once by `make artifacts` (no-op if inputs are unchanged):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO *text*, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Alongside the .hlo.txt files we write `manifest.json` describing every
+artifact's entrypoint, shapes and dtypes; the rust runtime
+(rust/src/runtime/artifacts.rs) is manifest-driven and never hardcodes
+shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Shape profiles for the artifact set. `p` is the Shotgun parallelism of
+# the block round; `k` the number of fused rounds in the scan variant.
+# Small profiles keep CPU-PJRT execution quick in tests; `m` is the
+# example/bench workhorse.
+PROFILES = {
+    "s": dict(n=256, d=512, p=8, k=8, power_steps=16),
+    "m": dict(n=512, d=2048, p=16, k=16, power_steps=32),
+}
+
+
+def entries(prof: dict):
+    """(name, fn, example_args) for every AOT entrypoint of one profile."""
+    n, d, p, k = prof["n"], prof["d"], prof["p"], prof["k"]
+    steps = prof["power_steps"]
+    A = spec((n, d))
+    return [
+        (
+            "lasso_round",
+            model.lasso_round,
+            (A, spec((n,)), spec((d,)), spec((p,), I32), spec(())),
+        ),
+        (
+            "lasso_rounds",
+            model.lasso_rounds,
+            (A, spec((n,)), spec((d,)), spec((k, p), I32), spec(())),
+        ),
+        (
+            "lasso_objective",
+            model.lasso_objective,
+            (A, spec((d,)), spec((n,)), spec(())),
+        ),
+        (
+            "logistic_round",
+            model.logistic_round,
+            (A, spec((d,)), spec((n,)), spec((p,), I32), spec(())),
+        ),
+        (
+            "logistic_objective",
+            model.logistic_objective,
+            (A, spec((d,)), spec((n,)), spec(())),
+        ),
+        (
+            "power_iter",
+            lambda A, v: model.power_iter(A, v, steps),
+            (A, spec((d,))),
+        ),
+    ]
+
+
+def arg_desc(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profiles", default="s,m", help="comma-separated profile tags")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"profiles": {}, "artifacts": []}
+    for tag in args.profiles.split(","):
+        prof = PROFILES[tag]
+        manifest["profiles"][tag] = prof
+        for name, fn, eargs in entries(prof):
+            lowered = jax.jit(fn).lower(*eargs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.{tag}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "entry": name,
+                    "profile": tag,
+                    "file": fname,
+                    "args": [arg_desc(s) for s in eargs],
+                    "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                }
+            )
+            print(f"  {fname}: {len(text)} chars")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

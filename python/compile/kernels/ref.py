@@ -1,0 +1,86 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle to float tolerance under pytest + hypothesis sweeps.
+
+Conventions (shared with the kernels and the rust coordinator):
+  A     : (n, d)  dense design matrix, columns normalized (diag(A^T A)=1)
+  r     : (n,)    residual. Lasso: r = A x - y. Logistic: margin cache.
+  x     : (d,)    weight vector (signed; the duplicate-feature trick is
+                  only used in the paper's analysis, not implementations)
+  idx   : (p,)    int32 coordinate block sampled for one Shotgun round
+  lam   : ()      L1 regularization strength
+  beta  : ()      Assumption-2.1 constant (1.0 squared loss, 0.25 logistic)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def soft_threshold_update(x_j, g_j, lam, beta):
+    """Signed soft-threshold coordinate step.
+
+    The paper's non-negative duplicated-feature update (Alg. 1 / Eq. 5)
+    folded back to signed coordinates: the closed-form minimizer of
+    g_j*d + beta/2*d^2 + lam*|x_j + d| over d.
+    """
+    u = x_j - g_j / beta
+    t = lam / beta
+    x_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
+    return x_new - x_j
+
+
+def shotgun_block_update_ref(A, r, x, idx, lam, beta):
+    """One synchronous Shotgun round on the dense Lasso.
+
+    Returns (delta, r_new, x_new):
+      g_j     = A_j^T r                  (block gradient via A_S^T r)
+      delta_j = soft-threshold step per sampled coordinate
+      duplicate draws in `idx` resolve by summing deltas (the multiset
+      semantics of Alg. 2), matching the rust coordinator;
+      r_new   = r + A_S @ delta_per_draw
+      x_new   = x + scatter-add(delta)
+    """
+    A_S = A[:, idx]                       # (n, p)
+    g = A_S.T @ r                         # (p,)
+    x_S = x[idx]
+    delta = soft_threshold_update(x_S, g, lam, beta)
+    r_new = r + A_S @ delta
+    x_new = x.at[idx].add(delta)
+    return delta, r_new, x_new
+
+
+def lasso_objective_ref(A, x, y, lam):
+    r = A @ x - y
+    return 0.5 * jnp.dot(r, r) + lam * jnp.sum(jnp.abs(x))
+
+
+def logistic_probs_ref(A, x, y):
+    """sigma(-y_i a_i^T x) -- per-sample weight in the logistic gradient."""
+    margins = y * (A @ x)
+    return 1.0 / (1.0 + jnp.exp(margins))
+
+
+def logistic_objective_ref(A, x, y, lam):
+    margins = y * (A @ x)
+    return jnp.sum(jnp.logaddexp(0.0, -margins)) + lam * jnp.sum(jnp.abs(x))
+
+
+def logistic_block_grad_ref(A, x, y, idx):
+    """Block coordinate gradient of the logistic loss (no reg term):
+    g_j = -sum_i y_i A_ij sigma(-y_i a_i^T x)."""
+    p = logistic_probs_ref(A, x, y)
+    A_S = A[:, idx]
+    return -(A_S.T @ (y * p))
+
+
+def power_iter_step_ref(A, v):
+    """One normalized power-iteration step on A^T A. Returns (v', ||A^T A v||)."""
+    w = A.T @ (A @ v)
+    nrm = jnp.linalg.norm(w)
+    return w / jnp.maximum(nrm, 1e-30), nrm
+
+
+def matvec_ref(A, x):
+    return A @ x

@@ -1,0 +1,197 @@
+"""Layer-1 Pallas kernels for the Shotgun hot path (dense problems).
+
+The paper's multicore implementation updates one coordinate per worker with
+atomic CAS on a shared Ax vector and finds itself memory-wall bound (O(1)
+flops per memory access, no temporal locality). The TPU adaptation (see
+DESIGN.md §Hardware-Adaptation) makes one *synchronous* Shotgun round a
+block computation:
+
+    g     = A_S^T r          (n x p matmul on the MXU, A_S tiled in VMEM)
+    delta = soft-threshold(x_S, g)            (VPU elementwise)
+    r'    = r + A_S delta    (second MXU pass, same VMEM tiles)
+
+which raises arithmetic intensity to O(p) flops per residual byte. The
+grid iterates over n-tiles; BlockSpec expresses the HBM->VMEM schedule.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); real-TPU perf is estimated in DESIGN.md from the VMEM
+footprint + MXU occupancy of these BlockSpecs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default n-tile: multiple of the 8x128 VPU lane tile and big enough to
+# keep the MXU busy; callers override for small/odd n.
+DEFAULT_TILE_N = 256
+
+
+def _grad_kernel(a_ref, r_ref, o_ref):
+    """Accumulate one n-tile's contribution to g = A_S^T r.
+
+    a_ref: (tile_n, p) VMEM tile of the gathered column block
+    r_ref: (tile_n, 1) VMEM tile of the residual
+    o_ref: (p, 1) accumulator; same block for every grid step.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (p, tile_n) @ (tile_n, 1) -> (p, 1) on the MXU
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, r_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def block_grad(A_S, r, *, tile_n: int = DEFAULT_TILE_N):
+    """g = A_S^T r, tiled over n. A_S: (n, p), r: (n,) -> (p,)."""
+    n, p = A_S.shape
+    tile_n = min(tile_n, n)
+    if n % tile_n != 0:
+        tile_n = n  # fall back to a single tile for ragged n
+    grid = (n // tile_n,)
+    out = pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((p, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 1), A_S.dtype),
+        interpret=True,
+    )(A_S, r[:, None])
+    return out[:, 0]
+
+
+def _delta_kernel(x_ref, g_ref, lam_ref, beta_ref, o_ref):
+    """Soft-threshold step for a coordinate block (VPU elementwise).
+
+    delta_j = S(x_j - g_j/beta, lam/beta) - x_j with S the shrinkage op.
+    """
+    x = x_ref[...]
+    g = g_ref[...]
+    beta = beta_ref[0]
+    lam = lam_ref[0]
+    u = x - g / beta
+    t = lam / beta
+    x_new = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t, 0.0)
+    o_ref[...] = x_new - x
+
+
+def soft_threshold_block(x_S, g, lam, beta):
+    """delta for a sampled coordinate block. x_S, g: (p,) -> (p,)."""
+    lam = jnp.asarray([lam], dtype=x_S.dtype)
+    beta = jnp.asarray([beta], dtype=x_S.dtype)
+    return pl.pallas_call(
+        _delta_kernel,
+        interpret=True,
+        out_shape=jax.ShapeDtypeStruct(x_S.shape, x_S.dtype),
+    )(x_S, g, lam, beta)
+
+
+def _apply_kernel(a_ref, r_ref, d_ref, o_ref):
+    """r-tile update: o = r + A_S_tile @ delta (MXU)."""
+    o_ref[...] = r_ref[...] + jnp.dot(
+        a_ref[...], d_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def block_apply(A_S, r, delta, *, tile_n: int = DEFAULT_TILE_N):
+    """r' = r + A_S @ delta, tiled over n. -> (n,)."""
+    n, p = A_S.shape
+    tile_n = min(tile_n, n)
+    if n % tile_n != 0:
+        tile_n = n
+    grid = (n // tile_n,)
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((p, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), A_S.dtype),
+        interpret=True,
+    )(A_S, r[:, None], delta[:, None])
+    return out[:, 0]
+
+
+def shotgun_block_update(A, r, x, idx, lam, beta, *, tile_n: int = DEFAULT_TILE_N):
+    """One synchronous Shotgun round (dense Lasso), hot spot in Pallas.
+
+    The column gather A[:, idx] and the x scatter-add are Layer-2 jnp (XLA
+    gather/scatter are already optimal); the flops live in the kernels.
+    Duplicate draws resolve by summed deltas -- Alg. 2 multiset semantics.
+    Returns (delta, r_new, x_new); matches ref.shotgun_block_update_ref.
+    """
+    A_S = A[:, idx]
+    g = block_grad(A_S, r, tile_n=tile_n)
+    delta = soft_threshold_block(x[idx], g, lam, beta)
+    r_new = block_apply(A_S, r, delta, tile_n=tile_n)
+    x_new = x.at[idx].add(delta)
+    return delta, r_new, x_new
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def matvec(A, x, *, tile_n: int = DEFAULT_TILE_N):
+    """A @ x tiled over rows; used for residual (re)materialization."""
+    n, d = A.shape
+    tile_n = min(tile_n, n)
+    if n % tile_n != 0:
+        tile_n = n
+    grid = (n // tile_n,)
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), A.dtype),
+        interpret=True,
+    )(A, x[:, None])
+    return out[:, 0]
+
+
+def _logistic_probs_kernel(m_ref, o_ref):
+    """sigma(-m) elementwise on a margin tile (VPU)."""
+    o_ref[...] = 1.0 / (1.0 + jnp.exp(m_ref[...]))
+
+
+def logistic_probs(A, x, y, *, tile_n: int = DEFAULT_TILE_N):
+    """sigma(-y * Ax): margins via the matvec kernel, link via a VPU kernel."""
+    margins = y * matvec(A, x, tile_n=tile_n)
+    return pl.pallas_call(
+        _logistic_probs_kernel,
+        interpret=True,
+        out_shape=jax.ShapeDtypeStruct(margins.shape, margins.dtype),
+    )(margins)
+
+
+def logistic_block_grad(A, x, y, idx, *, tile_n: int = DEFAULT_TILE_N):
+    """g_j = -A_S^T (y * sigma(-y Ax)) through the grad kernel."""
+    w = y * logistic_probs(A, x, y, tile_n=tile_n)
+    return -block_grad(A[:, idx], w, tile_n=tile_n)
+
+
+def power_iter_step(A, v, *, tile_n: int = DEFAULT_TILE_N):
+    """One power-iteration step on A^T A via the matvec + grad kernels.
+
+    Returns (v', ||A^T A v||); the Rayleigh-style norm converges to rho.
+    """
+    Av = matvec(A, v, tile_n=tile_n)
+    w = block_grad(A, Av, tile_n=tile_n)  # A^T (A v)
+    nrm = jnp.linalg.norm(w)
+    return w / jnp.maximum(nrm, 1e-30), nrm

@@ -1,0 +1,87 @@
+"""Layer-2 JAX compute graphs for the Shotgun system.
+
+Each public function here is an AOT entrypoint: `aot.py` jits + lowers it
+to HLO text for the rust runtime (`rust/src/runtime/`). The flops inside
+route through the Layer-1 Pallas kernels (kernels/shotgun.py) so they lower
+into the same HLO module. Python never runs on the request path.
+
+Entry points (shapes fixed at AOT time, see aot.py manifest):
+  lasso_round        one synchronous Shotgun round on the dense Lasso
+  lasso_rounds       K fused rounds via lax.scan (dispatch amortization)
+  logistic_round     one Shotgun round on sparse logistic regression
+  lasso_objective    F(x) for convergence monitoring
+  logistic_objective F(x) for convergence monitoring
+  power_iter         K power-iteration steps estimating rho(A^T A)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import shotgun as K
+
+LOGISTIC_BETA = 0.25  # Assumption 2.1 for the logistic loss (paper Eq. 6)
+LASSO_BETA = 1.0      # squared loss
+
+
+def lasso_round(A, r, x, idx, lam):
+    """One Shotgun round for the Lasso. r = Ax - y is carried by the caller.
+
+    Returns (r_new, x_new). The coordinate block `idx` is sampled by the
+    rust coordinator (it owns the RNG and the multiset semantics).
+    """
+    _, r_new, x_new = K.shotgun_block_update(A, r, x, idx, lam, LASSO_BETA)
+    return r_new, x_new
+
+
+def lasso_rounds(A, r, x, idxs, lam):
+    """K fused Shotgun rounds: idxs is (K, p). Scanned so the weight state
+    stays on-device across rounds; buffers are donated at lowering time."""
+
+    def body(carry, idx):
+        r_c, x_c = carry
+        r_n, x_n = lasso_round(A, r_c, x_c, idx, lam)
+        return (r_n, x_n), jnp.float32(0.0)
+
+    (r_new, x_new), _ = jax.lax.scan(body, (r, x), idxs)
+    return r_new, x_new
+
+
+def lasso_objective(A, x, y, lam):
+    """F(x) = 1/2 ||Ax - y||^2 + lam ||x||_1 through the matvec kernel."""
+    r = K.matvec(A, x) - y
+    return 0.5 * jnp.dot(r, r) + lam * jnp.sum(jnp.abs(x))
+
+
+def logistic_round(A, x, y, idx, lam):
+    """One Shotgun round for sparse logistic regression (fixed-beta step,
+    Alg. 2; the CDN line-search variant lives in the rust coordinator).
+
+    Returns x_new. No residual carry: the margin recomputes via the matvec
+    kernel (the paper's Ax-cache trick is a sparse-path optimization that
+    the rust engines implement; the dense TPU path is matmul-bound anyway).
+    """
+    g = K.logistic_block_grad(A, x, y, idx)
+    delta = K.soft_threshold_block(x[idx], g, lam, LOGISTIC_BETA)
+    return x.at[idx].add(delta)
+
+
+def logistic_objective(A, x, y, lam):
+    margins = y * K.matvec(A, x)
+    return jnp.sum(jnp.logaddexp(0.0, -margins)) + lam * jnp.sum(jnp.abs(x))
+
+
+def power_iter(A, v, steps: int):
+    """`steps` power-iteration steps on A^T A; returns (v, rho_estimate).
+
+    rho = spectral radius of A^T A, the paper's parallelism measure
+    (Theorem 3.2); P* = ceil(d / rho)."""
+
+    def body(carry, _):
+        v_c, _ = carry
+        v_n, nrm = K.power_iter_step(A, v_c)
+        return (v_n, nrm), jnp.float32(0.0)
+
+    (v_out, rho), _ = jax.lax.scan(body, (v, jnp.float32(0.0)), None, length=steps)
+    return v_out, rho

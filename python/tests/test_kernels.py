@@ -1,0 +1,177 @@
+"""Pallas kernels vs pure-jnp oracles: the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/seeds; fixed cases pin the paper's
+semantics (duplicate draws, zero residual, saturating shrinkage).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import shotgun as K
+
+jax.config.update("jax_enable_x64", False)
+
+shapes = st.tuples(
+    st.integers(min_value=1, max_value=96),   # n
+    st.integers(min_value=1, max_value=48),   # d
+    st.integers(min_value=1, max_value=12),   # p
+)
+
+
+def make_problem(n, d, p, seed):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, d)).astype(np.float32)
+    # normalize columns (paper assumes diag(A^T A) = 1)
+    A /= np.maximum(np.linalg.norm(A, axis=0, keepdims=True), 1e-6)
+    r = rng.normal(size=n).astype(np.float32)
+    x = (rng.normal(size=d) * rng.binomial(1, 0.3, size=d)).astype(np.float32)
+    y = rng.choice([-1.0, 1.0], size=n).astype(np.float32)
+    idx = rng.integers(0, d, size=p).astype(np.int32)  # multiset: dups allowed
+    return jnp.array(A), jnp.array(r), jnp.array(x), jnp.array(y), jnp.array(idx)
+
+
+@settings(max_examples=40, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1), st.floats(0.01, 10.0))
+def test_shotgun_block_update_matches_ref(shape, seed, lam):
+    n, d, p = shape
+    A, r, x, _, idx = make_problem(n, d, p, seed)
+    beta = 1.0
+    d_k, r_k, x_k = K.shotgun_block_update(A, r, x, idx, lam, beta)
+    d_r, r_r, x_r = ref.shotgun_block_update_ref(A, r, x, idx, lam, beta)
+    np.testing.assert_allclose(d_k, d_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(r_k, r_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(x_k, x_r, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_block_grad_matches_ref(shape, seed):
+    n, d, p = shape
+    A, r, _, _, idx = make_problem(n, d, p, seed)
+    g_k = K.block_grad(A[:, idx], r)
+    g_r = (A[:, idx]).T @ r
+    np.testing.assert_allclose(g_k, g_r, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_matvec_matches_ref(shape, seed):
+    n, d, p = shape
+    A, _, x, _, _ = make_problem(n, d, p, seed)
+    np.testing.assert_allclose(
+        K.matvec(A, x[: A.shape[1]]), ref.matvec_ref(A, x), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_logistic_probs_matches_ref(shape, seed):
+    n, d, p = shape
+    A, _, x, y, _ = make_problem(n, d, p, seed)
+    np.testing.assert_allclose(
+        K.logistic_probs(A, x, y), ref.logistic_probs_ref(A, x, y),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes, st.integers(0, 2**31 - 1))
+def test_logistic_block_grad_matches_ref(shape, seed):
+    n, d, p = shape
+    A, _, x, y, idx = make_problem(n, d, p, seed)
+    np.testing.assert_allclose(
+        K.logistic_block_grad(A, x, y, idx),
+        ref.logistic_block_grad_ref(A, x, y, idx),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.integers(1, 48), st.integers(1, 32),
+    st.integers(0, 2**31 - 1), st.floats(0.0, 5.0), st.floats(0.05, 4.0),
+)
+def test_soft_threshold_matches_ref(d, p, seed, lam, beta):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=p).astype(np.float32))
+    g = jnp.array(rng.normal(size=p).astype(np.float32))
+    np.testing.assert_allclose(
+        K.soft_threshold_block(x, g, lam, beta),
+        ref.soft_threshold_update(x, g, lam, beta),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_duplicate_draws_sum_deltas():
+    """Alg. 2 multiset semantics: a coordinate drawn twice gets both deltas."""
+    n, d = 16, 8
+    A, r, x, _, _ = make_problem(n, d, 1, 7)
+    idx = jnp.array([3, 3, 5, 3], dtype=jnp.int32)
+    d_k, r_k, x_k = K.shotgun_block_update(A, r, x, idx, 0.1, 1.0)
+    d_r, r_r, x_r = ref.shotgun_block_update_ref(A, r, x, idx, 0.1, 1.0)
+    np.testing.assert_allclose(x_k, x_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(r_k, r_r, rtol=1e-5, atol=1e-6)
+    # scatter-add really added all three deltas for coordinate 3
+    np.testing.assert_allclose(
+        x_k[3] - x[3], d_k[0] + d_k[1] + d_k[3], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_zero_residual_zero_gradient_shrinks_only():
+    """With r = 0 the update reduces to pure shrinkage toward 0."""
+    n, d, p = 32, 16, 4
+    A, _, x, _, idx = make_problem(n, d, p, 11)
+    r = jnp.zeros(n)
+    lam, beta = 0.5, 1.0
+    delta, _, _ = K.shotgun_block_update(A, r, x, idx, lam, beta)
+    u = x[idx]
+    expected = jnp.sign(u) * jnp.maximum(jnp.abs(u) - lam, 0.0) - u
+    np.testing.assert_allclose(delta, expected, rtol=1e-5, atol=1e-6)
+
+
+def test_large_lambda_drives_block_to_zero():
+    n, d, p = 32, 16, 6
+    A, r, x, _, _ = make_problem(n, d, p, 13)
+    # unique draws: with duplicates, two -x_j deltas overshoot past zero
+    # (the multiset semantics Thm 3.2's conflict analysis accounts for)
+    idx = jnp.array([0, 3, 5, 7, 11, 15], dtype=jnp.int32)
+    _, _, x_new = K.shotgun_block_update(A, r, x, idx, 1e6, 1.0)
+    np.testing.assert_allclose(x_new[np.asarray(idx)], 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("tile", [1, 8, 64, 256, 1000])
+def test_tile_size_invariance(tile):
+    """Any tile_n (dividing or not) gives identical numerics."""
+    n, d, p = 64, 24, 8
+    A, r, x, _, idx = make_problem(n, d, p, 5)
+    base = K.block_grad(A[:, idx], r, tile_n=64)
+    np.testing.assert_allclose(
+        K.block_grad(A[:, idx], r, tile_n=tile), base, rtol=1e-4, atol=1e-5
+    )
+
+
+def test_power_iter_step_matches_ref():
+    n, d = 48, 24
+    A, _, _, _, _ = make_problem(n, d, 1, 3)
+    v = jnp.ones(d) / np.sqrt(d)
+    v_k, n_k = K.power_iter_step(A, v)
+    v_r, n_r = ref.power_iter_step_ref(A, v)
+    np.testing.assert_allclose(v_k, v_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(n_k, n_r, rtol=1e-4)
+
+
+def test_power_iteration_converges_to_rho():
+    """rho estimate converges to the true spectral radius of A^T A."""
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(40, 20)).astype(np.float32)
+    A /= np.linalg.norm(A, axis=0, keepdims=True)
+    v = jnp.ones(20) / np.sqrt(20)
+    nrm = 0.0
+    for _ in range(200):
+        v, nrm = K.power_iter_step(A, v)
+    true_rho = np.max(np.linalg.eigvalsh(A.T @ A))
+    np.testing.assert_allclose(float(nrm), true_rho, rtol=1e-3)

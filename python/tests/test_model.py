@@ -1,0 +1,119 @@
+"""L2 model graphs: shapes, semantics, and descent properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_lasso(n=64, d=32, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, d)).astype(np.float32)
+    A /= np.linalg.norm(A, axis=0, keepdims=True)
+    x_true = (rng.normal(size=d) * rng.binomial(1, 0.2, size=d)).astype(np.float32)
+    y = (A @ x_true + 0.01 * rng.normal(size=n)).astype(np.float32)
+    return jnp.array(A), jnp.array(y)
+
+
+def test_lasso_round_decreases_objective_small_p():
+    A, y = make_lasso()
+    n, d = A.shape
+    lam = 0.1
+    x = jnp.zeros(d)
+    r = -y  # Ax - y with x = 0
+    rng = np.random.default_rng(1)
+    f_prev = float(model.lasso_objective(A, x, y, lam))
+    for _ in range(30):
+        idx = jnp.array(rng.integers(0, d, size=2), dtype=jnp.int32)
+        r, x = model.lasso_round(A, r, x, idx, lam)
+        f = float(model.lasso_objective(A, x, y, lam))
+        assert f <= f_prev + 1e-4, "P=2 << P* rounds must descend"
+        f_prev = f
+
+
+def test_lasso_rounds_matches_sequential_rounds():
+    A, y = make_lasso(48, 24, 2)
+    d = A.shape[1]
+    lam = 0.2
+    x0 = jnp.zeros(d)
+    r0 = -y
+    rng = np.random.default_rng(3)
+    idxs = jnp.array(rng.integers(0, d, size=(10, 4)), dtype=jnp.int32)
+    r_scan, x_scan = model.lasso_rounds(A, r0, x0, idxs, lam)
+    r_seq, x_seq = r0, x0
+    for k in range(10):
+        r_seq, x_seq = model.lasso_round(A, r_seq, x_seq, idxs[k], lam)
+    np.testing.assert_allclose(x_scan, x_seq, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(r_scan, r_seq, rtol=1e-4, atol=1e-5)
+
+
+def test_residual_consistency_after_rounds():
+    """Carried residual must equal Ax - y exactly (the Ax-cache invariant)."""
+    A, y = make_lasso(40, 20, 4)
+    d = A.shape[1]
+    x, r = jnp.zeros(d), -y
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        idx = jnp.array(rng.integers(0, d, size=4), dtype=jnp.int32)
+        r, x = model.lasso_round(A, r, x, idx, 0.05)
+    np.testing.assert_allclose(r, A @ x - y, rtol=1e-4, atol=1e-4)
+
+
+def test_lasso_objective_matches_ref():
+    A, y = make_lasso(32, 16, 6)
+    x = jnp.array(np.random.default_rng(7).normal(size=16).astype(np.float32))
+    np.testing.assert_allclose(
+        model.lasso_objective(A, x, y, 0.3),
+        ref.lasso_objective_ref(A, x, y, 0.3),
+        rtol=1e-5,
+    )
+
+
+def test_logistic_objective_matches_ref():
+    A, _ = make_lasso(32, 16, 8)
+    rng = np.random.default_rng(9)
+    y = jnp.array(rng.choice([-1.0, 1.0], size=32).astype(np.float32))
+    x = jnp.array(rng.normal(size=16).astype(np.float32))
+    np.testing.assert_allclose(
+        model.logistic_objective(A, x, y, 0.3),
+        ref.logistic_objective_ref(A, x, y, 0.3),
+        rtol=1e-5,
+    )
+
+
+def test_logistic_round_descends():
+    A, _ = make_lasso(64, 24, 10)
+    rng = np.random.default_rng(11)
+    y = jnp.array(rng.choice([-1.0, 1.0], size=64).astype(np.float32))
+    x = jnp.zeros(24)
+    lam = 0.05
+    f_prev = float(model.logistic_objective(A, x, y, lam))
+    for _ in range(25):
+        idx = jnp.array(rng.integers(0, 24, size=2), dtype=jnp.int32)
+        x = model.logistic_round(A, x, y, idx, lam)
+        f = float(model.logistic_objective(A, x, y, lam))
+        assert f <= f_prev + 1e-4
+        f_prev = f
+
+
+def test_power_iter_estimates_rho():
+    A, _ = make_lasso(48, 24, 12)
+    v = jnp.ones(24) / np.sqrt(24)
+    _, rho = model.power_iter(A, v, 300)
+    true_rho = float(np.max(np.linalg.eigvalsh(np.asarray(A).T @ np.asarray(A))))
+    np.testing.assert_allclose(float(rho), true_rho, rtol=1e-3)
+
+
+def test_entrypoints_lower_to_hlo_text():
+    """Every AOT entrypoint must lower through the stablehlo->HLO-text path
+    (the exact interchange the rust runtime consumes)."""
+    from compile import aot
+
+    prof = dict(n=16, d=24, p=4, k=3, power_steps=4)
+    for name, fn, eargs in aot.entries(prof):
+        lowered = jax.jit(fn).lower(*eargs)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name

@@ -1,0 +1,238 @@
+//! **E10–E14** — ablations of the design choices DESIGN.md calls out:
+//!
+//! * E10 sync (exact) vs async (threaded) engine
+//! * E11 Ax/residual caching on vs off
+//! * E12 pathwise continuation vs direct lambda
+//! * E13 multiset conflict resolution vs per-round dedup
+//! * E14 CDN active set on vs off
+
+use super::{BenchConfig, Report};
+use crate::coordinator::{Engine, ShotgunCdn, ShotgunConfig, ShotgunExact, ShotgunThreaded};
+use crate::data::synth;
+use crate::objective::{LassoProblem, LogisticProblem};
+use crate::solvers::common::{LogisticSolver, SolveOptions};
+use crate::solvers::path::solve_pathwise;
+use crate::util::rng::Rng;
+
+/// E11 baseline: Shooting WITHOUT the Ax cache — recompute the residual
+/// from scratch for every gradient (the naive O(n d) update the
+/// Friedman-et-al. trick avoids).
+fn shooting_no_cache(prob: &LassoProblem, iters: u64, seed: u64) -> (f64, f64) {
+    let d = prob.d();
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0; d];
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let j = rng.below(d);
+        let r = prob.residual(&x); // full recompute: the ablated cost
+        let dx = prob.cd_step(j, x[j], &r);
+        x[j] += dx;
+    }
+    (prob.objective(&x), t0.elapsed().as_secs_f64())
+}
+
+fn shooting_cached(prob: &LassoProblem, iters: u64, seed: u64) -> (f64, f64) {
+    let d = prob.d();
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0; d];
+    let mut r = prob.residual(&x);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let j = rng.below(d);
+        let dx = prob.cd_step(j, x[j], &r);
+        prob.apply_step(j, dx, &mut x, &mut r);
+    }
+    (prob.objective(&x), t0.elapsed().as_secs_f64())
+}
+
+pub fn run(cfg: &BenchConfig) {
+    let mut report = Report::new("ablations");
+    report.line("=== Ablations (E10-E14) ===");
+    let s = |v: usize| ((v as f64 * cfg.scale) as usize).max(32);
+
+    // --- E10: sync vs async engine ---
+    {
+        let ds = synth::sparse_imaging(s(512), s(1024), 0.02, cfg.seed);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let d = ds.d();
+        let opts = SolveOptions {
+            max_iters: 400_000,
+            tol: 1e-7,
+            record_every: (d as u64 / 8).max(1),
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let sync = ShotgunExact::new(ShotgunConfig {
+            p: 8,
+            ..Default::default()
+        })
+        .solve_lasso(&prob, &vec![0.0; d], &opts);
+        let async_ = ShotgunThreaded::new(ShotgunConfig {
+            p: 8,
+            engine: Engine::Threaded,
+            ..Default::default()
+        })
+        .solve_lasso(&prob, &vec![0.0; d], &opts);
+        report.line(&format!(
+            "E10 sync-vs-async: exact F={:.6} ({} updates) | threaded F={:.6} ({} updates)",
+            sync.objective, sync.updates, async_.objective, async_.updates
+        ));
+        report.json(format!(
+            "{{\"exp\":\"e10\",\"sync_f\":{:.8},\"sync_updates\":{},\"async_f\":{:.8},\"async_updates\":{}}}",
+            sync.objective, sync.updates, async_.objective, async_.updates
+        ));
+    }
+
+    // --- E11: Ax caching ---
+    {
+        let ds = synth::sparco_like(s(256), s(256), 0.1, cfg.seed);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.2);
+        let iters = 2_000;
+        let (f_nc, t_nc) = shooting_no_cache(&prob, iters, cfg.seed);
+        let (f_c, t_c) = shooting_cached(&prob, iters, cfg.seed);
+        report.line(&format!(
+            "E11 Ax-cache: cached {:.4}s vs uncached {:.4}s ({:.1}x) at equal updates (F {:.6} vs {:.6})",
+            t_c,
+            t_nc,
+            t_nc / t_c.max(1e-12),
+            f_c,
+            f_nc
+        ));
+        report.json(format!(
+            "{{\"exp\":\"e11\",\"cached_s\":{:.6},\"uncached_s\":{:.6},\"ratio\":{:.3}}}",
+            t_c,
+            t_nc,
+            t_nc / t_c.max(1e-12)
+        ));
+    }
+
+    // --- E12: pathwise vs direct ---
+    {
+        let ds = synth::sparse_imaging(s(512), s(1024), 0.02, cfg.seed + 1);
+        let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam_max = prob0.lambda_max();
+        let lam = 0.02 * lam_max;
+        let d = ds.d();
+        let opts = SolveOptions {
+            max_iters: 2_000_000,
+            tol: 1e-7,
+            record_every: (d as u64).max(1),
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let direct = {
+            let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+            ShotgunExact::new(ShotgunConfig {
+                p: 8,
+                ..Default::default()
+            })
+            .solve_lasso(&prob, &vec![0.0; d], &opts)
+        };
+        let t_direct = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let path = solve_pathwise(lam_max, lam, 6, d, &opts, |l, x0, o| {
+            let prob = LassoProblem::new(&ds.design, &ds.targets, l);
+            ShotgunExact::new(ShotgunConfig {
+                p: 8,
+                ..Default::default()
+            })
+            .solve_lasso(&prob, x0, o)
+        });
+        let t_path = t1.elapsed().as_secs_f64();
+        report.line(&format!(
+            "E12 pathwise: direct {:.3}s ({} updates, F={:.6}) vs pathwise {:.3}s ({} updates, F={:.6})",
+            t_direct, direct.updates, direct.objective, t_path, path.updates, path.objective
+        ));
+        report.json(format!(
+            "{{\"exp\":\"e12\",\"direct_s\":{:.6},\"direct_updates\":{},\"path_s\":{:.6},\"path_updates\":{}}}",
+            t_direct, direct.updates, t_path, path.updates
+        ));
+    }
+
+    // --- E13: multiset vs dedup ---
+    {
+        let ds = synth::singlepix_pm1(s(256), s(128), cfg.seed + 2);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.2);
+        let d = ds.d();
+        let opts = SolveOptions {
+            max_iters: 400_000,
+            tol: 1e-7,
+            record_every: (d as u64 / 8).max(1),
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let multi = ShotgunExact::new(ShotgunConfig {
+            p: 16,
+            multiset: true,
+            ..Default::default()
+        })
+        .solve_lasso(&prob, &vec![0.0; d], &opts);
+        let dedup = ShotgunExact::new(ShotgunConfig {
+            p: 16,
+            multiset: false,
+            ..Default::default()
+        })
+        .solve_lasso(&prob, &vec![0.0; d], &opts);
+        report.line(&format!(
+            "E13 multiset: multiset rounds={} F={:.6} | dedup rounds={} F={:.6}",
+            multi.iters, multi.objective, dedup.iters, dedup.objective
+        ));
+        report.json(format!(
+            "{{\"exp\":\"e13\",\"multiset_rounds\":{},\"dedup_rounds\":{}}}",
+            multi.iters, dedup.iters
+        ));
+    }
+
+    // --- E14: CDN active set ---
+    {
+        let ds = synth::rcv1_like(s(364), s(728), 0.1, cfg.seed + 3);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
+        let d = ds.d();
+        let opts = SolveOptions {
+            max_iters: 200_000,
+            tol: 1e-7,
+            record_every: (d as u64 / 8).max(1),
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let mut with = ShotgunCdn::with_p(8);
+        with.cdn.use_active_set = true;
+        let a = with.solve_logistic(&prob, &vec![0.0; d], &opts);
+        let t_with = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        let mut without = ShotgunCdn::with_p(8);
+        without.cdn.use_active_set = false;
+        let b = without.solve_logistic(&prob, &vec![0.0; d], &opts);
+        let t_without = t1.elapsed().as_secs_f64();
+        report.line(&format!(
+            "E14 active-set: on {:.3}s ({} updates, F={:.6}) | off {:.3}s ({} updates, F={:.6})",
+            t_with, a.updates, a.objective, t_without, b.updates, b.objective
+        ));
+        report.json(format!(
+            "{{\"exp\":\"e14\",\"on_s\":{:.6},\"on_updates\":{},\"off_s\":{:.6},\"off_updates\":{}}}",
+            t_with, a.updates, t_without, b.updates
+        ));
+    }
+    let _ = report.save(&cfg.out_dir);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_ablation_shows_speedup() {
+        let ds = synth::sparco_like(128, 128, 0.1, 5);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.2);
+        let (f_nc, t_nc) = shooting_no_cache(&prob, 500, 5);
+        let (f_c, t_c) = shooting_cached(&prob, 500, 5);
+        // identical trajectory (same seed/updates), wildly different cost
+        assert!((f_nc - f_c).abs() < 1e-9, "{f_nc} vs {f_c}");
+        assert!(
+            t_nc > 3.0 * t_c,
+            "uncached {t_nc}s not >> cached {t_c}s"
+        );
+    }
+}

@@ -1,0 +1,200 @@
+//! **E1 / Fig. 2** — theory vs empirical performance of Shotgun's P.
+//!
+//! The paper exactly simulates Alg. 2 on two single-pixel-camera datasets
+//! with very different rho (Ball64: d=4096, rho=2047.8 -> P* = 3;
+//! Mug32: d=1024, rho=6.4967 -> P* = 158), averaging 10 runs, and plots
+//! iterations T until E[F(x_T)] comes within 0.5% of F* against P.
+//! Expected shape: T ~ 1/P up to P*, divergence soon after.
+//!
+//! Our Ball64/Mug32 analogues reproduce the rho mechanism (0/1 vs ±1
+//! measurement matrices — see data::synth) at container scale.
+
+use super::{BenchConfig, Report};
+use crate::coordinator::{PStar, ShotgunConfig, ShotgunExact};
+use crate::data::{synth, Dataset};
+use crate::metrics::threshold;
+use crate::objective::LassoProblem;
+use crate::solvers::common::SolveOptions;
+use crate::util::mean_std;
+
+pub struct Fig2Row {
+    pub dataset: String,
+    pub p: usize,
+    pub rounds_to_tol: Option<f64>, // mean over runs; None = diverged
+    pub speedup_vs_p1: Option<f64>,
+    pub diverged_runs: usize,
+}
+
+/// One dataset sweep: rounds-to-tolerance vs P (averaged over `runs`).
+pub fn sweep(
+    ds: &Dataset,
+    lam: f64,
+    ps: &[usize],
+    runs: usize,
+    rel_tol: f64,
+    seed: u64,
+) -> (PStar, Vec<Fig2Row>) {
+    let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+    let est = PStar::quick(&ds.design, seed);
+    let f_star = super::lasso_f_star(&prob, 2_000_000.min(200 * ds.d() as u64 * 50));
+    let thresh = threshold(f_star, rel_tol);
+
+    let mut rows = Vec::new();
+    let mut base: Option<f64> = None;
+    for &p in ps {
+        let mut counts = Vec::new();
+        let mut diverged = 0;
+        for run in 0..runs {
+            let cfg = ShotgunConfig {
+                p,
+                ..Default::default()
+            };
+            let opts = SolveOptions {
+                max_iters: 4_000_000 / p as u64,
+                tol: 1e-12, // rely on the objective threshold, not dx
+                record_every: (ds.d() as u64 / p as u64 / 4).max(1),
+                seed: seed + 1000 * run as u64,
+                ..Default::default()
+            };
+            let res = ShotgunExact::new(cfg).solve_lasso(&prob, &vec![0.0; ds.d()], &opts);
+            if res.solver.ends_with("diverged") {
+                diverged += 1;
+                continue;
+            }
+            if let Some(t) = res
+                .trace
+                .points
+                .iter()
+                .find(|pt| pt.objective <= thresh)
+                .map(|pt| pt.iters)
+            {
+                counts.push(t as f64);
+            }
+        }
+        let rounds = if counts.is_empty() {
+            None
+        } else {
+            Some(mean_std(&counts).0)
+        };
+        if p == 1 {
+            base = rounds;
+        }
+        rows.push(Fig2Row {
+            dataset: ds.name.clone(),
+            p,
+            rounds_to_tol: rounds,
+            speedup_vs_p1: match (base, rounds) {
+                (Some(b), Some(r)) if r > 0.0 => Some(b / r),
+                _ => None,
+            },
+            diverged_runs: diverged,
+        });
+    }
+    (est, rows)
+}
+
+pub fn run(cfg: &BenchConfig) {
+    let mut report = Report::new("fig2_pstar");
+    report.line("=== Fig. 2: iterations-to-tolerance vs P (exact simulation) ===");
+    let s = |v: usize| ((v as f64 * cfg.scale) as usize).max(16);
+
+    // Ball64-like: 0/1 measurements, rho ~ d/2, P* ~ 3
+    let ball = synth::singlepix_binary(s(410), s(1024), cfg.seed);
+    // Mug32-like: ±1 measurements, small rho, large P*
+    let mug = synth::singlepix_pm1(s(410), s(1024), cfg.seed + 1);
+
+    let mut curves: Vec<super::plot::Series> = Vec::new();
+    for ((ds, lam_frac, ps), marker) in [
+        (&ball, 0.5_f64, &[1usize, 2, 3, 4, 8, 16][..]),
+        (&mug, 0.05, &[1usize, 2, 4, 8, 16, 32, 64][..]),
+    ]
+    .into_iter()
+    .zip(['B', 'M'])
+    {
+        let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam = lam_frac * prob0.lambda_max();
+        let (est, rows) = sweep(ds, lam, ps, 3, cfg.rel_tol, cfg.seed);
+        curves.push(super::plot::Series {
+            label: format!("{} (rho={:.1}, P*={})", ds.name, est.rho, est.p_star),
+            points: rows
+                .iter()
+                .filter_map(|r| r.rounds_to_tol.map(|t| (r.p as f64, t)))
+                .collect(),
+            marker,
+        });
+        report.line(&format!(
+            "\n{}  d={} rho={:.2} P*={}  (paper Ball64: rho=d/2 -> P*=3; Mug32: rho small)",
+            ds.name,
+            ds.d(),
+            est.rho,
+            est.p_star
+        ));
+        report.line(&format!(
+            "{:>4} {:>14} {:>10} {:>9}",
+            "P", "rounds", "speedup", "diverged"
+        ));
+        for row in &rows {
+            report.line(&format!(
+                "{:>4} {:>14} {:>10} {:>9}",
+                row.p,
+                row.rounds_to_tol
+                    .map(|r| format!("{r:.0}"))
+                    .unwrap_or_else(|| "—".into()),
+                row.speedup_vs_p1
+                    .map(|s| format!("{s:.2}x"))
+                    .unwrap_or_else(|| "—".into()),
+                row.diverged_runs
+            ));
+            report.json(format!(
+                "{{\"exp\":\"fig2\",\"dataset\":\"{}\",\"rho\":{:.4},\"p_star\":{},\"p\":{},\"rounds\":{},\"diverged\":{}}}",
+                ds.name,
+                est.rho,
+                est.p_star,
+                row.p,
+                row.rounds_to_tol.map(|r| r.to_string()).unwrap_or_else(|| "null".into()),
+                row.diverged_runs
+            ));
+        }
+    }
+    report.line("");
+    report.line(&super::plot::render(
+        "Fig. 2: rounds-to-0.5%-of-F* vs P (log-log; diagonal = linear speedup)",
+        &curves,
+        64,
+        18,
+        super::plot::Scale::Log,
+        super::plot::Scale::Log,
+    ));
+    let _ = report.save(&cfg.out_dir);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_shows_linear_speedup_low_rho() {
+        // Mug32-like mechanism at tiny scale: speedup ~ P below P*
+        let ds = synth::singlepix_pm1(96, 64, 3);
+        let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam = 0.05 * prob0.lambda_max();
+        let (est, rows) = sweep(&ds, lam, &[1, 4], 2, 0.005, 7);
+        assert!(est.p_star >= 8, "P* {} too small for the test", est.p_star);
+        let s4 = rows[1].speedup_vs_p1.expect("P=4 must converge");
+        assert!(s4 > 2.0, "speedup at P=4 only {s4}");
+    }
+
+    #[test]
+    fn sweep_diverges_past_pstar_high_rho() {
+        // Ball64-like mechanism: P >> P* must diverge
+        let ds = synth::singlepix_binary(96, 128, 4);
+        let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam = 0.3 * prob0.lambda_max();
+        let (est, rows) = sweep(&ds, lam, &[64], 2, 0.005, 9);
+        assert!(est.p_star <= 4, "P* {} unexpectedly large", est.p_star);
+        assert!(
+            rows[0].diverged_runs > 0 || rows[0].rounds_to_tol.is_none(),
+            "P=64 should diverge on a rho~d/2 problem"
+        );
+    }
+}

@@ -1,0 +1,194 @@
+//! **E2 / Fig. 3** — Lasso runtime comparison: Shotgun (P=8) vs the five
+//! published solvers + Shooting across the four dataset categories, with
+//! lambda in {0.5, 10} (the paper's absolute values; columns are unit-
+//! normalized so the scale is comparable). Markers above the diagonal =
+//! Shotgun faster.
+
+use super::{BenchConfig, Report};
+use crate::coordinator::{Shotgun, ShotgunConfig};
+use crate::data::registry::{suite, Category};
+use crate::metrics::threshold;
+use crate::objective::LassoProblem;
+use crate::solvers::common::{LassoSolver, SolveOptions};
+use crate::solvers::{
+    fpc_as::FpcAs, glmnet::Glmnet, gpsr_bb::GpsrBb, hard_l0::HardL0, l1_ls::L1Ls,
+    shooting::Shooting, sparsa::Sparsa,
+};
+
+pub struct Fig3Point {
+    pub dataset: String,
+    pub lam: f64,
+    pub solver: String,
+    /// Wall-clock seconds to reach within rel_tol of F* (None = failed).
+    pub seconds: Option<f64>,
+    pub shotgun_seconds: Option<f64>,
+}
+
+fn opts(cfg: &BenchConfig, d: usize) -> SolveOptions {
+    SolveOptions {
+        max_iters: 50_000_000 / (d as u64).max(1),
+        max_seconds: cfg.max_seconds,
+        tol: 1e-7,
+        record_every: (d as u64 / 4).max(1),
+        seed: cfg.seed,
+        ..Default::default()
+    }
+}
+
+/// Run all solvers on one (dataset, lambda); returns scatter points.
+pub fn run_instance(
+    ds: &crate::data::Dataset,
+    lam: f64,
+    cfg: &BenchConfig,
+) -> Vec<Fig3Point> {
+    let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+    let d = ds.d();
+    let f_star = super::lasso_f_star(&prob, 40_000_000 / (d as u64).max(1));
+    let thresh = threshold(f_star, cfg.rel_tol);
+    let o = opts(cfg, d);
+
+    // Shotgun P=8 is the reference axis
+    let mut shotgun = Shotgun::new(ShotgunConfig {
+        p: 8,
+        ..Default::default()
+    });
+    let sg = shotgun.solve_lasso(&prob, &vec![0.0; d], &o);
+    let sg_time = sg
+        .trace
+        .points
+        .iter()
+        .find(|p| p.objective <= thresh)
+        .map(|p| p.seconds);
+
+    let shooting_sparsity = {
+        let r = Shooting.solve_lasso(&prob, &vec![0.0; d], &o);
+        r.nnz().max(1)
+    };
+    let mut solvers: Vec<(&str, Box<dyn FnMut() -> crate::solvers::common::SolveResult>)> = vec![
+        (
+            "shooting",
+            Box::new(|| Shooting.solve_lasso(&prob, &vec![0.0; d], &o)),
+        ),
+        (
+            "l1-ls",
+            Box::new(|| L1Ls::default().solve_lasso(&prob, &vec![0.0; d], &o)),
+        ),
+        (
+            "fpc-as",
+            Box::new(|| FpcAs::default().solve_lasso(&prob, &vec![0.0; d], &o)),
+        ),
+        (
+            "gpsr-bb",
+            Box::new(|| GpsrBb::default().solve_lasso(&prob, &vec![0.0; d], &o)),
+        ),
+        (
+            "sparsa",
+            Box::new(|| Sparsa::default().solve_lasso(&prob, &vec![0.0; d], &o)),
+        ),
+        (
+            "hard-l0",
+            Box::new(|| {
+                HardL0::with_sparsity(shooting_sparsity).solve_lasso(&prob, &vec![0.0; d], &o)
+            }),
+        ),
+        (
+            // the classic the paper could not run at scale (§4.1.2);
+            // the covariance cache cap reproduces that limitation
+            "glmnet",
+            Box::new(|| {
+                Glmnet::default().solve_lasso(
+                    &prob,
+                    &vec![0.0; d],
+                    &SolveOptions {
+                        max_iters: 2_000,
+                        ..o.clone()
+                    },
+                )
+            }),
+        ),
+    ];
+    let mut points = Vec::new();
+    for (name, solve) in solvers.iter_mut() {
+        let res = solve();
+        let t = res
+            .trace
+            .points
+            .iter()
+            .find(|p| p.objective <= thresh)
+            .map(|p| p.seconds);
+        points.push(Fig3Point {
+            dataset: ds.name.clone(),
+            lam,
+            solver: name.to_string(),
+            seconds: t,
+            shotgun_seconds: sg_time,
+        });
+    }
+    points
+}
+
+pub fn run(cfg: &BenchConfig) {
+    let mut report = Report::new("fig3_lasso");
+    report.line("=== Fig. 3: Lasso runtime, solvers vs Shotgun P=8 ===");
+    report.line("(time to within 0.5% of F*; '—' = not reached within budget)");
+    for cat in Category::all() {
+        report.line(&format!("\n--- category: {} ---", cat.name()));
+        report.line(&format!(
+            "{:<32} {:>6} {:<10} {:>12} {:>14} {:>8}",
+            "dataset", "lam", "solver", "time", "shotgun-time", "ratio"
+        ));
+        for ds in suite(cat, cfg.scale, cfg.seed) {
+            for lam in [0.5, 10.0] {
+                for pt in run_instance(&ds, lam, cfg) {
+                    let ratio = match (pt.seconds, pt.shotgun_seconds) {
+                        (Some(a), Some(b)) if b > 0.0 => format!("{:.2}x", a / b),
+                        _ => "—".into(),
+                    };
+                    report.line(&format!(
+                        "{:<32} {:>6} {:<10} {:>12} {:>14} {:>8}",
+                        pt.dataset,
+                        lam,
+                        pt.solver,
+                        pt.seconds
+                            .map(|t| format!("{t:.3}s"))
+                            .unwrap_or_else(|| "—".into()),
+                        pt.shotgun_seconds
+                            .map(|t| format!("{t:.3}s"))
+                            .unwrap_or_else(|| "—".into()),
+                        ratio
+                    ));
+                    report.json(format!(
+                        "{{\"exp\":\"fig3\",\"dataset\":\"{}\",\"lam\":{},\"solver\":\"{}\",\"seconds\":{},\"shotgun_seconds\":{}}}",
+                        pt.dataset,
+                        pt.lam,
+                        pt.solver,
+                        pt.seconds.map(|t| t.to_string()).unwrap_or_else(|| "null".into()),
+                        pt.shotgun_seconds.map(|t| t.to_string()).unwrap_or_else(|| "null".into()),
+                    ));
+                }
+            }
+        }
+    }
+    let _ = report.save(&cfg.out_dir);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn instance_produces_all_solver_points() {
+        let ds = synth::sparco_like(40, 24, 0.3, 1);
+        let cfg = BenchConfig {
+            max_seconds: 5.0,
+            ..Default::default()
+        };
+        let pts = run_instance(&ds, 0.5, &cfg);
+        assert_eq!(pts.len(), 7);
+        // shooting must reach tolerance on this tiny instance
+        let shooting = pts.iter().find(|p| p.solver == "shooting").unwrap();
+        assert!(shooting.seconds.is_some());
+        assert!(shooting.shotgun_seconds.is_some());
+    }
+}

@@ -1,0 +1,154 @@
+//! **E7 + E6** — the paper's headline text numbers.
+//!
+//! §4.1.3: on the largest dataset (5M bigram features, 30K samples),
+//! Shooting took ~4900 s and Shotgun < 2000 s — a >= 2.45x end-to-end
+//! speedup. We reproduce the ratio (not the absolute seconds) on the
+//! large-sparse-text generator, reporting measured iteration counts and
+//! memory-wall-model time at P = 8.
+//!
+//! §4.2.3: 10M SGD updates took 728 s vs > 8500 s for SMIDAS (>= 11.7x
+//! per-update cost gap). We measure the per-update wall-clock ratio.
+
+use super::{BenchConfig, Report};
+use crate::coordinator::{PStar, ShotgunConfig, ShotgunExact};
+use crate::data::synth;
+use crate::metrics::threshold;
+use crate::objective::{LassoProblem, LogisticProblem};
+use crate::simcore::CostModel;
+use crate::solvers::common::{LogisticSolver, SolveOptions};
+use crate::solvers::sgd::{Rate, Sgd};
+use crate::solvers::smidas::Smidas;
+
+pub struct Headline {
+    pub shooting_time: f64,
+    pub shotgun_time: f64,
+    pub ratio: f64,
+    pub p_star: usize,
+}
+
+/// The large-sparse headline: Shooting vs Shotgun P=8, memory-wall time.
+pub fn large_sparse_headline(cfg: &BenchConfig) -> Headline {
+    let s = |v: usize| ((v as f64 * cfg.scale) as usize).max(64);
+    let ds = synth::large_sparse_text(s(2048), s(8192), cfg.seed);
+    let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+    let lam = 0.05 * prob0.lambda_max();
+    let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+    let d = ds.d();
+    let est = PStar::quick(&ds.design, cfg.seed);
+    let f_star = super::lasso_f_star(&prob, 20_000_000 / d as u64);
+    let thresh = threshold(f_star, cfg.rel_tol);
+    let model = CostModel::default();
+    let avg_nnz = ds.design.nnz() as f64 / d as f64;
+
+    let run = |p: usize| -> f64 {
+        let opts = SolveOptions {
+            max_iters: 20_000_000 / p as u64 / d as u64 * d as u64,
+            tol: 1e-10,
+            record_every: (d as u64 / p as u64 / 2).max(1),
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let res = ShotgunExact::new(ShotgunConfig {
+            p,
+            ..Default::default()
+        })
+        .solve_lasso(&prob, &vec![0.0; d], &opts);
+        let updates = res
+            .trace
+            .points
+            .iter()
+            .find(|pt| pt.objective <= thresh)
+            .map(|pt| pt.updates)
+            .unwrap_or(res.updates);
+        model.async_seconds(updates, avg_nnz, p)
+    };
+    let shooting_time = run(1);
+    let shotgun_time = run(8);
+    Headline {
+        shooting_time,
+        shotgun_time,
+        ratio: shooting_time / shotgun_time,
+        p_star: est.p_star,
+    }
+}
+
+/// The SMIDAS-vs-SGD per-update cost ratio (measured wall-clock).
+///
+/// The paper measures this on zeta (dense, d = 2000): SMIDAS's mirror
+/// step inverts the p-norm link over the FULL weight vector (two powf's
+/// per coordinate) while lazy SGD pays flops only. The gap grows with d,
+/// so we keep d at a paper-meaningful floor even at reduced scale.
+pub fn smidas_cost_ratio(cfg: &BenchConfig) -> (f64, f64, f64) {
+    let s = |v: usize| ((v as f64 * cfg.scale) as usize).max(32);
+    // sparse problem: the paper's SGD uses lazy shrinkage precisely "to
+    // make use of sparsity in A" (§4.2.2) — O(nnz(a_i)) per update —
+    // while SMIDAS's mirror step must invert the p-norm link over the
+    // FULL d-vector (two powf's per coordinate) every update.
+    let ds = synth::rcv1_like(s(728).max(256), s(2000).max(1024), 0.02, cfg.seed);
+    let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.01);
+    let d = ds.d();
+    let opts = SolveOptions {
+        max_iters: 3,
+        record_every: u64::MAX,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let sgd = Sgd::new(Rate::Constant(0.1)).solve_logistic(&prob, &vec![0.0; d], &opts);
+    let sgd_per_update = t0.elapsed().as_secs_f64() / sgd.updates.max(1) as f64;
+    let t1 = std::time::Instant::now();
+    let smidas = Smidas::new(0.1).solve_logistic(&prob, &vec![0.0; d], &opts);
+    let smidas_per_update = t1.elapsed().as_secs_f64() / smidas.updates.max(1) as f64;
+    (
+        sgd_per_update,
+        smidas_per_update,
+        smidas_per_update / sgd_per_update,
+    )
+}
+
+pub fn run(cfg: &BenchConfig) {
+    let mut report = Report::new("headline");
+    report.line("=== Headline numbers (paper §4.1.3 / §4.2.3) ===");
+    let h = large_sparse_headline(cfg);
+    report.line(&format!(
+        "large-sparse Lasso (memory-wall model): Shooting {:.1}s vs Shotgun-P8 {:.1}s -> {:.2}x (paper: 4900s vs <2000s, >=2.45x; P*={})",
+        h.shooting_time, h.shotgun_time, h.ratio, h.p_star
+    ));
+    report.json(format!(
+        "{{\"exp\":\"headline\",\"metric\":\"large_sparse_ratio\",\"shooting_s\":{:.3},\"shotgun_s\":{:.3},\"ratio\":{:.3}}}",
+        h.shooting_time, h.shotgun_time, h.ratio
+    ));
+    let (sgd_u, smidas_u, ratio) = smidas_cost_ratio(cfg);
+    report.line(&format!(
+        "per-update cost: SGD {:.2}µs vs SMIDAS {:.2}µs -> {:.1}x (paper: 728s vs >8500s for 10M updates, >=11.7x)",
+        sgd_u * 1e6,
+        smidas_u * 1e6,
+        ratio
+    ));
+    report.json(format!(
+        "{{\"exp\":\"headline\",\"metric\":\"smidas_cost\",\"sgd_us\":{:.4},\"smidas_us\":{:.4},\"ratio\":{:.3}}}",
+        sgd_u * 1e6,
+        smidas_u * 1e6,
+        ratio
+    ));
+    let _ = report.save(&cfg.out_dir);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_ratio_beats_paper_floor() {
+        let cfg = BenchConfig {
+            scale: 0.05,
+            ..Default::default()
+        };
+        let h = large_sparse_headline(&cfg);
+        assert!(
+            h.ratio >= 2.0,
+            "headline speedup {} below the paper's >=2.45x shape (allowing small-scale slack)",
+            h.ratio
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! Experiment harness: one driver per paper table/figure (DESIGN.md §4).
+//!
+//! Every driver prints the paper-shaped rows/series to stdout and writes
+//! a JSON report under `results/`. The CLI (`repro bench <exp>`) and the
+//! cargo benches are thin wrappers over these functions.
+
+pub mod ablations;
+pub mod bounds;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod headline;
+pub mod plot;
+
+use crate::objective::LassoProblem;
+use crate::solvers::common::{LassoSolver as _, SolveOptions, SolveResult};
+use crate::solvers::shooting::Shooting;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Common experiment knobs (scaled-down defaults run in seconds; crank
+/// `scale` for paper-shaped sizes).
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Dataset size multiplier relative to the registry defaults.
+    pub scale: f64,
+    pub seed: u64,
+    /// Output directory for JSON reports.
+    pub out_dir: String,
+    /// Convergence tolerance band (paper: within 0.5% of F*).
+    pub rel_tol: f64,
+    /// Hard per-solve wall-clock cap (seconds).
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            scale: 0.25,
+            seed: 42,
+            out_dir: "results".into(),
+            rel_tol: 0.005,
+            max_seconds: 60.0,
+        }
+    }
+}
+
+/// Accumulates a human table + JSON lines, then writes both.
+pub struct Report {
+    pub name: String,
+    table: String,
+    json_lines: Vec<String>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Report {
+        Report {
+            name: name.to_string(),
+            table: String::new(),
+            json_lines: Vec::new(),
+        }
+    }
+
+    pub fn line(&mut self, s: &str) {
+        println!("{s}");
+        let _ = writeln!(self.table, "{s}");
+    }
+
+    pub fn json(&mut self, line: String) {
+        self.json_lines.push(line);
+    }
+
+    /// Write `<out_dir>/<name>.txt` and `.jsonl`.
+    pub fn save(&self, out_dir: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(out_dir)?;
+        std::fs::write(
+            Path::new(out_dir).join(format!("{}.txt", self.name)),
+            &self.table,
+        )?;
+        std::fs::write(
+            Path::new(out_dir).join(format!("{}.jsonl", self.name)),
+            self.json_lines.join("\n") + "\n",
+        )?;
+        Ok(())
+    }
+}
+
+/// Reference optimum for a Lasso instance: a long, tight Shooting run
+/// (the paper computes "the optimal objective, as computed by Shooting").
+pub fn lasso_f_star(prob: &LassoProblem, budget_iters: u64) -> f64 {
+    let opts = SolveOptions {
+        max_iters: budget_iters,
+        tol: 1e-10,
+        record_every: u64::MAX,
+        seed: 999,
+        ..Default::default()
+    };
+    Shooting
+        .solve_lasso(prob, &vec![0.0; prob.d()], &opts)
+        .objective
+}
+
+/// First trace time within `rel_tol` of `f_star`, or None.
+pub fn time_to(res: &SolveResult, f_star: f64, rel_tol: f64) -> Option<f64> {
+    res.trace.time_to_tolerance(f_star, rel_tol)
+}
+
+/// First trace iters within `rel_tol` of `f_star`, or None.
+pub fn iters_to(res: &SolveResult, f_star: f64, rel_tol: f64) -> Option<u64> {
+    res.trace.iters_to_tolerance(f_star, rel_tol)
+}
+
+/// Run every experiment (the `repro bench all` path).
+pub fn run_all(cfg: &BenchConfig) {
+    fig2::run(cfg);
+    fig3::run(cfg);
+    fig4::run(cfg);
+    fig5::run(cfg);
+    bounds::run(cfg);
+    headline::run(cfg);
+    ablations::run(cfg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn f_star_is_tight() {
+        let ds = synth::sparco_like(40, 20, 0.3, 1);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.2);
+        let f1 = lasso_f_star(&prob, 100_000);
+        let f2 = lasso_f_star(&prob, 400_000);
+        assert!((f1 - f2).abs() / f2 < 1e-6, "{f1} vs {f2}");
+    }
+
+    #[test]
+    fn report_writes_files() {
+        let mut r = Report::new("unit_test_report");
+        r.line("hello");
+        r.json("{\"a\":1}".into());
+        let dir = std::env::temp_dir().join("shotgun_report_test");
+        r.save(dir.to_str().unwrap()).unwrap();
+        assert!(dir.join("unit_test_report.txt").exists());
+        assert!(dir.join("unit_test_report.jsonl").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

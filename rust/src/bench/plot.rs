@@ -1,0 +1,183 @@
+//! ASCII plot renderer: turns experiment series into log-log / lin-log
+//! terminal plots so `results/` carries the figures themselves, not just
+//! tables (no plotting stack in the offline environment).
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+    pub marker: char,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Linear,
+    Log,
+}
+
+fn transform(v: f64, scale: Scale) -> f64 {
+    match scale {
+        Scale::Linear => v,
+        Scale::Log => v.max(1e-300).log10(),
+    }
+}
+
+/// Render series into a `width x height` character grid with axes.
+pub fn render(
+    title: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    x_scale: Scale,
+    y_scale: Scale,
+) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().cloned())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let tx: Vec<f64> = pts.iter().map(|&(x, _)| transform(x, x_scale)).collect();
+    let ty: Vec<f64> = pts.iter().map(|&(_, y)| transform(y, y_scale)).collect();
+    let (x_min, x_max) = bounds(&tx);
+    let (y_min, y_max) = bounds(&ty);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for &(x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = pos(transform(x, x_scale), x_min, x_max, width);
+            let cy = pos(transform(y, y_scale), y_min, y_max, height);
+            let row = height - 1 - cy;
+            // first-wins keeps overlapping series distinguishable
+            if grid[row][cx] == ' ' {
+                grid[row][cx] = s.marker;
+            }
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    let y_hi = fmt_axis(y_max, y_scale);
+    let y_lo = fmt_axis(y_min, y_scale);
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{y_hi:>10} ")
+        } else if i == height - 1 {
+            format!("{y_lo:>10} ")
+        } else {
+            " ".repeat(11)
+        };
+        out.push_str(&label);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(11));
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "{}{}{}\n",
+        " ".repeat(12),
+        fmt_axis(x_min, x_scale),
+        format!(
+            "{:>width$}",
+            fmt_axis(x_max, x_scale),
+            width = width.saturating_sub(fmt_axis(x_min, x_scale).len())
+        )
+    ));
+    for s in series {
+        out.push_str(&format!("  {} {}\n", s.marker, s.label));
+    }
+    out
+}
+
+fn bounds(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in v {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if lo == hi {
+        (lo - 0.5, hi + 0.5)
+    } else {
+        (lo, hi)
+    }
+}
+
+fn pos(v: f64, lo: f64, hi: f64, cells: usize) -> usize {
+    let t = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+    ((t * (cells - 1) as f64).round() as usize).min(cells - 1)
+}
+
+fn fmt_axis(v: f64, scale: Scale) -> String {
+    let raw = match scale {
+        Scale::Linear => v,
+        Scale::Log => 10f64.powf(v),
+    };
+    if raw.abs() >= 1000.0 || (raw != 0.0 && raw.abs() < 0.01) {
+        format!("{raw:.1e}")
+    } else {
+        format!("{raw:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> Series {
+        Series {
+            label: "t ~ 1/p".into(),
+            points: (0..7).map(|k| {
+                let p = (1 << k) as f64;
+                (p, 1000.0 / p)
+            }).collect(),
+            marker: '*',
+        }
+    }
+
+    #[test]
+    fn renders_with_axes_and_legend() {
+        let out = render("fig", &[curve()], 40, 10, Scale::Log, Scale::Log);
+        assert!(out.contains("fig"));
+        assert!(out.contains('*'));
+        assert!(out.contains("t ~ 1/p"));
+        assert!(out.lines().count() >= 13);
+    }
+
+    #[test]
+    fn log_scale_straightens_powerlaw() {
+        // on log-log axes a 1/p law hits both corners
+        let out = render("x", &[curve()], 41, 11, Scale::Log, Scale::Log);
+        let rows: Vec<&str> = out.lines().skip(1).take(11).collect();
+        // top-left corner marker (small p, large t)
+        assert_eq!(rows[0].chars().nth(12), Some('*'), "{out}");
+        // bottom-right corner marker
+        assert_eq!(rows[10].chars().rev().next(), Some('*'), "{out}");
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let out = render("none", &[], 20, 5, Scale::Linear, Scale::Linear);
+        assert!(out.contains("no data"));
+    }
+
+    #[test]
+    fn nan_points_skipped() {
+        let s = Series {
+            label: "bad".into(),
+            points: vec![(1.0, f64::NAN), (2.0, 3.0)],
+            marker: 'o',
+        };
+        let out = render("t", &[s], 20, 5, Scale::Linear, Scale::Linear);
+        assert!(out.contains('o'));
+    }
+}

@@ -1,0 +1,162 @@
+//! Atomic `f64` vector — the CAS primitive of the paper's multicore
+//! implementation (§4.1.1: "we used atomic compare-and-swap operations
+//! for updating the Ax vector").
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// An `f64` stored in an `AtomicU64` via bit transmutation.
+#[derive(Debug)]
+pub struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        AtomicF64 {
+            bits: AtomicU64::new(v.to_bits()),
+        }
+    }
+
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Acquire))
+    }
+
+    #[inline]
+    pub fn store(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Release);
+    }
+
+    /// `self += delta` via a CAS loop; returns the *previous* value.
+    #[inline]
+    pub fn fetch_add(&self, delta: f64) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + delta).to_bits();
+            match self
+                .bits
+                .compare_exchange_weak(cur, new, Ordering::AcqRel, Ordering::Relaxed)
+            {
+                Ok(_) => return f64::from_bits(cur),
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// CAS update through an arbitrary transform; returns the new value.
+    /// Used for the non-negativity clamp (the write-conflict resolution
+    /// §3.1 notes is "viable in our multicore setting").
+    #[inline]
+    pub fn update<F: FnMut(f64) -> f64>(&self, mut f: F) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let new_v = f(f64::from_bits(cur));
+            match self.bits.compare_exchange_weak(
+                cur,
+                new_v.to_bits(),
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return new_v,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// A shared vector of atomic `f64`s (the `Ax` residual and the weights).
+pub struct AtomicVec {
+    data: Vec<AtomicF64>,
+}
+
+impl AtomicVec {
+    pub fn from_slice(xs: &[f64]) -> Self {
+        AtomicVec {
+            data: xs.iter().map(|&v| AtomicF64::new(v)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn load(&self, i: usize) -> f64 {
+        self.data[i].load()
+    }
+
+    #[inline]
+    pub fn fetch_add(&self, i: usize, delta: f64) -> f64 {
+        self.data[i].fetch_add(delta)
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize) -> &AtomicF64 {
+        &self.data[i]
+    }
+
+    /// Non-atomic snapshot (quiescent reads for objective evaluation).
+    pub fn snapshot(&self) -> Vec<f64> {
+        self.data.iter().map(|a| a.load()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fetch_add_returns_previous() {
+        let a = AtomicF64::new(1.5);
+        assert_eq!(a.fetch_add(2.0), 1.5);
+        assert_eq!(a.load(), 3.5);
+    }
+
+    #[test]
+    fn update_clamps() {
+        let a = AtomicF64::new(-0.5);
+        let new = a.update(|v| v.max(0.0));
+        assert_eq!(new, 0.0);
+        assert_eq!(a.load(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_adds_lose_nothing() {
+        // the CAS loop must make additions linearizable: N threads x K
+        // increments of 1.0 must sum exactly (f64 adds of integers are
+        // exact well below 2^53)
+        let v = Arc::new(AtomicVec::from_slice(&[0.0; 4]));
+        let threads = 8;
+        let k = 10_000;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let v = Arc::clone(&v);
+                std::thread::spawn(move || {
+                    for i in 0..k {
+                        v.fetch_add((t + i) % 4, 1.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total: f64 = v.snapshot().iter().sum();
+        assert_eq!(total, (threads * k) as f64);
+    }
+
+    #[test]
+    fn special_values_roundtrip() {
+        for v in [f64::INFINITY, f64::NEG_INFINITY, 0.0, -0.0, 1e-300] {
+            let a = AtomicF64::new(v);
+            assert_eq!(a.load().to_bits(), v.to_bits());
+        }
+        let a = AtomicF64::new(f64::NAN);
+        assert!(a.load().is_nan());
+    }
+}

@@ -1,0 +1,215 @@
+//! Shotgun CDN — parallel Coordinate Descent Newton for sparse logistic
+//! regression (§4.2.1): P CDN updates (Newton direction + backtracking
+//! line search) computed per round against the same iterate, with the
+//! active-set scheme of Shooting CDN.
+
+use super::ShotgunConfig;
+use crate::objective::LogisticProblem;
+use crate::solvers::cdn::CdnConfig;
+use crate::solvers::common::{LogisticSolver, Recorder, SolveOptions, SolveResult};
+use crate::util::rng::Rng;
+
+pub struct ShotgunCdn {
+    pub config: ShotgunConfig,
+    pub cdn: CdnConfig,
+}
+
+impl ShotgunCdn {
+    pub fn new(config: ShotgunConfig) -> Self {
+        ShotgunCdn {
+            config,
+            cdn: CdnConfig::default(),
+        }
+    }
+
+    pub fn with_p(p: usize) -> Self {
+        Self::new(ShotgunConfig {
+            p,
+            ..Default::default()
+        })
+    }
+}
+
+impl LogisticSolver for ShotgunCdn {
+    fn name(&self) -> &'static str {
+        "shotgun-cdn"
+    }
+
+    fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let d = prob.d();
+        let p = self.config.p;
+        let mut rng = Rng::new(opts.seed);
+        let mut x = x0.to_vec();
+        let mut z = prob.margins(&x);
+        let mut rec = Recorder::new(opts);
+        let f0 = prob.objective_from_margins(&z, &x);
+        rec.record(0, f0, &x, 0.0, true);
+        let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
+
+        // active set (§4.2.1: "can limit parallelism by shrinking d")
+        let mut active: Vec<usize> = (0..d).collect();
+        let mut draws: Vec<usize> = Vec::with_capacity(p);
+        let mut deltas: Vec<f64> = Vec::with_capacity(p);
+        let mut outcome_converged = false;
+        let mut round = 0u64;
+        let mut window_max: f64 = 0.0;
+        let mut full_window = active.len() == d;
+        let rounds_per_window = (d as u64 / p as u64).max(1);
+        while !rec.out_of_budget(round) {
+            round += 1;
+            // draw P coordinates from the ACTIVE set (multiset)
+            draws.clear();
+            deltas.clear();
+            for _ in 0..p {
+                draws.push(active[rng.below(active.len())]);
+            }
+            // parallel phase: all Newton directions + line searches are
+            // computed against the same (x, z) snapshot
+            let mut max_dx: f64 = 0.0;
+            for &j in draws.iter() {
+                let dir = prob.cdn_direction(j, x[j], &z);
+                let dx = prob.cdn_line_search(j, x[j], dir, &z, 0.0);
+                deltas.push(dx);
+                max_dx = max_dx.max(dx.abs());
+            }
+            // collective apply (multiset semantics)
+            for (&j, &dx) in draws.iter().zip(deltas.iter()) {
+                prob.apply_step(j, dx, &mut x, &mut z);
+            }
+            rec.updates += p as u64;
+            window_max = window_max.max(max_dx);
+
+            if round % rounds_per_window == 0 {
+                let f = prob.objective_from_margins(&z, &x);
+                if !f.is_finite() || f > f_diverge {
+                    break;
+                }
+                // shrink the active set: zero weights with subgradient slack
+                if self.cdn.use_active_set {
+                    let lam = prob.lam;
+                    let slack = 1.0 - self.cdn.shrink_slack;
+                    let next: Vec<usize> = (0..d)
+                        .filter(|&j| {
+                            x[j] != 0.0 || prob.grad_j(j, &z).abs() >= lam * slack
+                        })
+                        .collect();
+                    if window_max < opts.tol {
+                        if full_window {
+                            outcome_converged = true;
+                            break;
+                        }
+                        active = (0..d).collect();
+                        full_window = true;
+                    } else if !next.is_empty() {
+                        full_window = next.len() == d;
+                        active = next;
+                    } else {
+                        active = (0..d).collect();
+                        full_window = true;
+                    }
+                } else if window_max < opts.tol
+                    && (0..d).all(|k| {
+                        let dir = prob.cdn_direction(k, x[k], &z);
+                        dir.abs() < opts.tol
+                    })
+                {
+                    outcome_converged = true;
+                    break;
+                }
+                window_max = 0.0;
+            }
+            if round % opts.record_every == 0 {
+                let aux = if opts.aux_every_record {
+                    prob.error_rate(&x)
+                } else {
+                    0.0
+                };
+                rec.record(round, prob.objective_from_margins(&z, &x), &x, aux, true);
+            }
+        }
+        let f = prob.objective_from_margins(&z, &x);
+        rec.record(round, f, &x, 0.0, true);
+        let mut res = rec.finish("shotgun-cdn", x, f, round, outcome_converged);
+        res.solver = format!("shotgun-cdn-p{}", self.config.p);
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::solvers::cdn::ShootingCdn;
+
+    fn opts() -> SolveOptions {
+        SolveOptions {
+            max_iters: 100_000,
+            tol: 1e-7,
+            record_every: 32,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn converges_and_matches_sequential_cdn() {
+        let ds = synth::rcv1_like(80, 60, 0.2, 1);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
+        let par = ShotgunCdn::with_p(4).solve_logistic(&prob, &vec![0.0; 60], &opts());
+        let seq = ShootingCdn::default().solve_logistic(
+            &prob,
+            &vec![0.0; 60],
+            &SolveOptions {
+                max_iters: 5_000,
+                ..opts()
+            },
+        );
+        assert!(par.converged, "shotgun-cdn did not converge");
+        assert!(
+            (par.objective - seq.objective).abs() / seq.objective.abs() < 1e-2,
+            "parallel {} vs sequential {}",
+            par.objective,
+            seq.objective
+        );
+    }
+
+    #[test]
+    fn p_rounds_scale_down() {
+        // iteration speedup on a weakly-correlated logistic problem
+        let ds = synth::rcv1_like(120, 96, 0.05, 2);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.02);
+        let r1 = ShotgunCdn::with_p(1).solve_logistic(&prob, &vec![0.0; 96], &opts());
+        let r8 = ShotgunCdn::with_p(8).solve_logistic(&prob, &vec![0.0; 96], &opts());
+        assert!(r1.converged && r8.converged);
+        let f_star = r1.objective.min(r8.objective);
+        let t1 = r1.trace.iters_to_tolerance(f_star, 0.005).unwrap_or(u64::MAX);
+        let t8 = r8.trace.iters_to_tolerance(f_star, 0.005).unwrap_or(u64::MAX);
+        assert!(
+            t1 as f64 / t8 as f64 > 2.5,
+            "round speedup {} (t1={t1} t8={t8})",
+            t1 as f64 / t8 as f64
+        );
+    }
+
+    #[test]
+    fn active_set_still_reaches_optimum() {
+        let ds = synth::rcv1_like(60, 50, 0.2, 3);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.1);
+        let mut with = ShotgunCdn::with_p(4);
+        with.cdn.use_active_set = true;
+        let mut without = ShotgunCdn::with_p(4);
+        without.cdn.use_active_set = false;
+        let a = with.solve_logistic(&prob, &vec![0.0; 50], &opts());
+        let b = without.solve_logistic(&prob, &vec![0.0; 50], &opts());
+        assert!(
+            (a.objective - b.objective).abs() / b.objective.abs() < 1e-2,
+            "{} vs {}",
+            a.objective,
+            b.objective
+        );
+    }
+}

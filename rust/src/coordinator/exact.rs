@@ -1,0 +1,365 @@
+//! Exact synchronous simulation of Shotgun (Alg. 2) — the engine behind
+//! the theory experiments (Fig. 2, bound validation) and the default
+//! practical solver.
+//!
+//! Per round: draw a multiset `P_t` of P coordinates uniformly at random,
+//! compute every `delta x_j` against the SAME `x` (Eq. 5), then apply the
+//! collective update `x += sum_j delta_j e_j` and refresh the residual
+//! cache with one axpy per draw. Deterministic given the seed.
+
+use super::ShotgunConfig;
+use crate::objective::{LassoProblem, LogisticProblem};
+use crate::solvers::common::{Recorder, SolveOptions, SolveResult};
+use crate::util::rng::Rng;
+
+/// What a round of parallel updates did (divergence detection feeds the
+/// Fig. 2 "until too large P caused divergence" traces).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundOutcome {
+    Progress,
+    Converged,
+    Diverged,
+}
+
+pub struct ShotgunExact {
+    pub config: ShotgunConfig,
+}
+
+impl ShotgunExact {
+    pub fn new(config: ShotgunConfig) -> Self {
+        assert!(config.p >= 1, "P must be >= 1");
+        ShotgunExact { config }
+    }
+
+    /// One synchronous round on the Lasso. Returns (outcome, max |dx|).
+    /// Exposed for the round-level experiments (Fig. 2 sweeps call this
+    /// directly to count rounds).
+    pub fn lasso_round(
+        &self,
+        prob: &LassoProblem,
+        x: &mut [f64],
+        r: &mut [f64],
+        rng: &mut Rng,
+        draws: &mut Vec<usize>,
+        deltas: &mut Vec<f64>,
+    ) -> f64 {
+        let d = prob.d();
+        draws.clear();
+        deltas.clear();
+        for _ in 0..self.config.p {
+            draws.push(rng.below(d));
+        }
+        if !self.config.multiset {
+            draws.sort_unstable();
+            draws.dedup();
+        }
+        // compute ALL deltas against the same x (synchronous semantics)
+        let mut max_dx: f64 = 0.0;
+        for &j in draws.iter() {
+            let dx = prob.cd_step(j, x[j], r);
+            deltas.push(dx);
+            max_dx = max_dx.max(dx.abs());
+        }
+        // collective apply + residual maintenance
+        for (&j, &dx) in draws.iter().zip(deltas.iter()) {
+            if dx != 0.0 {
+                x[j] += dx;
+                prob.a.col_axpy(j, dx, r);
+            }
+        }
+        max_dx
+    }
+
+    pub fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let d = prob.d();
+        let mut rng = Rng::new(opts.seed);
+        let mut x = x0.to_vec();
+        let mut r = prob.residual(&x);
+        let mut rec = Recorder::new(opts);
+        let f0 = prob.objective_from_residual(&r, &x);
+        rec.record(0, f0, &x, 0.0, true);
+        let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
+
+        let mut draws = Vec::with_capacity(self.config.p);
+        let mut deltas = Vec::with_capacity(self.config.p);
+        let mut window_max: f64 = 0.0;
+        let mut outcome = RoundOutcome::Progress;
+        let mut round = 0u64;
+        let rounds_per_window = (d as u64 / self.config.p as u64).max(1);
+        while !rec.out_of_budget(round) {
+            round += 1;
+            let max_dx = self.lasso_round(prob, &mut x, &mut r, &mut rng, &mut draws, &mut deltas);
+            rec.updates += draws.len() as u64;
+            window_max = window_max.max(max_dx);
+            // convergence / divergence checks on a ~d-update cadence
+            if round % rounds_per_window == 0 {
+                let f = prob.objective_from_residual(&r, &x);
+                if !f.is_finite() || f > f_diverge {
+                    outcome = RoundOutcome::Diverged;
+                    rec.record(round, f, &x, 0.0, true);
+                    break;
+                }
+                if window_max < opts.tol
+                    && (0..d).all(|k| prob.cd_step(k, x[k], &r).abs() < opts.tol)
+                {
+                    outcome = RoundOutcome::Converged;
+                    rec.record(round, f, &x, 0.0, true);
+                    break;
+                }
+                window_max = 0.0;
+            }
+            if round % opts.record_every == 0 {
+                rec.record(round, prob.objective_from_residual(&r, &x), &x, 0.0, true);
+            }
+        }
+        let f = prob.objective_from_residual(&r, &x);
+        rec.record(round, f, &x, 0.0, true);
+        let mut res = rec.finish(
+            "shotgun",
+            x,
+            f,
+            round,
+            outcome == RoundOutcome::Converged,
+        );
+        res.solver = format!("shotgun-p{}", self.config.p);
+        if outcome == RoundOutcome::Diverged {
+            res.solver.push_str("-diverged");
+        }
+        res
+    }
+
+    pub fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let d = prob.d();
+        let mut rng = Rng::new(opts.seed);
+        let mut x = x0.to_vec();
+        let mut z = prob.margins(&x);
+        let mut rec = Recorder::new(opts);
+        let f0 = prob.objective_from_margins(&z, &x);
+        rec.record(0, f0, &x, 0.0, true);
+        let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
+
+        let mut draws: Vec<usize> = Vec::with_capacity(self.config.p);
+        let mut deltas: Vec<f64> = Vec::with_capacity(self.config.p);
+        let mut window_max: f64 = 0.0;
+        let mut outcome = RoundOutcome::Progress;
+        let mut round = 0u64;
+        let rounds_per_window = (d as u64 / self.config.p as u64).max(1);
+        while !rec.out_of_budget(round) {
+            round += 1;
+            draws.clear();
+            deltas.clear();
+            for _ in 0..self.config.p {
+                draws.push(rng.below(d));
+            }
+            if !self.config.multiset {
+                draws.sort_unstable();
+                draws.dedup();
+            }
+            let mut max_dx: f64 = 0.0;
+            for &j in draws.iter() {
+                let dx = prob.cd_step(j, x[j], &z);
+                deltas.push(dx);
+                max_dx = max_dx.max(dx.abs());
+            }
+            for (&j, &dx) in draws.iter().zip(deltas.iter()) {
+                prob.apply_step(j, dx, &mut x, &mut z);
+            }
+            rec.updates += draws.len() as u64;
+            window_max = window_max.max(max_dx);
+            if round % rounds_per_window == 0 {
+                let f = prob.objective_from_margins(&z, &x);
+                if !f.is_finite() || f > f_diverge {
+                    outcome = RoundOutcome::Diverged;
+                    break;
+                }
+                if window_max < opts.tol
+                    && (0..d).all(|k| prob.cd_step(k, x[k], &z).abs() < opts.tol)
+                {
+                    outcome = RoundOutcome::Converged;
+                    break;
+                }
+                window_max = 0.0;
+            }
+            if round % opts.record_every == 0 {
+                let aux = if opts.aux_every_record {
+                    prob.error_rate(&x)
+                } else {
+                    0.0
+                };
+                rec.record(round, prob.objective_from_margins(&z, &x), &x, aux, true);
+            }
+        }
+        let f = prob.objective_from_margins(&z, &x);
+        rec.record(round, f, &x, 0.0, true);
+        let mut res = rec.finish(
+            "shotgun-logistic",
+            x,
+            f,
+            round,
+            outcome == RoundOutcome::Converged,
+        );
+        res.solver = format!("shotgun-logistic-p{}", self.config.p);
+        if outcome == RoundOutcome::Diverged {
+            res.solver.push_str("-diverged");
+        }
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::data::synth;
+    use crate::solvers::shooting::Shooting;
+    use crate::solvers::LassoSolver as _;
+
+    fn config(p: usize) -> ShotgunConfig {
+        ShotgunConfig {
+            p,
+            engine: Engine::Exact,
+            ..Default::default()
+        }
+    }
+
+    fn opts() -> SolveOptions {
+        SolveOptions {
+            max_iters: 200_000,
+            tol: 1e-9,
+            record_every: 64,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn p1_matches_shooting_distributionally() {
+        // P = 1 Shotgun IS Shooting (Theorem 3.2 with P = 1 recovers
+        // Theorem 2.1); same seed draws the same coordinate sequence
+        let ds = synth::sparco_like(50, 25, 0.3, 1);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.2);
+        let a = ShotgunExact::new(config(1)).solve_lasso(&prob, &vec![0.0; 25], &opts());
+        let b = Shooting.solve_lasso(&prob, &vec![0.0; 25], &opts());
+        assert!((a.objective - b.objective).abs() < 1e-10);
+        for (xa, xb) in a.x.iter().zip(&b.x) {
+            assert!((xa - xb).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn converges_below_pstar() {
+        // P* for near-orthogonal designs is large; P = 8 must converge
+        let ds = synth::singlepix_pm1(128, 64, 2);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.3);
+        let res = ShotgunExact::new(config(8)).solve_lasso(&prob, &vec![0.0; 64], &opts());
+        assert!(res.converged, "did not converge: {}", res.solver);
+        let r = prob.residual(&res.x);
+        assert!(prob.kkt_violation(&res.x, &r) < 1e-6);
+    }
+
+    #[test]
+    fn diverges_far_above_pstar() {
+        // fully correlated design: rho ~ d, P* = 1; large P must diverge
+        let ds = synth::correlated(64, 32, 0.95, 3);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.05);
+        let res = ShotgunExact::new(config(32)).solve_lasso(&prob, &vec![0.0; 32], &opts());
+        assert!(
+            res.solver.ends_with("diverged"),
+            "expected divergence, got {} (F={})",
+            res.solver,
+            res.objective
+        );
+    }
+
+    #[test]
+    fn fewer_rounds_with_higher_p() {
+        // Theorem 3.2: rounds-to-converge ~ 1/P below P*
+        let ds = synth::singlepix_pm1(128, 64, 4);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.3);
+        let r1 = ShotgunExact::new(config(1)).solve_lasso(&prob, &vec![0.0; 64], &opts());
+        let r8 = ShotgunExact::new(config(8)).solve_lasso(&prob, &vec![0.0; 64], &opts());
+        assert!(r1.converged && r8.converged);
+        let f_star = r1.objective.min(r8.objective);
+        let t1 = r1.trace.iters_to_tolerance(f_star, 0.005).unwrap();
+        let t8 = r8.trace.iters_to_tolerance(f_star, 0.005).unwrap();
+        // expect ~8x; allow generous slack for the small instance
+        assert!(
+            (t1 as f64) / (t8 as f64) > 3.0,
+            "speedup {} (t1={t1}, t8={t8})",
+            t1 as f64 / t8 as f64
+        );
+    }
+
+    #[test]
+    fn multiset_ablation_changes_draws() {
+        let ds = synth::sparco_like(40, 8, 0.4, 5);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let mut cfg = config(8);
+        cfg.multiset = false;
+        // with d = 8 and P = 8, dedup makes rounds strictly smaller
+        let res = ShotgunExact::new(cfg).solve_lasso(
+            &prob,
+            &vec![0.0; 8],
+            &SolveOptions {
+                max_iters: 100,
+                ..opts()
+            },
+        );
+        assert!(res.updates < 100 * 8, "dedup must drop duplicate draws");
+    }
+
+    #[test]
+    fn logistic_converges_small_p() {
+        let ds = synth::rcv1_like(60, 40, 0.25, 6);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
+        let res = ShotgunExact::new(config(4)).solve_logistic(
+            &prob,
+            &vec![0.0; 40],
+            &SolveOptions {
+                max_iters: 100_000,
+                tol: 1e-7,
+                ..opts()
+            },
+        );
+        assert!(res.converged);
+        assert!(res.objective < prob.objective(&vec![0.0; 40]));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = synth::sparse_imaging(40, 80, 0.1, 7);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let o = SolveOptions {
+            max_iters: 2_000,
+            ..opts()
+        };
+        let a = ShotgunExact::new(config(4)).solve_lasso(&prob, &vec![0.0; 80], &o);
+        let b = ShotgunExact::new(config(4)).solve_lasso(&prob, &vec![0.0; 80], &o);
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn residual_cache_exact_after_solve() {
+        let ds = synth::sparco_like(40, 20, 0.3, 8);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.15);
+        let res = ShotgunExact::new(config(4)).solve_lasso(
+            &prob,
+            &vec![0.0; 20],
+            &SolveOptions {
+                max_iters: 5_000,
+                ..opts()
+            },
+        );
+        // recorded objective must equal objective recomputed from scratch
+        assert!((prob.objective(&res.x) - res.objective).abs() < 1e-9);
+    }
+}

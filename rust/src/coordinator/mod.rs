@@ -1,0 +1,152 @@
+//! The Shotgun coordinator — the paper's contribution (Alg. 2).
+//!
+//! Three execution engines behind one front-end:
+//!
+//! * [`exact`] — synchronous exact simulation of Alg. 2, matching the
+//!   theory (and the paper's own Fig. 2 methodology): P coordinates drawn
+//!   uniformly per round, all deltas computed against the same `x`, the
+//!   collective update applied with multiset semantics. Deterministic,
+//!   used for the iteration-count experiments and the bound validation.
+//! * [`threaded`] — the paper's practical multicore implementation:
+//!   asynchronous workers with atomic compare-and-swap maintenance of the
+//!   shared residual vector ([`atomic`]), per §4.1.1.
+//! * the XLA engine (`runtime::xla_engine`) — the TPU-shaped synchronous
+//!   block round through the AOT Pallas kernels (DESIGN.md
+//!   §Hardware-Adaptation).
+//!
+//! [`pstar`] provides the plug-in `P* = ceil(d/rho)` estimate
+//! (Theorem 3.2) via power iteration; [`cdn_round`] is Shotgun CDN for
+//! sparse logistic regression (§4.2.1).
+
+pub mod atomic;
+pub mod beyond_l1;
+pub mod cdn_round;
+pub mod exact;
+pub mod pstar;
+pub mod threaded;
+
+pub use cdn_round::ShotgunCdn;
+pub use exact::{RoundOutcome, ShotgunExact};
+pub use pstar::PStar;
+pub use threaded::ShotgunThreaded;
+
+use crate::objective::{LassoProblem, LogisticProblem};
+use crate::solvers::common::{LassoSolver, LogisticSolver, SolveOptions, SolveResult};
+
+/// Which engine executes the parallel rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Synchronous exact simulation (theory-faithful, deterministic).
+    Exact,
+    /// Asynchronous multicore with atomic CAS (the paper's implementation).
+    Threaded,
+}
+
+/// Front-end configuration for Shotgun.
+#[derive(Clone, Debug)]
+pub struct ShotgunConfig {
+    /// Number of parallel updates per round (the paper's P).
+    pub p: usize,
+    pub engine: Engine,
+    /// Resolve duplicate draws by summing deltas (Alg. 2 multiset
+    /// semantics). Disabling dedupes draws per round — the E13 ablation.
+    pub multiset: bool,
+    /// Abort and report divergence when F exceeds `divergence_factor *
+    /// F(x0)` (Fig. 2 traces "until too large P caused divergence").
+    pub divergence_factor: f64,
+}
+
+impl Default for ShotgunConfig {
+    fn default() -> Self {
+        ShotgunConfig {
+            p: 8,
+            engine: Engine::Exact,
+            multiset: true,
+            divergence_factor: 1e3,
+        }
+    }
+}
+
+/// Shotgun front-end: picks the engine and implements the solver traits.
+pub struct Shotgun {
+    pub config: ShotgunConfig,
+}
+
+impl Shotgun {
+    pub fn new(config: ShotgunConfig) -> Self {
+        Shotgun { config }
+    }
+
+    pub fn with_p(p: usize) -> Self {
+        Shotgun::new(ShotgunConfig {
+            p,
+            ..Default::default()
+        })
+    }
+}
+
+impl LassoSolver for Shotgun {
+    fn name(&self) -> &'static str {
+        "shotgun"
+    }
+
+    fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        match self.config.engine {
+            Engine::Exact => ShotgunExact::new(self.config.clone()).solve_lasso(prob, x0, opts),
+            Engine::Threaded => {
+                ShotgunThreaded::new(self.config.clone()).solve_lasso(prob, x0, opts)
+            }
+        }
+    }
+}
+
+impl LogisticSolver for Shotgun {
+    fn name(&self) -> &'static str {
+        "shotgun-logistic"
+    }
+
+    fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        // logistic Shotgun runs through the exact engine (the paper's
+        // practical logistic experiments use Shotgun CDN instead)
+        ShotgunExact::new(self.config.clone()).solve_logistic(prob, x0, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn front_end_dispatches_engines() {
+        let ds = synth::sparco_like(40, 20, 0.3, 1);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.2);
+        let opts = SolveOptions {
+            max_iters: 20_000,
+            tol: 1e-8,
+            ..Default::default()
+        };
+        for engine in [Engine::Exact, Engine::Threaded] {
+            let mut solver = Shotgun::new(ShotgunConfig {
+                p: 2,
+                engine,
+                ..Default::default()
+            });
+            let res = solver.solve_lasso(&prob, &vec![0.0; 20], &opts);
+            assert!(
+                res.objective < prob.objective(&vec![0.0; 20]),
+                "{engine:?} failed to descend"
+            );
+        }
+    }
+}

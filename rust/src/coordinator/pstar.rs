@@ -1,0 +1,99 @@
+//! `P*` estimation — Theorem 3.2's prescriptive parallelism limit.
+//!
+//! `rho(A^T A)` via power iteration (paper footnote 4: "power iteration
+//! gave reasonable estimates within a small fraction of the total
+//! runtime"), then `P* = ceil(d / rho)`.
+
+use crate::sparsela::{power, Design};
+
+/// The plug-in estimate of the ideal number of parallel updates.
+#[derive(Clone, Debug)]
+pub struct PStar {
+    pub rho: f64,
+    pub p_star: usize,
+    /// Power-iteration iterations spent.
+    pub iters: usize,
+    /// Wall-clock seconds spent estimating.
+    pub seconds: f64,
+}
+
+impl PStar {
+    /// Estimate from data. `max_iters`/`tol` bound the power iteration.
+    pub fn estimate(a: &Design, max_iters: usize, tol: f64, seed: u64) -> PStar {
+        let t0 = std::time::Instant::now();
+        let est = power::spectral_radius(a, max_iters, tol, seed);
+        PStar {
+            rho: est.rho,
+            p_star: power::p_star(a.d(), est.rho),
+            iters: est.iters,
+            seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Default budget tuned to "a small fraction of the total runtime".
+    pub fn quick(a: &Design, seed: u64) -> PStar {
+        Self::estimate(a, 200, 1e-4, seed)
+    }
+
+    /// Clamp a requested P to the estimated safe range `[1, P*]`.
+    pub fn clamp(&self, requested: usize) -> usize {
+        requested.clamp(1, self.p_star.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn orthogonal_design_allows_full_parallelism() {
+        let ds = synth::correlated(256, 32, 0.0, 1);
+        let est = PStar::quick(&ds.design, 2);
+        // rho close to 1 (random gaussian columns, n >> d)
+        assert!(est.rho < 4.0, "rho {}", est.rho);
+        assert!(est.p_star >= 8, "P* {}", est.p_star);
+    }
+
+    #[test]
+    fn correlated_design_limits_parallelism() {
+        let ds = synth::correlated(128, 64, 0.9, 3);
+        let est = PStar::quick(&ds.design, 4);
+        assert!(est.p_star <= 3, "P* {} (rho {})", est.p_star, est.rho);
+    }
+
+    #[test]
+    fn ball64_like_pstar_matches_paper_shape() {
+        // the paper's Ball64: d = 4096, rho = 2047.8 -> P* = 3. The 0/1
+        // generator reproduces rho ~ d/2, hence P* ~ 3 at any scale.
+        let ds = synth::singlepix_binary(256, 128, 5);
+        let est = PStar::quick(&ds.design, 6);
+        assert!(
+            (est.rho - 64.0).abs() < 12.0,
+            "rho {} not ~ d/2",
+            est.rho
+        );
+        assert!(est.p_star <= 4 && est.p_star >= 2, "P* {}", est.p_star);
+    }
+
+    #[test]
+    fn clamp_respects_bounds() {
+        let p = PStar {
+            rho: 10.0,
+            p_star: 5,
+            iters: 1,
+            seconds: 0.0,
+        };
+        assert_eq!(p.clamp(3), 3);
+        assert_eq!(p.clamp(50), 5);
+        assert_eq!(p.clamp(0), 1);
+    }
+
+    #[test]
+    fn estimation_is_fast_relative_to_solve() {
+        // footnote 4's claim on our scales: estimation cost is small
+        let ds = synth::sparse_imaging(256, 512, 0.02, 7);
+        let est = PStar::quick(&ds.design, 8);
+        assert!(est.seconds < 1.0, "power iteration took {}s", est.seconds);
+    }
+}

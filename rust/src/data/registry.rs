@@ -1,0 +1,118 @@
+//! The benchmark dataset registry: named instances per paper category,
+//! scaled to this testbed (a `scale` knob multiplies n and d so the same
+//! suite runs as a smoke test or a full experiment).
+//!
+//! Paper ranges (§4.1.3):
+//!   Sparco:                  n in [128, 29166],  d in [128, 29166]
+//!   Single-Pixel Camera:     n in [410, 4770],   d in [1024, 16384]
+//!   Sparse Compressed Img.:  n in [477, 32768],  d in [954, 65536]
+//!   Large, Sparse:           n in [30465, 209432], d in [209432, 5845762]
+
+use super::{synth, Dataset};
+
+/// A dataset category of the paper's Lasso evaluation (Fig. 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    Sparco,
+    SinglePixel,
+    SparseImaging,
+    LargeSparse,
+}
+
+impl Category {
+    pub fn all() -> [Category; 4] {
+        [
+            Category::Sparco,
+            Category::SinglePixel,
+            Category::SparseImaging,
+            Category::LargeSparse,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Sparco => "sparco",
+            Category::SinglePixel => "single_pixel",
+            Category::SparseImaging => "sparse_imaging",
+            Category::LargeSparse => "large_sparse",
+        }
+    }
+}
+
+/// Instantiate the suite for one category at a given scale.
+/// `scale = 1.0` targets a few-seconds-per-solver container run;
+/// the paper-shaped proportions (d/n ratios, densities) are preserved.
+pub fn suite(cat: Category, scale: f64, seed: u64) -> Vec<Dataset> {
+    let s = |v: usize| ((v as f64 * scale) as usize).max(8);
+    match cat {
+        Category::Sparco => vec![
+            synth::sparco_like(s(256), s(256), 0.3, seed),
+            synth::sparco_like(s(512), s(1024), 0.1, seed + 1),
+            synth::sparco_like(s(1024), s(512), 0.05, seed + 2),
+        ],
+        Category::SinglePixel => vec![
+            synth::singlepix_pm1(s(410), s(1024), seed),
+            synth::singlepix_binary(s(512), s(1024), seed + 1),
+            synth::singlepix_pm1(s(1024), s(2048), seed + 2),
+        ],
+        Category::SparseImaging => vec![
+            synth::sparse_imaging(s(477), s(954), 0.02, seed),
+            synth::sparse_imaging(s(1024), s(2048), 0.01, seed + 1),
+            synth::sparse_imaging(s(2048), s(4096), 0.005, seed + 2),
+        ],
+        Category::LargeSparse => vec![
+            synth::large_sparse_text(s(2048), s(8192), seed),
+            synth::large_sparse_text(s(4096), s(16384), seed + 1),
+        ],
+    }
+}
+
+/// The logistic-regression pair of §4.2.3 at a given scale.
+pub fn logistic_pair(scale: f64, seed: u64) -> (Dataset, Dataset) {
+    let s = |v: usize| ((v as f64 * scale) as usize).max(8);
+    // zeta: n >> d, dense; rcv1: d > n, ~17% non-zeros
+    (
+        synth::zeta_like(s(4096), s(64), seed),
+        synth::rcv1_like(s(728), s(1780), 0.17, seed + 1),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_nonempty_and_shaped() {
+        for cat in Category::all() {
+            let suite = suite(cat, 0.1, 7);
+            assert!(!suite.is_empty());
+            for ds in &suite {
+                assert!(ds.n() >= 8 && ds.d() >= 8, "{}", ds.name);
+            }
+        }
+    }
+
+    #[test]
+    fn large_sparse_is_sparse_and_overcomplete() {
+        for ds in suite(Category::LargeSparse, 0.05, 1) {
+            assert!(ds.d() > ds.n(), "{}: d <= n", ds.name);
+            assert!(ds.design.density() < 0.3, "{}", ds.name);
+        }
+    }
+
+    #[test]
+    fn logistic_pair_regimes() {
+        let (zeta, rcv1) = logistic_pair(0.1, 3);
+        assert!(zeta.n() > 4 * zeta.d(), "zeta must be n >> d");
+        assert!(rcv1.d() > rcv1.n(), "rcv1 must be d > n");
+        assert!(zeta.design.is_dense());
+        assert!(!rcv1.design.is_dense());
+    }
+
+    #[test]
+    fn scale_changes_size() {
+        let a = &suite(Category::Sparco, 0.1, 1)[0];
+        let b = &suite(Category::Sparco, 0.2, 1)[0];
+        assert!(b.n() > a.n());
+    }
+}

@@ -1,0 +1,349 @@
+//! Synthetic dataset generators matched to the paper's categories.
+//!
+//! Every generator normalizes columns to unit L2 norm (the paper's
+//! `diag(A^T A) = 1` convention) and is fully deterministic in `seed`.
+
+use super::Dataset;
+use crate::sparsela::{CscMatrix, DenseMatrix, Design};
+use crate::util::rng::Rng;
+
+/// Sparse ground-truth weights: `k` non-zeros at uniform positions with
+/// N(0,1)-scaled magnitudes.
+fn sparse_x_true(d: usize, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let mut x = vec![0.0; d];
+    for j in rng.sample_without_replacement(d, k) {
+        x[j] = rng.normal() * 2.0;
+    }
+    x
+}
+
+/// Regression targets `y = A x_true + noise`.
+fn regression_targets(a: &Design, x_true: &[f64], noise: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut y = vec![0.0; a.n()];
+    a.matvec(x_true, &mut y);
+    for v in y.iter_mut() {
+        *v += noise * rng.normal();
+    }
+    y
+}
+
+/// ±1 labels from a logistic model over `A x_true` with flip noise.
+fn logistic_labels(a: &Design, x_true: &[f64], scale: f64, rng: &mut Rng) -> Vec<f64> {
+    let mut z = vec![0.0; a.n()];
+    a.matvec(x_true, &mut z);
+    z.iter()
+        .map(|&zi| {
+            let p = 1.0 / (1.0 + (-scale * zi).exp());
+            if rng.uniform() < p {
+                1.0
+            } else {
+                -1.0
+            }
+        })
+        .collect()
+}
+
+/// **Sparco-like** (paper category 1): real-valued designs of varying
+/// sparsity, Gaussian entries at the given density.
+pub fn sparco_like(n: usize, d: usize, density: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut trip = Vec::new();
+    for j in 0..d {
+        for i in 0..n {
+            if rng.bernoulli(density) {
+                trip.push((i, j, rng.normal()));
+            }
+        }
+    }
+    let mut m = CscMatrix::from_triplets(n, d, &trip);
+    m.normalize_columns();
+    let mut a = Design::Sparse(m);
+    densify_if_warranted(&mut a);
+    let x_true = sparse_x_true(d, (d / 20).max(2), &mut rng);
+    let targets = regression_targets(&a, &x_true, 0.05, &mut rng);
+    Dataset {
+        name: format!("sparco_like_n{n}_d{d}"),
+        design: a,
+        targets,
+        x_true: Some(x_true),
+    }
+}
+
+/// **Single-pixel camera, Ball64-like** (paper category 2, high rho):
+/// dense 0/1 Bernoulli measurement matrix. Columns share the all-ones
+/// mean direction, so pairwise correlation is ~1/2 and `rho ~ d/2`
+/// (Ball64_singlepixcam: d = 4096, rho = 2047.8).
+pub fn singlepix_binary(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut m = DenseMatrix::from_fn(n, d, |_, _| if rng.bernoulli(0.5) { 1.0 } else { 0.0 });
+    m.normalize_columns();
+    let a = Design::Dense(m);
+    let mut rng2 = rng.split();
+    let x_true = sparse_x_true(d, (d as f64 * 0.25) as usize, &mut rng2);
+    let targets = regression_targets(&a, &x_true, 0.02, &mut rng2);
+    Dataset {
+        name: format!("singlepix_binary_n{n}_d{d}"),
+        design: a,
+        targets,
+        x_true: Some(x_true),
+    }
+}
+
+/// **Single-pixel camera, Mug32-like** (paper category 2, low rho):
+/// dense ±1 Rademacher measurements. Columns decorrelate, so
+/// `rho ~ (1 + sqrt(d/n))^2` — small (Mug32: d = 1024, rho = 6.4967).
+pub fn singlepix_pm1(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut m = DenseMatrix::from_fn(n, d, |_, _| rng.sign());
+    m.normalize_columns();
+    let a = Design::Dense(m);
+    let mut rng2 = rng.split();
+    let x_true = sparse_x_true(d, (d as f64 * 0.2) as usize, &mut rng2);
+    let targets = regression_targets(&a, &x_true, 0.02, &mut rng2);
+    Dataset {
+        name: format!("singlepix_pm1_n{n}_d{d}"),
+        design: a,
+        targets,
+        x_true: Some(x_true),
+    }
+}
+
+/// **Sparse compressed imaging** (paper category 3): "very sparse random
+/// -1/+1 measurement matrices", d = 2n in the paper's instances.
+pub fn sparse_imaging(n: usize, d: usize, density: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut trip = Vec::new();
+    for j in 0..d {
+        // guarantee non-empty columns: at least one entry each
+        let forced = rng.below(n);
+        trip.push((forced, j, rng.sign()));
+        for i in 0..n {
+            if i != forced && rng.bernoulli(density) {
+                trip.push((i, j, rng.sign()));
+            }
+        }
+    }
+    let mut m = CscMatrix::from_triplets(n, d, &trip);
+    m.normalize_columns();
+    let a = Design::Sparse(m);
+    let mut rng2 = rng.split();
+    let x_true = sparse_x_true(d, (d / 25).max(2), &mut rng2);
+    let targets = regression_targets(&a, &x_true, 0.02, &mut rng2);
+    Dataset {
+        name: format!("sparse_imaging_n{n}_d{d}"),
+        design: a,
+        targets,
+        x_true: Some(x_true),
+    }
+}
+
+/// **Large sparse text-like** (paper category 4: bigram counts from
+/// financial reports, d up to 5.8M). Power-law feature frequencies
+/// (Zipf exponent ~1.1), log-scaled counts, targets from a sparse
+/// linear model (the volatility-regression task of Kogan et al. 2009).
+pub fn large_sparse_text(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut trip = Vec::new();
+    for j in 0..d {
+        // column document-frequency follows a power law in feature rank
+        let rank = (j + 2) as f64;
+        let df = ((n as f64) * 0.3 / rank.powf(0.7)).max(1.0).min(n as f64);
+        let k = df.ceil() as usize;
+        for i in rng.sample_without_replacement(n, k) {
+            // log-scaled count
+            let c = 1.0 + rng.below(8) as f64;
+            trip.push((i, j, (1.0 + c).ln()));
+        }
+    }
+    let mut m = CscMatrix::from_triplets(n, d, &trip);
+    m.normalize_columns();
+    let a = Design::Sparse(m);
+    let mut rng2 = rng.split();
+    let x_true = sparse_x_true(d, (d / 50).max(4), &mut rng2);
+    let targets = regression_targets(&a, &x_true, 0.1, &mut rng2);
+    Dataset {
+        name: format!("large_sparse_text_n{n}_d{d}"),
+        design: a,
+        targets,
+        x_true: Some(x_true),
+    }
+}
+
+/// **zeta-like** (paper §4.2.3): the `n >> d` dense classification regime
+/// (paper: n = 500K, d = 2000, fully dense).
+pub fn zeta_like(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut m = DenseMatrix::from_fn(n, d, |_, _| rng.normal());
+    m.normalize_columns();
+    let a = Design::Dense(m);
+    let mut rng2 = rng.split();
+    let x_true = sparse_x_true(d, (d / 10).max(3), &mut rng2);
+    let targets = logistic_labels(&a, &x_true, 3.0 * (n as f64).sqrt(), &mut rng2);
+    Dataset {
+        name: format!("zeta_like_n{n}_d{d}"),
+        design: a,
+        targets,
+        x_true: Some(x_true),
+    }
+}
+
+/// **rcv1-like** (paper §4.2.3): the `d > n` sparse text-classification
+/// regime (paper: n = 18217, d = 44504, 17% non-zeros; our generator
+/// takes density as a parameter — pass 0.17 to match).
+pub fn rcv1_like(n: usize, d: usize, density: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut trip = Vec::new();
+    for j in 0..d {
+        let forced = rng.below(n);
+        trip.push((forced, j, rng.uniform() + 0.1));
+        for i in 0..n {
+            if i != forced && rng.bernoulli(density) {
+                trip.push((i, j, rng.uniform() + 0.1));
+            }
+        }
+    }
+    let mut m = CscMatrix::from_triplets(n, d, &trip);
+    m.normalize_columns();
+    let a = Design::Sparse(m);
+    let mut rng2 = rng.split();
+    let x_true = sparse_x_true(d, (d / 20).max(5), &mut rng2);
+    let targets = logistic_labels(&a, &x_true, 2.0 * (n as f64).sqrt(), &mut rng2);
+    Dataset {
+        name: format!("rcv1_like_n{n}_d{d}"),
+        design: a,
+        targets,
+        x_true: Some(x_true),
+    }
+}
+
+/// Controlled-correlation design for the Fig-2 style theory sweeps:
+/// `A_j = sqrt(1-c) g_j + sqrt(c) u` with a shared direction `u`, so the
+/// pairwise column correlation is ~`c` and `rho ~ 1 + c (d - 1)` — a dial
+/// from `rho ~ 1` (c=0, P* = d) to `rho ~ d` (c=1, P* = 1).
+pub fn correlated(n: usize, d: usize, c: f64, seed: u64) -> Dataset {
+    assert!((0.0..=1.0).contains(&c));
+    let mut rng = Rng::new(seed);
+    let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let wc = c.sqrt();
+    let wg = (1.0 - c).sqrt();
+    let mut m = DenseMatrix::zeros(n, d);
+    for j in 0..d {
+        for i in 0..n {
+            m.set(i, j, wg * rng.normal() + wc * u[i]);
+        }
+    }
+    m.normalize_columns();
+    let a = Design::Dense(m);
+    let mut rng2 = rng.split();
+    let x_true = sparse_x_true(d, (d / 4).max(2), &mut rng2);
+    let targets = regression_targets(&a, &x_true, 0.02, &mut rng2);
+    Dataset {
+        name: format!("correlated_c{c:.2}_n{n}_d{d}"),
+        design: a,
+        targets,
+        x_true: Some(x_true),
+    }
+}
+
+/// Convert sparse storage to dense when density makes CSC a pessimization.
+fn densify_if_warranted(a: &mut Design) {
+    if let Design::Sparse(m) = a {
+        if m.density() > 0.5 {
+            *a = Design::Dense(m.to_dense());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsela::power;
+
+    #[test]
+    fn generators_normalize_columns() {
+        let cases: Vec<Dataset> = vec![
+            sparco_like(40, 30, 0.2, 1),
+            singlepix_binary(32, 24, 2),
+            singlepix_pm1(32, 24, 3),
+            sparse_imaging(30, 60, 0.1, 4),
+            large_sparse_text(50, 40, 5),
+            zeta_like(60, 10, 6),
+            rcv1_like(30, 50, 0.17, 7),
+            correlated(40, 20, 0.3, 8),
+        ];
+        for ds in &cases {
+            for j in 0..ds.d() {
+                let nrm = ds.design.col_norm_sq(j);
+                assert!(
+                    (nrm - 1.0).abs() < 1e-9,
+                    "{}: column {j} norm^2 {nrm}",
+                    ds.name
+                );
+            }
+            assert_eq!(ds.targets.len(), ds.n());
+        }
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = sparse_imaging(30, 60, 0.1, 42);
+        let b = sparse_imaging(30, 60, 0.1, 42);
+        assert_eq!(a.targets, b.targets);
+        assert_eq!(a.design.to_dense(), b.design.to_dense());
+        let c = sparse_imaging(30, 60, 0.1, 43);
+        assert_ne!(a.targets, c.targets);
+    }
+
+    #[test]
+    fn binary_singlepix_has_rho_near_half_d() {
+        let ds = singlepix_binary(256, 64, 1);
+        let rho = power::spectral_radius(&ds.design, 500, 1e-9, 1).rho;
+        // rho ~ d/2 = 32 (the Ball64 phenomenon)
+        assert!(rho > 20.0 && rho < 40.0, "rho = {rho}");
+    }
+
+    #[test]
+    fn pm1_singlepix_has_small_rho() {
+        let ds = singlepix_pm1(256, 64, 1);
+        let rho = power::spectral_radius(&ds.design, 500, 1e-9, 1).rho;
+        // rho ~ (1 + sqrt(d/n))^2 = (1.5)^2 = 2.25
+        assert!(rho < 5.0, "rho = {rho}");
+    }
+
+    #[test]
+    fn correlation_dial_moves_rho() {
+        let lo = correlated(128, 32, 0.0, 9);
+        let hi = correlated(128, 32, 0.8, 9);
+        let rho_lo = power::spectral_radius(&lo.design, 500, 1e-9, 2).rho;
+        let rho_hi = power::spectral_radius(&hi.design, 500, 1e-9, 2).rho;
+        assert!(rho_lo < 4.0, "rho_lo = {rho_lo}");
+        assert!(rho_hi > 0.5 * 0.8 * 32.0, "rho_hi = {rho_hi}");
+        // rho ~ 1 + c(d-1) for the high-correlation dial
+        let predicted = 1.0 + 0.8 * 31.0;
+        assert!((rho_hi - predicted).abs() / predicted < 0.35, "rho_hi {rho_hi} vs {predicted}");
+    }
+
+    #[test]
+    fn labels_are_pm1() {
+        for ds in [zeta_like(50, 8, 1), rcv1_like(40, 60, 0.1, 2)] {
+            assert!(ds.targets.iter().all(|&y| y == 1.0 || y == -1.0));
+            // both classes present
+            assert!(ds.targets.iter().any(|&y| y == 1.0));
+            assert!(ds.targets.iter().any(|&y| y == -1.0));
+        }
+    }
+
+    #[test]
+    fn text_generator_power_law_density() {
+        let ds = large_sparse_text(100, 200, 3);
+        if let Design::Sparse(m) = &ds.design {
+            // early (frequent) features denser than late (rare) ones
+            let head: usize = (0..20).map(|j| m.col_nnz(j)).sum();
+            let tail: usize = (180..200).map(|j| m.col_nnz(j)).sum();
+            assert!(head > tail * 2, "head {head} tail {tail}");
+            assert!(m.density() < 0.2);
+        } else {
+            panic!("text dataset should be sparse");
+        }
+    }
+}

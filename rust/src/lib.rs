@@ -1,0 +1,47 @@
+//! # Shotgun: Parallel Coordinate Descent for L1-Regularized Loss Minimization
+//!
+//! A production-grade reproduction of Bradley, Kyrola, Bickson & Guestrin
+//! (ICML 2011) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the Shotgun coordinator: parallel round
+//!   scheduling, atomic `Ax` maintenance, pathwise continuation, CDN
+//!   line-search rounds, `P*` estimation, plus every substrate the paper
+//!   depends on (sparse linear algebra, dataset generators, all baseline
+//!   solvers, the benchmark harness and a multicore memory-wall simulator).
+//! * **Layer 2 (python/compile/model.py)** — the dense compute graph in
+//!   JAX, AOT-lowered once to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — the Pallas block-update
+//!   kernel executed through the PJRT runtime ([`runtime`]).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads
+//! `artifacts/*.hlo.txt` through the `xla` crate's PJRT CPU client.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use shotgun::data::synth;
+//! use shotgun::coordinator::{Shotgun, ShotgunConfig};
+//! use shotgun::solvers::Solver;
+//!
+//! let ds = synth::sparco_like(512, 1024, 0.05, 42);
+//! let mut solver = Shotgun::new(ShotgunConfig { p: 8, ..Default::default() });
+//! let result = solver.solve(&ds.design, &ds.targets, 0.5);
+//! println!("F(x) = {}", result.objective);
+//! ```
+
+pub mod util;
+pub mod sparsela;
+pub mod objective;
+pub mod data;
+pub mod metrics;
+pub mod solvers;
+pub mod coordinator;
+pub mod simcore;
+pub mod runtime;
+pub mod bench;
+pub mod testkit;
+
+/// Assumption-2.1 constant for the squared loss (paper Eq. 6).
+pub const BETA_SQUARED: f64 = 1.0;
+/// Assumption-2.1 constant for the logistic loss (paper Eq. 6).
+pub const BETA_LOGISTIC: f64 = 0.25;

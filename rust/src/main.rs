@@ -1,0 +1,324 @@
+//! `repro` — the Shotgun reproduction CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   solve          solve one problem with any solver
+//!   estimate-pstar power-iteration rho + P* for a dataset
+//!   bench <exp>    regenerate a paper table/figure
+//!                  (fig2|fig3|fig4|fig5|bounds|headline|ablations|all)
+//!   xla-demo       run the dense Shotgun engine through the PJRT runtime
+//!   gen-data       write a synthetic dataset in LIBSVM format
+//!   info           environment + artifact status
+//!
+//! Run `repro help` for flags.
+
+use shotgun::bench::{self, BenchConfig};
+use shotgun::coordinator::{Engine, PStar, Shotgun, ShotgunCdn, ShotgunConfig};
+use shotgun::data::{libsvm, synth, Dataset};
+use shotgun::objective::{LassoProblem, LogisticProblem};
+use shotgun::runtime::XlaLassoEngine;
+use shotgun::solvers::common::{LassoSolver, LogisticSolver, SolveOptions};
+use shotgun::solvers::{
+    cdn::ShootingCdn,
+    fpc_as::FpcAs,
+    glmnet::Glmnet,
+    gpsr_bb::GpsrBb,
+    hard_l0::HardL0,
+    hybrid::HybridSgdShotgun,
+    l1_ls::L1Ls,
+    parallel_sgd::ParallelSgd,
+    sgd::{Rate, Sgd},
+    shooting::Shooting,
+    smidas::Smidas,
+    sparsa::Sparsa,
+};
+use shotgun::util::cli::Args;
+use std::path::Path;
+
+const HELP: &str = r#"repro — Shotgun (parallel coordinate descent for L1) reproduction
+
+USAGE:
+  repro solve --data <spec> [--solver shotgun] [--p 8] [--lam 0.5]
+              [--engine exact|threaded] [--tol 1e-7] [--max-iters N]
+              [--loss squared|logistic] [--seed 42] [--trace-out f.csv]
+  repro estimate-pstar --data <spec> [--seed 42]
+  repro bench <fig2|fig3|fig4|fig5|bounds|headline|ablations|all>
+              [--scale 0.25] [--out results] [--seed 42] [--budget 60]
+  repro xla-demo [--artifacts artifacts] [--profile s] [--n 128] [--d 128]
+  repro gen-data --data <spec> --out <file.svm>
+  repro info
+
+DATA SPECS (--data):
+  file:<path.svm>                 LIBSVM file
+  sparco:<n>x<d>:<density>        e.g. sparco:512x1024:0.05
+  singlepix-pm1:<n>x<d>           Mug32-like (low rho)
+  singlepix-binary:<n>x<d>        Ball64-like (rho ~ d/2)
+  imaging:<n>x<d>:<density>       sparse compressed imaging
+  text:<n>x<d>                    large sparse text-like
+  zeta:<n>x<d>                    dense logistic, n >> d
+  rcv1:<n>x<d>:<density>          sparse logistic, d > n
+  correlated:<n>x<d>:<c>          correlation dial c in [0,1]
+
+SOLVERS (--solver): shotgun shotgun-cdn shooting shooting-cdn l1-ls
+  fpc-as gpsr-bb sparsa hard-l0 glmnet sgd parallel-sgd smidas hybrid
+"#;
+
+fn parse_dims(s: &str) -> (usize, usize) {
+    let (n, d) = s.split_once('x').expect("expected <n>x<d>");
+    (n.parse().expect("bad n"), d.parse().expect("bad d"))
+}
+
+fn load_data(spec: &str, seed: u64) -> Dataset {
+    if let Some(path) = spec.strip_prefix("file:") {
+        return libsvm::load(Path::new(path), true).expect("load LIBSVM file");
+    }
+    let mut parts = spec.split(':');
+    let kind = parts.next().unwrap_or_default();
+    let dims = parts.next().unwrap_or("256x512");
+    let (n, d) = parse_dims(dims);
+    let extra: f64 = parts
+        .next()
+        .map(|v| v.parse().expect("bad param"))
+        .unwrap_or(0.05);
+    match kind {
+        "sparco" => synth::sparco_like(n, d, extra, seed),
+        "singlepix-pm1" => synth::singlepix_pm1(n, d, seed),
+        "singlepix-binary" => synth::singlepix_binary(n, d, seed),
+        "imaging" => synth::sparse_imaging(n, d, extra, seed),
+        "text" => synth::large_sparse_text(n, d, seed),
+        "zeta" => synth::zeta_like(n, d, seed),
+        "rcv1" => synth::rcv1_like(n, d, extra.max(0.01), seed),
+        "correlated" => synth::correlated(n, d, extra, seed),
+        other => panic!("unknown data spec {other:?} (see `repro help`)"),
+    }
+}
+
+fn cmd_solve(args: &Args) {
+    let seed = args.usize_or("seed", 42) as u64;
+    let ds = load_data(&args.get_or("data", "sparco:256x512:0.05"), seed);
+    let lam = args.f64_or("lam", 0.5);
+    let p = args.usize_or("p", 8);
+    let solver_name = args.get_or("solver", "shotgun");
+    let loss = args.get_or("loss", "squared");
+    let opts = SolveOptions {
+        max_iters: args.usize_or("max-iters", 1_000_000) as u64,
+        max_seconds: args.f64_or("budget", 0.0),
+        tol: args.f64_or("tol", 1e-7),
+        record_every: args.usize_or("record-every", 256) as u64,
+        seed,
+        ..Default::default()
+    };
+    let engine = match args.get_or("engine", "exact").as_str() {
+        "threaded" => Engine::Threaded,
+        _ => Engine::Exact,
+    };
+    let d = ds.d();
+    let x0 = vec![0.0; d];
+    println!(
+        "dataset {} (n={}, d={}, density={:.3}), lam={lam}, solver={solver_name}",
+        ds.name,
+        ds.n(),
+        d,
+        ds.design.density()
+    );
+    let res = if loss == "logistic" {
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, lam);
+        match solver_name.as_str() {
+            "shotgun" | "shotgun-cdn" => {
+                let mut s = ShotgunCdn::with_p(p);
+                s.solve_logistic(&prob, &x0, &opts)
+            }
+            "shooting-cdn" => ShootingCdn::default().solve_logistic(&prob, &x0, &opts),
+            "shooting" => Shooting.solve_logistic(&prob, &x0, &opts),
+            "sgd" => {
+                let sweep_opts = SolveOptions {
+                    max_iters: 3,
+                    ..opts.clone()
+                };
+                let (eta, _) = Sgd::sweep(&prob, &x0, &sweep_opts, 1e-4, 1.0, 7);
+                println!("sgd: swept rate eta = {eta}");
+                Sgd::new(Rate::Constant(eta)).solve_logistic(&prob, &x0, &opts)
+            }
+            "parallel-sgd" => ParallelSgd::new(p, Rate::Constant(args.f64_or("eta", 0.1)))
+                .solve_logistic(&prob, &x0, &opts),
+            "smidas" => Smidas::new(args.f64_or("eta", 0.1)).solve_logistic(&prob, &x0, &opts),
+            "hybrid" => HybridSgdShotgun {
+                eta: args.f64_or("eta", 0.5),
+                p,
+                ..Default::default()
+            }
+            .solve_logistic(&prob, &x0, &opts),
+            other => panic!("{other} is not a logistic solver"),
+        }
+    } else {
+        let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+        match solver_name.as_str() {
+            "shotgun" => Shotgun::new(ShotgunConfig {
+                p,
+                engine,
+                ..Default::default()
+            })
+            .solve_lasso(&prob, &x0, &opts),
+            "shooting" => Shooting.solve_lasso(&prob, &x0, &opts),
+            "l1-ls" => L1Ls::default().solve_lasso(&prob, &x0, &opts),
+            "fpc-as" => FpcAs::default().solve_lasso(&prob, &x0, &opts),
+            "gpsr-bb" => GpsrBb::default().solve_lasso(&prob, &x0, &opts),
+            "sparsa" => Sparsa::default().solve_lasso(&prob, &x0, &opts),
+            "glmnet" => Glmnet::default().solve_lasso(&prob, &x0, &opts),
+            "hard-l0" => {
+                let s = args.usize_or("sparsity", (d / 10).max(1));
+                HardL0::with_sparsity(s).solve_lasso(&prob, &x0, &opts)
+            }
+            other => panic!("{other} is not a lasso solver"),
+        }
+    };
+    println!(
+        "{}: F = {:.8}  nnz = {}  iters = {}  updates = {}  time = {:.3}s  converged = {}",
+        res.solver,
+        res.objective,
+        res.nnz(),
+        res.iters,
+        res.updates,
+        res.seconds,
+        res.converged
+    );
+    if let Some(out) = args.get("trace-out") {
+        std::fs::write(out, res.trace.to_csv()).expect("write trace");
+        println!("trace written to {out}");
+    }
+}
+
+fn cmd_estimate_pstar(args: &Args) {
+    let seed = args.usize_or("seed", 42) as u64;
+    let ds = load_data(&args.get_or("data", "sparco:256x512:0.05"), seed);
+    let est = PStar::estimate(&ds.design, args.usize_or("max-iters", 500), 1e-6, seed);
+    println!(
+        "dataset {} (n={}, d={}): rho(A^T A) = {:.4}, P* = ceil(d/rho) = {} ({} power iterations, {:.4}s)",
+        ds.name,
+        ds.n(),
+        ds.d(),
+        est.rho,
+        est.p_star,
+        est.iters,
+        est.seconds
+    );
+}
+
+fn cmd_bench(args: &Args) {
+    let cfg = BenchConfig {
+        scale: args.f64_or("scale", 0.25),
+        seed: args.usize_or("seed", 42) as u64,
+        out_dir: args.get_or("out", "results"),
+        rel_tol: args.f64_or("rel-tol", 0.005),
+        max_seconds: args.f64_or("budget", 60.0),
+    };
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    match which {
+        "fig2" => bench::fig2::run(&cfg),
+        "fig3" => bench::fig3::run(&cfg),
+        "fig4" => bench::fig4::run(&cfg),
+        "fig5" => bench::fig5::run(&cfg),
+        "bounds" => bench::bounds::run(&cfg),
+        "headline" => bench::headline::run(&cfg),
+        "ablations" => bench::ablations::run(&cfg),
+        "all" => bench::run_all(&cfg),
+        other => panic!("unknown experiment {other:?}"),
+    }
+    println!("\nreports written to {}/", cfg.out_dir);
+}
+
+fn cmd_xla_demo(args: &Args) {
+    let dir = args.get_or("artifacts", "artifacts");
+    let profile = args.get_or("profile", "s");
+    let n = args.usize_or("n", 128);
+    let d = args.usize_or("d", 128);
+    let seed = args.usize_or("seed", 42) as u64;
+    let mut engine = XlaLassoEngine::open(Path::new(&dir), &profile).expect("open runtime");
+    let (big_n, big_d, p, k) = engine.profile_shape();
+    println!("PJRT runtime up: profile {profile} (N={big_n}, D={big_d}, P={p}, K={k})");
+    let ds = synth::singlepix_pm1(n, d, seed);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, args.f64_or("lam", 0.3));
+    let rho = engine.power_iter_rho(&prob).expect("device power iteration");
+    println!(
+        "device power iteration: rho = {rho:.4}, P* = {}",
+        shotgun::sparsela::power::p_star(d, rho)
+    );
+    let opts = SolveOptions {
+        max_iters: args.usize_or("max-iters", 4_000) as u64,
+        tol: 1e-5,
+        seed,
+        ..Default::default()
+    };
+    let res = engine
+        .solve_lasso(&prob, &vec![0.0; d], &opts)
+        .expect("device solve");
+    println!(
+        "{}: F = {:.6}  nnz = {}  device rounds = {}  time = {:.3}s  converged = {}",
+        res.solver,
+        res.objective,
+        res.nnz(),
+        res.iters,
+        res.seconds,
+        res.converged
+    );
+}
+
+fn cmd_gen_data(args: &Args) {
+    let seed = args.usize_or("seed", 42) as u64;
+    let ds = load_data(&args.get_or("data", "sparco:256x512:0.05"), seed);
+    let out = args.get_or("out", "dataset.svm");
+    let csr = ds.design.to_csr();
+    let mut s = String::new();
+    for i in 0..ds.n() {
+        s.push_str(&format!("{}", ds.targets[i]));
+        let (idx, val) = csr.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            s.push_str(&format!(" {}:{}", j + 1, v));
+        }
+        s.push('\n');
+    }
+    std::fs::write(&out, s).expect("write dataset");
+    println!("wrote {} ({} x {}) to {out}", ds.name, ds.n(), ds.d());
+}
+
+fn cmd_info() {
+    println!("shotgun repro build: {}", env!("CARGO_PKG_VERSION"));
+    let art = Path::new("artifacts/manifest.json");
+    if art.exists() {
+        match shotgun::runtime::Manifest::load(art) {
+            Ok(m) => {
+                println!("artifacts: {} entries, profiles:", m.artifacts.len());
+                for (tag, p) in &m.profiles {
+                    println!("  {tag}: n={} d={} p={} k={}", p.n, p.d, p.p, p.k);
+                }
+            }
+            Err(e) => println!("artifacts: manifest unreadable: {e}"),
+        }
+    } else {
+        println!("artifacts: not built (run `make artifacts`)");
+    }
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!(
+            "PJRT: platform {} with {} device(s)",
+            c.platform_name(),
+            c.device_count()
+        ),
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("solve") => cmd_solve(&args),
+        Some("estimate-pstar") => cmd_estimate_pstar(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("xla-demo") => cmd_xla_demo(&args),
+        Some("gen-data") => cmd_gen_data(&args),
+        Some("info") => cmd_info(),
+        Some("help") | None => println!("{HELP}"),
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Micro/macro benchmark harness (criterion substitute — criterion is not
+//! in the vendored crate set). Warms up, runs timed samples, reports
+//! median/mean/stddev, and writes results as JSON lines for the
+//! experiment reports.
+
+use crate::util::mean_std;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<48} median {:>12} mean {:>12} ± {:>10}  ({} samples)",
+            self.name,
+            fmt_secs(self.median_s),
+            fmt_secs(self.mean_s),
+            fmt_secs(self.std_s),
+            self.samples
+        )
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":{},\"samples\":{},\"mean_s\":{:.9},\"median_s\":{:.9},\"std_s\":{:.9},\"min_s\":{:.9},\"max_s\":{:.9}}}",
+            crate::util::json::escape(&self.name),
+            self.samples,
+            self.mean_s,
+            self.median_s,
+            self.std_s,
+            self.min_s,
+            self.max_s
+        )
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then `samples` timed runs.
+/// The closure must do its full unit of work per call; return a value to
+/// defeat dead-code elimination (it is black-boxed here).
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &times)
+}
+
+/// Time-budgeted variant: keeps sampling until `budget_s` elapses
+/// (at least `min_samples`).
+pub fn bench_for<T>(
+    name: &str,
+    budget_s: f64,
+    min_samples: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    black_box(f()); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < min_samples || start.elapsed().as_secs_f64() < budget_s {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() > 100_000 {
+            break;
+        }
+    }
+    summarize(name, &times)
+}
+
+fn summarize(name: &str, times: &[f64]) -> BenchResult {
+    let (mean, std) = mean_std(times);
+    let median = crate::util::median(times);
+    BenchResult {
+        name: name.to_string(),
+        samples: times.len(),
+        mean_s: mean,
+        median_s: median,
+        std_s: std,
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Optimization barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(r.samples, 5);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
+        assert!(r.mean_s > 0.0);
+    }
+
+    #[test]
+    fn bench_for_minimum_samples() {
+        let r = bench_for("tiny", 0.0, 3, || 1 + 1);
+        assert!(r.samples >= 3);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn json_escapes_name() {
+        let r = bench("a\"b", 0, 1, || 0);
+        assert!(r.to_json().contains("\\\""));
+    }
+}

@@ -1,0 +1,160 @@
+//! Metrics: convergence traces, wall-clock timing, and the bench harness
+//! that replaces criterion in this offline environment.
+
+pub mod harness;
+
+use std::time::Instant;
+
+/// One sampled point of a solver run.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    /// Coordinate updates (or sample updates for SGD) performed so far.
+    pub updates: u64,
+    /// Outer iterations (rounds for Shotgun, epochs for SGD).
+    pub iters: u64,
+    /// Wall-clock seconds since solve start.
+    pub seconds: f64,
+    /// Objective F(x).
+    pub objective: f64,
+    /// Non-zeros in x.
+    pub nnz: usize,
+    /// Optional auxiliary metric (test error for logistic experiments).
+    pub aux: f64,
+}
+
+/// Convergence trace of one solver run; every solver records one.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub points: Vec<TracePoint>,
+    /// Simulated-time seconds per point (memory-wall model), parallel to
+    /// `points` when the simulator is enabled.
+    pub sim_seconds: Vec<f64>,
+}
+
+impl Trace {
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn last_objective(&self) -> Option<f64> {
+        self.points.last().map(|p| p.objective)
+    }
+
+    /// First wall-clock time at which the objective came within
+    /// `rel_tol` of `f_star` (the paper's convergence-time metric:
+    /// "first time within 0.5% of the optimal objective").
+    pub fn time_to_tolerance(&self, f_star: f64, rel_tol: f64) -> Option<f64> {
+        let thresh = threshold(f_star, rel_tol);
+        self.points
+            .iter()
+            .find(|p| p.objective <= thresh)
+            .map(|p| p.seconds)
+    }
+
+    /// First iteration count within tolerance (Fig. 2 / Fig. 5 metric).
+    pub fn iters_to_tolerance(&self, f_star: f64, rel_tol: f64) -> Option<u64> {
+        let thresh = threshold(f_star, rel_tol);
+        self.points
+            .iter()
+            .find(|p| p.objective <= thresh)
+            .map(|p| p.iters)
+    }
+
+    /// Objectives are recorded non-increasingly for descent methods; used
+    /// by property tests.
+    pub fn is_monotone_nonincreasing(&self, slack: f64) -> bool {
+        self.points
+            .windows(2)
+            .all(|w| w[1].objective <= w[0].objective + slack)
+    }
+
+    /// CSV dump: header + one row per point.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("updates,iters,seconds,objective,nnz,aux\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{},{:.6},{:.10e},{},{:.6}\n",
+                p.updates, p.iters, p.seconds, p.objective, p.nnz, p.aux
+            ));
+        }
+        s
+    }
+}
+
+/// `f_star`-relative convergence threshold; robust to `f_star ~ 0`.
+pub fn threshold(f_star: f64, rel_tol: f64) -> f64 {
+    f_star + rel_tol * f_star.abs().max(1e-12)
+}
+
+/// Simple wall-clock stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace_with(objs: &[f64]) -> Trace {
+        let mut t = Trace::default();
+        for (i, &o) in objs.iter().enumerate() {
+            t.push(TracePoint {
+                updates: i as u64 * 10,
+                iters: i as u64,
+                seconds: i as f64 * 0.5,
+                objective: o,
+                nnz: i,
+                aux: 0.0,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn tolerance_queries() {
+        let t = trace_with(&[10.0, 5.0, 2.0, 1.01, 1.001]);
+        // f* = 1.0, tol 0.5% -> threshold 1.005
+        assert_eq!(t.iters_to_tolerance(1.0, 0.005), Some(4));
+        assert_eq!(t.time_to_tolerance(1.0, 0.005), Some(2.0));
+        assert_eq!(t.iters_to_tolerance(1.0, 0.05), Some(3));
+        assert_eq!(t.iters_to_tolerance(0.0, 0.005), None);
+    }
+
+    #[test]
+    fn monotonicity_check() {
+        assert!(trace_with(&[3.0, 2.0, 2.0, 1.0]).is_monotone_nonincreasing(0.0));
+        assert!(!trace_with(&[3.0, 2.0, 2.5]).is_monotone_nonincreasing(0.0));
+        assert!(trace_with(&[3.0, 2.0, 2.0001]).is_monotone_nonincreasing(0.001));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = trace_with(&[1.0, 0.5]).to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("updates,"));
+    }
+
+    #[test]
+    fn threshold_near_zero() {
+        assert!(threshold(0.0, 0.005) > 0.0);
+        assert!((threshold(100.0, 0.005) - 100.5).abs() < 1e-9);
+    }
+}

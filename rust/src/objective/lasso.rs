@@ -1,0 +1,212 @@
+//! The Lasso objective (paper Eq. 2) with residual-cached coordinate ops.
+
+use crate::sparsela::{vecops, Design};
+
+/// A Lasso instance: `min 1/2 ||Ax - y||^2 + lam ||x||_1`.
+///
+/// Owns nothing heavy: borrows the design and targets. The residual
+/// `r = Ax - y` is carried by the solver and refreshed incrementally.
+pub struct LassoProblem<'a> {
+    pub a: &'a Design,
+    pub y: &'a [f64],
+    pub lam: f64,
+}
+
+impl<'a> LassoProblem<'a> {
+    pub fn new(a: &'a Design, y: &'a [f64], lam: f64) -> Self {
+        assert_eq!(a.n(), y.len(), "targets length != n");
+        LassoProblem { a, y, lam }
+    }
+
+    pub fn n(&self) -> usize {
+        self.a.n()
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.d()
+    }
+
+    /// Residual for a given `x`: `r = Ax - y`.
+    pub fn residual(&self, x: &[f64]) -> Vec<f64> {
+        let mut r = vec![0.0; self.n()];
+        self.a.matvec(x, &mut r);
+        for (ri, yi) in r.iter_mut().zip(self.y) {
+            *ri -= yi;
+        }
+        r
+    }
+
+    /// Objective from a maintained residual (cheap path).
+    pub fn objective_from_residual(&self, r: &[f64], x: &[f64]) -> f64 {
+        0.5 * vecops::norm2_sq(r) + self.lam * vecops::norm1(x)
+    }
+
+    /// Objective from scratch.
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        let r = self.residual(x);
+        self.objective_from_residual(&r, x)
+    }
+
+    /// Smooth-part coordinate gradient `g_j = A_j^T r`.
+    #[inline]
+    pub fn grad_j(&self, j: usize, r: &[f64]) -> f64 {
+        self.a.col_dot(j, r)
+    }
+
+    /// Full smooth gradient `A^T r`.
+    pub fn grad(&self, r: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.d()];
+        self.a.matvec_t(r, &mut g);
+        g
+    }
+
+    /// Coordinate step (Eq. 5 folded to signed coordinates): returns `dx`
+    /// and leaves cache refresh to the caller.
+    #[inline]
+    pub fn cd_step(&self, j: usize, x_j: f64, r: &[f64]) -> f64 {
+        vecops::cd_step(x_j, self.grad_j(j, r), self.lam, crate::BETA_SQUARED)
+    }
+
+    /// Apply `x_j += dx` maintaining `r`.
+    #[inline]
+    pub fn apply_step(&self, j: usize, dx: f64, x: &mut [f64], r: &mut [f64]) {
+        if dx != 0.0 {
+            x[j] += dx;
+            self.a.col_axpy(j, dx, r);
+        }
+    }
+
+    /// Largest lambda with a non-trivial solution:
+    /// `lam_max = ||A^T y||_inf` (x = 0 optimal for lam >= lam_max).
+    pub fn lambda_max(&self) -> f64 {
+        let mut g = vec![0.0; self.d()];
+        self.a.matvec_t(self.y, &mut g);
+        vecops::norm_inf(&g)
+    }
+
+    /// KKT violation of the current iterate: max over j of the distance
+    /// of `g_j` from the subdifferential condition. Zero at the optimum.
+    pub fn kkt_violation(&self, x: &[f64], r: &[f64]) -> f64 {
+        let mut worst: f64 = 0.0;
+        for j in 0..self.d() {
+            let g = self.grad_j(j, r);
+            let v = if x[j] > 0.0 {
+                (g + self.lam).abs()
+            } else if x[j] < 0.0 {
+                (g - self.lam).abs()
+            } else {
+                (g.abs() - self.lam).max(0.0)
+            };
+            worst = worst.max(v);
+        }
+        worst
+    }
+
+    /// Duality gap at `x` (Kim et al. 2007 dual scaling). A certified
+    /// optimality measure used by the L1_LS baseline's termination.
+    pub fn duality_gap(&self, x: &[f64], r: &[f64]) -> f64 {
+        // dual feasible point: nu = s * r with s chosen so |A^T nu|_inf <= lam
+        let mut atr = vec![0.0; self.d()];
+        self.a.matvec_t(r, &mut atr);
+        let inf = vecops::norm_inf(&atr);
+        let s = if inf > self.lam { self.lam / inf } else { 1.0 };
+        // G(nu) = -1/2 ||nu||^2 - nu^T y  evaluated at nu = s r
+        let nu_sq = s * s * vecops::norm2_sq(r);
+        let nu_y = s * vecops::dot(r, self.y);
+        let dual = -0.5 * nu_sq - nu_y;
+        self.objective_from_residual(r, x) - dual
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsela::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64) -> (Design, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut m = DenseMatrix::from_fn(20, 8, |_, _| rng.normal());
+        m.normalize_columns();
+        let a = Design::Dense(m);
+        let y: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        (a, y)
+    }
+
+    #[test]
+    fn residual_and_objective_consistent() {
+        let (a, y) = problem(1);
+        let p = LassoProblem::new(&a, &y, 0.3);
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+        let r = p.residual(&x);
+        assert!((p.objective(&x) - p.objective_from_residual(&r, &x)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_step_maintains_residual() {
+        let (a, y) = problem(3);
+        let p = LassoProblem::new(&a, &y, 0.3);
+        let mut x = vec![0.0; 8];
+        let mut r = p.residual(&x);
+        for j in [0usize, 3, 7, 3] {
+            let dx = p.cd_step(j, x[j], &r);
+            p.apply_step(j, dx, &mut x, &mut r);
+            let fresh = p.residual(&x);
+            for (cached, exact) in r.iter().zip(&fresh) {
+                assert!((cached - exact).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn cd_step_descends() {
+        let (a, y) = problem(5);
+        let p = LassoProblem::new(&a, &y, 0.2);
+        let mut x = vec![0.0; 8];
+        let mut r = p.residual(&x);
+        let mut f = p.objective_from_residual(&r, &x);
+        for j in 0..8 {
+            let dx = p.cd_step(j, x[j], &r);
+            p.apply_step(j, dx, &mut x, &mut r);
+            let f2 = p.objective_from_residual(&r, &x);
+            assert!(f2 <= f + 1e-12, "coordinate step must never increase F");
+            f = f2;
+        }
+    }
+
+    #[test]
+    fn lambda_max_kills_solution() {
+        let (a, y) = problem(7);
+        let lam_max = LassoProblem::new(&a, &y, 0.0).lambda_max();
+        let p = LassoProblem::new(&a, &y, lam_max * 1.0001);
+        let x = vec![0.0; 8];
+        let r = p.residual(&x);
+        // at x = 0 with lam >= lam_max every cd step is zero
+        for j in 0..8 {
+            assert_eq!(p.cd_step(j, 0.0, &r), 0.0);
+        }
+        assert!(p.kkt_violation(&x, &r) < 1e-12);
+    }
+
+    #[test]
+    fn duality_gap_nonneg_and_tightens() {
+        let (a, y) = problem(9);
+        let p = LassoProblem::new(&a, &y, 0.4);
+        let mut x = vec![0.0; 8];
+        let mut r = p.residual(&x);
+        let gap0 = p.duality_gap(&x, &r);
+        assert!(gap0 >= -1e-10);
+        // run plenty of CD; gap should shrink a lot
+        let mut rng = Rng::new(11);
+        for _ in 0..2000 {
+            let j = rng.below(8);
+            let dx = p.cd_step(j, x[j], &r);
+            p.apply_step(j, dx, &mut x, &mut r);
+        }
+        let gap1 = p.duality_gap(&x, &r);
+        assert!(gap1 >= -1e-10);
+        assert!(gap1 < 0.05 * gap0.max(1e-12), "gap {gap0} -> {gap1}");
+        assert!(p.kkt_violation(&x, &r) < 1e-6);
+    }
+}

@@ -1,0 +1,84 @@
+//! Objectives of problem (1): squared loss (Lasso) and logistic loss,
+//! with the cached-state machinery every solver shares.
+//!
+//! Both keep the paper's `Ax`-cache trick (Friedman et al. 2010, §4.1.1):
+//! Lasso solvers carry the residual `r = Ax - y`; logistic solvers carry
+//! the margin vector `z = Ax`. A coordinate update `x_j += dx` refreshes
+//! the cache with one sparse column axpy.
+
+pub mod lasso;
+pub mod logistic;
+
+pub use lasso::LassoProblem;
+pub use logistic::LogisticProblem;
+
+/// Which loss a dataset/solver pairing uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// `F(x) = 1/2 ||Ax - y||^2 + lam ||x||_1` (paper Eq. 2), beta = 1.
+    Squared,
+    /// `F(x) = sum log(1 + exp(-y a^T x)) + lam ||x||_1` (Eq. 3), beta = 1/4.
+    Logistic,
+}
+
+impl Loss {
+    /// The Assumption-2.1 constant (paper Eq. 6).
+    pub fn beta(self) -> f64 {
+        match self {
+            Loss::Squared => crate::BETA_SQUARED,
+            Loss::Logistic => crate::BETA_LOGISTIC,
+        }
+    }
+}
+
+/// Numerically stable `log(1 + exp(-m))`.
+#[inline]
+pub fn log1p_exp_neg(m: f64) -> f64 {
+    if m > 0.0 {
+        (-m).exp().ln_1p()
+    } else {
+        -m + m.exp().ln_1p()
+    }
+}
+
+/// Logistic sigma(-m) = 1 / (1 + exp(m)), stable for large |m|.
+#[inline]
+pub fn sigma_neg(m: f64) -> f64 {
+    if m > 0.0 {
+        let e = (-m).exp();
+        e / (1.0 + e)
+    } else {
+        1.0 / (1.0 + m.exp())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_constants() {
+        assert_eq!(Loss::Squared.beta(), 1.0);
+        assert_eq!(Loss::Logistic.beta(), 0.25);
+    }
+
+    #[test]
+    fn stable_logs() {
+        assert!((log1p_exp_neg(0.0) - (2f64).ln()).abs() < 1e-15);
+        // large positive margin: loss ~ exp(-m) -> 0
+        assert!(log1p_exp_neg(50.0) < 1e-20);
+        // large negative margin: loss ~ -m
+        assert!((log1p_exp_neg(-50.0) - 50.0).abs() < 1e-12);
+        assert!(log1p_exp_neg(745.0).is_finite());
+        assert!(log1p_exp_neg(-745.0).is_finite());
+    }
+
+    #[test]
+    fn stable_sigma() {
+        assert!((sigma_neg(0.0) - 0.5).abs() < 1e-15);
+        assert!(sigma_neg(40.0) < 1e-15);
+        assert!((sigma_neg(-40.0) - 1.0).abs() < 1e-15);
+        assert!(sigma_neg(800.0) >= 0.0);
+        assert!(sigma_neg(-800.0) <= 1.0);
+    }
+}

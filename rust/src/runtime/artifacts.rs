@@ -1,0 +1,192 @@
+//! Manifest-driven artifact discovery: `aot.py` writes
+//! `artifacts/manifest.json` describing every lowered entrypoint (file,
+//! shapes, dtypes, profile); the runtime never hardcodes shapes.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One argument's shape/dtype.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgDesc {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub entry: String,
+    pub profile: String,
+    pub file: String,
+    pub args: Vec<ArgDesc>,
+}
+
+/// A shape profile (n, d, p, k, power_steps).
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    pub n: usize,
+    pub d: usize,
+    pub p: usize,
+    pub k: usize,
+    pub power_steps: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub profiles: BTreeMap<String, Profile>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let mut m = Manifest::default();
+        let profs = j
+            .get("profiles")
+            .and_then(|p| p.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing profiles"))?;
+        for (tag, p) in profs {
+            let g = |k: &str| p.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            m.profiles.insert(
+                tag.clone(),
+                Profile {
+                    n: g("n"),
+                    d: g("d"),
+                    p: g("p"),
+                    k: g("k"),
+                    power_steps: g("power_steps"),
+                },
+            );
+        }
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        for a in arts {
+            let gets = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))?
+                    .to_string())
+            };
+            let mut args = Vec::new();
+            if let Some(list) = a.get("args").and_then(|v| v.as_arr()) {
+                for arg in list {
+                    let shape = arg
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .map(|s| s.iter().filter_map(|v| v.as_usize()).collect())
+                        .unwrap_or_default();
+                    let dtype = arg
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("float32")
+                        .to_string();
+                    args.push(ArgDesc { shape, dtype });
+                }
+            }
+            m.artifacts.push(ArtifactSpec {
+                entry: gets("entry")?,
+                profile: gets("profile")?,
+                file: gets("file")?,
+                args,
+            });
+        }
+        Ok(m)
+    }
+
+    pub fn find(&self, entry: &str, profile: &str) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.entry == entry && a.profile == profile)
+    }
+
+    /// Smallest profile whose (n, d) dominate the given problem size.
+    pub fn profile_for(&self, n: usize, d: usize) -> Option<(&str, &Profile)> {
+        self.profiles
+            .iter()
+            .filter(|(_, p)| p.n >= n && p.d >= d)
+            .min_by_key(|(_, p)| p.n * p.d)
+            .map(|(tag, p)| (tag.as_str(), p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{
+          "profiles": {"s": {"n": 256, "d": 512, "p": 8, "k": 8, "power_steps": 16},
+                       "m": {"n": 512, "d": 2048, "p": 16, "k": 16, "power_steps": 32}},
+          "artifacts": [
+            {"entry": "lasso_round", "profile": "s", "file": "lasso_round.s.hlo.txt",
+             "args": [{"shape": [256, 512], "dtype": "float32"},
+                      {"shape": [256], "dtype": "float32"}]},
+            {"entry": "lasso_round", "profile": "m", "file": "lasso_round.m.hlo.txt",
+             "args": []}
+          ]
+        }"#
+    }
+
+    #[test]
+    fn parses_profiles_and_artifacts() {
+        let m = Manifest::parse(sample()).unwrap();
+        assert_eq!(m.profiles["s"].n, 256);
+        assert_eq!(m.profiles["m"].d, 2048);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("lasso_round", "s").unwrap();
+        assert_eq!(a.file, "lasso_round.s.hlo.txt");
+        assert_eq!(a.args[0].shape, vec![256, 512]);
+        assert_eq!(a.args[1].shape, vec![256]);
+    }
+
+    #[test]
+    fn find_misses_cleanly() {
+        let m = Manifest::parse(sample()).unwrap();
+        assert!(m.find("nope", "s").is_none());
+        assert!(m.find("lasso_round", "xl").is_none());
+    }
+
+    #[test]
+    fn profile_selection_smallest_dominating() {
+        let m = Manifest::parse(sample()).unwrap();
+        assert_eq!(m.profile_for(100, 400).unwrap().0, "s");
+        assert_eq!(m.profile_for(300, 1000).unwrap().0, "m");
+        assert!(m.profile_for(10_000, 10).is_none());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration hook: when `make artifacts` has run, the real
+        // manifest must parse and contain every entrypoint x profile
+        let path = std::path::Path::new("artifacts/manifest.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(path).unwrap();
+        for entry in [
+            "lasso_round",
+            "lasso_rounds",
+            "lasso_objective",
+            "logistic_round",
+            "logistic_objective",
+            "power_iter",
+        ] {
+            for profile in m.profiles.keys() {
+                assert!(
+                    m.find(entry, profile).is_some(),
+                    "missing {entry}.{profile}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! The XLA-backed Shotgun engine for dense problems: synchronous block
+//! rounds through the AOT-compiled L2 graph (`lasso_rounds`), whose flops
+//! live in the L1 Pallas kernels. This is the TPU-shaped execution of
+//! DESIGN.md §Hardware-Adaptation, run here on the PJRT CPU client.
+//!
+//! The rust coordinator still owns the randomness and the schedule: it
+//! draws K x P coordinate blocks per device call (K fused rounds
+//! amortize dispatch), feeds them as an i32 tensor, and carries the
+//! residual/weight state across calls.
+
+use super::Runtime;
+use crate::metrics::{Stopwatch, Trace, TracePoint};
+use crate::objective::LassoProblem;
+use crate::sparsela::vecops;
+use crate::solvers::common::{SolveOptions, SolveResult};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+pub struct XlaLassoEngine {
+    runtime: Runtime,
+    profile: String,
+}
+
+impl XlaLassoEngine {
+    pub fn open(artifacts_dir: &Path, profile: &str) -> Result<XlaLassoEngine> {
+        let runtime = Runtime::open(artifacts_dir)?;
+        if !runtime.manifest().profiles.contains_key(profile) {
+            return Err(anyhow!("profile {profile} not in manifest"));
+        }
+        Ok(XlaLassoEngine {
+            runtime,
+            profile: profile.to_string(),
+        })
+    }
+
+    pub fn profile_shape(&self) -> (usize, usize, usize, usize) {
+        let p = &self.runtime.manifest().profiles[&self.profile];
+        (p.n, p.d, p.p, p.k)
+    }
+
+    /// Solve a dense Lasso through the device graph. The problem must fit
+    /// the profile (n <= N, d <= D); rows/columns are zero-padded, which
+    /// is exact for both the residual and the coordinate updates.
+    pub fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> Result<SolveResult> {
+        let (big_n, big_d, p, k) = self.profile_shape();
+        let n = prob.n();
+        let d = prob.d();
+        if n > big_n || d > big_d {
+            return Err(anyhow!(
+                "problem ({n}x{d}) exceeds profile ({big_n}x{big_d})"
+            ));
+        }
+        // stage A (zero-padded, row-major f32) once
+        let dense = prob.a.to_dense();
+        let mut a_pad = vec![0f32; big_n * big_d];
+        for j in 0..d {
+            let col = dense.col(j);
+            for i in 0..n {
+                a_pad[i * big_d + j] = col[i] as f32;
+            }
+        }
+        // stage the design matrix + lambda on device ONCE (§Perf: the
+        // dominant dispatch cost was re-uploading A every call)
+        let a_buf = self.runtime.to_device_f32(&a_pad, &[big_n, big_d])?;
+        let lam_buf = self
+            .runtime
+            .to_device_f32(&[prob.lam as f32], &[])?;
+        // residual r = Ax - y (padded rows stay 0)
+        let mut x = x0.to_vec();
+        let r0 = prob.residual(&x);
+        let mut r_f32: Vec<f32> = (0..big_n)
+            .map(|i| if i < n { r0[i] as f32 } else { 0.0 })
+            .collect();
+        let mut x_f32: Vec<f32> = (0..big_d)
+            .map(|j| if j < d { x[j] as f32 } else { 0.0 })
+            .collect();
+
+        let mut rng = Rng::new(opts.seed);
+        let watch = Stopwatch::new();
+        let mut trace = Trace::default();
+        let f0 = prob.objective_from_residual(&r0, &x);
+        trace.push(TracePoint {
+            updates: 0,
+            iters: 0,
+            seconds: 0.0,
+            objective: f0,
+            nnz: vecops::nnz(&x, 1e-10),
+            aux: 0.0,
+        });
+
+        let mut rounds = 0u64;
+        let mut updates = 0u64;
+        let mut converged = false;
+        while rounds < opts.max_iters {
+            // draw K rounds x P coordinates (multiset, over the real d)
+            let idxs: Vec<i32> = (0..k * p).map(|_| rng.below(d) as i32).collect();
+            let r_buf = self.runtime.to_device_f32(&r_f32, &[big_n])?;
+            let x_buf = self.runtime.to_device_f32(&x_f32, &[big_d])?;
+            let i_buf = self.runtime.to_device_i32(&idxs, &[k, p])?;
+            let out = self.runtime.call_b(
+                "lasso_rounds",
+                &self.profile,
+                &[&a_buf, &r_buf, &x_buf, &i_buf, &lam_buf],
+            )?;
+            let r_new: Vec<f32> = out[0].to_vec::<f32>().context("r out")?;
+            let x_new: Vec<f32> = out[1].to_vec::<f32>().context("x out")?;
+            // convergence check on the weight delta across the K rounds
+            let mut max_dx: f32 = 0.0;
+            for j in 0..d {
+                max_dx = max_dx.max((x_new[j] - x_f32[j]).abs());
+            }
+            r_f32 = r_new;
+            x_f32 = x_new;
+            rounds += k as u64;
+            updates += (k * p) as u64;
+            let obj = {
+                let rr: f64 = r_f32[..n].iter().map(|&v| (v as f64) * (v as f64)).sum();
+                let l1: f64 = x_f32[..d].iter().map(|&v| (v as f64).abs()).sum();
+                0.5 * rr + prob.lam * l1
+            };
+            trace.push(TracePoint {
+                updates,
+                iters: rounds,
+                seconds: watch.seconds(),
+                objective: obj,
+                nnz: x_f32[..d].iter().filter(|v| v.abs() > 1e-8).count(),
+                aux: 0.0,
+            });
+            if !obj.is_finite() || obj > 1e3 * f0.abs().max(1.0) {
+                break; // diverged (P too large for this problem's rho)
+            }
+            if (max_dx as f64) < opts.tol.max(1e-6) {
+                converged = true;
+                break;
+            }
+            if opts.max_seconds > 0.0 && watch.seconds() > opts.max_seconds {
+                break;
+            }
+        }
+        for j in 0..d {
+            x[j] = x_f32[j] as f64;
+        }
+        let objective = prob.objective(&x);
+        Ok(SolveResult {
+            solver: format!("shotgun-xla-p{p}"),
+            x,
+            objective,
+            iters: rounds,
+            updates,
+            seconds: watch.seconds(),
+            converged,
+            trace,
+        })
+    }
+
+    /// Estimate rho(A^T A) on device via the AOT `power_iter` graph.
+    pub fn power_iter_rho(&mut self, prob: &LassoProblem) -> Result<f64> {
+        let (big_n, big_d, _, _) = self.profile_shape();
+        let n = prob.n();
+        let d = prob.d();
+        if n > big_n || d > big_d {
+            return Err(anyhow!("problem exceeds profile"));
+        }
+        let dense = prob.a.to_dense();
+        let mut a_pad = vec![0f32; big_n * big_d];
+        for j in 0..d {
+            let col = dense.col(j);
+            for i in 0..n {
+                a_pad[i * big_d + j] = col[i] as f32;
+            }
+        }
+        // start vector: uniform over the real columns, 0 on padding
+        let v: Vec<f32> = (0..big_d)
+            .map(|j| if j < d { (1.0 / (d as f64).sqrt()) as f32 } else { 0.0 })
+            .collect();
+        // A staged on device once; v round-trips (it is big_d floats)
+        let a_buf = self.runtime.to_device_f32(&a_pad, &[big_n, big_d])?;
+        let mut v_host = v;
+        let mut rho = 0f32;
+        // a few chained device calls of `power_steps` iterations each
+        for _ in 0..4 {
+            let v_buf = self.runtime.to_device_f32(&v_host, &[big_d])?;
+            let out = self
+                .runtime
+                .call_b("power_iter", &self.profile, &[&a_buf, &v_buf])?;
+            v_host = out[0].to_vec::<f32>()?;
+            rho = out[1].to_vec::<f32>()?[0];
+        }
+        Ok(rho as f64)
+    }
+}
+
+// NOTE: integration tests that exercise the PJRT path live in
+// rust/tests/xla_integration.rs (they need `make artifacts` to have run).

@@ -1,0 +1,184 @@
+//! Shared solver interfaces, options, and trace recording.
+
+use crate::metrics::{Stopwatch, Trace, TracePoint};
+use crate::objective::{LassoProblem, LogisticProblem};
+use crate::sparsela::{vecops, Design};
+
+/// Options shared by every solver.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    /// Hard cap on outer iterations (rounds/epochs/sweep units).
+    pub max_iters: u64,
+    /// Hard cap on wall-clock seconds (0 = unlimited).
+    pub max_seconds: f64,
+    /// Convergence tolerance; CD solvers use max |dx| over a sweep-worth
+    /// of updates (the paper: "Shotgun monitors the change in x").
+    pub tol: f64,
+    /// Record a trace point every `record_every` outer iterations.
+    pub record_every: u64,
+    /// RNG seed for stochastic solvers.
+    pub seed: u64,
+    /// Optional auxiliary evaluation (e.g. held-out error) recorded into
+    /// `TracePoint::aux` at each trace point.
+    pub aux_every_record: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            max_iters: 100_000,
+            max_seconds: 0.0,
+            tol: 1e-6,
+            record_every: 16,
+            seed: 1,
+            aux_every_record: false,
+        }
+    }
+}
+
+/// Outcome of one solve.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub solver: String,
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub iters: u64,
+    /// Total coordinate (or sample) updates performed.
+    pub updates: u64,
+    pub seconds: f64,
+    pub converged: bool,
+    pub trace: Trace,
+}
+
+impl SolveResult {
+    pub fn nnz(&self) -> usize {
+        vecops::nnz(&self.x, 1e-10)
+    }
+}
+
+/// A Lasso solver: minimizes Eq. (2) for a fixed lambda.
+pub trait LassoSolver {
+    fn name(&self) -> &'static str;
+    fn solve_lasso(&mut self, prob: &LassoProblem, x0: &[f64], opts: &SolveOptions)
+        -> SolveResult;
+}
+
+/// A sparse-logistic solver: minimizes Eq. (3) for a fixed lambda.
+pub trait LogisticSolver {
+    fn name(&self) -> &'static str;
+    fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult;
+}
+
+/// Convenience facade: solve a design+targets with a given loss.
+pub trait Solver {
+    fn name(&self) -> &'static str;
+    fn solve(&mut self, a: &Design, y: &[f64], lam: f64) -> SolveResult;
+}
+
+impl<T: LassoSolver> Solver for T {
+    fn name(&self) -> &'static str {
+        LassoSolver::name(self)
+    }
+
+    fn solve(&mut self, a: &Design, y: &[f64], lam: f64) -> SolveResult {
+        let prob = LassoProblem::new(a, y, lam);
+        let x0 = vec![0.0; a.d()];
+        self.solve_lasso(&prob, &x0, &SolveOptions::default())
+    }
+}
+
+/// Trace recorder shared by solver loops: handles stopwatch, cadence,
+/// and the objective/nnz bookkeeping.
+pub struct Recorder<'o> {
+    pub opts: &'o SolveOptions,
+    pub watch: Stopwatch,
+    pub trace: Trace,
+    pub updates: u64,
+}
+
+impl<'o> Recorder<'o> {
+    pub fn new(opts: &'o SolveOptions) -> Self {
+        Recorder {
+            opts,
+            watch: Stopwatch::new(),
+            trace: Trace::default(),
+            updates: 0,
+        }
+    }
+
+    /// Record if the cadence hits (or `force`).
+    pub fn record(&mut self, iter: u64, objective: f64, x: &[f64], aux: f64, force: bool) {
+        if force || iter % self.opts.record_every == 0 {
+            self.trace.push(TracePoint {
+                updates: self.updates,
+                iters: iter,
+                seconds: self.watch.seconds(),
+                objective,
+                nnz: vecops::nnz(x, 1e-10),
+                aux,
+            });
+        }
+    }
+
+    /// True when a hard budget (time or iterations) is exhausted.
+    pub fn out_of_budget(&self, iter: u64) -> bool {
+        iter >= self.opts.max_iters
+            || (self.opts.max_seconds > 0.0 && self.watch.seconds() >= self.opts.max_seconds)
+    }
+
+    pub fn finish(
+        self,
+        solver: &'static str,
+        x: Vec<f64>,
+        objective: f64,
+        iters: u64,
+        converged: bool,
+    ) -> SolveResult {
+        SolveResult {
+            solver: solver.to_string(),
+            seconds: self.watch.seconds(),
+            updates: self.updates,
+            x,
+            objective,
+            iters,
+            converged,
+            trace: self.trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_cadence() {
+        let opts = SolveOptions {
+            record_every: 5,
+            ..Default::default()
+        };
+        let mut rec = Recorder::new(&opts);
+        for i in 0..20 {
+            rec.record(i, 1.0, &[0.0], 0.0, false);
+        }
+        assert_eq!(rec.trace.points.len(), 4); // i = 0, 5, 10, 15
+        rec.record(21, 1.0, &[0.0], 0.0, true);
+        assert_eq!(rec.trace.points.len(), 5);
+    }
+
+    #[test]
+    fn budget_checks() {
+        let opts = SolveOptions {
+            max_iters: 10,
+            ..Default::default()
+        };
+        let rec = Recorder::new(&opts);
+        assert!(!rec.out_of_budget(9));
+        assert!(rec.out_of_budget(10));
+    }
+}

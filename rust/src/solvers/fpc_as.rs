@@ -1,0 +1,257 @@
+//! FPC_AS (Wen, Yin, Goldfarb & Zhang 2010): fixed-point continuation
+//! with active-set subspace optimization. Shrinkage iterations estimate
+//! the support and signs of `x`; the objective restricted to that
+//! support with fixed signs is a smooth quadratic, minimized by CG
+//! (§4.1.2: "reduces the objective to a smooth, quadratic function").
+
+use super::common::{LassoSolver, Recorder, SolveOptions, SolveResult};
+use crate::objective::LassoProblem;
+use crate::sparsela::vecops;
+
+pub struct FpcAs {
+    /// Shrinkage steps between subspace phases.
+    pub shrink_iters: usize,
+    /// CG iterations per subspace phase.
+    pub cg_iters: usize,
+    /// Fixed-point step size cap; the solve clamps it to `1.99 / rho`
+    /// (the IST convergence requirement tau < 2 / rho(A^T A)), with rho
+    /// estimated by a short power iteration at solve start.
+    pub tau: f64,
+}
+
+impl Default for FpcAs {
+    fn default() -> Self {
+        FpcAs {
+            shrink_iters: 12,
+            cg_iters: 20,
+            tau: 0.9,
+        }
+    }
+}
+
+impl FpcAs {
+    /// CG on the reduced quadratic: minimize over the support S (signs
+    /// fixed at `sign`) of `1/2||A_S x_S - y||^2 + lam sign^T x_S`.
+    /// Normal equations: `A_S^T A_S x_S = A_S^T y - lam*sign`.
+    fn subspace_cg(
+        &self,
+        prob: &LassoProblem,
+        support: &[usize],
+        sign: &[f64],
+        x: &mut [f64],
+    ) {
+        let a = prob.a;
+        let n = prob.n();
+        let k = support.len();
+        if k == 0 {
+            return;
+        }
+        // rhs = A_S^T y - lam * sign
+        let mut rhs = vec![0.0; k];
+        for (t, &j) in support.iter().enumerate() {
+            rhs[t] = a.col_dot(j, prob.y) - prob.lam * sign[t];
+        }
+        // operator: v -> A_S^T (A_S v)
+        let apply = |v: &[f64], out: &mut [f64], scratch: &mut [f64]| {
+            scratch.fill(0.0);
+            for (t, &j) in support.iter().enumerate() {
+                if v[t] != 0.0 {
+                    a.col_axpy(j, v[t], scratch);
+                }
+            }
+            for (t, &j) in support.iter().enumerate() {
+                out[t] = a.col_dot(j, scratch);
+            }
+        };
+        // CG from the current x_S
+        let mut xs: Vec<f64> = support.iter().map(|&j| x[j]).collect();
+        let mut scratch = vec![0.0; n];
+        let mut ax_s = vec![0.0; k];
+        apply(&xs, &mut ax_s, &mut scratch);
+        let mut r: Vec<f64> = rhs.iter().zip(&ax_s).map(|(b, av)| b - av).collect();
+        let mut p = r.clone();
+        let mut rr = vecops::norm2_sq(&r);
+        let mut ap = vec![0.0; k];
+        for _ in 0..self.cg_iters {
+            if rr < 1e-24 {
+                break;
+            }
+            apply(&p, &mut ap, &mut scratch);
+            let pap = vecops::dot(&p, &ap);
+            if pap <= 0.0 {
+                break;
+            }
+            let alpha = rr / pap;
+            for t in 0..k {
+                xs[t] += alpha * p[t];
+                r[t] -= alpha * ap[t];
+            }
+            let rr_new = vecops::norm2_sq(&r);
+            let beta = rr_new / rr;
+            rr = rr_new;
+            for t in 0..k {
+                p[t] = r[t] + beta * p[t];
+            }
+        }
+        // write back, projecting onto the sign orthant (sign consistency)
+        for (t, &j) in support.iter().enumerate() {
+            x[j] = if xs[t] * sign[t] > 0.0 { xs[t] } else { 0.0 };
+        }
+    }
+}
+
+impl LassoSolver for FpcAs {
+    fn name(&self) -> &'static str {
+        "fpc-as"
+    }
+
+    fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let d = prob.d();
+        let mut x = x0.to_vec();
+        let mut r = prob.residual(&x);
+        let mut g = vec![0.0; d];
+        let mut rec = Recorder::new(opts);
+        let mut f = prob.objective_from_residual(&r, &x);
+        rec.record(0, f, &x, 0.0, true);
+
+        // IST stability: tau must stay below 2 / rho(A^T A)
+        let rho = crate::sparsela::power::spectral_radius(prob.a, 60, 1e-3, opts.seed)
+            .rho
+            .max(1.0);
+        let mut tau = self.tau.min(1.99 / rho);
+        let mut converged = false;
+        let mut iter = 0u64;
+        while !rec.out_of_budget(iter) {
+            iter += 1;
+            // --- shrinkage phase (fixed-point continuation) ---
+            let mut max_step: f64 = 0.0;
+            for _ in 0..self.shrink_iters {
+                prob.a.matvec_t(&r, &mut g);
+                max_step = 0.0;
+                for j in 0..d {
+                    let xn = vecops::soft_threshold(x[j] - tau * g[j], tau * prob.lam);
+                    max_step = max_step.max((xn - x[j]).abs());
+                    x[j] = xn;
+                }
+                r = prob.residual(&x);
+                rec.updates += 1;
+            }
+            // --- active-set subspace phase ---
+            let support: Vec<usize> = (0..d).filter(|&j| x[j] != 0.0).collect();
+            let sign: Vec<f64> = support.iter().map(|&j| x[j].signum()).collect();
+            self.subspace_cg(prob, &support, &sign, &mut x);
+            r = prob.residual(&x);
+            rec.updates += 1;
+            let f_new = prob.objective_from_residual(&r, &x);
+            if f_new > f + 1e-12 {
+                // subspace overshoot (support/sign change): back off tau
+                tau *= 0.7;
+            }
+            f = f_new.min(f);
+            if iter % opts.record_every.max(1) == 0 {
+                rec.record(iter, f_new, &x, 0.0, true);
+            }
+            if max_step < opts.tol {
+                converged = true;
+                break;
+            }
+        }
+        let f = prob.objective(&x);
+        rec.record(iter, f, &x, 0.0, true);
+        rec.finish("fpc-as", x, f, iter, converged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::solvers::shooting::Shooting;
+
+    fn opts() -> SolveOptions {
+        SolveOptions {
+            max_iters: 3_000,
+            tol: 1e-10,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matches_shooting_optimum() {
+        let ds = synth::sparco_like(60, 30, 0.4, 1);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.2);
+        let fp = FpcAs::default().solve_lasso(&prob, &vec![0.0; 30], &opts());
+        let mut sh_opts = opts();
+        sh_opts.max_iters = 500_000;
+        let sh = Shooting.solve_lasso(&prob, &vec![0.0; 30], &sh_opts);
+        assert!(
+            (fp.objective - sh.objective).abs() / sh.objective < 1e-3,
+            "fpc {} vs shooting {}",
+            fp.objective,
+            sh.objective
+        );
+    }
+
+    #[test]
+    fn subspace_phase_solves_restricted_problem() {
+        // On the *converged* support (signs consistent), the subspace CG
+        // must reproduce the optimum: starting from a perturbed point on
+        // the right support, one subspace phase restores the objective.
+        let ds = synth::sparse_imaging(40, 80, 0.1, 2);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let opt = Shooting.solve_lasso(
+            &prob,
+            &vec![0.0; 80],
+            &SolveOptions {
+                max_iters: 600_000,
+                tol: 1e-11,
+                ..opts()
+            },
+        );
+        let support: Vec<usize> = (0..80).filter(|&j| opt.x[j] != 0.0).collect();
+        let sign: Vec<f64> = support.iter().map(|&j| opt.x[j].signum()).collect();
+        let mut x = opt.x.clone();
+        for &j in &support {
+            x[j] *= 0.8; // perturb along the support
+        }
+        assert!(prob.objective(&x) > opt.objective);
+        let solver = FpcAs {
+            cg_iters: 200,
+            ..Default::default()
+        };
+        solver.subspace_cg(&prob, &support, &sign, &mut x);
+        assert!(
+            prob.objective(&x) <= opt.objective * (1.0 + 1e-6),
+            "subspace {} vs opt {}",
+            prob.objective(&x),
+            opt.objective
+        );
+    }
+
+    #[test]
+    fn kkt_at_solution() {
+        let ds = synth::singlepix_pm1(40, 32, 3);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.4);
+        let res = FpcAs::default().solve_lasso(&prob, &vec![0.0; 32], &opts());
+        let r = prob.residual(&res.x);
+        assert!(
+            prob.kkt_violation(&res.x, &r) < 1e-4,
+            "kkt {}",
+            prob.kkt_violation(&res.x, &r)
+        );
+    }
+
+    #[test]
+    fn empty_support_survives() {
+        let ds = synth::sparco_like(30, 15, 0.3, 4);
+        let lam_max = LassoProblem::new(&ds.design, &ds.targets, 0.0).lambda_max();
+        let prob = LassoProblem::new(&ds.design, &ds.targets, lam_max * 1.5);
+        let res = FpcAs::default().solve_lasso(&prob, &vec![0.0; 15], &opts());
+        assert_eq!(res.nnz(), 0);
+    }
+}

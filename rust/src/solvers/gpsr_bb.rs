@@ -1,0 +1,183 @@
+//! GPSR-BB (Figueiredo, Nowak & Wright 2008): gradient projection for
+//! sparse reconstruction on the bound-constrained QP reformulation
+//! `x = u - v, u, v >= 0`, with Barzilai–Borwein step lengths.
+
+use super::common::{LassoSolver, Recorder, SolveOptions, SolveResult};
+use crate::objective::LassoProblem;
+use crate::sparsela::vecops;
+
+pub struct GpsrBb {
+    /// BB step clamp (the published code uses [1e-30, 1e30]).
+    pub alpha_min: f64,
+    pub alpha_max: f64,
+}
+
+impl Default for GpsrBb {
+    fn default() -> Self {
+        GpsrBb {
+            alpha_min: 1e-30,
+            alpha_max: 1e30,
+        }
+    }
+}
+
+impl LassoSolver for GpsrBb {
+    fn name(&self) -> &'static str {
+        "gpsr-bb"
+    }
+
+    fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let d = prob.d();
+        let n = prob.n();
+        let a = prob.a;
+        // split start
+        let mut u: Vec<f64> = x0.iter().map(|&v| v.max(0.0)).collect();
+        let mut v: Vec<f64> = x0.iter().map(|&v| (-v).max(0.0)).collect();
+        // c = lam*1 + [-A^T y; A^T y]
+        let mut aty = vec![0.0; d];
+        a.matvec_t(prob.y, &mut aty);
+
+        let mut x = vec![0.0; d];
+        let mut ax = vec![0.0; n];
+        let mut grad_u = vec![0.0; d];
+        let mut grad_v = vec![0.0; d];
+        let mut atax = vec![0.0; d];
+
+        // gradient of q(u,v) = 1/2||A(u-v) - y||^2 + lam 1^T (u+v):
+        //   grad_u = A^T(A(u-v) - y) + lam;  grad_v = -A^T(A(u-v) - y) + lam
+        let compute_grads = |u: &[f64],
+                             v: &[f64],
+                             x: &mut [f64],
+                             ax: &mut [f64],
+                             atax: &mut [f64],
+                             gu: &mut [f64],
+                             gv: &mut [f64]| {
+            for j in 0..d {
+                x[j] = u[j] - v[j];
+            }
+            a.matvec(x, ax);
+            for (axi, yi) in ax.iter_mut().zip(prob.y) {
+                *axi -= yi;
+            } // ax := r
+            a.matvec_t(ax, atax);
+            for j in 0..d {
+                gu[j] = atax[j] + prob.lam;
+                gv[j] = -atax[j] + prob.lam;
+            }
+        };
+
+        compute_grads(&u, &v, &mut x, &mut ax, &mut atax, &mut grad_u, &mut grad_v);
+        let mut rec = Recorder::new(opts);
+        let f0 = 0.5 * vecops::norm2_sq(&ax) + prob.lam * (vecops::norm1(&u) + vecops::norm1(&v));
+        rec.record(0, f0, &x, 0.0, true);
+
+        let mut alpha = 1.0;
+        let mut converged = false;
+        let mut iter = 0u64;
+        let mut du = vec![0.0; d];
+        let mut dv = vec![0.0; d];
+        let mut adx = vec![0.0; n];
+        while !rec.out_of_budget(iter) {
+            iter += 1;
+            // projected step: w = P_+(z - alpha * grad); direction s = w - z
+            let mut step_inf: f64 = 0.0;
+            for j in 0..d {
+                let wu = (u[j] - alpha * grad_u[j]).max(0.0);
+                let wv = (v[j] - alpha * grad_v[j]).max(0.0);
+                du[j] = wu - u[j];
+                dv[j] = wv - v[j];
+                step_inf = step_inf.max(du[j].abs()).max(dv[j].abs());
+            }
+            if step_inf < opts.tol {
+                converged = true;
+                break;
+            }
+            // BB denominator: s^T B s = ||A(du - dv)||^2 (B is the split Hessian)
+            let mut dx = vec![0.0; d];
+            for j in 0..d {
+                dx[j] = du[j] - dv[j];
+            }
+            a.matvec(&dx, &mut adx);
+            let sbs = vecops::norm2_sq(&adx);
+            let ss = vecops::norm2_sq(&du) + vecops::norm2_sq(&dv);
+            // GPSR-BB takes the full projected step, then updates alpha
+            for j in 0..d {
+                u[j] += du[j];
+                v[j] += dv[j];
+            }
+            rec.updates += 1;
+            alpha = if sbs > 0.0 {
+                (ss / sbs).clamp(self.alpha_min, self.alpha_max)
+            } else {
+                self.alpha_max
+            };
+            compute_grads(&u, &v, &mut x, &mut ax, &mut atax, &mut grad_u, &mut grad_v);
+            if iter % opts.record_every == 0 {
+                let f = 0.5 * vecops::norm2_sq(&ax) + prob.lam * vecops::norm1(&x);
+                rec.record(iter, f, &x, 0.0, true);
+            }
+        }
+        for j in 0..d {
+            x[j] = u[j] - v[j];
+        }
+        let f = prob.objective(&x);
+        rec.record(iter, f, &x, 0.0, true);
+        rec.finish("gpsr-bb", x, f, iter, converged)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::solvers::shooting::Shooting;
+
+    fn opts() -> SolveOptions {
+        SolveOptions {
+            max_iters: 20_000,
+            tol: 1e-9,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn matches_shooting_optimum() {
+        let ds = synth::sparco_like(60, 30, 0.4, 1);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.2);
+        let gp = GpsrBb::default().solve_lasso(&prob, &vec![0.0; 30], &opts());
+        let mut sh_opts = opts();
+        sh_opts.max_iters = 500_000;
+        let sh = Shooting.solve_lasso(&prob, &vec![0.0; 30], &sh_opts);
+        assert!(gp.converged, "gpsr did not converge");
+        assert!(
+            (gp.objective - sh.objective).abs() / sh.objective < 1e-4,
+            "gpsr {} vs shooting {}",
+            gp.objective,
+            sh.objective
+        );
+    }
+
+    #[test]
+    fn kkt_at_solution() {
+        let ds = synth::singlepix_pm1(40, 32, 2);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.5);
+        let res = GpsrBb::default().solve_lasso(&prob, &vec![0.0; 32], &opts());
+        let r = prob.residual(&res.x);
+        assert!(prob.kkt_violation(&res.x, &r) < 1e-5);
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let ds = synth::sparse_imaging(50, 100, 0.1, 3);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let cold = GpsrBb::default().solve_lasso(&prob, &vec![0.0; 100], &opts());
+        let warm = GpsrBb::default().solve_lasso(&prob, &cold.x, &opts());
+        assert!(warm.iters <= cold.iters);
+        assert!(warm.iters <= 3, "warm start from optimum should be instant");
+    }
+}

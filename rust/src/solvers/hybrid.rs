@@ -1,0 +1,206 @@
+//! SGD × Shotgun hybrid — the paper's proposed future work (§5: "the
+//! most exciting extension to this work might be the hybrid of SGD and
+//! Shotgun discussed in Sec. 4.3 ... scalable in both n and d and,
+//! perhaps, parallelized over both samples and features").
+//!
+//! Strategy implemented here (logistic regression): a short sample-
+//! parallel **SGD warm-start phase** rapidly closes the bulk of the gap
+//! when n is large (SGD's strength, Fig. 4 zeta), then a feature-
+//! parallel **Shotgun CDN refinement phase** drives the tail at CD's
+//! rate (CD's strength, Fig. 4 rcv1). The switch triggers when the SGD
+//! epoch-over-epoch improvement stalls relative to its first epoch.
+
+use super::common::{LogisticSolver, SolveOptions, SolveResult};
+use super::sgd::{Rate, Sgd};
+use crate::coordinator::ShotgunCdn;
+use crate::metrics::Trace;
+use crate::objective::LogisticProblem;
+
+pub struct HybridSgdShotgun {
+    /// SGD phase learning rate (constant; sweep externally if needed).
+    pub eta: f64,
+    /// Feature-parallelism of the refinement phase.
+    pub p: usize,
+    /// Stall threshold: switch when an epoch improves F by less than
+    /// `stall_frac` x the first epoch's improvement.
+    pub stall_frac: f64,
+    /// Hard cap on SGD epochs before switching regardless.
+    pub max_sgd_epochs: u64,
+}
+
+impl Default for HybridSgdShotgun {
+    fn default() -> Self {
+        HybridSgdShotgun {
+            eta: 0.1,
+            p: 8,
+            stall_frac: 0.1,
+            max_sgd_epochs: 20,
+        }
+    }
+}
+
+impl LogisticSolver for HybridSgdShotgun {
+    fn name(&self) -> &'static str {
+        "hybrid-sgd-shotgun"
+    }
+
+    fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let watch = crate::metrics::Stopwatch::new();
+        // --- phase 1: SGD epochs until stall ---
+        let mut x = x0.to_vec();
+        let mut f_prev = prob.objective(&x);
+        let mut first_gain: Option<f64> = None;
+        let mut trace = Trace::default();
+        let mut updates = 0u64;
+        let mut epochs = 0u64;
+        let mut sgd = Sgd::new(Rate::Constant(self.eta));
+        loop {
+            if epochs >= self.max_sgd_epochs {
+                break;
+            }
+            let epoch_opts = SolveOptions {
+                max_iters: 1,
+                record_every: u64::MAX,
+                seed: opts.seed + epochs,
+                ..opts.clone()
+            };
+            let res = sgd.solve_logistic(prob, &x, &epoch_opts);
+            x = res.x;
+            updates += res.updates;
+            epochs += 1;
+            let f = res.objective;
+            let gain = f_prev - f;
+            trace.push(crate::metrics::TracePoint {
+                updates,
+                iters: epochs,
+                seconds: watch.seconds(),
+                objective: f,
+                nnz: crate::sparsela::vecops::nnz(&x, 1e-10),
+                aux: 0.0,
+            });
+            if let Some(fg) = first_gain {
+                if gain < self.stall_frac * fg {
+                    f_prev = f;
+                    break; // SGD has stalled: hand off to Shotgun
+                }
+            } else if gain > 0.0 {
+                first_gain = Some(gain);
+            } else {
+                break; // SGD not helping at all (e.g. d >> n regime)
+            }
+            f_prev = f;
+            if opts.max_seconds > 0.0 && watch.seconds() > opts.max_seconds * 0.5 {
+                break;
+            }
+        }
+        let _ = f_prev;
+        // --- phase 2: Shotgun CDN refinement from the SGD iterate ---
+        let mut cdn = ShotgunCdn::with_p(self.p);
+        let refine_opts = SolveOptions {
+            max_seconds: if opts.max_seconds > 0.0 {
+                (opts.max_seconds - watch.seconds()).max(0.1)
+            } else {
+                0.0
+            },
+            ..opts.clone()
+        };
+        let res = cdn.solve_logistic(prob, &x, &refine_opts);
+        // merge traces with cumulative clocks
+        let t_base = watch.seconds() - res.seconds;
+        for p in &res.trace.points {
+            let mut p2 = *p;
+            p2.seconds += t_base.max(0.0);
+            p2.updates += updates;
+            trace.push(p2);
+        }
+        SolveResult {
+            solver: format!("hybrid-sgd{}+shotgun-cdn-p{}", epochs, self.p),
+            x: res.x,
+            objective: res.objective,
+            iters: epochs + res.iters,
+            updates: updates + res.updates,
+            seconds: watch.seconds(),
+            converged: res.converged,
+            trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::solvers::cdn::ShootingCdn;
+
+    fn opts() -> SolveOptions {
+        SolveOptions {
+            max_iters: 100_000,
+            tol: 1e-7,
+            record_every: 256,
+            seed: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn reaches_cdn_optimum_on_zeta_like() {
+        // n >> d: SGD phase should engage, final optimum must match CDN
+        let ds = synth::zeta_like(600, 24, 1);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.01);
+        let hybrid = HybridSgdShotgun {
+            eta: 1.0,
+            ..Default::default()
+        }
+        .solve_logistic(&prob, &vec![0.0; 24], &opts());
+        let cdn = ShootingCdn::default().solve_logistic(
+            &prob,
+            &vec![0.0; 24],
+            &SolveOptions {
+                max_iters: 3_000,
+                ..opts()
+            },
+        );
+        assert!(
+            (hybrid.objective - cdn.objective).abs() / cdn.objective < 1e-2,
+            "hybrid {} vs cdn {}",
+            hybrid.objective,
+            cdn.objective
+        );
+        assert!(hybrid.solver.contains("sgd"), "{}", hybrid.solver);
+    }
+
+    #[test]
+    fn skips_sgd_when_unhelpful() {
+        // d > n sparse regime: SGD stalls immediately, refinement runs
+        let ds = synth::rcv1_like(50, 80, 0.2, 2);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.1);
+        let res = HybridSgdShotgun::default().solve_logistic(&prob, &vec![0.0; 80], &opts());
+        assert!(res.objective < prob.objective(&vec![0.0; 80]));
+    }
+
+    #[test]
+    fn sgd_phase_accelerates_early_progress() {
+        // the §4.3 motivation: on n >> d, hybrid's early objective beats
+        // pure CDN's at matched *update* counts (samples are cheap)
+        let ds = synth::zeta_like(800, 16, 4);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.005);
+        let hybrid = HybridSgdShotgun {
+            eta: 1.0,
+            max_sgd_epochs: 3,
+            ..Default::default()
+        }
+        .solve_logistic(&prob, &vec![0.0; 16], &opts());
+        // first hybrid trace point = after one SGD epoch (n updates)
+        let after_epoch = hybrid.trace.points.first().unwrap().objective;
+        let f0 = prob.objective(&vec![0.0; 16]);
+        assert!(
+            after_epoch < 0.97 * f0,
+            "one SGD epoch should cut F: {after_epoch} vs {f0}"
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! Solver zoo: the sequential baseline (Shooting), the paper's five
+//! published Lasso comparators, the SGD-family logistic baselines, and
+//! the shared solve/trace plumbing.
+//!
+//! The parallel contribution (Shotgun / Shotgun CDN) lives in
+//! [`crate::coordinator`]; everything here is a baseline the paper
+//! compares against in Figs. 3–4, reimplemented in rust on the same
+//! substrates so comparisons are apples-to-apples (removing the
+//! Matlab-vs-C++ confound the paper flags in §4.1.3).
+
+pub mod common;
+pub mod shooting;
+pub mod cdn;
+pub mod sgd;
+pub mod smidas;
+pub mod parallel_sgd;
+pub mod l1_ls;
+pub mod fpc_as;
+pub mod glmnet;
+pub mod gpsr_bb;
+pub mod sparsa;
+pub mod hard_l0;
+pub mod hybrid;
+pub mod path;
+
+pub use common::{LassoSolver, LogisticSolver, Solver, SolveOptions, SolveResult};

@@ -1,0 +1,155 @@
+//! Parallel SGD (Zinkevich et al. 2010): run P independent SGD instances
+//! over partitions of the data, then average the solutions.
+//!
+//! Included because it is "one of the few existing methods for parallel
+//! regression" (§4.2.2) — with the paper's caveat that the analysis does
+//! not address L1. Empirically (Fig. 4) it tracks sequential SGD almost
+//! exactly, which our reproduction confirms.
+
+use super::common::{LogisticSolver, SolveOptions, SolveResult};
+use super::sgd::{Rate, Sgd};
+use crate::metrics::{Trace, TracePoint};
+use crate::objective::LogisticProblem;
+
+pub struct ParallelSgd {
+    pub p: usize,
+    pub rate: Rate,
+}
+
+impl ParallelSgd {
+    pub fn new(p: usize, rate: Rate) -> Self {
+        assert!(p >= 1);
+        ParallelSgd { p, rate }
+    }
+}
+
+impl LogisticSolver for ParallelSgd {
+    fn name(&self) -> &'static str {
+        "parallel-sgd"
+    }
+
+    fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let d = prob.d();
+        let watch = crate::metrics::Stopwatch::new();
+        // P instances with decorrelated seeds over the full data (the
+        // shard-partitioned variant is equivalent in expectation for
+        // uniformly drawn samples; seeds decorrelate the sample paths)
+        let mut runs: Vec<SolveResult> = Vec::with_capacity(self.p);
+        let mut updates = 0;
+        for k in 0..self.p {
+            let mut inner_opts = opts.clone();
+            inner_opts.seed = opts.seed.wrapping_add(k as u64).wrapping_mul(0x9E3779B9);
+            let res = Sgd::new(self.rate).solve_logistic(prob, x0, &inner_opts);
+            updates += res.updates;
+            runs.push(res);
+        }
+        // average the iterates
+        let mut x = vec![0.0; d];
+        for run in &runs {
+            for (xi, ri) in x.iter_mut().zip(&run.x) {
+                *xi += ri / self.p as f64;
+            }
+        }
+        // merged trace: average objective across instances per point
+        // (wall-clock is simulated-parallel: max over instances per index)
+        let mut trace = Trace::default();
+        let len = runs.iter().map(|r| r.trace.points.len()).min().unwrap_or(0);
+        for i in 0..len {
+            let pts: Vec<&TracePoint> = runs.iter().map(|r| &r.trace.points[i]).collect();
+            trace.push(TracePoint {
+                updates: pts.iter().map(|p| p.updates).sum(),
+                iters: pts[0].iters,
+                seconds: pts.iter().map(|p| p.seconds).fold(0.0, f64::max),
+                objective: pts.iter().map(|p| p.objective).sum::<f64>() / pts.len() as f64,
+                nnz: pts.iter().map(|p| p.nnz).max().unwrap_or(0),
+                aux: pts.iter().map(|p| p.aux).sum::<f64>() / pts.len() as f64,
+            });
+        }
+        let f = prob.objective(&x);
+        let iters = runs.iter().map(|r| r.iters).max().unwrap_or(0);
+        // final point: the averaged solution
+        trace.push(TracePoint {
+            updates,
+            iters,
+            seconds: watch.seconds(),
+            objective: f,
+            nnz: crate::sparsela::vecops::nnz(&x, 1e-10),
+            aux: 0.0,
+        });
+        SolveResult {
+            solver: "parallel-sgd".into(),
+            x,
+            objective: f,
+            iters,
+            updates,
+            seconds: watch.seconds(),
+            converged: false,
+            trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn opts(epochs: u64) -> SolveOptions {
+        SolveOptions {
+            max_iters: epochs,
+            record_every: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn averaging_descends() {
+        let ds = synth::zeta_like(300, 12, 1);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.01);
+        let res = ParallelSgd::new(4, Rate::Constant(0.1))
+            .solve_logistic(&prob, &vec![0.0; 12], &opts(5));
+        assert!(res.objective < prob.objective(&vec![0.0; 12]));
+    }
+
+    #[test]
+    fn tracks_sequential_sgd() {
+        // Fig. 4's observation: Parallel SGD ~ SGD on the objective
+        let ds = synth::rcv1_like(80, 60, 0.15, 2);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.01);
+        let seq = Sgd::new(Rate::Constant(0.1)).solve_logistic(&prob, &vec![0.0; 60], &opts(8));
+        let par = ParallelSgd::new(8, Rate::Constant(0.1))
+            .solve_logistic(&prob, &vec![0.0; 60], &opts(8));
+        let rel = (par.objective - seq.objective).abs() / seq.objective.abs();
+        assert!(rel < 0.15, "parallel {} vs seq {}", par.objective, seq.objective);
+    }
+
+    #[test]
+    fn p1_equals_sgd() {
+        let ds = synth::rcv1_like(40, 30, 0.2, 3);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.02);
+        let a = ParallelSgd::new(1, Rate::Constant(0.05))
+            .solve_logistic(&prob, &vec![0.0; 30], &opts(3));
+        let mut o = opts(3);
+        o.seed = o.seed.wrapping_mul(0x9E3779B9);
+        let b = Sgd::new(Rate::Constant(0.05)).solve_logistic(&prob, &vec![0.0; 30], &o);
+        for (xa, xb) in a.x.iter().zip(&b.x) {
+            assert!((xa - xb).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn update_count_scales_with_p() {
+        let ds = synth::rcv1_like(30, 20, 0.3, 4);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.02);
+        let a = ParallelSgd::new(2, Rate::Constant(0.05))
+            .solve_logistic(&prob, &vec![0.0; 20], &opts(2));
+        let b = ParallelSgd::new(4, Rate::Constant(0.05))
+            .solve_logistic(&prob, &vec![0.0; 20], &opts(2));
+        assert_eq!(b.updates, 2 * a.updates);
+    }
+}

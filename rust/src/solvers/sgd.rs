@@ -1,0 +1,278 @@
+//! SGD for L1-regularized logistic regression (§4.2.2): one-sample
+//! gradient steps with *lazy* L1 shrinkage (Langford et al. 2009a's
+//! truncated-gradient bookkeeping) so sparse rows cost O(nnz(a_i)).
+//!
+//! The paper tunes a constant rate by sweeping 14 exponentially spaced
+//! values in [1e-4, 1] and keeping the best training objective; `sweep`
+//! reproduces that protocol.
+
+use super::common::{LogisticSolver, Recorder, SolveOptions, SolveResult};
+use crate::objective::{sigma_neg, LogisticProblem};
+use crate::sparsela::CsrMatrix;
+use crate::util::rng::Rng;
+
+/// Learning-rate schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Rate {
+    /// eta_t = eta0 (the paper found constants beat decay).
+    Constant(f64),
+    /// eta_t = eta0 / sqrt(t+1).
+    InvSqrt(f64),
+}
+
+/// One-sample stochastic gradient with lazy shrinkage.
+pub struct Sgd {
+    pub rate: Rate,
+}
+
+impl Sgd {
+    pub fn new(rate: Rate) -> Self {
+        Sgd { rate }
+    }
+
+    /// The paper's rate-tuning protocol: try `count` exponential rates in
+    /// `[lo, hi]` (each a full short run) and return the best solver +
+    /// its final objective.
+    pub fn sweep(
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+        lo: f64,
+        hi: f64,
+        count: usize,
+    ) -> (f64, SolveResult) {
+        assert!(count >= 2);
+        let mut best: Option<(f64, SolveResult)> = None;
+        for k in 0..count {
+            let t = k as f64 / (count - 1) as f64;
+            let eta = lo * (hi / lo).powf(t);
+            let res = Sgd::new(Rate::Constant(eta)).solve_logistic(prob, x0, opts);
+            if best
+                .as_ref()
+                .map(|(_, b)| res.objective < b.objective)
+                .unwrap_or(true)
+            {
+                best = Some((eta, res));
+            }
+        }
+        best.unwrap()
+    }
+}
+
+impl LogisticSolver for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let n = prob.n();
+        let d = prob.d();
+        let csr = prob.a.to_csr();
+        let mut rng = Rng::new(opts.seed);
+        let mut x = x0.to_vec();
+        let mut rec = Recorder::new(opts);
+        rec.record(0, prob.objective(&x), &x, 0.0, true);
+
+        // lazy shrinkage: cumulative L1 penalty per unit step, applied to
+        // coordinate j only when j is next touched
+        let mut cum_pen = 0.0f64; // sum of eta_t * lam so far
+        let mut pen_at: Vec<f64> = vec![0.0; d]; // cum_pen when j last touched
+        let mut iter = 0u64; // epochs
+        let mut t = 0u64; // sample steps
+        let mut converged = false;
+        'outer: while !rec.out_of_budget(iter) {
+            iter += 1;
+            for _ in 0..n {
+                let i = rng.below(n);
+                let eta = match self.rate {
+                    Rate::Constant(e) => e,
+                    Rate::InvSqrt(e) => e / ((t + 1) as f64).sqrt(),
+                };
+                let (idx, val) = csr.row(i);
+                // lazily apply the accumulated shrinkage to touched coords
+                for &j in idx {
+                    let j = j as usize;
+                    let owed = cum_pen - pen_at[j];
+                    if owed > 0.0 {
+                        x[j] = crate::sparsela::vecops::soft_threshold(x[j], owed);
+                        pen_at[j] = cum_pen;
+                    }
+                }
+                // margin + gradient step on the row support
+                let mut zi = 0.0;
+                for (&j, &v) in idx.iter().zip(val) {
+                    zi += v * x[j as usize];
+                }
+                let gscale = -prob.y[i] * sigma_neg(prob.y[i] * zi);
+                for (&j, &v) in idx.iter().zip(val) {
+                    x[j as usize] -= eta * gscale * v;
+                }
+                cum_pen += eta * prob.lam;
+                t += 1;
+                rec.updates += 1;
+            }
+            // end of epoch: settle all pending shrinkage before evaluating
+            settle(&mut x, &mut pen_at, cum_pen);
+            if iter % opts.record_every.max(1) == 0 || rec.out_of_budget(iter) {
+                let f = prob.objective(&x);
+                let aux = if opts.aux_every_record {
+                    prob.error_rate(&x)
+                } else {
+                    0.0
+                };
+                rec.record(iter, f, &x, aux, true);
+                if rec.out_of_budget(iter) {
+                    break 'outer;
+                }
+            }
+            let _ = converged;
+        }
+        settle(&mut x, &mut pen_at, cum_pen);
+        let f = prob.objective(&x);
+        rec.record(iter, f, &x, 0.0, true);
+        converged = false; // SGD has no natural finite convergence signal
+        rec.finish("sgd", x, f, iter, converged)
+    }
+}
+
+fn settle(x: &mut [f64], pen_at: &mut [f64], cum_pen: f64) {
+    for (xj, pj) in x.iter_mut().zip(pen_at.iter_mut()) {
+        let owed = cum_pen - *pj;
+        if owed > 0.0 {
+            *xj = crate::sparsela::vecops::soft_threshold(*xj, owed);
+            *pj = cum_pen;
+        }
+    }
+}
+
+/// Eager-shrinkage reference implementation (O(d) per step) used by the
+/// tests to validate the lazy bookkeeping.
+pub fn sgd_eager_reference(
+    prob: &LogisticProblem,
+    csr: &CsrMatrix,
+    x0: &[f64],
+    eta: f64,
+    steps: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut x = x0.to_vec();
+    for _ in 0..steps {
+        let i = rng.below(prob.n());
+        // eager: shrink every coordinate first (same order as lazy applies)
+        for xj in x.iter_mut() {
+            *xj = crate::sparsela::vecops::soft_threshold(*xj, eta * prob.lam);
+        }
+        let zi = csr.row_dot(i, &x);
+        let gscale = -prob.y[i] * sigma_neg(prob.y[i] * zi);
+        csr.row_axpy(i, -eta * gscale, &mut x);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn opts(epochs: u64) -> SolveOptions {
+        SolveOptions {
+            max_iters: epochs,
+            record_every: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn descends_on_zeta_like() {
+        // column-normalized data with n >> d makes rows tiny
+        // (||a_i|| ~ sqrt(d/n)), so SGD needs a large constant rate —
+        // exactly why the paper sweeps rates up to 1.0 and beyond
+        let ds = synth::zeta_like(400, 16, 1);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.001);
+        let res =
+            Sgd::new(Rate::Constant(1.0)).solve_logistic(&prob, &vec![0.0; 16], &opts(40));
+        let f0 = prob.objective(&vec![0.0; 16]);
+        // F* ~ 0.884 F0 on this instance; SGD must close most of the gap
+        assert!(res.objective < 0.92 * f0, "F {} !<< F0 {}", res.objective, f0);
+    }
+
+    #[test]
+    fn lazy_matches_eager_order_of_shrinkage() {
+        // Same seed/sample path: lazy bookkeeping must land within float
+        // slop of the eager reference. (Shrink-then-step ordering differs
+        // only in when the *current* step's penalty lands; compare after a
+        // settle at matched penalty horizon.)
+        let ds = synth::rcv1_like(30, 20, 0.4, 2);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
+        let csr = ds.design.to_csr();
+        let eta = 0.05;
+        // run lazy manually for `steps` draws with the same RNG stream
+        let steps = 200;
+        let mut rng = Rng::new(77);
+        let mut x = vec![0.0; 20];
+        let mut cum_pen = 0.0;
+        let mut pen_at = vec![0.0; 20];
+        for _ in 0..steps {
+            let i = rng.below(prob.n());
+            // eager reference shrinks BEFORE the step, so owe includes
+            // the current step's penalty: pre-add then settle touched
+            cum_pen += eta * prob.lam;
+            let (idx, val) = csr.row(i);
+            for &j in idx {
+                let j = j as usize;
+                let owed = cum_pen - pen_at[j];
+                if owed > 0.0 {
+                    x[j] = crate::sparsela::vecops::soft_threshold(x[j], owed);
+                    pen_at[j] = cum_pen;
+                }
+            }
+            let mut zi = 0.0;
+            for (&j, &v) in idx.iter().zip(val) {
+                zi += v * x[j as usize];
+            }
+            let gscale = -prob.y[i] * sigma_neg(prob.y[i] * zi);
+            for (&j, &v) in idx.iter().zip(val) {
+                x[j as usize] -= eta * gscale * v;
+            }
+        }
+        super::settle(&mut x, &mut pen_at, cum_pen);
+        let x_eager = sgd_eager_reference(&prob, &csr, &vec![0.0; 20], eta, steps, 77);
+        for (a, b) in x.iter().zip(&x_eager) {
+            assert!((a - b).abs() < 1e-6, "lazy {a} vs eager {b}");
+        }
+    }
+
+    #[test]
+    fn sweep_picks_reasonable_rate() {
+        let ds = synth::zeta_like(200, 10, 3);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.01);
+        let (eta, res) = Sgd::sweep(&prob, &vec![0.0; 10], &opts(5), 1e-4, 1.0, 6);
+        assert!((1e-4..=1.0).contains(&eta));
+        // the chosen rate is at least as good as the extremes
+        let lo = Sgd::new(Rate::Constant(1e-4)).solve_logistic(&prob, &vec![0.0; 10], &opts(5));
+        assert!(res.objective <= lo.objective + 1e-9);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = synth::rcv1_like(40, 30, 0.3, 4);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.02);
+        let a = Sgd::new(Rate::Constant(0.1)).solve_logistic(&prob, &vec![0.0; 30], &opts(3));
+        let b = Sgd::new(Rate::Constant(0.1)).solve_logistic(&prob, &vec![0.0; 30], &opts(3));
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn invsqrt_rate_also_descends() {
+        let ds = synth::zeta_like(300, 12, 5);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.01);
+        let res = Sgd::new(Rate::InvSqrt(0.5)).solve_logistic(&prob, &vec![0.0; 12], &opts(8));
+        assert!(res.objective < prob.objective(&vec![0.0; 12]));
+    }
+}

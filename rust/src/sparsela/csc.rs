@@ -1,0 +1,304 @@
+//! Compressed sparse column matrix — the primary store for the paper's
+//! sparse categories (sparse compressed imaging, large text datasets).
+//! Coordinate descent touches one column per update; CSC makes that a
+//! contiguous (indices, values) walk.
+
+use super::vecops;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    pub n: usize,
+    pub d: usize,
+    /// `indptr[j]..indptr[j+1]` spans column `j` in `indices`/`values`.
+    pub indptr: Vec<usize>,
+    /// Row index of each stored entry (sorted within a column).
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from (row, col, value) triplets; duplicates are summed.
+    pub fn from_triplets(n: usize, d: usize, triplets: &[(usize, usize, f64)]) -> Self {
+        let mut per_col: Vec<Vec<(usize, f64)>> = vec![Vec::new(); d];
+        for &(i, j, v) in triplets {
+            assert!(i < n && j < d, "triplet ({i},{j}) out of bounds ({n},{d})");
+            per_col[j].push((i, v));
+        }
+        let mut indptr = Vec::with_capacity(d + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for col in per_col.iter_mut() {
+            col.sort_by_key(|&(i, _)| i);
+            let mut k = 0;
+            while k < col.len() {
+                let (i, mut v) = col[k];
+                let mut k2 = k + 1;
+                while k2 < col.len() && col[k2].0 == i {
+                    v += col[k2].1;
+                    k2 += 1;
+                }
+                if v != 0.0 {
+                    indices.push(i as u32);
+                    values.push(v);
+                }
+                k = k2;
+            }
+            indptr.push(indices.len());
+        }
+        CscMatrix {
+            n,
+            d,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Dense -> CSC (tests and small problems).
+    pub fn from_dense(m: &super::DenseMatrix) -> Self {
+        let mut trip = Vec::new();
+        for j in 0..m.d {
+            for (i, &v) in m.col(j).iter().enumerate() {
+                if v != 0.0 {
+                    trip.push((i, j, v));
+                }
+            }
+        }
+        Self::from_triplets(m.n, m.d, &trip)
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of stored entries.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n as f64 * self.d as f64)
+    }
+
+    /// (row indices, values) of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.indptr[j], self.indptr[j + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.indptr[j + 1] - self.indptr[j]
+    }
+
+    /// `A_j^T r` — the inner loop of every CD update on sparse data.
+    #[inline]
+    pub fn col_dot(&self, j: usize, r: &[f64]) -> f64 {
+        let (idx, val) = self.col(j);
+        let mut acc = 0.0;
+        // NOTE: tried `get_unchecked` here — <2% (the gather is
+        // DRAM-latency bound, not bounds-check bound); kept safe indexing
+        for (&i, &v) in idx.iter().zip(val) {
+            acc += v * r[i as usize];
+        }
+        acc
+    }
+
+    /// `r += s * A_j` — the residual maintenance step.
+    #[inline]
+    pub fn col_axpy(&self, j: usize, s: f64, r: &mut [f64]) {
+        let (idx, val) = self.col(j);
+        for (&i, &v) in idx.iter().zip(val) {
+            r[i as usize] += s * v;
+        }
+    }
+
+    /// Squared L2 norm of column `j`.
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        let (_, val) = self.col(j);
+        vecops::norm2_sq(val)
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.d);
+        debug_assert_eq!(y.len(), self.n);
+        y.fill(0.0);
+        for j in 0..self.d {
+            let xj = x[j];
+            if xj != 0.0 {
+                self.col_axpy(j, xj, y);
+            }
+        }
+    }
+
+    /// `y = A^T x`.
+    pub fn matvec_t(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(y.len(), self.d);
+        for j in 0..self.d {
+            y[j] = self.col_dot(j, x);
+        }
+    }
+
+    /// Normalize columns to unit L2 norm; returns original norms.
+    /// Empty columns are left as-is (norm reported 0).
+    pub fn normalize_columns(&mut self) -> Vec<f64> {
+        let mut norms = Vec::with_capacity(self.d);
+        for j in 0..self.d {
+            let nrm = self.col_norm_sq(j).sqrt();
+            norms.push(nrm);
+            if nrm > 0.0 {
+                let (a, b) = (self.indptr[j], self.indptr[j + 1]);
+                for v in &mut self.values[a..b] {
+                    *v /= nrm;
+                }
+            }
+        }
+        norms
+    }
+
+    /// Dense copy (tests / small problems only).
+    pub fn to_dense(&self) -> super::DenseMatrix {
+        let mut m = super::DenseMatrix::zeros(self.n, self.d);
+        for j in 0..self.d {
+            let (idx, val) = self.col(j);
+            for (&i, &v) in idx.iter().zip(val) {
+                m.set(i as usize, j, v);
+            }
+        }
+        m
+    }
+
+    /// Structural integrity check (debug aid + property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.d + 1 {
+            return Err("indptr length".into());
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() != self.values.len() {
+            return Err("indptr endpoints".into());
+        }
+        if self.indices.len() != self.values.len() {
+            return Err("indices/values length".into());
+        }
+        for j in 0..self.d {
+            if self.indptr[j] > self.indptr[j + 1] {
+                return Err(format!("indptr not monotone at {j}"));
+            }
+            let (idx, _) = self.col(j);
+            for w in idx.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("column {j} rows not strictly sorted"));
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= self.n {
+                    return Err(format!("row out of bounds in column {j}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsela::DenseMatrix;
+
+    fn sample() -> CscMatrix {
+        // [[1, 0, 2], [0, 3, 0], [4, 0, 5]]
+        CscMatrix::from_triplets(
+            3,
+            3,
+            &[(0, 0, 1.0), (2, 0, 4.0), (1, 1, 3.0), (0, 2, 2.0), (2, 2, 5.0)],
+        )
+    }
+
+    #[test]
+    fn structure() {
+        let m = sample();
+        m.validate().unwrap();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.col(0), (&[0u32, 2][..], &[1.0, 4.0][..]));
+        assert_eq!(m.col_nnz(1), 1);
+        assert!((m.density() - 5.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_triplets_sum() {
+        let m = CscMatrix::from_triplets(2, 1, &[(0, 0, 1.0), (0, 0, 2.0)]);
+        assert_eq!(m.col(0), (&[0u32][..], &[3.0][..]));
+    }
+
+    #[test]
+    fn zero_sum_duplicates_dropped() {
+        let m = CscMatrix::from_triplets(2, 1, &[(0, 0, 1.0), (0, 0, -1.0)]);
+        assert_eq!(m.nnz(), 0);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = sample();
+        let d = m.to_dense();
+        let x = vec![1.0, -2.0, 0.5];
+        let mut ys = vec![0.0; 3];
+        let mut yd = vec![0.0; 3];
+        m.matvec(&x, &mut ys);
+        d.matvec(&x, &mut yd);
+        assert_eq!(ys, yd);
+        let r = vec![0.3, -0.1, 0.7];
+        let mut ts = vec![0.0; 3];
+        let mut td = vec![0.0; 3];
+        m.matvec_t(&r, &mut ts);
+        d.matvec_t(&r, &mut td);
+        assert_eq!(ts, td);
+    }
+
+    #[test]
+    fn col_ops_match_dense() {
+        let m = sample();
+        let d = m.to_dense();
+        let r = vec![1.0, 2.0, 3.0];
+        for j in 0..3 {
+            assert_eq!(m.col_dot(j, &r), d.col_dot(j, &r));
+        }
+        let mut rs = r.clone();
+        let mut rd = r.clone();
+        m.col_axpy(2, -1.5, &mut rs);
+        d.col_axpy(2, -1.5, &mut rd);
+        assert_eq!(rs, rd);
+    }
+
+    #[test]
+    fn normalization_unit_norms() {
+        let mut m = sample();
+        let norms = m.normalize_columns();
+        assert!((norms[0] - (17f64).sqrt()).abs() < 1e-12);
+        for j in 0..3 {
+            if m.col_nnz(j) > 0 {
+                assert!((m.col_norm_sq(j) - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let d = DenseMatrix::from_fn(4, 3, |i, j| if (i + j) % 2 == 0 { (i + j) as f64 } else { 0.0 });
+        let s = CscMatrix::from_dense(&d);
+        s.validate().unwrap();
+        assert_eq!(s.to_dense(), d);
+    }
+
+    #[test]
+    fn empty_column_handled() {
+        let m = CscMatrix::from_triplets(2, 3, &[(0, 0, 1.0), (1, 2, 2.0)]);
+        m.validate().unwrap();
+        assert_eq!(m.col_nnz(1), 0);
+        assert_eq!(m.col_dot(1, &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_triplet_panics() {
+        CscMatrix::from_triplets(2, 2, &[(2, 0, 1.0)]);
+    }
+}

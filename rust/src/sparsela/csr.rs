@@ -1,0 +1,143 @@
+//! Compressed sparse row matrix — the row-access twin of [`CscMatrix`]
+//! used by the sample-parallel baselines (SGD, SMIDAS, Parallel SGD),
+//! which walk one sample `a_i` per update.
+
+use super::CscMatrix;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub n: usize,
+    pub d: usize,
+    /// `indptr[i]..indptr[i+1]` spans row `i` in `indices`/`values`.
+    pub indptr: Vec<usize>,
+    /// Column index of each stored entry (sorted within a row).
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// CSC -> CSR transpose-copy in O(nnz).
+    pub fn from_csc(m: &CscMatrix) -> Self {
+        let nnz = m.nnz();
+        let mut counts = vec![0usize; m.n];
+        for &i in &m.indices {
+            counts[i as usize] += 1;
+        }
+        let mut indptr = vec![0usize; m.n + 1];
+        for i in 0..m.n {
+            indptr[i + 1] = indptr[i] + counts[i];
+        }
+        let mut next = indptr.clone();
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0.0; nnz];
+        for j in 0..m.d {
+            let (idx, val) = m.col(j);
+            for (&i, &v) in idx.iter().zip(val) {
+                let pos = next[i as usize];
+                indices[pos] = j as u32;
+                values[pos] = v;
+                next[i as usize] += 1;
+            }
+        }
+        CsrMatrix {
+            n: m.n,
+            d: m.d,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// (column indices, values) of sample/row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// `a_i^T x` — the margin of one sample.
+    #[inline]
+    pub fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        let (idx, val) = self.row(i);
+        let mut acc = 0.0;
+        for (&j, &v) in idx.iter().zip(val) {
+            acc += v * x[j as usize];
+        }
+        acc
+    }
+
+    /// `x += s * a_i` — the SGD update direction.
+    #[inline]
+    pub fn row_axpy(&self, i: usize, s: f64, x: &mut [f64]) {
+        let (idx, val) = self.row(i);
+        for (&j, &v) in idx.iter().zip(val) {
+            x[j as usize] += s * v;
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_csc() -> CscMatrix {
+        // [[1, 0, 2], [0, 3, 0], [4, 0, 5]]
+        CscMatrix::from_triplets(
+            3,
+            3,
+            &[(0, 0, 1.0), (2, 0, 4.0), (1, 1, 3.0), (0, 2, 2.0), (2, 2, 5.0)],
+        )
+    }
+
+    #[test]
+    fn conversion_preserves_entries() {
+        let csc = sample_csc();
+        let csr = CsrMatrix::from_csc(&csc);
+        assert_eq!(csr.nnz(), csc.nnz());
+        assert_eq!(csr.row(0), (&[0u32, 2][..], &[1.0, 2.0][..]));
+        assert_eq!(csr.row(1), (&[1u32][..], &[3.0][..]));
+        assert_eq!(csr.row(2), (&[0u32, 2][..], &[4.0, 5.0][..]));
+    }
+
+    #[test]
+    fn row_ops_match_dense() {
+        let csc = sample_csc();
+        let csr = CsrMatrix::from_csc(&csc);
+        let dense = csc.to_dense();
+        let x = vec![0.5, -1.0, 2.0];
+        for i in 0..3 {
+            let expect: f64 = (0..3).map(|j| dense.get(i, j) * x[j]).sum();
+            assert!((csr.row_dot(i, &x) - expect).abs() < 1e-12);
+        }
+        let mut z = vec![0.0; 3];
+        csr.row_axpy(2, 2.0, &mut z);
+        assert_eq!(z, vec![8.0, 0.0, 10.0]);
+    }
+
+    #[test]
+    fn rows_sorted_by_column() {
+        let csr = CsrMatrix::from_csc(&sample_csc());
+        for i in 0..3 {
+            let (idx, _) = csr.row(i);
+            for w in idx.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_row() {
+        let csc = CscMatrix::from_triplets(3, 2, &[(0, 0, 1.0), (2, 1, 1.0)]);
+        let csr = CsrMatrix::from_csc(&csc);
+        assert_eq!(csr.row_nnz(1), 0);
+        assert_eq!(csr.row_dot(1, &[1.0, 1.0]), 0.0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Column-major dense matrix — the store for the paper's dense categories
+//! (single-pixel camera) and the layout the XLA runtime path consumes.
+
+use super::vecops;
+
+/// Column-major dense `n x d` matrix: column `j` is the contiguous slice
+/// `data[j*n .. (j+1)*n]`, so coordinate descent's column walks are
+/// cache-linear (the paper's "no temporal locality" pain is across
+/// *different* columns, which nothing can fix on DRAM).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    pub n: usize,
+    pub d: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(n: usize, d: usize) -> Self {
+        DenseMatrix {
+            n,
+            d,
+            data: vec![0.0; n * d],
+        }
+    }
+
+    /// Build from a row-major closure (generator-friendly).
+    pub fn from_fn(n: usize, d: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(n, d);
+        for j in 0..d {
+            for i in 0..n {
+                m.data[j * n + i] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from column-major data.
+    pub fn from_col_major(n: usize, d: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), n * d, "col-major data length mismatch");
+        DenseMatrix { n, d, data }
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.n..(j + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.n + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.n + i] = v;
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.d);
+        debug_assert_eq!(y.len(), self.n);
+        y.fill(0.0);
+        for j in 0..self.d {
+            let xj = x[j];
+            if xj != 0.0 {
+                vecops::axpy(xj, self.col(j), y);
+            }
+        }
+    }
+
+    /// `y = A^T x`.
+    pub fn matvec_t(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(y.len(), self.d);
+        for j in 0..self.d {
+            y[j] = vecops::dot(self.col(j), x);
+        }
+    }
+
+    /// `A_j^T r` for a single column.
+    #[inline]
+    pub fn col_dot(&self, j: usize, r: &[f64]) -> f64 {
+        vecops::dot(self.col(j), r)
+    }
+
+    /// `r += s * A_j`.
+    #[inline]
+    pub fn col_axpy(&self, j: usize, s: f64, r: &mut [f64]) {
+        vecops::axpy(s, self.col(j), r);
+    }
+
+    /// Normalize every column to unit L2 norm (the paper's
+    /// `diag(A^T A) = 1` convention); returns the original norms.
+    pub fn normalize_columns(&mut self) -> Vec<f64> {
+        let mut norms = Vec::with_capacity(self.d);
+        for j in 0..self.d {
+            let nrm = vecops::norm2(self.col(j));
+            norms.push(nrm);
+            if nrm > 0.0 {
+                for v in self.col_mut(j) {
+                    *v /= nrm;
+                }
+            }
+        }
+        norms
+    }
+
+    /// Row-major f32 copy for the XLA runtime (HLO expects row-major).
+    pub fn to_f32_row_major(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n * self.d];
+        for j in 0..self.d {
+            let col = self.col(j);
+            for i in 0..self.n {
+                out[i * self.d + j] = col[i] as f32;
+            }
+        }
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Frobenius-normalized dense Gram matrix column `A^T A e_j` (test aid).
+    pub fn gram_col(&self, j: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.d];
+        for k in 0..self.d {
+            out[k] = vecops::dot(self.col(k), self.col(j));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DenseMatrix {
+        // [[1, 2], [3, 4], [5, 6]]  (n=3, d=2)
+        DenseMatrix::from_fn(3, 2, |i, j| (i * 2 + j + 1) as f64)
+    }
+
+    #[test]
+    fn layout() {
+        let m = sample();
+        assert_eq!(m.col(0), &[1.0, 3.0, 5.0]);
+        assert_eq!(m.col(1), &[2.0, 4.0, 6.0]);
+        assert_eq!(m.get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let m = sample();
+        let mut y = vec![0.0; 3];
+        m.matvec(&[1.0, -1.0], &mut y);
+        assert_eq!(y, vec![-1.0, -1.0, -1.0]);
+        let mut z = vec![0.0; 2];
+        m.matvec_t(&[1.0, 1.0, 1.0], &mut z);
+        assert_eq!(z, vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn col_ops() {
+        let m = sample();
+        assert_eq!(m.col_dot(0, &[1.0, 0.0, 1.0]), 6.0);
+        let mut r = vec![0.0; 3];
+        m.col_axpy(1, 2.0, &mut r);
+        assert_eq!(r, vec![4.0, 8.0, 12.0]);
+    }
+
+    #[test]
+    fn normalization() {
+        let mut m = sample();
+        let norms = m.normalize_columns();
+        assert!((norms[0] - (35f64).sqrt()).abs() < 1e-12);
+        for j in 0..2 {
+            assert!((vecops::norm2(m.col(j)) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn f32_row_major() {
+        let m = sample();
+        assert_eq!(
+            m.to_f32_row_major(),
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_col_major_len_panics() {
+        DenseMatrix::from_col_major(2, 2, vec![1.0; 3]);
+    }
+}

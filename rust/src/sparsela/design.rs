@@ -1,0 +1,170 @@
+//! Unified design-matrix handle: dense or CSC, one solver-facing API.
+
+use super::{CscMatrix, CsrMatrix, DenseMatrix};
+
+/// The design matrix `A` of problem (1), either dense (single-pixel
+/// camera categories, XLA path) or sparse CSC (imaging/text categories).
+#[derive(Clone, Debug)]
+pub enum Design {
+    Dense(DenseMatrix),
+    Sparse(CscMatrix),
+}
+
+impl Design {
+    pub fn n(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.n,
+            Design::Sparse(m) => m.n,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.d,
+            Design::Sparse(m) => m.d,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.nnz(),
+            Design::Sparse(m) => m.nnz(),
+        }
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n() as f64 * self.d() as f64)
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, Design::Dense(_))
+    }
+
+    /// `A_j^T r`.
+    #[inline]
+    pub fn col_dot(&self, j: usize, r: &[f64]) -> f64 {
+        match self {
+            Design::Dense(m) => m.col_dot(j, r),
+            Design::Sparse(m) => m.col_dot(j, r),
+        }
+    }
+
+    /// `r += s * A_j`.
+    #[inline]
+    pub fn col_axpy(&self, j: usize, s: f64, r: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.col_axpy(j, s, r),
+            Design::Sparse(m) => m.col_axpy(j, s, r),
+        }
+    }
+
+    /// Squared L2 norm of column `j`.
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        match self {
+            Design::Dense(m) => super::vecops::norm2_sq(m.col(j)),
+            Design::Sparse(m) => m.col_norm_sq(j),
+        }
+    }
+
+    /// Stored entries in column `j` (n for dense).
+    pub fn col_nnz(&self, j: usize) -> usize {
+        match self {
+            Design::Dense(m) => m.n,
+            Design::Sparse(m) => m.col_nnz(j),
+        }
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.matvec(x, y),
+            Design::Sparse(m) => m.matvec(x, y),
+        }
+    }
+
+    /// `y = A^T x`.
+    pub fn matvec_t(&self, x: &[f64], y: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.matvec_t(x, y),
+            Design::Sparse(m) => m.matvec_t(x, y),
+        }
+    }
+
+    /// Normalize columns to unit norm (paper convention); original norms.
+    pub fn normalize_columns(&mut self) -> Vec<f64> {
+        match self {
+            Design::Dense(m) => m.normalize_columns(),
+            Design::Sparse(m) => m.normalize_columns(),
+        }
+    }
+
+    /// Row-major view for the sample-parallel baselines.
+    pub fn to_csr(&self) -> CsrMatrix {
+        match self {
+            Design::Dense(m) => CsrMatrix::from_csc(&CscMatrix::from_dense(m)),
+            Design::Sparse(m) => CsrMatrix::from_csc(m),
+        }
+    }
+
+    /// Dense copy (small problems, tests, XLA staging).
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            Design::Dense(m) => m.clone(),
+            Design::Sparse(m) => m.to_dense(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (Design, Design) {
+        let d = DenseMatrix::from_fn(4, 3, |i, j| ((i + 2 * j) % 3) as f64 - 1.0);
+        let s = Design::Sparse(CscMatrix::from_dense(&d));
+        (Design::Dense(d), s)
+    }
+
+    #[test]
+    fn dense_sparse_agree() {
+        let (a, b) = pair();
+        assert_eq!(a.n(), b.n());
+        assert_eq!(a.d(), b.d());
+        let r = vec![1.0, -0.5, 2.0, 0.25];
+        for j in 0..a.d() {
+            assert!((a.col_dot(j, &r) - b.col_dot(j, &r)).abs() < 1e-12);
+            assert!((a.col_norm_sq(j) - b.col_norm_sq(j)).abs() < 1e-12);
+        }
+        let x = vec![0.5, 1.0, -1.0];
+        let mut ya = vec![0.0; 4];
+        let mut yb = vec![0.0; 4];
+        a.matvec(&x, &mut ya);
+        b.matvec(&x, &mut yb);
+        assert_eq!(ya, yb);
+    }
+
+    #[test]
+    fn csr_roundtrip_consistent() {
+        let (a, _) = pair();
+        let csr = a.to_csr();
+        let x = vec![1.0, 2.0, 3.0];
+        let dense = a.to_dense();
+        for i in 0..a.n() {
+            let expect: f64 = (0..3).map(|j| dense.get(i, j) * x[j]).sum();
+            assert!((csr.row_dot(i, &x) - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalize_both() {
+        let (mut a, mut b) = pair();
+        a.normalize_columns();
+        b.normalize_columns();
+        for j in 0..a.d() {
+            if a.col_norm_sq(j) > 0.0 {
+                assert!((a.col_norm_sq(j) - 1.0).abs() < 1e-12);
+                assert!((b.col_norm_sq(j) - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Sparse + dense linear algebra substrate.
+//!
+//! The paper's design matrix `A` (n samples x d features) appears in two
+//! access patterns: coordinate descent walks *columns* (features), SGD
+//! walks *rows* (samples). We keep a column-major [`csc::CscMatrix`] as
+//! the primary store, a row-major [`csr::CsrMatrix`] converted on demand,
+//! and a column-major [`dense::DenseMatrix`] for the dense categories
+//! (single-pixel camera) and the XLA runtime path. [`design::Design`]
+//! unifies them behind one API.
+//!
+//! [`power`] implements power iteration for the spectral radius
+//! `rho(A^T A)` — the paper's parallelism measure (Theorem 3.2).
+
+pub mod csc;
+pub mod csr;
+pub mod dense;
+pub mod design;
+pub mod power;
+pub mod vecops;
+
+pub use csc::CscMatrix;
+pub use csr::CsrMatrix;
+pub use dense::DenseMatrix;
+pub use design::Design;

@@ -1,0 +1,217 @@
+//! Power iteration for `rho(A^T A)` and the plug-in `P*` estimate.
+//!
+//! Theorem 3.2 bounds the useful parallelism by `P < 2d/rho + 1` in the
+//! duplicated-feature analysis, i.e. `P* = ceil(d / rho)` without
+//! duplication. `rho` is the spectral radius of `A^T A`; the paper
+//! estimates it "via power iteration within a small fraction of the total
+//! runtime" (footnote 4). This module is that estimator.
+
+use super::{vecops, Design};
+use crate::util::rng::Rng;
+
+/// Result of a spectral-radius estimation run.
+#[derive(Clone, Debug)]
+pub struct SpectralEstimate {
+    /// Estimated spectral radius of `A^T A`.
+    pub rho: f64,
+    /// Iterations actually used.
+    pub iters: usize,
+    /// Final relative change between successive estimates.
+    pub rel_change: f64,
+}
+
+/// Estimate `rho(A^T A)` by power iteration on `v -> A^T (A v)`.
+///
+/// Converges geometrically at rate `(lambda_2/lambda_1)^2`; `tol` is the
+/// relative change between successive Rayleigh estimates.
+pub fn spectral_radius(a: &Design, max_iters: usize, tol: f64, seed: u64) -> SpectralEstimate {
+    let (n, d) = (a.n(), a.d());
+    let mut rng = Rng::new(seed);
+    let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let nrm = vecops::norm2(&v).max(1e-300);
+    v.iter_mut().for_each(|x| *x /= nrm);
+
+    let mut av = vec![0.0; n];
+    let mut w = vec![0.0; d];
+    let mut rho_prev = 0.0;
+    let mut rel = f64::INFINITY;
+    let mut iters = 0;
+    for t in 0..max_iters {
+        iters = t + 1;
+        a.matvec(&v, &mut av);
+        a.matvec_t(&av, &mut w);
+        let rho = vecops::norm2(&w);
+        if rho <= 0.0 {
+            // A v hit the null space; restart from a fresh direction.
+            for x in v.iter_mut() {
+                *x = rng.normal();
+            }
+            let nv = vecops::norm2(&v).max(1e-300);
+            v.iter_mut().for_each(|x| *x /= nv);
+            continue;
+        }
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = wi / rho;
+        }
+        rel = ((rho - rho_prev) / rho).abs();
+        rho_prev = rho;
+        if rel < tol {
+            break;
+        }
+    }
+    SpectralEstimate {
+        rho: rho_prev,
+        iters,
+        rel_change: rel,
+    }
+}
+
+/// The paper's plug-in ideal parallelism: `P* = ceil(d / rho)`,
+/// floored at 1 (a pathological rho = d still permits sequential work).
+/// A relative epsilon keeps integer boundaries stable against float
+/// noise in the rho estimate (rho = 1 - 1e-12 must not bump P* by one).
+pub fn p_star(d: usize, rho: f64) -> usize {
+    if rho <= 0.0 {
+        return d.max(1);
+    }
+    let ratio = d as f64 / rho;
+    ((ratio - 1e-9 * ratio.max(1.0)).ceil() as usize).max(1)
+}
+
+/// Exact `rho(A^T A)` via Jacobi eigenvalue iteration on the dense Gram
+/// matrix — O(d^3), test/validation use only.
+pub fn spectral_radius_exact(a: &Design) -> f64 {
+    let d = a.d();
+    let dense = a.to_dense();
+    // Gram matrix G = A^T A
+    let mut g = vec![0.0; d * d];
+    for i in 0..d {
+        for j in i..d {
+            let mut acc = 0.0;
+            for k in 0..a.n() {
+                acc += dense.get(k, i) * dense.get(k, j);
+            }
+            g[i * d + j] = acc;
+            g[j * d + i] = acc;
+        }
+    }
+    jacobi_max_eigenvalue(&mut g, d)
+}
+
+/// Cyclic Jacobi sweep until off-diagonal mass is negligible.
+fn jacobi_max_eigenvalue(g: &mut [f64], d: usize) -> f64 {
+    for _sweep in 0..100 {
+        let mut off = 0.0;
+        for p in 0..d {
+            for q in (p + 1)..d {
+                off += g[p * d + q] * g[p * d + q];
+            }
+        }
+        if off < 1e-18 {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = g[p * d + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = g[p * d + p];
+                let aqq = g[q * d + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..d {
+                    let gkp = g[k * d + p];
+                    let gkq = g[k * d + q];
+                    g[k * d + p] = c * gkp - s * gkq;
+                    g[k * d + q] = s * gkp + c * gkq;
+                }
+                for k in 0..d {
+                    let gpk = g[p * d + k];
+                    let gqk = g[q * d + k];
+                    g[p * d + k] = c * gpk - s * gqk;
+                    g[q * d + k] = s * gpk + c * gqk;
+                }
+            }
+        }
+    }
+    (0..d).map(|i| g[i * d + i]).fold(f64::MIN, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsela::{CscMatrix, DenseMatrix};
+
+    fn random_design(n: usize, d: usize, seed: u64) -> Design {
+        let mut rng = Rng::new(seed);
+        let mut m = DenseMatrix::from_fn(n, d, |_, _| rng.normal());
+        m.normalize_columns();
+        Design::Dense(m)
+    }
+
+    #[test]
+    fn power_matches_jacobi() {
+        let a = random_design(30, 12, 1);
+        let est = spectral_radius(&a, 2000, 1e-12, 7);
+        let exact = spectral_radius_exact(&a);
+        assert!(
+            (est.rho - exact).abs() / exact < 1e-6,
+            "power {} vs jacobi {}",
+            est.rho,
+            exact
+        );
+    }
+
+    #[test]
+    fn identity_like_design_rho_one() {
+        // orthonormal columns => A^T A = I => rho = 1, P* = d
+        let n = 16;
+        let m = DenseMatrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 });
+        let a = Design::Dense(m);
+        let est = spectral_radius(&a, 500, 1e-12, 3);
+        assert!((est.rho - 1.0).abs() < 1e-9);
+        assert_eq!(p_star(n, est.rho), n);
+    }
+
+    #[test]
+    fn duplicated_feature_rho_d() {
+        // d identical columns => rho = d => P* = 1 (no useful parallelism)
+        let n = 32;
+        let d = 8;
+        let mut rng = Rng::new(5);
+        let col: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let nrm = vecops::norm2(&col);
+        let m = DenseMatrix::from_fn(n, d, |i, _| col[i] / nrm);
+        let est = spectral_radius(&Design::Dense(m), 500, 1e-12, 3);
+        assert!((est.rho - d as f64).abs() < 1e-6, "rho {}", est.rho);
+        assert_eq!(p_star(d, est.rho), 1);
+    }
+
+    #[test]
+    fn sparse_and_dense_agree() {
+        let a = random_design(25, 10, 9);
+        let s = Design::Sparse(CscMatrix::from_dense(&a.to_dense()));
+        let ra = spectral_radius(&a, 1000, 1e-12, 1).rho;
+        let rs = spectral_radius(&s, 1000, 1e-12, 1).rho;
+        assert!((ra - rs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p_star_edges() {
+        assert_eq!(p_star(100, 0.0), 100);
+        assert_eq!(p_star(100, 1.0), 100);
+        assert_eq!(p_star(100, 100.0), 1);
+        assert_eq!(p_star(100, 7.3), 14);
+        assert_eq!(p_star(0, 2.0), 1);
+    }
+
+    #[test]
+    fn zero_matrix_survives() {
+        let a = Design::Dense(DenseMatrix::zeros(4, 3));
+        let est = spectral_radius(&a, 50, 1e-9, 2);
+        assert_eq!(est.rho, 0.0);
+    }
+}

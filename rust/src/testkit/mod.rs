@@ -1,0 +1,109 @@
+//! Property-testing helper (proptest substitute — not in the vendored
+//! crate set). Generates random cases from a seeded RNG, runs the
+//! property, and on failure reports the seed + case index so the exact
+//! case replays deterministically.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random property checks. `gen` builds a case from an RNG;
+/// `prop` returns `Err(msg)` to fail. Panics with the replay coordinates.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Random dense column-normalized design + targets, the standard problem
+/// generator for the coordinator property tests.
+pub struct RandomLasso {
+    pub n: usize,
+    pub d: usize,
+    pub a: crate::sparsela::Design,
+    pub y: Vec<f64>,
+    pub lam: f64,
+}
+
+impl std::fmt::Debug for RandomLasso {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "RandomLasso(n={}, d={}, lam={:.4})",
+            self.n, self.d, self.lam
+        )
+    }
+}
+
+/// Sample a random Lasso instance with n in [5, 40], d in [2, 30].
+pub fn random_lasso(rng: &mut Rng) -> RandomLasso {
+    let n = 5 + rng.below(36);
+    let d = 2 + rng.below(29);
+    let mut m = crate::sparsela::DenseMatrix::from_fn(n, d, |_, _| rng.normal());
+    m.normalize_columns();
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let lam = 0.01 + rng.uniform();
+    RandomLasso {
+        n,
+        d,
+        a: crate::sparsela::Design::Dense(m),
+        y,
+        lam,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(
+            "uniform-in-range",
+            1,
+            50,
+            |rng| rng.uniform(),
+            |&u| {
+                if (0.0..1.0).contains(&u) {
+                    Ok(())
+                } else {
+                    Err(format!("{u} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn check_reports_failures() {
+        check(
+            "always-fails",
+            2,
+            3,
+            |rng| rng.below(10),
+            |_| Err("boom".into()),
+        );
+    }
+
+    #[test]
+    fn random_lasso_shapes() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let c = random_lasso(&mut rng);
+            assert_eq!(c.a.n(), c.n);
+            assert_eq!(c.a.d(), c.d);
+            assert_eq!(c.y.len(), c.n);
+            assert!(c.lam > 0.0);
+        }
+    }
+}

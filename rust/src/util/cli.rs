@@ -1,0 +1,149 @@
+//! Tiny CLI argument helper (clap is not in the vendored crate set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments. Typed getters with defaults keep call sites
+//! clean; unknown-flag detection catches typos.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+/// Flags that never take a value (so `--verbose data.svm` keeps
+/// `data.svm` positional). Register the crate's boolean flags here.
+pub const BOOL_FLAGS: &[&str] = &[
+    "verbose", "quiet", "help", "no-normalize", "exact", "json", "no-path",
+    "no-active-set", "no-cache", "sync", "force",
+];
+
+impl Args {
+    /// Parse from an iterator of raw args (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        Self::parse_with_bools(items, BOOL_FLAGS)
+    }
+
+    /// Parse with an explicit boolean-flag registry.
+    pub fn parse_with_bools<I: IntoIterator<Item = String>>(
+        items: I,
+        bool_flags: &[&str],
+    ) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&rest) {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of usize, e.g. `--ps 1,2,4,8`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad int {s:?}")))
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of f64.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad float {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["solve", "--p", "8", "--lam=0.5", "--verbose", "data.svm"]);
+        assert_eq!(a.positional, vec!["solve", "data.svm"]);
+        assert_eq!(a.usize_or("p", 1), 8);
+        assert_eq!(a.f64_or("lam", 0.1), 0.5);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("p", 4), 4);
+        assert_eq!(a.get_or("engine", "exact"), "exact");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--ps", "1,2,4", "--lams=0.5,10"]);
+        assert_eq!(a.usize_list_or("ps", &[9]), vec![1, 2, 4]);
+        assert_eq!(a.f64_list_or("lams", &[]), vec![0.5, 10.0]);
+        assert_eq!(a.usize_list_or("missing", &[7]), vec![7]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse(&["--shift", "-3.5"]);
+        assert_eq!(a.f64_or("shift", 0.0), -3.5);
+    }
+}

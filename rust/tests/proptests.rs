@@ -1,0 +1,294 @@
+//! Property-based tests on the coordinator invariants (testkit::check is
+//! the proptest substitute — see DESIGN.md §Environment-substitutions).
+
+use shotgun::coordinator::{ShotgunConfig, ShotgunExact};
+use shotgun::objective::LassoProblem;
+use shotgun::sparsela::{power, vecops, CscMatrix, Design};
+use shotgun::solvers::common::{LassoSolver as _, SolveOptions};
+use shotgun::solvers::shooting::Shooting;
+use shotgun::testkit::{check, random_lasso};
+use shotgun::util::rng::Rng;
+
+#[test]
+fn prop_residual_cache_matches_fresh_residual() {
+    // after any number of Shotgun rounds at any P, the engine's carried
+    // residual equals A x - y recomputed from scratch
+    check(
+        "residual-cache",
+        11,
+        25,
+        random_lasso,
+        |case| {
+            let prob = LassoProblem::new(&case.a, &case.y, case.lam);
+            let mut rng = Rng::new(3);
+            let p = 1 + rng.below(6);
+            let engine = ShotgunExact::new(ShotgunConfig {
+                p,
+                ..Default::default()
+            });
+            let mut x = vec![0.0; case.d];
+            let mut r = prob.residual(&x);
+            let mut draws = Vec::new();
+            let mut deltas = Vec::new();
+            for _ in 0..30 {
+                engine.lasso_round(&prob, &mut x, &mut r, &mut rng, &mut draws, &mut deltas);
+            }
+            let fresh = prob.residual(&x);
+            for (c, f) in r.iter().zip(&fresh) {
+                if (c - f).abs() > 1e-8 {
+                    return Err(format!("cache {c} vs fresh {f}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_p1_identical_to_shooting() {
+    // Shotgun with P = 1 must be bit-identical to Shooting (same RNG)
+    check(
+        "p1-is-shooting",
+        13,
+        15,
+        random_lasso,
+        |case| {
+            let prob = LassoProblem::new(&case.a, &case.y, case.lam);
+            let opts = SolveOptions {
+                max_iters: 500,
+                tol: 1e-12,
+                record_every: u64::MAX,
+                seed: 5,
+                ..Default::default()
+            };
+            let a = ShotgunExact::new(ShotgunConfig {
+                p: 1,
+                ..Default::default()
+            })
+            .solve_lasso(&prob, &vec![0.0; case.d], &opts);
+            let b = Shooting.solve_lasso(&prob, &vec![0.0; case.d], &opts);
+            if a.x != b.x {
+                return Err("P=1 trajectory diverged from Shooting".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_converged_solutions_satisfy_kkt() {
+    check(
+        "kkt-at-convergence",
+        17,
+        15,
+        random_lasso,
+        |case| {
+            let prob = LassoProblem::new(&case.a, &case.y, case.lam);
+            let opts = SolveOptions {
+                max_iters: 400_000,
+                tol: 1e-9,
+                record_every: u64::MAX,
+                seed: 7,
+                ..Default::default()
+            };
+            let res = ShotgunExact::new(ShotgunConfig {
+                p: 2,
+                ..Default::default()
+            })
+            .solve_lasso(&prob, &vec![0.0; case.d], &opts);
+            if !res.converged {
+                return Ok(()); // budget-bound, not a property violation
+            }
+            let r = prob.residual(&res.x);
+            let kkt = prob.kkt_violation(&res.x, &r);
+            if kkt > 1e-6 {
+                return Err(format!("kkt {kkt} at converged solution"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_objective_never_nan_even_at_huge_p() {
+    // divergence must be detected and reported, never silently NaN
+    check(
+        "divergence-detected",
+        19,
+        10,
+        random_lasso,
+        |case| {
+            let prob = LassoProblem::new(&case.a, &case.y, case.lam);
+            let opts = SolveOptions {
+                max_iters: 3_000,
+                tol: 1e-9,
+                record_every: 64,
+                seed: 9,
+                ..Default::default()
+            };
+            let res = ShotgunExact::new(ShotgunConfig {
+                p: case.d, // way past P* for correlated cases
+                ..Default::default()
+            })
+            .solve_lasso(&prob, &vec![0.0; case.d], &opts);
+            for pt in &res.trace.points {
+                if pt.objective.is_nan() {
+                    return Err("NaN escaped into the trace".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_power_iteration_matches_jacobi() {
+    check(
+        "rho-estimation",
+        23,
+        12,
+        random_lasso,
+        |case| {
+            let est = power::spectral_radius(&case.a, 5000, 1e-13, 1).rho;
+            let exact = power::spectral_radius_exact(&case.a);
+            if (est - exact).abs() / exact.max(1e-12) > 1e-3 {
+                return Err(format!("power {est} vs jacobi {exact}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_csc_roundtrip_and_validate() {
+    check(
+        "csc-roundtrip",
+        29,
+        30,
+        |rng| {
+            let n = 1 + rng.below(30);
+            let d = 1 + rng.below(30);
+            let mut trip = Vec::new();
+            for j in 0..d {
+                for i in 0..n {
+                    if rng.bernoulli(0.2) {
+                        trip.push((i, j, rng.normal()));
+                    }
+                }
+            }
+            (n, d, trip)
+        },
+        |(n, d, trip)| {
+            let m = CscMatrix::from_triplets(*n, *d, trip);
+            m.validate().map_err(|e| format!("validate: {e}"))?;
+            let dense = m.to_dense();
+            let back = CscMatrix::from_dense(&dense);
+            if back != m {
+                return Err("dense roundtrip changed the matrix".into());
+            }
+            // matvec agreement with the dense path
+            let mut rng = Rng::new(1);
+            let x: Vec<f64> = (0..*d).map(|_| rng.normal()).collect();
+            let mut ys = vec![0.0; *n];
+            let mut yd = vec![0.0; *n];
+            m.matvec(&x, &mut ys);
+            dense.matvec(&x, &mut yd);
+            for (a, b) in ys.iter().zip(&yd) {
+                if (a - b).abs() > 1e-10 {
+                    return Err("matvec mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pathwise_matches_direct_optimum() {
+    // warm starts never end meaningfully worse than the cold start
+    check(
+        "pathwise-warm-start",
+        31,
+        8,
+        random_lasso,
+        |case| {
+            use shotgun::solvers::path::solve_pathwise;
+            let prob0 = LassoProblem::new(&case.a, &case.y, 0.0);
+            let lam_max = prob0.lambda_max();
+            let lam = (0.1 * lam_max).max(1e-6);
+            let opts = SolveOptions {
+                max_iters: 300_000,
+                tol: 1e-9,
+                record_every: u64::MAX,
+                seed: 3,
+                ..Default::default()
+            };
+            let path = solve_pathwise(lam_max, lam, 4, case.d, &opts, |l, x0, o| {
+                let prob = LassoProblem::new(&case.a, &case.y, l);
+                Shooting.solve_lasso(&prob, x0, o)
+            });
+            let direct = {
+                let prob = LassoProblem::new(&case.a, &case.y, lam);
+                Shooting.solve_lasso(&prob, &vec![0.0; case.d], &opts)
+            };
+            let rel = (path.objective - direct.objective).abs()
+                / direct.objective.abs().max(1e-12);
+            if rel > 1e-2 {
+                return Err(format!(
+                    "pathwise {} vs direct {}",
+                    path.objective, direct.objective
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_column_scaling_invariance() {
+    // footnote 1: normalization does not change the objective when the
+    // scaled design is re-normalized (sanity on the generator pipeline)
+    check(
+        "normalization-invariance",
+        37,
+        10,
+        |rng| {
+            let n = 10 + rng.below(20);
+            let d = 2 + rng.below(10);
+            let mut m = shotgun::sparsela::DenseMatrix::from_fn(n, d, |_, _| rng.normal());
+            m.normalize_columns();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (m, y)
+        },
+        |(m, y)| {
+            let a = Design::Dense(m.clone());
+            let prob = LassoProblem::new(&a, y, 0.3);
+            let opts = SolveOptions {
+                max_iters: 200_000,
+                tol: 1e-10,
+                record_every: u64::MAX,
+                ..Default::default()
+            };
+            let res = Shooting.solve_lasso(&prob, &vec![0.0; m.d], &opts);
+            // scale columns by 2 then re-normalize: identical problem
+            let mut m2 =
+                shotgun::sparsela::DenseMatrix::from_fn(m.n, m.d, |i, j| 2.0 * m.get(i, j));
+            let norms = m2.normalize_columns();
+            for &nrm in &norms {
+                if (nrm - 2.0).abs() > 1e-9 {
+                    return Err("scaling setup broken".into());
+                }
+            }
+            let a2 = Design::Dense(m2);
+            let prob2 = LassoProblem::new(&a2, y, 0.3);
+            let res2 = Shooting.solve_lasso(&prob2, &vec![0.0; m.d], &opts);
+            for (u, v) in res.x.iter().zip(&res2.x) {
+                if (u - v).abs() > 1e-6 {
+                    return Err(format!("normalized solutions differ: {u} vs {v}"));
+                }
+            }
+            let _ = vecops::norm1(&res.x);
+            Ok(())
+        },
+    );
+}

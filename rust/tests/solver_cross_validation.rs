@@ -1,0 +1,160 @@
+//! Cross-validation integration tests: every Lasso solver must land on
+//! the same optimum as every other on shared instances across dataset
+//! categories — the apples-to-apples guarantee behind Fig. 3.
+
+use shotgun::coordinator::{Engine, Shotgun, ShotgunConfig};
+use shotgun::data::synth;
+use shotgun::objective::{LassoProblem, LogisticProblem};
+use shotgun::solvers::common::{LassoSolver, LogisticSolver, SolveOptions};
+use shotgun::solvers::{
+    cdn::ShootingCdn, fpc_as::FpcAs, gpsr_bb::GpsrBb, l1_ls::L1Ls, shooting::Shooting,
+    sparsa::Sparsa,
+};
+
+fn opts() -> SolveOptions {
+    SolveOptions {
+        max_iters: 500_000,
+        tol: 1e-9,
+        record_every: 1024,
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+fn lasso_optima(ds: &shotgun::data::Dataset, lam: f64) -> Vec<(String, f64)> {
+    let d = ds.d();
+    let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+    let x0 = vec![0.0; d];
+    let o = opts();
+    let mut out: Vec<(String, f64)> = Vec::new();
+    out.push((
+        "shooting".into(),
+        Shooting.solve_lasso(&prob, &x0, &o).objective,
+    ));
+    out.push((
+        "shotgun-p4".into(),
+        Shotgun::new(ShotgunConfig {
+            p: 4,
+            ..Default::default()
+        })
+        .solve_lasso(&prob, &x0, &o)
+        .objective,
+    ));
+    out.push((
+        "shotgun-threaded-p2".into(),
+        Shotgun::new(ShotgunConfig {
+            p: 2,
+            engine: Engine::Threaded,
+            ..Default::default()
+        })
+        .solve_lasso(&prob, &x0, &o)
+        .objective,
+    ));
+    out.push((
+        "l1-ls".into(),
+        L1Ls::default().solve_lasso(&prob, &x0, &o).objective,
+    ));
+    out.push((
+        "fpc-as".into(),
+        FpcAs::default()
+            .solve_lasso(&prob, &x0, &SolveOptions {
+                max_iters: 5_000,
+                ..o.clone()
+            })
+            .objective,
+    ));
+    out.push((
+        "gpsr-bb".into(),
+        GpsrBb::default().solve_lasso(&prob, &x0, &o).objective,
+    ));
+    out.push((
+        "sparsa".into(),
+        Sparsa::default().solve_lasso(&prob, &x0, &o).objective,
+    ));
+    out
+}
+
+fn assert_consensus(tag: &str, optima: &[(String, f64)], rel: f64) {
+    let best = optima.iter().map(|(_, f)| *f).fold(f64::INFINITY, f64::min);
+    for (name, f) in optima {
+        assert!(
+            (f - best).abs() / best.abs().max(1e-12) < rel,
+            "{tag}: {name} landed at {f}, consensus best {best}"
+        );
+    }
+}
+
+#[test]
+fn lasso_consensus_sparco() {
+    let ds = synth::sparco_like(64, 48, 0.3, 11);
+    assert_consensus("sparco", &lasso_optima(&ds, 0.3), 1e-3);
+}
+
+#[test]
+fn lasso_consensus_singlepix() {
+    let ds = synth::singlepix_pm1(64, 48, 12);
+    assert_consensus("singlepix", &lasso_optima(&ds, 0.5), 1e-3);
+}
+
+#[test]
+fn lasso_consensus_imaging() {
+    let ds = synth::sparse_imaging(64, 128, 0.08, 13);
+    assert_consensus("imaging", &lasso_optima(&ds, 0.2), 1e-3);
+}
+
+#[test]
+fn lasso_consensus_text() {
+    let ds = synth::large_sparse_text(96, 80, 14);
+    assert_consensus("text", &lasso_optima(&ds, 0.3), 1e-3);
+}
+
+#[test]
+fn logistic_consensus() {
+    // CD, CDN and parallel CDN agree on the logistic optimum
+    let ds = synth::rcv1_like(80, 60, 0.2, 15);
+    let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
+    let x0 = vec![0.0; 60];
+    let o = SolveOptions {
+        max_iters: 300_000,
+        tol: 1e-8,
+        record_every: 1024,
+        seed: 5,
+        ..Default::default()
+    };
+    let cdn_o = SolveOptions {
+        max_iters: 3_000,
+        ..o.clone()
+    };
+    let optima = vec![
+        (
+            "shooting".to_string(),
+            Shooting.solve_logistic(&prob, &x0, &o).objective,
+        ),
+        (
+            "shooting-cdn".to_string(),
+            ShootingCdn::default()
+                .solve_logistic(&prob, &x0, &cdn_o)
+                .objective,
+        ),
+        (
+            "shotgun-cdn-p4".to_string(),
+            shotgun::coordinator::ShotgunCdn::with_p(4)
+                .solve_logistic(&prob, &x0, &o)
+                .objective,
+        ),
+    ];
+    assert_consensus("logistic", &optima, 1e-2);
+}
+
+#[test]
+fn warm_start_cross_solver() {
+    // a solution from one solver warm-starts another without regression
+    let ds = synth::sparse_imaging(48, 96, 0.1, 16);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.15);
+    let o = opts();
+    let a = GpsrBb::default().solve_lasso(&prob, &vec![0.0; 96], &o);
+    let b = Shooting.solve_lasso(&prob, &a.x, &o);
+    assert!(b.objective <= a.objective + 1e-10);
+    let c = Sparsa::default().solve_lasso(&prob, &b.x, &o);
+    assert!(c.objective <= b.objective + 1e-10);
+}

@@ -1,0 +1,101 @@
+//! Integration tests over the full three-layer path: JAX/Pallas AOT
+//! artifacts (built by `make artifacts`) loaded and executed through the
+//! PJRT CPU client, cross-checked against the pure-rust engines.
+//!
+//! Skipped (cleanly) when artifacts/ has not been built.
+
+use shotgun::coordinator::{Engine, ShotgunConfig, ShotgunExact};
+use shotgun::data::synth;
+use shotgun::objective::LassoProblem;
+use shotgun::runtime::XlaLassoEngine;
+use shotgun::solvers::common::SolveOptions;
+use shotgun::sparsela::power;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("artifacts/ not built; skipping XLA integration test");
+        None
+    }
+}
+
+#[test]
+fn xla_engine_solves_dense_lasso() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = XlaLassoEngine::open(dir, "s").expect("open engine");
+    let (big_n, big_d, _, _) = engine.profile_shape();
+    assert!(big_n >= 128 && big_d >= 128);
+
+    let ds = synth::singlepix_pm1(128, 128, 42);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.3);
+    let opts = SolveOptions {
+        max_iters: 6_000,
+        tol: 1e-5,
+        seed: 7,
+        ..Default::default()
+    };
+    let res = engine
+        .solve_lasso(&prob, &vec![0.0; 128], &opts)
+        .expect("xla solve");
+    // compare against the exact rust engine at the same P
+    let cfg = ShotgunConfig {
+        p: 8,
+        engine: Engine::Exact,
+        ..Default::default()
+    };
+    let rust_res = ShotgunExact::new(cfg).solve_lasso(
+        &prob,
+        &vec![0.0; 128],
+        &SolveOptions {
+            max_iters: 200_000,
+            tol: 1e-8,
+            seed: 7,
+            ..Default::default()
+        },
+    );
+    let f0 = prob.objective(&vec![0.0; 128]);
+    assert!(
+        res.objective < 0.9 * f0,
+        "xla engine failed to descend: {} vs F0 {}",
+        res.objective,
+        f0
+    );
+    // f32 device path tracks the f64 rust optimum to float precision
+    let rel = (res.objective - rust_res.objective).abs() / rust_res.objective;
+    assert!(
+        rel < 5e-2,
+        "xla {} vs rust {} (rel {rel})",
+        res.objective,
+        rust_res.objective
+    );
+}
+
+#[test]
+fn xla_power_iteration_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = XlaLassoEngine::open(dir, "s").expect("open engine");
+    let ds = synth::singlepix_binary(128, 64, 3);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+    let rho_dev = engine.power_iter_rho(&prob).expect("device rho");
+    let rho_rust = power::spectral_radius(&ds.design, 2000, 1e-10, 5).rho;
+    let rel = (rho_dev - rho_rust).abs() / rho_rust;
+    assert!(
+        rel < 1e-2,
+        "device rho {rho_dev} vs rust {rho_rust} (rel {rel})"
+    );
+}
+
+#[test]
+fn xla_engine_rejects_oversized_problems() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = XlaLassoEngine::open(dir, "s").expect("open engine");
+    let (big_n, big_d, _, _) = engine.profile_shape();
+    let ds = synth::singlepix_pm1(big_n + 1, big_d, 1);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+    assert!(engine
+        .solve_lasso(&prob, &vec![0.0; big_d], &SolveOptions::default())
+        .is_err());
+}
