@@ -1,18 +1,34 @@
 //! Microbenchmarks of the L3 hot paths (criterion-substitute harness):
-//! the per-update column kernels, one synchronous Shotgun round, the
-//! threaded engine's CAS loop, and the XLA block-round dispatch.
+//! the per-update column kernels (plain + fused), one synchronous
+//! Shotgun round, the end-to-end solve-to-tolerance path with the
+//! coordinate scheduler on vs off, the threaded engine's CAS loop, and
+//! the XLA block-round dispatch.
 //!
-//! `cargo bench --bench hotpath` — these are the §Perf regression gates.
+//! `cargo bench --bench hotpath` (or `scripts/bench.sh`) — these are the
+//! §Perf regression gates. Results go to stdout, to
+//! `results/hotpath.jsonl`, and (machine-readable, tracked across PRs)
+//! to `BENCH_hotpath.json`.
 
 use shotgun::coordinator::atomic::AtomicVec;
+use shotgun::coordinator::schedule::ShrinkConfig;
 use shotgun::coordinator::{ShotgunConfig, ShotgunExact};
 use shotgun::data::synth;
-use shotgun::metrics::harness::{bench_for, black_box};
+use shotgun::metrics::harness::{bench, bench_for, black_box, BenchResult};
 use shotgun::objective::LassoProblem;
+use shotgun::solvers::common::SolveOptions;
+use shotgun::util::json::escape;
 use shotgun::util::rng::Rng;
 
 fn main() {
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor all artifacts at the workspace root so BENCH_hotpath.json
+    // lands where the docs (and scripts/bench.sh) say it does
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .to_path_buf();
     let mut results = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
 
     // --- sparse column kernels (the per-update cost) ---
     {
@@ -29,6 +45,13 @@ fn main() {
         results.push(bench_for("col_axpy sparse", 0.5, 64, || {
             let j = rng2.below(8192);
             ds.design.col_axpy(j, 1e-9, &mut r2);
+        }));
+        // fused gather+scatter vs the two separate walks above
+        let mut r3 = r.clone();
+        let mut rng3 = Rng::new(4);
+        results.push(bench_for("col_dot_axpy fused (gather+scatter)", 0.5, 64, || {
+            let j = rng3.below(8192);
+            black_box(ds.design.col_dot_axpy(j, &mut r3, |g| 1e-12 * g))
         }));
     }
 
@@ -62,6 +85,63 @@ fn main() {
         }));
     }
 
+    // --- solve-to-tolerance: the scheduler's end-to-end payoff ---
+    // sparse_imaging 4096x8192, Shotgun exact P=8, identical options
+    // except the shrink toggle. The objective gap is asserted hard; the
+    // speedup-vs-1.5x acceptance gate is reported loudly and recorded
+    // in BENCH_hotpath.json (not asserted, so noisy machines don't turn
+    // a perf wobble into a red bench run).
+    {
+        let ds = synth::sparse_imaging(4096, 8192, 0.01, 1);
+        let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam = 0.2 * prob0.lambda_max();
+        let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+        let opts_on = SolveOptions {
+            max_iters: 4_000_000,
+            tol: 1e-6,
+            record_every: u64::MAX,
+            seed: 11,
+            ..Default::default()
+        };
+        let opts_off = SolveOptions {
+            shrink: ShrinkConfig::disabled(),
+            ..opts_on.clone()
+        };
+        let solve = |o: &SolveOptions| {
+            ShotgunExact::new(ShotgunConfig {
+                p: 8,
+                ..Default::default()
+            })
+            .solve_lasso(&prob, &vec![0.0; 8192], o)
+        };
+        let f_on = solve(&opts_on);
+        let f_off = solve(&opts_off);
+        let gap = (f_on.objective - f_off.objective).abs() / f_off.objective.abs().max(1e-12);
+        println!(
+            "solve objectives: shrink-on F={:.8} ({} updates) shrink-off F={:.8} ({} updates), rel gap {:.2e}",
+            f_on.objective, f_on.updates, f_off.objective, f_off.updates, gap
+        );
+        assert!(gap < 1e-3, "shrinking changed the optimum (gap {gap:.3e})");
+        let on = bench("lasso solve-to-tol shrink=on  (sparse 4096x8192)", 1, 3, || {
+            black_box(solve(&opts_on).objective)
+        });
+        let off = bench("lasso solve-to-tol shrink=off (sparse 4096x8192)", 1, 3, || {
+            black_box(solve(&opts_off).objective)
+        });
+        let speedup = off.median_s / on.median_s.max(1e-12);
+        println!("scheduler speedup (solve-to-tol): {speedup:.2}x (gate: >= 1.5x)");
+        if speedup < 1.5 {
+            eprintln!(
+                "WARNING: shrink speedup {speedup:.2}x is below the 1.5x acceptance gate"
+            );
+        }
+        derived.push(("shrink_speedup_sparse_lasso".into(), speedup));
+        derived.push(("shrink_speedup_gate".into(), 1.5));
+        derived.push(("shrink_objective_rel_gap".into(), gap));
+        results.push(on);
+        results.push(off);
+    }
+
     // --- atomic CAS residual update (threaded engine inner op) ---
     {
         let v = AtomicVec::from_slice(&vec![0.0; 4096]);
@@ -89,30 +169,89 @@ fn main() {
         }));
     }
 
-    // --- XLA block-round dispatch (when artifacts are built) ---
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        use shotgun::runtime::XlaLassoEngine;
-        use shotgun::solvers::common::SolveOptions;
-        let mut engine = XlaLassoEngine::open(std::path::Path::new("artifacts"), "s").unwrap();
-        let ds = synth::singlepix_pm1(256, 512, 10);
-        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.3);
-        let opts = SolveOptions {
-            max_iters: 8, // one device call (k=8 fused rounds)
-            tol: 0.0,
-            ..Default::default()
-        };
-        results.push(bench_for("xla lasso_rounds call (k=8, s profile)", 2.0, 8, || {
-            black_box(engine.solve_lasso(&prob, &vec![0.0; 512], &opts).unwrap())
+    // --- CSC construction (counting-sort from_triplets) ---
+    {
+        use shotgun::sparsela::CscMatrix;
+        let mut rng = Rng::new(10);
+        let (n, d) = (4096usize, 8192usize);
+        let mut trip = Vec::new();
+        for j in 0..d {
+            for _ in 0..40 {
+                trip.push((rng.below(n), j, rng.normal()));
+            }
+        }
+        results.push(bench_for("from_triplets (327k nnz)", 0.5, 4, || {
+            black_box(CscMatrix::from_triplets(n, d, &trip).nnz())
         }));
     }
 
+    // --- XLA block-round dispatch (when artifacts are built) ---
+    let artifacts = root.join("artifacts");
+    if artifacts.join("manifest.json").exists() {
+        use shotgun::runtime::XlaLassoEngine;
+        if let Ok(mut engine) = XlaLassoEngine::open(&artifacts, "s") {
+            let ds = synth::singlepix_pm1(256, 512, 10);
+            let prob = LassoProblem::new(&ds.design, &ds.targets, 0.3);
+            let opts = SolveOptions {
+                max_iters: 8, // one device call (k=8 fused rounds)
+                tol: 0.0,
+                ..Default::default()
+            };
+            results.push(bench_for("xla lasso_rounds call (k=8, s profile)", 2.0, 8, || {
+                black_box(engine.solve_lasso(&prob, &vec![0.0; 512], &opts).unwrap())
+            }));
+        } else {
+            println!("(artifacts present but xla feature not compiled in; skipping device bench)");
+        }
+    }
+
     println!("\n=== hotpath microbenchmarks ===");
-    let mut json = String::new();
+    let mut jsonl = String::new();
     for r in &results {
         println!("{}", r.report_line());
-        json.push_str(&r.to_json());
-        json.push('\n');
+        jsonl.push_str(&r.to_json());
+        jsonl.push('\n');
     }
-    let _ = std::fs::create_dir_all("results");
-    let _ = std::fs::write("results/hotpath.jsonl", json);
+    let _ = std::fs::create_dir_all(root.join("results"));
+    let _ = std::fs::write(root.join("results/hotpath.jsonl"), jsonl);
+
+    // machine-readable perf trajectory, tracked across PRs
+    let bench_json = root.join("BENCH_hotpath.json");
+    let _ = std::fs::write(&bench_json, to_bench_json(&results, &derived));
+    println!(
+        "\nwrote {} ({} entries)",
+        bench_json.display(),
+        results.len()
+    );
+}
+
+/// `BENCH_hotpath.json`: one object with per-bench (name, ns/op,
+/// throughput) rows plus derived headline numbers.
+fn to_bench_json(results: &[BenchResult], derived: &[(String, f64)]) -> String {
+    let mut s = String::from("{\n  \"bench\": \"hotpath\",\n  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let ns = r.median_s * 1e9;
+        let ops = if r.median_s > 0.0 { 1.0 / r.median_s } else { 0.0 };
+        s.push_str(&format!(
+            "    {{\"name\": {}, \"ns_per_op\": {:.1}, \"ops_per_s\": {:.3}, \"samples\": {}}}{}\n",
+            escape(&r.name),
+            ns,
+            ops,
+            r.samples,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"derived\": {\n");
+    for (i, (k, v)) in derived.iter().enumerate() {
+        // scientific notation: the rel-gap metric lives around 1e-6..1e-9
+        // and fixed-point would flatten it to zero
+        s.push_str(&format!(
+            "    {}: {:.9e}{}\n",
+            escape(k),
+            v,
+            if i + 1 < derived.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  }\n}\n");
+    s
 }

@@ -3,6 +3,7 @@
 //! line search) computed per round against the same iterate, with the
 //! active-set scheme of Shooting CDN.
 
+use super::schedule::ActiveSet;
 use super::ShotgunConfig;
 use crate::objective::LogisticProblem;
 use crate::solvers::cdn::CdnConfig;
@@ -51,22 +52,37 @@ impl LogisticSolver for ShotgunCdn {
         rec.record(0, f0, &x, 0.0, true);
         let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
 
-        // active set (§4.2.1: "can limit parallelism by shrinking d")
-        let mut active: Vec<usize> = (0..d).collect();
+        // active set via the coordinate scheduler (§4.2.1: "can limit
+        // parallelism by shrinking d"); the CDN knobs keep their
+        // historical home in CdnConfig, and opts.shrink.enabled = false
+        // force-disables for apples-to-apples comparisons
+        let use_active = self.cdn.use_active_set && opts.shrink.enabled;
+        let thr = prob.lam * (1.0 - self.cdn.shrink_slack);
+        let mut active = ActiveSet::full(d);
         let mut draws: Vec<usize> = Vec::with_capacity(p);
         let mut deltas: Vec<f64> = Vec::with_capacity(p);
         let mut outcome_converged = false;
         let mut round = 0u64;
         let mut window_max: f64 = 0.0;
-        let mut full_window = active.len() == d;
         let rounds_per_window = (d as u64 / p as u64).max(1);
         while !rec.out_of_budget(round) {
+            if active.is_empty() {
+                // everything pruned: full Newton-direction recheck
+                // certifies the optimum or refills with the violators
+                let worst =
+                    active.recheck_full(opts.tol, |k| prob.cdn_direction(k, x[k], &z));
+                if worst < opts.tol {
+                    outcome_converged = true;
+                    break;
+                }
+                continue;
+            }
             round += 1;
             // draw P coordinates from the ACTIVE set (multiset)
             draws.clear();
             deltas.clear();
             for _ in 0..p {
-                draws.push(active[rng.below(active.len())]);
+                draws.push(active.draw(&mut rng));
             }
             // parallel phase: all Newton directions + line searches are
             // computed against the same (x, z) snapshot
@@ -89,34 +105,16 @@ impl LogisticSolver for ShotgunCdn {
                 if !f.is_finite() || f > f_diverge {
                     break;
                 }
-                // shrink the active set: zero weights with subgradient slack
-                if self.cdn.use_active_set {
-                    let lam = prob.lam;
-                    let slack = 1.0 - self.cdn.shrink_slack;
-                    let next: Vec<usize> = (0..d)
-                        .filter(|&j| {
-                            x[j] != 0.0 || prob.grad_j(j, &z).abs() >= lam * slack
-                        })
-                        .collect();
-                    if window_max < opts.tol {
-                        if full_window {
-                            outcome_converged = true;
-                            break;
-                        }
-                        active = (0..d).collect();
-                        full_window = true;
-                    } else if !next.is_empty() {
-                        full_window = next.len() == d;
-                        active = next;
-                    } else {
-                        active = (0..d).collect();
-                        full_window = true;
-                    }
-                } else if window_max < opts.tol
-                    && (0..d).all(|k| {
-                        let dir = prob.cdn_direction(k, x[k], &z);
-                        dir.abs() < opts.tol
-                    })
+                // shrink: prune zero weights with subgradient slack
+                if use_active {
+                    active.shrink_pass(&x, thr, |j| prob.grad_j(j, &z));
+                }
+                // convergence: the window must be quiet AND the full
+                // sweep (active + pruned) must confirm; violators are
+                // reactivated so shrinking never changes the optimum
+                if window_max < opts.tol
+                    && active.recheck_full(opts.tol, |k| prob.cdn_direction(k, x[k], &z))
+                        < opts.tol
                 {
                     outcome_converged = true;
                     break;

@@ -7,6 +7,7 @@
 //! collective update `x += sum_j delta_j e_j` and refresh the residual
 //! cache with one axpy per draw. Deterministic given the seed.
 
+use super::schedule::ActiveSet;
 use super::ShotgunConfig;
 use crate::objective::{LassoProblem, LogisticProblem};
 use crate::solvers::common::{Recorder, SolveOptions, SolveResult};
@@ -70,6 +71,80 @@ impl ShotgunExact {
         max_dx
     }
 
+    /// One synchronous round drawn from the scheduler's active set, with
+    /// the batched multiset kernel: the P draws are sorted so duplicates
+    /// are adjacent, each *unique* coordinate's gradient and delta are
+    /// computed once against the same `(x, r)` snapshot (duplicates of
+    /// `j` would compute the identical delta), and the collective update
+    /// applies one combined `count * dx` scatter per unique column. This
+    /// preserves Alg. 2's multiset semantics while deduplicating both
+    /// the gathers and the scatters of colliding draws.
+    ///
+    /// KKT-inactive draws (`dx = 0`, `x_j = 0`, `|g_j|` below `thr`) are
+    /// pruned from the active set on the way through — the scheduler's
+    /// free lazy-shrinking pass. Pass `thr < 0` to disable pruning.
+    ///
+    /// Returns max |dx|; `draws` holds the (deduplicated iff
+    /// `!multiset`) draw multiset afterwards for update accounting.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lasso_round_active(
+        &self,
+        prob: &LassoProblem,
+        active: &mut ActiveSet,
+        x: &mut [f64],
+        r: &mut [f64],
+        rng: &mut Rng,
+        draws: &mut Vec<usize>,
+        deltas: &mut Vec<f64>,
+        thr: f64,
+    ) -> f64 {
+        draws.clear();
+        deltas.clear();
+        for _ in 0..self.config.p {
+            draws.push(active.draw(rng));
+        }
+        draws.sort_unstable();
+        if !self.config.multiset {
+            draws.dedup();
+        }
+        // phase 1: one gradient + delta per unique coordinate, all
+        // against the same (x, r) — synchronous semantics
+        let mut max_dx: f64 = 0.0;
+        let mut k = 0;
+        while k < draws.len() {
+            let j = draws[k];
+            let g = prob.grad_j(j, r);
+            let dx = prob.cd_step_from_g(j, x[j], g);
+            deltas.push(dx);
+            max_dx = max_dx.max(dx.abs());
+            if dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
+                active.prune(j);
+            }
+            while k < draws.len() && draws[k] == j {
+                k += 1;
+            }
+        }
+        // phase 2: combined apply + one scatter per unique column
+        let mut k = 0;
+        let mut u = 0;
+        while k < draws.len() {
+            let j = draws[k];
+            let mut count = 0u32;
+            while k < draws.len() && draws[k] == j {
+                k += 1;
+                count += 1;
+            }
+            let dx = deltas[u];
+            u += 1;
+            if dx != 0.0 {
+                let total = count as f64 * dx;
+                x[j] += total;
+                prob.a.col_axpy(j, total, r);
+            }
+        }
+        max_dx
+    }
+
     pub fn solve_lasso(
         &mut self,
         prob: &LassoProblem,
@@ -85,6 +160,13 @@ impl ShotgunExact {
         rec.record(0, f0, &x, 0.0, true);
         let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
 
+        let shrink = opts.shrink.enabled;
+        let thr = if shrink {
+            opts.shrink.threshold(prob.lam)
+        } else {
+            f64::NEG_INFINITY
+        };
+        let mut active = ActiveSet::full(d);
         let mut draws = Vec::with_capacity(self.config.p);
         let mut deltas = Vec::with_capacity(self.config.p);
         let mut window_max: f64 = 0.0;
@@ -92,8 +174,27 @@ impl ShotgunExact {
         let mut round = 0u64;
         let rounds_per_window = (d as u64 / self.config.p as u64).max(1);
         while !rec.out_of_budget(round) {
+            if active.is_empty() {
+                // everything pruned: full KKT recheck either certifies
+                // the optimum or refills the set with the violators
+                if active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r)) < opts.tol {
+                    outcome = RoundOutcome::Converged;
+                    rec.record(round, prob.objective_from_residual(&r, &x), &x, 0.0, true);
+                    break;
+                }
+                continue;
+            }
             round += 1;
-            let max_dx = self.lasso_round(prob, &mut x, &mut r, &mut rng, &mut draws, &mut deltas);
+            let max_dx = self.lasso_round_active(
+                prob,
+                &mut active,
+                &mut x,
+                &mut r,
+                &mut rng,
+                &mut draws,
+                &mut deltas,
+                thr,
+            );
             rec.updates += draws.len() as u64;
             window_max = window_max.max(max_dx);
             // convergence / divergence checks on a ~d-update cadence
@@ -105,7 +206,7 @@ impl ShotgunExact {
                     break;
                 }
                 if window_max < opts.tol
-                    && (0..d).all(|k| prob.cd_step(k, x[k], &r).abs() < opts.tol)
+                    && active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r)) < opts.tol
                 {
                     outcome = RoundOutcome::Converged;
                     rec.record(round, f, &x, 0.0, true);
@@ -148,6 +249,13 @@ impl ShotgunExact {
         rec.record(0, f0, &x, 0.0, true);
         let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
 
+        let shrink = opts.shrink.enabled;
+        let thr = if shrink {
+            opts.shrink.threshold(prob.lam)
+        } else {
+            f64::NEG_INFINITY
+        };
+        let mut active = ActiveSet::full(d);
         let mut draws: Vec<usize> = Vec::with_capacity(self.config.p);
         let mut deltas: Vec<f64> = Vec::with_capacity(self.config.p);
         let mut window_max: f64 = 0.0;
@@ -155,24 +263,52 @@ impl ShotgunExact {
         let mut round = 0u64;
         let rounds_per_window = (d as u64 / self.config.p as u64).max(1);
         while !rec.out_of_budget(round) {
+            if active.is_empty() {
+                if active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &z)) < opts.tol {
+                    outcome = RoundOutcome::Converged;
+                    break;
+                }
+                continue;
+            }
             round += 1;
             draws.clear();
             deltas.clear();
             for _ in 0..self.config.p {
-                draws.push(rng.below(d));
+                draws.push(active.draw(&mut rng));
             }
+            draws.sort_unstable();
             if !self.config.multiset {
-                draws.sort_unstable();
                 draws.dedup();
             }
+            // batched round: one gradient + delta per unique coordinate
+            // against the same (x, z), then combined multiset applies
             let mut max_dx: f64 = 0.0;
-            for &j in draws.iter() {
-                let dx = prob.cd_step(j, x[j], &z);
+            let mut k = 0;
+            while k < draws.len() {
+                let j = draws[k];
+                let g = prob.grad_j(j, &z);
+                let dx = prob.cd_step_from_g(j, x[j], g);
                 deltas.push(dx);
                 max_dx = max_dx.max(dx.abs());
+                if dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
+                    active.prune(j);
+                }
+                while k < draws.len() && draws[k] == j {
+                    k += 1;
+                }
             }
-            for (&j, &dx) in draws.iter().zip(deltas.iter()) {
-                prob.apply_step(j, dx, &mut x, &mut z);
+            let mut k = 0;
+            let mut u = 0;
+            while k < draws.len() {
+                let j = draws[k];
+                let mut count = 0u32;
+                while k < draws.len() && draws[k] == j {
+                    k += 1;
+                    count += 1;
+                }
+                let dx = deltas[u];
+                u += 1;
+                prob.apply_step(j, count as f64 * dx, &mut x, &mut z);
             }
             rec.updates += draws.len() as u64;
             window_max = window_max.max(max_dx);
@@ -183,7 +319,7 @@ impl ShotgunExact {
                     break;
                 }
                 if window_max < opts.tol
-                    && (0..d).all(|k| prob.cd_step(k, x[k], &z).abs() < opts.tol)
+                    && active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &z)) < opts.tol
                 {
                     outcome = RoundOutcome::Converged;
                     break;

@@ -16,18 +16,22 @@
 //!
 //! [`pstar`] provides the plug-in `P* = ceil(d/rho)` estimate
 //! (Theorem 3.2) via power iteration; [`cdn_round`] is Shotgun CDN for
-//! sparse logistic regression (§4.2.1).
+//! sparse logistic regression (§4.2.1); [`schedule`] is the coordinate
+//! scheduler (active-set shrinking with KKT recheck) every engine and
+//! sequential baseline draws from.
 
 pub mod atomic;
 pub mod beyond_l1;
 pub mod cdn_round;
 pub mod exact;
 pub mod pstar;
+pub mod schedule;
 pub mod threaded;
 
 pub use cdn_round::ShotgunCdn;
 pub use exact::{RoundOutcome, ShotgunExact};
 pub use pstar::PStar;
+pub use schedule::{ActiveSet, SharedActiveSet, ShrinkConfig};
 pub use threaded::ShotgunThreaded;
 
 use crate::objective::{LassoProblem, LogisticProblem};

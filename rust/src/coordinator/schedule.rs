@@ -1,0 +1,359 @@
+//! Coordinate scheduler — the active-set shrinking subsystem shared by
+//! every engine (ShotgunExact, ShotgunThreaded, Shotgun CDN, and the
+//! sequential baselines Shooting and GLMNET).
+//!
+//! The observation (GLMNET/LIBLINEAR shrinking; Scherrer et al.): most
+//! coordinates are KKT-inactive (`x_j = 0` and `|A_j^T r| < lam`) for
+//! most of a run, so drawing updates only from a shrinking *active set*
+//! removes the dominant waste — gathers over columns whose step is
+//! provably zero. Pruning uses a slack margin (`|g_j| < lam(1 - slack)`)
+//! so near-boundary coordinates stay in play, and **every** engine runs
+//! a full-sweep KKT recheck ([`ActiveSet::recheck_full`]) before
+//! declaring convergence, reactivating any violator — so shrinking never
+//! changes the returned optimum (property-tested in
+//! `tests/proptests.rs`).
+//!
+//! [`SharedActiveSet`] is the lock-free-read flavor for the threaded
+//! engine: the monitor thread publishes new sets, workers poll one
+//! relaxed atomic epoch per update and re-snapshot only when it moves.
+
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shrinking policy, carried in `SolveOptions` so every solver sees the
+/// same knob (apples-to-apples comparisons toggle just this).
+#[derive(Clone, Copy, Debug)]
+pub struct ShrinkConfig {
+    /// Master switch. Off = every engine keeps its full coordinate set
+    /// (the pre-scheduler behavior).
+    pub enabled: bool,
+    /// Prune margin: a zero coordinate is pruned when
+    /// `|g_j| < lam * (1 - slack)`. Larger slack prunes less eagerly.
+    pub slack: f64,
+}
+
+impl Default for ShrinkConfig {
+    fn default() -> Self {
+        ShrinkConfig {
+            enabled: true,
+            slack: 0.01,
+        }
+    }
+}
+
+impl ShrinkConfig {
+    pub fn disabled() -> Self {
+        ShrinkConfig {
+            enabled: false,
+            ..Default::default()
+        }
+    }
+
+    /// The prune threshold for a given lambda: a zero coordinate whose
+    /// `|g_j|` is below this is KKT-inactive with margin.
+    #[inline]
+    pub fn threshold(&self, lam: f64) -> f64 {
+        lam * (1.0 - self.slack)
+    }
+}
+
+/// Sentinel in `pos` marking a pruned coordinate.
+const PRUNED: u32 = u32::MAX;
+
+/// The active coordinate set: O(1) draw, prune, and reactivate via the
+/// classic swap-remove + position-index scheme.
+#[derive(Clone, Debug)]
+pub struct ActiveSet {
+    d: usize,
+    /// Current active coordinate ids (unordered).
+    active: Vec<u32>,
+    /// `pos[j]` = index of `j` in `active`, or [`PRUNED`].
+    pos: Vec<u32>,
+}
+
+impl ActiveSet {
+    /// All `d` coordinates active.
+    pub fn full(d: usize) -> Self {
+        assert!(d < PRUNED as usize, "dimension too large for u32 ids");
+        ActiveSet {
+            d,
+            active: (0..d as u32).collect(),
+            pos: (0..d as u32).collect(),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.active.len() == self.d
+    }
+
+    #[inline]
+    pub fn contains(&self, j: usize) -> bool {
+        self.pos[j] != PRUNED
+    }
+
+    /// The `i`-th active coordinate (arbitrary but stable between
+    /// mutations).
+    #[inline]
+    pub fn get(&self, i: usize) -> usize {
+        self.active[i] as usize
+    }
+
+    /// Ids of the active coordinates (unordered).
+    pub fn as_slice(&self) -> &[u32] {
+        &self.active
+    }
+
+    /// Uniform draw from the active set. Panics when empty (engines
+    /// recheck/refill before drawing).
+    #[inline]
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        self.active[rng.below(self.active.len())] as usize
+    }
+
+    /// Remove `j`; returns false if it was already pruned.
+    pub fn prune(&mut self, j: usize) -> bool {
+        let p = self.pos[j];
+        if p == PRUNED {
+            return false;
+        }
+        let last = *self.active.last().unwrap();
+        self.active.swap_remove(p as usize);
+        if (p as usize) < self.active.len() {
+            self.pos[last as usize] = p;
+        }
+        self.pos[j] = PRUNED;
+        true
+    }
+
+    /// Remove the active entry at position `i` (sweep-style pruning:
+    /// callers iterating positions prune without advancing `i`).
+    pub fn prune_at(&mut self, i: usize) {
+        let j = self.active[i] as usize;
+        let last = *self.active.last().unwrap();
+        self.active.swap_remove(i);
+        if i < self.active.len() {
+            self.pos[last as usize] = i as u32;
+        }
+        self.pos[j] = PRUNED;
+    }
+
+    /// Put `j` back; returns false if it was already active.
+    pub fn reactivate(&mut self, j: usize) -> bool {
+        if self.pos[j] != PRUNED {
+            return false;
+        }
+        self.pos[j] = self.active.len() as u32;
+        self.active.push(j as u32);
+        true
+    }
+
+    /// One shrinking pass over the current active set: prunes every `j`
+    /// with `x[j] == 0` and `|grad(j)| < threshold`. Returns the number
+    /// pruned.
+    pub fn shrink_pass(
+        &mut self,
+        x: &[f64],
+        threshold: f64,
+        mut grad: impl FnMut(usize) -> f64,
+    ) -> usize {
+        let mut i = 0;
+        let mut pruned = 0;
+        while i < self.active.len() {
+            let j = self.active[i] as usize;
+            if x[j] == 0.0 && grad(j).abs() < threshold {
+                self.prune_at(i);
+                pruned += 1;
+            } else {
+                i += 1;
+            }
+        }
+        pruned
+    }
+
+    /// Full-sweep KKT recheck before declaring convergence: evaluates
+    /// `|step(j)|` for **every** coordinate (active and pruned) and
+    /// reactivates each pruned violator (`|step| >= tol`). Returns the
+    /// worst step magnitude — the caller converges iff it is `< tol`,
+    /// which makes shrinking invisible to the returned optimum.
+    pub fn recheck_full(&mut self, tol: f64, mut step: impl FnMut(usize) -> f64) -> f64 {
+        let mut worst = 0.0f64;
+        for j in 0..self.d {
+            let s = step(j).abs();
+            worst = worst.max(s);
+            if s >= tol {
+                self.reactivate(j);
+            }
+        }
+        worst
+    }
+}
+
+/// Epoch-published active set for the asynchronous threaded engine. The
+/// monitor thread [`publish`](Self::publish)es rebuilt sets; each worker
+/// polls [`epoch_relaxed`](Self::epoch_relaxed) (one relaxed atomic load
+/// per update) and takes a fresh [`snapshot`](Self::snapshot) only when
+/// the counter moved, so the common path never touches the lock.
+pub struct SharedActiveSet {
+    epoch: AtomicU64,
+    set: Mutex<Arc<Vec<u32>>>,
+}
+
+impl SharedActiveSet {
+    /// All `d` coordinates active at epoch 0.
+    pub fn full(d: usize) -> Self {
+        SharedActiveSet {
+            epoch: AtomicU64::new(0),
+            set: Mutex::new(Arc::new((0..d as u32).collect())),
+        }
+    }
+
+    /// Current epoch (worker polling; relaxed is fine — a stale read
+    /// just delays the refresh by one update).
+    #[inline]
+    pub fn epoch_relaxed(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Replace the active set and bump the epoch. Callers must never
+    /// publish an empty set (workers would have nothing to draw).
+    pub fn publish(&self, active: Vec<u32>) {
+        assert!(!active.is_empty(), "published active set must be non-empty");
+        *self.set.lock().unwrap() = Arc::new(active);
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// (epoch, set) pair. The set may be newer than the epoch when a
+    /// publish races the read — workers then refresh once more on the
+    /// next poll, which is harmless.
+    pub fn snapshot(&self) -> (u64, Arc<Vec<u32>>) {
+        let e = self.epoch.load(Ordering::Acquire);
+        (e, self.set.lock().unwrap().clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_set_roundtrip() {
+        let s = ActiveSet::full(5);
+        assert_eq!(s.len(), 5);
+        assert!(s.is_full() && !s.is_empty());
+        for j in 0..5 {
+            assert!(s.contains(j));
+        }
+    }
+
+    #[test]
+    fn prune_and_reactivate() {
+        let mut s = ActiveSet::full(6);
+        assert!(s.prune(2));
+        assert!(!s.prune(2), "double prune must be a no-op");
+        assert!(!s.contains(2));
+        assert_eq!(s.len(), 5);
+        // every remaining id still resolvable through get()
+        let mut seen: Vec<usize> = (0..s.len()).map(|i| s.get(i)).collect();
+        seen.sort();
+        assert_eq!(seen, vec![0, 1, 3, 4, 5]);
+        assert!(s.reactivate(2));
+        assert!(!s.reactivate(2));
+        assert!(s.contains(2));
+        assert_eq!(s.len(), 6);
+    }
+
+    #[test]
+    fn prune_at_matches_prune() {
+        let mut s = ActiveSet::full(4);
+        let j = s.get(1);
+        s.prune_at(1);
+        assert!(!s.contains(j));
+        assert_eq!(s.len(), 3);
+        // position index stays consistent after the swap
+        for i in 0..s.len() {
+            let k = s.get(i);
+            assert!(s.contains(k));
+        }
+    }
+
+    #[test]
+    fn prune_everything_then_refill() {
+        let mut s = ActiveSet::full(3);
+        for j in 0..3 {
+            s.prune(j);
+        }
+        assert!(s.is_empty());
+        let worst = s.recheck_full(1e-6, |j| if j == 1 { 1.0 } else { 0.0 });
+        assert_eq!(worst, 1.0);
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(1));
+    }
+
+    #[test]
+    fn shrink_pass_prunes_inactive_zeros() {
+        let mut s = ActiveSet::full(4);
+        let x = [0.0, 1.0, 0.0, 0.0];
+        // grads: 0 and 2 below threshold, 3 above
+        let g = [0.1, 0.0, 0.2, 0.9];
+        let pruned = s.shrink_pass(&x, 0.5, |j| g[j]);
+        assert_eq!(pruned, 2);
+        assert!(!s.contains(0) && !s.contains(2));
+        assert!(s.contains(1), "non-zero weight must survive");
+        assert!(s.contains(3), "large gradient must survive");
+    }
+
+    #[test]
+    fn draws_cover_active_only() {
+        let mut s = ActiveSet::full(10);
+        for j in [0usize, 3, 7] {
+            s.prune(j);
+        }
+        let mut rng = Rng::new(5);
+        for _ in 0..1000 {
+            let j = s.draw(&mut rng);
+            assert!(s.contains(j), "drew pruned coordinate {j}");
+        }
+    }
+
+    #[test]
+    fn shared_set_epochs() {
+        let s = SharedActiveSet::full(4);
+        let (e0, a0) = s.snapshot();
+        assert_eq!(e0, 0);
+        assert_eq!(a0.len(), 4);
+        s.publish(vec![1, 3]);
+        assert_eq!(s.epoch_relaxed(), 1);
+        let (e1, a1) = s.snapshot();
+        assert_eq!(e1, 1);
+        assert_eq!(&*a1, &[1, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn shared_set_rejects_empty_publish() {
+        SharedActiveSet::full(2).publish(Vec::new());
+    }
+
+    #[test]
+    fn threshold_margin() {
+        let c = ShrinkConfig {
+            enabled: true,
+            slack: 0.1,
+        };
+        assert!((c.threshold(2.0) - 1.8).abs() < 1e-12);
+        assert!(!ShrinkConfig::disabled().enabled);
+    }
+}

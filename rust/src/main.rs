@@ -296,6 +296,7 @@ fn cmd_info() {
     } else {
         println!("artifacts: not built (run `make artifacts`)");
     }
+    #[cfg(feature = "xla")]
     match xla::PjRtClient::cpu() {
         Ok(c) => println!(
             "PJRT: platform {} with {} device(s)",
@@ -304,6 +305,8 @@ fn cmd_info() {
         ),
         Err(e) => println!("PJRT: unavailable ({e})"),
     }
+    #[cfg(not(feature = "xla"))]
+    println!("PJRT: not compiled in (build with --features xla)");
 }
 
 fn main() {

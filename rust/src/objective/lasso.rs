@@ -2,20 +2,41 @@
 
 use crate::sparsela::{vecops, Design};
 
+/// Floor for the per-coordinate curvature so empty/zero columns cannot
+/// divide by zero (an empty column's optimal weight is 0 and the floored
+/// step drives it there).
+const MIN_BETA: f64 = 1e-12;
+
 /// A Lasso instance: `min 1/2 ||Ax - y||^2 + lam ||x||_1`.
 ///
-/// Owns nothing heavy: borrows the design and targets. The residual
-/// `r = Ax - y` is carried by the solver and refreshed incrementally.
+/// Owns almost nothing heavy: borrows the design and targets, and
+/// precomputes the per-column metadata cache `col_sq[j] = ||A_j||^2`
+/// (one O(nnz) pass) so coordinate steps use the exact per-coordinate
+/// curvature instead of assuming unit-normalized columns
+/// (`BETA_SQUARED`). The residual `r = Ax - y` is carried by the solver
+/// and refreshed incrementally.
 pub struct LassoProblem<'a> {
     pub a: &'a Design,
     pub y: &'a [f64],
     pub lam: f64,
+    /// `||A_j||^2` per column — the coordinate Lipschitz constants of
+    /// the smooth part (paper Eq. 6 generalized to unnormalized designs).
+    pub col_sq: Vec<f64>,
 }
 
 impl<'a> LassoProblem<'a> {
     pub fn new(a: &'a Design, y: &'a [f64], lam: f64) -> Self {
         assert_eq!(a.n(), y.len(), "targets length != n");
-        LassoProblem { a, y, lam }
+        let col_sq = a.col_norms_sq();
+        LassoProblem { a, y, lam, col_sq }
+    }
+
+    /// Per-coordinate step-size curvature: `beta_j = ||A_j||^2` for the
+    /// squared loss (equals the paper's `beta = 1` on column-normalized
+    /// designs), floored by [`MIN_BETA`].
+    #[inline]
+    pub fn beta_j(&self, j: usize) -> f64 {
+        (crate::BETA_SQUARED * self.col_sq[j]).max(MIN_BETA)
     }
 
     pub fn n(&self) -> usize {
@@ -60,11 +81,18 @@ impl<'a> LassoProblem<'a> {
         g
     }
 
-    /// Coordinate step (Eq. 5 folded to signed coordinates): returns `dx`
-    /// and leaves cache refresh to the caller.
+    /// Coordinate step (Eq. 5 folded to signed coordinates, per-column
+    /// curvature): returns `dx` and leaves cache refresh to the caller.
     #[inline]
     pub fn cd_step(&self, j: usize, x_j: f64, r: &[f64]) -> f64 {
-        vecops::cd_step(x_j, self.grad_j(j, r), self.lam, crate::BETA_SQUARED)
+        self.cd_step_from_g(j, x_j, self.grad_j(j, r))
+    }
+
+    /// Coordinate step from an already-computed gradient `g_j` (the
+    /// covariance-mode and fused-kernel entry point).
+    #[inline]
+    pub fn cd_step_from_g(&self, j: usize, x_j: f64, g: f64) -> f64 {
+        vecops::cd_step(x_j, g, self.lam, self.beta_j(j))
     }
 
     /// Apply `x_j += dx` maintaining `r`.
@@ -74,6 +102,24 @@ impl<'a> LassoProblem<'a> {
             x[j] += dx;
             self.a.col_axpy(j, dx, r);
         }
+    }
+
+    /// Fused coordinate update — gather, step, and conditional scatter
+    /// in one column walk ([`Design::col_dot_axpy`]). Equivalent to
+    /// [`cd_step`](Self::cd_step) + [`apply_step`](Self::apply_step)
+    /// bit-for-bit; returns `(g_j, dx)`.
+    #[inline]
+    pub fn cd_update(&self, j: usize, x: &mut [f64], r: &mut [f64]) -> (f64, f64) {
+        let x_j = x[j];
+        let lam = self.lam;
+        let beta = self.beta_j(j);
+        let (g, dx) = self
+            .a
+            .col_dot_axpy(j, r, |g| vecops::cd_step(x_j, g, lam, beta));
+        if dx != 0.0 {
+            x[j] += dx;
+        }
+        (g, dx)
     }
 
     /// Largest lambda with a non-trivial solution:
@@ -172,6 +218,54 @@ mod tests {
             let f2 = p.objective_from_residual(&r, &x);
             assert!(f2 <= f + 1e-12, "coordinate step must never increase F");
             f = f2;
+        }
+    }
+
+    #[test]
+    fn per_column_steps_descend_on_unnormalized_design() {
+        // columns scaled by widely different factors: the per-column
+        // curvature cache must keep every coordinate step a descent step
+        // (the global BETA_SQUARED=1 assumption overshoots on columns
+        // with norm > 1 and diverges)
+        let mut rng = Rng::new(21);
+        let m = DenseMatrix::from_fn(20, 6, |_, j| rng.normal() * (j as f64 + 0.25));
+        let a = Design::Dense(m);
+        let y: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        let p = LassoProblem::new(&a, &y, 0.3);
+        for j in 0..6 {
+            assert!((p.col_sq[j] - a.col_norm_sq(j)).abs() < 1e-12);
+        }
+        let mut x = vec![0.0; 6];
+        let mut r = p.residual(&x);
+        let mut f = p.objective_from_residual(&r, &x);
+        for t in 0..900 {
+            let j = t % 6;
+            let dx = p.cd_step(j, x[j], &r);
+            p.apply_step(j, dx, &mut x, &mut r);
+            let f2 = p.objective_from_residual(&r, &x);
+            assert!(f2 <= f + 1e-12, "step {t} increased F: {f} -> {f2}");
+            f = f2;
+        }
+        assert!(p.kkt_violation(&x, &r) < 1e-6, "kkt {}", p.kkt_violation(&x, &r));
+    }
+
+    #[test]
+    fn fused_update_matches_split_path() {
+        let (a, y) = problem(13);
+        let p = LassoProblem::new(&a, &y, 0.2);
+        let mut x1 = vec![0.0; 8];
+        let mut r1 = p.residual(&x1);
+        let mut x2 = x1.clone();
+        let mut r2 = r1.clone();
+        for j in [0usize, 5, 2, 5, 7, 1] {
+            let (_, dx1) = p.cd_update(j, &mut x1, &mut r1);
+            let dx2 = p.cd_step(j, x2[j], &r2);
+            p.apply_step(j, dx2, &mut x2, &mut r2);
+            assert_eq!(dx1.to_bits(), dx2.to_bits());
+        }
+        assert_eq!(x1, x2);
+        for (u, v) in r1.iter().zip(&r2) {
+            assert_eq!(u.to_bits(), v.to_bits());
         }
     }
 

@@ -4,19 +4,35 @@
 use super::{log1p_exp_neg, sigma_neg};
 use crate::sparsela::{vecops, Design};
 
+/// Curvature floor shared with the Lasso objective (see
+/// `lasso::MIN_BETA`): keeps empty columns from dividing by zero.
+const MIN_BETA: f64 = 1e-12;
+
 /// A sparse-logistic instance:
 /// `min sum_i log(1 + exp(-y_i a_i^T x)) + lam ||x||_1`, y in {-1, +1}.
 pub struct LogisticProblem<'a> {
     pub a: &'a Design,
     pub y: &'a [f64],
     pub lam: f64,
+    /// `||A_j||^2` per column (precomputed once): the logistic
+    /// coordinate curvature bound is `beta_j = ||A_j||^2 / 4`, which
+    /// recovers the paper's `beta = 1/4` on normalized designs.
+    pub col_sq: Vec<f64>,
 }
 
 impl<'a> LogisticProblem<'a> {
     pub fn new(a: &'a Design, y: &'a [f64], lam: f64) -> Self {
         assert_eq!(a.n(), y.len(), "labels length != n");
         debug_assert!(y.iter().all(|&v| v == 1.0 || v == -1.0), "labels must be ±1");
-        LogisticProblem { a, y, lam }
+        let col_sq = a.col_norms_sq();
+        LogisticProblem { a, y, lam, col_sq }
+    }
+
+    /// Per-coordinate curvature bound `beta_j = ||A_j||^2 / 4`
+    /// (`sigma(1-sigma) <= 1/4` pointwise), floored by [`MIN_BETA`].
+    #[inline]
+    pub fn beta_j(&self, j: usize) -> f64 {
+        (crate::BETA_LOGISTIC * self.col_sq[j]).max(MIN_BETA)
     }
 
     pub fn n(&self) -> usize {
@@ -109,10 +125,18 @@ impl<'a> LogisticProblem<'a> {
         g
     }
 
-    /// Fixed-step Shotgun update (Eq. 5 with beta = 1/4).
+    /// Fixed-step Shotgun update (Eq. 5 with the per-column curvature
+    /// bound `beta_j = ||A_j||^2 / 4`).
     #[inline]
     pub fn cd_step(&self, j: usize, x_j: f64, z: &[f64]) -> f64 {
-        vecops::cd_step(x_j, self.grad_j(j, z), self.lam, crate::BETA_LOGISTIC)
+        self.cd_step_from_g(j, x_j, self.grad_j(j, z))
+    }
+
+    /// Coordinate step from an already-computed gradient `g_j` (callers
+    /// that also need `g_j` for scheduling avoid a second column walk).
+    #[inline]
+    pub fn cd_step_from_g(&self, j: usize, x_j: f64, g: f64) -> f64 {
+        vecops::cd_step(x_j, g, self.lam, self.beta_j(j))
     }
 
     /// Apply `x_j += dx` maintaining the margin cache `z += dx A_j`.

@@ -2,8 +2,9 @@
 //! `artifacts/manifest.json` describing every lowered entrypoint (file,
 //! shapes, dtypes, profile); the runtime never hardcodes shapes.
 
+use crate::anyhow;
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
+use crate::util::err::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 

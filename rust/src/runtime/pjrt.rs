@@ -1,0 +1,186 @@
+//! The PJRT client plumbing (feature `xla` only): compiled-artifact
+//! cache over one CPU client plus the host<->device literal helpers.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+use super::Manifest;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact cache over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (reads `manifest.json`, creates the CPU client).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache the executable for `entry`/`profile`.
+    pub fn get(&mut self, entry: &str, profile: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = format!("{entry}.{profile}");
+        if !self.compiled.contains_key(&key) {
+            let spec = self
+                .manifest
+                .find(entry, profile)
+                .with_context(|| format!("artifact {key} not in manifest"))?;
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {key}"))?;
+            self.compiled.insert(key.clone(), exe);
+        }
+        Ok(&self.compiled[&key])
+    }
+
+    /// Execute an entry with literal inputs; returns the output tuple
+    /// elements (AOT lowers with `return_tuple=True`).
+    pub fn call(
+        &mut self,
+        entry: &str,
+        profile: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.get(entry, profile)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {entry}.{profile}"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Stage host data as a device buffer (upload once, reuse across
+    /// calls — the §Perf fix for re-uploading the design matrix on every
+    /// dispatch).
+    pub fn to_device_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn to_device_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute with device buffers (no host->device copies of staged
+    /// arguments); returns the output tuple elements as literals.
+    pub fn call_b(
+        &mut self,
+        entry: &str,
+        profile: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.get(entry, profile)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("execute_b {entry}.{profile}"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// f32 vector -> rank-1 literal.
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 matrix (row-major) -> rank-2 literal.
+pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// i32 vector -> rank-1 literal.
+pub fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// 2-D i32 (row-major) literal.
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_fails_cleanly() {
+        let err = match Runtime::open(Path::new("/nonexistent/artifacts")) {
+            Err(e) => e,
+            Ok(_) => panic!("open should fail"),
+        };
+        assert!(err.to_string().contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn open_bad_manifest_fails_cleanly() {
+        let dir = std::env::temp_dir().join("shotgun_bad_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(Runtime::open(&dir).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn unknown_entry_rejected() {
+        // only meaningful when artifacts exist
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let mut rt = Runtime::open(dir).unwrap();
+        assert!(rt.get("no_such_entry", "s").is_err());
+        assert!(rt.get("lasso_round", "no_such_profile").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_file_reported() {
+        let dir = std::env::temp_dir().join("shotgun_missing_artifact");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"profiles": {"s": {"n": 4, "d": 4, "p": 1, "k": 1, "power_steps": 1}},
+                "artifacts": [{"entry": "lasso_round", "profile": "s",
+                               "file": "does_not_exist.hlo.txt", "args": []}]}"#,
+        )
+        .unwrap();
+        let mut rt = Runtime::open(&dir).unwrap();
+        let err = match rt.get("lasso_round", "s") {
+            Err(e) => e,
+            Ok(_) => panic!("get should fail"),
+        };
+        assert!(err.to_string().contains("does_not_exist"), "{err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,52 @@
+//! Stub engine compiled when the `xla` feature is off (the default in
+//! the dependency-free build): same API surface as
+//! [`super::xla_engine::XlaLassoEngine`], every entry point reporting
+//! that the PJRT backend is unavailable. Callers that probe with
+//! `open(...)` (the e2e example, the benches) degrade gracefully.
+
+use crate::anyhow;
+use crate::objective::LassoProblem;
+use crate::solvers::common::{SolveOptions, SolveResult};
+use crate::util::err::Result;
+use std::path::Path;
+
+pub struct XlaLassoEngine {
+    _private: (),
+}
+
+impl XlaLassoEngine {
+    pub fn open(_artifacts_dir: &Path, _profile: &str) -> Result<XlaLassoEngine> {
+        Err(anyhow!(
+            "XLA runtime not built: compile with `--features xla` (needs the \
+             external `xla` + `anyhow` crates; see rust/Cargo.toml)"
+        ))
+    }
+
+    pub fn profile_shape(&self) -> (usize, usize, usize, usize) {
+        unreachable!("stub engine cannot be constructed")
+    }
+
+    pub fn solve_lasso(
+        &mut self,
+        _prob: &LassoProblem,
+        _x0: &[f64],
+        _opts: &SolveOptions,
+    ) -> Result<SolveResult> {
+        unreachable!("stub engine cannot be constructed")
+    }
+
+    pub fn power_iter_rho(&mut self, _prob: &LassoProblem) -> Result<f64> {
+        unreachable!("stub engine cannot be constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_reports_feature_gate() {
+        let err = XlaLassoEngine::open(Path::new("artifacts"), "s").unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+}

@@ -1,5 +1,6 @@
 //! Shared solver interfaces, options, and trace recording.
 
+use crate::coordinator::schedule::ShrinkConfig;
 use crate::metrics::{Stopwatch, Trace, TracePoint};
 use crate::objective::{LassoProblem, LogisticProblem};
 use crate::sparsela::{vecops, Design};
@@ -21,6 +22,11 @@ pub struct SolveOptions {
     /// Optional auxiliary evaluation (e.g. held-out error) recorded into
     /// `TracePoint::aux` at each trace point.
     pub aux_every_record: bool,
+    /// Active-set shrinking policy (the coordinate scheduler,
+    /// `coordinator::schedule`). On by default; a full-sweep KKT recheck
+    /// before convergence keeps the returned optimum identical either
+    /// way.
+    pub shrink: ShrinkConfig,
 }
 
 impl Default for SolveOptions {
@@ -32,6 +38,7 @@ impl Default for SolveOptions {
             record_every: 16,
             seed: 1,
             aux_every_record: false,
+            shrink: ShrinkConfig::default(),
         }
     }
 }

@@ -12,8 +12,8 @@
 //! set with full-sweep confirmation.
 
 use super::common::{LassoSolver, Recorder, SolveOptions, SolveResult};
+use crate::coordinator::schedule::ActiveSet;
 use crate::objective::LassoProblem;
-use crate::sparsela::vecops;
 use std::collections::HashMap;
 
 pub struct Glmnet {
@@ -70,7 +70,14 @@ impl LassoSolver for Glmnet {
             })
         };
 
-        let mut active: Vec<usize> = (0..d).filter(|&j| x[j] != 0.0).collect();
+        // `support` feeds the covariance sums and the inner cyclic
+        // sweeps; `sched` is the coordinate scheduler restricting the
+        // outer sweep (KKT-inactive zeros are pruned as the sweep walks,
+        // and a genuine full-d recheck guards convergence)
+        let mut support: Vec<usize> = (0..d).filter(|&j| x[j] != 0.0).collect();
+        let shrink = opts.shrink.enabled;
+        let thr = opts.shrink.threshold(prob.lam);
+        let mut sched = ActiveSet::full(d);
         let mut converged = false;
         let mut sweep = 0u64;
         loop {
@@ -78,49 +85,74 @@ impl LassoSolver for Glmnet {
             if rec.out_of_budget(sweep) {
                 break;
             }
-            // --- full sweep to (re)build the active set ---
+            // --- outer sweep over the scheduler's candidate set ---
             let mut full_max: f64 = 0.0;
-            for j in 0..d {
-                let dx = if use_cov {
+            let mut i = 0;
+            while i < sched.len() {
+                let j = sched.get(i);
+                let (g, dx) = if use_cov {
                     // g_j = A_j^T r = A_j^T A x - c_j = sum_k G_jk x_k - c_j
                     let mut ax_j = -c[j];
-                    for &k in active.iter() {
+                    for &k in support.iter() {
                         if x[k] != 0.0 {
                             ax_j += gram_of(j, k, &mut gram_col_cache) * x[k];
                         }
                     }
-                    // (active always covers support(x): x0's support seeds
-                    // it and every non-zero update inserts its coordinate)
-                    vecops::cd_step(x[j], ax_j, prob.lam, crate::BETA_SQUARED)
+                    // (support always covers support(x): x0's support
+                    // seeds it and every non-zero update inserts its
+                    // coordinate)
+                    (ax_j, prob.cd_step_from_g(j, x[j], ax_j))
                 } else {
-                    prob.cd_step(j, x[j], &r)
+                    let g = prob.grad_j(j, &r);
+                    (g, prob.cd_step_from_g(j, x[j], g))
                 };
                 if dx != 0.0 {
                     prob.apply_step(j, dx, &mut x, &mut r);
                     rec.updates += 1;
-                    if !active.contains(&j) {
-                        active.push(j);
+                    if !support.contains(&j) {
+                        support.push(j);
                     }
                 }
                 full_max = full_max.max(dx.abs());
+                if shrink && dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
+                    sched.prune_at(i);
+                } else {
+                    i += 1;
+                }
             }
             if full_max < opts.tol {
-                converged = true;
-                break;
+                if sched.is_full() {
+                    converged = true;
+                    break;
+                }
+                // the sweep only covered the candidate set: confirm over
+                // all d (reactivating violators) before declaring done.
+                // Always via the residual — going through gram_of here
+                // would populate up to d * |support| Gram entries (O(n)
+                // each), the exact O(d^2) blow-up this solver documents;
+                // one exact residual refresh is O(nnz) total.
+                if use_cov {
+                    r = prob.residual(&x);
+                }
+                let worst = sched.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r));
+                if worst < opts.tol {
+                    converged = true;
+                    break;
+                }
             }
-            // --- inner cyclic sweeps over the active set until stable ---
+            // --- inner cyclic sweeps over the support until stable ---
             for _ in 0..100 {
                 let mut inner_max: f64 = 0.0;
-                for idx in 0..active.len() {
-                    let j = active[idx];
+                for idx in 0..support.len() {
+                    let j = support[idx];
                     let dx = if use_cov {
                         let mut ax_j = -c[j];
-                        for &k in active.iter() {
+                        for &k in support.iter() {
                             if x[k] != 0.0 {
                                 ax_j += gram_of(j, k, &mut gram_col_cache) * x[k];
                             }
                         }
-                        vecops::cd_step(x[j], ax_j, prob.lam, crate::BETA_SQUARED)
+                        prob.cd_step_from_g(j, x[j], ax_j)
                     } else {
                         prob.cd_step(j, x[j], &r)
                     };
@@ -137,8 +169,8 @@ impl LassoSolver for Glmnet {
                     break;
                 }
             }
-            // drop zeros from the active set
-            active.retain(|&j| x[j] != 0.0);
+            // drop zeros from the support
+            support.retain(|&j| x[j] != 0.0);
             if sweep % opts.record_every.max(1) == 0 {
                 // covariance mode can drift r; refresh before recording
                 if use_cov {

@@ -3,11 +3,13 @@
 //! that Shotgun generalizes; Theorem 2.1 gives its convergence rate.
 
 use super::common::{LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
+use crate::coordinator::schedule::ActiveSet;
 use crate::objective::{LassoProblem, LogisticProblem};
 use crate::util::rng::Rng;
 
-/// Sequential SCD. One uniformly-random coordinate per update; the
-/// `Ax`-cache makes each update O(nnz of the column).
+/// Sequential SCD. One uniformly-random coordinate per update drawn
+/// from the scheduler's active set; the `Ax`-cache plus the fused
+/// column kernel make each update one O(nnz_j) column walk.
 #[derive(Default)]
 pub struct Shooting;
 
@@ -29,22 +31,41 @@ impl LassoSolver for Shooting {
         let mut rec = Recorder::new(opts);
         rec.record(0, prob.objective_from_residual(&r, &x), &x, 0.0, true);
 
+        let shrink = opts.shrink.enabled;
+        let thr = opts.shrink.threshold(prob.lam);
+        let mut active = ActiveSet::full(d);
+
         // convergence window: max |dx| over the last d updates
         let mut window_max: f64 = 0.0;
         let mut converged = false;
         let mut iter = 0u64;
         while !rec.out_of_budget(iter) {
+            if active.is_empty() {
+                // everything pruned: the full KKT sweep either certifies
+                // the optimum or refills the set with the violators
+                if active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r)) < opts.tol {
+                    converged = true;
+                    rec.record(iter, prob.objective_from_residual(&r, &x), &x, 0.0, true);
+                    break;
+                }
+                continue;
+            }
             iter += 1;
-            let j = rng.below(d);
-            let dx = prob.cd_step(j, x[j], &r);
-            prob.apply_step(j, dx, &mut x, &mut r);
+            let j = active.draw(&mut rng);
+            // fused gather -> step -> scatter: one column walk per update
+            let (g, dx) = prob.cd_update(j, &mut x, &mut r);
             rec.updates += 1;
             window_max = window_max.max(dx.abs());
+            if shrink && dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
+                active.prune(j);
+            }
             if iter % d as u64 == 0 {
                 // the random window can miss coordinates; confirm with a
                 // full deterministic KKT-style pass before declaring done
+                // (reactivates any pruned violator, so shrinking cannot
+                // change the optimum)
                 if window_max < opts.tol
-                    && (0..d).all(|k| prob.cd_step(k, x[k], &r).abs() < opts.tol)
+                    && active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r)) < opts.tol
                 {
                     converged = true;
                     rec.record(iter, prob.objective_from_residual(&r, &x), &x, 0.0, true);
@@ -81,19 +102,34 @@ impl LogisticSolver for Shooting {
         let mut rec = Recorder::new(opts);
         rec.record(0, prob.objective_from_margins(&z, &x), &x, 0.0, true);
 
+        let shrink = opts.shrink.enabled;
+        let thr = opts.shrink.threshold(prob.lam);
+        let mut active = ActiveSet::full(d);
+
         let mut window_max: f64 = 0.0;
         let mut converged = false;
         let mut iter = 0u64;
         while !rec.out_of_budget(iter) {
+            if active.is_empty() {
+                if active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &z)) < opts.tol {
+                    converged = true;
+                    break;
+                }
+                continue;
+            }
             iter += 1;
-            let j = rng.below(d);
-            let dx = prob.cd_step(j, x[j], &z);
+            let j = active.draw(&mut rng);
+            let g = prob.grad_j(j, &z);
+            let dx = prob.cd_step_from_g(j, x[j], g);
             prob.apply_step(j, dx, &mut x, &mut z);
             rec.updates += 1;
             window_max = window_max.max(dx.abs());
+            if shrink && dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
+                active.prune(j);
+            }
             if iter % d as u64 == 0 {
                 if window_max < opts.tol
-                    && (0..d).all(|k| prob.cd_step(k, x[k], &z).abs() < opts.tol)
+                    && active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &z)) < opts.tol
                 {
                     converged = true;
                     break;

@@ -5,6 +5,39 @@
 
 use super::vecops;
 
+/// 4-accumulator unrolled sparse gather: `sum_k val[k] * r[idx[k]]`.
+/// Independent accumulators break the FP-add dependency chain while the
+/// loads are in flight (the gather is DRAM-latency bound; EXPERIMENTS.md
+/// §Perf). Shared by [`CscMatrix::col_dot`] and
+/// [`CscMatrix::col_dot_axpy`] so the fused kernel is bit-for-bit
+/// identical to the two-call path.
+#[inline]
+fn gather(idx: &[u32], val: &[f64], r: &[f64]) -> f64 {
+    let ci = idx.chunks_exact(4);
+    let cv = val.chunks_exact(4);
+    let (ri, rv) = (ci.remainder(), cv.remainder());
+    let mut acc = [0.0f64; 4];
+    for (pi, pv) in ci.zip(cv) {
+        for k in 0..4 {
+            acc[k] += pv[k] * r[pi[k] as usize];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (&i, &v) in ri.iter().zip(rv) {
+        s += v * r[i as usize];
+    }
+    s
+}
+
+/// Sparse scatter `r[idx[k]] += s * val[k]` (shared by
+/// [`CscMatrix::col_axpy`] and [`CscMatrix::col_dot_axpy`]).
+#[inline]
+fn scatter(idx: &[u32], val: &[f64], s: f64, r: &mut [f64]) {
+    for (&i, &v) in idx.iter().zip(val) {
+        r[i as usize] += s * v;
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct CscMatrix {
     pub n: usize,
@@ -18,38 +51,72 @@ pub struct CscMatrix {
 
 impl CscMatrix {
     /// Build from (row, col, value) triplets; duplicates are summed.
+    ///
+    /// Counting-sort construction (two passes over the triplets, then a
+    /// per-column row sort): the dataset-load hot path for the large
+    /// text workloads. The old `Vec<Vec<(usize, f64)>>` build allocated
+    /// `d` vectors and copied every entry twice more.
     pub fn from_triplets(n: usize, d: usize, triplets: &[(usize, usize, f64)]) -> Self {
-        let mut per_col: Vec<Vec<(usize, f64)>> = vec![Vec::new(); d];
-        for &(i, j, v) in triplets {
+        // pass 1: count entries per column, prefix-sum into offsets
+        let mut indptr = vec![0usize; d + 1];
+        for &(i, j, _) in triplets {
             assert!(i < n && j < d, "triplet ({i},{j}) out of bounds ({n},{d})");
-            per_col[j].push((i, v));
+            indptr[j + 1] += 1;
         }
-        let mut indptr = Vec::with_capacity(d + 1);
-        let mut indices = Vec::new();
-        let mut values = Vec::new();
-        indptr.push(0);
-        for col in per_col.iter_mut() {
-            col.sort_by_key(|&(i, _)| i);
+        for j in 0..d {
+            indptr[j + 1] += indptr[j];
+        }
+        // pass 2: scatter every triplet to its column span (input order
+        // preserved within a column, matching the old stable build)
+        let nnz = indptr[d];
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0.0f64; nnz];
+        let mut cursor = indptr.clone();
+        for &(i, j, v) in triplets {
+            let k = cursor[j];
+            indices[k] = i as u32;
+            values[k] = v;
+            cursor[j] += 1;
+        }
+        // pass 3: sort rows within each column (stable, so duplicate
+        // entries sum in input order), merge duplicates, drop zero sums,
+        // compacting in place behind a single write cursor
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        let mut final_indptr = vec![0usize; d + 1];
+        let mut write = 0usize;
+        for j in 0..d {
+            let (a, b) = (indptr[j], indptr[j + 1]);
+            scratch.clear();
+            scratch.extend(
+                indices[a..b]
+                    .iter()
+                    .copied()
+                    .zip(values[a..b].iter().copied()),
+            );
+            scratch.sort_by_key(|&(i, _)| i);
             let mut k = 0;
-            while k < col.len() {
-                let (i, mut v) = col[k];
+            while k < scratch.len() {
+                let (i, mut v) = scratch[k];
                 let mut k2 = k + 1;
-                while k2 < col.len() && col[k2].0 == i {
-                    v += col[k2].1;
+                while k2 < scratch.len() && scratch[k2].0 == i {
+                    v += scratch[k2].1;
                     k2 += 1;
                 }
                 if v != 0.0 {
-                    indices.push(i as u32);
-                    values.push(v);
+                    indices[write] = i;
+                    values[write] = v;
+                    write += 1;
                 }
                 k = k2;
             }
-            indptr.push(indices.len());
+            final_indptr[j + 1] = write;
         }
+        indices.truncate(write);
+        values.truncate(write);
         CscMatrix {
             n,
             d,
-            indptr,
+            indptr: final_indptr,
             indices,
             values,
         }
@@ -89,25 +156,47 @@ impl CscMatrix {
     }
 
     /// `A_j^T r` — the inner loop of every CD update on sparse data.
+    /// 4-way unrolled; see [`gather`].
+    // NOTE: tried `get_unchecked` here — <2% (the gather is
+    // DRAM-latency bound, not bounds-check bound); kept safe indexing
     #[inline]
     pub fn col_dot(&self, j: usize, r: &[f64]) -> f64 {
         let (idx, val) = self.col(j);
-        let mut acc = 0.0;
-        // NOTE: tried `get_unchecked` here — <2% (the gather is
-        // DRAM-latency bound, not bounds-check bound); kept safe indexing
-        for (&i, &v) in idx.iter().zip(val) {
-            acc += v * r[i as usize];
-        }
-        acc
+        gather(idx, val, r)
     }
 
     /// `r += s * A_j` — the residual maintenance step.
     #[inline]
     pub fn col_axpy(&self, j: usize, s: f64, r: &mut [f64]) {
         let (idx, val) = self.col(j);
-        for (&i, &v) in idx.iter().zip(val) {
-            r[i as usize] += s * v;
+        scatter(idx, val, s, r);
+    }
+
+    /// Fused coordinate update: one index-walk computes `g = A_j^T r`,
+    /// derives the step `s = step(g)`, and (when `s != 0`) applies the
+    /// scatter `r += s * A_j` while the column's (indices, values)
+    /// slices are still hot in cache. Returns `(g, s)`.
+    ///
+    /// Bit-for-bit equivalent to [`col_dot`](Self::col_dot) followed by
+    /// [`col_axpy`](Self::col_axpy) (property-tested in
+    /// `tests/proptests.rs`): both paths run the same [`gather`] /
+    /// [`scatter`] kernels.
+    #[inline]
+    pub fn col_dot_axpy(
+        &self,
+        j: usize,
+        r: &mut [f64],
+        step: impl FnOnce(f64) -> f64,
+    ) -> (f64, f64) {
+        let (a, b) = (self.indptr[j], self.indptr[j + 1]);
+        let idx = &self.indices[a..b];
+        let val = &self.values[a..b];
+        let g = gather(idx, val, r);
+        let s = step(g);
+        if s != 0.0 {
+            scatter(idx, val, s, r);
         }
+        (g, s)
     }
 
     /// Squared L2 norm of column `j`.
@@ -300,5 +389,60 @@ mod tests {
     #[should_panic]
     fn out_of_bounds_triplet_panics() {
         CscMatrix::from_triplets(2, 2, &[(2, 0, 1.0)]);
+    }
+
+    #[test]
+    fn unsorted_triplets_build_sorted_columns() {
+        // counting-sort build must sort rows within columns regardless of
+        // input order and still merge duplicates
+        let m = CscMatrix::from_triplets(
+            4,
+            2,
+            &[(3, 1, 1.0), (0, 1, 2.0), (2, 0, 3.0), (0, 0, 4.0), (3, 1, 0.5)],
+        );
+        m.validate().unwrap();
+        assert_eq!(m.col(0), (&[0u32, 2][..], &[4.0, 3.0][..]));
+        assert_eq!(m.col(1), (&[0u32, 3][..], &[2.0, 1.5][..]));
+    }
+
+    #[test]
+    fn fused_matches_two_call_path() {
+        let m = sample();
+        let mut r_fused = vec![1.0, -2.0, 0.5];
+        let mut r_split = r_fused.clone();
+        for j in 0..3 {
+            let (g, s) = m.col_dot_axpy(j, &mut r_fused, |g| 0.25 * g - 1.0);
+            let g2 = m.col_dot(j, &r_split);
+            let s2 = 0.25 * g2 - 1.0;
+            m.col_axpy(j, s2, &mut r_split);
+            assert_eq!(g.to_bits(), g2.to_bits());
+            assert_eq!(s.to_bits(), s2.to_bits());
+        }
+        for (a, b) in r_fused.iter().zip(&r_split) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_zero_step_skips_scatter() {
+        let m = sample();
+        let r0 = vec![1.0, 2.0, 3.0];
+        let mut r = r0.clone();
+        let (g, s) = m.col_dot_axpy(0, &mut r, |_| 0.0);
+        assert_eq!(s, 0.0);
+        assert_eq!(g, m.col_dot(0, &r0));
+        assert_eq!(r, r0);
+    }
+
+    #[test]
+    fn gather_unroll_long_column() {
+        // exercise the 4-wide chunks + remainder path
+        let n = 11;
+        let trip: Vec<(usize, usize, f64)> =
+            (0..n).map(|i| (i, 0, (i + 1) as f64)).collect();
+        let m = CscMatrix::from_triplets(n, 1, &trip);
+        let r: Vec<f64> = (0..n).map(|i| (i as f64) - 4.0).collect();
+        let expect: f64 = (0..n).map(|i| ((i + 1) as f64) * ((i as f64) - 4.0)).sum();
+        assert!((m.col_dot(0, &r) - expect).abs() < 1e-9);
     }
 }

@@ -58,12 +58,42 @@ impl Design {
         }
     }
 
+    /// Fused coordinate update (one column walk on sparse data):
+    /// `g = A_j^T r`, `s = step(g)`, then `r += s * A_j` when `s != 0`.
+    /// Returns `(g, s)`. Matches `col_dot` + `col_axpy` bit-for-bit.
+    #[inline]
+    pub fn col_dot_axpy(
+        &self,
+        j: usize,
+        r: &mut [f64],
+        step: impl FnOnce(f64) -> f64,
+    ) -> (f64, f64) {
+        match self {
+            Design::Dense(m) => {
+                let g = m.col_dot(j, r);
+                let s = step(g);
+                if s != 0.0 {
+                    m.col_axpy(j, s, r);
+                }
+                (g, s)
+            }
+            Design::Sparse(m) => m.col_dot_axpy(j, r, step),
+        }
+    }
+
     /// Squared L2 norm of column `j`.
     pub fn col_norm_sq(&self, j: usize) -> f64 {
         match self {
             Design::Dense(m) => super::vecops::norm2_sq(m.col(j)),
             Design::Sparse(m) => m.col_norm_sq(j),
         }
+    }
+
+    /// Squared L2 norms of every column — the per-problem column
+    /// metadata cache behind per-coordinate step sizes (computed once
+    /// per problem, O(nnz)).
+    pub fn col_norms_sq(&self) -> Vec<f64> {
+        (0..self.d()).map(|j| self.col_norm_sq(j)).collect()
     }
 
     /// Stored entries in column `j` (n for dense).
@@ -134,6 +164,19 @@ mod tests {
         for j in 0..a.d() {
             assert!((a.col_dot(j, &r) - b.col_dot(j, &r)).abs() < 1e-12);
             assert!((a.col_norm_sq(j) - b.col_norm_sq(j)).abs() < 1e-12);
+        }
+        let na = a.col_norms_sq();
+        let nb = b.col_norms_sq();
+        for j in 0..a.d() {
+            assert!((na[j] - nb[j]).abs() < 1e-12);
+        }
+        let mut ra = r.clone();
+        let mut rb = r.clone();
+        let (ga, sa) = a.col_dot_axpy(1, &mut ra, |g| 0.5 * g);
+        let (gb, sb) = b.col_dot_axpy(1, &mut rb, |g| 0.5 * g);
+        assert!((ga - gb).abs() < 1e-12 && (sa - sb).abs() < 1e-12);
+        for (u, v) in ra.iter().zip(&rb) {
+            assert!((u - v).abs() < 1e-12);
         }
         let x = vec![0.5, 1.0, -1.0];
         let mut ya = vec![0.0; 4];

@@ -79,6 +79,11 @@ pub fn soft_threshold(u: f64, t: f64) -> f64 {
 /// The signed coordinate-descent step of Eq. (5) folded back from the
 /// duplicated-feature form: minimizes the Assumption-2.1 quadratic bound
 /// `g*dx + beta/2 dx^2 + lam |x + dx|` over `dx`. Returns `dx`.
+///
+/// `beta` is the *per-coordinate* curvature: callers pass the problem's
+/// cached `beta_j = loss_beta * ||A_j||^2` (`LassoProblem::beta_j` /
+/// `LogisticProblem::beta_j`) rather than the global `BETA_*` constants,
+/// which are only correct for unit-normalized columns.
 #[inline]
 pub fn cd_step(x_j: f64, g_j: f64, lam: f64, beta: f64) -> f64 {
     soft_threshold(x_j - g_j / beta, lam / beta) - x_j

@@ -1,0 +1,108 @@
+//! Minimal `anyhow` substitute (the vendored crate set has no error
+//! ecosystem crates): a string-backed error, a `Result` alias, the
+//! `anyhow!` macro, and a `Context` extension trait for `Result`/`Option`.
+//!
+//! The runtime layer (`runtime::artifacts`, the XLA engine stub) uses
+//! this so the default build carries zero external dependencies.
+
+use std::fmt;
+
+/// A boxed-string error with optional context frames, `Display`ed as
+/// `context: cause` like `anyhow` does.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Wrap with a leading context frame.
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("...")` — format a message into an [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::err::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Attach context to failures, `anyhow::Context`-style.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_context_chain() {
+        let e = Error::msg("root cause").context("outer");
+        assert_eq!(e.to_string(), "outer: root cause");
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn result_context() {
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing key").unwrap_err().to_string(), "missing key");
+        let v = Some(3u32);
+        assert_eq!(v.context("x").unwrap(), 3);
+    }
+}

@@ -4,11 +4,13 @@
 //! crates.io), so the usual ecosystem crates (`rand`, `serde`, `clap`,
 //! `criterion`) are unavailable. This module ships small, well-tested
 //! substitutes: a `xoshiro256**` PRNG ([`rng`]), a minimal JSON
-//! reader/writer ([`json`]), and a light CLI argument helper ([`cli`]).
+//! reader/writer ([`json`]), a light CLI argument helper ([`cli`]), and
+//! a string-backed `anyhow` stand-in ([`err`]).
 
 pub mod rng;
 pub mod json;
 pub mod cli;
+pub mod err;
 
 /// Mean and (population) standard deviation of a slice.
 pub fn mean_std(xs: &[f64]) -> (f64, f64) {

@@ -1,9 +1,9 @@
 //! Property-based tests on the coordinator invariants (testkit::check is
 //! the proptest substitute — see DESIGN.md §Environment-substitutions).
 
-use shotgun::coordinator::{ShotgunConfig, ShotgunExact};
+use shotgun::coordinator::{ShotgunConfig, ShotgunExact, ShrinkConfig};
 use shotgun::objective::LassoProblem;
-use shotgun::sparsela::{power, vecops, CscMatrix, Design};
+use shotgun::sparsela::{power, vecops, CscMatrix, Design, DenseMatrix};
 use shotgun::solvers::common::{LassoSolver as _, SolveOptions};
 use shotgun::solvers::shooting::Shooting;
 use shotgun::testkit::{check, random_lasso};
@@ -238,6 +238,149 @@ fn prop_pathwise_matches_direct_optimum() {
                     "pathwise {} vs direct {}",
                     path.objective, direct.objective
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shrinking_never_changes_the_optimum() {
+    // the scheduler's promise: with the full-sweep KKT recheck guarding
+    // convergence, active-set shrinking returns the same optimum as the
+    // unshrunk path — on sparse AND dense designs, for the sequential
+    // and the parallel engine alike
+    check(
+        "shrink-invariant-optimum",
+        41,
+        12,
+        |rng| {
+            let n = 20 + rng.below(30);
+            let d = 10 + rng.below(40);
+            let a = if rng.bernoulli(0.5) {
+                let mut trip = Vec::new();
+                for j in 0..d {
+                    // guarantee non-empty columns
+                    trip.push((rng.below(n), j, rng.normal()));
+                    for i in 0..n {
+                        if rng.bernoulli(0.15) {
+                            trip.push((i, j, rng.normal()));
+                        }
+                    }
+                }
+                let mut m = CscMatrix::from_triplets(n, d, &trip);
+                m.normalize_columns();
+                Design::Sparse(m)
+            } else {
+                let mut m = DenseMatrix::from_fn(n, d, |_, _| rng.normal());
+                m.normalize_columns();
+                Design::Dense(m)
+            };
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let lam = 0.05 + 0.5 * rng.uniform();
+            (a, y, lam)
+        },
+        |(a, y, lam)| {
+            let prob = LassoProblem::new(a, y, *lam);
+            let d = a.d();
+            let opts_on = SolveOptions {
+                max_iters: 400_000,
+                tol: 1e-7,
+                record_every: u64::MAX,
+                seed: 3,
+                ..Default::default()
+            };
+            let opts_off = SolveOptions {
+                shrink: ShrinkConfig::disabled(),
+                ..opts_on.clone()
+            };
+            let on = Shooting.solve_lasso(&prob, &vec![0.0; d], &opts_on);
+            let off = Shooting.solve_lasso(&prob, &vec![0.0; d], &opts_off);
+            if !(on.converged && off.converged) {
+                return Ok(()); // budget-bound, not a property violation
+            }
+            for (tag, res) in [("on", &on), ("off", &off)] {
+                let r = prob.residual(&res.x);
+                let kkt = prob.kkt_violation(&res.x, &r);
+                if kkt > 1e-4 {
+                    return Err(format!("kkt {kkt} at optimum with shrink {tag}"));
+                }
+            }
+            let gap = (on.objective - off.objective).abs() / off.objective.abs().max(1e-12);
+            if gap > 1e-3 {
+                return Err(format!(
+                    "shrinking moved the optimum: on {} vs off {} (gap {gap:.2e})",
+                    on.objective, off.objective
+                ));
+            }
+            // parallel engine, same invariant
+            let par = ShotgunExact::new(ShotgunConfig {
+                p: 2,
+                ..Default::default()
+            })
+            .solve_lasso(&prob, &vec![0.0; d], &opts_on);
+            if par.converged {
+                let r = prob.residual(&par.x);
+                let kkt = prob.kkt_violation(&par.x, &r);
+                if kkt > 1e-4 {
+                    return Err(format!("parallel kkt {kkt} with shrinking"));
+                }
+                let gap =
+                    (par.objective - off.objective).abs() / off.objective.abs().max(1e-12);
+                if gap > 1e-3 {
+                    return Err(format!(
+                        "parallel shrinking moved the optimum (gap {gap:.2e})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fused_col_dot_axpy_bit_exact() {
+    // the fused kernel must equal col_dot followed by col_axpy
+    // bit-for-bit on arbitrary CSC matrices (shared gather/scatter
+    // kernels make this exact, not approximate)
+    check(
+        "fused-kernel-bit-exact",
+        43,
+        30,
+        |rng| {
+            let n = 1 + rng.below(60);
+            let d = 1 + rng.below(20);
+            let mut trip = Vec::new();
+            for j in 0..d {
+                for i in 0..n {
+                    if rng.bernoulli(0.3) {
+                        trip.push((i, j, rng.normal()));
+                    }
+                }
+            }
+            let m = CscMatrix::from_triplets(n, d, &trip);
+            let r: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let scale = rng.normal();
+            (m, r, scale)
+        },
+        |(m, r, scale)| {
+            for j in 0..m.d {
+                let mut r_fused = r.clone();
+                let mut r_split = r.clone();
+                let (g1, s1) = m.col_dot_axpy(j, &mut r_fused, |g| scale * g);
+                let g2 = m.col_dot(j, &r_split);
+                let s2 = scale * g2;
+                if s2 != 0.0 {
+                    m.col_axpy(j, s2, &mut r_split);
+                }
+                if g1.to_bits() != g2.to_bits() || s1.to_bits() != s2.to_bits() {
+                    return Err(format!("(g, s) mismatch at column {j}: {g1} vs {g2}"));
+                }
+                for (i, (a, b)) in r_fused.iter().zip(&r_split).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("residual bit mismatch at ({i}, col {j})"));
+                    }
+                }
             }
             Ok(())
         },

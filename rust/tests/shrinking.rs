@@ -1,0 +1,142 @@
+//! Cross-engine invariance of the coordinate scheduler: every engine
+//! (exact, threaded, CDN, plus the sequential baselines Shooting and
+//! GLMNET) must reach the same objective with shrinking on vs off
+//! (relative gap < 1e-3) — the full-sweep KKT recheck makes active-set
+//! shrinking an optimization, never an approximation.
+
+use shotgun::coordinator::{ShotgunCdn, ShotgunConfig, ShotgunExact, ShotgunThreaded, ShrinkConfig};
+use shotgun::data::synth;
+use shotgun::objective::{LassoProblem, LogisticProblem};
+use shotgun::solvers::common::{LogisticSolver as _, SolveOptions};
+use shotgun::solvers::glmnet::Glmnet;
+use shotgun::solvers::shooting::Shooting;
+use shotgun::solvers::LassoSolver as _;
+
+fn opts_on() -> SolveOptions {
+    SolveOptions {
+        max_iters: 400_000,
+        tol: 1e-8,
+        record_every: u64::MAX,
+        seed: 5,
+        ..Default::default()
+    }
+}
+
+fn opts_off() -> SolveOptions {
+    SolveOptions {
+        shrink: ShrinkConfig::disabled(),
+        ..opts_on()
+    }
+}
+
+fn rel_gap(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+#[test]
+fn all_lasso_engines_agree_shrink_on_vs_off() {
+    let ds = synth::sparse_imaging(120, 240, 0.06, 7);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.12);
+    let x0 = vec![0.0; 240];
+
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+    // exact engine
+    let cfg = ShotgunConfig {
+        p: 4,
+        ..Default::default()
+    };
+    results.push((
+        "exact".into(),
+        ShotgunExact::new(cfg.clone())
+            .solve_lasso(&prob, &x0, &opts_on())
+            .objective,
+        ShotgunExact::new(cfg.clone())
+            .solve_lasso(&prob, &x0, &opts_off())
+            .objective,
+    ));
+    // threaded engine
+    results.push((
+        "threaded".into(),
+        ShotgunThreaded::new(cfg.clone())
+            .solve_lasso(&prob, &x0, &opts_on())
+            .objective,
+        ShotgunThreaded::new(cfg.clone())
+            .solve_lasso(&prob, &x0, &opts_off())
+            .objective,
+    ));
+    // sequential baselines ride the same scheduler
+    results.push((
+        "shooting".into(),
+        Shooting.solve_lasso(&prob, &x0, &opts_on()).objective,
+        Shooting.solve_lasso(&prob, &x0, &opts_off()).objective,
+    ));
+    results.push((
+        "glmnet".into(),
+        Glmnet::default().solve_lasso(&prob, &x0, &opts_on()).objective,
+        Glmnet::default()
+            .solve_lasso(&prob, &x0, &opts_off())
+            .objective,
+    ));
+
+    let reference = results[0].2; // exact engine, shrink off
+    for (name, on, off) in &results {
+        assert!(
+            rel_gap(*on, *off) < 1e-3,
+            "{name}: shrink-on {on} vs shrink-off {off}"
+        );
+        assert!(
+            rel_gap(*on, reference) < 1e-3,
+            "{name} disagrees with the exact engine: {on} vs {reference}"
+        );
+    }
+}
+
+fn logistic_opts(shrink_on: bool) -> SolveOptions {
+    // fixed-step logistic CD contracts slowly near the optimum; a 1e-7
+    // window keeps these tests fast while the 1e-3 gap is what matters
+    SolveOptions {
+        tol: 1e-7,
+        shrink: if shrink_on {
+            ShrinkConfig::default()
+        } else {
+            ShrinkConfig::disabled()
+        },
+        ..opts_on()
+    }
+}
+
+#[test]
+fn cdn_agrees_shrink_on_vs_off() {
+    let ds = synth::rcv1_like(80, 60, 0.2, 3);
+    let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
+    let x0 = vec![0.0; 60];
+    let on = ShotgunCdn::with_p(4)
+        .solve_logistic(&prob, &x0, &logistic_opts(true))
+        .objective;
+    let off = ShotgunCdn::with_p(4)
+        .solve_logistic(&prob, &x0, &logistic_opts(false))
+        .objective;
+    assert!(rel_gap(on, off) < 1e-3, "cdn: on {on} vs off {off}");
+}
+
+#[test]
+fn logistic_exact_agrees_shrink_on_vs_off() {
+    let ds = synth::rcv1_like(60, 40, 0.25, 6);
+    let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
+    let x0 = vec![0.0; 40];
+    let mk = || {
+        ShotgunExact::new(ShotgunConfig {
+            p: 4,
+            ..Default::default()
+        })
+    };
+    let on = mk().solve_logistic(&prob, &x0, &logistic_opts(true)).objective;
+    let off = mk()
+        .solve_logistic(&prob, &x0, &logistic_opts(false))
+        .objective;
+    assert!(rel_gap(on, off) < 1e-3, "logistic: on {on} vs off {off}");
+    let shooting_on = Shooting
+        .solve_logistic(&prob, &x0, &logistic_opts(true))
+        .objective;
+    assert!(rel_gap(shooting_on, off) < 1e-3);
+}

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Run the hot-path microbenchmarks and refresh BENCH_hotpath.json (the
+# machine-readable perf trajectory tracked across PRs).
+#
+# Usage: scripts/bench.sh [extra cargo bench args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+cargo bench --bench hotpath "$@"
+echo
+echo "--- BENCH_hotpath.json ---"
+cat BENCH_hotpath.json
