@@ -1,8 +1,9 @@
 //! Microbenchmarks of the L3 hot paths (criterion-substitute harness):
 //! the per-update column kernels (plain + fused), one synchronous
 //! Shotgun round, the end-to-end solve-to-tolerance path with the
-//! coordinate scheduler on vs off, the threaded engine's CAS loop, and
-//! the XLA block-round dispatch.
+//! coordinate scheduler on vs off, the pathwise orchestrator with
+//! sequential strong rules on vs off, the threaded engine's CAS loop,
+//! and the XLA block-round dispatch.
 //!
 //! `cargo bench --bench hotpath` (or `scripts/bench.sh`) — these are the
 //! §Perf regression gates. Results go to stdout, to
@@ -142,6 +143,57 @@ fn main() {
         results.push(off);
     }
 
+    // --- pathwise orchestrator: sequential strong rules on vs off ---
+    // same solver, same lambda path, same optima (asserted); the strong
+    // rule screens the scheduler's starting set per stage. Ratio goes to
+    // BENCH_hotpath.json as derived.path_strong_speedup.
+    {
+        use shotgun::solvers::path::{solve_path_lasso, PathConfig};
+        let ds = synth::sparse_imaging(2048, 4096, 0.01, 13);
+        let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam = 0.05 * prob0.lambda_max();
+        let opts = SolveOptions {
+            max_iters: 4_000_000,
+            tol: 1e-6,
+            record_every: u64::MAX,
+            seed: 17,
+            ..Default::default()
+        };
+        let run = |strong: bool| {
+            let cfg = PathConfig {
+                stages: 6,
+                strong_rules: strong,
+            };
+            solve_path_lasso(&ds.design, &ds.targets, lam, &cfg, &opts, |p, x0, o| {
+                ShotgunExact::new(ShotgunConfig {
+                    p: 8,
+                    ..Default::default()
+                })
+                .solve_lasso(p, x0, o)
+            })
+        };
+        let f_on = run(true);
+        let f_off = run(false);
+        let gap = (f_on.objective - f_off.objective).abs() / f_off.objective.abs().max(1e-12);
+        println!(
+            "pathwise objectives: strong-on F={:.8} ({} updates) strong-off F={:.8} ({} updates), rel gap {:.2e}",
+            f_on.objective, f_on.updates, f_off.objective, f_off.updates, gap
+        );
+        assert!(gap < 1e-3, "strong rules changed the optimum (gap {gap:.3e})");
+        let on = bench("lasso pathwise strong-rules=on  (sparse 2048x4096)", 1, 3, || {
+            black_box(run(true).objective)
+        });
+        let off = bench("lasso pathwise strong-rules=off (sparse 2048x4096)", 1, 3, || {
+            black_box(run(false).objective)
+        });
+        let speedup = off.median_s / on.median_s.max(1e-12);
+        println!("strong-rules speedup (pathwise solve): {speedup:.2}x");
+        derived.push(("path_strong_speedup".into(), speedup));
+        derived.push(("path_strong_objective_rel_gap".into(), gap));
+        results.push(on);
+        results.push(off);
+    }
+
     // --- atomic CAS residual update (threaded engine inner op) ---
     {
         let v = AtomicVec::from_slice(&vec![0.0; 4096]);
@@ -189,19 +241,22 @@ fn main() {
     let artifacts = root.join("artifacts");
     if artifacts.join("manifest.json").exists() {
         use shotgun::runtime::XlaLassoEngine;
-        if let Ok(mut engine) = XlaLassoEngine::open(&artifacts, "s") {
-            let ds = synth::singlepix_pm1(256, 512, 10);
-            let prob = LassoProblem::new(&ds.design, &ds.targets, 0.3);
-            let opts = SolveOptions {
-                max_iters: 8, // one device call (k=8 fused rounds)
-                tol: 0.0,
-                ..Default::default()
-            };
-            results.push(bench_for("xla lasso_rounds call (k=8, s profile)", 2.0, 8, || {
-                black_box(engine.solve_lasso(&prob, &vec![0.0; 512], &opts).unwrap())
-            }));
-        } else {
-            println!("(artifacts present but xla feature not compiled in; skipping device bench)");
+        match XlaLassoEngine::open(&artifacts, "s") {
+            Ok(mut engine) => {
+                let ds = synth::singlepix_pm1(256, 512, 10);
+                let prob = LassoProblem::new(&ds.design, &ds.targets, 0.3);
+                let opts = SolveOptions {
+                    max_iters: 8, // one device call (k=8 fused rounds)
+                    tol: 0.0,
+                    ..Default::default()
+                };
+                results.push(bench_for("xla lasso_rounds call (k=8, s profile)", 2.0, 8, || {
+                    black_box(engine.solve_lasso(&prob, &vec![0.0; 512], &opts).unwrap())
+                }));
+            }
+            Err(e) => {
+                println!("(artifacts present but device bench skipped: {e})");
+            }
         }
     }
 

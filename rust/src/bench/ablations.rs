@@ -2,7 +2,8 @@
 //!
 //! * E10 sync (exact) vs async (threaded) engine
 //! * E11 Ax/residual caching on vs off
-//! * E12 pathwise continuation vs direct lambda
+//! * E12 pathwise continuation vs direct lambda, and the pathwise
+//!   orchestrator's sequential strong rules on vs off
 //! * E13 multiset conflict resolution vs per-round dedup
 //! * E14 CDN active set on vs off
 
@@ -11,7 +12,7 @@ use crate::coordinator::{Engine, ShotgunCdn, ShotgunConfig, ShotgunExact, Shotgu
 use crate::data::synth;
 use crate::objective::{LassoProblem, LogisticProblem};
 use crate::solvers::common::{LogisticSolver, SolveOptions};
-use crate::solvers::path::solve_pathwise;
+use crate::solvers::path::{solve_path_lasso, PathConfig};
 use crate::util::rng::Rng;
 
 /// E11 baseline: Shooting WITHOUT the Ax cache — recompute the residual
@@ -106,7 +107,7 @@ pub fn run(cfg: &BenchConfig) {
         ));
     }
 
-    // --- E12: pathwise vs direct ---
+    // --- E12: pathwise vs direct, strong rules on vs off ---
     {
         let ds = synth::sparse_imaging(s(512), s(1024), 0.02, cfg.seed + 1);
         let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
@@ -120,33 +121,48 @@ pub fn run(cfg: &BenchConfig) {
             seed: cfg.seed,
             ..Default::default()
         };
+        let engine = || {
+            ShotgunExact::new(ShotgunConfig {
+                p: 8,
+                ..Default::default()
+            })
+        };
         let t0 = std::time::Instant::now();
         let direct = {
             let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
-            ShotgunExact::new(ShotgunConfig {
-                p: 8,
-                ..Default::default()
-            })
-            .solve_lasso(&prob, &vec![0.0; d], &opts)
+            engine().solve_lasso(&prob, &vec![0.0; d], &opts)
         };
         let t_direct = t0.elapsed().as_secs_f64();
-        let t1 = std::time::Instant::now();
-        let path = solve_pathwise(lam_max, lam, 6, d, &opts, |l, x0, o| {
-            let prob = LassoProblem::new(&ds.design, &ds.targets, l);
-            ShotgunExact::new(ShotgunConfig {
-                p: 8,
-                ..Default::default()
-            })
-            .solve_lasso(&prob, x0, o)
-        });
-        let t_path = t1.elapsed().as_secs_f64();
+        // the orchestrator path: one shared ProblemCache, warm starts,
+        // and (strong=true) sequential strong-rule screening
+        let run_path = |strong: bool| {
+            let cfg_path = PathConfig {
+                stages: 6,
+                strong_rules: strong,
+            };
+            let t = std::time::Instant::now();
+            let res = solve_path_lasso(&ds.design, &ds.targets, lam, &cfg_path, &opts, |p, x0, o| {
+                engine().solve_lasso(p, x0, o)
+            });
+            (res, t.elapsed().as_secs_f64())
+        };
+        let (path, t_path) = run_path(false);
+        let (path_strong, t_strong) = run_path(true);
         report.line(&format!(
-            "E12 pathwise: direct {:.3}s ({} updates, F={:.6}) vs pathwise {:.3}s ({} updates, F={:.6})",
-            t_direct, direct.updates, direct.objective, t_path, path.updates, path.objective
+            "E12 pathwise: direct {:.3}s ({} updates, F={:.6}) vs pathwise {:.3}s ({} updates, F={:.6}) vs strong-rules {:.3}s ({} updates, F={:.6})",
+            t_direct,
+            direct.updates,
+            direct.objective,
+            t_path,
+            path.updates,
+            path.objective,
+            t_strong,
+            path_strong.updates,
+            path_strong.objective
         ));
         report.json(format!(
-            "{{\"exp\":\"e12\",\"direct_s\":{:.6},\"direct_updates\":{},\"path_s\":{:.6},\"path_updates\":{}}}",
-            t_direct, direct.updates, t_path, path.updates
+            "{{\"exp\":\"e12\",\"direct_s\":{:.6},\"direct_updates\":{},\"path_s\":{:.6},\"path_updates\":{},\"path_strong_s\":{:.6},\"path_strong_updates\":{}}}",
+            t_direct, direct.updates, t_path, path.updates, t_strong, path_strong.updates
         ));
     }
 

@@ -4,12 +4,18 @@
 //!
 //! Per round: draw a multiset `P_t` of P coordinates uniformly at random,
 //! compute every `delta x_j` against the SAME `x` (Eq. 5), then apply the
-//! collective update `x += sum_j delta_j e_j` and refresh the residual
-//! cache with one axpy per draw. Deterministic given the seed.
+//! collective update `x += sum_j delta_j e_j` and refresh the cache
+//! (residual or margins) with one axpy per draw. Deterministic given the
+//! seed.
+//!
+//! There is ONE solve loop, [`ShotgunExact::solve_cd`], generic over
+//! [`CdObjective`] — `solve_lasso` / `solve_logistic` are thin
+//! forwarding shims. The paper's generic-Assumption-2.1 statement of
+//! Alg. 2 maps directly onto the trait.
 
 use super::schedule::ActiveSet;
 use super::ShotgunConfig;
-use crate::objective::{LassoProblem, LogisticProblem};
+use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
 use crate::solvers::common::{Recorder, SolveOptions, SolveResult};
 use crate::util::rng::Rng;
 
@@ -32,7 +38,7 @@ impl ShotgunExact {
         ShotgunExact { config }
     }
 
-    /// One synchronous round on the Lasso. Returns (outcome, max |dx|).
+    /// One synchronous round on the Lasso. Returns max |dx|.
     /// Exposed for the round-level experiments (Fig. 2 sweeps call this
     /// directly to count rounds).
     pub fn lasso_round(
@@ -72,13 +78,14 @@ impl ShotgunExact {
     }
 
     /// One synchronous round drawn from the scheduler's active set, with
-    /// the batched multiset kernel: the P draws are sorted so duplicates
-    /// are adjacent, each *unique* coordinate's gradient and delta are
-    /// computed once against the same `(x, r)` snapshot (duplicates of
-    /// `j` would compute the identical delta), and the collective update
-    /// applies one combined `count * dx` scatter per unique column. This
-    /// preserves Alg. 2's multiset semantics while deduplicating both
-    /// the gathers and the scatters of colliding draws.
+    /// the batched multiset kernel, generic over the loss: the P draws
+    /// are sorted so duplicates are adjacent, each *unique* coordinate's
+    /// gradient and delta are computed once against the same
+    /// `(x, cache)` snapshot (duplicates of `j` would compute the
+    /// identical delta), and the collective update applies one combined
+    /// `count * dx` scatter per unique column. This preserves Alg. 2's
+    /// multiset semantics while deduplicating both the gathers and the
+    /// scatters of colliding draws.
     ///
     /// KKT-inactive draws (`dx = 0`, `x_j = 0`, `|g_j|` below `thr`) are
     /// pruned from the active set on the way through — the scheduler's
@@ -87,12 +94,12 @@ impl ShotgunExact {
     /// Returns max |dx|; `draws` holds the (deduplicated iff
     /// `!multiset`) draw multiset afterwards for update accounting.
     #[allow(clippy::too_many_arguments)]
-    pub fn lasso_round_active(
+    pub fn round_active<O: CdObjective>(
         &self,
-        prob: &LassoProblem,
+        obj: &O,
         active: &mut ActiveSet,
         x: &mut [f64],
-        r: &mut [f64],
+        cache: &mut [f64],
         rng: &mut Rng,
         draws: &mut Vec<usize>,
         deltas: &mut Vec<f64>,
@@ -108,13 +115,13 @@ impl ShotgunExact {
             draws.dedup();
         }
         // phase 1: one gradient + delta per unique coordinate, all
-        // against the same (x, r) — synchronous semantics
+        // against the same (x, cache) — synchronous semantics
         let mut max_dx: f64 = 0.0;
         let mut k = 0;
         while k < draws.len() {
             let j = draws[k];
-            let g = prob.grad_j(j, r);
-            let dx = prob.cd_step_from_g(j, x[j], g);
+            let g = obj.grad_j(j, cache);
+            let dx = obj.cd_step_from_g(j, x[j], g);
             deltas.push(dx);
             max_dx = max_dx.max(dx.abs());
             if dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
@@ -136,37 +143,36 @@ impl ShotgunExact {
             }
             let dx = deltas[u];
             u += 1;
-            if dx != 0.0 {
-                let total = count as f64 * dx;
-                x[j] += total;
-                prob.a.col_axpy(j, total, r);
-            }
+            obj.apply_update(j, count as f64 * dx, x, cache);
         }
         max_dx
     }
 
-    pub fn solve_lasso(
+    /// The single solve loop, generic over the objective (the paper's
+    /// Alg. 2 for any Assumption-2.1 loss). Handles scheduling, the
+    /// divergence monitor, and the full-sweep KKT recheck that makes
+    /// shrinking invisible to the returned optimum.
+    pub fn solve_cd<O: CdObjective>(
         &mut self,
-        prob: &LassoProblem,
+        obj: &O,
         x0: &[f64],
         opts: &SolveOptions,
     ) -> SolveResult {
-        let d = prob.d();
+        let d = obj.d();
         let mut rng = Rng::new(opts.seed);
         let mut x = x0.to_vec();
-        let mut r = prob.residual(&x);
+        let mut cache = obj.init_cache(&x);
         let mut rec = Recorder::new(opts);
-        let f0 = prob.objective_from_residual(&r, &x);
+        let f0 = obj.value(&cache, &x);
         rec.record(0, f0, &x, 0.0, true);
         let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
 
-        let shrink = opts.shrink.enabled;
-        let thr = if shrink {
-            opts.shrink.threshold(prob.lam)
+        let thr = if opts.shrink.enabled {
+            opts.shrink.threshold(obj.lam())
         } else {
             f64::NEG_INFINITY
         };
-        let mut active = ActiveSet::full(d);
+        let mut active = ActiveSet::for_options(d, &opts.shrink);
         let mut draws = Vec::with_capacity(self.config.p);
         let mut deltas = Vec::with_capacity(self.config.p);
         let mut window_max: f64 = 0.0;
@@ -177,19 +183,19 @@ impl ShotgunExact {
             if active.is_empty() {
                 // everything pruned: full KKT recheck either certifies
                 // the optimum or refills the set with the violators
-                if active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r)) < opts.tol {
+                if active.recheck_full(opts.tol, |k| obj.cd_step(k, x[k], &cache)) < opts.tol {
                     outcome = RoundOutcome::Converged;
-                    rec.record(round, prob.objective_from_residual(&r, &x), &x, 0.0, true);
+                    rec.record(round, obj.value(&cache, &x), &x, 0.0, true);
                     break;
                 }
                 continue;
             }
             round += 1;
-            let max_dx = self.lasso_round_active(
-                prob,
+            let max_dx = self.round_active(
+                obj,
                 &mut active,
                 &mut x,
-                &mut r,
+                &mut cache,
                 &mut rng,
                 &mut draws,
                 &mut deltas,
@@ -199,156 +205,62 @@ impl ShotgunExact {
             window_max = window_max.max(max_dx);
             // convergence / divergence checks on a ~d-update cadence
             if round % rounds_per_window == 0 {
-                let f = prob.objective_from_residual(&r, &x);
+                let f = obj.value(&cache, &x);
                 if !f.is_finite() || f > f_diverge {
                     outcome = RoundOutcome::Diverged;
                     rec.record(round, f, &x, 0.0, true);
                     break;
                 }
                 if window_max < opts.tol
-                    && active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r)) < opts.tol
+                    && active.recheck_full(opts.tol, |k| obj.cd_step(k, x[k], &cache)) < opts.tol
                 {
                     outcome = RoundOutcome::Converged;
                     rec.record(round, f, &x, 0.0, true);
-                    break;
-                }
-                window_max = 0.0;
-            }
-            if round % opts.record_every == 0 {
-                rec.record(round, prob.objective_from_residual(&r, &x), &x, 0.0, true);
-            }
-        }
-        let f = prob.objective_from_residual(&r, &x);
-        rec.record(round, f, &x, 0.0, true);
-        let mut res = rec.finish(
-            "shotgun",
-            x,
-            f,
-            round,
-            outcome == RoundOutcome::Converged,
-        );
-        res.solver = format!("shotgun-p{}", self.config.p);
-        if outcome == RoundOutcome::Diverged {
-            res.solver.push_str("-diverged");
-        }
-        res
-    }
-
-    pub fn solve_logistic(
-        &mut self,
-        prob: &LogisticProblem,
-        x0: &[f64],
-        opts: &SolveOptions,
-    ) -> SolveResult {
-        let d = prob.d();
-        let mut rng = Rng::new(opts.seed);
-        let mut x = x0.to_vec();
-        let mut z = prob.margins(&x);
-        let mut rec = Recorder::new(opts);
-        let f0 = prob.objective_from_margins(&z, &x);
-        rec.record(0, f0, &x, 0.0, true);
-        let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
-
-        let shrink = opts.shrink.enabled;
-        let thr = if shrink {
-            opts.shrink.threshold(prob.lam)
-        } else {
-            f64::NEG_INFINITY
-        };
-        let mut active = ActiveSet::full(d);
-        let mut draws: Vec<usize> = Vec::with_capacity(self.config.p);
-        let mut deltas: Vec<f64> = Vec::with_capacity(self.config.p);
-        let mut window_max: f64 = 0.0;
-        let mut outcome = RoundOutcome::Progress;
-        let mut round = 0u64;
-        let rounds_per_window = (d as u64 / self.config.p as u64).max(1);
-        while !rec.out_of_budget(round) {
-            if active.is_empty() {
-                if active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &z)) < opts.tol {
-                    outcome = RoundOutcome::Converged;
-                    break;
-                }
-                continue;
-            }
-            round += 1;
-            draws.clear();
-            deltas.clear();
-            for _ in 0..self.config.p {
-                draws.push(active.draw(&mut rng));
-            }
-            draws.sort_unstable();
-            if !self.config.multiset {
-                draws.dedup();
-            }
-            // batched round: one gradient + delta per unique coordinate
-            // against the same (x, z), then combined multiset applies
-            let mut max_dx: f64 = 0.0;
-            let mut k = 0;
-            while k < draws.len() {
-                let j = draws[k];
-                let g = prob.grad_j(j, &z);
-                let dx = prob.cd_step_from_g(j, x[j], g);
-                deltas.push(dx);
-                max_dx = max_dx.max(dx.abs());
-                if dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
-                    active.prune(j);
-                }
-                while k < draws.len() && draws[k] == j {
-                    k += 1;
-                }
-            }
-            let mut k = 0;
-            let mut u = 0;
-            while k < draws.len() {
-                let j = draws[k];
-                let mut count = 0u32;
-                while k < draws.len() && draws[k] == j {
-                    k += 1;
-                    count += 1;
-                }
-                let dx = deltas[u];
-                u += 1;
-                prob.apply_step(j, count as f64 * dx, &mut x, &mut z);
-            }
-            rec.updates += draws.len() as u64;
-            window_max = window_max.max(max_dx);
-            if round % rounds_per_window == 0 {
-                let f = prob.objective_from_margins(&z, &x);
-                if !f.is_finite() || f > f_diverge {
-                    outcome = RoundOutcome::Diverged;
-                    break;
-                }
-                if window_max < opts.tol
-                    && active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &z)) < opts.tol
-                {
-                    outcome = RoundOutcome::Converged;
                     break;
                 }
                 window_max = 0.0;
             }
             if round % opts.record_every == 0 {
                 let aux = if opts.aux_every_record {
-                    prob.error_rate(&x)
+                    obj.aux_metric(&x)
                 } else {
                     0.0
                 };
-                rec.record(round, prob.objective_from_margins(&z, &x), &x, aux, true);
+                rec.record(round, obj.value(&cache, &x), &x, aux, true);
             }
         }
-        let f = prob.objective_from_margins(&z, &x);
+        let f = obj.value(&cache, &x);
         rec.record(round, f, &x, 0.0, true);
-        let mut res = rec.finish(
-            "shotgun-logistic",
-            x,
-            f,
-            round,
-            outcome == RoundOutcome::Converged,
-        );
-        res.solver = format!("shotgun-logistic-p{}", self.config.p);
+        let base = match obj.loss() {
+            Loss::Squared => "shotgun",
+            Loss::Logistic => "shotgun-logistic",
+        };
+        let mut res = rec.finish(base, x, f, round, outcome == RoundOutcome::Converged);
+        res.solver = format!("{base}-p{}", self.config.p);
         if outcome == RoundOutcome::Diverged {
             res.solver.push_str("-diverged");
         }
         res
+    }
+
+    /// Thin forwarding shim over [`solve_cd`](Self::solve_cd).
+    pub fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
+    }
+
+    /// Thin forwarding shim over [`solve_cd`](Self::solve_cd).
+    pub fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
     }
 }
 
@@ -468,6 +380,20 @@ mod tests {
         );
         assert!(res.converged);
         assert!(res.objective < prob.objective(&vec![0.0; 40]));
+    }
+
+    #[test]
+    fn lasso_and_logistic_share_one_loop() {
+        // the generic loop must produce the loss-tagged solver names the
+        // per-loss loops used to (external dashboards key on them)
+        let ds = synth::sparco_like(30, 12, 0.4, 11);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.3);
+        let res = ShotgunExact::new(config(2)).solve_cd(&prob, &vec![0.0; 12], &opts());
+        assert!(res.solver.starts_with("shotgun-p2"), "{}", res.solver);
+        let dsl = synth::rcv1_like(30, 12, 0.3, 12);
+        let probl = LogisticProblem::new(&dsl.design, &dsl.targets, 0.05);
+        let resl = ShotgunExact::new(config(2)).solve_cd(&probl, &vec![0.0; 12], &opts());
+        assert!(resl.solver.starts_with("shotgun-logistic-p2"), "{}", resl.solver);
     }
 
     #[test]

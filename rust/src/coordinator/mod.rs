@@ -14,11 +14,18 @@
 //!   block round through the AOT Pallas kernels (DESIGN.md
 //!   §Hardware-Adaptation).
 //!
+//! Every engine has ONE `solve_cd` body generic over
+//! [`crate::objective::CdObjective`] — the squared and logistic losses
+//! (and any future Assumption-2.1 loss) run through the same loop, and
+//! `solve_lasso` / `solve_logistic` are thin forwarding shims.
+//!
 //! [`pstar`] provides the plug-in `P* = ceil(d/rho)` estimate
-//! (Theorem 3.2) via power iteration; [`cdn_round`] is Shotgun CDN for
-//! sparse logistic regression (§4.2.1); [`schedule`] is the coordinate
-//! scheduler (active-set shrinking with KKT recheck) every engine and
-//! sequential baseline draws from.
+//! (Theorem 3.2) via power iteration; [`cdn_round`] is Shotgun CDN
+//! (§4.2.1) — second-order rounds, generic over the same trait;
+//! [`schedule`] is the coordinate scheduler (active-set shrinking with
+//! KKT recheck) every engine and sequential baseline draws from, which
+//! the pathwise orchestrator (`solvers::path`) seeds with strong-rule
+//! screened sets.
 
 pub mod atomic;
 pub mod beyond_l1;
@@ -120,9 +127,15 @@ impl LogisticSolver for Shotgun {
         x0: &[f64],
         opts: &SolveOptions,
     ) -> SolveResult {
-        // logistic Shotgun runs through the exact engine (the paper's
-        // practical logistic experiments use Shotgun CDN instead)
-        ShotgunExact::new(self.config.clone()).solve_logistic(prob, x0, opts)
+        // both engines run logistic through the same generic solve loop
+        // (the paper's practical logistic experiments use Shotgun CDN
+        // instead; that front-end is `ShotgunCdn`)
+        match self.config.engine {
+            Engine::Exact => ShotgunExact::new(self.config.clone()).solve_logistic(prob, x0, opts),
+            Engine::Threaded => {
+                ShotgunThreaded::new(self.config.clone()).solve_logistic(prob, x0, opts)
+            }
+        }
     }
 }
 

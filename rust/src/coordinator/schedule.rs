@@ -23,7 +23,7 @@ use std::sync::{Arc, Mutex};
 
 /// Shrinking policy, carried in `SolveOptions` so every solver sees the
 /// same knob (apples-to-apples comparisons toggle just this).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ShrinkConfig {
     /// Master switch. Off = every engine keeps its full coordinate set
     /// (the pre-scheduler behavior).
@@ -31,6 +31,19 @@ pub struct ShrinkConfig {
     /// Prune margin: a zero coordinate is pruned when
     /// `|g_j| < lam * (1 - slack)`. Larger slack prunes less eagerly.
     pub slack: f64,
+    /// Sequential strong-rule state (Tibshirani et al. 2012), set by the
+    /// pathwise orchestrator for stage k of a lambda path: the previous
+    /// stage's lambda. When present, [`threshold`](Self::threshold)
+    /// derives the prune slack from the path step `lam_{k-1} - lam_k`
+    /// instead of the fixed 1%-of-lambda margin.
+    pub prev_lam: Option<f64>,
+    /// Initial active set (coordinate ids) published by the pathwise
+    /// orchestrator after strong-rule screening; `None` = all `d`
+    /// coordinates. Engines start their scheduler from this set — the
+    /// full-sweep KKT recheck before convergence reactivates any
+    /// coordinate the screen wrongly discarded, so screening never
+    /// changes the returned optimum.
+    pub initial_active: Option<Arc<Vec<u32>>>,
 }
 
 impl Default for ShrinkConfig {
@@ -38,6 +51,8 @@ impl Default for ShrinkConfig {
         ShrinkConfig {
             enabled: true,
             slack: 0.01,
+            prev_lam: None,
+            initial_active: None,
         }
     }
 }
@@ -52,9 +67,18 @@ impl ShrinkConfig {
 
     /// The prune threshold for a given lambda: a zero coordinate whose
     /// `|g_j|` is below this is KKT-inactive with margin.
+    ///
+    /// On a lambda path (`prev_lam` set) this is the sequential strong
+    /// rule bound `max(2 lam_k - lam_{k-1}, 0)` — smaller than the fixed
+    /// margin whenever the path step exceeds `slack * lam`, so in-solve
+    /// pruning gets MORE conservative exactly when the upfront screen
+    /// was aggressive.
     #[inline]
     pub fn threshold(&self, lam: f64) -> f64 {
-        lam * (1.0 - self.slack)
+        match self.prev_lam {
+            Some(prev) => (2.0 * lam - prev).max(0.0),
+            None => lam * (1.0 - self.slack),
+        }
     }
 }
 
@@ -80,6 +104,31 @@ impl ActiveSet {
             d,
             active: (0..d as u32).collect(),
             pos: (0..d as u32).collect(),
+        }
+    }
+
+    /// Only the listed coordinates active (duplicates and out-of-range
+    /// ids ignored) — the strong-rule screened start of a path stage.
+    pub fn from_ids(d: usize, ids: &[u32]) -> Self {
+        assert!(d < PRUNED as usize, "dimension too large for u32 ids");
+        let mut pos = vec![PRUNED; d];
+        let mut active = Vec::with_capacity(ids.len());
+        for &j in ids {
+            if (j as usize) < d && pos[j as usize] == PRUNED {
+                pos[j as usize] = active.len() as u32;
+                active.push(j);
+            }
+        }
+        ActiveSet { d, active, pos }
+    }
+
+    /// The starting set an engine should use for the given shrink
+    /// policy: the orchestrator's screened set when one is present (and
+    /// shrinking is on and the set is non-empty), otherwise all `d`.
+    pub fn for_options(d: usize, cfg: &ShrinkConfig) -> Self {
+        match &cfg.initial_active {
+            Some(ids) if cfg.enabled && !ids.is_empty() => Self::from_ids(d, ids),
+            _ => Self::full(d),
         }
     }
 
@@ -220,6 +269,25 @@ impl SharedActiveSet {
         }
     }
 
+    /// Start from a screened id list (must be non-empty — workers need
+    /// something to draw).
+    pub fn from_ids(ids: Vec<u32>) -> Self {
+        assert!(!ids.is_empty(), "initial active set must be non-empty");
+        SharedActiveSet {
+            epoch: AtomicU64::new(0),
+            set: Mutex::new(Arc::new(ids)),
+        }
+    }
+
+    /// The starting set for the given shrink policy (screened set when
+    /// present and usable, else all `d`).
+    pub fn for_options(d: usize, cfg: &ShrinkConfig) -> Self {
+        match &cfg.initial_active {
+            Some(ids) if cfg.enabled && !ids.is_empty() => Self::from_ids(ids.as_ref().clone()),
+            _ => Self::full(d),
+        }
+    }
+
     /// Current epoch (worker polling; relaxed is fine — a stale read
     /// just delays the refresh by one update).
     #[inline]
@@ -352,8 +420,61 @@ mod tests {
         let c = ShrinkConfig {
             enabled: true,
             slack: 0.1,
+            ..Default::default()
         };
         assert!((c.threshold(2.0) - 1.8).abs() < 1e-12);
         assert!(!ShrinkConfig::disabled().enabled);
+    }
+
+    #[test]
+    fn strong_rule_threshold_from_path_step() {
+        // sequential strong rule: threshold = max(2 lam_k - lam_{k-1}, 0)
+        let c = ShrinkConfig {
+            prev_lam: Some(1.4),
+            ..Default::default()
+        };
+        assert!((c.threshold(1.0) - 0.6).abs() < 1e-12);
+        // big path step: never negative
+        let c2 = ShrinkConfig {
+            prev_lam: Some(5.0),
+            ..Default::default()
+        };
+        assert_eq!(c2.threshold(1.0), 0.0);
+    }
+
+    #[test]
+    fn from_ids_builds_consistent_set() {
+        let s = ActiveSet::from_ids(6, &[4, 1, 4, 9]); // dup + out-of-range dropped
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(4) && s.contains(1));
+        assert!(!s.contains(0) && !s.contains(5));
+        let mut s = s;
+        assert!(s.reactivate(0));
+        assert!(s.prune(4));
+        assert_eq!(s.len(), 2);
+        for i in 0..s.len() {
+            assert!(s.contains(s.get(i)));
+        }
+    }
+
+    #[test]
+    fn for_options_respects_screen_and_enable() {
+        let screened = ShrinkConfig {
+            initial_active: Some(Arc::new(vec![2, 3])),
+            ..Default::default()
+        };
+        assert_eq!(ActiveSet::for_options(5, &screened).len(), 2);
+        let disabled = ShrinkConfig {
+            enabled: false,
+            ..screened.clone()
+        };
+        assert!(ActiveSet::for_options(5, &disabled).is_full());
+        let empty = ShrinkConfig {
+            initial_active: Some(Arc::new(Vec::new())),
+            ..Default::default()
+        };
+        assert!(ActiveSet::for_options(5, &empty).is_full());
+        let (_, shared) = SharedActiveSet::for_options(5, &screened).snapshot();
+        assert_eq!(&*shared, &[2, 3]);
     }
 }

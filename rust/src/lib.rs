@@ -8,6 +8,22 @@
 //!   line-search rounds, `P*` estimation, plus every substrate the paper
 //!   depends on (sparse linear algebra, dataset generators, all baseline
 //!   solvers, the benchmark harness and a multicore memory-wall simulator).
+//!
+//! ## Architecture: one CD interface, one loop per engine
+//!
+//! The paper proves Shotgun once for a generic Assumption-2.1 loss; the
+//! code mirrors that. [`objective::CdObjective`] is the generic
+//! coordinate-descent interface (cached `Ax`-state, coordinate
+//! gradients, closed-form and Newton steps, per-sample gradients, KKT
+//! margins), implemented by [`objective::LassoProblem`] (squared loss,
+//! beta = 1) and [`objective::LogisticProblem`] (logistic, beta = 1/4)
+//! over a shared per-design [`objective::ProblemCache`]. Every engine
+//! and baseline — `ShotgunExact`, `ShotgunThreaded`, `ShotgunCdn`,
+//! `Shooting`, `Glmnet`, `ShootingCdn`, the SGD family — has exactly
+//! ONE `solve_cd<O: CdObjective>` body; the public `solve_lasso` /
+//! `solve_logistic` entry points are thin forwarding shims. Pathwise
+//! orchestration (lambda schedule, warm starts, sequential strong
+//! rules) lives once in [`solvers::path`], for all of them.
 //! * **Layer 2 (python/compile/model.py)** — the dense compute graph in
 //!   JAX, AOT-lowered once to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — the Pallas block-update

@@ -1,0 +1,71 @@
+//! `ProblemCache` — per-design metadata shared across problem instances.
+//!
+//! Pathwise solves construct one problem per lambda over the SAME design
+//! matrix. The column-norm cache `col_sq[j] = ||A_j||^2` (one O(nnz)
+//! pass) depends only on the design, so recomputing it per construction
+//! — what `LassoProblem::new` did before this cache existed — wasted an
+//! O(nnz) sweep per path stage. Build the cache once, hand it to every
+//! stage's `with_cache` constructor, and all stages share one
+//! allocation (regression-tested via `Arc::ptr_eq`).
+
+use crate::sparsela::Design;
+use std::sync::Arc;
+
+/// Shared per-design metadata: currently the column squared-norm cache.
+/// Cheap to clone (one `Arc` bump).
+#[derive(Clone, Debug)]
+pub struct ProblemCache {
+    d: usize,
+    col_sq: Arc<Vec<f64>>,
+}
+
+impl ProblemCache {
+    /// One O(nnz) pass over `a`.
+    pub fn new(a: &Design) -> Self {
+        ProblemCache {
+            d: a.d(),
+            col_sq: Arc::new(a.col_norms_sq()),
+        }
+    }
+
+    /// Handle to the shared `||A_j||^2` vector.
+    pub fn col_sq(&self) -> Arc<Vec<f64>> {
+        Arc::clone(&self.col_sq)
+    }
+
+    /// Number of columns this cache was built for (constructors assert
+    /// it matches their design — a cache is design-specific).
+    pub fn d(&self) -> usize {
+        self.d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsela::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cache_matches_direct_norms() {
+        let mut rng = Rng::new(1);
+        let m = DenseMatrix::from_fn(12, 5, |_, _| rng.normal());
+        let a = Design::Dense(m);
+        let cache = ProblemCache::new(&a);
+        assert_eq!(cache.d(), 5);
+        for j in 0..5 {
+            assert!((cache.col_sq()[j] - a.col_norm_sq(j)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn clones_share_the_allocation() {
+        let mut rng = Rng::new(2);
+        let m = DenseMatrix::from_fn(8, 4, |_, _| rng.normal());
+        let a = Design::Dense(m);
+        let cache = ProblemCache::new(&a);
+        let h1 = cache.col_sq();
+        let h2 = cache.clone().col_sq();
+        assert!(Arc::ptr_eq(&h1, &h2));
+    }
+}

@@ -1,18 +1,15 @@
 //! The Lasso objective (paper Eq. 2) with residual-cached coordinate ops.
 
+use super::{CdObjective, Loss, ProblemCache, MIN_BETA};
 use crate::sparsela::{vecops, Design};
-
-/// Floor for the per-coordinate curvature so empty/zero columns cannot
-/// divide by zero (an empty column's optimal weight is 0 and the floored
-/// step drives it there).
-const MIN_BETA: f64 = 1e-12;
+use std::sync::Arc;
 
 /// A Lasso instance: `min 1/2 ||Ax - y||^2 + lam ||x||_1`.
 ///
-/// Owns almost nothing heavy: borrows the design and targets, and
-/// precomputes the per-column metadata cache `col_sq[j] = ||A_j||^2`
-/// (one O(nnz) pass) so coordinate steps use the exact per-coordinate
-/// curvature instead of assuming unit-normalized columns
+/// Owns almost nothing heavy: borrows the design and targets, and holds
+/// a shared handle to the per-column metadata cache
+/// `col_sq[j] = ||A_j||^2` so coordinate steps use the exact
+/// per-coordinate curvature instead of assuming unit-normalized columns
 /// (`BETA_SQUARED`). The residual `r = Ax - y` is carried by the solver
 /// and refreshed incrementally.
 pub struct LassoProblem<'a> {
@@ -20,15 +17,30 @@ pub struct LassoProblem<'a> {
     pub y: &'a [f64],
     pub lam: f64,
     /// `||A_j||^2` per column — the coordinate Lipschitz constants of
-    /// the smooth part (paper Eq. 6 generalized to unnormalized designs).
-    pub col_sq: Vec<f64>,
+    /// the smooth part (paper Eq. 6 generalized to unnormalized
+    /// designs). Shared across pathwise stages via [`ProblemCache`].
+    pub col_sq: Arc<Vec<f64>>,
 }
 
 impl<'a> LassoProblem<'a> {
+    /// Standalone constructor: builds a fresh [`ProblemCache`] (one
+    /// O(nnz) pass). Pathwise callers should build the cache once and
+    /// use [`with_cache`](Self::with_cache) per stage instead.
     pub fn new(a: &'a Design, y: &'a [f64], lam: f64) -> Self {
+        Self::with_cache(a, y, lam, &ProblemCache::new(a))
+    }
+
+    /// Constructor over a shared per-design cache: no O(nnz) pass, just
+    /// an `Arc` bump, so every lambda stage reuses one allocation.
+    pub fn with_cache(a: &'a Design, y: &'a [f64], lam: f64, cache: &ProblemCache) -> Self {
         assert_eq!(a.n(), y.len(), "targets length != n");
-        let col_sq = a.col_norms_sq();
-        LassoProblem { a, y, lam, col_sq }
+        assert_eq!(a.d(), cache.d(), "cache built for a different design");
+        LassoProblem {
+            a,
+            y,
+            lam,
+            col_sq: cache.col_sq(),
+        }
     }
 
     /// Per-coordinate step-size curvature: `beta_j = ||A_j||^2` for the
@@ -164,6 +176,85 @@ impl<'a> LassoProblem<'a> {
     }
 }
 
+impl CdObjective for LassoProblem<'_> {
+    fn loss(&self) -> Loss {
+        Loss::Squared
+    }
+
+    fn design(&self) -> &Design {
+        self.a
+    }
+
+    fn targets(&self) -> &[f64] {
+        self.y
+    }
+
+    fn lam(&self) -> f64 {
+        self.lam
+    }
+
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        self.col_sq[j]
+    }
+
+    fn beta_j(&self, j: usize) -> f64 {
+        LassoProblem::beta_j(self, j)
+    }
+
+    fn init_cache(&self, x: &[f64]) -> Vec<f64> {
+        self.residual(x)
+    }
+
+    fn value(&self, cache: &[f64], x: &[f64]) -> f64 {
+        self.objective_from_residual(cache, x)
+    }
+
+    /// The residual IS the gradient weight for the squared loss.
+    #[inline]
+    fn grad_weight(&self, _i: usize, cache_i: f64) -> f64 {
+        cache_i
+    }
+
+    #[inline]
+    fn grad_j(&self, j: usize, cache: &[f64]) -> f64 {
+        LassoProblem::grad_j(self, j, cache)
+    }
+
+    fn grad_full(&self, cache: &[f64]) -> Vec<f64> {
+        self.grad(cache)
+    }
+
+    #[inline]
+    fn cd_step_from_g(&self, j: usize, x_j: f64, g: f64) -> f64 {
+        LassoProblem::cd_step_from_g(self, j, x_j, g)
+    }
+
+    #[inline]
+    fn apply_update(&self, j: usize, dx: f64, x: &mut [f64], cache: &mut [f64]) {
+        self.apply_step(j, dx, x, cache)
+    }
+
+    /// Fused single-column-walk kernel (bit-identical to the split path;
+    /// property-tested).
+    #[inline]
+    fn cd_update(&self, j: usize, x: &mut [f64], cache: &mut [f64]) -> (f64, f64) {
+        LassoProblem::cd_update(self, j, x, cache)
+    }
+
+    #[inline]
+    fn sample_grad_scale(&self, i: usize, ax_i: f64) -> f64 {
+        ax_i - self.y[i]
+    }
+
+    fn lambda_max(&self) -> f64 {
+        LassoProblem::lambda_max(self)
+    }
+
+    fn kkt_violation(&self, x: &[f64], cache: &[f64]) -> f64 {
+        LassoProblem::kkt_violation(self, x, cache)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +358,22 @@ mod tests {
         for (u, v) in r1.iter().zip(&r2) {
             assert_eq!(u.to_bits(), v.to_bits());
         }
+    }
+
+    #[test]
+    fn with_cache_shares_one_allocation() {
+        // pathwise regression: problems built over the same ProblemCache
+        // must share the col_sq allocation (no O(nnz) pass per stage)
+        let (a, y) = problem(17);
+        let cache = ProblemCache::new(&a);
+        let p1 = LassoProblem::with_cache(&a, &y, 0.5, &cache);
+        let p2 = LassoProblem::with_cache(&a, &y, 0.1, &cache);
+        assert!(Arc::ptr_eq(&p1.col_sq, &p2.col_sq));
+        assert!(Arc::ptr_eq(&p1.col_sq, &cache.col_sq()));
+        // and the values equal a standalone construction
+        let fresh = LassoProblem::new(&a, &y, 0.5);
+        assert_eq!(&*fresh.col_sq, &*p1.col_sq);
+        assert!(!Arc::ptr_eq(&fresh.col_sq, &p1.col_sq));
     }
 
     #[test]

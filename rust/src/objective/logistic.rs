@@ -1,12 +1,9 @@
 //! Sparse logistic regression objective (paper Eq. 3) with margin-cached
 //! coordinate ops and the CDN second-order machinery (Yuan et al. 2010).
 
-use super::{log1p_exp_neg, sigma_neg};
+use super::{log1p_exp_neg, sigma_neg, CdObjective, Loss, ProblemCache, MIN_BETA};
 use crate::sparsela::{vecops, Design};
-
-/// Curvature floor shared with the Lasso objective (see
-/// `lasso::MIN_BETA`): keeps empty columns from dividing by zero.
-const MIN_BETA: f64 = 1e-12;
+use std::sync::Arc;
 
 /// A sparse-logistic instance:
 /// `min sum_i log(1 + exp(-y_i a_i^T x)) + lam ||x||_1`, y in {-1, +1}.
@@ -14,18 +11,32 @@ pub struct LogisticProblem<'a> {
     pub a: &'a Design,
     pub y: &'a [f64],
     pub lam: f64,
-    /// `||A_j||^2` per column (precomputed once): the logistic
-    /// coordinate curvature bound is `beta_j = ||A_j||^2 / 4`, which
-    /// recovers the paper's `beta = 1/4` on normalized designs.
-    pub col_sq: Vec<f64>,
+    /// `||A_j||^2` per column: the logistic coordinate curvature bound
+    /// is `beta_j = ||A_j||^2 / 4`, which recovers the paper's
+    /// `beta = 1/4` on normalized designs. Shared across pathwise
+    /// stages via [`ProblemCache`].
+    pub col_sq: Arc<Vec<f64>>,
 }
 
 impl<'a> LogisticProblem<'a> {
+    /// Standalone constructor: builds a fresh [`ProblemCache`] (one
+    /// O(nnz) pass). Pathwise callers should build the cache once and
+    /// use [`with_cache`](Self::with_cache) per stage instead.
     pub fn new(a: &'a Design, y: &'a [f64], lam: f64) -> Self {
+        Self::with_cache(a, y, lam, &ProblemCache::new(a))
+    }
+
+    /// Constructor over a shared per-design cache (no O(nnz) pass).
+    pub fn with_cache(a: &'a Design, y: &'a [f64], lam: f64, cache: &ProblemCache) -> Self {
         assert_eq!(a.n(), y.len(), "labels length != n");
+        assert_eq!(a.d(), cache.d(), "cache built for a different design");
         debug_assert!(y.iter().all(|&v| v == 1.0 || v == -1.0), "labels must be ±1");
-        let col_sq = a.col_norms_sq();
-        LogisticProblem { a, y, lam, col_sq }
+        LogisticProblem {
+            a,
+            y,
+            lam,
+            col_sq: cache.col_sq(),
+        }
     }
 
     /// Per-coordinate curvature bound `beta_j = ||A_j||^2 / 4`
@@ -232,6 +243,90 @@ impl<'a> LogisticProblem<'a> {
         let mut g = vec![0.0; self.d()];
         self.a.matvec_t(&w, &mut g);
         vecops::norm_inf(&g)
+    }
+}
+
+impl CdObjective for LogisticProblem<'_> {
+    fn loss(&self) -> Loss {
+        Loss::Logistic
+    }
+
+    fn design(&self) -> &Design {
+        self.a
+    }
+
+    fn targets(&self) -> &[f64] {
+        self.y
+    }
+
+    fn lam(&self) -> f64 {
+        self.lam
+    }
+
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        self.col_sq[j]
+    }
+
+    fn beta_j(&self, j: usize) -> f64 {
+        LogisticProblem::beta_j(self, j)
+    }
+
+    fn init_cache(&self, x: &[f64]) -> Vec<f64> {
+        self.margins(x)
+    }
+
+    fn value(&self, cache: &[f64], x: &[f64]) -> f64 {
+        self.objective_from_margins(cache, x)
+    }
+
+    /// `w_i = -y_i sigma(-y_i z_i)` so that `g_j = A_j^T w`.
+    #[inline]
+    fn grad_weight(&self, i: usize, cache_i: f64) -> f64 {
+        -self.y[i] * sigma_neg(self.y[i] * cache_i)
+    }
+
+    #[inline]
+    fn grad_j(&self, j: usize, cache: &[f64]) -> f64 {
+        LogisticProblem::grad_j(self, j, cache)
+    }
+
+    fn grad_full(&self, cache: &[f64]) -> Vec<f64> {
+        self.grad(cache)
+    }
+
+    #[inline]
+    fn cd_step_from_g(&self, j: usize, x_j: f64, g: f64) -> f64 {
+        LogisticProblem::cd_step_from_g(self, j, x_j, g)
+    }
+
+    #[inline]
+    fn apply_update(&self, j: usize, dx: f64, x: &mut [f64], cache: &mut [f64]) {
+        self.apply_step(j, dx, x, cache)
+    }
+
+    /// True second-order CDN direction (Newton step with the exact
+    /// `h_jj`, L1-folded in closed form).
+    fn newton_direction(&self, j: usize, x_j: f64, cache: &[f64]) -> f64 {
+        self.cdn_direction(j, x_j, cache)
+    }
+
+    /// Armijo backtracking on the column support (the CDN trick:
+    /// O(nnz_j) per trial step).
+    fn line_search(&self, j: usize, x_j: f64, dx: f64, cache: &[f64]) -> f64 {
+        self.cdn_line_search(j, x_j, dx, cache, 0.0)
+    }
+
+    #[inline]
+    fn sample_grad_scale(&self, i: usize, ax_i: f64) -> f64 {
+        -self.y[i] * sigma_neg(self.y[i] * ax_i)
+    }
+
+    fn aux_metric(&self, x: &[f64]) -> f64 {
+        self.error_rate(x)
+    }
+
+    fn lambda_max(&self) -> f64 {
+        LogisticProblem::lambda_max(self)
     }
 }
 

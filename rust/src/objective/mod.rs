@@ -1,16 +1,42 @@
-//! Objectives of problem (1): squared loss (Lasso) and logistic loss,
-//! with the cached-state machinery every solver shares.
+//! Objectives of problem (1) behind ONE generic coordinate-descent
+//! interface.
 //!
-//! Both keep the paper's `Ax`-cache trick (Friedman et al. 2010, §4.1.1):
-//! Lasso solvers carry the residual `r = Ax - y`; logistic solvers carry
-//! the margin vector `z = Ax`. A coordinate update `x_j += dx` refreshes
-//! the cache with one sparse column axpy.
+//! The paper states Shotgun's analysis once for a generic Assumption-2.1
+//! loss and instantiates it for squared loss (beta = 1, Eq. 2) and
+//! logistic loss (beta = 1/4, Eq. 3). The code mirrors that:
+//!
+//! * [`CdObjective`] ([`traits`]) — the abstract CD interface every
+//!   engine's single `solve_cd<O>` loop is written against: cache
+//!   construction/maintenance, coordinate gradients from the cache,
+//!   closed-form and Newton coordinate steps, per-sample gradients for
+//!   the SGD family, KKT margins for the scheduler.
+//! * [`LassoProblem`] ([`lasso`]) and [`LogisticProblem`]
+//!   ([`logistic`]) — the two instantiations. Both keep the paper's
+//!   `Ax`-cache trick (Friedman et al. 2010, §4.1.1): Lasso carries the
+//!   residual `r = Ax - y`, logistic the margin vector `z = Ax`; a
+//!   coordinate update `x_j += dx` refreshes either with one sparse
+//!   column axpy.
+//! * [`ProblemCache`] ([`cache`]) — per-design metadata (`||A_j||^2`)
+//!   computed once and shared across problem instances, so pathwise
+//!   stages don't redo the O(nnz) pass per lambda.
+//!
+//! Dispatch is static throughout (generics, not `dyn`), so the fused
+//! lasso column kernel survives the abstraction bit-for-bit.
 
+pub mod cache;
 pub mod lasso;
 pub mod logistic;
+pub mod traits;
 
+pub use cache::ProblemCache;
 pub use lasso::LassoProblem;
 pub use logistic::LogisticProblem;
+pub use traits::CdObjective;
+
+/// Floor for the per-coordinate curvature `beta_j` shared by every
+/// loss, so empty/zero columns cannot divide by zero (an empty column's
+/// optimal weight is 0 and the floored step drives it there).
+pub(crate) const MIN_BETA: f64 = 1e-12;
 
 /// Which loss a dataset/solver pairing uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

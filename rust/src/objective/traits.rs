@@ -1,0 +1,299 @@
+//! `CdObjective` — the generic coordinate-descent interface every engine
+//! solves against (the GenCD-style abstraction of Scherrer et al.).
+//!
+//! The paper proves Shotgun once for a generic Assumption-2.1 loss and
+//! instantiates it twice (squared, beta = 1; logistic, beta = 1/4). The
+//! trait mirrors that: each solver has ONE `solve_cd<O: CdObjective>`
+//! body, and `LassoProblem` / `LogisticProblem` plug in through the
+//! cached-state machinery they already share:
+//!
+//! * a per-sample **cache vector** maintained incrementally — the
+//!   residual `r = Ax - y` for the squared loss, the margin `z = Ax`
+//!   for logistic. Both refresh with one sparse column axpy per update
+//!   ([`CdObjective::apply_update`]), which is what makes the gradient
+//!   `O(nnz_j)` instead of `O(nnz)`.
+//! * per-column curvature `beta_j` from the shared `col_sq` metadata
+//!   cache ([`crate::objective::ProblemCache`]), giving exact
+//!   per-coordinate step sizes on unnormalized designs.
+//! * a per-element **gradient weight** `w_i(cache_i)` with
+//!   `g_j = A_j^T w` — the linear-gather form the asynchronous threaded
+//!   engine folds into its lock-free column walks.
+//!
+//! Everything dispatches statically (generics, not `dyn`), so the lasso
+//! hot path keeps its fused gather→step→scatter kernel bit-for-bit
+//! (property-tested in `tests/proptests.rs`).
+
+use super::Loss;
+use crate::sparsela::Design;
+
+/// A coordinate-descent-solvable objective
+/// `F(x) = L(Ax) + lam ||x||_1` with a per-sample cache of `Ax`-shaped
+/// state. See the module docs for the contract.
+pub trait CdObjective {
+    /// Which Assumption-2.1 loss this is (naming, covariance-mode
+    /// gating in GLMNET).
+    fn loss(&self) -> Loss;
+
+    /// The design matrix `A`.
+    fn design(&self) -> &Design;
+
+    /// Targets (squared loss) or ±1 labels (logistic).
+    fn targets(&self) -> &[f64];
+
+    /// The L1 weight lambda.
+    fn lam(&self) -> f64;
+
+    fn n(&self) -> usize {
+        self.design().n()
+    }
+
+    fn d(&self) -> usize {
+        self.design().d()
+    }
+
+    /// `||A_j||^2` from the shared column metadata cache.
+    fn col_norm_sq(&self, j: usize) -> f64;
+
+    /// Per-coordinate curvature bound `beta_j` (paper Eq. 6 generalized
+    /// to unnormalized designs), floored so empty columns cannot divide
+    /// by zero.
+    fn beta_j(&self, j: usize) -> f64;
+
+    /// Build the cache vector for `x`: residual `Ax - y` (squared) or
+    /// margins `Ax` (logistic). One O(nnz) pass.
+    fn init_cache(&self, x: &[f64]) -> Vec<f64>;
+
+    /// `F(x)` from a maintained cache (the cheap path).
+    fn value(&self, cache: &[f64], x: &[f64]) -> f64;
+
+    /// `F(x)` from scratch (cold path: builds a cache internally).
+    fn objective_x(&self, x: &[f64]) -> f64 {
+        let cache = self.init_cache(x);
+        self.value(&cache, x)
+    }
+
+    /// Per-element gradient weight: `g_j = sum_i A_ij * w_i(cache_i)`.
+    /// Squared: `w_i = r_i`; logistic: `w_i = -y_i sigma(-y_i z_i)`.
+    fn grad_weight(&self, i: usize, cache_i: f64) -> f64;
+
+    /// Smooth coordinate gradient `g_j` from the cache (one column walk).
+    fn grad_j(&self, j: usize, cache: &[f64]) -> f64;
+
+    /// Full smooth gradient (one `A^T w` pass; cold path — screening,
+    /// diagnostics).
+    fn grad_full(&self, cache: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let mut w = vec![0.0; n];
+        for (i, wi) in w.iter_mut().enumerate() {
+            *wi = self.grad_weight(i, cache[i]);
+        }
+        let mut g = vec![0.0; self.d()];
+        self.design().matvec_t(&w, &mut g);
+        g
+    }
+
+    /// Closed-form fixed step (Eq. 5 folded to signed coordinates) from
+    /// an already-computed gradient.
+    fn cd_step_from_g(&self, j: usize, x_j: f64, g: f64) -> f64;
+
+    /// Closed-form fixed step from the cache.
+    fn cd_step(&self, j: usize, x_j: f64, cache: &[f64]) -> f64 {
+        self.cd_step_from_g(j, x_j, self.grad_j(j, cache))
+    }
+
+    /// Apply `x_j += dx`, maintaining `cache += dx * A_j`. No-op when
+    /// `dx == 0`.
+    fn apply_update(&self, j: usize, dx: f64, x: &mut [f64], cache: &mut [f64]);
+
+    /// Fused coordinate update: gradient, step, and cache refresh in as
+    /// few column walks as the loss allows. Returns `(g_j, dx)`. The
+    /// squared loss overrides this with the single-walk
+    /// `col_dot_axpy` kernel; the default is gather → step → scatter.
+    fn cd_update(&self, j: usize, x: &mut [f64], cache: &mut [f64]) -> (f64, f64) {
+        let g = self.grad_j(j, cache);
+        let dx = self.cd_step_from_g(j, x[j], g);
+        self.apply_update(j, dx, x, cache);
+        (g, dx)
+    }
+
+    /// Second-order coordinate direction (CDN, Yuan et al. 2010). For
+    /// the squared loss the quadratic model is exact, so the closed-form
+    /// step IS the Newton direction; logistic overrides with the true
+    /// `h_jj` Newton step.
+    fn newton_direction(&self, j: usize, x_j: f64, cache: &[f64]) -> f64 {
+        self.cd_step(j, x_j, cache)
+    }
+
+    /// Backtracking line search along coordinate `j` for the Newton
+    /// direction. The squared loss accepts the full step (its model is
+    /// exact, so sufficient decrease holds at t = 1); logistic overrides
+    /// with the Armijo search on the column support.
+    fn line_search(&self, j: usize, x_j: f64, dx: f64, cache: &[f64]) -> f64 {
+        let _ = (j, x_j, cache);
+        dx
+    }
+
+    /// Gradient scale of ONE sample's loss term at `ax_i = a_i^T x`
+    /// (the SGD-family entry point): the sample gradient is
+    /// `scale * a_i`. Squared: `ax_i - y_i`; logistic:
+    /// `-y_i sigma(-y_i ax_i)`.
+    fn sample_grad_scale(&self, i: usize, ax_i: f64) -> f64;
+
+    /// Auxiliary trace metric (logistic: training error rate; 0 where
+    /// no natural metric exists).
+    fn aux_metric(&self, x: &[f64]) -> f64 {
+        let _ = x;
+        0.0
+    }
+
+    /// Largest lambda with `x = 0` optimal.
+    fn lambda_max(&self) -> f64;
+
+    /// KKT violation at `(x, cache)`: max over j of the distance of
+    /// `g_j` from the subdifferential condition. Zero at the optimum.
+    fn kkt_violation(&self, x: &[f64], cache: &[f64]) -> f64 {
+        let lam = self.lam();
+        let mut worst: f64 = 0.0;
+        for (j, &xj) in x.iter().enumerate() {
+            let g = self.grad_j(j, cache);
+            let v = if xj > 0.0 {
+                (g + lam).abs()
+            } else if xj < 0.0 {
+                (g - lam).abs()
+            } else {
+                (g.abs() - lam).max(0.0)
+            };
+            worst = worst.max(v);
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::{LassoProblem, LogisticProblem};
+    use crate::sparsela::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn design(seed: u64, n: usize, d: usize) -> Design {
+        let mut rng = Rng::new(seed);
+        let mut m = DenseMatrix::from_fn(n, d, |_, _| rng.normal());
+        m.normalize_columns();
+        Design::Dense(m)
+    }
+
+    #[test]
+    fn trait_and_inherent_lasso_agree() {
+        let a = design(1, 18, 6);
+        let mut rng = Rng::new(2);
+        let y: Vec<f64> = (0..18).map(|_| rng.normal()).collect();
+        let p = LassoProblem::new(&a, &y, 0.3);
+        let x: Vec<f64> = (0..6).map(|_| 0.5 * rng.normal()).collect();
+        let cache = CdObjective::init_cache(&p, &x);
+        let r = p.residual(&x);
+        assert_eq!(cache, r);
+        assert_eq!(
+            CdObjective::value(&p, &cache, &x).to_bits(),
+            p.objective_from_residual(&r, &x).to_bits()
+        );
+        for j in 0..6 {
+            assert_eq!(
+                CdObjective::grad_j(&p, j, &cache).to_bits(),
+                p.grad_j(j, &r).to_bits()
+            );
+            assert_eq!(
+                CdObjective::cd_step(&p, j, x[j], &cache).to_bits(),
+                p.cd_step(j, x[j], &r).to_bits()
+            );
+            assert_eq!(CdObjective::beta_j(&p, j).to_bits(), p.beta_j(j).to_bits());
+        }
+        assert_eq!(
+            CdObjective::kkt_violation(&p, &x, &cache).to_bits(),
+            p.kkt_violation(&x, &r).to_bits()
+        );
+    }
+
+    #[test]
+    fn trait_and_inherent_logistic_agree() {
+        let a = design(3, 20, 5);
+        let mut rng = Rng::new(4);
+        let y: Vec<f64> = (0..20).map(|_| rng.sign()).collect();
+        let p = LogisticProblem::new(&a, &y, 0.1);
+        let x: Vec<f64> = (0..5).map(|_| 0.4 * rng.normal()).collect();
+        let z = p.margins(&x);
+        let cache = CdObjective::init_cache(&p, &x);
+        assert_eq!(cache, z);
+        assert_eq!(
+            CdObjective::value(&p, &cache, &x).to_bits(),
+            p.objective_from_margins(&z, &x).to_bits()
+        );
+        for j in 0..5 {
+            assert_eq!(
+                CdObjective::grad_j(&p, j, &cache).to_bits(),
+                p.grad_j(j, &z).to_bits()
+            );
+            assert_eq!(
+                CdObjective::newton_direction(&p, j, x[j], &cache).to_bits(),
+                p.cdn_direction(j, x[j], &z).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn grad_weight_matches_grad_j() {
+        // g_j = A_j^T w must hold for both losses (the threaded engine
+        // relies on exactly this decomposition)
+        let a = design(5, 15, 4);
+        let mut rng = Rng::new(6);
+        let yl: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let yb: Vec<f64> = (0..15).map(|_| rng.sign()).collect();
+        let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let lasso = LassoProblem::new(&a, &yl, 0.2);
+        let logit = LogisticProblem::new(&a, &yb, 0.2);
+        let cl = CdObjective::init_cache(&lasso, &x);
+        let cz = CdObjective::init_cache(&logit, &x);
+        for j in 0..4 {
+            for (p, c) in [
+                (&lasso as &dyn CdObjective, &cl),
+                (&logit as &dyn CdObjective, &cz),
+            ] {
+                let mut g = 0.0;
+                for i in 0..15 {
+                    g += a.to_dense().get(i, j) * p.grad_weight(i, c[i]);
+                }
+                assert!((g - p.grad_j(j, c)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_full_matches_per_coordinate() {
+        let a = design(7, 12, 5);
+        let mut rng = Rng::new(8);
+        let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let p = LassoProblem::new(&a, &y, 0.1);
+        let cache = CdObjective::init_cache(&p, &x);
+        let g = CdObjective::grad_full(&p, &cache);
+        for j in 0..5 {
+            assert!((g[j] - CdObjective::grad_j(&p, j, &cache)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sample_grad_scale_matches_losses() {
+        let a = design(9, 10, 3);
+        let mut rng = Rng::new(10);
+        let yl: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let yb: Vec<f64> = (0..10).map(|_| rng.sign()).collect();
+        let lasso = LassoProblem::new(&a, &yl, 0.2);
+        let logit = LogisticProblem::new(&a, &yb, 0.2);
+        // squared: d/dax 1/2 (ax - y)^2 = ax - y
+        assert!((CdObjective::sample_grad_scale(&lasso, 2, 0.7) - (0.7 - yl[2])).abs() < 1e-15);
+        // logistic: d/dax log(1+exp(-y ax)) = -y sigma(-y ax)
+        let ax = 0.3;
+        let expect = -yb[4] * crate::objective::sigma_neg(yb[4] * ax);
+        assert!((CdObjective::sample_grad_scale(&logit, 4, ax) - expect).abs() < 1e-15);
+    }
+}

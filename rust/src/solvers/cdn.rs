@@ -2,9 +2,14 @@
 //! and an active set (Yuan et al. 2010), the strong sequential baseline
 //! for sparse logistic regression in §4.2.1. The parallel variant
 //! (Shotgun CDN) lives in `coordinator::cdn_round`.
+//!
+//! One generic sweep loop over [`CdObjective`]: logistic plugs in the
+//! true `h_jj` Newton direction + Armijo search, the squared loss's
+//! exact quadratic model degenerates both to the closed-form coordinate
+//! step (so the same body doubles as cyclic exact CD on the Lasso).
 
-use super::common::{LogisticSolver, Recorder, SolveOptions, SolveResult};
-use crate::objective::LogisticProblem;
+use super::common::{LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
+use crate::objective::{CdObjective, LassoProblem, LogisticProblem};
 use crate::util::rng::Rng;
 
 /// Configuration for the CDN sweep.
@@ -45,28 +50,28 @@ impl ShootingCdn {
     pub fn new(config: CdnConfig) -> Self {
         ShootingCdn { config }
     }
-}
 
-impl LogisticSolver for ShootingCdn {
-    fn name(&self) -> &'static str {
-        "shooting-cdn"
-    }
-
-    fn solve_logistic(
+    /// The single solve loop, generic over the objective.
+    pub fn solve_cd<O: CdObjective>(
         &mut self,
-        prob: &LogisticProblem,
+        obj: &O,
         x0: &[f64],
         opts: &SolveOptions,
     ) -> SolveResult {
-        let d = prob.d();
+        let d = obj.d();
         let mut rng = Rng::new(opts.seed);
         let mut x = x0.to_vec();
-        let mut z = prob.margins(&x);
+        let mut z = obj.init_cache(&x);
         let mut rec = Recorder::new(opts);
-        rec.record(0, prob.objective_from_margins(&z, &x), &x, 0.0, true);
+        rec.record(0, obj.value(&z, &x), &x, 0.0, true);
 
         // active set: indices allowed to move this outer pass
-        let mut active: Vec<usize> = (0..d).collect();
+        let mut active: Vec<usize> = match &opts.shrink.initial_active {
+            Some(ids) if opts.shrink.enabled && !ids.is_empty() => {
+                ids.iter().map(|&j| j as usize).collect()
+            }
+            _ => (0..d).collect(),
+        };
         let mut converged = false;
         let mut outer = 0u64;
         'outer: loop {
@@ -80,28 +85,28 @@ impl LogisticSolver for ShootingCdn {
             let mut sweep_max: f64 = 0.0;
             let mut next_active = Vec::with_capacity(active.len());
             for &j in &active {
-                let g = prob.grad_j(j, &z);
+                let g = obj.grad_j(j, &z);
                 // shrinking test: a zero weight with comfortable
                 // subgradient slack stays zero; drop it this pass
                 if self.config.use_active_set
                     && x[j] == 0.0
-                    && g.abs() < prob.lam * (1.0 - self.config.shrink_slack)
+                    && g.abs() < obj.lam() * (1.0 - self.config.shrink_slack)
                 {
                     continue;
                 }
-                let dir = prob.cdn_direction(j, x[j], &z);
-                let dx = prob.cdn_line_search(j, x[j], dir, &z, 0.0);
-                prob.apply_step(j, dx, &mut x, &mut z);
+                let dir = obj.newton_direction(j, x[j], &z);
+                let dx = obj.line_search(j, x[j], dir, &z);
+                obj.apply_update(j, dx, &mut x, &mut z);
                 rec.updates += 1;
                 sweep_max = sweep_max.max(dx.abs());
                 next_active.push(j);
                 if rec.updates % opts.record_every == 0 {
                     let aux = if opts.aux_every_record {
-                        prob.error_rate(&x)
+                        obj.aux_metric(&x)
                     } else {
                         0.0
                     };
-                    rec.record(outer, prob.objective_from_margins(&z, &x), &x, aux, true);
+                    rec.record(outer, obj.value(&z, &x), &x, aux, true);
                 }
                 if rec.out_of_budget(outer) {
                     break 'outer;
@@ -122,9 +127,42 @@ impl LogisticSolver for ShootingCdn {
                 active = (0..d).collect();
             }
         }
-        let f = prob.objective_from_margins(&z, &x);
+        let f = obj.value(&z, &x);
         rec.record(outer, f, &x, 0.0, true);
         rec.finish("shooting-cdn", x, f, outer, converged)
+    }
+}
+
+impl LogisticSolver for ShootingCdn {
+    fn name(&self) -> &'static str {
+        "shooting-cdn"
+    }
+
+    /// Thin forwarding shim over [`ShootingCdn::solve_cd`].
+    fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
+    }
+}
+
+impl LassoSolver for ShootingCdn {
+    fn name(&self) -> &'static str {
+        "shooting-cdn"
+    }
+
+    /// Thin forwarding shim over [`ShootingCdn::solve_cd`] (cyclic exact
+    /// coordinate minimization for the squared loss).
+    fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
     }
 }
 
@@ -198,6 +236,27 @@ mod tests {
             with.objective,
             without.objective
         );
+    }
+
+    #[test]
+    fn lasso_through_the_same_loop() {
+        // squared loss: the CDN body is cyclic exact CD; must reach the
+        // Shooting optimum
+        let ds = synth::sparco_like(50, 25, 0.4, 7);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.15);
+        let cdn = ShootingCdn::default().solve_lasso(&prob, &vec![0.0; 25], &opts());
+        let mut sh_opts = opts();
+        sh_opts.max_iters = 500_000;
+        let sho = Shooting.solve_lasso(&prob, &vec![0.0; 25], &sh_opts);
+        assert!(cdn.converged, "lasso cdn did not converge");
+        assert!(
+            (cdn.objective - sho.objective).abs() / sho.objective.abs() < 1e-4,
+            "cdn {} vs shooting {}",
+            cdn.objective,
+            sho.objective
+        );
+        let r = prob.residual(&cdn.x);
+        assert!(prob.kkt_violation(&cdn.x, &r) < 1e-6);
     }
 
     #[test]

@@ -6,14 +6,16 @@
 //! every scale — and its O(d²) covariance cache explains *why* it
 //! couldn't run on the paper's 5M-feature data.
 //!
-//! Covariance-mode updates: cache `c_j = A_j^T y` and the Gram rows
-//! `G_jk = A_j^T A_k` for active features, so a coordinate update costs
-//! O(|active|) instead of O(n). Classic cyclic sweeps over the active
-//! set with full-sweep confirmation.
+//! One generic sweep loop over [`CdObjective`]. Covariance-mode updates
+//! (cache `c_j = A_j^T y` and Gram rows `G_jk = A_j^T A_k` so an update
+//! costs O(|active|) instead of O(n)) only exist for the squared loss —
+//! `g_j = sum_k G_jk x_k - c_j` is a quadratic-loss identity — so the
+//! loop gates them on [`Loss::Squared`]; every other loss runs the
+//! naive-mode cyclic sweeps through the shared cache machinery.
 
-use super::common::{LassoSolver, Recorder, SolveOptions, SolveResult};
+use super::common::{LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
 use crate::coordinator::schedule::ActiveSet;
-use crate::objective::LassoProblem;
+use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
 use std::collections::HashMap;
 
 pub struct Glmnet {
@@ -31,35 +33,32 @@ impl Default for Glmnet {
     }
 }
 
-impl LassoSolver for Glmnet {
-    fn name(&self) -> &'static str {
-        "glmnet"
-    }
-
-    fn solve_lasso(
+impl Glmnet {
+    /// The single sweep loop, generic over the objective.
+    pub fn solve_cd<O: CdObjective>(
         &mut self,
-        prob: &LassoProblem,
+        obj: &O,
         x0: &[f64],
         opts: &SolveOptions,
     ) -> SolveResult {
-        let d = prob.d();
-        let a = prob.a;
-        let use_cov = d <= self.covariance_max_d;
+        let d = obj.d();
+        let a = obj.design();
+        let use_cov = obj.loss() == Loss::Squared && d <= self.covariance_max_d;
         let mut x = x0.to_vec();
-        let mut r = prob.residual(&x);
+        let mut r = obj.init_cache(&x);
         let mut rec = Recorder::new(opts);
-        rec.record(0, prob.objective_from_residual(&r, &x), &x, 0.0, true);
+        rec.record(0, obj.value(&r, &x), &x, 0.0, true);
 
         // covariance caches (lazy): c[j] = A_j^T y; gram rows on demand
         let mut c: Vec<f64> = Vec::new();
         if use_cov {
             c = vec![0.0; d];
             for (j, cj) in c.iter_mut().enumerate() {
-                *cj = a.col_dot(j, prob.y);
+                *cj = a.col_dot(j, obj.targets());
             }
         }
         let mut gram: HashMap<(usize, usize), f64> = HashMap::new();
-        let mut gram_col_cache: Vec<f64> = vec![0.0; prob.n()];
+        let mut gram_col_cache: Vec<f64> = vec![0.0; obj.n()];
         let mut gram_of = |j: usize, k: usize, cache: &mut Vec<f64>| -> f64 {
             let key = if j <= k { (j, k) } else { (k, j) };
             *gram.entry(key).or_insert_with(|| {
@@ -76,8 +75,8 @@ impl LassoSolver for Glmnet {
         // and a genuine full-d recheck guards convergence)
         let mut support: Vec<usize> = (0..d).filter(|&j| x[j] != 0.0).collect();
         let shrink = opts.shrink.enabled;
-        let thr = opts.shrink.threshold(prob.lam);
-        let mut sched = ActiveSet::full(d);
+        let thr = opts.shrink.threshold(obj.lam());
+        let mut sched = ActiveSet::for_options(d, &opts.shrink);
         let mut converged = false;
         let mut sweep = 0u64;
         loop {
@@ -101,13 +100,13 @@ impl LassoSolver for Glmnet {
                     // (support always covers support(x): x0's support
                     // seeds it and every non-zero update inserts its
                     // coordinate)
-                    (ax_j, prob.cd_step_from_g(j, x[j], ax_j))
+                    (ax_j, obj.cd_step_from_g(j, x[j], ax_j))
                 } else {
-                    let g = prob.grad_j(j, &r);
-                    (g, prob.cd_step_from_g(j, x[j], g))
+                    let g = obj.grad_j(j, &r);
+                    (g, obj.cd_step_from_g(j, x[j], g))
                 };
                 if dx != 0.0 {
-                    prob.apply_step(j, dx, &mut x, &mut r);
+                    obj.apply_update(j, dx, &mut x, &mut r);
                     rec.updates += 1;
                     if !support.contains(&j) {
                         support.push(j);
@@ -127,14 +126,14 @@ impl LassoSolver for Glmnet {
                 }
                 // the sweep only covered the candidate set: confirm over
                 // all d (reactivating violators) before declaring done.
-                // Always via the residual — going through gram_of here
+                // Always via the cache — going through gram_of here
                 // would populate up to d * |support| Gram entries (O(n)
                 // each), the exact O(d^2) blow-up this solver documents;
-                // one exact residual refresh is O(nnz) total.
+                // one exact cache refresh is O(nnz) total.
                 if use_cov {
-                    r = prob.residual(&x);
+                    r = obj.init_cache(&x);
                 }
-                let worst = sched.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r));
+                let worst = sched.recheck_full(opts.tol, |k| obj.cd_step(k, x[k], &r));
                 if worst < opts.tol {
                     converged = true;
                     break;
@@ -152,12 +151,12 @@ impl LassoSolver for Glmnet {
                                 ax_j += gram_of(j, k, &mut gram_col_cache) * x[k];
                             }
                         }
-                        prob.cd_step_from_g(j, x[j], ax_j)
+                        obj.cd_step_from_g(j, x[j], ax_j)
                     } else {
-                        prob.cd_step(j, x[j], &r)
+                        obj.cd_step(j, x[j], &r)
                     };
                     if dx != 0.0 {
-                        prob.apply_step(j, dx, &mut x, &mut r);
+                        obj.apply_update(j, dx, &mut x, &mut r);
                         rec.updates += 1;
                     }
                     inner_max = inner_max.max(dx.abs());
@@ -174,19 +173,57 @@ impl LassoSolver for Glmnet {
             if sweep % opts.record_every.max(1) == 0 {
                 // covariance mode can drift r; refresh before recording
                 if use_cov {
-                    r = prob.residual(&x);
+                    r = obj.init_cache(&x);
                 }
-                rec.record(sweep, prob.objective_from_residual(&r, &x), &x, 0.0, true);
+                rec.record(sweep, obj.value(&r, &x), &x, 0.0, true);
             }
         }
-        r = prob.residual(&x);
-        let f = prob.objective_from_residual(&r, &x);
+        r = obj.init_cache(&x);
+        let f = obj.value(&r, &x);
         rec.record(sweep, f, &x, 0.0, true);
-        let mut res = rec.finish("glmnet", x, f, sweep, converged);
-        if !use_cov {
+        let base = match obj.loss() {
+            Loss::Squared => "glmnet",
+            Loss::Logistic => "glmnet-logistic",
+        };
+        let mut res = rec.finish(base, x, f, sweep, converged);
+        if obj.loss() == Loss::Squared && !use_cov {
             res.solver = "glmnet-naive".into();
         }
         res
+    }
+}
+
+impl LassoSolver for Glmnet {
+    fn name(&self) -> &'static str {
+        "glmnet"
+    }
+
+    /// Thin forwarding shim over [`Glmnet::solve_cd`].
+    fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
+    }
+}
+
+impl LogisticSolver for Glmnet {
+    fn name(&self) -> &'static str {
+        "glmnet-logistic"
+    }
+
+    /// Thin forwarding shim over [`Glmnet::solve_cd`] — the logistic
+    /// loss always runs naive-mode sweeps (the covariance identity is
+    /// quadratic-only).
+    fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
     }
 }
 
@@ -240,6 +277,33 @@ mod tests {
             "cov {} vs naive {}",
             cov.objective,
             naive.objective
+        );
+    }
+
+    #[test]
+    fn logistic_sweeps_match_shooting() {
+        // the generic loop opens the logistic loss to GLMNET's cyclic
+        // sweep structure (naive mode); same optimum as Shooting
+        let ds = synth::rcv1_like(60, 30, 0.3, 6);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
+        let gl = Glmnet::default().solve_logistic(
+            &prob,
+            &vec![0.0; 30],
+            &SolveOptions {
+                max_iters: 3_000,
+                ..opts()
+            },
+        );
+        assert_eq!(gl.solver, "glmnet-logistic");
+        let mut sh_opts = opts();
+        sh_opts.max_iters = 500_000;
+        sh_opts.tol = 1e-8;
+        let sh = Shooting.solve_logistic(&prob, &vec![0.0; 30], &sh_opts);
+        assert!(
+            (gl.objective - sh.objective).abs() / sh.objective.abs() < 1e-3,
+            "glmnet-logistic {} vs shooting {}",
+            gl.objective,
+            sh.objective
         );
     }
 

@@ -3,18 +3,19 @@
 //! Shotgun discussed in Sec. 4.3 ... scalable in both n and d and,
 //! perhaps, parallelized over both samples and features").
 //!
-//! Strategy implemented here (logistic regression): a short sample-
-//! parallel **SGD warm-start phase** rapidly closes the bulk of the gap
-//! when n is large (SGD's strength, Fig. 4 zeta), then a feature-
-//! parallel **Shotgun CDN refinement phase** drives the tail at CD's
-//! rate (CD's strength, Fig. 4 rcv1). The switch triggers when the SGD
-//! epoch-over-epoch improvement stalls relative to its first epoch.
+//! Strategy implemented here: a short sample-parallel **SGD warm-start
+//! phase** rapidly closes the bulk of the gap when n is large (SGD's
+//! strength, Fig. 4 zeta), then a feature-parallel **Shotgun CDN
+//! refinement phase** drives the tail at CD's rate (CD's strength,
+//! Fig. 4 rcv1). The switch triggers when the SGD epoch-over-epoch
+//! improvement stalls relative to its first epoch. Both phases are
+//! generic over [`CdObjective`], so the hybrid runs either loss.
 
-use super::common::{LogisticSolver, SolveOptions, SolveResult};
+use super::common::{LassoSolver, LogisticSolver, SolveOptions, SolveResult};
 use super::sgd::{Rate, Sgd};
 use crate::coordinator::ShotgunCdn;
 use crate::metrics::Trace;
-use crate::objective::LogisticProblem;
+use crate::objective::{CdObjective, LassoProblem, LogisticProblem};
 
 pub struct HybridSgdShotgun {
     /// SGD phase learning rate (constant; sweep externally if needed).
@@ -39,21 +40,18 @@ impl Default for HybridSgdShotgun {
     }
 }
 
-impl LogisticSolver for HybridSgdShotgun {
-    fn name(&self) -> &'static str {
-        "hybrid-sgd-shotgun"
-    }
-
-    fn solve_logistic(
+impl HybridSgdShotgun {
+    /// The single solve body, generic over the objective.
+    pub fn solve_cd<O: CdObjective>(
         &mut self,
-        prob: &LogisticProblem,
+        obj: &O,
         x0: &[f64],
         opts: &SolveOptions,
     ) -> SolveResult {
         let watch = crate::metrics::Stopwatch::new();
         // --- phase 1: SGD epochs until stall ---
         let mut x = x0.to_vec();
-        let mut f_prev = prob.objective(&x);
+        let mut f_prev = obj.objective_x(&x);
         let mut first_gain: Option<f64> = None;
         let mut trace = Trace::default();
         let mut updates = 0u64;
@@ -69,7 +67,7 @@ impl LogisticSolver for HybridSgdShotgun {
                 seed: opts.seed + epochs,
                 ..opts.clone()
             };
-            let res = sgd.solve_logistic(prob, &x, &epoch_opts);
+            let res = sgd.solve_cd(obj, &x, &epoch_opts);
             x = res.x;
             updates += res.updates;
             epochs += 1;
@@ -109,7 +107,7 @@ impl LogisticSolver for HybridSgdShotgun {
             },
             ..opts.clone()
         };
-        let res = cdn.solve_logistic(prob, &x, &refine_opts);
+        let res = cdn.solve_cd(obj, &x, &refine_opts);
         // merge traces with cumulative clocks
         let t_base = watch.seconds() - res.seconds;
         for p in &res.trace.points {
@@ -128,6 +126,38 @@ impl LogisticSolver for HybridSgdShotgun {
             converged: res.converged,
             trace,
         }
+    }
+}
+
+impl LogisticSolver for HybridSgdShotgun {
+    fn name(&self) -> &'static str {
+        "hybrid-sgd-shotgun"
+    }
+
+    /// Thin forwarding shim over [`HybridSgdShotgun::solve_cd`].
+    fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
+    }
+}
+
+impl LassoSolver for HybridSgdShotgun {
+    fn name(&self) -> &'static str {
+        "hybrid-sgd-shotgun"
+    }
+
+    /// Thin forwarding shim over [`HybridSgdShotgun::solve_cd`].
+    fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
     }
 }
 
@@ -181,6 +211,25 @@ mod tests {
         let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.1);
         let res = HybridSgdShotgun::default().solve_logistic(&prob, &vec![0.0; 80], &opts());
         assert!(res.objective < prob.objective(&vec![0.0; 80]));
+    }
+
+    #[test]
+    fn lasso_loss_through_the_same_body() {
+        // both phases are generic; the hybrid must land on the Lasso
+        // optimum (refinement is exact CD for the squared loss)
+        let ds = synth::sparco_like(200, 20, 0.3, 9);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.05);
+        let res = HybridSgdShotgun {
+            eta: 0.2,
+            ..Default::default()
+        }
+        .solve_lasso(&prob, &vec![0.0; 20], &opts());
+        let r = prob.residual(&res.x);
+        assert!(
+            prob.kkt_violation(&res.x, &r) < 1e-5,
+            "kkt {}",
+            prob.kkt_violation(&res.x, &r)
+        );
     }
 
     #[test]

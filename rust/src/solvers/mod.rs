@@ -7,6 +7,14 @@
 //! compares against in Figs. 3–4, reimplemented in rust on the same
 //! substrates so comparisons are apples-to-apples (removing the
 //! Matlab-vs-C++ confound the paper flags in §4.1.3).
+//!
+//! Every iterative baseline has ONE solve body generic over
+//! [`crate::objective::CdObjective`] (`solve_cd`); the
+//! [`LassoSolver`]/[`LogisticSolver`] trait impls are thin forwarding
+//! shims, so the per-loss duplication the seed carried is gone. [`path`]
+//! is the pathwise orchestrator (lambda schedule, warm starts, shared
+//! [`crate::objective::ProblemCache`], sequential strong rules) that
+//! drives any of them along a regularization path.
 
 pub mod common;
 pub mod shooting;

@@ -4,12 +4,13 @@
 //! Included because it is "one of the few existing methods for parallel
 //! regression" (§4.2.2) — with the paper's caveat that the analysis does
 //! not address L1. Empirically (Fig. 4) it tracks sequential SGD almost
-//! exactly, which our reproduction confirms.
+//! exactly, which our reproduction confirms. Generic over
+//! [`CdObjective`] by delegating to the generic [`Sgd`] epoch loop.
 
-use super::common::{LogisticSolver, SolveOptions, SolveResult};
+use super::common::{LassoSolver, LogisticSolver, SolveOptions, SolveResult};
 use super::sgd::{Rate, Sgd};
 use crate::metrics::{Trace, TracePoint};
-use crate::objective::LogisticProblem;
+use crate::objective::{CdObjective, LassoProblem, LogisticProblem};
 
 pub struct ParallelSgd {
     pub p: usize,
@@ -21,20 +22,15 @@ impl ParallelSgd {
         assert!(p >= 1);
         ParallelSgd { p, rate }
     }
-}
 
-impl LogisticSolver for ParallelSgd {
-    fn name(&self) -> &'static str {
-        "parallel-sgd"
-    }
-
-    fn solve_logistic(
+    /// The single solve body, generic over the objective.
+    pub fn solve_cd<O: CdObjective>(
         &mut self,
-        prob: &LogisticProblem,
+        obj: &O,
         x0: &[f64],
         opts: &SolveOptions,
     ) -> SolveResult {
-        let d = prob.d();
+        let d = obj.d();
         let watch = crate::metrics::Stopwatch::new();
         // P instances with decorrelated seeds over the full data (the
         // shard-partitioned variant is equivalent in expectation for
@@ -44,7 +40,7 @@ impl LogisticSolver for ParallelSgd {
         for k in 0..self.p {
             let mut inner_opts = opts.clone();
             inner_opts.seed = opts.seed.wrapping_add(k as u64).wrapping_mul(0x9E3779B9);
-            let res = Sgd::new(self.rate).solve_logistic(prob, x0, &inner_opts);
+            let res = Sgd::new(self.rate).solve_cd(obj, x0, &inner_opts);
             updates += res.updates;
             runs.push(res);
         }
@@ -70,7 +66,7 @@ impl LogisticSolver for ParallelSgd {
                 aux: pts.iter().map(|p| p.aux).sum::<f64>() / pts.len() as f64,
             });
         }
-        let f = prob.objective(&x);
+        let f = obj.objective_x(&x);
         let iters = runs.iter().map(|r| r.iters).max().unwrap_or(0);
         // final point: the averaged solution
         trace.push(TracePoint {
@@ -91,6 +87,38 @@ impl LogisticSolver for ParallelSgd {
             converged: false,
             trace,
         }
+    }
+}
+
+impl LogisticSolver for ParallelSgd {
+    fn name(&self) -> &'static str {
+        "parallel-sgd"
+    }
+
+    /// Thin forwarding shim over [`ParallelSgd::solve_cd`].
+    fn solve_logistic(
+        &mut self,
+        prob: &LogisticProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
+    }
+}
+
+impl LassoSolver for ParallelSgd {
+    fn name(&self) -> &'static str {
+        "parallel-sgd"
+    }
+
+    /// Thin forwarding shim over [`ParallelSgd::solve_cd`].
+    fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
     }
 }
 
@@ -151,5 +179,14 @@ mod tests {
         let b = ParallelSgd::new(4, Rate::Constant(0.05))
             .solve_logistic(&prob, &vec![0.0; 20], &opts(2));
         assert_eq!(b.updates, 2 * a.updates);
+    }
+
+    #[test]
+    fn lasso_loss_through_the_same_body() {
+        let ds = synth::sparco_like(150, 12, 0.3, 6);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.01);
+        let res = ParallelSgd::new(3, Rate::Constant(0.2))
+            .solve_lasso(&prob, &vec![0.0; 12], &opts(10));
+        assert!(res.objective < prob.objective(&vec![0.0; 12]));
     }
 }

@@ -1,10 +1,15 @@
 //! Shooting — sequential stochastic coordinate descent (paper Alg. 1,
 //! after Fu 1998 / Shalev-Shwartz & Tewari 2009). The P = 1 baseline
 //! that Shotgun generalizes; Theorem 2.1 gives its convergence rate.
+//!
+//! One generic solve loop over [`CdObjective`]; the `LassoSolver` /
+//! `LogisticSolver` impls are thin forwarding shims. The squared loss
+//! keeps its fused gather→step→scatter column kernel through the
+//! trait's `cd_update` (statically dispatched, bit-identical).
 
 use super::common::{LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
 use crate::coordinator::schedule::ActiveSet;
-use crate::objective::{LassoProblem, LogisticProblem};
+use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
 use crate::util::rng::Rng;
 
 /// Sequential SCD. One uniformly-random coordinate per update drawn
@@ -13,27 +18,24 @@ use crate::util::rng::Rng;
 #[derive(Default)]
 pub struct Shooting;
 
-impl LassoSolver for Shooting {
-    fn name(&self) -> &'static str {
-        "shooting"
-    }
-
-    fn solve_lasso(
+impl Shooting {
+    /// The single solve loop, generic over the objective.
+    pub fn solve_cd<O: CdObjective>(
         &mut self,
-        prob: &LassoProblem,
+        obj: &O,
         x0: &[f64],
         opts: &SolveOptions,
     ) -> SolveResult {
-        let d = prob.d();
+        let d = obj.d();
         let mut rng = Rng::new(opts.seed);
         let mut x = x0.to_vec();
-        let mut r = prob.residual(&x);
+        let mut cache = obj.init_cache(&x);
         let mut rec = Recorder::new(opts);
-        rec.record(0, prob.objective_from_residual(&r, &x), &x, 0.0, true);
+        rec.record(0, obj.value(&cache, &x), &x, 0.0, true);
 
         let shrink = opts.shrink.enabled;
-        let thr = opts.shrink.threshold(prob.lam);
-        let mut active = ActiveSet::full(d);
+        let thr = opts.shrink.threshold(obj.lam());
+        let mut active = ActiveSet::for_options(d, &opts.shrink);
 
         // convergence window: max |dx| over the last d updates
         let mut window_max: f64 = 0.0;
@@ -43,17 +45,18 @@ impl LassoSolver for Shooting {
             if active.is_empty() {
                 // everything pruned: the full KKT sweep either certifies
                 // the optimum or refills the set with the violators
-                if active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r)) < opts.tol {
+                if active.recheck_full(opts.tol, |k| obj.cd_step(k, x[k], &cache)) < opts.tol {
                     converged = true;
-                    rec.record(iter, prob.objective_from_residual(&r, &x), &x, 0.0, true);
+                    rec.record(iter, obj.value(&cache, &x), &x, 0.0, true);
                     break;
                 }
                 continue;
             }
             iter += 1;
             let j = active.draw(&mut rng);
-            // fused gather -> step -> scatter: one column walk per update
-            let (g, dx) = prob.cd_update(j, &mut x, &mut r);
+            // fused gather -> step -> scatter where the loss allows it
+            // (squared: one column walk per update)
+            let (g, dx) = obj.cd_update(j, &mut x, &mut cache);
             rec.updates += 1;
             window_max = window_max.max(dx.abs());
             if shrink && dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
@@ -65,22 +68,47 @@ impl LassoSolver for Shooting {
                 // (reactivates any pruned violator, so shrinking cannot
                 // change the optimum)
                 if window_max < opts.tol
-                    && active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r)) < opts.tol
+                    && active.recheck_full(opts.tol, |k| obj.cd_step(k, x[k], &cache)) < opts.tol
                 {
                     converged = true;
-                    rec.record(iter, prob.objective_from_residual(&r, &x), &x, 0.0, true);
+                    rec.record(iter, obj.value(&cache, &x), &x, 0.0, true);
                     break;
                 }
                 window_max = 0.0;
             }
             // objective evaluation is O(n); only pay it on the cadence
             if iter % opts.record_every == 0 {
-                rec.record(iter, prob.objective_from_residual(&r, &x), &x, 0.0, true);
+                let aux = if opts.aux_every_record {
+                    obj.aux_metric(&x)
+                } else {
+                    0.0
+                };
+                rec.record(iter, obj.value(&cache, &x), &x, aux, true);
             }
         }
-        let f = prob.objective_from_residual(&r, &x);
+        let f = obj.value(&cache, &x);
         rec.record(iter, f, &x, 0.0, true);
-        rec.finish("shooting", x, f, iter, converged)
+        let base = match obj.loss() {
+            Loss::Squared => "shooting",
+            Loss::Logistic => "shooting-logistic",
+        };
+        rec.finish(base, x, f, iter, converged)
+    }
+}
+
+impl LassoSolver for Shooting {
+    fn name(&self) -> &'static str {
+        "shooting"
+    }
+
+    /// Thin forwarding shim over [`Shooting::solve_cd`].
+    fn solve_lasso(
+        &mut self,
+        prob: &LassoProblem,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(prob, x0, opts)
     }
 }
 
@@ -89,65 +117,14 @@ impl LogisticSolver for Shooting {
         "shooting-logistic"
     }
 
+    /// Thin forwarding shim over [`Shooting::solve_cd`].
     fn solve_logistic(
         &mut self,
         prob: &LogisticProblem,
         x0: &[f64],
         opts: &SolveOptions,
     ) -> SolveResult {
-        let d = prob.d();
-        let mut rng = Rng::new(opts.seed);
-        let mut x = x0.to_vec();
-        let mut z = prob.margins(&x);
-        let mut rec = Recorder::new(opts);
-        rec.record(0, prob.objective_from_margins(&z, &x), &x, 0.0, true);
-
-        let shrink = opts.shrink.enabled;
-        let thr = opts.shrink.threshold(prob.lam);
-        let mut active = ActiveSet::full(d);
-
-        let mut window_max: f64 = 0.0;
-        let mut converged = false;
-        let mut iter = 0u64;
-        while !rec.out_of_budget(iter) {
-            if active.is_empty() {
-                if active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &z)) < opts.tol {
-                    converged = true;
-                    break;
-                }
-                continue;
-            }
-            iter += 1;
-            let j = active.draw(&mut rng);
-            let g = prob.grad_j(j, &z);
-            let dx = prob.cd_step_from_g(j, x[j], g);
-            prob.apply_step(j, dx, &mut x, &mut z);
-            rec.updates += 1;
-            window_max = window_max.max(dx.abs());
-            if shrink && dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
-                active.prune(j);
-            }
-            if iter % d as u64 == 0 {
-                if window_max < opts.tol
-                    && active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &z)) < opts.tol
-                {
-                    converged = true;
-                    break;
-                }
-                window_max = 0.0;
-            }
-            if iter % opts.record_every == 0 {
-                let aux = if opts.aux_every_record {
-                    prob.error_rate(&x)
-                } else {
-                    0.0
-                };
-                rec.record(iter, prob.objective_from_margins(&z, &x), &x, aux, true);
-            }
-        }
-        let f = prob.objective_from_margins(&z, &x);
-        rec.record(iter, f, &x, 0.0, true);
-        rec.finish("shooting-logistic", x, f, iter, converged)
+        self.solve_cd(prob, x0, opts)
     }
 }
 
@@ -199,6 +176,7 @@ mod tests {
         let f0 = prob.objective(&vec![0.0; 40]);
         assert!(res.objective < f0, "F {} !< F(0) {}", res.objective, f0);
         assert!(res.trace.is_monotone_nonincreasing(1e-9));
+        assert_eq!(res.solver, "shooting-logistic");
     }
 
     #[test]

@@ -62,6 +62,44 @@ pub fn random_lasso(rng: &mut Rng) -> RandomLasso {
     }
 }
 
+/// Random dense column-normalized design + ±1 labels, for the logistic
+/// cross-loss property tests.
+pub struct RandomLogistic {
+    pub n: usize,
+    pub d: usize,
+    pub a: crate::sparsela::Design,
+    pub y: Vec<f64>,
+    pub lam: f64,
+}
+
+impl std::fmt::Debug for RandomLogistic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "RandomLogistic(n={}, d={}, lam={:.4})",
+            self.n, self.d, self.lam
+        )
+    }
+}
+
+/// Sample a random sparse-logistic instance with n in [8, 40], d in
+/// [2, 30] and lambda small enough that solutions stay non-trivial.
+pub fn random_logistic(rng: &mut Rng) -> RandomLogistic {
+    let n = 8 + rng.below(33);
+    let d = 2 + rng.below(29);
+    let mut m = crate::sparsela::DenseMatrix::from_fn(n, d, |_, _| rng.normal());
+    m.normalize_columns();
+    let y: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+    let lam = 0.01 + 0.2 * rng.uniform();
+    RandomLogistic {
+        n,
+        d,
+        a: crate::sparsela::Design::Dense(m),
+        y,
+        lam,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +141,18 @@ mod tests {
             assert_eq!(c.a.n(), c.n);
             assert_eq!(c.a.d(), c.d);
             assert_eq!(c.y.len(), c.n);
+            assert!(c.lam > 0.0);
+        }
+    }
+
+    #[test]
+    fn random_logistic_shapes() {
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let c = random_logistic(&mut rng);
+            assert_eq!(c.a.n(), c.n);
+            assert_eq!(c.a.d(), c.d);
+            assert!(c.y.iter().all(|&v| v == 1.0 || v == -1.0));
             assert!(c.lam > 0.0);
         }
     }

@@ -1,12 +1,12 @@
 //! Property-based tests on the coordinator invariants (testkit::check is
 //! the proptest substitute — see DESIGN.md §Environment-substitutions).
 
-use shotgun::coordinator::{ShotgunConfig, ShotgunExact, ShrinkConfig};
-use shotgun::objective::LassoProblem;
+use shotgun::coordinator::{ActiveSet, ShotgunConfig, ShotgunExact, ShrinkConfig};
+use shotgun::objective::{LassoProblem, LogisticProblem};
 use shotgun::sparsela::{power, vecops, CscMatrix, Design, DenseMatrix};
-use shotgun::solvers::common::{LassoSolver as _, SolveOptions};
+use shotgun::solvers::common::{LassoSolver as _, LogisticSolver as _, SolveOptions};
 use shotgun::solvers::shooting::Shooting;
-use shotgun::testkit::{check, random_lasso};
+use shotgun::testkit::{check, random_lasso, random_logistic};
 use shotgun::util::rng::Rng;
 
 #[test]
@@ -200,6 +200,223 @@ fn prop_csc_roundtrip_and_validate() {
             }
             Ok(())
         },
+    );
+}
+
+/// Transcription of the PRE-refactor per-loss `Shooting::solve_lasso`
+/// body (inherent problem methods + scheduler only, no `CdObjective`):
+/// the regression oracle for the generic `solve_cd` path.
+fn reference_shooting_lasso(prob: &LassoProblem, opts: &SolveOptions) -> Vec<f64> {
+    let d = prob.d();
+    let mut rng = Rng::new(opts.seed);
+    let mut x = vec![0.0; d];
+    let mut r = prob.residual(&x);
+    let shrink = opts.shrink.enabled;
+    let thr = opts.shrink.threshold(prob.lam);
+    let mut active = ActiveSet::full(d);
+    let mut window_max: f64 = 0.0;
+    let mut iter = 0u64;
+    while iter < opts.max_iters {
+        if active.is_empty() {
+            if active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r)) < opts.tol {
+                break;
+            }
+            continue;
+        }
+        iter += 1;
+        let j = active.draw(&mut rng);
+        let (g, dx) = prob.cd_update(j, &mut x, &mut r);
+        window_max = window_max.max(dx.abs());
+        if shrink && dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
+            active.prune(j);
+        }
+        if iter % d as u64 == 0 {
+            if window_max < opts.tol
+                && active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &r)) < opts.tol
+            {
+                break;
+            }
+            window_max = 0.0;
+        }
+    }
+    x
+}
+
+/// Pre-refactor per-loss `Shooting::solve_logistic` body (split
+/// grad → step → apply sequence over the margin cache).
+fn reference_shooting_logistic(prob: &LogisticProblem, opts: &SolveOptions) -> Vec<f64> {
+    let d = prob.d();
+    let mut rng = Rng::new(opts.seed);
+    let mut x = vec![0.0; d];
+    let mut z = prob.margins(&x);
+    let shrink = opts.shrink.enabled;
+    let thr = opts.shrink.threshold(prob.lam);
+    let mut active = ActiveSet::full(d);
+    let mut window_max: f64 = 0.0;
+    let mut iter = 0u64;
+    while iter < opts.max_iters {
+        if active.is_empty() {
+            if active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &z)) < opts.tol {
+                break;
+            }
+            continue;
+        }
+        iter += 1;
+        let j = active.draw(&mut rng);
+        let g = prob.grad_j(j, &z);
+        let dx = prob.cd_step_from_g(j, x[j], g);
+        prob.apply_step(j, dx, &mut x, &mut z);
+        window_max = window_max.max(dx.abs());
+        if shrink && dx == 0.0 && x[j] == 0.0 && g.abs() < thr {
+            active.prune(j);
+        }
+        if iter % d as u64 == 0 {
+            if window_max < opts.tol
+                && active.recheck_full(opts.tol, |k| prob.cd_step(k, x[k], &z)) < opts.tol
+            {
+                break;
+            }
+            window_max = 0.0;
+        }
+    }
+    x
+}
+
+#[test]
+fn prop_generic_lasso_bit_identical_to_per_loss_reference() {
+    // the multi-layer refactor's contract: the generic solve_cd path is
+    // BIT-identical to the pre-refactor per-loss loop on seeded problems
+    check(
+        "generic-lasso-bit-identity",
+        47,
+        15,
+        random_lasso,
+        |case| {
+            let prob = LassoProblem::new(&case.a, &case.y, case.lam);
+            let opts = SolveOptions {
+                max_iters: 4_000,
+                tol: 1e-10,
+                record_every: u64::MAX,
+                seed: 9,
+                ..Default::default()
+            };
+            let generic = Shooting.solve_lasso(&prob, &vec![0.0; case.d], &opts);
+            let reference = reference_shooting_lasso(&prob, &opts);
+            for (j, (a, b)) in generic.x.iter().zip(&reference).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("x[{j}] differs: generic {a} vs reference {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_generic_logistic_bit_identical_to_per_loss_reference() {
+    check(
+        "generic-logistic-bit-identity",
+        53,
+        15,
+        random_logistic,
+        |case| {
+            let prob = LogisticProblem::new(&case.a, &case.y, case.lam);
+            let opts = SolveOptions {
+                max_iters: 4_000,
+                tol: 1e-10,
+                record_every: u64::MAX,
+                seed: 11,
+                ..Default::default()
+            };
+            let generic = Shooting.solve_logistic(&prob, &vec![0.0; case.d], &opts);
+            let reference = reference_shooting_logistic(&prob, &opts);
+            for (j, (a, b)) in generic.x.iter().zip(&reference).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("x[{j}] differs: generic {a} vs reference {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_strong_rules_never_lose_a_support_coordinate() {
+    // sequential strong rules screen coordinates per path stage; the
+    // engines' full KKT recheck must rescue every wrongly pruned one —
+    // so a coordinate that is nonzero at the direct optimum can never
+    // end the strong-rules path pruned-and-zero
+    use shotgun::solvers::path::{solve_path_lasso, strong_rule_keep, PathConfig};
+    let mut screened_total = 0usize;
+    check(
+        "strong-rules-support-safe",
+        59,
+        10,
+        random_lasso,
+        |case| {
+            let lam_max = LassoProblem::new(&case.a, &case.y, 0.0).lambda_max();
+            let lam = (0.15 * lam_max).max(1e-6);
+            let opts = SolveOptions {
+                max_iters: 400_000,
+                tol: 1e-9,
+                record_every: u64::MAX,
+                seed: 13,
+                ..Default::default()
+            };
+            let strong = solve_path_lasso(
+                &case.a,
+                &case.y,
+                lam,
+                &PathConfig {
+                    stages: 5,
+                    strong_rules: true,
+                },
+                &opts,
+                |p, x0, o| Shooting.solve_lasso(p, x0, o),
+            );
+            let direct = {
+                let prob = LassoProblem::new(&case.a, &case.y, lam);
+                Shooting.solve_lasso(&prob, &vec![0.0; case.d], &opts)
+            };
+            if !(strong.converged && direct.converged) {
+                return Ok(()); // budget-bound, not a property violation
+            }
+            let prob = LassoProblem::new(&case.a, &case.y, lam);
+            let r = prob.residual(&strong.x);
+            let kkt = prob.kkt_violation(&strong.x, &r);
+            if kkt > 1e-5 {
+                return Err(format!("kkt {kkt} at the strong-rules solution"));
+            }
+            let gap = (strong.objective - direct.objective).abs()
+                / direct.objective.abs().max(1e-12);
+            if gap > 1e-3 {
+                return Err(format!(
+                    "strong rules moved the optimum: {} vs {} (gap {gap:.2e})",
+                    strong.objective, direct.objective
+                ));
+            }
+            // every solid support coordinate of the direct optimum must
+            // survive in the strong-rules solution
+            for j in 0..case.d {
+                if direct.x[j].abs() > 1e-5 && strong.x[j] == 0.0 {
+                    return Err(format!(
+                        "support coordinate {j} (direct x={}) ended pruned-and-zero",
+                        direct.x[j]
+                    ));
+                }
+            }
+            // accounting: make sure screening actually engages somewhere
+            // across the case set (otherwise this test is vacuous)
+            let mid = LassoProblem::new(&case.a, &case.y, lam * 1.5);
+            let warm = Shooting.solve_lasso(&mid, &vec![0.0; case.d], &opts);
+            let keep = strong_rule_keep(&prob, &warm.x, lam, lam * 1.5);
+            screened_total += case.d - keep.len();
+            Ok(())
+        },
+    );
+    assert!(
+        screened_total > 0,
+        "strong rule screened nothing across all cases — test is vacuous"
     );
 }
 

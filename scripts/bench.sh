@@ -1,6 +1,8 @@
 #!/usr/bin/env bash
 # Run the hot-path microbenchmarks and refresh BENCH_hotpath.json (the
-# machine-readable perf trajectory tracked across PRs).
+# machine-readable perf trajectory tracked across PRs). Includes the
+# pathwise strong-rules on/off comparison (derived.path_strong_speedup
+# and derived.path_strong_objective_rel_gap).
 #
 # Usage: scripts/bench.sh [extra cargo bench args]
 set -euo pipefail

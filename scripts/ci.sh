@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, and the tier-1 verify command.
+#
+#   scripts/ci.sh          run everything
+#   scripts/ci.sh fast     skip the release build (fmt + clippy + tests)
+#
+# Mirrors .github/workflows/ci.yml so the gate is reproducible locally.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+cargo fmt --all -- --check
+
+echo "== cargo clippy (deny warnings) =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+if [[ "${1:-}" != "fast" ]]; then
+  echo "== tier-1: cargo build --release =="
+  cargo build --release
+fi
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "CI gate passed."
