@@ -1,14 +1,15 @@
-//! Quickstart: solve a Lasso with Shotgun and inspect the result.
+//! Quickstart: solve a Lasso through the `api::Fit` front door.
 //!
 //!   cargo run --release --example quickstart
 //!
-//! Walks the core API: generate data, estimate P* from the spectral
-//! radius (Theorem 3.2), solve with Shotgun at that P, verify optimality.
+//! Walks the core API: generate data, let `Engine::Auto` estimate P*
+//! from the spectral radius (Theorem 3.2) and pick the engine, inspect
+//! the servable model, verify optimality, and compare against the
+//! sequential baseline by name.
 
-use shotgun::coordinator::{PStar, Shotgun, ShotgunConfig};
+use shotgun::api::{Engine, Fit, SolverParams};
 use shotgun::data::synth;
 use shotgun::objective::LassoProblem;
-use shotgun::solvers::common::{LassoSolver, SolveOptions};
 
 fn main() {
     // 1. a sparse compressed-imaging style problem (d = 2n, ±1 entries)
@@ -21,50 +22,73 @@ fn main() {
         100.0 * ds.design.density()
     );
 
-    // 2. how parallel can coordinate descent go on this data?
-    //    Theorem 3.2: P* = ceil(d / rho(A^T A)); rho via power iteration
-    let est = PStar::quick(&ds.design, 1);
-    println!(
-        "rho(A^T A) = {:.3} -> P* = {} (estimated in {:.3}s)",
-        est.rho, est.p_star, est.seconds
-    );
-
-    // 3. solve the Lasso with Shotgun at P = min(8, P*)
-    let p = est.clamp(8);
+    // 2. solve with Engine::Auto — Theorem 3.2 (P* = ceil(d/rho), rho by
+    //    power iteration) picks the parallelism, so there is no P knob
+    //    to mis-set
     let lam = 0.1;
-    let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
-    let mut solver = Shotgun::new(ShotgunConfig {
-        p,
-        ..Default::default()
-    });
-    let opts = SolveOptions {
-        max_iters: 2_000_000,
-        tol: 1e-8,
-        record_every: 512,
-        ..Default::default()
-    };
-    let res = solver.solve_lasso(&prob, &vec![0.0; ds.d()], &opts);
+    let report = Fit::new(&ds.design, &ds.targets)
+        .lambda(lam)
+        .engine(Engine::Auto)
+        .options(|o| {
+            o.max_iters = 2_000_000;
+            o.tol = 1e-8;
+            o.record_every = 512;
+        })
+        .run()
+        .expect("validated inputs solve");
+    let auto = report.auto.as_ref().expect("auto reports its choice");
+    println!(
+        "rho(A^T A) = {:.3} -> P* = {}, running {} at P = {}",
+        auto.rho,
+        auto.p_star,
+        if auto.threaded { "threaded" } else { "exact" },
+        auto.p
+    );
+    let res = &report.diagnostics;
     println!(
         "{}: F = {:.6}, {} nonzeros, {} rounds ({} updates) in {:.3}s",
         res.solver,
         res.objective,
-        res.nnz(),
+        report.model.nnz(),
         res.iters,
         res.updates,
         res.seconds
     );
 
-    // 4. certify: KKT violation at the solution should be ~0
+    // 3. certify: KKT violation at the solution should be ~0
+    let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
     let r = prob.residual(&res.x);
     println!("KKT violation: {:.2e}", prob.kkt_violation(&res.x, &r));
 
-    // 5. compare with sequential Shooting (P = 1) on iterations
-    let mut sequential = Shotgun::with_p(1);
-    let seq = sequential.solve_lasso(&prob, &vec![0.0; ds.d()], &opts);
+    // 4. compare with sequential Shotgun (P = 1) on iterations, picked
+    //    from the same registry by name
+    let seq = Fit::new(&ds.design, &ds.targets)
+        .lambda(lam)
+        .solver("shotgun")
+        .params(SolverParams {
+            p: 1,
+            ..Default::default()
+        })
+        .options(|o| {
+            o.max_iters = 2_000_000;
+            o.tol = 1e-8;
+            o.record_every = 512;
+        })
+        .run()
+        .expect("sequential baseline solves");
     println!(
-        "Shooting (P=1): {} rounds; Shotgun (P={p}): {} rounds -> {:.1}x fewer",
-        seq.iters,
+        "Shotgun P=1: {} rounds; auto (P={}): {} rounds -> {:.1}x fewer",
+        seq.diagnostics.iters,
+        auto.p,
         res.iters,
-        seq.iters as f64 / res.iters.max(1) as f64
+        seq.diagnostics.iters as f64 / res.iters.max(1) as f64
+    );
+
+    // 5. the fit is a servable artifact: JSON out, JSON in, same model
+    let restored = shotgun::api::Model::from_json(&report.model.to_json()).expect("roundtrip");
+    assert_eq!(restored, report.model);
+    println!(
+        "model JSON round-trip OK ({} stored weights)",
+        restored.weights().len()
     );
 }

@@ -1,0 +1,85 @@
+//! Serving repeated fits — the ROADMAP's "heavy traffic on one design"
+//! scenario, end to end through the `api` front door:
+//!
+//!   cargo run --release --example serving
+//!
+//! 1. load one design, build its `ProblemCache` ONCE (the O(nnz)
+//!    metadata pass);
+//! 2. serve a stream of fit requests (different lambdas/losses) through
+//!    `Fit`, each reusing the cache — per-request setup is an Arc bump;
+//! 3. ship the winning model as JSON, reload it in a "scorer" that
+//!    never sees the training stack, and verify predictions match
+//!    bit-for-bit.
+
+use shotgun::api::{Fit, Model, PathSpec};
+use shotgun::data::synth;
+use shotgun::objective::ProblemCache;
+
+fn main() {
+    // --- load time: one design, one metadata pass ---
+    let ds = synth::sparse_imaging(512, 1024, 0.02, 2026);
+    let cache = ProblemCache::new(&ds.design);
+    println!(
+        "design loaded: n={}, d={}, {:.1}% nonzero; ProblemCache built once",
+        ds.n(),
+        ds.d(),
+        100.0 * ds.design.density()
+    );
+
+    // --- request stream: fits at several regularization strengths ---
+    let mut models = Vec::new();
+    for lam in [0.8, 0.4, 0.2, 0.1] {
+        let report = Fit::new(&ds.design, &ds.targets)
+            .lambda(lam)
+            .solver("shotgun")
+            .p(8)
+            .cache(&cache) // no per-request O(nnz) pass
+            .options(|o| {
+                o.max_iters = 2_000_000;
+                o.tol = 1e-7;
+            })
+            .run()
+            .expect("validated request");
+        println!(
+            "  lam={lam:<4} -> F = {:.6}, nnz = {:>4}, {} updates, {:.3}s",
+            report.objective(),
+            report.model.nnz(),
+            report.diagnostics.updates,
+            report.diagnostics.seconds
+        );
+        models.push(report.model);
+    }
+
+    // a pathwise fit amortizes even further: one request, whole path
+    let path_report = Fit::new(&ds.design, &ds.targets)
+        .path(PathSpec::to(0.1))
+        .solver("shotgun")
+        .p(8)
+        .cache(&cache)
+        .options(|o| o.max_iters = 2_000_000)
+        .run()
+        .expect("pathwise request");
+    println!(
+        "pathwise to lam=0.1: {} ({} updates total)",
+        path_report.diagnostics.solver, path_report.diagnostics.updates
+    );
+
+    // --- ship the artifact ---
+    let chosen = models.last().expect("served at least one fit");
+    let doc = chosen.to_json();
+    println!("shipping model: {} bytes of JSON", doc.len());
+
+    // --- scorer process: reload and serve ---
+    let scorer = Model::from_json(&doc).expect("artifact parses");
+    let before = chosen.predict(&ds.design).expect("predict");
+    let after = scorer.predict(&ds.design).expect("predict");
+    let identical = before
+        .iter()
+        .zip(&after)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "reloaded model predictions bit-identical: {identical} (provenance: solver={}, lam={})",
+        scorer.solver, scorer.lam
+    );
+    assert!(identical);
+}

@@ -1,0 +1,153 @@
+//! `ShotgunError` — structured, typed errors for the public API.
+//!
+//! Every failure mode of the [`Fit`](crate::api::Fit) front door is a
+//! dedicated variant, so callers can branch on *what* went wrong instead
+//! of parsing panic strings. Validation happens once, at the builder
+//! boundary; the solver hot paths behind it keep their internal
+//! invariant `assert!`s as a backstop but are never reached with bad
+//! input through the API.
+//!
+//! Built on [`crate::util::err`]: a [`ShotgunError`] converts into the
+//! crate's string-backed `Error` (and therefore composes with the
+//! runtime layer's `Result` alias) via `From`.
+
+use crate::objective::Loss;
+use std::fmt;
+
+/// A typed failure from the `shotgun::api` front door.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShotgunError {
+    /// The design matrix has zero rows or zero columns.
+    EmptyDesign { n: usize, d: usize },
+    /// A vector's length does not match the design (`what` names it).
+    DimensionMismatch {
+        what: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// A NaN/inf slipped into an input vector (`what` names it).
+    NonFinite {
+        what: &'static str,
+        index: usize,
+        value: f64,
+    },
+    /// Logistic labels must be exactly ±1.
+    BadLabel { index: usize, value: f64 },
+    /// Lambda is missing, negative, or non-finite.
+    InvalidLambda { lam: f64, reason: &'static str },
+    /// A pathwise request is malformed (non-positive target, zero stages).
+    InvalidPath { reason: String },
+    /// No solver registered under this name; `known` lists the registry.
+    UnknownSolver {
+        name: String,
+        known: Vec<&'static str>,
+    },
+    /// The chosen solver does not support the requested loss.
+    LossUnsupported { solver: String, loss: Loss },
+    /// `predict_proba` on a loss with no probabilistic read-out.
+    ProbaUnsupported { loss: Loss },
+    /// The iteration/time budget ran out before convergence — a *typed*
+    /// outcome, surfaced only when the caller opted into
+    /// [`require_convergence`](crate::api::Fit::require_convergence).
+    BudgetExhausted {
+        iters: u64,
+        seconds: f64,
+        objective: f64,
+    },
+    /// A serialized [`Model`](crate::api::Model) failed to parse.
+    ModelFormat { reason: String },
+}
+
+fn loss_name(loss: Loss) -> &'static str {
+    match loss {
+        Loss::Squared => "squared",
+        Loss::Logistic => "logistic",
+    }
+}
+
+impl fmt::Display for ShotgunError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShotgunError::EmptyDesign { n, d } => {
+                write!(f, "empty design matrix ({n} rows x {d} columns)")
+            }
+            ShotgunError::DimensionMismatch {
+                what,
+                expected,
+                got,
+            } => write!(f, "{what}: expected length {expected}, got {got}"),
+            ShotgunError::NonFinite { what, index, value } => {
+                write!(f, "{what}[{index}] is not finite ({value})")
+            }
+            ShotgunError::BadLabel { index, value } => write!(
+                f,
+                "logistic labels must be +1 or -1, but targets[{index}] = {value}"
+            ),
+            ShotgunError::InvalidLambda { lam, reason } => {
+                write!(f, "invalid lambda {lam}: {reason}")
+            }
+            ShotgunError::InvalidPath { reason } => write!(f, "invalid path spec: {reason}"),
+            ShotgunError::UnknownSolver { name, known } => write!(
+                f,
+                "unknown solver {name:?}; registered solvers: {}",
+                known.join(", ")
+            ),
+            ShotgunError::LossUnsupported { solver, loss } => write!(
+                f,
+                "solver {solver:?} does not support the {} loss",
+                loss_name(*loss)
+            ),
+            ShotgunError::ProbaUnsupported { loss } => write!(
+                f,
+                "predict_proba is undefined for the {} loss (use predict or decision_function)",
+                loss_name(*loss)
+            ),
+            ShotgunError::BudgetExhausted {
+                iters,
+                seconds,
+                objective,
+            } => write!(
+                f,
+                "budget exhausted without convergence after {iters} iterations \
+                 ({seconds:.3}s, F = {objective})"
+            ),
+            ShotgunError::ModelFormat { reason } => {
+                write!(f, "malformed model document: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShotgunError {}
+
+impl From<ShotgunError> for crate::util::err::Error {
+    fn from(e: ShotgunError) -> Self {
+        crate::util::err::Error::msg(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let e = ShotgunError::UnknownSolver {
+            name: "shotgnu".into(),
+            known: vec!["shotgun", "shooting"],
+        };
+        let s = e.to_string();
+        assert!(s.contains("shotgnu") && s.contains("shotgun, shooting"), "{s}");
+        let e = ShotgunError::LossUnsupported {
+            solver: "l1-ls".into(),
+            loss: Loss::Logistic,
+        };
+        assert!(e.to_string().contains("logistic"), "{e}");
+    }
+
+    #[test]
+    fn converts_into_util_error() {
+        let e: crate::util::err::Error = ShotgunError::EmptyDesign { n: 0, d: 5 }.into();
+        assert!(e.to_string().contains("empty design"));
+    }
+}

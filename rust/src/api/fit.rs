@@ -1,0 +1,644 @@
+//! `Fit` — the fluent builder that is the crate's single entry point.
+//!
+//! ```
+//! use shotgun::api::{Engine, Fit};
+//! use shotgun::data::synth;
+//!
+//! let ds = synth::sparco_like(60, 40, 0.3, 42);
+//! let report = Fit::new(&ds.design, &ds.targets)
+//!     .lambda(0.5)
+//!     .engine(Engine::Auto) // Theorem 3.2 picks P
+//!     .run()
+//!     .expect("validated inputs solve");
+//! assert!(report.diagnostics.converged);
+//! ```
+//!
+//! `Engine::Auto` is the default: it runs the paper's power-iteration
+//! estimate of `rho(A^T A)` and picks `P* = ceil(d/rho)` (Theorem 3.2)
+//! clamped to the hardware — the headline theory as default UX. Named
+//! solvers come from the [`SolverRegistry`]; pathwise requests route
+//! through [`solve_path_cd`](crate::solvers::path::solve_path_cd) with a
+//! shared [`ProblemCache`], so repeated fits on one design (the serving
+//! scenario) never recompute `col_sq` — pass [`Fit::cache`] to share it
+//! across calls too.
+//!
+//! Input validation happens here, once, and returns [`ShotgunError`]
+//! instead of panicking: dimensions, targets/labels/warm-start
+//! finiteness, lambda/path sanity, solver existence and loss support.
+//! Design matrix *entries* are deliberately trusted (scanning them
+//! would cost an O(nnz) pass per fit, defeating the serving pattern);
+//! a non-finite design surfaces as a non-finite objective in the
+//! report, not as a typed input error.
+
+use super::error::ShotgunError;
+use super::model::Model;
+use super::registry::{ProblemRef, SolverParams, SolverRegistry};
+use crate::coordinator::PStar;
+use crate::objective::{LassoProblem, LogisticProblem, Loss, ProblemCache};
+use crate::solvers::common::{SolveOptions, SolveResult};
+use crate::solvers::path::{solve_path_cd, PathConfig};
+use crate::sparsela::Design;
+
+/// Minimum design nnz before `Engine::Auto` reaches for the threaded
+/// engine — below it, thread spin-up dominates the solve.
+const AUTO_THREADED_MIN_NNZ: usize = 1 << 18;
+
+/// Execution engine selection for the Shotgun coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Estimate `P* = ceil(d/rho)` (Theorem 3.2) by power iteration,
+    /// clamp to the hardware, and pick exact vs threaded by problem
+    /// size. The default.
+    Auto,
+    /// Synchronous exact engine (deterministic) at a fixed P.
+    Exact { p: usize },
+    /// Asynchronous multicore engine (the paper's implementation) at a
+    /// fixed P.
+    Threaded { p: usize },
+}
+
+/// What `Engine::Auto` decided, reported back in [`FitReport::auto`].
+#[derive(Clone, Debug)]
+pub struct AutoChoice {
+    /// Power-iteration estimate of the spectral radius of `A^T A`.
+    pub rho: f64,
+    /// Theorem 3.2's `P* = ceil(d/rho)`.
+    pub p_star: usize,
+    /// The P actually used (`P*` clamped to available parallelism).
+    pub p: usize,
+    /// Whether the threaded engine was chosen over exact.
+    pub threaded: bool,
+}
+
+impl AutoChoice {
+    /// The concrete engine this choice resolved to. `Engine::Auto` pays
+    /// a power-iteration pass per fit; serving loops over one design
+    /// should run Auto once and feed this back via [`Fit::engine`] so
+    /// repeated fits skip the estimate (`rho` depends only on the
+    /// design, not on lambda or the loss).
+    pub fn engine(&self) -> Engine {
+        if self.threaded {
+            Engine::Threaded { p: self.p }
+        } else {
+            Engine::Exact { p: self.p }
+        }
+    }
+}
+
+/// A pathwise (regularization-path) request: solve a geometric lambda
+/// schedule down to `lam_target` with warm starts and (optionally)
+/// sequential strong rules.
+#[derive(Clone, Debug)]
+pub struct PathSpec {
+    /// Final (smallest) lambda — the one the returned model is fit at.
+    pub lam_target: f64,
+    /// Number of geometric stages (default 6).
+    pub stages: usize,
+    /// Sequential strong-rule screening between stages (default on).
+    pub strong_rules: bool,
+}
+
+impl PathSpec {
+    /// A default-shaped path down to `lam_target`.
+    pub fn to(lam_target: f64) -> PathSpec {
+        PathSpec {
+            lam_target,
+            stages: 6,
+            strong_rules: true,
+        }
+    }
+}
+
+/// The outcome of [`Fit::run`]: the servable [`Model`] plus the raw
+/// solve diagnostics (`SolveResult` stays the internal carrier), and
+/// what `Engine::Auto` decided when it drove.
+#[derive(Clone, Debug)]
+pub struct FitReport {
+    pub model: Model,
+    pub diagnostics: SolveResult,
+    pub auto: Option<AutoChoice>,
+}
+
+impl FitReport {
+    /// Final objective value `F(x)`.
+    pub fn objective(&self) -> f64 {
+        self.diagnostics.objective
+    }
+
+    /// Did the solve meet tolerance within budget?
+    pub fn converged(&self) -> bool {
+        self.diagnostics.converged
+    }
+}
+
+enum Choice {
+    Name(String),
+    Engine(Engine),
+}
+
+/// Drives an erased solver through `solve_path_cd`'s infallible solve
+/// closure: a capability-precluded error is captured here and surfaced
+/// by [`Fit::run`] once the orchestrator returns.
+struct StageRunner<'s> {
+    solver: &'s mut dyn super::registry::DynCdSolver,
+    err: Option<ShotgunError>,
+}
+
+impl StageRunner<'_> {
+    fn run(&mut self, prob: ProblemRef<'_, '_>, x0: &[f64], opts: &SolveOptions) -> SolveResult {
+        // after a failure, short-circuit the remaining path stages (and
+        // their screening passes) — the error is what gets surfaced
+        if self.err.is_none() {
+            match self.solver.solve(prob, x0, opts) {
+                Ok(res) => return res,
+                Err(e) => self.err = Some(e),
+            }
+        }
+        SolveResult {
+            solver: self.solver.name().to_string(),
+            x: x0.to_vec(),
+            objective: f64::INFINITY,
+            iters: 0,
+            updates: 0,
+            seconds: 0.0,
+            converged: false,
+            trace: Default::default(),
+        }
+    }
+}
+
+enum Lambda {
+    Unset,
+    Fixed(f64),
+    Path(PathSpec),
+}
+
+/// The fluent fit builder (see the module docs).
+pub struct Fit<'a> {
+    design: &'a Design,
+    targets: &'a [f64],
+    loss: Loss,
+    lambda: Lambda,
+    choice: Choice,
+    params: SolverParams,
+    opts: SolveOptions,
+    x0: Option<Vec<f64>>,
+    cache: Option<ProblemCache>,
+    require_convergence: bool,
+}
+
+impl<'a> Fit<'a> {
+    /// Start a fit of `targets` on `design`. Defaults: squared loss,
+    /// `Engine::Auto`, `SolveOptions::default()`; lambda must be set via
+    /// [`lambda`](Fit::lambda) or [`path`](Fit::path).
+    pub fn new(design: &'a Design, targets: &'a [f64]) -> Fit<'a> {
+        Fit {
+            design,
+            targets,
+            loss: Loss::Squared,
+            lambda: Lambda::Unset,
+            choice: Choice::Engine(Engine::Auto),
+            params: SolverParams::default(),
+            opts: SolveOptions::default(),
+            x0: None,
+            cache: None,
+            require_convergence: false,
+        }
+    }
+
+    /// Which loss to minimize (default [`Loss::Squared`]).
+    pub fn loss(mut self, loss: Loss) -> Self {
+        self.loss = loss;
+        self
+    }
+
+    /// Fix the L1 weight lambda (single solve).
+    pub fn lambda(mut self, lam: f64) -> Self {
+        self.lambda = Lambda::Fixed(lam);
+        self
+    }
+
+    /// Solve a regularization path instead of a single lambda; the
+    /// returned model is the final stage's.
+    pub fn path(mut self, spec: PathSpec) -> Self {
+        self.lambda = Lambda::Path(spec);
+        self
+    }
+
+    /// Pick a solver by registry name (see
+    /// [`SolverRegistry::names`]). Overrides [`engine`](Fit::engine).
+    pub fn solver(mut self, name: impl Into<String>) -> Self {
+        self.choice = Choice::Name(name.into());
+        self
+    }
+
+    /// Pick the Shotgun execution engine directly (overrides
+    /// [`solver`](Fit::solver)); `Engine::Auto` is the default.
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.choice = Choice::Engine(engine);
+        self
+    }
+
+    /// Construction knobs for the chosen solver (parallelism, SGD rate,
+    /// L0 sparsity, ...).
+    pub fn params(mut self, params: SolverParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Shorthand for setting just the parallelism P.
+    pub fn p(mut self, p: usize) -> Self {
+        self.params.p = p.max(1);
+        self
+    }
+
+    /// Tweak the solve options in place (budget, tolerance, seed,
+    /// shrinking policy, trace cadence).
+    pub fn options(mut self, f: impl FnOnce(&mut SolveOptions)) -> Self {
+        f(&mut self.opts);
+        self
+    }
+
+    /// Warm-start from a previous solution (single-lambda fits; paths
+    /// manage their own warm starts).
+    pub fn warm_start(mut self, x0: Vec<f64>) -> Self {
+        self.x0 = Some(x0);
+        self
+    }
+
+    /// Reuse a per-design [`ProblemCache`] built once by the caller —
+    /// the serving pattern: many fits against one design skip the
+    /// O(nnz) `col_sq` pass entirely.
+    pub fn cache(mut self, cache: &ProblemCache) -> Self {
+        self.cache = Some(cache.clone());
+        self
+    }
+
+    /// Turn budget exhaustion into a typed error
+    /// ([`ShotgunError::BudgetExhausted`]) instead of a report with
+    /// `converged = false`.
+    pub fn require_convergence(mut self) -> Self {
+        self.require_convergence = true;
+        self
+    }
+
+    fn validate(&self) -> Result<(), ShotgunError> {
+        let (n, d) = (self.design.n(), self.design.d());
+        if n == 0 || d == 0 {
+            return Err(ShotgunError::EmptyDesign { n, d });
+        }
+        if self.targets.len() != n {
+            return Err(ShotgunError::DimensionMismatch {
+                what: "targets",
+                expected: n,
+                got: self.targets.len(),
+            });
+        }
+        for (i, &v) in self.targets.iter().enumerate() {
+            if !v.is_finite() {
+                return Err(ShotgunError::NonFinite {
+                    what: "targets",
+                    index: i,
+                    value: v,
+                });
+            }
+            if self.loss == Loss::Logistic && v != 1.0 && v != -1.0 {
+                return Err(ShotgunError::BadLabel { index: i, value: v });
+            }
+        }
+        match &self.lambda {
+            Lambda::Unset => {
+                return Err(ShotgunError::InvalidLambda {
+                    lam: f64::NAN,
+                    reason: "set .lambda(..) or .path(..) before .run()",
+                })
+            }
+            Lambda::Fixed(lam) => {
+                if !lam.is_finite() || *lam < 0.0 {
+                    return Err(ShotgunError::InvalidLambda {
+                        lam: *lam,
+                        reason: "lambda must be finite and non-negative",
+                    });
+                }
+            }
+            Lambda::Path(spec) => {
+                if !spec.lam_target.is_finite() || spec.lam_target <= 0.0 {
+                    return Err(ShotgunError::InvalidPath {
+                        reason: format!(
+                            "lam_target must be finite and positive (got {})",
+                            spec.lam_target
+                        ),
+                    });
+                }
+                if spec.stages == 0 {
+                    return Err(ShotgunError::InvalidPath {
+                        reason: "stages must be >= 1".into(),
+                    });
+                }
+            }
+        }
+        if let Some(x0) = &self.x0 {
+            if x0.len() != d {
+                return Err(ShotgunError::DimensionMismatch {
+                    what: "warm start",
+                    expected: d,
+                    got: x0.len(),
+                });
+            }
+            if let Some((i, &v)) = x0.iter().enumerate().find(|(_, v)| !v.is_finite()) {
+                return Err(ShotgunError::NonFinite {
+                    what: "warm start",
+                    index: i,
+                    value: v,
+                });
+            }
+        }
+        if let Some(cache) = &self.cache {
+            if cache.d() != d {
+                return Err(ShotgunError::DimensionMismatch {
+                    what: "problem cache",
+                    expected: d,
+                    got: cache.d(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve the engine/solver choice to a registry name + params.
+    fn resolve(&self) -> (String, SolverParams, Option<AutoChoice>) {
+        match &self.choice {
+            Choice::Name(name) => (name.clone(), self.params.clone(), None),
+            Choice::Engine(Engine::Exact { p }) => (
+                "shotgun".into(),
+                SolverParams {
+                    p: (*p).max(1),
+                    ..self.params.clone()
+                },
+                None,
+            ),
+            Choice::Engine(Engine::Threaded { p }) => (
+                "shotgun-threaded".into(),
+                SolverParams {
+                    p: (*p).max(1),
+                    ..self.params.clone()
+                },
+                None,
+            ),
+            Choice::Engine(Engine::Auto) => {
+                let est = PStar::quick(self.design, self.opts.seed);
+                let hw = std::thread::available_parallelism()
+                    .map(|v| v.get())
+                    .unwrap_or(8);
+                let p = est.clamp(hw);
+                let threaded = p >= 2 && self.design.nnz() >= AUTO_THREADED_MIN_NNZ;
+                let auto = AutoChoice {
+                    rho: est.rho,
+                    p_star: est.p_star,
+                    p,
+                    threaded,
+                };
+                let name = if threaded { "shotgun-threaded" } else { "shotgun" };
+                (
+                    name.into(),
+                    SolverParams {
+                        p,
+                        ..self.params.clone()
+                    },
+                    Some(auto),
+                )
+            }
+        }
+    }
+
+    /// Validate, pick the solver, solve, and package the artifact.
+    pub fn run(self) -> Result<FitReport, ShotgunError> {
+        self.validate()?;
+        let (name, params, auto) = self.resolve();
+        let registry = SolverRegistry::global();
+        let mut solver = registry.create_for(&name, self.loss, &params)?;
+        let cache = match &self.cache {
+            Some(c) => c.clone(),
+            None => ProblemCache::new(self.design),
+        };
+        let d = self.design.d();
+        let x0 = self.x0.clone().unwrap_or_else(|| vec![0.0; d]);
+        let (a, y) = (self.design, self.targets);
+
+        // a solve closure can't return Result through solve_path_cd, so
+        // the runner captures the (capability-precluded) error and we
+        // surface it after the orchestrator returns
+        let mut runner = StageRunner {
+            solver: solver.as_mut(),
+            err: None,
+        };
+
+        let (result, lam) = match (&self.lambda, self.loss) {
+            (Lambda::Fixed(lam), Loss::Squared) => {
+                let prob = LassoProblem::with_cache(a, y, *lam, &cache);
+                (runner.run(ProblemRef::Lasso(&prob), &x0, &self.opts), *lam)
+            }
+            (Lambda::Fixed(lam), Loss::Logistic) => {
+                let prob = LogisticProblem::with_cache(a, y, *lam, &cache);
+                (runner.run(ProblemRef::Logistic(&prob), &x0, &self.opts), *lam)
+            }
+            (Lambda::Path(spec), Loss::Squared) => {
+                let cfg = PathConfig {
+                    stages: spec.stages,
+                    strong_rules: spec.strong_rules,
+                };
+                let res = solve_path_cd(
+                    spec.lam_target,
+                    &cfg,
+                    &self.opts,
+                    |l| LassoProblem::with_cache(a, y, l, &cache),
+                    |obj, x0, o| runner.run(ProblemRef::Lasso(obj), x0, o),
+                );
+                (res, spec.lam_target)
+            }
+            (Lambda::Path(spec), Loss::Logistic) => {
+                let cfg = PathConfig {
+                    stages: spec.stages,
+                    strong_rules: spec.strong_rules,
+                };
+                let res = solve_path_cd(
+                    spec.lam_target,
+                    &cfg,
+                    &self.opts,
+                    |l| LogisticProblem::with_cache(a, y, l, &cache),
+                    |obj, x0, o| runner.run(ProblemRef::Logistic(obj), x0, o),
+                );
+                (res, spec.lam_target)
+            }
+            (Lambda::Unset, _) => unreachable!("validate() rejects unset lambda"),
+        };
+        if let Some(e) = runner.err {
+            return Err(e);
+        }
+        if self.require_convergence && !result.converged {
+            return Err(ShotgunError::BudgetExhausted {
+                iters: result.iters,
+                seconds: result.seconds,
+                objective: result.objective,
+            });
+        }
+        let model = Model::from_dense(&result.x, self.loss, lam, result.solver.clone());
+        Ok(FitReport {
+            model,
+            diagnostics: result,
+            auto,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn builder_validates_before_solving() {
+        let ds = synth::sparco_like(20, 10, 0.4, 1);
+        // missing lambda
+        let err = Fit::new(&ds.design, &ds.targets).run().unwrap_err();
+        assert!(matches!(err, ShotgunError::InvalidLambda { .. }));
+        // wrong targets length
+        let short = &ds.targets[..10];
+        let err = Fit::new(&ds.design, short).lambda(0.1).run().unwrap_err();
+        assert!(matches!(err, ShotgunError::DimensionMismatch { .. }));
+        // NaN target
+        let mut bad = ds.targets.clone();
+        bad[3] = f64::NAN;
+        let err = Fit::new(&ds.design, &bad).lambda(0.1).run().unwrap_err();
+        assert!(matches!(err, ShotgunError::NonFinite { index: 3, .. }));
+        // non-±1 labels under logistic
+        let err = Fit::new(&ds.design, &ds.targets)
+            .loss(Loss::Logistic)
+            .lambda(0.1)
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, ShotgunError::BadLabel { .. }));
+        // unknown solver
+        let err = Fit::new(&ds.design, &ds.targets)
+            .lambda(0.1)
+            .solver("levenberg")
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, ShotgunError::UnknownSolver { .. }));
+        // squared-only solver asked for logistic
+        let ds2 = synth::rcv1_like(20, 10, 0.3, 2);
+        let err = Fit::new(&ds2.design, &ds2.targets)
+            .loss(Loss::Logistic)
+            .lambda(0.1)
+            .solver("gpsr-bb")
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, ShotgunError::LossUnsupported { .. }));
+        // bad warm start
+        let err = Fit::new(&ds.design, &ds.targets)
+            .lambda(0.1)
+            .warm_start(vec![0.0; 3])
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, ShotgunError::DimensionMismatch { .. }));
+        // bad path target
+        let err = Fit::new(&ds.design, &ds.targets)
+            .path(PathSpec::to(-1.0))
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, ShotgunError::InvalidPath { .. }));
+    }
+
+    #[test]
+    fn auto_engine_solves_and_reports_choice() {
+        let ds = synth::sparco_like(50, 30, 0.3, 3);
+        let report = Fit::new(&ds.design, &ds.targets)
+            .lambda(0.3)
+            .engine(Engine::Auto)
+            .run()
+            .unwrap();
+        let auto = report.auto.as_ref().expect("auto choice recorded");
+        assert!(auto.p >= 1 && auto.p <= auto.p_star.max(1));
+        assert!(!auto.threaded, "tiny problems stay on the exact engine");
+        // the serving feedback path: the choice converts to a concrete
+        // engine that skips re-estimation on the next fit
+        match auto.engine() {
+            Engine::Exact { p } => assert_eq!(p, auto.p),
+            other => panic!("expected the exact engine, got {other:?}"),
+        }
+        assert!(report.converged());
+        assert!(report.objective() > 0.0);
+    }
+
+    #[test]
+    fn budget_exhaustion_is_typed_when_required() {
+        let ds = synth::sparse_imaging(60, 120, 0.1, 4);
+        let err = Fit::new(&ds.design, &ds.targets)
+            .lambda(0.01)
+            .solver("shooting")
+            .options(|o| {
+                o.max_iters = 3;
+                o.tol = 1e-14;
+            })
+            .require_convergence()
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, ShotgunError::BudgetExhausted { iters: 3, .. }));
+        // without the flag, the same fit is a report with converged=false
+        let report = Fit::new(&ds.design, &ds.targets)
+            .lambda(0.01)
+            .solver("shooting")
+            .options(|o| {
+                o.max_iters = 3;
+                o.tol = 1e-14;
+            })
+            .run()
+            .unwrap();
+        assert!(!report.converged());
+    }
+
+    #[test]
+    fn pathwise_reuses_the_shared_cache() {
+        let ds = synth::sparse_imaging(50, 100, 0.1, 5);
+        let lam_max = LassoProblem::new(&ds.design, &ds.targets, 0.0).lambda_max();
+        let cache = ProblemCache::new(&ds.design);
+        let report = Fit::new(&ds.design, &ds.targets)
+            .path(PathSpec::to(0.05 * lam_max))
+            .solver("shooting")
+            .cache(&cache)
+            .options(|o| o.max_iters = 400_000)
+            .run()
+            .unwrap();
+        assert!(report.diagnostics.solver.contains("+path"));
+        // the model is fit at the path target
+        assert_eq!(report.model.lam, 0.05 * lam_max);
+        // direct solve at the target lands on the same optimum
+        let direct = Fit::new(&ds.design, &ds.targets)
+            .lambda(0.05 * lam_max)
+            .solver("shooting")
+            .options(|o| o.max_iters = 400_000)
+            .run()
+            .unwrap();
+        let gap = (report.objective() - direct.objective()).abs() / direct.objective();
+        assert!(gap < 1e-3, "path vs direct gap {gap:.2e}");
+    }
+
+    #[test]
+    fn warm_start_speeds_refit() {
+        let ds = synth::sparse_imaging(40, 80, 0.1, 6);
+        let first = Fit::new(&ds.design, &ds.targets)
+            .lambda(0.1)
+            .solver("shooting")
+            .run()
+            .unwrap();
+        let warm = Fit::new(&ds.design, &ds.targets)
+            .lambda(0.1)
+            .solver("shooting")
+            .warm_start(first.model.to_dense())
+            .run()
+            .unwrap();
+        assert!(warm.diagnostics.updates <= first.diagnostics.updates);
+        let gap = (warm.objective() - first.objective()).abs() / first.objective();
+        assert!(gap < 1e-6, "warm refit moved the optimum by {gap:.2e}");
+    }
+}

@@ -1,0 +1,63 @@
+//! The crate's front door: one typed entry point over every solver.
+//!
+//! PR 2 unified the solve loops behind one generic `CdObjective` body
+//! per engine; this module unifies the *public surface* the same way
+//! (the GenCD lesson of Scherrer et al. 2012 — one abstract CD
+//! front-end over interchangeable policies):
+//!
+//! * [`Fit`] ([`fit`]) — the fluent builder:
+//!   `Fit::new(&design, &targets).loss(..).lambda(..).solver("shotgun")`
+//!   `.options(|o| ..).run()?`. [`Engine::Auto`] (the default) runs the
+//!   paper's Theorem 3.2 — power-iterate `rho(A^T A)`, set
+//!   `P* = ceil(d/rho)` — and picks the engine, so the headline theory
+//!   is the default UX rather than a buried diagnostic.
+//! * [`SolverRegistry`] ([`registry`]) — every engine and baseline
+//!   behind an object-safe [`DynCdSolver`] with per-solver
+//!   [`Capabilities`]; the CLI, the figure harnesses, and the
+//!   cross-validation tests enumerate it instead of hand-rolling
+//!   solver-name match arms.
+//! * [`ShotgunError`] ([`error`]) — structured errors; validation at the
+//!   builder boundary replaces panics on the entry paths.
+//! * [`Model`] ([`model`]) — the servable artifact: sparse weights +
+//!   provenance, `predict`/`predict_proba`/`decision_function` over
+//!   [`Design`](crate::sparsela::Design) batches, lossless JSON
+//!   round-trip.
+//!
+//! ## Serving repeated fits
+//!
+//! Build the [`ProblemCache`](crate::objective::ProblemCache) once per
+//! design and hand it to every request — no per-fit O(nnz) metadata
+//! pass (see `examples/serving.rs`). Name a solver (or reuse a prior
+//! [`AutoChoice::engine`]) in the loop: `Engine::Auto` re-estimates
+//! `rho` by power iteration on every fit, which is exactly the kind of
+//! per-request O(nnz) work the shared cache exists to delete:
+//!
+//! ```
+//! use shotgun::api::Fit;
+//! use shotgun::data::synth;
+//! use shotgun::objective::ProblemCache;
+//!
+//! let ds = synth::sparse_imaging(50, 100, 0.1, 7);
+//! let cache = ProblemCache::new(&ds.design); // once, at load time
+//! for lam in [0.5, 0.2, 0.1] {
+//!     let report = Fit::new(&ds.design, &ds.targets)
+//!         .lambda(lam)
+//!         .solver("shotgun")
+//!         .cache(&cache) // per-request: just an Arc bump
+//!         .run()
+//!         .expect("validated inputs solve");
+//!     let _json = report.model.to_json(); // ship the artifact
+//! }
+//! ```
+
+pub mod error;
+pub mod fit;
+pub mod model;
+pub mod registry;
+
+pub use error::ShotgunError;
+pub use fit::{AutoChoice, Engine, Fit, FitReport, PathSpec};
+pub use model::Model;
+pub use registry::{
+    Capabilities, DynCdSolver, IterUnit, ProblemRef, RegistryEntry, SolverParams, SolverRegistry,
+};

@@ -1,0 +1,334 @@
+//! `Model` — the servable artifact a fit produces.
+//!
+//! A [`Model`] is everything a serving process needs to score traffic:
+//! the sparse weight vector (stored as `(index, value)` pairs — on the
+//! paper's workloads the optimum keeps a few percent of `d`, so a dense
+//! `Vec<f64>` would be mostly zeros), the lambda/loss provenance, and
+//! the solver that produced it. It scores [`Design`] batches through
+//! [`predict`](Model::predict) / [`predict_proba`](Model::predict_proba)
+//! / [`decision_function`](Model::decision_function), each one sparse
+//! column-axpy per stored weight, and round-trips through JSON
+//! ([`to_json`](Model::to_json) / [`from_json`](Model::from_json)) via
+//! [`crate::util::json`] — the first time a solve's output can leave the
+//! process and come back.
+//!
+//! **Bit-fidelity contract:** storage is lossless (every weight with
+//! `x_j != 0.0` is kept exactly; [`crate::ZERO_TOL`] is used only for
+//! the *reported* [`nnz`](Model::nnz) count, consistent with
+//! [`SolveResult::nnz`](crate::solvers::SolveResult::nnz)), and numbers
+//! serialize through Rust's shortest-round-trip `f64` formatting, so a
+//! JSON round-trip reproduces predictions bit-for-bit (regression-tested
+//! in `tests/api_redesign.rs`).
+
+use super::error::ShotgunError;
+use crate::objective::{sigma_neg, Loss};
+use crate::sparsela::Design;
+use crate::util::json::{escape, Json};
+
+/// A fitted sparse linear model (see the module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Model {
+    d: usize,
+    /// `(coordinate, weight)` pairs, sorted by coordinate, weights != 0.
+    weights: Vec<(u32, f64)>,
+    /// Loss the model was trained under (decides the predict semantics).
+    pub loss: Loss,
+    /// L1 weight the model was trained at (provenance).
+    pub lam: f64,
+    /// Solver tag that produced it (provenance, e.g. `"shotgun-p8"`).
+    pub solver: String,
+}
+
+impl Model {
+    /// Build from a dense weight vector, keeping every exactly-nonzero
+    /// entry (lossless; see the module docs).
+    pub fn from_dense(x: &[f64], loss: Loss, lam: f64, solver: impl Into<String>) -> Model {
+        let weights = x
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v != 0.0)
+            .map(|(j, v)| (j as u32, *v))
+            .collect();
+        Model {
+            d: x.len(),
+            weights,
+            loss,
+            lam,
+            solver: solver.into(),
+        }
+    }
+
+    /// Number of features the model was trained on.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The stored sparse weights (sorted by coordinate).
+    pub fn weights(&self) -> &[(u32, f64)] {
+        &self.weights
+    }
+
+    /// Non-zeros above [`crate::ZERO_TOL`] — the same count
+    /// [`SolveResult::nnz`](crate::solvers::SolveResult::nnz) reports.
+    pub fn nnz(&self) -> usize {
+        self.weights
+            .iter()
+            .filter(|(_, v)| v.abs() > crate::ZERO_TOL)
+            .count()
+    }
+
+    /// Reconstruct the dense weight vector (exact).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut x = vec![0.0; self.d];
+        for &(j, v) in &self.weights {
+            x[j as usize] = v;
+        }
+        x
+    }
+
+    fn check_dims(&self, a: &Design) -> Result<(), ShotgunError> {
+        if a.d() != self.d {
+            return Err(ShotgunError::DimensionMismatch {
+                what: "design columns vs model features",
+                expected: self.d,
+                got: a.d(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Raw scores `z = A x` for a batch: one sparse column axpy per
+    /// stored weight, so scoring costs O(sum of served columns' nnz) —
+    /// independent of the zeros.
+    pub fn decision_function(&self, a: &Design) -> Result<Vec<f64>, ShotgunError> {
+        self.check_dims(a)?;
+        let mut z = vec![0.0; a.n()];
+        for &(j, v) in &self.weights {
+            a.col_axpy(j as usize, v, &mut z);
+        }
+        Ok(z)
+    }
+
+    /// Predictions for a batch: regression scores for the squared loss,
+    /// ±1 class labels for logistic.
+    pub fn predict(&self, a: &Design) -> Result<Vec<f64>, ShotgunError> {
+        let mut z = self.decision_function(a)?;
+        if self.loss == Loss::Logistic {
+            for zi in z.iter_mut() {
+                *zi = if *zi >= 0.0 { 1.0 } else { -1.0 };
+            }
+        }
+        Ok(z)
+    }
+
+    /// `P(y = +1 | a_i)` for a logistic model;
+    /// [`ShotgunError::ProbaUnsupported`] for the squared loss.
+    pub fn predict_proba(&self, a: &Design) -> Result<Vec<f64>, ShotgunError> {
+        if self.loss != Loss::Logistic {
+            return Err(ShotgunError::ProbaUnsupported { loss: self.loss });
+        }
+        let mut z = self.decision_function(a)?;
+        for zi in z.iter_mut() {
+            // sigma(z) = 1 / (1 + exp(-z)) = sigma_neg(-z), stable
+            *zi = sigma_neg(-*zi);
+        }
+        Ok(z)
+    }
+
+    /// Serialize to a self-describing JSON document. Weights use Rust's
+    /// shortest-round-trip `f64` formatting (exact on parse); a
+    /// non-finite weight (a diverged solve) serializes as `null`, which
+    /// [`from_json`](Model::from_json) rejects with a clear error.
+    pub fn to_json(&self) -> String {
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".into()
+            }
+        }
+        let idx: Vec<String> = self.weights.iter().map(|(j, _)| j.to_string()).collect();
+        let val: Vec<String> = self.weights.iter().map(|(_, v)| num(*v)).collect();
+        format!(
+            "{{\"format\":\"shotgun.model.v1\",\"loss\":{},\"lam\":{},\"d\":{},\
+             \"solver\":{},\"idx\":[{}],\"val\":[{}]}}",
+            escape(match self.loss {
+                Loss::Squared => "squared",
+                Loss::Logistic => "logistic",
+            }),
+            num(self.lam),
+            self.d,
+            escape(&self.solver),
+            idx.join(","),
+            val.join(",")
+        )
+    }
+
+    /// Parse a document produced by [`to_json`](Model::to_json).
+    pub fn from_json(text: &str) -> Result<Model, ShotgunError> {
+        let bad = |reason: String| ShotgunError::ModelFormat { reason };
+        let doc = Json::parse(text).map_err(|e| bad(format!("not JSON: {e}")))?;
+        let field = |key: &str| {
+            doc.get(key)
+                .ok_or_else(|| bad(format!("missing field {key:?}")))
+        };
+        match field("format")?.as_str() {
+            Some("shotgun.model.v1") => {}
+            other => return Err(bad(format!("unsupported format tag {other:?}"))),
+        }
+        let loss = match field("loss")?.as_str() {
+            Some("squared") => Loss::Squared,
+            Some("logistic") => Loss::Logistic,
+            other => return Err(bad(format!("unknown loss {other:?}"))),
+        };
+        let lam = field("lam")?
+            .as_f64()
+            .ok_or_else(|| bad("lam is not a number".into()))?;
+        let d = field("d")?
+            .as_usize()
+            .ok_or_else(|| bad("d is not an integer".into()))?;
+        let solver = field("solver")?
+            .as_str()
+            .ok_or_else(|| bad("solver is not a string".into()))?
+            .to_string();
+        let idx = field("idx")?
+            .as_arr()
+            .ok_or_else(|| bad("idx is not an array".into()))?;
+        let val = field("val")?
+            .as_arr()
+            .ok_or_else(|| bad("val is not an array".into()))?;
+        if idx.len() != val.len() {
+            return Err(bad(format!(
+                "idx/val length mismatch ({} vs {})",
+                idx.len(),
+                val.len()
+            )));
+        }
+        let mut weights = Vec::with_capacity(idx.len());
+        let mut prev: Option<u32> = None;
+        for (i, (ji, vi)) in idx.iter().zip(val).enumerate() {
+            let j = ji
+                .as_usize()
+                .ok_or_else(|| bad(format!("idx[{i}] is not an integer")))?;
+            if j >= d {
+                return Err(bad(format!("idx[{i}] = {j} out of range (d = {d})")));
+            }
+            let v = vi
+                .as_f64()
+                .ok_or_else(|| bad(format!("val[{i}] is not a finite number")))?;
+            if !v.is_finite() {
+                return Err(bad(format!("val[{i}] is not finite")));
+            }
+            if let Some(p) = prev {
+                if j as u32 <= p {
+                    return Err(bad(format!("idx not strictly increasing at [{i}]")));
+                }
+            }
+            prev = Some(j as u32);
+            weights.push((j as u32, v));
+        }
+        Ok(Model {
+            d,
+            weights,
+            loss,
+            lam,
+            solver,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsela::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn design(seed: u64, n: usize, d: usize) -> Design {
+        let mut rng = Rng::new(seed);
+        Design::Dense(DenseMatrix::from_fn(n, d, |_, _| rng.normal()))
+    }
+
+    #[test]
+    fn sparse_storage_is_lossless() {
+        let x = vec![0.0, 1.5, 0.0, -2.25, 1e-13, 0.0];
+        let m = Model::from_dense(&x, Loss::Squared, 0.1, "test");
+        assert_eq!(m.to_dense(), x);
+        // nnz uses ZERO_TOL: the 1e-13 entry is stored but not counted
+        assert_eq!(m.weights().len(), 3);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let x = vec![0.1 + 0.2, 0.0, -1.0 / 3.0, 1e-300, 7.5];
+        let m = Model::from_dense(&x, Loss::Logistic, 0.05, "shotgun-cdn-p8");
+        let m2 = Model::from_json(&m.to_json()).expect("roundtrip");
+        assert_eq!(m, m2);
+        for ((j1, v1), (j2, v2)) in m.weights().iter().zip(m2.weights()) {
+            assert_eq!(j1, j2);
+            assert_eq!(v1.to_bits(), v2.to_bits());
+        }
+    }
+
+    #[test]
+    fn predictions_match_dense_matvec() {
+        let a = design(1, 12, 6);
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..6)
+            .map(|j| if j % 2 == 0 { rng.normal() } else { 0.0 })
+            .collect();
+        let m = Model::from_dense(&x, Loss::Squared, 0.2, "test");
+        let z = m.decision_function(&a).unwrap();
+        let mut expect = vec![0.0; 12];
+        a.matvec(&x, &mut expect);
+        for (got, want) in z.iter().zip(&expect) {
+            assert!((got - want).abs() < 1e-12);
+        }
+        assert_eq!(m.predict(&a).unwrap(), z);
+    }
+
+    #[test]
+    fn logistic_predict_and_proba() {
+        let a = design(3, 10, 4);
+        let x = vec![1.0, -0.5, 0.0, 2.0];
+        let m = Model::from_dense(&x, Loss::Logistic, 0.1, "test");
+        let z = m.decision_function(&a).unwrap();
+        let labels = m.predict(&a).unwrap();
+        let proba = m.predict_proba(&a).unwrap();
+        for i in 0..10 {
+            assert_eq!(labels[i], if z[i] >= 0.0 { 1.0 } else { -1.0 });
+            assert!((0.0..=1.0).contains(&proba[i]));
+            assert_eq!(proba[i] >= 0.5, z[i] >= 0.0);
+        }
+        let sq = Model::from_dense(&x, Loss::Squared, 0.1, "test");
+        assert!(matches!(
+            sq.predict_proba(&a),
+            Err(ShotgunError::ProbaUnsupported { .. })
+        ));
+    }
+
+    #[test]
+    fn dimension_check() {
+        let a = design(5, 8, 3);
+        let m = Model::from_dense(&[1.0, 2.0], Loss::Squared, 0.1, "test");
+        assert!(matches!(
+            m.predict(&a),
+            Err(ShotgunError::DimensionMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(Model::from_json("not json").is_err());
+        assert!(Model::from_json("{}").is_err());
+        let m = Model::from_dense(&[1.0], Loss::Squared, 0.1, "t");
+        let doc = m.to_json().replace("shotgun.model.v1", "v999");
+        assert!(Model::from_json(&doc).is_err());
+        // non-finite weight serializes as null and is rejected on parse
+        let m = Model::from_dense(&[f64::INFINITY], Loss::Squared, 0.1, "t");
+        assert!(matches!(
+            Model::from_json(&m.to_json()),
+            Err(ShotgunError::ModelFormat { .. })
+        ));
+    }
+}

@@ -1,0 +1,732 @@
+//! `SolverRegistry` — every solver in the crate behind one string-keyed,
+//! capability-tagged front.
+//!
+//! [`DynCdSolver`] is the object-safe erasure of the per-solver
+//! `solve_cd<O: CdObjective>` generic: instead of a type parameter it
+//! takes a [`ProblemRef`] over the two concrete losses, so a
+//! `Box<dyn DynCdSolver>` can be picked at runtime by name. The generic,
+//! statically-dispatched solve bodies are untouched — an adapter only
+//! forwards, so results are bit-identical to the legacy trait calls
+//! (proven per solver in `tests/api_redesign.rs`).
+//!
+//! Each [`RegistryEntry`] carries [`Capabilities`] — which losses it
+//! supports, whether it is parallel/deterministic, what one `max_iters`
+//! unit costs ([`IterUnit`]), and which figure-harness comparison sets
+//! it belongs to. The CLI (`main.rs`), the Fig. 3/4 harnesses, and the
+//! cross-validation tests all enumerate the registry instead of
+//! hand-rolling solver-name match arms, so registering a future solver
+//! here automatically covers it everywhere.
+
+use super::error::ShotgunError;
+use crate::coordinator::{Engine as ExecEngine, Shotgun, ShotgunCdn, ShotgunConfig};
+use crate::objective::{LassoProblem, LogisticProblem, Loss};
+use crate::sparsela::Design;
+use crate::solvers::common::{LassoSolver, LogisticSolver, SolveOptions, SolveResult};
+use crate::solvers::{
+    cdn::ShootingCdn,
+    fpc_as::FpcAs,
+    glmnet::Glmnet,
+    gpsr_bb::GpsrBb,
+    hard_l0::HardL0,
+    hybrid::HybridSgdShotgun,
+    l1_ls::L1Ls,
+    parallel_sgd::ParallelSgd,
+    sgd::{Rate, Sgd},
+    shooting::Shooting,
+    smidas::Smidas,
+    sparsa::Sparsa,
+};
+use std::sync::OnceLock;
+
+/// A problem handed to an erased solver: one variant per concrete loss.
+/// This is what erases the `O: CdObjective` generic — the adapter
+/// re-enters the statically-dispatched solve body per variant.
+#[derive(Clone, Copy)]
+pub enum ProblemRef<'p, 'a> {
+    Lasso(&'p LassoProblem<'a>),
+    Logistic(&'p LogisticProblem<'a>),
+}
+
+impl ProblemRef<'_, '_> {
+    pub fn loss(&self) -> Loss {
+        match self {
+            ProblemRef::Lasso(_) => Loss::Squared,
+            ProblemRef::Logistic(_) => Loss::Logistic,
+        }
+    }
+
+    pub fn design(&self) -> &Design {
+        match self {
+            ProblemRef::Lasso(p) => p.a,
+            ProblemRef::Logistic(p) => p.a,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.design().d()
+    }
+
+    pub fn lam(&self) -> f64 {
+        match self {
+            ProblemRef::Lasso(p) => p.lam,
+            ProblemRef::Logistic(p) => p.lam,
+        }
+    }
+}
+
+/// Object-safe solver handle created by the registry. `solve` returns
+/// [`ShotgunError::LossUnsupported`] when the problem's loss is outside
+/// the entry's capabilities (callers that pre-check via
+/// [`Capabilities::supports`] never see it).
+pub trait DynCdSolver {
+    /// Registry name of the underlying solver.
+    fn name(&self) -> &'static str;
+
+    /// Solve either loss from `x0` under `opts`.
+    fn solve(
+        &mut self,
+        prob: ProblemRef<'_, '_>,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> Result<SolveResult, ShotgunError>;
+}
+
+/// What one `SolveOptions::max_iters` unit means for a solver — budget
+/// and cadence knobs scale by it, so harnesses can size budgets without
+/// per-solver special cases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IterUnit {
+    /// One coordinate (or sample) update.
+    Update,
+    /// One parallel round of P updates.
+    Round,
+    /// One full sweep over the coordinates (possibly with inner loops).
+    Sweep,
+    /// One pass over the n samples.
+    Epoch,
+}
+
+/// Static per-solver metadata the harnesses key on.
+#[derive(Clone, Copy, Debug)]
+pub struct Capabilities {
+    /// Solves the squared loss (Eq. 2).
+    pub squared: bool,
+    /// Solves the logistic loss (Eq. 3).
+    pub logistic: bool,
+    /// Applies multiple updates concurrently (consumes `SolverParams::p`).
+    pub parallel: bool,
+    /// Same seed + inputs → bit-identical output (the threaded engine is
+    /// the exception: real threads race benignly on the residual).
+    pub deterministic: bool,
+    /// Converges to the exact L1 optimum (false for the SGD family's
+    /// limited precision and the L0 baseline's different objective) —
+    /// consensus tests enumerate on this.
+    pub exact_optimum: bool,
+    /// Benefits from pathwise warm starts + strong-rule screening
+    /// (draws coordinates through the `ShrinkConfig` scheduler).
+    pub pathwise_warmstart: bool,
+    /// Budget semantics of `max_iters` (see [`IterUnit`]).
+    pub iter_unit: IterUnit,
+    /// Member of the Fig. 3 published-Lasso-comparator set.
+    pub fig3_lasso: bool,
+    /// Member of the Fig. 4 logistic comparison set.
+    pub fig4_logreg: bool,
+    /// SGD family: `SolverParams::eta` should come from the paper's
+    /// constant-rate sweep protocol (`Sgd::sweep`).
+    pub rate_swept: bool,
+}
+
+impl Capabilities {
+    /// Does this solver handle the given loss?
+    pub fn supports(&self, loss: Loss) -> bool {
+        match loss {
+            Loss::Squared => self.squared,
+            Loss::Logistic => self.logistic,
+        }
+    }
+}
+
+impl Default for Capabilities {
+    fn default() -> Self {
+        Capabilities {
+            squared: true,
+            logistic: false,
+            parallel: false,
+            deterministic: true,
+            exact_optimum: true,
+            pathwise_warmstart: false,
+            iter_unit: IterUnit::Sweep,
+            fig3_lasso: false,
+            fig4_logreg: false,
+            rate_swept: false,
+        }
+    }
+}
+
+/// Construction-time knobs a registry factory understands. Solvers read
+/// only the fields that apply to them.
+#[derive(Clone, Debug)]
+pub struct SolverParams {
+    /// Parallelism P for parallel solvers.
+    pub p: usize,
+    /// Learning rate for the SGD family (SMIDAS clamps it to <= 0.1 for
+    /// stability — the mirror-descent step diverges at the top of the
+    /// paper's sweep range).
+    pub eta: f64,
+    /// Target support size for `hard-l0` (`None` = `max(d/10, 1)` at
+    /// solve time).
+    pub sparsity: Option<usize>,
+    /// GLMNET's covariance-mode cutoff (see `Glmnet::covariance_max_d`).
+    pub covariance_max_d: usize,
+}
+
+impl Default for SolverParams {
+    fn default() -> Self {
+        SolverParams {
+            p: 8,
+            eta: 0.1,
+            sparsity: None,
+            covariance_max_d: 4096,
+        }
+    }
+}
+
+type Factory = fn(&SolverParams) -> Box<dyn DynCdSolver>;
+
+/// One registered solver: name, capabilities, and a factory.
+pub struct RegistryEntry {
+    pub name: &'static str,
+    pub caps: Capabilities,
+    factory: Factory,
+}
+
+impl RegistryEntry {
+    /// Instantiate this solver with the given construction knobs.
+    pub fn create(&self, params: &SolverParams) -> Box<dyn DynCdSolver> {
+        (self.factory)(params)
+    }
+
+    /// Display label for a configured instance (parallel solvers get a
+    /// `-p{P}` suffix, matching their `SolveResult::solver` tags).
+    pub fn label(&self, params: &SolverParams) -> String {
+        if self.caps.parallel {
+            format!("{}-p{}", self.name, params.p)
+        } else {
+            self.name.to_string()
+        }
+    }
+}
+
+/// The string-keyed solver registry (see the module docs).
+pub struct SolverRegistry {
+    entries: Vec<RegistryEntry>,
+}
+
+impl SolverRegistry {
+    /// Every solver the crate ships. Registration order is the
+    /// enumeration order harnesses see.
+    pub fn builtin() -> SolverRegistry {
+        SolverRegistry {
+            entries: builtin_entries(),
+        }
+    }
+
+    /// Process-wide shared instance (entries are stateless metadata).
+    pub fn global() -> &'static SolverRegistry {
+        static REG: OnceLock<SolverRegistry> = OnceLock::new();
+        REG.get_or_init(SolverRegistry::builtin)
+    }
+
+    pub fn entries(&self) -> &[RegistryEntry] {
+        &self.entries
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&RegistryEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn capabilities(&self, name: &str) -> Option<&Capabilities> {
+        self.get(name).map(|e| &e.caps)
+    }
+
+    /// Instantiate by name; [`ShotgunError::UnknownSolver`] lists the
+    /// registered names on a miss.
+    pub fn create(
+        &self,
+        name: &str,
+        params: &SolverParams,
+    ) -> Result<Box<dyn DynCdSolver>, ShotgunError> {
+        match self.get(name) {
+            Some(e) => Ok(e.create(params)),
+            None => Err(ShotgunError::UnknownSolver {
+                name: name.to_string(),
+                known: self.names(),
+            }),
+        }
+    }
+
+    /// Instantiate by name after checking the loss is supported.
+    pub fn create_for(
+        &self,
+        name: &str,
+        loss: Loss,
+        params: &SolverParams,
+    ) -> Result<Box<dyn DynCdSolver>, ShotgunError> {
+        let entry = self.get(name).ok_or_else(|| ShotgunError::UnknownSolver {
+            name: name.to_string(),
+            known: self.names(),
+        })?;
+        if !entry.caps.supports(loss) {
+            return Err(ShotgunError::LossUnsupported {
+                solver: name.to_string(),
+                loss,
+            });
+        }
+        Ok(entry.create(params))
+    }
+}
+
+// ---------------------------------------------------------------------
+// adapters: erase the concrete solver types behind DynCdSolver
+// ---------------------------------------------------------------------
+
+/// Adapter for solvers implementing both loss traits.
+struct BothLosses<S> {
+    name: &'static str,
+    solver: S,
+}
+
+impl<S: LassoSolver + LogisticSolver> DynCdSolver for BothLosses<S> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn solve(
+        &mut self,
+        prob: ProblemRef<'_, '_>,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> Result<SolveResult, ShotgunError> {
+        match prob {
+            ProblemRef::Lasso(p) => Ok(self.solver.solve_lasso(p, x0, opts)),
+            ProblemRef::Logistic(p) => Ok(self.solver.solve_logistic(p, x0, opts)),
+        }
+    }
+}
+
+/// Adapter for squared-loss-only solvers.
+struct LassoOnly<S> {
+    name: &'static str,
+    solver: S,
+}
+
+impl<S: LassoSolver> DynCdSolver for LassoOnly<S> {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn solve(
+        &mut self,
+        prob: ProblemRef<'_, '_>,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> Result<SolveResult, ShotgunError> {
+        match prob {
+            ProblemRef::Lasso(p) => Ok(self.solver.solve_lasso(p, x0, opts)),
+            ProblemRef::Logistic(_) => Err(ShotgunError::LossUnsupported {
+                solver: self.name.to_string(),
+                loss: Loss::Logistic,
+            }),
+        }
+    }
+}
+
+/// `hard-l0` resolves its default sparsity from `d` at solve time.
+struct HardL0Dyn {
+    sparsity: Option<usize>,
+}
+
+impl DynCdSolver for HardL0Dyn {
+    fn name(&self) -> &'static str {
+        "hard-l0"
+    }
+
+    fn solve(
+        &mut self,
+        prob: ProblemRef<'_, '_>,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> Result<SolveResult, ShotgunError> {
+        match prob {
+            ProblemRef::Lasso(p) => {
+                let s = self.sparsity.unwrap_or((p.d() / 10).max(1));
+                Ok(HardL0::with_sparsity(s).solve_lasso(p, x0, opts))
+            }
+            ProblemRef::Logistic(_) => Err(ShotgunError::LossUnsupported {
+                solver: "hard-l0".to_string(),
+                loss: Loss::Logistic,
+            }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the built-in roster
+// ---------------------------------------------------------------------
+
+fn shotgun_config(p: usize, engine: ExecEngine) -> ShotgunConfig {
+    ShotgunConfig {
+        p: p.max(1),
+        engine,
+        ..Default::default()
+    }
+}
+
+fn builtin_entries() -> Vec<RegistryEntry> {
+    let cd = Capabilities {
+        squared: true,
+        logistic: true,
+        pathwise_warmstart: true,
+        ..Default::default()
+    };
+    vec![
+        RegistryEntry {
+            name: "shotgun",
+            caps: Capabilities {
+                parallel: true,
+                iter_unit: IterUnit::Round,
+                ..cd
+            },
+            factory: |p| {
+                Box::new(BothLosses {
+                    name: "shotgun",
+                    solver: Shotgun::new(shotgun_config(p.p, ExecEngine::Exact)),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "shotgun-threaded",
+            caps: Capabilities {
+                parallel: true,
+                deterministic: false,
+                iter_unit: IterUnit::Round,
+                ..cd
+            },
+            factory: |p| {
+                Box::new(BothLosses {
+                    name: "shotgun-threaded",
+                    solver: Shotgun::new(shotgun_config(p.p, ExecEngine::Threaded)),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "shotgun-cdn",
+            caps: Capabilities {
+                parallel: true,
+                iter_unit: IterUnit::Round,
+                fig4_logreg: true,
+                ..cd
+            },
+            factory: |p| {
+                Box::new(BothLosses {
+                    name: "shotgun-cdn",
+                    solver: ShotgunCdn::with_p(p.p.max(1)),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "shooting",
+            caps: Capabilities {
+                iter_unit: IterUnit::Update,
+                fig3_lasso: true,
+                ..cd
+            },
+            factory: |_| {
+                Box::new(BothLosses {
+                    name: "shooting",
+                    solver: Shooting,
+                })
+            },
+        },
+        RegistryEntry {
+            name: "shooting-cdn",
+            caps: Capabilities {
+                fig4_logreg: true,
+                ..cd
+            },
+            factory: |_| {
+                Box::new(BothLosses {
+                    name: "shooting-cdn",
+                    solver: ShootingCdn::default(),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "sgd",
+            caps: Capabilities {
+                logistic: true,
+                exact_optimum: false,
+                iter_unit: IterUnit::Epoch,
+                fig4_logreg: true,
+                rate_swept: true,
+                ..Default::default()
+            },
+            factory: |p| {
+                Box::new(BothLosses {
+                    name: "sgd",
+                    solver: Sgd::new(Rate::Constant(p.eta)),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "parallel-sgd",
+            caps: Capabilities {
+                logistic: true,
+                parallel: true,
+                exact_optimum: false,
+                iter_unit: IterUnit::Epoch,
+                fig4_logreg: true,
+                rate_swept: true,
+                ..Default::default()
+            },
+            factory: |p| {
+                Box::new(BothLosses {
+                    name: "parallel-sgd",
+                    solver: ParallelSgd::new(p.p.max(1), Rate::Constant(p.eta)),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "smidas",
+            caps: Capabilities {
+                logistic: true,
+                exact_optimum: false,
+                iter_unit: IterUnit::Epoch,
+                fig4_logreg: true,
+                rate_swept: true,
+                ..Default::default()
+            },
+            // the stability clamp documented on SolverParams::eta
+            factory: |p| {
+                Box::new(BothLosses {
+                    name: "smidas",
+                    solver: Smidas::new(p.eta.min(0.1)),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "hybrid",
+            caps: Capabilities {
+                logistic: true,
+                parallel: true,
+                iter_unit: IterUnit::Round,
+                ..Default::default()
+            },
+            factory: |p| {
+                Box::new(BothLosses {
+                    name: "hybrid",
+                    solver: HybridSgdShotgun {
+                        eta: p.eta,
+                        p: p.p.max(1),
+                        ..Default::default()
+                    },
+                })
+            },
+        },
+        RegistryEntry {
+            name: "l1-ls",
+            caps: Capabilities {
+                fig3_lasso: true,
+                ..Default::default()
+            },
+            factory: |_| {
+                Box::new(LassoOnly {
+                    name: "l1-ls",
+                    solver: L1Ls::default(),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "fpc-as",
+            caps: Capabilities {
+                fig3_lasso: true,
+                ..Default::default()
+            },
+            factory: |_| {
+                Box::new(LassoOnly {
+                    name: "fpc-as",
+                    solver: FpcAs::default(),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "gpsr-bb",
+            caps: Capabilities {
+                fig3_lasso: true,
+                ..Default::default()
+            },
+            factory: |_| {
+                Box::new(LassoOnly {
+                    name: "gpsr-bb",
+                    solver: GpsrBb::default(),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "sparsa",
+            caps: Capabilities {
+                fig3_lasso: true,
+                ..Default::default()
+            },
+            factory: |_| {
+                Box::new(LassoOnly {
+                    name: "sparsa",
+                    solver: Sparsa::default(),
+                })
+            },
+        },
+        RegistryEntry {
+            name: "hard-l0",
+            caps: Capabilities {
+                exact_optimum: false,
+                fig3_lasso: true,
+                ..Default::default()
+            },
+            factory: |p| Box::new(HardL0Dyn { sparsity: p.sparsity }),
+        },
+        RegistryEntry {
+            name: "glmnet",
+            caps: Capabilities {
+                logistic: true,
+                pathwise_warmstart: true,
+                fig3_lasso: true,
+                ..Default::default()
+            },
+            factory: |p| {
+                Box::new(BothLosses {
+                    name: "glmnet",
+                    solver: Glmnet {
+                        covariance_max_d: p.covariance_max_d,
+                    },
+                })
+            },
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn roster_and_lookup() {
+        let reg = SolverRegistry::global();
+        assert!(reg.entries().len() >= 15, "roster shrank");
+        for name in [
+            "shotgun",
+            "shotgun-threaded",
+            "shotgun-cdn",
+            "shooting",
+            "glmnet",
+            "sgd",
+            "hybrid",
+        ] {
+            assert!(reg.get(name).is_some(), "{name} missing");
+        }
+        assert!(reg.get("no-such-solver").is_none());
+        let err = reg
+            .create("no-such-solver", &SolverParams::default())
+            .unwrap_err();
+        match err {
+            ShotgunError::UnknownSolver { name, known } => {
+                assert_eq!(name, "no-such-solver");
+                assert!(known.contains(&"shotgun"));
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn comparison_sets_match_the_paper() {
+        let reg = SolverRegistry::global();
+        let fig3: Vec<&str> = reg
+            .entries()
+            .iter()
+            .filter(|e| e.caps.fig3_lasso)
+            .map(|e| e.name)
+            .collect();
+        assert_eq!(
+            fig3,
+            ["shooting", "l1-ls", "fpc-as", "gpsr-bb", "sparsa", "hard-l0", "glmnet"]
+        );
+        let fig4: Vec<&str> = reg
+            .entries()
+            .iter()
+            .filter(|e| e.caps.fig4_logreg)
+            .map(|e| e.name)
+            .collect();
+        assert_eq!(
+            fig4,
+            ["shotgun-cdn", "shooting-cdn", "sgd", "parallel-sgd", "smidas"]
+        );
+    }
+
+    #[test]
+    fn capabilities_gate_the_loss() {
+        let reg = SolverRegistry::global();
+        assert!(reg.capabilities("l1-ls").unwrap().supports(Loss::Squared));
+        assert!(!reg.capabilities("l1-ls").unwrap().supports(Loss::Logistic));
+        let err = reg
+            .create_for("l1-ls", Loss::Logistic, &SolverParams::default())
+            .unwrap_err();
+        assert!(matches!(err, ShotgunError::LossUnsupported { .. }));
+        // the dyn handle itself also refuses (defense in depth)
+        let ds = synth::rcv1_like(20, 10, 0.3, 1);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.1);
+        let mut s = reg.create("sparsa", &SolverParams::default()).unwrap();
+        assert!(matches!(
+            s.solve(ProblemRef::Logistic(&prob), &[0.0; 10], &SolveOptions::default()),
+            Err(ShotgunError::LossUnsupported { .. })
+        ));
+    }
+
+    #[test]
+    fn created_solver_runs_both_losses() {
+        let reg = SolverRegistry::global();
+        let ds = synth::sparco_like(30, 15, 0.4, 2);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.2);
+        let opts = SolveOptions {
+            max_iters: 50_000,
+            tol: 1e-7,
+            ..Default::default()
+        };
+        let mut s = reg.create("shooting", &SolverParams::default()).unwrap();
+        let res = s
+            .solve(ProblemRef::Lasso(&prob), &[0.0; 15], &opts)
+            .unwrap();
+        assert!(res.objective < prob.objective(&[0.0; 15]));
+
+        let ds2 = synth::rcv1_like(30, 15, 0.3, 3);
+        let lp = LogisticProblem::new(&ds2.design, &ds2.targets, 0.05);
+        let res = s
+            .solve(ProblemRef::Logistic(&lp), &[0.0; 15], &opts)
+            .unwrap();
+        assert!(res.objective < lp.objective(&[0.0; 15]));
+    }
+
+    #[test]
+    fn labels_tag_parallelism() {
+        let reg = SolverRegistry::global();
+        let params = SolverParams {
+            p: 4,
+            ..Default::default()
+        };
+        assert_eq!(reg.get("shotgun-cdn").unwrap().label(&params), "shotgun-cdn-p4");
+        assert_eq!(reg.get("shooting").unwrap().label(&params), "shooting");
+    }
+}

@@ -8,7 +8,8 @@
 //! * E14 CDN active set on vs off
 
 use super::{BenchConfig, Report};
-use crate::coordinator::{Engine, ShotgunCdn, ShotgunConfig, ShotgunExact, ShotgunThreaded};
+use crate::api::{ProblemRef, SolverParams, SolverRegistry};
+use crate::coordinator::{ShotgunCdn, ShotgunConfig, ShotgunExact};
 use crate::data::synth;
 use crate::objective::{LassoProblem, LogisticProblem};
 use crate::solvers::common::{LogisticSolver, SolveOptions};
@@ -51,8 +52,9 @@ pub fn run(cfg: &BenchConfig) {
     report.line("=== Ablations (E10-E14) ===");
     let s = |v: usize| ((v as f64 * cfg.scale) as usize).max(32);
 
-    // --- E10: sync vs async engine ---
+    // --- E10: sync vs async engine (both via the solver registry) ---
     {
+        let registry = SolverRegistry::global();
         let ds = synth::sparse_imaging(s(512), s(1024), 0.02, cfg.seed);
         let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
         let d = ds.d();
@@ -63,17 +65,18 @@ pub fn run(cfg: &BenchConfig) {
             seed: cfg.seed,
             ..Default::default()
         };
-        let sync = ShotgunExact::new(ShotgunConfig {
-            p: 8,
-            ..Default::default()
-        })
-        .solve_lasso(&prob, &vec![0.0; d], &opts);
-        let async_ = ShotgunThreaded::new(ShotgunConfig {
-            p: 8,
-            engine: Engine::Threaded,
-            ..Default::default()
-        })
-        .solve_lasso(&prob, &vec![0.0; d], &opts);
+        let params = SolverParams { p: 8, ..Default::default() };
+        let x0 = vec![0.0; d];
+        let sync = registry
+            .create("shotgun", &params)
+            .expect("registered")
+            .solve(ProblemRef::Lasso(&prob), &x0, &opts)
+            .expect("squared-capable");
+        let async_ = registry
+            .create("shotgun-threaded", &params)
+            .expect("registered")
+            .solve(ProblemRef::Lasso(&prob), &x0, &opts)
+            .expect("squared-capable");
         report.line(&format!(
             "E10 sync-vs-async: exact F={:.6} ({} updates) | threaded F={:.6} ({} updates)",
             sync.objective, sync.updates, async_.objective, async_.updates
@@ -121,16 +124,16 @@ pub fn run(cfg: &BenchConfig) {
             seed: cfg.seed,
             ..Default::default()
         };
-        let engine = || {
-            ShotgunExact::new(ShotgunConfig {
-                p: 8,
-                ..Default::default()
-            })
-        };
+        let registry = SolverRegistry::global();
+        let params = SolverParams { p: 8, ..Default::default() };
         let t0 = std::time::Instant::now();
         let direct = {
             let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
-            engine().solve_lasso(&prob, &vec![0.0; d], &opts)
+            registry
+                .create("shotgun", &params)
+                .expect("registered")
+                .solve(ProblemRef::Lasso(&prob), &vec![0.0; d], &opts)
+                .expect("squared-capable")
         };
         let t_direct = t0.elapsed().as_secs_f64();
         // the orchestrator path: one shared ProblemCache, warm starts,
@@ -141,9 +144,14 @@ pub fn run(cfg: &BenchConfig) {
                 strong_rules: strong,
             };
             let t = std::time::Instant::now();
-            let res = solve_path_lasso(&ds.design, &ds.targets, lam, &cfg_path, &opts, |p, x0, o| {
-                engine().solve_lasso(p, x0, o)
-            });
+            let res =
+                solve_path_lasso(&ds.design, &ds.targets, lam, &cfg_path, &opts, |p, x0, o| {
+                    registry
+                        .create("shotgun", &params)
+                        .expect("registered")
+                        .solve(ProblemRef::Lasso(p), x0, o)
+                        .expect("squared-capable")
+                });
             (res, t.elapsed().as_secs_f64())
         };
         let (path, t_path) = run_path(false);

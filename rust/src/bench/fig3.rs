@@ -3,17 +3,17 @@
 //! lambda in {0.5, 10} (the paper's absolute values; columns are unit-
 //! normalized so the scale is comparable). Markers above the diagonal =
 //! Shotgun faster.
+//!
+//! The comparator set is not hand-rolled: it is every registry entry
+//! tagged [`Capabilities::fig3_lasso`](crate::api::Capabilities), so a
+//! future solver registered with the tag appears here automatically.
 
 use super::{BenchConfig, Report};
-use crate::coordinator::{Shotgun, ShotgunConfig};
+use crate::api::{IterUnit, ProblemRef, SolverParams, SolverRegistry};
 use crate::data::registry::{suite, Category};
 use crate::metrics::threshold;
 use crate::objective::LassoProblem;
-use crate::solvers::common::{LassoSolver, SolveOptions};
-use crate::solvers::{
-    fpc_as::FpcAs, glmnet::Glmnet, gpsr_bb::GpsrBb, hard_l0::HardL0, l1_ls::L1Ls,
-    shooting::Shooting, sparsa::Sparsa,
-};
+use crate::solvers::common::SolveOptions;
 
 pub struct Fig3Point {
     pub dataset: String,
@@ -35,24 +35,36 @@ fn opts(cfg: &BenchConfig, d: usize) -> SolveOptions {
     }
 }
 
+/// Sweep-structured solvers (GLMNET's inner loops, FPC-AS subspace
+/// phases, ...) count `max_iters` in full sweeps; cap them the way the
+/// paper's protocol capped GLMNET (§4.1.2) instead of handing them an
+/// update-denominated budget.
+fn budget_for(unit: IterUnit, base: &SolveOptions) -> SolveOptions {
+    match unit {
+        IterUnit::Sweep | IterUnit::Epoch => SolveOptions {
+            max_iters: base.max_iters.min(2_000),
+            ..base.clone()
+        },
+        IterUnit::Update | IterUnit::Round => base.clone(),
+    }
+}
+
 /// Run all solvers on one (dataset, lambda); returns scatter points.
-pub fn run_instance(
-    ds: &crate::data::Dataset,
-    lam: f64,
-    cfg: &BenchConfig,
-) -> Vec<Fig3Point> {
+pub fn run_instance(ds: &crate::data::Dataset, lam: f64, cfg: &BenchConfig) -> Vec<Fig3Point> {
+    let registry = SolverRegistry::global();
     let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
     let d = ds.d();
+    let x0 = vec![0.0; d];
     let f_star = super::lasso_f_star(&prob, 40_000_000 / (d as u64).max(1));
     let thresh = threshold(f_star, cfg.rel_tol);
     let o = opts(cfg, d);
 
     // Shotgun P=8 is the reference axis
-    let mut shotgun = Shotgun::new(ShotgunConfig {
-        p: 8,
-        ..Default::default()
-    });
-    let sg = shotgun.solve_lasso(&prob, &vec![0.0; d], &o);
+    let sg = registry
+        .create("shotgun", &SolverParams { p: 8, ..Default::default() })
+        .expect("shotgun is registered")
+        .solve(ProblemRef::Lasso(&prob), &x0, &o)
+        .expect("shotgun solves the lasso");
     let sg_time = sg
         .trace
         .points
@@ -60,56 +72,26 @@ pub fn run_instance(
         .find(|p| p.objective <= thresh)
         .map(|p| p.seconds);
 
-    let shooting_sparsity = {
-        let r = Shooting.solve_lasso(&prob, &vec![0.0; d], &o);
-        r.nnz().max(1)
-    };
-    let mut solvers: Vec<(&str, Box<dyn FnMut() -> crate::solvers::common::SolveResult>)> = vec![
-        (
-            "shooting",
-            Box::new(|| Shooting.solve_lasso(&prob, &vec![0.0; d], &o)),
-        ),
-        (
-            "l1-ls",
-            Box::new(|| L1Ls::default().solve_lasso(&prob, &vec![0.0; d], &o)),
-        ),
-        (
-            "fpc-as",
-            Box::new(|| FpcAs::default().solve_lasso(&prob, &vec![0.0; d], &o)),
-        ),
-        (
-            "gpsr-bb",
-            Box::new(|| GpsrBb::default().solve_lasso(&prob, &vec![0.0; d], &o)),
-        ),
-        (
-            "sparsa",
-            Box::new(|| Sparsa::default().solve_lasso(&prob, &vec![0.0; d], &o)),
-        ),
-        (
-            "hard-l0",
-            Box::new(|| {
-                HardL0::with_sparsity(shooting_sparsity).solve_lasso(&prob, &vec![0.0; d], &o)
-            }),
-        ),
-        (
-            // the classic the paper could not run at scale (§4.1.2);
-            // the covariance cache cap reproduces that limitation
-            "glmnet",
-            Box::new(|| {
-                Glmnet::default().solve_lasso(
-                    &prob,
-                    &vec![0.0; d],
-                    &SolveOptions {
-                        max_iters: 2_000,
-                        ..o.clone()
-                    },
-                )
-            }),
-        ),
-    ];
+    // hard-l0 is given the L1 solution's sparsity (the paper's protocol)
+    let shooting_sparsity = registry
+        .create("shooting", &SolverParams::default())
+        .expect("shooting is registered")
+        .solve(ProblemRef::Lasso(&prob), &x0, &o)
+        .expect("shooting solves the lasso")
+        .nnz()
+        .max(1);
+
     let mut points = Vec::new();
-    for (name, solve) in solvers.iter_mut() {
-        let res = solve();
+    for entry in registry.entries().iter().filter(|e| e.caps.fig3_lasso) {
+        let params = SolverParams {
+            sparsity: Some(shooting_sparsity),
+            ..Default::default()
+        };
+        let run_opts = budget_for(entry.caps.iter_unit, &o);
+        let res = entry
+            .create(&params)
+            .solve(ProblemRef::Lasso(&prob), &x0, &run_opts)
+            .expect("fig3 set is squared-loss-capable");
         let t = res
             .trace
             .points
@@ -119,7 +101,7 @@ pub fn run_instance(
         points.push(Fig3Point {
             dataset: ds.name.clone(),
             lam,
-            solver: name.to_string(),
+            solver: entry.name.to_string(),
             seconds: t,
             shotgun_seconds: sg_time,
         });
@@ -178,14 +160,20 @@ mod tests {
     use crate::data::synth;
 
     #[test]
-    fn instance_produces_all_solver_points() {
+    fn instance_covers_every_fig3_registry_entry() {
         let ds = synth::sparco_like(40, 24, 0.3, 1);
         let cfg = BenchConfig {
             max_seconds: 5.0,
             ..Default::default()
         };
         let pts = run_instance(&ds, 0.5, &cfg);
-        assert_eq!(pts.len(), 7);
+        let expected = SolverRegistry::global()
+            .entries()
+            .iter()
+            .filter(|e| e.caps.fig3_lasso)
+            .count();
+        assert_eq!(pts.len(), expected);
+        assert!(expected >= 7, "fig3 comparator set shrank");
         // shooting must reach tolerance on this tiny instance
         let shooting = pts.iter().find(|p| p.solver == "shooting").unwrap();
         assert!(shooting.seconds.is_some());

@@ -1,21 +1,21 @@
 //! **E3 / Fig. 4** — sparse logistic regression: objective + held-out
 //! error vs time on zeta-like (n >> d, dense) and rcv1-like (d > n,
-//! sparse). Solvers: Shotgun CDN (P=8), Shooting CDN, SGD (rate-swept per
-//! the paper's protocol), Parallel SGD (8 instances), SMIDAS.
+//! sparse). The solver set is every registry entry tagged
+//! [`Capabilities::fig4_logreg`](crate::api::Capabilities) — Shotgun CDN
+//! (P clamped by Theorem 3.2), Shooting CDN, SGD (rate-swept per the
+//! paper's protocol), Parallel SGD, SMIDAS — so a future logistic
+//! solver registered with the tag joins the comparison automatically.
 //!
 //! Paper shape to reproduce: on zeta, SGD leads early and Shotgun CDN
 //! overtakes; on rcv1, Shotgun CDN dominates; Parallel SGD ~ SGD.
 
 use super::{BenchConfig, Report};
-use crate::coordinator::ShotgunCdn;
+use crate::api::{IterUnit, ProblemRef, SolverParams, SolverRegistry};
 use crate::data::registry::logistic_pair;
 use crate::data::Dataset;
 use crate::objective::LogisticProblem;
-use crate::solvers::cdn::ShootingCdn;
-use crate::solvers::common::{LogisticSolver, SolveOptions, SolveResult};
-use crate::solvers::parallel_sgd::ParallelSgd;
-use crate::solvers::sgd::{Rate, Sgd};
-use crate::solvers::smidas::Smidas;
+use crate::solvers::common::{SolveOptions, SolveResult};
+use crate::solvers::sgd::Sgd;
 
 pub struct Fig4Series {
     pub dataset: String,
@@ -36,6 +36,7 @@ fn trace_series(res: &SolveResult) -> Vec<(f64, f64, f64)> {
 
 /// Run the §4.2 solver set on one dataset (train/test split inside).
 pub fn run_dataset(ds: &Dataset, lam: f64, cfg: &BenchConfig) -> Vec<Fig4Series> {
+    let registry = SolverRegistry::global();
     let (train, test) = ds.split_holdout(10);
     let prob = LogisticProblem::new(&train.design, &train.targets, lam);
     let test_prob = LogisticProblem::new(&test.design, &test.targets, lam);
@@ -57,15 +58,8 @@ pub fn run_dataset(ds: &Dataset, lam: f64, cfg: &BenchConfig) -> Vec<Fig4Series>
         record_every: (d as u64).max(32),
         ..opts.clone()
     };
-
-    let mut out = Vec::new();
     let x0 = vec![0.0; d];
 
-    let shotgun_cdn = ShotgunCdn::with_p(p).solve_logistic(&prob, &x0, &cd_opts);
-    let shotgun_label: &'static str = Box::leak(format!("shotgun-cdn-p{p}").into_boxed_str());
-    out.push((shotgun_label, shotgun_cdn));
-    let shooting_cdn = ShootingCdn::default().solve_logistic(&prob, &x0, &opts);
-    out.push(("shooting-cdn", shooting_cdn));
     // the paper's SGD protocol: pick the best constant rate by sweep
     let sweep_opts = SolveOptions {
         max_iters: 3,
@@ -73,17 +67,29 @@ pub fn run_dataset(ds: &Dataset, lam: f64, cfg: &BenchConfig) -> Vec<Fig4Series>
         ..opts.clone()
     };
     let (eta, _) = Sgd::sweep(&prob, &x0, &sweep_opts, 1e-4, 1.0, 7);
-    let sgd = Sgd::new(Rate::Constant(eta)).solve_logistic(&prob, &x0, &opts);
-    out.push(("sgd", sgd));
-    let psgd = ParallelSgd::new(8, Rate::Constant(eta)).solve_logistic(&prob, &x0, &opts);
-    out.push(("parallel-sgd-p8", psgd));
-    let smidas = Smidas::new(eta.min(0.1)).solve_logistic(&prob, &x0, &opts);
-    out.push(("smidas", smidas));
+
+    let mut out = Vec::new();
+    for entry in registry.entries().iter().filter(|e| e.caps.fig4_logreg) {
+        // round-denominated CD solvers get the update-rich budget and
+        // the clamped P; the sample-pass family runs epochs at P=8
+        let is_cd = entry.caps.iter_unit == IterUnit::Round;
+        let params = SolverParams {
+            p: if is_cd { p } else { 8 },
+            eta,
+            ..Default::default()
+        };
+        let run_opts = if is_cd { &cd_opts } else { &opts };
+        let res = entry
+            .create(&params)
+            .solve(ProblemRef::Logistic(&prob), &x0, run_opts)
+            .expect("fig4 set is logistic-capable");
+        out.push((entry.label(&params), res));
+    }
 
     out.into_iter()
         .map(|(name, res)| Fig4Series {
             dataset: ds.name.clone(),
-            solver: name.to_string(),
+            solver: name,
             final_test_err: test_prob.error_rate(&res.x),
             series: trace_series(&res),
         })
@@ -136,11 +142,11 @@ pub fn run(cfg: &BenchConfig) {
             ));
         }
         // render the top panel of Fig. 4: objective vs time
-        let markers = ['S', 'c', 'g', 'p', 'm'];
+        let markers = ['S', 'c', 'g', 'p', 'm', 'x', 'o'];
         let curves: Vec<super::plot::Series> = series
             .iter()
-            .zip(markers)
-            .map(|(s, marker)| super::plot::Series {
+            .zip(markers.iter().cycle())
+            .map(|(s, &marker)| super::plot::Series {
                 label: s.solver.clone(),
                 points: s
                     .series
@@ -170,14 +176,20 @@ mod tests {
     use crate::data::synth;
 
     #[test]
-    fn all_solvers_produce_series() {
+    fn all_registry_fig4_solvers_produce_series() {
         let ds = synth::rcv1_like(60, 40, 0.2, 1);
         let cfg = BenchConfig {
             max_seconds: 5.0,
             ..Default::default()
         };
         let series = run_dataset(&ds, 0.05, &cfg);
-        assert_eq!(series.len(), 5);
+        let expected = SolverRegistry::global()
+            .entries()
+            .iter()
+            .filter(|e| e.caps.fig4_logreg)
+            .count();
+        assert_eq!(series.len(), expected);
+        assert!(expected >= 5, "fig4 comparison set shrank");
         for s in &series {
             assert!(
                 s.series.len() >= 2,
@@ -185,8 +197,9 @@ mod tests {
                 s.solver
             );
         }
-        // shotgun-cdn must descend
+        // the first entry is shotgun-cdn (registration order) — it must descend
         let sc = &series[0];
+        assert!(sc.solver.starts_with("shotgun-cdn"), "{}", sc.solver);
         let first = sc.series.first().unwrap().1;
         let last = sc.series.last().unwrap().1;
         assert!(last < first);

@@ -57,7 +57,7 @@ pub fn solve_nonneg<O: NonnegObjective>(
         iters: 0,
         seconds: 0.0,
         objective: f0,
-        nnz: crate::sparsela::vecops::nnz(&x, 1e-10),
+        nnz: crate::sparsela::vecops::nnz(&x, crate::ZERO_TOL),
         aux: 0.0,
     });
     let f_diverge = config.divergence_factor * f0.abs().max(1.0);
@@ -115,7 +115,7 @@ pub fn solve_nonneg<O: NonnegObjective>(
                     iters: round,
                     seconds: watch.seconds(),
                     objective: f,
-                    nnz: crate::sparsela::vecops::nnz(&x, 1e-10),
+                    nnz: crate::sparsela::vecops::nnz(&x, crate::ZERO_TOL),
                     aux: 0.0,
                 });
                 break;
@@ -128,7 +128,7 @@ pub fn solve_nonneg<O: NonnegObjective>(
                 iters: round,
                 seconds: watch.seconds(),
                 objective: obj.objective(&x),
-                nnz: crate::sparsela::vecops::nnz(&x, 1e-10),
+                nnz: crate::sparsela::vecops::nnz(&x, crate::ZERO_TOL),
                 aux: 0.0,
             });
         }
@@ -139,7 +139,7 @@ pub fn solve_nonneg<O: NonnegObjective>(
         iters: round,
         seconds: watch.seconds(),
         objective,
-        nnz: crate::sparsela::vecops::nnz(&x, 1e-10),
+        nnz: crate::sparsela::vecops::nnz(&x, crate::ZERO_TOL),
         aux: 0.0,
     });
     SolveResult {

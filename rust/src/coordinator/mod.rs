@@ -20,7 +20,9 @@
 //! `solve_lasso` / `solve_logistic` are thin forwarding shims.
 //!
 //! [`pstar`] provides the plug-in `P* = ceil(d/rho)` estimate
-//! (Theorem 3.2) via power iteration; [`cdn_round`] is Shotgun CDN
+//! (Theorem 3.2) via power iteration — the default engine choice of the
+//! public front door ([`Engine::Auto`](crate::api::Engine) in
+//! [`api::Fit`](crate::api::Fit) runs it on every fit); [`cdn_round`] is Shotgun CDN
 //! (§4.2.1) — second-order rounds, generic over the same trait;
 //! [`schedule`] is the coordinate scheduler (active-set shrinking with
 //! KKT recheck) every engine and sequential baseline draws from, which

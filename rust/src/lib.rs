@@ -34,16 +34,46 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! use shotgun::data::synth;
-//! use shotgun::coordinator::{Shotgun, ShotgunConfig};
-//! use shotgun::solvers::Solver;
+//! Everything goes through the [`api::Fit`] front door. `Engine::Auto`
+//! (the default) estimates `rho(A^T A)` by power iteration and picks
+//! `P* = ceil(d/rho)` — Theorem 3.2 as the default UX — and the result
+//! is a servable [`api::Model`] (sparse weights, predict, JSON
+//! round-trip):
 //!
-//! let ds = synth::sparco_like(512, 1024, 0.05, 42);
-//! let mut solver = Shotgun::new(ShotgunConfig { p: 8, ..Default::default() });
-//! let result = solver.solve(&ds.design, &ds.targets, 0.5);
-//! println!("F(x) = {}", result.objective);
 //! ```
+//! use shotgun::api::{Engine, Fit};
+//! use shotgun::data::synth;
+//! use shotgun::objective::Loss;
+//!
+//! // Lasso: squared loss is the default
+//! let ds = synth::sparco_like(60, 40, 0.3, 42);
+//! let report = Fit::new(&ds.design, &ds.targets)
+//!     .lambda(0.5)
+//!     .engine(Engine::Auto)
+//!     .run()?;
+//! let auto = report.auto.as_ref().expect("auto engine reports its choice");
+//! assert!(auto.p >= 1, "Theorem 3.2 picked P = {}", auto.p);
+//! assert!(report.converged());
+//!
+//! // sparse logistic regression through the same front door
+//! let ds2 = synth::rcv1_like(50, 30, 0.2, 7);
+//! let clf = Fit::new(&ds2.design, &ds2.targets)
+//!     .loss(Loss::Logistic)
+//!     .lambda(0.05)
+//!     .engine(Engine::Auto)
+//!     .run()?;
+//! let proba = clf.model.predict_proba(&ds2.design)?;
+//! assert_eq!(proba.len(), ds2.n());
+//!
+//! // the model artifact survives a JSON round-trip bit-for-bit
+//! let restored = shotgun::api::Model::from_json(&clf.model.to_json())?;
+//! assert_eq!(restored, clf.model);
+//! # Ok::<(), shotgun::api::ShotgunError>(())
+//! ```
+//!
+//! See [`api`] for the registry (pick any of the 15 solvers by name),
+//! pathwise fits with sequential strong rules, and the serving pattern
+//! (`ProblemCache` reuse across repeated fits on one design).
 
 pub mod util;
 pub mod sparsela;
@@ -52,6 +82,7 @@ pub mod data;
 pub mod metrics;
 pub mod solvers;
 pub mod coordinator;
+pub mod api;
 pub mod simcore;
 pub mod runtime;
 pub mod bench;
@@ -61,3 +92,8 @@ pub mod testkit;
 pub const BETA_SQUARED: f64 = 1.0;
 /// Assumption-2.1 constant for the logistic loss (paper Eq. 6).
 pub const BETA_LOGISTIC: f64 = 0.25;
+/// Magnitude below which a stored weight counts as zero for *reporting*
+/// (`SolveResult::nnz`, trace nnz columns, `api::Model::nnz`). Storage
+/// and arithmetic never truncate by it — it only keeps the various nnz
+/// read-outs consistent with each other.
+pub const ZERO_TOL: f64 = 1e-10;

@@ -1,7 +1,8 @@
 //! `repro` — the Shotgun reproduction CLI (leader entrypoint).
 //!
 //! Subcommands:
-//!   solve          solve one problem with any solver
+//!   solve          solve one problem with any registered solver
+//!   solvers        list the solver registry + capabilities
 //!   estimate-pstar power-iteration rho + P* for a dataset
 //!   bench <exp>    regenerate a paper table/figure
 //!                  (fig2|fig3|fig4|fig5|bounds|headline|ablations|all)
@@ -9,37 +10,30 @@
 //!   gen-data       write a synthetic dataset in LIBSVM format
 //!   info           environment + artifact status
 //!
-//! Run `repro help` for flags.
+//! Solving goes through the `shotgun::api::Fit` front door: solver
+//! lookup by registry name (no hand-rolled match arms), typed errors
+//! instead of panics, and `--solver auto` (the default) picks P from
+//! Theorem 3.2. Run `repro help` for flags.
 
+use shotgun::api::{Engine, Fit, PathSpec, ShotgunError, SolverParams, SolverRegistry};
 use shotgun::bench::{self, BenchConfig};
-use shotgun::coordinator::{Engine, PStar, Shotgun, ShotgunCdn, ShotgunConfig};
+use shotgun::coordinator::PStar;
 use shotgun::data::{libsvm, synth, Dataset};
-use shotgun::objective::{LassoProblem, LogisticProblem};
+use shotgun::objective::{LassoProblem, LogisticProblem, Loss};
 use shotgun::runtime::XlaLassoEngine;
-use shotgun::solvers::common::{LassoSolver, LogisticSolver, SolveOptions};
-use shotgun::solvers::{
-    cdn::ShootingCdn,
-    fpc_as::FpcAs,
-    glmnet::Glmnet,
-    gpsr_bb::GpsrBb,
-    hard_l0::HardL0,
-    hybrid::HybridSgdShotgun,
-    l1_ls::L1Ls,
-    parallel_sgd::ParallelSgd,
-    sgd::{Rate, Sgd},
-    shooting::Shooting,
-    smidas::Smidas,
-    sparsa::Sparsa,
-};
+use shotgun::solvers::common::SolveOptions;
+use shotgun::solvers::sgd::Sgd;
 use shotgun::util::cli::Args;
 use std::path::Path;
 
 const HELP: &str = r#"repro — Shotgun (parallel coordinate descent for L1) reproduction
 
 USAGE:
-  repro solve --data <spec> [--solver shotgun] [--p 8] [--lam 0.5]
-              [--engine exact|threaded] [--tol 1e-7] [--max-iters N]
-              [--loss squared|logistic] [--seed 42] [--trace-out f.csv]
+  repro solve --data <spec> [--solver auto] [--p 8] [--lam 0.5]
+              [--loss squared|logistic] [--tol 1e-7] [--max-iters N]
+              [--budget secs] [--seed 42] [--eta R] [--sparsity K]
+              [--path-to LAM [--path-stages 6]] [--trace-out f.csv]
+  repro solvers
   repro estimate-pstar --data <spec> [--seed 42]
   repro bench <fig2|fig3|fig4|fig5|bounds|headline|ablations|all>
               [--scale 0.25] [--out results] [--seed 42] [--budget 60]
@@ -58,8 +52,9 @@ DATA SPECS (--data):
   rcv1:<n>x<d>:<density>          sparse logistic, d > n
   correlated:<n>x<d>:<c>          correlation dial c in [0,1]
 
-SOLVERS (--solver): shotgun shotgun-cdn shooting shooting-cdn l1-ls
-  fpc-as gpsr-bb sparsa hard-l0 glmnet sgd parallel-sgd smidas hybrid
+SOLVERS (--solver): "auto" (Theorem 3.2 picks P and the engine) or any
+  registry name — run `repro solvers` for the roster + capabilities.
+  (legacy: `--solver shotgun --engine threaded` maps to shotgun-threaded)
 "#;
 
 fn parse_dims(s: &str) -> (usize, usize) {
@@ -92,90 +87,104 @@ fn load_data(spec: &str, seed: u64) -> Dataset {
     }
 }
 
-fn cmd_solve(args: &Args) {
+fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
     let seed = args.usize_or("seed", 42) as u64;
     let ds = load_data(&args.get_or("data", "sparco:256x512:0.05"), seed);
     let lam = args.f64_or("lam", 0.5);
     let p = args.usize_or("p", 8);
-    let solver_name = args.get_or("solver", "shotgun");
-    let loss = args.get_or("loss", "squared");
-    let opts = SolveOptions {
-        max_iters: args.usize_or("max-iters", 1_000_000) as u64,
-        max_seconds: args.f64_or("budget", 0.0),
-        tol: args.f64_or("tol", 1e-7),
-        record_every: args.usize_or("record-every", 256) as u64,
-        seed,
-        ..Default::default()
+    let solver_name = args.get_or("solver", "auto");
+    let loss = match args.get_or("loss", "squared").as_str() {
+        "logistic" => Loss::Logistic,
+        _ => Loss::Squared,
     };
-    let engine = match args.get_or("engine", "exact").as_str() {
-        "threaded" => Engine::Threaded,
-        _ => Engine::Exact,
+    let registry = SolverRegistry::global();
+
+    // the paper's SGD protocol: sweep a constant rate when the chosen
+    // solver is rate-swept and the user gave no --eta
+    let needs_sweep = registry
+        .capabilities(&solver_name)
+        .is_some_and(|c| c.rate_swept)
+        && args.get("eta").is_none();
+    let eta = if needs_sweep {
+        let sweep_opts = SolveOptions {
+            max_iters: 3,
+            seed,
+            ..Default::default()
+        };
+        let x0 = vec![0.0; ds.d()];
+        let eta = match loss {
+            Loss::Logistic => {
+                let prob = LogisticProblem::new(&ds.design, &ds.targets, lam);
+                Sgd::sweep(&prob, &x0, &sweep_opts, 1e-4, 1.0, 7).0
+            }
+            Loss::Squared => {
+                let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+                Sgd::sweep(&prob, &x0, &sweep_opts, 1e-4, 1.0, 7).0
+            }
+        };
+        println!("{solver_name}: swept rate eta = {eta}");
+        eta
+    } else {
+        args.f64_or("eta", 0.1)
     };
-    let d = ds.d();
-    let x0 = vec![0.0; d];
+
     println!(
         "dataset {} (n={}, d={}, density={:.3}), lam={lam}, solver={solver_name}",
         ds.name,
         ds.n(),
-        d,
+        ds.d(),
         ds.design.density()
     );
-    let res = if loss == "logistic" {
-        let prob = LogisticProblem::new(&ds.design, &ds.targets, lam);
-        match solver_name.as_str() {
-            "shotgun" | "shotgun-cdn" => {
-                let mut s = ShotgunCdn::with_p(p);
-                s.solve_logistic(&prob, &x0, &opts)
-            }
-            "shooting-cdn" => ShootingCdn::default().solve_logistic(&prob, &x0, &opts),
-            "shooting" => Shooting.solve_logistic(&prob, &x0, &opts),
-            "sgd" => {
-                let sweep_opts = SolveOptions {
-                    max_iters: 3,
-                    ..opts.clone()
-                };
-                let (eta, _) = Sgd::sweep(&prob, &x0, &sweep_opts, 1e-4, 1.0, 7);
-                println!("sgd: swept rate eta = {eta}");
-                Sgd::new(Rate::Constant(eta)).solve_logistic(&prob, &x0, &opts)
-            }
-            "parallel-sgd" => ParallelSgd::new(p, Rate::Constant(args.f64_or("eta", 0.1)))
-                .solve_logistic(&prob, &x0, &opts),
-            "smidas" => Smidas::new(args.f64_or("eta", 0.1)).solve_logistic(&prob, &x0, &opts),
-            "hybrid" => HybridSgdShotgun {
-                eta: args.f64_or("eta", 0.5),
-                p,
-                ..Default::default()
-            }
-            .solve_logistic(&prob, &x0, &opts),
-            other => panic!("{other} is not a logistic solver"),
-        }
-    } else {
-        let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
-        match solver_name.as_str() {
-            "shotgun" => Shotgun::new(ShotgunConfig {
-                p,
-                engine,
-                ..Default::default()
-            })
-            .solve_lasso(&prob, &x0, &opts),
-            "shooting" => Shooting.solve_lasso(&prob, &x0, &opts),
-            "l1-ls" => L1Ls::default().solve_lasso(&prob, &x0, &opts),
-            "fpc-as" => FpcAs::default().solve_lasso(&prob, &x0, &opts),
-            "gpsr-bb" => GpsrBb::default().solve_lasso(&prob, &x0, &opts),
-            "sparsa" => Sparsa::default().solve_lasso(&prob, &x0, &opts),
-            "glmnet" => Glmnet::default().solve_lasso(&prob, &x0, &opts),
-            "hard-l0" => {
-                let s = args.usize_or("sparsity", (d / 10).max(1));
-                HardL0::with_sparsity(s).solve_lasso(&prob, &x0, &opts)
-            }
-            other => panic!("{other} is not a lasso solver"),
-        }
+    let mut fit = Fit::new(&ds.design, &ds.targets)
+        .loss(loss)
+        .lambda(lam)
+        .params(SolverParams {
+            p,
+            eta,
+            sparsity: args.get("sparsity").and_then(|s| s.parse().ok()),
+            ..Default::default()
+        })
+        .options(|o| {
+            o.max_iters = args.usize_or("max-iters", 1_000_000) as u64;
+            o.max_seconds = args.f64_or("budget", 0.0);
+            o.tol = args.f64_or("tol", 1e-7);
+            o.record_every = args.usize_or("record-every", 256) as u64;
+            o.seed = seed;
+        });
+    if let Some(target) = args.get("path-to") {
+        let target: f64 = target.parse().map_err(|_| ShotgunError::InvalidPath {
+            reason: format!("--path-to {target:?} is not a number"),
+        })?;
+        fit = fit.path(PathSpec {
+            lam_target: target,
+            stages: args.usize_or("path-stages", 6),
+            strong_rules: true,
+        });
+    }
+    // legacy `--engine threaded` (pre-registry CLI) still selects the
+    // threaded engine rather than being silently ignored
+    let engine_flag = args.get("engine");
+    fit = match (solver_name.as_str(), engine_flag) {
+        ("auto", _) => fit.engine(Engine::Auto),
+        ("shotgun", Some("threaded")) => fit.solver("shotgun-threaded"),
+        (name, _) => fit.solver(name),
     };
+    let report = fit.run()?;
+    if let Some(auto) = &report.auto {
+        println!(
+            "auto engine: rho = {:.4} -> P* = {} (Theorem 3.2), running {} at P = {}",
+            auto.rho,
+            auto.p_star,
+            if auto.threaded { "threaded" } else { "exact" },
+            auto.p
+        );
+    }
+    let res = &report.diagnostics;
     println!(
         "{}: F = {:.8}  nnz = {}  iters = {}  updates = {}  time = {:.3}s  converged = {}",
         res.solver,
         res.objective,
-        res.nnz(),
+        report.model.nnz(),
         res.iters,
         res.updates,
         res.seconds,
@@ -184,6 +193,47 @@ fn cmd_solve(args: &Args) {
     if let Some(out) = args.get("trace-out") {
         std::fs::write(out, res.trace.to_csv()).expect("write trace");
         println!("trace written to {out}");
+    }
+    if let Some(out) = args.get("model-out") {
+        std::fs::write(out, report.model.to_json()).expect("write model");
+        println!("model written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_solvers() {
+    let registry = SolverRegistry::global();
+    println!(
+        "{:<18} {:<18} {:>8} {:>13} {:>6} {:<8} {}",
+        "solver", "losses", "parallel", "deterministic", "exact", "unit", "sets"
+    );
+    for e in registry.entries() {
+        let losses = match (e.caps.squared, e.caps.logistic) {
+            (true, true) => "squared+logistic",
+            (true, false) => "squared",
+            (false, true) => "logistic",
+            (false, false) => "none",
+        };
+        let mut sets = Vec::new();
+        if e.caps.fig3_lasso {
+            sets.push("fig3");
+        }
+        if e.caps.fig4_logreg {
+            sets.push("fig4");
+        }
+        if e.caps.rate_swept {
+            sets.push("rate-swept");
+        }
+        println!(
+            "{:<18} {:<18} {:>8} {:>13} {:>6} {:<8} {}",
+            e.name,
+            losses,
+            e.caps.parallel,
+            e.caps.deterministic,
+            e.caps.exact_optimum,
+            format!("{:?}", e.caps.iter_unit).to_lowercase(),
+            sets.join(",")
+        );
     }
 }
 
@@ -312,7 +362,13 @@ fn cmd_info() {
 fn main() {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
-        Some("solve") => cmd_solve(&args),
+        Some("solve") => {
+            if let Err(e) = cmd_solve(&args) {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
+        Some("solvers") => cmd_solvers(),
         Some("estimate-pstar") => cmd_estimate_pstar(&args),
         Some("bench") => cmd_bench(&args),
         Some("xla-demo") => cmd_xla_demo(&args),

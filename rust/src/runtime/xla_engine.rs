@@ -90,7 +90,7 @@ impl XlaLassoEngine {
             iters: 0,
             seconds: 0.0,
             objective: f0,
-            nnz: vecops::nnz(&x, 1e-10),
+            nnz: vecops::nnz(&x, crate::ZERO_TOL),
             aux: 0.0,
         });
 

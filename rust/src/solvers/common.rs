@@ -58,19 +58,25 @@ pub struct SolveResult {
 }
 
 impl SolveResult {
+    /// Non-zeros above [`crate::ZERO_TOL`] — the same count the trace
+    /// recorder and [`crate::api::Model::nnz`] report.
     pub fn nnz(&self) -> usize {
-        vecops::nnz(&self.x, 1e-10)
+        vecops::nnz(&self.x, crate::ZERO_TOL)
     }
 }
 
-/// A Lasso solver: minimizes Eq. (2) for a fixed lambda.
+/// A Lasso solver: minimizes Eq. (2) for a fixed lambda. This is the
+/// solver SPI — engines implement it, and `api::registry` erases it
+/// behind [`DynCdSolver`](crate::api::DynCdSolver); application code
+/// should enter through [`api::Fit`](crate::api::Fit).
 pub trait LassoSolver {
     fn name(&self) -> &'static str;
     fn solve_lasso(&mut self, prob: &LassoProblem, x0: &[f64], opts: &SolveOptions)
         -> SolveResult;
 }
 
-/// A sparse-logistic solver: minimizes Eq. (3) for a fixed lambda.
+/// A sparse-logistic solver: minimizes Eq. (3) for a fixed lambda. Same
+/// SPI status as [`LassoSolver`].
 pub trait LogisticSolver {
     fn name(&self) -> &'static str;
     fn solve_logistic(
@@ -81,12 +87,24 @@ pub trait LogisticSolver {
     ) -> SolveResult;
 }
 
-/// Convenience facade: solve a design+targets with a given loss.
+/// Legacy convenience facade, deprecated: its blanket impl silently
+/// covered only Lasso solvers (a logistic solver got no `solve`), it
+/// hardcoded `SolveOptions::default()`, and it could not fail. The
+/// [`api::Fit`](crate::api::Fit) builder supersedes it with the same
+/// coverage for both losses plus typed errors. This shim keeps its
+/// historical behavior bit-identical while it lives out the
+/// deprecation window (`tests/api_redesign.rs::
+/// deprecated_facade_still_forwards` pins the equivalence).
+#[deprecated(
+    since = "0.2.0",
+    note = "use api::Fit — one typed front door for both losses"
+)]
 pub trait Solver {
     fn name(&self) -> &'static str;
     fn solve(&mut self, a: &Design, y: &[f64], lam: f64) -> SolveResult;
 }
 
+#[allow(deprecated)]
 impl<T: LassoSolver> Solver for T {
     fn name(&self) -> &'static str {
         LassoSolver::name(self)
@@ -126,7 +144,7 @@ impl<'o> Recorder<'o> {
                 iters: iter,
                 seconds: self.watch.seconds(),
                 objective,
-                nnz: vecops::nnz(x, 1e-10),
+                nnz: vecops::nnz(x, crate::ZERO_TOL),
                 aux,
             });
         }

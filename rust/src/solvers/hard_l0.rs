@@ -127,7 +127,7 @@ mod tests {
         // classic compressed sensing: ±1 dense measurements, k-sparse truth
         let ds = synth::singlepix_pm1(80, 40, 1);
         let x_true = ds.x_true.as_ref().unwrap();
-        let k = vecops::nnz(x_true, 1e-10);
+        let k = vecops::nnz(x_true, crate::ZERO_TOL);
         let prob = LassoProblem::new(&ds.design, &ds.targets, 0.0);
         let opts = SolveOptions {
             max_iters: 3_000,

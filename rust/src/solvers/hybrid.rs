@@ -78,7 +78,7 @@ impl HybridSgdShotgun {
                 iters: epochs,
                 seconds: watch.seconds(),
                 objective: f,
-                nnz: crate::sparsela::vecops::nnz(&x, 1e-10),
+                nnz: crate::sparsela::vecops::nnz(&x, crate::ZERO_TOL),
                 aux: 0.0,
             });
             if let Some(fg) = first_gain {

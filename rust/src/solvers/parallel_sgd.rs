@@ -74,7 +74,7 @@ impl ParallelSgd {
             iters,
             seconds: watch.seconds(),
             objective: f,
-            nnz: crate::sparsela::vecops::nnz(&x, 1e-10),
+            nnz: crate::sparsela::vecops::nnz(&x, crate::ZERO_TOL),
             aux: 0.0,
         });
         SolveResult {

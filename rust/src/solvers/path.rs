@@ -15,11 +15,18 @@
 //! `lam_{k-1} - lam_k` instead of the fixed 1%-of-lambda margin
 //! ([`prev_lam`](crate::coordinator::schedule::ShrinkConfig::prev_lam)).
 //! The strong rule is
-//! a heuristic; correctness rests on the engines' existing full-sweep
-//! KKT recheck, which reactivates any wrongly screened coordinate
-//! before convergence is ever declared — so screening can only change
-//! how fast a stage converges, never what it converges to
-//! (property-tested in `tests/proptests.rs`).
+//! a heuristic; correctness rests on two layers. First, after every
+//! screened stage the orchestrator re-screens KKT on the *screened-out*
+//! set ([`screened_violators`]) and re-solves the stage with the
+//! violators reactivated — at most [`MAX_STAGE_RESOLVES`] times — so a
+//! stage that hit its (deliberately tight) intermediate budget with
+//! wrongly discarded coordinates is repaired here, cheaply and warm,
+//! instead of leaking the violation into the next stage's warm start.
+//! Second, the engines' own full-sweep KKT recheck remains the backstop:
+//! no engine declares convergence at a point whose full-dimensional KKT
+//! violation exceeds `tol`. Screening can therefore only change how fast
+//! a stage converges, never what it converges to (property-tested in
+//! `tests/proptests.rs`).
 //!
 //! [`solve_path_cd`] is generic over [`CdObjective`], so one
 //! orchestrator serves every loss and every engine; the closure-based
@@ -30,6 +37,11 @@ use super::common::{SolveOptions, SolveResult};
 use crate::metrics::Trace;
 use crate::objective::{CdObjective, ProblemCache};
 use std::sync::Arc;
+
+/// Cap on per-stage violator re-solves (see the module docs): two
+/// rounds repair every screen we have observed going wrong without
+/// letting a pathological stage loop.
+pub const MAX_STAGE_RESOLVES: usize = 2;
 
 /// The lambda schedule: `count` geometric points from
 /// `start_factor * lam_max` down to `lam_target` (inclusive).
@@ -136,6 +148,7 @@ where
     for (k, &lam) in schedule.iter().enumerate() {
         let obj = mk(lam);
         let mut stage_opts = stage_options(opts, k, schedule.len());
+        let mut screened: Option<Vec<u32>> = None;
         if cfg.strong_rules && stage_opts.shrink.enabled {
             if let Some(prev) = prev_lam {
                 // sequential strong rule at the warm start x_{k-1}:
@@ -147,13 +160,35 @@ where
                 if !keep.is_empty() && keep.len() < d {
                     screened_any = true;
                     stage_opts.shrink.prev_lam = Some(prev);
-                    stage_opts.shrink.initial_active = Some(Arc::new(keep));
+                    stage_opts.shrink.initial_active = Some(Arc::new(keep.clone()));
+                    screened = Some(keep);
                 }
             }
         }
-        let res = solve(&obj, &x, &stage_opts);
+        let mut res = solve(&obj, &x, &stage_opts);
         x = res.x.clone();
         acc.absorb(&res);
+        // orchestrator-level violator loop: re-screen KKT on the
+        // screened-OUT set and re-solve the stage (warm, with the
+        // violators reactivated) instead of leaking a wrong screen into
+        // the next stage's warm start. A stage the engine certified
+        // (full-sweep recheck) has no violators, so this costs one
+        // gradient pass over the screened-out columns; it only re-solves
+        // when an intermediate budget cut the engine short.
+        if let Some(mut keep) = screened {
+            for _ in 0..MAX_STAGE_RESOLVES {
+                let viol = screened_violators(&obj, &x, &keep, stage_opts.tol);
+                if viol.is_empty() {
+                    break;
+                }
+                keep.extend_from_slice(&viol);
+                stage_opts.shrink.initial_active = Some(Arc::new(keep.clone()));
+                let res2 = solve(&obj, &x, &stage_opts);
+                x = res2.x.clone();
+                acc.absorb(&res2);
+                res = res2;
+            }
+        }
         prev_lam = Some(lam);
         last = Some(res);
     }
@@ -252,6 +287,31 @@ pub fn strong_rule_keep<O: CdObjective>(obj: &O, x: &[f64], lam: f64, lam_prev: 
     let thr = (2.0 * lam - lam_prev).max(0.0);
     (0..obj.d())
         .filter(|&j| x[j] != 0.0 || g[j].abs() >= thr)
+        .map(|j| j as u32)
+        .collect()
+}
+
+/// KKT re-screen of the coordinates a strong-rule screen discarded: the
+/// ids NOT in `keep` whose coordinate step at `x` still exceeds `tol` —
+/// i.e. wrongly screened coordinates the stage solve never looked at.
+/// One column walk per screened-out coordinate; used by
+/// [`solve_path_cd`]'s per-stage violator loop.
+pub fn screened_violators<O: CdObjective>(
+    obj: &O,
+    x: &[f64],
+    keep: &[u32],
+    tol: f64,
+) -> Vec<u32> {
+    let d = obj.d();
+    let mut kept = vec![false; d];
+    for &j in keep {
+        if (j as usize) < d {
+            kept[j as usize] = true;
+        }
+    }
+    let cache = obj.init_cache(x);
+    (0..d)
+        .filter(|&j| !kept[j] && obj.cd_step(j, x[j], &cache).abs() >= tol)
         .map(|j| j as u32)
         .collect()
 }
@@ -434,6 +494,59 @@ mod tests {
             "kkt {}",
             prob.kkt_violation(&strong.x, &r)
         );
+    }
+
+    #[test]
+    fn screened_violators_finds_wrong_screens() {
+        let ds = synth::sparse_imaging(40, 80, 0.1, 9);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.01);
+        let x = vec![0.0; 80];
+        // keep nothing: every coordinate with a real step is a violator
+        let all_viol = screened_violators(&prob, &x, &[], 1e-8);
+        assert!(!all_viol.is_empty(), "x=0 far from optimal must violate");
+        // keep everything: nothing is screened out, so no violators
+        let keep: Vec<u32> = (0..80).collect();
+        assert!(screened_violators(&prob, &x, &keep, 1e-8).is_empty());
+        // keeping exactly the violators leaves the rest quiet
+        let rest = screened_violators(&prob, &x, &all_viol, 1e-8);
+        assert!(rest.is_empty(), "non-violators misreported: {rest:?}");
+    }
+
+    #[test]
+    fn violator_loop_repairs_budget_cut_stages() {
+        // tight per-stage budgets make intermediate stages stop before
+        // the engine's recheck can reactivate wrong screens; the
+        // orchestrator's violator loop must still land the path on the
+        // direct optimum
+        let ds = synth::sparse_imaging(60, 120, 0.08, 21);
+        let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam = 0.05 * prob0.lambda_max();
+        let opts = SolveOptions {
+            max_iters: 500_000,
+            tol: 1e-8,
+            ..Default::default()
+        };
+        let direct = {
+            let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+            Shooting.solve_lasso(&prob, &vec![0.0; 120], &opts)
+        };
+        let res = solve_path_lasso(
+            &ds.design,
+            &ds.targets,
+            lam,
+            &PathConfig {
+                stages: 8,
+                strong_rules: true,
+            },
+            &opts,
+            |p, x0, o| Shooting.solve_lasso(p, x0, o),
+        );
+        let gap = (res.objective - direct.objective).abs() / direct.objective.abs().max(1e-12);
+        assert!(gap < 1e-3, "path {} vs direct {}", res.objective, direct.objective);
+        // and the final iterate satisfies full-dimensional KKT
+        let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+        let r = prob.residual(&res.x);
+        assert!(prob.kkt_violation(&res.x, &r) < 1e-5);
     }
 
     #[test]

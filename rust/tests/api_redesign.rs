@@ -1,0 +1,335 @@
+//! API-redesign acceptance tests.
+//!
+//! 1. **Bit-identity**: `api::Fit` must reproduce the legacy trait path
+//!    (`LassoSolver::solve_lasso` / `LogisticSolver::solve_logistic` on
+//!    the concrete solver types) exactly — same seed, same options, same
+//!    bits — for every deterministic registered solver, on both losses
+//!    it supports. The legacy side is deliberately hand-constructed:
+//!    it IS the reference being preserved.
+//! 2. **Registry semantics**: enumeration covers the roster; the
+//!    nondeterministic threaded engine still reaches the exact optimum.
+//! 3. **Model artifact**: JSON round-trip preserves predictions
+//!    bit-for-bit; serving via a shared `ProblemCache` matches
+//!    uncached fits bit-for-bit.
+
+use shotgun::api::{Fit, Model, ProblemRef, SolverParams, SolverRegistry};
+use shotgun::coordinator::{Shotgun, ShotgunCdn, ShotgunConfig};
+use shotgun::objective::{LassoProblem, LogisticProblem, Loss, ProblemCache};
+use shotgun::solvers::common::{LassoSolver, LogisticSolver, SolveOptions, SolveResult};
+use shotgun::solvers::{
+    cdn::ShootingCdn,
+    fpc_as::FpcAs,
+    glmnet::Glmnet,
+    gpsr_bb::GpsrBb,
+    hard_l0::HardL0,
+    hybrid::HybridSgdShotgun,
+    l1_ls::L1Ls,
+    parallel_sgd::ParallelSgd,
+    sgd::{Rate, Sgd},
+    shooting::Shooting,
+    smidas::Smidas,
+    sparsa::Sparsa,
+};
+
+const P: usize = 4;
+const ETA: f64 = 0.05;
+
+/// Bitwise vector equality (NaN-safe, unlike `Vec<f64> ==`).
+fn assert_bits_eq(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{tag}: weight {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// The pre-registry construction of every solver — the legacy reference
+/// the new front door must reproduce bit-for-bit.
+fn legacy_lasso(name: &str, prob: &LassoProblem, x0: &[f64], o: &SolveOptions) -> SolveResult {
+    match name {
+        "shotgun" => Shotgun::new(ShotgunConfig {
+            p: P,
+            ..Default::default()
+        })
+        .solve_lasso(prob, x0, o),
+        "shotgun-cdn" => ShotgunCdn::with_p(P).solve_lasso(prob, x0, o),
+        "shooting" => Shooting.solve_lasso(prob, x0, o),
+        "shooting-cdn" => ShootingCdn::default().solve_lasso(prob, x0, o),
+        "sgd" => Sgd::new(Rate::Constant(ETA)).solve_lasso(prob, x0, o),
+        "parallel-sgd" => ParallelSgd::new(P, Rate::Constant(ETA)).solve_lasso(prob, x0, o),
+        "smidas" => Smidas::new(ETA.min(0.1)).solve_lasso(prob, x0, o),
+        "hybrid" => HybridSgdShotgun {
+            eta: ETA,
+            p: P,
+            ..Default::default()
+        }
+        .solve_lasso(prob, x0, o),
+        "l1-ls" => L1Ls::default().solve_lasso(prob, x0, o),
+        "fpc-as" => FpcAs::default().solve_lasso(prob, x0, o),
+        "gpsr-bb" => GpsrBb::default().solve_lasso(prob, x0, o),
+        "sparsa" => Sparsa::default().solve_lasso(prob, x0, o),
+        "hard-l0" => HardL0::with_sparsity((prob.d() / 10).max(1)).solve_lasso(prob, x0, o),
+        "glmnet" => Glmnet::default().solve_lasso(prob, x0, o),
+        other => panic!("no legacy reference for {other} — extend this table"),
+    }
+}
+
+fn legacy_logistic(
+    name: &str,
+    prob: &LogisticProblem,
+    x0: &[f64],
+    o: &SolveOptions,
+) -> SolveResult {
+    match name {
+        "shotgun" => Shotgun::new(ShotgunConfig {
+            p: P,
+            ..Default::default()
+        })
+        .solve_logistic(prob, x0, o),
+        "shotgun-cdn" => ShotgunCdn::with_p(P).solve_logistic(prob, x0, o),
+        "shooting" => Shooting.solve_logistic(prob, x0, o),
+        "shooting-cdn" => ShootingCdn::default().solve_logistic(prob, x0, o),
+        "sgd" => Sgd::new(Rate::Constant(ETA)).solve_logistic(prob, x0, o),
+        "parallel-sgd" => ParallelSgd::new(P, Rate::Constant(ETA)).solve_logistic(prob, x0, o),
+        "smidas" => Smidas::new(ETA.min(0.1)).solve_logistic(prob, x0, o),
+        "hybrid" => HybridSgdShotgun {
+            eta: ETA,
+            p: P,
+            ..Default::default()
+        }
+        .solve_logistic(prob, x0, o),
+        "glmnet" => Glmnet::default().solve_logistic(prob, x0, o),
+        other => panic!("no legacy logistic reference for {other} — extend this table"),
+    }
+}
+
+fn opts_for(unit: shotgun::api::IterUnit) -> SolveOptions {
+    let max_iters = match unit {
+        shotgun::api::IterUnit::Update | shotgun::api::IterUnit::Round => 60_000,
+        shotgun::api::IterUnit::Sweep => 1_500,
+        shotgun::api::IterUnit::Epoch => 40,
+    };
+    SolveOptions {
+        max_iters,
+        tol: 1e-7,
+        record_every: 512,
+        seed: 9,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fit_reproduces_legacy_lasso_bit_for_bit() {
+    let ds = shotgun::data::synth::sparse_imaging(50, 60, 0.1, 31);
+    let lam = 0.15;
+    let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+    let x0 = vec![0.0; 60];
+    let params = SolverParams {
+        p: P,
+        eta: ETA,
+        ..Default::default()
+    };
+    for entry in SolverRegistry::global()
+        .entries()
+        .iter()
+        .filter(|e| e.caps.squared && e.caps.deterministic)
+    {
+        let o = opts_for(entry.caps.iter_unit);
+        let legacy = legacy_lasso(entry.name, &prob, &x0, &o);
+        let report = Fit::new(&ds.design, &ds.targets)
+            .lambda(lam)
+            .solver(entry.name)
+            .params(params.clone())
+            .options(|opt| *opt = o.clone())
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+        assert_bits_eq(&report.diagnostics.x, &legacy.x, entry.name);
+        assert_eq!(
+            report.diagnostics.objective.to_bits(),
+            legacy.objective.to_bits(),
+            "{}: objective bits differ",
+            entry.name
+        );
+        assert_eq!(report.diagnostics.updates, legacy.updates, "{}", entry.name);
+        // and the model artifact is the same vector, losslessly sparse
+        assert_bits_eq(&report.model.to_dense(), &legacy.x, entry.name);
+    }
+}
+
+#[test]
+fn fit_reproduces_legacy_logistic_bit_for_bit() {
+    let ds = shotgun::data::synth::rcv1_like(50, 40, 0.2, 32);
+    let lam = 0.05;
+    let prob = LogisticProblem::new(&ds.design, &ds.targets, lam);
+    let x0 = vec![0.0; 40];
+    let params = SolverParams {
+        p: P,
+        eta: ETA,
+        ..Default::default()
+    };
+    for entry in SolverRegistry::global()
+        .entries()
+        .iter()
+        .filter(|e| e.caps.logistic && e.caps.deterministic)
+    {
+        let o = opts_for(entry.caps.iter_unit);
+        let legacy = legacy_logistic(entry.name, &prob, &x0, &o);
+        let report = Fit::new(&ds.design, &ds.targets)
+            .loss(Loss::Logistic)
+            .lambda(lam)
+            .solver(entry.name)
+            .params(params.clone())
+            .options(|opt| *opt = o.clone())
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+        assert_bits_eq(&report.diagnostics.x, &legacy.x, entry.name);
+        assert_eq!(
+            report.diagnostics.objective.to_bits(),
+            legacy.objective.to_bits(),
+            "{}: objective bits differ",
+            entry.name
+        );
+    }
+}
+
+#[test]
+fn threaded_engine_reaches_the_exact_optimum_through_fit() {
+    // the one nondeterministic solver: bit-identity is not defined
+    // run-to-run, but the optimum is — compare against the exact engine
+    let ds = shotgun::data::synth::sparse_imaging(60, 80, 0.1, 33);
+    let lam = 0.1;
+    let mk = |name: &str| {
+        Fit::new(&ds.design, &ds.targets)
+            .lambda(lam)
+            .solver(name)
+            .params(SolverParams {
+                p: 2,
+                ..Default::default()
+            })
+            .options(|o| {
+                o.max_iters = 500_000;
+                o.tol = 1e-8;
+            })
+            .run()
+            .expect("solves")
+    };
+    let exact = mk("shotgun");
+    let threaded = mk("shotgun-threaded");
+    let gap = (threaded.objective() - exact.objective()).abs() / exact.objective();
+    assert!(gap < 1e-3, "threaded {} vs exact {}", threaded.objective(), exact.objective());
+}
+
+#[test]
+fn every_registered_solver_has_a_capability_consistent_roundtrip() {
+    // each entry must actually solve the losses it claims and refuse the
+    // ones it does not
+    let reg = SolverRegistry::global();
+    let lasso_ds = shotgun::data::synth::sparco_like(30, 16, 0.4, 34);
+    let lasso = LassoProblem::new(&lasso_ds.design, &lasso_ds.targets, 0.2);
+    let logit_ds = shotgun::data::synth::rcv1_like(30, 16, 0.3, 35);
+    let logit = LogisticProblem::new(&logit_ds.design, &logit_ds.targets, 0.05);
+    let x0 = vec![0.0; 16];
+    let params = SolverParams {
+        p: 2,
+        eta: ETA,
+        ..Default::default()
+    };
+    for entry in reg.entries() {
+        let o = opts_for(entry.caps.iter_unit);
+        let mut s = entry.create(&params);
+        let lasso_res = s.solve(ProblemRef::Lasso(&lasso), &x0, &o);
+        assert_eq!(
+            lasso_res.is_ok(),
+            entry.caps.squared,
+            "{}: squared capability mismatch",
+            entry.name
+        );
+        let logit_res = s.solve(ProblemRef::Logistic(&logit), &x0, &o);
+        assert_eq!(
+            logit_res.is_ok(),
+            entry.caps.logistic,
+            "{}: logistic capability mismatch",
+            entry.name
+        );
+    }
+}
+
+#[test]
+fn model_json_roundtrip_preserves_predictions_bit_for_bit() {
+    let ds = shotgun::data::synth::rcv1_like(60, 40, 0.2, 36);
+    let report = Fit::new(&ds.design, &ds.targets)
+        .loss(Loss::Logistic)
+        .lambda(0.02)
+        .solver("shotgun-cdn")
+        .options(|o| o.max_iters = 50_000)
+        .run()
+        .unwrap();
+    let model = &report.model;
+    let restored = Model::from_json(&model.to_json()).expect("roundtrip");
+    assert_eq!(*model, restored);
+    let (a, b) = (
+        model.decision_function(&ds.design).unwrap(),
+        restored.decision_function(&ds.design).unwrap(),
+    );
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.to_bits(), y.to_bits(), "prediction bits drifted");
+    }
+    assert_eq!(
+        model.predict_proba(&ds.design).unwrap(),
+        restored.predict_proba(&ds.design).unwrap()
+    );
+    // predictions beat the trivial classifier on training data
+    let labels = model.predict(&ds.design).unwrap();
+    let correct = labels
+        .iter()
+        .zip(&ds.targets)
+        .filter(|(p, y)| *p == *y)
+        .count();
+    assert!(correct * 2 > ds.n(), "model worse than coin flip");
+}
+
+#[test]
+fn serving_from_a_shared_cache_is_bit_identical() {
+    // the "millions of users" pattern: one ProblemCache, many lambdas —
+    // must produce exactly the fits a cold construction produces
+    let ds = shotgun::data::synth::sparse_imaging(50, 100, 0.1, 37);
+    let cache = ProblemCache::new(&ds.design);
+    for lam in [0.5, 0.2, 0.08] {
+        let served = Fit::new(&ds.design, &ds.targets)
+            .lambda(lam)
+            .solver("shooting")
+            .cache(&cache)
+            .run()
+            .unwrap();
+        let cold = Fit::new(&ds.design, &ds.targets)
+            .lambda(lam)
+            .solver("shooting")
+            .run()
+            .unwrap();
+        assert_bits_eq(&served.diagnostics.x, &cold.diagnostics.x, "serving");
+        assert_eq!(
+            served.objective().to_bits(),
+            cold.objective().to_bits(),
+            "lam = {lam}"
+        );
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_facade_still_forwards() {
+    // the legacy `Solver` blanket impl must keep its historical behavior
+    // while it lives out its deprecation window
+    use shotgun::solvers::Solver;
+    let ds = shotgun::data::synth::sparco_like(40, 20, 0.3, 38);
+    let legacy = Shooting.solve(&ds.design, &ds.targets, 0.2);
+    let report = Fit::new(&ds.design, &ds.targets)
+        .lambda(0.2)
+        .solver("shooting")
+        .run()
+        .unwrap();
+    assert_bits_eq(&legacy.x, &report.diagnostics.x, "deprecated facade");
+}

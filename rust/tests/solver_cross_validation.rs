@@ -1,20 +1,28 @@
-//! Cross-validation integration tests: every Lasso solver must land on
-//! the same optimum as every other on shared instances across dataset
-//! categories — the apples-to-apples guarantee behind Fig. 3.
+//! Cross-validation integration tests: every registered solver that
+//! claims `exact_optimum` must land on the same optimum as every other
+//! on shared instances across dataset categories — the apples-to-apples
+//! guarantee behind Fig. 3. The solver set is enumerated from
+//! `api::SolverRegistry` (no hand-rolled lists), so registering a new
+//! exact solver automatically adds it to the consensus.
 
-use shotgun::coordinator::{Engine, Shotgun, ShotgunConfig};
+use shotgun::api::{IterUnit, ProblemRef, SolverParams, SolverRegistry};
 use shotgun::data::synth;
-use shotgun::objective::{LassoProblem, LogisticProblem};
-use shotgun::solvers::common::{LassoSolver, LogisticSolver, SolveOptions};
-use shotgun::solvers::{
-    cdn::ShootingCdn, fpc_as::FpcAs, gpsr_bb::GpsrBb, l1_ls::L1Ls, shooting::Shooting,
-    sparsa::Sparsa,
-};
+use shotgun::objective::{LassoProblem, LogisticProblem, Loss};
+use shotgun::solvers::common::{LassoSolver, SolveOptions};
+use shotgun::solvers::{gpsr_bb::GpsrBb, shooting::Shooting, sparsa::Sparsa};
 
-fn opts() -> SolveOptions {
+/// Budget sized to the solver's iteration unit: update-denominated
+/// solvers need hundreds of thousands of draws, sweep-structured ones a
+/// few thousand outer passes.
+fn opts_for(unit: IterUnit, tol: f64) -> SolveOptions {
+    let max_iters = match unit {
+        IterUnit::Update | IterUnit::Round => 500_000,
+        IterUnit::Sweep => 5_000,
+        IterUnit::Epoch => 200,
+    };
     SolveOptions {
-        max_iters: 500_000,
-        tol: 1e-9,
+        max_iters,
+        tol,
         record_every: 1024,
         seed: 5,
         ..Default::default()
@@ -22,59 +30,38 @@ fn opts() -> SolveOptions {
 }
 
 fn lasso_optima(ds: &shotgun::data::Dataset, lam: f64) -> Vec<(String, f64)> {
+    let registry = SolverRegistry::global();
     let d = ds.d();
     let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
     let x0 = vec![0.0; d];
-    let o = opts();
-    let mut out: Vec<(String, f64)> = Vec::new();
-    out.push((
-        "shooting".into(),
-        Shooting.solve_lasso(&prob, &x0, &o).objective,
-    ));
-    out.push((
-        "shotgun-p4".into(),
-        Shotgun::new(ShotgunConfig {
-            p: 4,
-            ..Default::default()
+    let params = SolverParams {
+        p: 2,
+        ..Default::default()
+    };
+    registry
+        .entries()
+        .iter()
+        .filter(|e| e.caps.squared && e.caps.exact_optimum)
+        .map(|e| {
+            let res = e
+                .create(&params)
+                .solve(
+                    ProblemRef::Lasso(&prob),
+                    &x0,
+                    &opts_for(e.caps.iter_unit, 1e-9),
+                )
+                .expect("capability-gated");
+            (e.name.to_string(), res.objective)
         })
-        .solve_lasso(&prob, &x0, &o)
-        .objective,
-    ));
-    out.push((
-        "shotgun-threaded-p2".into(),
-        Shotgun::new(ShotgunConfig {
-            p: 2,
-            engine: Engine::Threaded,
-            ..Default::default()
-        })
-        .solve_lasso(&prob, &x0, &o)
-        .objective,
-    ));
-    out.push((
-        "l1-ls".into(),
-        L1Ls::default().solve_lasso(&prob, &x0, &o).objective,
-    ));
-    out.push((
-        "fpc-as".into(),
-        FpcAs::default()
-            .solve_lasso(&prob, &x0, &SolveOptions {
-                max_iters: 5_000,
-                ..o.clone()
-            })
-            .objective,
-    ));
-    out.push((
-        "gpsr-bb".into(),
-        GpsrBb::default().solve_lasso(&prob, &x0, &o).objective,
-    ));
-    out.push((
-        "sparsa".into(),
-        Sparsa::default().solve_lasso(&prob, &x0, &o).objective,
-    ));
-    out
+        .collect()
 }
 
 fn assert_consensus(tag: &str, optima: &[(String, f64)], rel: f64) {
+    assert!(
+        optima.len() >= 7,
+        "{tag}: consensus set shrank to {}",
+        optima.len()
+    );
     let best = optima.iter().map(|(_, f)| *f).fold(f64::INFINITY, f64::min);
     for (name, f) in optima {
         assert!(
@@ -110,40 +97,43 @@ fn lasso_consensus_text() {
 
 #[test]
 fn logistic_consensus() {
-    // CD, CDN and parallel CDN agree on the logistic optimum
+    // every exact-optimum logistic solver in the registry agrees
+    let registry = SolverRegistry::global();
     let ds = synth::rcv1_like(80, 60, 0.2, 15);
     let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
     let x0 = vec![0.0; 60];
-    let o = SolveOptions {
-        max_iters: 300_000,
-        tol: 1e-8,
-        record_every: 1024,
-        seed: 5,
+    let params = SolverParams {
+        p: 2,
         ..Default::default()
     };
-    let cdn_o = SolveOptions {
-        max_iters: 3_000,
-        ..o.clone()
-    };
-    let optima = vec![
-        (
-            "shooting".to_string(),
-            Shooting.solve_logistic(&prob, &x0, &o).objective,
-        ),
-        (
-            "shooting-cdn".to_string(),
-            ShootingCdn::default()
-                .solve_logistic(&prob, &x0, &cdn_o)
-                .objective,
-        ),
-        (
-            "shotgun-cdn-p4".to_string(),
-            shotgun::coordinator::ShotgunCdn::with_p(4)
-                .solve_logistic(&prob, &x0, &o)
-                .objective,
-        ),
-    ];
-    assert_consensus("logistic", &optima, 1e-2);
+    let optima: Vec<(String, f64)> = registry
+        .entries()
+        .iter()
+        .filter(|e| e.caps.supports(Loss::Logistic) && e.caps.exact_optimum)
+        .map(|e| {
+            let res = e
+                .create(&params)
+                .solve(
+                    ProblemRef::Logistic(&prob),
+                    &x0,
+                    &opts_for(e.caps.iter_unit, 1e-8),
+                )
+                .expect("capability-gated");
+            (e.name.to_string(), res.objective)
+        })
+        .collect();
+    assert!(
+        optima.len() >= 6,
+        "logistic consensus set shrank to {}",
+        optima.len()
+    );
+    let best = optima.iter().map(|(_, f)| *f).fold(f64::INFINITY, f64::min);
+    for (name, f) in &optima {
+        assert!(
+            (f - best).abs() / best.abs().max(1e-12) < 1e-2,
+            "logistic: {name} landed at {f}, consensus best {best}"
+        );
+    }
 }
 
 #[test]
@@ -151,7 +141,13 @@ fn warm_start_cross_solver() {
     // a solution from one solver warm-starts another without regression
     let ds = synth::sparse_imaging(48, 96, 0.1, 16);
     let prob = LassoProblem::new(&ds.design, &ds.targets, 0.15);
-    let o = opts();
+    let o = SolveOptions {
+        max_iters: 500_000,
+        tol: 1e-9,
+        record_every: 1024,
+        seed: 5,
+        ..Default::default()
+    };
     let a = GpsrBb::default().solve_lasso(&prob, &vec![0.0; 96], &o);
     let b = Shooting.solve_lasso(&prob, &a.x, &o);
     assert!(b.objective <= a.objective + 1e-10);

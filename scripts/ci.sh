@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# CI gate: formatting, lints, and the tier-1 verify command.
+# CI gate: formatting, lints, docs, and the tier-1 verify command.
 #
 #   scripts/ci.sh          run everything
 #   scripts/ci.sh fast     skip the release build (fmt + clippy + tests)
@@ -14,6 +14,9 @@ cargo fmt --all -- --check
 echo "== cargo clippy (deny warnings) =="
 cargo clippy --workspace --all-targets -- -D warnings
 
+echo "== cargo doc (deny warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
+
 if [[ "${1:-}" != "fast" ]]; then
   echo "== tier-1: cargo build --release =="
   cargo build --release
@@ -21,5 +24,8 @@ fi
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+echo "== doctests: cargo test --doc =="
+cargo test --doc -q
 
 echo "CI gate passed."
