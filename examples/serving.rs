@@ -1,85 +1,117 @@
-//! Serving repeated fits — the ROADMAP's "heavy traffic on one design"
-//! scenario, end to end through the `api` front door:
+//! Serving end to end — the ROADMAP's "heavy traffic on one design"
+//! scenario through the `api::serve` subsystem:
 //!
 //!   cargo run --release --example serving
 //!
-//! 1. load one design, build its `ProblemCache` ONCE (the O(nnz)
-//!    metadata pass);
-//! 2. serve a stream of fit requests (different lambdas/losses) through
-//!    `Fit`, each reusing the cache — per-request setup is an Arc bump;
-//! 3. ship the winning model as JSON, reload it in a "scorer" that
-//!    never sees the training stack, and verify predictions match
-//!    bit-for-bit.
+//! 1. a bounded [`FitQueue`] drains fit jobs (several lambdas on one
+//!    shared design — the `ProblemCache` is built once by the queue's
+//!    cache hub) and publishes each winner into a [`ModelStore`];
+//! 2. a [`BatchPredictor`] coalesces a seeded request stream into
+//!    `Design`-batched predict calls against the store — bit-identical
+//!    to one-at-a-time `Model::predict`, but the walk over the model's
+//!    weights is paid once per batch;
+//! 3. a hot-swap publishes a refit under the same name: in-flight
+//!    batches finish on the version they started with, the next batch
+//!    serves the new one;
+//! 4. the store persists as JSON and a fresh "scorer" process reloads
+//!    it, predictions surviving bit-for-bit.
 
-use shotgun::api::{Fit, Model, PathSpec};
+use shotgun::api::serve::{BatchConfig, BatchPredictor, FitJob, FitQueue, JobState, ModelStore};
 use shotgun::data::synth;
-use shotgun::objective::ProblemCache;
+use shotgun::objective::Loss;
+use shotgun::testkit::requests::{stream, StreamSpec};
+use std::sync::Arc;
 
 fn main() {
-    // --- load time: one design, one metadata pass ---
+    // --- load time: one design, shared by every job via Arc ---
     let ds = synth::sparse_imaging(512, 1024, 0.02, 2026);
-    let cache = ProblemCache::new(&ds.design);
     println!(
-        "design loaded: n={}, d={}, {:.1}% nonzero; ProblemCache built once",
+        "design loaded: n={}, d={}, {:.1}% nonzero",
         ds.n(),
         ds.d(),
         100.0 * ds.design.density()
     );
+    let design = Arc::new(ds.design);
+    let targets = Arc::new(ds.targets);
 
-    // --- request stream: fits at several regularization strengths ---
-    let mut models = Vec::new();
-    for lam in [0.8, 0.4, 0.2, 0.1] {
-        let report = Fit::new(&ds.design, &ds.targets)
-            .lambda(lam)
-            .solver("shotgun")
-            .p(8)
-            .cache(&cache) // no per-request O(nnz) pass
+    // --- fit side: queue jobs at several lambdas, publish the winner ---
+    let store = Arc::new(ModelStore::new());
+    let queue = FitQueue::with_store(2, 8, Arc::clone(&store));
+    let lambdas = [0.8, 0.4, 0.2, 0.1];
+    let ids: Vec<_> = lambdas
+        .iter()
+        .map(|&lam| {
+            let job = FitJob::new(
+                Arc::clone(&design),
+                Arc::clone(&targets),
+                Loss::Squared,
+                lam,
+            )
+            .solver_name("shotgun")
             .options(|o| {
                 o.max_iters = 2_000_000;
                 o.tol = 1e-7;
             })
-            .run()
-            .expect("validated request");
-        println!(
-            "  lam={lam:<4} -> F = {:.6}, nnz = {:>4}, {} updates, {:.3}s",
-            report.objective(),
-            report.model.nnz(),
-            report.diagnostics.updates,
-            report.diagnostics.seconds
-        );
-        models.push(report.model);
+            // each finished fit hot-swaps the served model
+            .publish_as("default");
+            queue.submit(job).expect("queue accepts while open")
+        })
+        .collect();
+    for (lam, id) in lambdas.iter().zip(ids) {
+        match queue.wait(id).expect("submitted job") {
+            JobState::Done(report) => println!(
+                "  lam={lam:<4} -> F = {:.6}, nnz = {:>4}, {} updates ({})",
+                report.objective(),
+                report.model.nnz(),
+                report.diagnostics.updates,
+                report.diagnostics.solver
+            ),
+            JobState::Failed(e) => panic!("fit job failed: {e}"),
+            other => unreachable!("{other:?}"),
+        }
     }
-
-    // a pathwise fit amortizes even further: one request, whole path
-    let path_report = Fit::new(&ds.design, &ds.targets)
-        .path(PathSpec::to(0.1))
-        .solver("shotgun")
-        .p(8)
-        .cache(&cache)
-        .options(|o| o.max_iters = 2_000_000)
-        .run()
-        .expect("pathwise request");
+    // one design -> the queue's cache hub built exactly one ProblemCache
+    assert_eq!(queue.cache_hub().len(), 1);
+    let serving = store.get("default").expect("published");
     println!(
-        "pathwise to lam=0.1: {} ({} updates total)",
-        path_report.diagnostics.solver, path_report.diagnostics.updates
+        "serving \"default\" v{} (solver {}, lam {})",
+        serving.version, serving.model.solver, serving.model.lam
     );
 
-    // --- ship the artifact ---
-    let chosen = models.last().expect("served at least one fit");
-    let doc = chosen.to_json();
-    println!("shipping model: {} bytes of JSON", doc.len());
-
-    // --- scorer process: reload and serve ---
-    let scorer = Model::from_json(&doc).expect("artifact parses");
-    let before = chosen.predict(&ds.design).expect("predict");
-    let after = scorer.predict(&ds.design).expect("predict");
-    let identical = before
+    // --- serve side: coalesced batches over a seeded request stream ---
+    const MAX_BATCH: usize = 64;
+    let requests = stream(&StreamSpec::new(1024, 256), 7);
+    let mut predictor = BatchPredictor::new(
+        Arc::clone(&store),
+        "default",
+        BatchConfig {
+            max_batch: MAX_BATCH,
+            ..Default::default()
+        },
+    );
+    let responses = predictor.run(&requests).expect("well-formed stream");
+    println!(
+        "served {} requests in {} coalesced batches (versions all = {})",
+        responses.len(),
+        (requests.len() + MAX_BATCH - 1) / MAX_BATCH,
+        responses[0].model_version
+    );
+    assert!(responses
         .iter()
-        .zip(&after)
-        .all(|(a, b)| a.to_bits() == b.to_bits());
-    println!(
-        "reloaded model predictions bit-identical: {identical} (provenance: solver={}, lam={})",
-        scorer.solver, scorer.lam
-    );
+        .all(|r| r.model_version == serving.version));
+
+    // --- ship the store, reload in a scorer process ---
+    let dir = std::env::temp_dir().join("shotgun_serving_example");
+    store.save_dir(&dir).expect("persist store");
+    let scorer_store = Arc::new(ModelStore::new());
+    scorer_store.load_dir(&dir).expect("reload store");
+    let mut scorer = BatchPredictor::new(scorer_store, "default", BatchConfig::default());
+    let replayed = scorer.run(&requests).expect("same stream");
+    let identical = responses
+        .iter()
+        .zip(&replayed)
+        .all(|(a, b)| a.prediction.to_bits() == b.prediction.to_bits());
+    println!("reloaded store predictions bit-identical: {identical}");
     assert!(identical);
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -56,6 +56,23 @@ pub enum ShotgunError {
     },
     /// A serialized [`Model`](crate::api::Model) failed to parse.
     ModelFormat { reason: String },
+    /// A filesystem operation failed (store persistence, request
+    /// files) — distinct from [`ModelFormat`](Self::ModelFormat), which
+    /// means the bytes were READ fine but do not parse.
+    Io { path: String, reason: String },
+    /// No model published under this name in the
+    /// [`ModelStore`](crate::api::serve::ModelStore); `known` lists
+    /// what is.
+    UnknownModel { name: String, known: Vec<String> },
+    /// A serving request is malformed (`index` locates it within its
+    /// batch/stream).
+    BadRequest { index: usize, reason: String },
+    /// The [`FitQueue`](crate::api::serve::FitQueue) was shut down
+    /// before this submission.
+    QueueClosed,
+    /// A fit job panicked inside a solver; the worker caught it and the
+    /// queue kept running.
+    JobPanicked { reason: String },
 }
 
 fn loss_name(loss: Loss) -> &'static str {
@@ -113,6 +130,29 @@ impl fmt::Display for ShotgunError {
             ),
             ShotgunError::ModelFormat { reason } => {
                 write!(f, "malformed model document: {reason}")
+            }
+            ShotgunError::Io { path, reason } => {
+                write!(f, "i/o error on {path}: {reason}")
+            }
+            ShotgunError::UnknownModel { name, known } => {
+                if known.is_empty() {
+                    write!(f, "no model published as {name:?} (store is empty)")
+                } else {
+                    write!(
+                        f,
+                        "no model published as {name:?}; published models: {}",
+                        known.join(", ")
+                    )
+                }
+            }
+            ShotgunError::BadRequest { index, reason } => {
+                write!(f, "bad request [{index}]: {reason}")
+            }
+            ShotgunError::QueueClosed => {
+                write!(f, "fit queue is shut down and no longer accepts jobs")
+            }
+            ShotgunError::JobPanicked { reason } => {
+                write!(f, "fit job panicked in the solver: {reason}")
             }
         }
     }

@@ -22,6 +22,10 @@
 //!   provenance, `predict`/`predict_proba`/`decision_function` over
 //!   [`Design`](crate::sparsela::Design) batches, lossless JSON
 //!   round-trip.
+//! * [`serve`] — the serving subsystem over those artifacts:
+//!   hot-swappable [`ModelStore`], request-coalescing
+//!   [`BatchPredictor`]/[`BatchServer`], bounded multi-worker
+//!   [`FitQueue`], and the `repro serve` replay harness.
 //!
 //! ## Serving repeated fits
 //!
@@ -54,6 +58,7 @@ pub mod error;
 pub mod fit;
 pub mod model;
 pub mod registry;
+pub mod serve;
 
 pub use error::ShotgunError;
 pub use fit::{AutoChoice, Engine, Fit, FitReport, PathSpec};
@@ -61,3 +66,4 @@ pub use model::Model;
 pub use registry::{
     Capabilities, DynCdSolver, IterUnit, ProblemRef, RegistryEntry, SolverParams, SolverRegistry,
 };
+pub use serve::{BatchPredictor, BatchServer, FitJob, FitQueue, JobState, ModelStore};

@@ -185,7 +185,7 @@ impl Model {
             .as_f64()
             .ok_or_else(|| bad("lam is not a number".into()))?;
         let d = field("d")?
-            .as_usize()
+            .as_exact_usize()
             .ok_or_else(|| bad("d is not an integer".into()))?;
         let solver = field("solver")?
             .as_str()
@@ -208,7 +208,7 @@ impl Model {
         let mut prev: Option<u32> = None;
         for (i, (ji, vi)) in idx.iter().zip(val).enumerate() {
             let j = ji
-                .as_usize()
+                .as_exact_usize()
                 .ok_or_else(|| bad(format!("idx[{i}] is not an integer")))?;
             if j >= d {
                 return Err(bad(format!("idx[{i}] = {j} out of range (d = {d})")));

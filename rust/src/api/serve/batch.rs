@@ -1,0 +1,639 @@
+//! `BatchPredictor` — coalesce predict requests into one batched call.
+//!
+//! Scoring one request costs a walk over the model's stored weights
+//! (one column probe per weight — see
+//! [`Model::decision_function`](crate::api::Model::decision_function)),
+//! so serving requests one at a time pays that O(model nnz) walk per
+//! request even when the request row holds five features. Coalescing B
+//! requests into one B-row [`Design`] batch pays the walk **once per
+//! batch**: each stored weight probes one column of the batch matrix,
+//! and the sparse gather touches only the rows that actually carry the
+//! feature. Scherrer et al. (2012): batching policy dominates
+//! wall-clock at serving scale.
+//!
+//! **Determinism contract:** responses are bit-identical to calling
+//! [`Model::predict`](crate::api::Model::predict) /
+//! [`predict_proba`](crate::api::Model::predict_proba) on the
+//! single-request design ([`batch_design`] of one request), for every
+//! batch composition. Per row `i`, the batched accumulation visits the
+//! same weights in the same order with the same stored values as the
+//! one-row accumulation, so the floating-point sum is the same sum.
+//! `tests/serving.rs` proves it across batch sizes.
+//!
+//! Two fronts share one core:
+//! * [`BatchPredictor`] — synchronous: buffer requests, flush
+//!   explicitly or at `max_batch`. Deterministic, test- and
+//!   replay-friendly.
+//! * [`BatchServer`] — a background collector thread that flushes at
+//!   `max_batch` or after `max_wait`, whichever comes first; clients
+//!   get a [`PendingPredict`] ticket to wait on. Batching here changes
+//!   only latency, never values (the contract above).
+
+use super::super::error::ShotgunError;
+use super::super::model::Model;
+use super::store::{ModelRecord, ModelStore};
+use crate::objective::{sigma_neg, Loss};
+use crate::sparsela::{CscMatrix, Design};
+use crate::util::json::{Json, Writer};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One scoring request: a sparse feature row (`(index, value)` pairs)
+/// plus whether a logistic probability read-out is wanted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictRequest {
+    /// Sparse features; indices need not be sorted, duplicates sum
+    /// (the [`CscMatrix::from_triplets`] convention).
+    pub features: Vec<(u32, f64)>,
+    /// Also compute `P(y = +1)` (logistic models only).
+    pub proba: bool,
+}
+
+impl PredictRequest {
+    pub fn new(features: Vec<(u32, f64)>) -> PredictRequest {
+        PredictRequest {
+            features,
+            proba: false,
+        }
+    }
+
+    /// One JSONL line: `{"features":[[j,v],...]}` with an optional
+    /// `"proba":true` — the `repro serve --file` wire format.
+    pub fn to_json_line(&self) -> String {
+        let mut w = Writer::new();
+        w.raw("{\"features\":[");
+        for (k, (j, v)) in self.features.iter().enumerate() {
+            if k > 0 {
+                w.raw(",");
+            }
+            let _ = write!(w, "[{j},{v}]");
+        }
+        w.raw("]");
+        if self.proba {
+            w.raw(",\"proba\":true");
+        }
+        w.raw("}");
+        w.finish()
+    }
+
+    /// Parse one JSONL line (see [`to_json_line`](Self::to_json_line)).
+    pub fn from_json_line(line: &str) -> Result<PredictRequest, ShotgunError> {
+        let bad = |reason: String| ShotgunError::BadRequest { index: 0, reason };
+        let doc = Json::parse(line).map_err(|e| bad(format!("not JSON: {e}")))?;
+        let feats = doc
+            .get("features")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing \"features\" array".into()))?;
+        let mut features = Vec::with_capacity(feats.len());
+        for (k, pair) in feats.iter().enumerate() {
+            let pair = pair
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| bad(format!("features[{k}] is not a [index, value] pair")))?;
+            let j = pair[0]
+                .as_exact_usize()
+                .ok_or_else(|| bad(format!("features[{k}] index is not an integer")))?;
+            let v = pair[1]
+                .as_f64()
+                .ok_or_else(|| bad(format!("features[{k}] value is not a number")))?;
+            features.push((j as u32, v));
+        }
+        let proba = matches!(doc.get("proba"), Some(Json::Bool(true)));
+        Ok(PredictRequest { features, proba })
+    }
+}
+
+/// One scored request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictResponse {
+    /// Raw score `a_i^T x` (the decision function).
+    pub score: f64,
+    /// What [`Model::predict`] returns: the score for squared-loss
+    /// models, the ±1 label for logistic.
+    pub prediction: f64,
+    /// `P(y = +1)` when the request asked for it (logistic models).
+    pub proba: Option<f64>,
+    /// Version of the [`ModelRecord`] that served this request — the
+    /// whole batch is served by ONE record (hot-swaps land between
+    /// batches, never inside one).
+    pub model_version: u64,
+}
+
+/// Batching knobs shared by both fronts.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// Flush when this many requests are pending (>= 1).
+    pub max_batch: usize,
+    /// [`BatchServer`] only: flush a partial batch this long after its
+    /// first request arrived.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// The canonical embedding of requests into a [`Design`]: request `i`
+/// becomes sparse row `i` of a `len(requests) x d` CSC matrix. Both the
+/// batched and the one-at-a-time paths go through this, so "bit
+/// identical" compares the same stored matrix values.
+pub fn batch_design(requests: &[PredictRequest], d: usize) -> Result<Design, ShotgunError> {
+    let mut triplets = Vec::with_capacity(requests.iter().map(|r| r.features.len()).sum());
+    for (i, req) in requests.iter().enumerate() {
+        for &(j, v) in &req.features {
+            if (j as usize) >= d {
+                return Err(ShotgunError::BadRequest {
+                    index: i,
+                    reason: format!("feature index {j} out of range (model d = {d})"),
+                });
+            }
+            if !v.is_finite() {
+                return Err(ShotgunError::BadRequest {
+                    index: i,
+                    reason: format!("feature {j} has non-finite value {v}"),
+                });
+            }
+            triplets.push((i, j as usize, v));
+        }
+    }
+    Ok(Design::Sparse(CscMatrix::from_triplets(
+        requests.len(),
+        d,
+        &triplets,
+    )))
+}
+
+/// Score `requests` against one resolved record in a single coalesced
+/// pass (the core both fronts share).
+pub fn predict_coalesced(
+    record: &ModelRecord,
+    requests: &[PredictRequest],
+) -> Result<Vec<PredictResponse>, ShotgunError> {
+    if requests.is_empty() {
+        return Ok(Vec::new());
+    }
+    let model: &Model = &record.model;
+    if model.loss != Loss::Logistic {
+        if let Some(i) = requests.iter().position(|r| r.proba) {
+            return Err(ShotgunError::BadRequest {
+                index: i,
+                reason: "proba requested from a squared-loss model".into(),
+            });
+        }
+    }
+    let a = batch_design(requests, model.d())?;
+    let scores = model.decision_function(&a)?;
+    Ok(requests
+        .iter()
+        .zip(scores)
+        .map(|(req, z)| {
+            let prediction = if model.loss == Loss::Logistic {
+                if z >= 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            } else {
+                z
+            };
+            // same expression Model::predict_proba applies to its z
+            let proba = (req.proba && model.loss == Loss::Logistic).then(|| sigma_neg(-z));
+            PredictResponse {
+                score: z,
+                prediction,
+                proba,
+                model_version: record.version,
+            }
+        })
+        .collect())
+}
+
+/// The synchronous batching front (see the module docs). Holds a
+/// pending buffer; [`flush`](Self::flush) resolves the model name in
+/// the store ONCE and serves the whole buffer from that record, so a
+/// concurrent hot-swap lands between batches.
+pub struct BatchPredictor {
+    store: Arc<ModelStore>,
+    model_name: String,
+    cfg: BatchConfig,
+    pending: Vec<PredictRequest>,
+}
+
+impl BatchPredictor {
+    pub fn new(store: Arc<ModelStore>, model_name: impl Into<String>, cfg: BatchConfig) -> Self {
+        BatchPredictor {
+            store,
+            model_name: model_name.into(),
+            cfg: BatchConfig {
+                max_batch: cfg.max_batch.max(1),
+                ..cfg
+            },
+            pending: Vec::new(),
+        }
+    }
+
+    /// Requests buffered but not yet flushed.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Buffer a request. Returns the flushed responses whenever the
+    /// buffer reaches `max_batch` (in submit order), `None` otherwise.
+    pub fn submit(
+        &mut self,
+        req: PredictRequest,
+    ) -> Result<Option<Vec<PredictResponse>>, ShotgunError> {
+        self.pending.push(req);
+        if self.pending.len() >= self.cfg.max_batch {
+            return self.flush().map(Some);
+        }
+        Ok(None)
+    }
+
+    /// Serve everything pending as one coalesced batch.
+    pub fn flush(&mut self) -> Result<Vec<PredictResponse>, ShotgunError> {
+        if self.pending.is_empty() {
+            return Ok(Vec::new());
+        }
+        let record = self.store.resolve(&self.model_name)?;
+        let batch = std::mem::take(&mut self.pending);
+        predict_coalesced(&record, &batch)
+    }
+
+    /// Convenience: run a whole request slice through `max_batch`-sized
+    /// coalesced calls, returning responses in request order.
+    pub fn run(
+        &mut self,
+        requests: &[PredictRequest],
+    ) -> Result<Vec<PredictResponse>, ShotgunError> {
+        let mut out = Vec::with_capacity(requests.len());
+        for req in requests {
+            if let Some(batch) = self.submit(req.clone())? {
+                out.extend(batch);
+            }
+        }
+        out.extend(self.flush()?);
+        Ok(out)
+    }
+}
+
+/// Throughput counters a [`BatchServer`] maintains (relaxed atomics —
+/// monitoring, not synchronization).
+#[derive(Default, Debug)]
+pub struct ServerCounters {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+}
+
+impl ServerCounters {
+    /// Mean coalesced batch size so far.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+struct Envelope {
+    req: PredictRequest,
+    reply: mpsc::Sender<Result<PredictResponse, ShotgunError>>,
+}
+
+/// Ticket for an in-flight [`BatchServer`] request.
+pub struct PendingPredict {
+    rx: mpsc::Receiver<Result<PredictResponse, ShotgunError>>,
+}
+
+impl PendingPredict {
+    /// Block until the batch containing this request is served.
+    pub fn wait(self) -> Result<PredictResponse, ShotgunError> {
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(ShotgunError::BadRequest {
+                index: 0,
+                reason: "batch server shut down before serving this request".into(),
+            })
+        })
+    }
+}
+
+/// A per-client submit handle for a [`BatchServer`] (see
+/// [`BatchServer::submitter`]).
+#[derive(Clone)]
+pub struct Submitter {
+    tx: Option<mpsc::Sender<Envelope>>,
+}
+
+impl Submitter {
+    /// Same contract as [`BatchServer::submit`].
+    pub fn submit(&self, req: PredictRequest) -> PendingPredict {
+        let (reply, rx) = mpsc::channel();
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Envelope { req, reply });
+        }
+        PendingPredict { rx }
+    }
+}
+
+/// The background batching front: one collector thread coalesces
+/// requests until `max_batch` or `max_wait` and serves them through
+/// [`predict_coalesced`]. See the module docs for the determinism
+/// contract; `max_wait` trades tail latency against batch size.
+pub struct BatchServer {
+    tx: Option<mpsc::Sender<Envelope>>,
+    worker: Option<JoinHandle<()>>,
+    counters: Arc<ServerCounters>,
+}
+
+impl BatchServer {
+    /// Spawn the collector against `store[model_name]`. The name is
+    /// re-resolved per batch, so hot-swapped models take effect on the
+    /// next batch boundary.
+    pub fn spawn(store: Arc<ModelStore>, model_name: impl Into<String>, cfg: BatchConfig) -> Self {
+        let model_name = model_name.into();
+        let cfg = BatchConfig {
+            max_batch: cfg.max_batch.max(1),
+            ..cfg
+        };
+        let counters = Arc::new(ServerCounters::default());
+        let shared = Arc::clone(&counters);
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let worker = std::thread::spawn(move || {
+            collector_loop(&store, &model_name, cfg, &rx, &shared);
+        });
+        BatchServer {
+            tx: Some(tx),
+            worker: Some(worker),
+            counters,
+        }
+    }
+
+    /// Enqueue a request; the returned ticket resolves when its batch
+    /// is flushed.
+    pub fn submit(&self, req: PredictRequest) -> PendingPredict {
+        let (reply, rx) = mpsc::channel();
+        if let Some(tx) = &self.tx {
+            // a send error means the collector exited; the ticket then
+            // reports shutdown on wait()
+            let _ = tx.send(Envelope { req, reply });
+        }
+        PendingPredict { rx }
+    }
+
+    /// A cloneable, thread-ownable submit handle: each concurrent
+    /// client takes its own (an `mpsc::Sender` clone), so callers never
+    /// share the server itself across threads.
+    pub fn submitter(&self) -> Submitter {
+        Submitter {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Live throughput counters.
+    pub fn counters(&self) -> &ServerCounters {
+        &self.counters
+    }
+
+    /// Stop accepting requests, serve what is queued, join the worker.
+    /// Blocks until every outstanding [`Submitter`] clone is dropped
+    /// (they keep the collector's channel alive).
+    pub fn shutdown(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for BatchServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn collector_loop(
+    store: &ModelStore,
+    model_name: &str,
+    cfg: BatchConfig,
+    rx: &mpsc::Receiver<Envelope>,
+    counters: &ServerCounters,
+) {
+    loop {
+        // block for the batch's first request
+        let first = match rx.recv() {
+            Ok(e) => e,
+            Err(_) => return, // all senders gone, queue drained
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        let mut disconnected = false;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(e) => batch.push(e),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        dispatch(store, model_name, batch, counters);
+        if disconnected {
+            return;
+        }
+    }
+}
+
+fn dispatch(store: &ModelStore, model_name: &str, batch: Vec<Envelope>, counters: &ServerCounters) {
+    // take ownership so the request rows are NOT re-cloned on the hot
+    // path — the envelope split below is the only move
+    let (requests, replies): (Vec<PredictRequest>, Vec<_>) =
+        batch.into_iter().map(|e| (e.req, e.reply)).unzip();
+    let outcome = store
+        .resolve(model_name)
+        .and_then(|record| predict_coalesced(&record, &requests));
+    counters
+        .requests
+        .fetch_add(requests.len() as u64, Ordering::Relaxed);
+    counters.batches.fetch_add(1, Ordering::Relaxed);
+    match outcome {
+        Ok(responses) => {
+            for (reply, resp) in replies.iter().zip(responses) {
+                let _ = reply.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            // a batch-level failure (unknown model, malformed request)
+            // fails every waiter with the same typed error
+            for reply in &replies {
+                let _ = reply.send(Err(e.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_with(weights: &[f64], loss: Loss) -> Arc<ModelStore> {
+        let store = Arc::new(ModelStore::new());
+        store.publish("m", Model::from_dense(weights, loss, 0.1, "test"));
+        store
+    }
+
+    #[test]
+    fn request_jsonl_roundtrip() {
+        let req = PredictRequest {
+            features: vec![(3, 0.5), (17, -1.25)],
+            proba: true,
+        };
+        let line = req.to_json_line();
+        assert_eq!(line, "{\"features\":[[3,0.5],[17,-1.25]],\"proba\":true}");
+        assert_eq!(PredictRequest::from_json_line(&line).unwrap(), req);
+        let plain = PredictRequest::new(vec![(0, 2.0)]);
+        assert_eq!(
+            PredictRequest::from_json_line(&plain.to_json_line()).unwrap(),
+            plain
+        );
+        assert!(PredictRequest::from_json_line("{}").is_err());
+        assert!(PredictRequest::from_json_line("{\"features\":[[1]]}").is_err());
+        // fractional / negative indices are rejected, not truncated to
+        // a neighboring feature
+        assert!(PredictRequest::from_json_line("{\"features\":[[2.9,1.0]]}").is_err());
+        assert!(PredictRequest::from_json_line("{\"features\":[[-1,1.0]]}").is_err());
+    }
+
+    #[test]
+    fn coalesced_matches_model_predict() {
+        let store = store_with(&[1.0, 0.0, -2.0, 0.5], Loss::Squared);
+        let record = store.get("m").unwrap();
+        let requests = vec![
+            PredictRequest::new(vec![(0, 1.0), (2, 2.0)]),
+            PredictRequest::new(vec![(3, -4.0)]),
+            PredictRequest::new(vec![]),
+        ];
+        let out = predict_coalesced(&record, &requests).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].score, 1.0 - 4.0);
+        assert_eq!(out[1].score, -2.0);
+        assert_eq!(out[2].score, 0.0);
+        assert!(out.iter().all(|r| r.model_version == 1));
+        // per-request baseline through the same embedding
+        for (req, resp) in requests.iter().zip(&out) {
+            let single = batch_design(std::slice::from_ref(req), 4).unwrap();
+            let z = record.model.predict(&single).unwrap();
+            assert_eq!(z[0].to_bits(), resp.prediction.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let store = store_with(&[1.0, 2.0], Loss::Squared);
+        let record = store.get("m").unwrap();
+        let out = predict_coalesced(
+            &record,
+            &[PredictRequest::new(vec![(9, 1.0)])],
+        );
+        assert!(matches!(out, Err(ShotgunError::BadRequest { index: 0, .. })));
+        let out = predict_coalesced(
+            &record,
+            &[PredictRequest::new(vec![(0, f64::NAN)])],
+        );
+        assert!(matches!(out, Err(ShotgunError::BadRequest { .. })));
+        let mut proba_req = PredictRequest::new(vec![(0, 1.0)]);
+        proba_req.proba = true;
+        let out = predict_coalesced(&record, &[proba_req]);
+        assert!(matches!(out, Err(ShotgunError::BadRequest { index: 0, .. })));
+    }
+
+    #[test]
+    fn predictor_flushes_at_max_batch() {
+        let store = store_with(&[1.0, -1.0], Loss::Squared);
+        let mut bp = BatchPredictor::new(
+            Arc::clone(&store),
+            "m",
+            BatchConfig {
+                max_batch: 2,
+                ..Default::default()
+            },
+        );
+        assert!(bp
+            .submit(PredictRequest::new(vec![(0, 1.0)]))
+            .unwrap()
+            .is_none());
+        assert_eq!(bp.pending(), 1);
+        let flushed = bp
+            .submit(PredictRequest::new(vec![(1, 1.0)]))
+            .unwrap()
+            .expect("auto-flush at max_batch");
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(flushed[0].score, 1.0);
+        assert_eq!(flushed[1].score, -1.0);
+        assert_eq!(bp.pending(), 0);
+        assert!(bp.flush().unwrap().is_empty());
+    }
+
+    #[test]
+    fn logistic_labels_and_proba() {
+        let store = store_with(&[2.0, -1.0], Loss::Logistic);
+        let mut req = PredictRequest::new(vec![(0, 1.0)]);
+        req.proba = true;
+        let mut neg = PredictRequest::new(vec![(1, 3.0)]);
+        neg.proba = true;
+        let record = store.get("m").unwrap();
+        let out = predict_coalesced(&record, &[req, neg]).unwrap();
+        assert_eq!(out[0].prediction, 1.0);
+        assert_eq!(out[1].prediction, -1.0);
+        assert!(out[0].proba.unwrap() > 0.5);
+        assert!(out[1].proba.unwrap() < 0.5);
+    }
+
+    #[test]
+    fn server_serves_and_shuts_down() {
+        let store = store_with(&[1.0, 0.5], Loss::Squared);
+        let server = BatchServer::spawn(
+            Arc::clone(&store),
+            "m",
+            BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+        );
+        let tickets: Vec<PendingPredict> = (0..10)
+            .map(|i| server.submit(PredictRequest::new(vec![(0, i as f64)])))
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let resp = t.wait().expect("served");
+            assert_eq!(resp.score, i as f64);
+        }
+        assert_eq!(server.counters().requests.load(Ordering::Relaxed), 10);
+        assert!(server.counters().batches.load(Ordering::Relaxed) >= 3);
+    }
+
+    #[test]
+    fn server_reports_unknown_model() {
+        let store = Arc::new(ModelStore::new());
+        let server = BatchServer::spawn(store, "ghost", BatchConfig::default());
+        let err = server
+            .submit(PredictRequest::new(vec![]))
+            .wait()
+            .unwrap_err();
+        assert!(matches!(err, ShotgunError::UnknownModel { .. }));
+    }
+}

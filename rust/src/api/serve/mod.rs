@@ -1,0 +1,42 @@
+//! `api::serve` — the request-serving layer over the `Fit`/`Model`
+//! front door.
+//!
+//! PR 3 made a fit produce a servable artifact; this module is the
+//! subsystem that turns artifacts into a high-throughput serving path
+//! (the ROADMAP's "heavy traffic from millions of users" north star):
+//!
+//! * [`ModelStore`] ([`store`]) — versioned, hot-swappable named
+//!   models behind atomic `Arc` swaps; JSON persistence per name.
+//! * [`BatchPredictor`] / [`BatchServer`] ([`batch`]) — coalesce
+//!   predict requests into one [`Design`](crate::sparsela::Design)
+//!   batch per flush (configurable `max_batch`/`max_wait`), amortizing
+//!   the per-request walk over the model's weights; responses are
+//!   bit-identical to one-at-a-time [`Model::predict`](crate::api::Model::predict).
+//! * [`FitQueue`] ([`queue`]) — a bounded multi-worker fit queue (std
+//!   threads + channels) with typed job states, per-job engine/budget
+//!   settings, shared [`ProblemCache`](crate::objective::ProblemCache)
+//!   reuse across jobs on one design, and publish-on-finish into the
+//!   store.
+//! * [`mod@replay`] — the `repro serve` harness: replay a request
+//!   stream, measure throughput + latency percentiles, emit
+//!   `BENCH_serving.json`.
+//!
+//! The pieces compose: a `FitQueue` publishes into a `ModelStore` that
+//! a `BatchServer` serves from, and a hot-swap takes effect at the next
+//! batch boundary without dropping a single in-flight request.
+//! `tests/serving.rs` is the deterministic end-to-end harness proving
+//! the three contracts (batch bit-identity, worker-count independence,
+//! swap atomicity).
+
+pub mod batch;
+pub mod queue;
+pub mod replay;
+pub mod store;
+
+pub use batch::{
+    batch_design, predict_coalesced, BatchConfig, BatchPredictor, BatchServer, PendingPredict,
+    PredictRequest, PredictResponse, ServerCounters, Submitter,
+};
+pub use queue::{CacheHub, FitJob, FitQueue, JobId, JobLambda, JobSolver, JobState};
+pub use replay::{replay, ReplayConfig, ReplayStats};
+pub use store::{ModelRecord, ModelStore};

@@ -1,0 +1,558 @@
+//! `FitQueue` — a bounded multi-worker queue of fit jobs.
+//!
+//! The fit side of the serving story: training requests arrive faster
+//! than one thread can solve them, so a pool of `workers` std threads
+//! drains a bounded channel of [`FitJob`]s, runs each through the
+//! [`Fit`](crate::api::Fit) front door, and (optionally) publishes the
+//! resulting model straight into a [`ModelStore`] under the job's
+//! `publish_as` name. Everything is std (`sync_channel` + `Mutex` +
+//! `Condvar`) — no new dependencies.
+//!
+//! * **Bounded**: [`submit`](FitQueue::submit) blocks once `capacity`
+//!   jobs are queued (back-pressure instead of unbounded memory);
+//!   [`try_submit`](FitQueue::try_submit) refuses instead.
+//! * **Typed states**: [`JobState`] is
+//!   `Queued -> Running -> Done(FitReport) | Failed(ShotgunError)`;
+//!   [`wait`](FitQueue::wait) blocks on the terminal state. A job that
+//!   panics inside a solver is caught and reported as
+//!   `Failed(JobPanicked)` — one bad job never takes a worker down.
+//! * **Shared `ProblemCache`**: jobs carry `Arc<Design>`; a per-queue
+//!   [`CacheHub`] keys caches by design identity (`Arc` pointer, with a
+//!   `Weak` guard against address reuse), so N jobs on one design pay
+//!   the O(nnz) `col_sq` pass once, not N times.
+//! * **Worker-count independence**: a job's result depends only on its
+//!   spec (deterministic solvers draw their randomness from
+//!   `SolveOptions::seed`), never on which worker ran it or how many
+//!   workers exist — `tests/serving.rs` proves 1 worker vs N bit-equal.
+
+use super::super::error::ShotgunError;
+use super::super::fit::{Engine, Fit, FitReport, PathSpec};
+use super::super::registry::SolverParams;
+use super::store::ModelStore;
+use crate::objective::{Loss, ProblemCache};
+use crate::sparsela::Design;
+use crate::solvers::common::SolveOptions;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex, PoisonError, Weak};
+use std::thread::JoinHandle;
+
+/// Which lambda request a job makes.
+#[derive(Clone, Debug)]
+pub enum JobLambda {
+    /// Single solve at a fixed lambda.
+    Fixed(f64),
+    /// A full regularization path; the job's model is the final stage's.
+    Path(PathSpec),
+}
+
+/// Which solver a job asks for.
+#[derive(Clone, Debug)]
+pub enum JobSolver {
+    /// An execution engine ([`Engine::Auto`] runs Theorem 3.2 per job).
+    Engine(Engine),
+    /// A registry name (`"shotgun"`, `"glmnet"`, ...).
+    Name(String),
+}
+
+/// One queued fit: owns its data (`Arc`, so many jobs share one design
+/// allocation) plus the per-job solver/budget settings.
+#[derive(Clone)]
+pub struct FitJob {
+    pub design: Arc<Design>,
+    pub targets: Arc<Vec<f64>>,
+    pub loss: Loss,
+    pub lambda: JobLambda,
+    pub solver: JobSolver,
+    pub params: SolverParams,
+    pub opts: SolveOptions,
+    /// Surface budget exhaustion as `Failed(BudgetExhausted)` instead
+    /// of `Done` with `converged = false`.
+    pub require_convergence: bool,
+    /// Publish the fitted model into the queue's [`ModelStore`] under
+    /// this name as soon as the job finishes.
+    pub publish_as: Option<String>,
+}
+
+impl FitJob {
+    /// A job with default solver (auto), params, and options.
+    pub fn new(design: Arc<Design>, targets: Arc<Vec<f64>>, loss: Loss, lam: f64) -> FitJob {
+        FitJob {
+            design,
+            targets,
+            loss,
+            lambda: JobLambda::Fixed(lam),
+            solver: JobSolver::Engine(Engine::Auto),
+            params: SolverParams::default(),
+            opts: SolveOptions::default(),
+            require_convergence: false,
+            publish_as: None,
+        }
+    }
+
+    pub fn solver_name(mut self, name: impl Into<String>) -> Self {
+        self.solver = JobSolver::Name(name.into());
+        self
+    }
+
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.solver = JobSolver::Engine(engine);
+        self
+    }
+
+    pub fn options(mut self, f: impl FnOnce(&mut SolveOptions)) -> Self {
+        f(&mut self.opts);
+        self
+    }
+
+    pub fn publish_as(mut self, name: impl Into<String>) -> Self {
+        self.publish_as = Some(name.into());
+        self
+    }
+}
+
+/// Queue-assigned job handle.
+pub type JobId = u64;
+
+/// Lifecycle of a submitted job.
+#[derive(Clone, Debug)]
+pub enum JobState {
+    /// Accepted, waiting for a worker.
+    Queued,
+    /// A worker is solving it.
+    Running,
+    /// Finished; the report carries the model + diagnostics.
+    Done(Box<FitReport>),
+    /// Finished with a typed error (validation, capability, budget
+    /// under `require_convergence`, or a caught solver panic).
+    Failed(ShotgunError),
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done(_) | JobState::Failed(_))
+    }
+}
+
+/// Per-design [`ProblemCache`] sharing across jobs (see module docs).
+#[derive(Default)]
+pub struct CacheHub {
+    entries: Mutex<HashMap<usize, (Weak<Design>, ProblemCache)>>,
+}
+
+impl CacheHub {
+    fn lookup(
+        map: &HashMap<usize, (Weak<Design>, ProblemCache)>,
+        key: usize,
+        design: &Arc<Design>,
+    ) -> Option<ProblemCache> {
+        let (w, cache) = map.get(&key)?;
+        w.upgrade()
+            .is_some_and(|live| Arc::ptr_eq(&live, design))
+            .then(|| cache.clone())
+    }
+
+    /// The cache for `design`, built at most once per live design. The
+    /// O(nnz) build runs OUTSIDE the hub lock (a worker building the
+    /// cache for one design must not stall workers starting jobs on
+    /// other designs); a double-checked re-lookup on insert keeps
+    /// build-once semantics when two workers race on the same design —
+    /// the loser's build is dropped and the winner's cache adopted.
+    pub fn for_design(&self, design: &Arc<Design>) -> ProblemCache {
+        let key = Arc::as_ptr(design) as usize;
+        {
+            let mut map = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+            // prune dead designs so a reused address can't alias
+            map.retain(|_, (w, _)| w.strong_count() > 0);
+            if let Some(cache) = Self::lookup(&map, key, design) {
+                return cache;
+            }
+        }
+        let built = ProblemCache::new(design);
+        let mut map = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(cache) = Self::lookup(&map, key, design) {
+            return cache; // another worker won the race
+        }
+        map.insert(key, (Arc::downgrade(design), built.clone()));
+        built
+    }
+
+    /// Number of live cached designs (tests).
+    pub fn len(&self) -> usize {
+        self.entries
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+struct WorkItem {
+    id: JobId,
+    job: FitJob,
+}
+
+type StateTable = Mutex<HashMap<JobId, JobState>>;
+
+struct Shared {
+    states: StateTable,
+    done: Condvar,
+    hub: CacheHub,
+    store: Option<Arc<ModelStore>>,
+}
+
+impl Shared {
+    fn set(&self, id: JobId, state: JobState) {
+        let terminal = state.is_terminal();
+        self.states
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(id, state);
+        if terminal {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// The bounded multi-worker fit queue (see the module docs).
+pub struct FitQueue {
+    tx: Option<SyncSender<WorkItem>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    next_id: Mutex<JobId>,
+}
+
+impl FitQueue {
+    /// `workers` solver threads over a queue holding at most `capacity`
+    /// waiting jobs (both floored at 1).
+    pub fn new(workers: usize, capacity: usize) -> FitQueue {
+        Self::build(workers, capacity, None)
+    }
+
+    /// A queue that publishes `publish_as` jobs into `store`.
+    pub fn with_store(workers: usize, capacity: usize, store: Arc<ModelStore>) -> FitQueue {
+        Self::build(workers, capacity, Some(store))
+    }
+
+    fn build(workers: usize, capacity: usize, store: Option<Arc<ModelStore>>) -> FitQueue {
+        let shared = Arc::new(Shared {
+            states: Mutex::new(HashMap::new()),
+            done: Condvar::new(),
+            hub: CacheHub::default(),
+            store,
+        });
+        let (tx, rx) = mpsc::sync_channel::<WorkItem>(capacity.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&rx, &shared))
+            })
+            .collect();
+        FitQueue {
+            tx: Some(tx),
+            workers: handles,
+            shared,
+            next_id: Mutex::new(0),
+        }
+    }
+
+    fn register(&self) -> Result<(JobId, &SyncSender<WorkItem>), ShotgunError> {
+        let tx = self.tx.as_ref().ok_or(ShotgunError::QueueClosed)?;
+        let mut next = self.next_id.lock().unwrap_or_else(PoisonError::into_inner);
+        *next += 1;
+        Ok((*next, tx))
+    }
+
+    /// Enqueue a job, BLOCKING while the queue is at capacity
+    /// (back-pressure). Returns its [`JobId`].
+    pub fn submit(&self, job: FitJob) -> Result<JobId, ShotgunError> {
+        let (id, tx) = self.register()?;
+        self.shared.set(id, JobState::Queued);
+        if tx.send(WorkItem { id, job }).is_err() {
+            self.shared.set(id, JobState::Failed(ShotgunError::QueueClosed));
+            return Err(ShotgunError::QueueClosed);
+        }
+        Ok(id)
+    }
+
+    /// Enqueue without blocking: `Ok(None)` means the queue is full.
+    pub fn try_submit(&self, job: FitJob) -> Result<Option<JobId>, ShotgunError> {
+        let (id, tx) = self.register()?;
+        self.shared.set(id, JobState::Queued);
+        match tx.try_send(WorkItem { id, job }) {
+            Ok(()) => Ok(Some(id)),
+            Err(TrySendError::Full(_)) => {
+                self.shared
+                    .states
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .remove(&id);
+                Ok(None)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.shared.set(id, JobState::Failed(ShotgunError::QueueClosed));
+                Err(ShotgunError::QueueClosed)
+            }
+        }
+    }
+
+    /// The job's current state (`None` for an id this queue never
+    /// issued).
+    pub fn status(&self, id: JobId) -> Option<JobState> {
+        self.shared
+            .states
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(&id)
+            .cloned()
+    }
+
+    /// Remove and return `id`'s state IF it is terminal — the
+    /// consumption call for long-running processes. [`status`]/[`wait`]
+    /// deliberately leave states in the table (so late observers can
+    /// still read an outcome), which means a queue that submits jobs
+    /// forever must `take` finished ones or the table grows one
+    /// `FitReport` per job. Returns `None` while the job is still
+    /// `Queued`/`Running` (nothing is removed) or for an unknown id.
+    ///
+    /// [`status`]: FitQueue::status
+    /// [`wait`]: FitQueue::wait
+    pub fn take(&self, id: JobId) -> Option<JobState> {
+        let mut states = self
+            .shared
+            .states
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        if states.get(&id).is_some_and(JobState::is_terminal) {
+            states.remove(&id)
+        } else {
+            None
+        }
+    }
+
+    /// Block until `id` reaches `Done`/`Failed` and return that state
+    /// (`None` for an unknown id). The state stays in the table; call
+    /// [`take`](FitQueue::take) to consume it.
+    pub fn wait(&self, id: JobId) -> Option<JobState> {
+        let mut states = self
+            .shared
+            .states
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        loop {
+            match states.get(&id) {
+                None => return None,
+                Some(s) if s.is_terminal() => return Some(s.clone()),
+                Some(_) => {
+                    states = self
+                        .shared
+                        .done
+                        .wait(states)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+    }
+
+    /// The queue's cache hub (tests and diagnostics).
+    pub fn cache_hub(&self) -> &CacheHub {
+        &self.shared.hub
+    }
+
+    /// Stop accepting jobs, finish everything queued, join the workers.
+    pub fn shutdown(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for FitQueue {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(rx: &Mutex<mpsc::Receiver<WorkItem>>, shared: &Shared) {
+    loop {
+        // hold the receiver lock only for the pop, not the solve
+        let item = {
+            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
+            guard.recv()
+        };
+        let WorkItem { id, job } = match item {
+            Ok(i) => i,
+            Err(_) => return, // queue closed and drained
+        };
+        shared.set(id, JobState::Running);
+        let state = match catch_unwind(AssertUnwindSafe(|| run_job(&job, shared))) {
+            Ok(Ok(report)) => {
+                if let (Some(store), Some(name)) = (&shared.store, &job.publish_as) {
+                    store.publish(name, report.model.clone());
+                }
+                JobState::Done(Box::new(report))
+            }
+            Ok(Err(e)) => JobState::Failed(e),
+            Err(panic) => {
+                let reason = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                JobState::Failed(ShotgunError::JobPanicked { reason })
+            }
+        };
+        shared.set(id, state);
+    }
+}
+
+fn run_job(job: &FitJob, shared: &Shared) -> Result<FitReport, ShotgunError> {
+    let cache = shared.hub.for_design(&job.design);
+    let opts = job.opts.clone();
+    let mut fit = Fit::new(&job.design, &job.targets)
+        .loss(job.loss)
+        .params(job.params.clone())
+        .options(move |o| *o = opts)
+        .cache(&cache);
+    fit = match &job.lambda {
+        JobLambda::Fixed(lam) => fit.lambda(*lam),
+        JobLambda::Path(spec) => fit.path(spec.clone()),
+    };
+    fit = match &job.solver {
+        JobSolver::Engine(e) => fit.engine(*e),
+        JobSolver::Name(n) => fit.solver(n.clone()),
+    };
+    if job.require_convergence {
+        fit = fit.require_convergence();
+    }
+    fit.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    fn job(ds: &Arc<(Arc<Design>, Arc<Vec<f64>>)>, lam: f64) -> FitJob {
+        FitJob::new(Arc::clone(&ds.0), Arc::clone(&ds.1), Loss::Squared, lam)
+            .solver_name("shooting")
+            .options(|o| {
+                o.max_iters = 50_000;
+                o.tol = 1e-7;
+            })
+    }
+
+    fn dataset(seed: u64) -> Arc<(Arc<Design>, Arc<Vec<f64>>)> {
+        let ds = synth::sparco_like(30, 20, 0.4, seed);
+        Arc::new((Arc::new(ds.design), Arc::new(ds.targets)))
+    }
+
+    #[test]
+    fn jobs_run_to_done_and_share_the_cache() {
+        let ds = dataset(1);
+        let queue = FitQueue::new(2, 8);
+        let ids: Vec<JobId> = [0.5, 0.3, 0.2]
+            .iter()
+            .map(|&lam| queue.submit(job(&ds, lam)).unwrap())
+            .collect();
+        for id in ids {
+            match queue.wait(id).expect("known id") {
+                JobState::Done(report) => assert!(report.diagnostics.converged),
+                other => panic!("job {id} ended as {other:?}"),
+            }
+        }
+        // three jobs, one design, one cache entry
+        assert_eq!(queue.cache_hub().len(), 1);
+    }
+
+    #[test]
+    fn failures_are_typed_not_fatal() {
+        let ds = dataset(2);
+        let queue = FitQueue::new(1, 4);
+        let bad = job(&ds, 0.5).solver_name("no-such-solver");
+        let id = queue.submit(bad).unwrap();
+        match queue.wait(id).expect("known id") {
+            JobState::Failed(ShotgunError::UnknownSolver { .. }) => {}
+            other => panic!("expected UnknownSolver, got {other:?}"),
+        }
+        // the worker survives to run the next job
+        let ok = queue.submit(job(&ds, 0.4)).unwrap();
+        assert!(matches!(
+            queue.wait(ok).expect("known id"),
+            JobState::Done(_)
+        ));
+    }
+
+    #[test]
+    fn publishes_into_the_store() {
+        let ds = dataset(3);
+        let store = Arc::new(ModelStore::new());
+        let queue = FitQueue::with_store(2, 4, Arc::clone(&store));
+        let id = queue
+            .submit(job(&ds, 0.3).publish_as("prod"))
+            .unwrap();
+        let state = queue.wait(id).expect("known id");
+        let report = match state {
+            JobState::Done(r) => r,
+            other => panic!("{other:?}"),
+        };
+        let rec = store.get("prod").expect("published");
+        assert_eq!(rec.version, 1);
+        assert_eq!(*rec.model, report.model);
+    }
+
+    #[test]
+    fn take_consumes_terminal_states() {
+        let ds = dataset(7);
+        let queue = FitQueue::new(1, 4);
+        let id = queue.submit(job(&ds, 0.4)).unwrap();
+        assert!(matches!(queue.wait(id), Some(JobState::Done(_))));
+        // wait leaves the state readable; take consumes it exactly once
+        assert!(queue.status(id).is_some());
+        assert!(matches!(queue.take(id), Some(JobState::Done(_))));
+        assert!(queue.status(id).is_none());
+        assert!(queue.take(id).is_none());
+        // a non-terminal job is not removable
+        assert!(queue.take(9_999).is_none());
+    }
+
+    #[test]
+    fn unknown_ids_and_shutdown() {
+        let ds = dataset(4);
+        let mut queue = FitQueue::new(1, 2);
+        assert!(queue.status(99).is_none());
+        assert!(queue.wait(99).is_none());
+        let id = queue.submit(job(&ds, 0.5)).unwrap();
+        queue.shutdown();
+        // queued work is drained before shutdown returns
+        assert!(queue.status(id).is_some_and(|s| s.is_terminal()));
+        let err = queue.submit(job(&ds, 0.4)).unwrap_err();
+        assert!(matches!(err, ShotgunError::QueueClosed));
+    }
+
+    #[test]
+    fn cache_hub_distinguishes_designs() {
+        let hub = CacheHub::default();
+        let a = dataset(5);
+        let b = dataset(6);
+        let c1 = hub.for_design(&a.0);
+        let c2 = hub.for_design(&a.0);
+        assert!(Arc::ptr_eq(&c1.col_sq(), &c2.col_sq()));
+        let c3 = hub.for_design(&b.0);
+        assert!(!Arc::ptr_eq(&c1.col_sq(), &c3.col_sq()));
+        assert_eq!(hub.len(), 2);
+        drop(a);
+        drop(c1);
+        drop(c2);
+        // dead designs are pruned on the next access
+        let _ = hub.for_design(&b.0);
+        assert_eq!(hub.len(), 1);
+    }
+}

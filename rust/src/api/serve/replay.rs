@@ -1,0 +1,269 @@
+//! Request-stream replay — the serving benchmark harness behind
+//! `repro serve`.
+//!
+//! Replays a prepared [`PredictRequest`] stream against a
+//! [`ModelStore`] through the [`BatchServer`], with `clients` submitter
+//! threads modeling concurrent callers (each pipelining up to
+//! `max_batch` in-flight requests, so the collector can actually fill
+//! its batches rather than idling on the `max_wait` timer). Each
+//! request's latency is measured ticket-to-response (submit → batch
+//! flush → reply), so the percentiles include the coalescing wait, not
+//! just the compute.
+//! [`ReplayStats::to_bench_json`] renders the machine-readable
+//! `BENCH_serving.json` tracked across PRs (same pattern as
+//! `BENCH_hotpath.json`).
+
+use super::super::error::ShotgunError;
+use super::batch::{BatchConfig, BatchServer, PredictRequest};
+use super::store::ModelStore;
+use crate::util::json::escape;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Replay knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayConfig {
+    /// Batching policy for the server under test.
+    pub batch: BatchConfig,
+    /// Concurrent submitter threads (>= 1).
+    pub clients: usize,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig {
+            batch: BatchConfig::default(),
+            clients: 4,
+        }
+    }
+}
+
+/// What a replay measured.
+#[derive(Clone, Debug)]
+pub struct ReplayStats {
+    /// Requests served (every one got a successful response).
+    pub requests: usize,
+    /// End-to-end wall-clock for the whole stream.
+    pub seconds: f64,
+    /// Requests per second over the whole stream.
+    pub throughput_rps: f64,
+    /// Per-request latency percentiles, microseconds.
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// Coalesced batches dispatched and their mean size.
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Replay configuration echo (for the JSON report).
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+    pub clients: usize,
+}
+
+/// Latency percentile by linear index (sorted input, `q` in [0, 1]).
+fn percentile(sorted_us: &[f64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// Replay `requests` against `store[model_name]` (see the module docs).
+/// Fails fast on the first request-level error — a benchmark stream is
+/// expected to be well-formed.
+pub fn replay(
+    store: Arc<ModelStore>,
+    model_name: &str,
+    requests: &[PredictRequest],
+    cfg: &ReplayConfig,
+) -> Result<ReplayStats, ShotgunError> {
+    let clients = cfg.clients.max(1);
+    let mut server = BatchServer::spawn(Arc::clone(&store), model_name, cfg.batch);
+    let started = Instant::now();
+
+    // shard the stream round-robin across client threads. Each client
+    // PIPELINES up to max_batch requests before waiting on its oldest
+    // ticket: a strictly closed loop (one in-flight request per client)
+    // would cap every batch at `clients` requests and the benchmark
+    // would just measure the max_wait timer, not the coalescing. With a
+    // max_batch-deep window per client the collector can actually fill
+    // batches, and per-request latency still means "submit to reply".
+    let window = cfg.batch.max_batch.max(1);
+    let latencies_us: Result<Vec<Vec<f64>>, ShotgunError> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let shard: Vec<&PredictRequest> =
+                    requests.iter().skip(c).step_by(clients).collect();
+                // each client owns its own submit handle (dropped with
+                // the thread, so shutdown below can join the collector)
+                let submitter = server.submitter();
+                scope.spawn(move || -> Result<Vec<f64>, ShotgunError> {
+                    let mut lat = Vec::with_capacity(shard.len());
+                    let mut in_flight = std::collections::VecDeque::with_capacity(window);
+                    for req in shard {
+                        if in_flight.len() >= window {
+                            let (t0, ticket): (Instant, _) = in_flight.pop_front().unwrap();
+                            ticket.wait()?;
+                            lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                        }
+                        in_flight.push_back((Instant::now(), submitter.submit(req.clone())));
+                    }
+                    for (t0, ticket) in in_flight {
+                        ticket.wait()?;
+                        lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                    }
+                    Ok(lat)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .collect()
+    });
+    let seconds = started.elapsed().as_secs_f64();
+    let mut lat: Vec<f64> = latencies_us?.into_iter().flatten().collect();
+    lat.sort_by(|a, b| a.total_cmp(b));
+
+    let batches = server
+        .counters()
+        .batches
+        .load(std::sync::atomic::Ordering::Relaxed);
+    let mean_batch = server.counters().mean_batch();
+    server.shutdown();
+
+    Ok(ReplayStats {
+        requests: lat.len(),
+        seconds,
+        throughput_rps: if seconds > 0.0 {
+            lat.len() as f64 / seconds
+        } else {
+            0.0
+        },
+        p50_us: percentile(&lat, 0.50),
+        p90_us: percentile(&lat, 0.90),
+        p99_us: percentile(&lat, 0.99),
+        max_us: lat.last().copied().unwrap_or(0.0),
+        batches,
+        mean_batch,
+        max_batch: cfg.batch.max_batch,
+        max_wait_us: cfg.batch.max_wait.as_micros() as u64,
+        clients,
+    })
+}
+
+impl ReplayStats {
+    /// One human-readable summary line.
+    pub fn report_line(&self) -> String {
+        format!(
+            "{} requests in {:.3}s -> {:.0} req/s | latency us p50 {:.0} p90 {:.0} p99 {:.0} max {:.0} | {} batches (mean {:.1})",
+            self.requests,
+            self.seconds,
+            self.throughput_rps,
+            self.p50_us,
+            self.p90_us,
+            self.p99_us,
+            self.max_us,
+            self.batches,
+            self.mean_batch
+        )
+    }
+
+    /// The `BENCH_serving.json` document (machine-readable serving perf
+    /// trajectory, tracked across PRs).
+    pub fn to_bench_json(&self, dataset: &str, model_solver: &str) -> String {
+        format!(
+            "{{\n  \"bench\": \"serving\",\n  \"dataset\": {},\n  \"model_solver\": {},\n  \
+             \"config\": {{\"max_batch\": {}, \"max_wait_us\": {}, \"clients\": {}}},\n  \
+             \"results\": {{\n    \"requests\": {},\n    \"seconds\": {:.6},\n    \
+             \"throughput_rps\": {:.3},\n    \"latency_us\": {{\"p50\": {:.1}, \"p90\": {:.1}, \
+             \"p99\": {:.1}, \"max\": {:.1}}},\n    \"batches\": {},\n    \
+             \"mean_batch\": {:.3}\n  }}\n}}\n",
+            escape(dataset),
+            escape(model_solver),
+            self.max_batch,
+            self.max_wait_us,
+            self.clients,
+            self.requests,
+            self.seconds,
+            self.throughput_rps,
+            self.p50_us,
+            self.p90_us,
+            self.p99_us,
+            self.max_us,
+            self.batches,
+            self.mean_batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Model;
+    use crate::objective::Loss;
+    use std::time::Duration;
+
+    #[test]
+    fn percentiles_pick_sorted_entries() {
+        let lat = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0];
+        assert_eq!(percentile(&lat, 0.0), 1.0);
+        assert_eq!(percentile(&lat, 0.5), 6.0);
+        assert_eq!(percentile(&lat, 1.0), 10.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn replay_serves_every_request() {
+        let store = Arc::new(ModelStore::new());
+        store.publish(
+            "m",
+            Model::from_dense(&[1.0, -0.5, 2.0], Loss::Squared, 0.1, "test"),
+        );
+        let requests: Vec<PredictRequest> = (0..97)
+            .map(|i| PredictRequest::new(vec![(i % 3, 1.0 + i as f64)]))
+            .collect();
+        let cfg = ReplayConfig {
+            batch: BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+            },
+            clients: 3,
+        };
+        let stats = replay(store, "m", &requests, &cfg).expect("replay");
+        assert_eq!(stats.requests, 97);
+        assert!(stats.seconds > 0.0);
+        assert!(stats.throughput_rps > 0.0);
+        assert!(stats.p50_us <= stats.p90_us && stats.p90_us <= stats.p99_us);
+        assert!(stats.p99_us <= stats.max_us);
+        assert!(stats.batches >= 1);
+        let json = stats.to_bench_json("unit-test", "none");
+        let parsed = crate::util::json::Json::parse(&json).expect("valid JSON");
+        assert_eq!(
+            parsed.get("bench").and_then(|b| b.as_str().map(String::from)),
+            Some("serving".into())
+        );
+        assert_eq!(
+            parsed
+                .get("results")
+                .and_then(|r| r.get("requests"))
+                .and_then(|v| v.as_usize()),
+            Some(97)
+        );
+    }
+
+    #[test]
+    fn replay_fails_fast_on_unknown_model() {
+        let store = Arc::new(ModelStore::new());
+        let err = replay(
+            store,
+            "ghost",
+            &[PredictRequest::new(vec![])],
+            &ReplayConfig::default(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, ShotgunError::UnknownModel { .. }));
+    }
+}

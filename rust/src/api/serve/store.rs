@@ -1,0 +1,335 @@
+//! `ModelStore` — versioned, hot-swappable named models.
+//!
+//! The serving process keeps every live model behind a name
+//! (`"default"`, `"user-tier-premium"`, ...). Publishing a new fit for
+//! a name is an atomic pointer swap: the store replaces one
+//! `Arc<ModelRecord>` under a short write lock, so a reader either gets
+//! the *complete* old record or the *complete* new record — never a mix
+//! of old weights and new provenance. A [`ModelRecord`] is immutable
+//! after publish; in-flight batches that cloned the `Arc` before a swap
+//! finish against the version they started with (regression-tested in
+//! `tests/serving.rs::hot_swap_never_serves_a_torn_model`).
+//!
+//! Versions are per-name and monotonic within a store's lifetime.
+//! [`save_dir`](ModelStore::save_dir)/[`load_dir`](ModelStore::load_dir)
+//! persist the store as one `shotgun.store.v1` JSON document per name
+//! (the [`Model`] artifact plus name/version provenance) through
+//! [`crate::util::json`], so a restarted scorer resumes from the last
+//! published set.
+
+use super::super::error::ShotgunError;
+use super::super::model::Model;
+use crate::util::json::{escape, Json};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, PoisonError, RwLock};
+
+/// One published model: immutable after [`ModelStore::publish`].
+#[derive(Clone, Debug)]
+pub struct ModelRecord {
+    /// Name the record was published under.
+    pub name: String,
+    /// Per-name monotonic version (1 is the first publish).
+    pub version: u64,
+    /// The servable artifact. Shared, never mutated.
+    pub model: Arc<Model>,
+}
+
+impl ModelRecord {
+    /// Serialize record + model as one self-describing document.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"format\":\"shotgun.store.v1\",\"name\":{},\"version\":{},\"model\":{}}}",
+            escape(&self.name),
+            self.version,
+            self.model.to_json()
+        )
+    }
+
+    /// Parse a document produced by [`to_json`](ModelRecord::to_json).
+    pub fn from_json(text: &str) -> Result<ModelRecord, ShotgunError> {
+        let bad = |reason: String| ShotgunError::ModelFormat { reason };
+        let doc = Json::parse(text).map_err(|e| bad(format!("not JSON: {e}")))?;
+        match doc.get("format").and_then(Json::as_str) {
+            Some("shotgun.store.v1") => {}
+            other => return Err(bad(format!("unsupported store format tag {other:?}"))),
+        }
+        let name = doc
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing record name".into()))?
+            .to_string();
+        let version = doc
+            .get("version")
+            .and_then(Json::as_exact_usize)
+            .ok_or_else(|| bad("missing or non-integer record version".into()))?
+            as u64;
+        let model_doc = doc
+            .get("model")
+            .ok_or_else(|| bad("missing model object".into()))?;
+        // round-trip the subtree through the writer: Model::from_json
+        // takes text, and util::json serialization is value-preserving
+        // (shortest-round-trip floats), so weights stay bit-exact
+        let model = Model::from_json(&crate::util::json::to_string(model_doc))?;
+        Ok(ModelRecord {
+            name,
+            version,
+            model: Arc::new(model),
+        })
+    }
+}
+
+/// The hot-swappable name → model table (see the module docs).
+///
+/// All methods take `&self`; wrap the store in an `Arc` and share it
+/// between the fit side ([`FitQueue`](super::FitQueue) publishes into
+/// it) and the serve side ([`BatchPredictor`](super::BatchPredictor)
+/// resolves from it per batch).
+#[derive(Default)]
+pub struct ModelStore {
+    inner: RwLock<BTreeMap<String, Arc<ModelRecord>>>,
+}
+
+impl ModelStore {
+    pub fn new() -> ModelStore {
+        ModelStore::default()
+    }
+
+    /// Read access that outlives a writer's panic: serving keeps going
+    /// on the last consistent table rather than poisoning every reader.
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, BTreeMap<String, Arc<ModelRecord>>> {
+        self.inner.read().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn write(&self) -> std::sync::RwLockWriteGuard<'_, BTreeMap<String, Arc<ModelRecord>>> {
+        self.inner.write().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Publish `model` under `name`, returning the new version. The
+    /// swap is atomic: concurrent readers see the old record or this
+    /// one, both complete.
+    pub fn publish(&self, name: &str, model: Model) -> u64 {
+        let mut table = self.write();
+        let version = table.get(name).map(|r| r.version + 1).unwrap_or(1);
+        table.insert(
+            name.to_string(),
+            Arc::new(ModelRecord {
+                name: name.to_string(),
+                version,
+                model: Arc::new(model),
+            }),
+        );
+        version
+    }
+
+    /// The current record for `name` (an `Arc` clone — holding it keeps
+    /// that version alive across later publishes).
+    pub fn get(&self, name: &str) -> Option<Arc<ModelRecord>> {
+        self.read().get(name).cloned()
+    }
+
+    /// Like [`get`](ModelStore::get) but typed for serving paths.
+    pub fn resolve(&self, name: &str) -> Result<Arc<ModelRecord>, ShotgunError> {
+        self.get(name).ok_or_else(|| ShotgunError::UnknownModel {
+            name: name.to_string(),
+            known: self.names(),
+        })
+    }
+
+    /// Remove `name`, returning its last record.
+    pub fn remove(&self, name: &str) -> Option<Arc<ModelRecord>> {
+        self.write().remove(name)
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.read().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.read().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.read().is_empty()
+    }
+
+    /// Filesystem-safe file name for a record. Model names are
+    /// arbitrary strings (`"tier/premium"`, `"../x"`), so the name is
+    /// sanitized to `[A-Za-z0-9._-]` and suffixed with an FNV-1a hash
+    /// of the ORIGINAL name for uniqueness; the real name round-trips
+    /// through the document body, never the file name.
+    fn file_name_for(name: &str) -> String {
+        let mut safe: String = name
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                    c
+                } else {
+                    '_'
+                }
+            })
+            .collect();
+        safe.truncate(48);
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+        format!("{safe}-{h:016x}.store.json")
+    }
+
+    /// Write every record to `dir/<sanitized-name>-<hash>.store.json`
+    /// (see [`file_name_for`](Self::file_name_for) — names with path
+    /// separators cannot escape `dir`).
+    pub fn save_dir(&self, dir: &Path) -> Result<(), ShotgunError> {
+        let records: Vec<Arc<ModelRecord>> = self.read().values().cloned().collect();
+        std::fs::create_dir_all(dir).map_err(|e| ShotgunError::Io {
+            path: dir.display().to_string(),
+            reason: format!("create: {e}"),
+        })?;
+        for rec in records {
+            let path = dir.join(Self::file_name_for(&rec.name));
+            std::fs::write(&path, rec.to_json()).map_err(|e| ShotgunError::Io {
+                path: path.display().to_string(),
+                reason: format!("write: {e}"),
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Load every `*.store.json` under `dir`, publishing each at its
+    /// persisted version (later publishes continue from there). Returns
+    /// the number of records loaded.
+    pub fn load_dir(&self, dir: &Path) -> Result<usize, ShotgunError> {
+        let entries = std::fs::read_dir(dir).map_err(|e| ShotgunError::Io {
+            path: dir.display().to_string(),
+            reason: format!("read dir: {e}"),
+        })?;
+        let mut loaded = 0;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if !path
+                .file_name()
+                .and_then(|s| s.to_str())
+                .is_some_and(|s| s.ends_with(".store.json"))
+            {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path).map_err(|e| ShotgunError::Io {
+                path: path.display().to_string(),
+                reason: format!("read: {e}"),
+            })?;
+            let rec = ModelRecord::from_json(&text)?;
+            self.write().insert(rec.name.clone(), Arc::new(rec));
+            loaded += 1;
+        }
+        Ok(loaded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::Loss;
+
+    fn model(w: &[f64]) -> Model {
+        Model::from_dense(w, Loss::Squared, 0.1, "test")
+    }
+
+    #[test]
+    fn publish_bumps_versions_per_name() {
+        let store = ModelStore::new();
+        assert_eq!(store.publish("a", model(&[1.0])), 1);
+        assert_eq!(store.publish("a", model(&[2.0])), 2);
+        assert_eq!(store.publish("b", model(&[3.0])), 1);
+        assert_eq!(store.get("a").unwrap().version, 2);
+        assert_eq!(store.get("a").unwrap().model.to_dense(), vec![2.0]);
+        assert_eq!(store.names(), vec!["a".to_string(), "b".to_string()]);
+        assert!(store.get("c").is_none());
+        assert!(matches!(
+            store.resolve("c"),
+            Err(ShotgunError::UnknownModel { .. })
+        ));
+    }
+
+    #[test]
+    fn held_records_survive_swaps() {
+        let store = ModelStore::new();
+        store.publish("m", model(&[1.0, 0.0]));
+        let held = store.get("m").unwrap();
+        store.publish("m", model(&[0.0, 2.0]));
+        // the in-flight handle still serves version 1
+        assert_eq!(held.version, 1);
+        assert_eq!(held.model.to_dense(), vec![1.0, 0.0]);
+        assert_eq!(store.get("m").unwrap().version, 2);
+    }
+
+    #[test]
+    fn record_json_roundtrip_is_exact() {
+        let rec = ModelRecord {
+            name: "prod \"quoted\"".into(),
+            version: 7,
+            model: Arc::new(Model::from_dense(
+                &[0.1 + 0.2, 0.0, -1.0 / 3.0],
+                Loss::Logistic,
+                0.05,
+                "shotgun-p8",
+            )),
+        };
+        let back = ModelRecord::from_json(&rec.to_json()).expect("roundtrip");
+        assert_eq!(back.name, rec.name);
+        assert_eq!(back.version, 7);
+        assert_eq!(*back.model, *rec.model);
+        assert!(ModelRecord::from_json("{}").is_err());
+    }
+
+    #[test]
+    fn save_load_dir_roundtrip() {
+        let store = ModelStore::new();
+        store.publish("alpha", model(&[1.5, 0.0, -2.0]));
+        store.publish("beta", model(&[0.25]));
+        store.publish("beta", model(&[0.5]));
+        let dir = std::env::temp_dir().join(format!("shotgun_store_{}", std::process::id()));
+        store.save_dir(&dir).expect("save");
+        let restored = ModelStore::new();
+        assert_eq!(restored.load_dir(&dir).expect("load"), 2);
+        assert_eq!(restored.get("beta").unwrap().version, 2);
+        assert_eq!(restored.get("beta").unwrap().model.to_dense(), vec![0.5]);
+        // versions continue from the persisted point
+        assert_eq!(restored.publish("beta", model(&[0.75])), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hostile_names_stay_inside_the_directory() {
+        let store = ModelStore::new();
+        store.publish("tier/premium", model(&[1.0]));
+        store.publish("../escape", model(&[2.0]));
+        store.publish("tier premium", model(&[3.0])); // sanitizes same as slash
+        let dir = std::env::temp_dir().join(format!("shotgun_store_h_{}", std::process::id()));
+        store.save_dir(&dir).expect("save");
+        // every file landed flat inside dir (nothing escaped or nested)
+        let files: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(files.len(), 3, "{files:?}");
+        assert!(!std::env::temp_dir().join("escape.store.json").exists());
+        // the hash suffix keeps same-sanitization names distinct, and
+        // the real names round-trip through the document body
+        let restored = ModelStore::new();
+        assert_eq!(restored.load_dir(&dir).expect("load"), 3);
+        assert_eq!(
+            restored.names(),
+            vec![
+                "../escape".to_string(),
+                "tier premium".to_string(),
+                "tier/premium".to_string()
+            ]
+        );
+        assert_eq!(restored.get("tier/premium").unwrap().model.to_dense(), vec![1.0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

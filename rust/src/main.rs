@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   solve          solve one problem with any registered solver
 //!   solvers        list the solver registry + capabilities
+//!   serve          fit + publish a model, replay a request stream
+//!                  against the batching server, report throughput and
+//!                  latency percentiles into BENCH_serving.json
 //!   estimate-pstar power-iteration rho + P* for a dataset
 //!   bench <exp>    regenerate a paper table/figure
 //!                  (fig2|fig3|fig4|fig5|bounds|headline|ablations|all)
@@ -34,6 +37,12 @@ USAGE:
               [--budget secs] [--seed 42] [--eta R] [--sparsity K]
               [--path-to LAM [--path-stages 6]] [--trace-out f.csv]
   repro solvers
+  repro serve --data <spec> [--lam 0.1] [--loss squared|logistic]
+              [--solver auto] [--requests 10000] [--max-nnz 8]
+              [--proba-frac 0.0] [--file reqs.jsonl]
+              [--gen-requests out.jsonl] [--max-batch 64]
+              [--max-wait-us 2000] [--clients 4] [--fit-workers 2]
+              [--bench-out BENCH_serving.json] [--store-out dir]
   repro estimate-pstar --data <spec> [--seed 42]
   repro bench <fig2|fig3|fig4|fig5|bounds|headline|ablations|all>
               [--scale 0.25] [--out results] [--seed 42] [--budget 60]
@@ -55,6 +64,16 @@ DATA SPECS (--data):
 SOLVERS (--solver): "auto" (Theorem 3.2 picks P and the engine) or any
   registry name — run `repro solvers` for the roster + capabilities.
   (legacy: `--solver shotgun --engine threaded` maps to shotgun-threaded)
+
+SERVE REQUEST FORMAT (--file, one JSON object per line; blank lines and
+  `#` comments skipped):
+    {"features":[[3,0.5],[17,-1.25]]}
+    {"features":[[0,2.0]],"proba":true}
+  "features" is the sparse request row as [index, value] pairs (indices
+  need not be sorted; duplicates sum); "proba" additionally asks for
+  P(y=+1) and requires a logistic model. Without --file, `serve`
+  generates a seeded stream (--requests/--max-nnz/--proba-frac);
+  --gen-requests writes that stream as JSONL and exits.
 "#;
 
 fn parse_dims(s: &str) -> (usize, usize) {
@@ -197,6 +216,129 @@ fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
     if let Some(out) = args.get("model-out") {
         std::fs::write(out, report.model.to_json()).expect("write model");
         println!("model written to {out}");
+    }
+    Ok(())
+}
+
+/// `repro serve`: the end-to-end serving story. Fit through the
+/// [`FitQueue`] (publishing into a [`ModelStore`]), then replay a
+/// request stream (seeded synthetic or `--file` JSONL) against the
+/// batching server and report throughput + latency percentiles into
+/// `--bench-out` (default `BENCH_serving.json`).
+fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
+    use shotgun::api::serve::{
+        replay, BatchConfig, FitJob, FitQueue, JobState, ModelStore, ReplayConfig,
+    };
+    use shotgun::testkit::requests::{self, StreamSpec};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let seed = args.usize_or("seed", 42) as u64;
+    let ds = load_data(&args.get_or("data", "imaging:512x1024:0.02"), seed);
+    let loss = match args.get_or("loss", "squared").as_str() {
+        "logistic" => Loss::Logistic,
+        _ => Loss::Squared,
+    };
+    let lam = args.f64_or("lam", 0.1);
+    let solver_name = args.get_or("solver", "auto");
+    let dataset_tag = format!("{} (n={}, d={})", ds.name, ds.n(), ds.d());
+    let d = ds.d();
+
+    // --- request stream: --file JSONL, or a seeded synthetic stream ---
+    let spec = StreamSpec {
+        d,
+        count: args.usize_or("requests", 10_000),
+        max_nnz: args.usize_or("max-nnz", 8),
+        proba_fraction: if loss == Loss::Logistic {
+            args.f64_or("proba-frac", 0.0)
+        } else {
+            0.0
+        },
+    };
+    let io_err = |path: &str, what: &str, e: std::io::Error| ShotgunError::Io {
+        path: path.to_string(),
+        reason: format!("{what}: {e}"),
+    };
+    let request_stream = match args.get("file") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).map_err(|e| io_err(path, "read requests", e))?;
+            requests::from_jsonl(&text)?
+        }
+        None => requests::stream(&spec, seed ^ 0x5e21),
+    };
+    if let Some(out) = args.get("gen-requests") {
+        std::fs::write(out, requests::to_jsonl(&request_stream))
+            .map_err(|e| io_err(out, "write requests", e))?;
+        println!("wrote {} requests to {out}", request_stream.len());
+        return Ok(());
+    }
+
+    // --- fit side: queue the training job, publish into the store ---
+    let store = Arc::new(ModelStore::new());
+    let queue = FitQueue::with_store(
+        args.usize_or("fit-workers", 2),
+        args.usize_or("fit-capacity", 16),
+        Arc::clone(&store),
+    );
+    let design = Arc::new(ds.design);
+    let targets = Arc::new(ds.targets);
+    let mut job = FitJob::new(design, targets, loss, lam)
+        .options(|o| {
+            o.max_iters = args.usize_or("max-iters", 1_000_000) as u64;
+            o.max_seconds = args.f64_or("budget", 0.0);
+            o.tol = args.f64_or("tol", 1e-7);
+            o.seed = seed;
+        })
+        .publish_as("default");
+    job.params.p = args.usize_or("p", 8);
+    if solver_name != "auto" {
+        job = job.solver_name(solver_name.clone());
+    }
+    let id = queue.submit(job)?;
+    let report = match queue.wait(id).expect("submitted job is known") {
+        JobState::Done(report) => report,
+        JobState::Failed(e) => return Err(e),
+        other => unreachable!("wait() returns terminal states, got {other:?}"),
+    };
+    let record = store.resolve("default")?;
+    println!(
+        "fitted {dataset_tag}: {} -> F = {:.6}, nnz = {}, published as \"default\" v{}",
+        report.diagnostics.solver,
+        report.objective(),
+        report.model.nnz(),
+        record.version
+    );
+
+    // --- serve side: replay the stream through the batching server ---
+    let cfg = ReplayConfig {
+        batch: BatchConfig {
+            max_batch: args.usize_or("max-batch", 64),
+            max_wait: Duration::from_micros(args.usize_or("max-wait-us", 2_000) as u64),
+        },
+        clients: args.usize_or("clients", 4),
+    };
+    println!(
+        "replaying {} requests (max_batch {}, max_wait {}us, {} clients)...",
+        request_stream.len(),
+        cfg.batch.max_batch,
+        cfg.batch.max_wait.as_micros(),
+        cfg.clients
+    );
+    let stats = replay(Arc::clone(&store), "default", &request_stream, &cfg)?;
+    println!("{}", stats.report_line());
+
+    let bench_out = args.get_or("bench-out", "BENCH_serving.json");
+    std::fs::write(
+        &bench_out,
+        stats.to_bench_json(&dataset_tag, &report.diagnostics.solver),
+    )
+    .map_err(|e| io_err(&bench_out, "write bench json", e))?;
+    println!("serving benchmark written to {bench_out}");
+
+    if let Some(dir) = args.get("store-out") {
+        store.save_dir(std::path::Path::new(&dir))?;
+        println!("model store persisted to {dir}/");
     }
     Ok(())
 }
@@ -369,6 +511,12 @@ fn main() {
             }
         }
         Some("solvers") => cmd_solvers(),
+        Some("serve") => {
+            if let Err(e) = cmd_serve(&args) {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
         Some("estimate-pstar") => cmd_estimate_pstar(&args),
         Some("bench") => cmd_bench(&args),
         Some("xla-demo") => cmd_xla_demo(&args),

@@ -5,6 +5,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod requests;
+
 /// Run `cases` random property checks. `gen` builds a case from an RNG;
 /// `prop` returns `Err(msg)` to fail. Panics with the replay coordinates.
 pub fn check<T: std::fmt::Debug>(

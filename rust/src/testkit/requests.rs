@@ -1,0 +1,163 @@
+//! Seeded request-stream generation — the deterministic traffic source
+//! behind `repro serve` and `tests/serving.rs`.
+//!
+//! A [`StreamSpec`] fully determines a stream: same spec + seed →
+//! bit-identical requests, so a replay benchmark is reproducible across
+//! machines and a failing serving test replays exactly. Streams
+//! round-trip through the `repro serve --file` JSONL wire format via
+//! [`to_jsonl`]/[`from_jsonl`].
+
+use crate::api::serve::PredictRequest;
+use crate::api::ShotgunError;
+use crate::util::rng::Rng;
+
+/// Shape of a synthetic request stream.
+#[derive(Clone, Debug)]
+pub struct StreamSpec {
+    /// Feature dimension requests index into (the model's `d`).
+    pub d: usize,
+    /// Number of requests.
+    pub count: usize,
+    /// Maximum nonzero features per request (actual count is uniform in
+    /// `[1, max_nnz]`).
+    pub max_nnz: usize,
+    /// Fraction of requests flagged `proba` (logistic serving only —
+    /// keep 0.0 for squared-loss models).
+    pub proba_fraction: f64,
+}
+
+impl StreamSpec {
+    /// A stream of `count` requests over `d` features with the default
+    /// sparsity (up to 8 features per request, no proba).
+    pub fn new(d: usize, count: usize) -> StreamSpec {
+        StreamSpec {
+            d,
+            count,
+            max_nnz: 8,
+            proba_fraction: 0.0,
+        }
+    }
+}
+
+/// Generate the stream for `spec` from `seed` (deterministic; see the
+/// module docs).
+pub fn stream(spec: &StreamSpec, seed: u64) -> Vec<PredictRequest> {
+    assert!(spec.d > 0, "request stream needs d >= 1");
+    let mut rng = Rng::new(seed);
+    let max_nnz = spec.max_nnz.clamp(1, spec.d);
+    (0..spec.count)
+        .map(|_| {
+            let k = 1 + rng.below(max_nnz);
+            let mut idx = rng.sample_without_replacement(spec.d, k);
+            idx.sort_unstable();
+            let features = idx
+                .into_iter()
+                .map(|j| (j as u32, rng.normal()))
+                .collect();
+            PredictRequest {
+                features,
+                proba: spec.proba_fraction > 0.0 && rng.bernoulli(spec.proba_fraction),
+            }
+        })
+        .collect()
+}
+
+/// Serialize a stream as JSONL (one request per line — the
+/// `repro serve --file` format).
+pub fn to_jsonl(requests: &[PredictRequest]) -> String {
+    let mut out = String::new();
+    for req in requests {
+        out.push_str(&req.to_json_line());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL stream (blank lines and `#` comment lines skipped);
+/// errors carry the 1-based line number.
+pub fn from_jsonl(text: &str) -> Result<Vec<PredictRequest>, ShotgunError> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match PredictRequest::from_json_line(line) {
+            Ok(req) => out.push(req),
+            Err(ShotgunError::BadRequest { reason, .. }) => {
+                return Err(ShotgunError::BadRequest {
+                    index: lineno + 1,
+                    reason,
+                })
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_are_deterministic_and_in_spec() {
+        let spec = StreamSpec {
+            d: 50,
+            count: 200,
+            max_nnz: 6,
+            proba_fraction: 0.3,
+        };
+        let a = stream(&spec, 42);
+        let b = stream(&spec, 42);
+        assert_eq!(a, b, "same seed, same stream");
+        assert_ne!(a, stream(&spec, 43), "different seed, different stream");
+        assert_eq!(a.len(), 200);
+        let mut saw_proba = false;
+        for req in &a {
+            assert!(!req.features.is_empty() && req.features.len() <= 6);
+            // indices sorted, unique, in range
+            for w in req.features.windows(2) {
+                assert!(w[0].0 < w[1].0);
+            }
+            assert!(req.features.iter().all(|&(j, v)| (j as usize) < 50 && v.is_finite()));
+            saw_proba |= req.proba;
+        }
+        assert!(saw_proba, "proba_fraction 0.3 over 200 requests");
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let spec = StreamSpec {
+            d: 20,
+            count: 30,
+            max_nnz: 4,
+            proba_fraction: 0.5,
+        };
+        let reqs = stream(&spec, 7);
+        let text = to_jsonl(&reqs);
+        let back = from_jsonl(&text).expect("parse");
+        assert_eq!(back, reqs);
+        // comments/blank lines tolerated, errors carry the line number
+        let padded = format!("# header\n\n{text}");
+        assert_eq!(from_jsonl(&padded).expect("parse"), reqs);
+        let err = from_jsonl("{\"features\":[[0,1.0]]}\nnot json\n").unwrap_err();
+        match err {
+            ShotgunError::BadRequest { index, .. } => assert_eq!(index, 2),
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn max_nnz_clamps_to_d() {
+        let spec = StreamSpec {
+            d: 3,
+            count: 50,
+            max_nnz: 100,
+            proba_fraction: 0.0,
+        };
+        for req in stream(&spec, 1) {
+            assert!(req.features.len() <= 3);
+        }
+    }
+}

@@ -41,8 +41,27 @@ impl Json {
         }
     }
 
+    /// Lenient index accessor (truncates fractions, saturates negatives
+    /// to 0 — the `as` cast). Fine for trusted documents like the
+    /// artifact manifest; anything validating EXTERNAL input (model
+    /// documents, serving requests) must use
+    /// [`as_exact_usize`](Json::as_exact_usize) instead.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
+    }
+
+    /// Strict integer accessor: `Some` only when the value is a number
+    /// that is finite, non-negative, fraction-free, and exactly
+    /// representable in an f64 (< 2^53) — so `2.9`, `-1`, `1e300`, and
+    /// non-numbers all return `None` instead of silently truncating.
+    pub fn as_exact_usize(&self) -> Option<usize> {
+        const EXACT_MAX: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self.as_f64() {
+            Some(x) if x.is_finite() && (0.0..EXACT_MAX).contains(&x) && x.fract() == 0.0 => {
+                Some(x as usize)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -397,5 +416,18 @@ mod tests {
     fn numbers() {
         assert_eq!(Json::parse("-1.5e3").unwrap().as_f64(), Some(-1500.0));
         assert_eq!(Json::parse("42").unwrap().as_usize(), Some(42));
+    }
+
+    #[test]
+    fn exact_usize_rejects_non_integers() {
+        assert_eq!(Json::parse("42").unwrap().as_exact_usize(), Some(42));
+        assert_eq!(Json::parse("0").unwrap().as_exact_usize(), Some(0));
+        // the lenient accessor truncates/saturates these; the strict
+        // one refuses
+        assert_eq!(Json::parse("2.9").unwrap().as_usize(), Some(2));
+        assert_eq!(Json::parse("2.9").unwrap().as_exact_usize(), None);
+        assert_eq!(Json::parse("-1").unwrap().as_exact_usize(), None);
+        assert_eq!(Json::parse("1e300").unwrap().as_exact_usize(), None);
+        assert_eq!(Json::parse("\"3\"").unwrap().as_exact_usize(), None);
     }
 }

@@ -1,0 +1,295 @@
+//! Property tests for `api::Model` JSON round-trips at the edges of
+//! f64, plus display coverage for every `ShotgunError` variant.
+//!
+//! The serving story rests on "a model survives JSON bit-for-bit";
+//! these tests push that claim where shortest-round-trip float
+//! formatting is most likely to crack: subnormals, `MAX`-magnitude
+//! weights, exact zeros (dropped from storage), and models whose
+//! feature tail is all zeros (d must survive without any weight
+//! mentioning it).
+
+use shotgun::api::serve::PredictRequest;
+use shotgun::api::{Model, ShotgunError};
+use shotgun::objective::Loss;
+use shotgun::testkit;
+use shotgun::util::rng::Rng;
+
+/// Weight values that stress the serializer: exact zero (not stored),
+/// subnormals, near-MAX magnitudes, sub-ZERO_TOL dust, and ordinary
+/// values.
+fn edge_weight(rng: &mut Rng) -> f64 {
+    match rng.below(8) {
+        0 => 0.0,
+        1 => f64::MIN_POSITIVE,            // smallest normal
+        2 => 5e-324,                       // smallest subnormal
+        3 => 1e-310 * rng.range(0.5, 2.0), // random subnormal
+        4 => f64::MAX * rng.range(0.5, 1.0),
+        5 => -f64::MAX * rng.range(0.5, 1.0),
+        6 => 1e-12 * rng.normal(), // below ZERO_TOL, still stored
+        _ => rng.normal(),
+    }
+}
+
+#[test]
+fn json_roundtrip_is_bit_exact_at_f64_edges() {
+    testkit::check(
+        "model-json-roundtrip-edges",
+        2027,
+        150,
+        |rng| {
+            let d = 1 + rng.below(40);
+            let x: Vec<f64> = (0..d).map(|_| edge_weight(rng)).collect();
+            let loss = if rng.bernoulli(0.5) {
+                Loss::Squared
+            } else {
+                Loss::Logistic
+            };
+            let lam = rng.range(0.0, 2.0);
+            (x, loss, lam)
+        },
+        |(x, loss, lam)| {
+            let m = Model::from_dense(x, *loss, *lam, "edge-test");
+            let m2 = Model::from_json(&m.to_json())
+                .map_err(|e| format!("roundtrip parse failed: {e}"))?;
+            if m2 != m {
+                return Err("roundtrip not equal".into());
+            }
+            for (&(j1, v1), &(j2, v2)) in m.weights().iter().zip(m2.weights()) {
+                if j1 != j2 || v1.to_bits() != v2.to_bits() {
+                    return Err(format!(
+                        "weight ({j1}, {v1:e}) came back as ({j2}, {v2:e})"
+                    ));
+                }
+            }
+            // dense reconstruction is lossless, zeros included
+            if m2.to_dense() != *x {
+                return Err("to_dense != original".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zero_weight_model_roundtrips_and_predicts_zero() {
+    let m = Model::from_dense(&[0.0; 7], Loss::Squared, 0.5, "all-zero");
+    assert_eq!(m.weights().len(), 0);
+    assert_eq!(m.nnz(), 0);
+    assert_eq!(m.d(), 7);
+    let m2 = Model::from_json(&m.to_json()).expect("roundtrip");
+    assert_eq!(m2, m);
+    assert_eq!(m2.d(), 7, "d survives with no stored weight");
+    // and it serves: every prediction is exactly 0.0
+    let req = PredictRequest::new(vec![(0, 3.5), (6, -1.0)]);
+    let a = shotgun::api::serve::batch_design(&[req], 7).unwrap();
+    assert_eq!(m2.predict(&a).unwrap(), vec![0.0]);
+}
+
+#[test]
+fn empty_feature_tail_preserves_dimension() {
+    // last nonzero far before d: idx/val never mention the tail, so a
+    // sloppy parser would shrink d and break dimension checks
+    let mut x = vec![0.0; 64];
+    x[2] = -1.25;
+    x[5] = 1e-200;
+    let m = Model::from_dense(&x, Loss::Logistic, 0.1, "tail");
+    let m2 = Model::from_json(&m.to_json()).expect("roundtrip");
+    assert_eq!(m2.d(), 64);
+    assert_eq!(m2.to_dense(), x);
+    // an index AT d is rejected (boundary of the tail)
+    let doc = m.to_json().replace("\"idx\":[2,5]", "\"idx\":[2,64]");
+    assert!(matches!(
+        Model::from_json(&doc),
+        Err(ShotgunError::ModelFormat { .. })
+    ));
+    // a FRACTIONAL index is rejected, not truncated onto feature 2
+    let doc = m.to_json().replace("\"idx\":[2,5]", "\"idx\":[2.5,5]");
+    assert!(matches!(
+        Model::from_json(&doc),
+        Err(ShotgunError::ModelFormat { .. })
+    ));
+    // and a fractional d is rejected, not truncated
+    let doc = m.to_json().replace("\"d\":64", "\"d\":64.7");
+    assert!(matches!(
+        Model::from_json(&doc),
+        Err(ShotgunError::ModelFormat { .. })
+    ));
+}
+
+#[test]
+fn subnormal_and_max_weights_survive_explicit_probes() {
+    // the proptest samples these; this pins the exact cases by name so
+    // a failure is immediately legible
+    for &v in &[
+        5e-324,
+        -5e-324,
+        f64::MIN_POSITIVE,
+        f64::MAX,
+        -f64::MAX,
+        1.0 + f64::EPSILON,
+    ] {
+        let m = Model::from_dense(&[v], Loss::Squared, 0.1, "probe");
+        let m2 = Model::from_json(&m.to_json())
+            .unwrap_or_else(|e| panic!("weight {v:e} failed to roundtrip: {e}"));
+        assert_eq!(
+            m2.weights()[0].1.to_bits(),
+            v.to_bits(),
+            "weight {v:e} changed bits"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// ShotgunError display / source coverage
+// ---------------------------------------------------------------------
+
+/// One of every variant, with recognizable payloads.
+fn all_variants() -> Vec<(ShotgunError, &'static str)> {
+    vec![
+        (ShotgunError::EmptyDesign { n: 0, d: 5 }, "empty design"),
+        (
+            ShotgunError::DimensionMismatch {
+                what: "targets",
+                expected: 10,
+                got: 7,
+            },
+            "targets",
+        ),
+        (
+            ShotgunError::NonFinite {
+                what: "warm start",
+                index: 3,
+                value: f64::NAN,
+            },
+            "warm start",
+        ),
+        (
+            ShotgunError::BadLabel {
+                index: 2,
+                value: 0.5,
+            },
+            "labels",
+        ),
+        (
+            ShotgunError::InvalidLambda {
+                lam: -1.0,
+                reason: "lambda must be finite and non-negative",
+            },
+            "lambda",
+        ),
+        (
+            ShotgunError::InvalidPath {
+                reason: "stages must be >= 1".into(),
+            },
+            "path",
+        ),
+        (
+            ShotgunError::UnknownSolver {
+                name: "shotgnu".into(),
+                known: vec!["shotgun"],
+            },
+            "shotgnu",
+        ),
+        (
+            ShotgunError::LossUnsupported {
+                solver: "l1-ls".into(),
+                loss: Loss::Logistic,
+            },
+            "logistic",
+        ),
+        (
+            ShotgunError::ProbaUnsupported {
+                loss: Loss::Squared,
+            },
+            "predict_proba",
+        ),
+        (
+            ShotgunError::BudgetExhausted {
+                iters: 42,
+                seconds: 1.5,
+                objective: 3.0,
+            },
+            "budget",
+        ),
+        (
+            ShotgunError::ModelFormat {
+                reason: "missing field \"d\"".into(),
+            },
+            "model",
+        ),
+        (
+            ShotgunError::Io {
+                path: "store_dir/m.store.json".into(),
+                reason: "write: permission denied".into(),
+            },
+            "i/o",
+        ),
+        (
+            ShotgunError::UnknownModel {
+                name: "ghost".into(),
+                known: vec!["default".into()],
+            },
+            "ghost",
+        ),
+        (
+            ShotgunError::BadRequest {
+                index: 9,
+                reason: "feature index 99 out of range".into(),
+            },
+            "request",
+        ),
+        (ShotgunError::QueueClosed, "queue"),
+        (
+            ShotgunError::JobPanicked {
+                reason: "index out of bounds".into(),
+            },
+            "panic",
+        ),
+    ]
+}
+
+#[test]
+fn every_error_variant_displays_its_payload() {
+    let variants = all_variants();
+    let mut rendered = Vec::new();
+    for (err, marker) in &variants {
+        let s = err.to_string();
+        assert!(!s.is_empty());
+        assert!(
+            s.to_lowercase().contains(marker),
+            "{err:?} display {s:?} does not mention {marker:?}"
+        );
+        rendered.push(s);
+    }
+    // each variant renders distinctly — no two collapse to one message
+    let mut unique = rendered.clone();
+    unique.sort();
+    unique.dedup();
+    assert_eq!(unique.len(), variants.len(), "duplicate display strings");
+}
+
+#[test]
+fn error_chains_compose_with_std_and_util_error() {
+    // ShotgunError is a leaf: no wrapped source, and the Display string
+    // carries everything a caller needs to log
+    for (err, _) in all_variants() {
+        let as_std: &dyn std::error::Error = &err;
+        assert!(as_std.source().is_none(), "{err:?} grew a source");
+        // boxed trait-object round trip (the common logging path)
+        let boxed: Box<dyn std::error::Error + Send + Sync> = Box::new(err.clone());
+        assert_eq!(boxed.to_string(), err.to_string());
+        // conversion into the crate's string-backed runtime error
+        // preserves the message
+        let util: shotgun::util::err::Error = err.clone().into();
+        assert_eq!(util.to_string(), err.to_string());
+    }
+}
+
+#[test]
+fn unknown_model_display_handles_empty_store() {
+    let e = ShotgunError::UnknownModel {
+        name: "m".into(),
+        known: vec![],
+    };
+    assert!(e.to_string().contains("store is empty"), "{e}");
+}

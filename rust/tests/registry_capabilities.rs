@@ -1,0 +1,158 @@
+//! The capability table can't drift from the solver implementations.
+//!
+//! PR 3's CLI and figure harnesses enumerate the registry's `fig3`/
+//! `fig4` sets instead of hand-rolled solver lists — which means a
+//! stale capability flag silently changes what the paper-comparison
+//! benches run. This test RUNS each listed set against the loss the set
+//! is defined over and asserts every member (a) declares support for
+//! that loss, (b) actually solves it (no `LossUnsupported`, real
+//! descent), so the table and the impls can't diverge.
+
+use shotgun::api::{IterUnit, ProblemRef, SolverParams, SolverRegistry};
+use shotgun::data::synth;
+use shotgun::objective::{LassoProblem, LogisticProblem, Loss};
+use shotgun::solvers::common::SolveOptions;
+
+fn opts_for(unit: IterUnit) -> SolveOptions {
+    let max_iters = match unit {
+        IterUnit::Update | IterUnit::Round => 60_000,
+        IterUnit::Sweep => 1_500,
+        IterUnit::Epoch => 60,
+    };
+    SolveOptions {
+        max_iters,
+        tol: 1e-7,
+        record_every: 1_024,
+        seed: 13,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fig3_set_solves_the_lasso_it_advertises() {
+    // Fig. 3 is the published-Lasso-comparator set: every member must
+    // declare the squared loss and descend on a real Lasso instance
+    let reg = SolverRegistry::global();
+    let ds = synth::sparse_imaging(40, 60, 0.15, 91);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.2);
+    let x0 = vec![0.0; 60];
+    let f0 = prob.objective(&x0);
+    let params = SolverParams {
+        p: 2,
+        ..Default::default()
+    };
+    let fig3: Vec<_> = reg.entries().iter().filter(|e| e.caps.fig3_lasso).collect();
+    assert!(!fig3.is_empty(), "fig3 set vanished from the registry");
+    for entry in fig3 {
+        assert!(
+            entry.caps.squared,
+            "{}: in the fig3 (Lasso) set but does not declare the squared loss",
+            entry.name
+        );
+        let res = entry
+            .create(&params)
+            .solve(ProblemRef::Lasso(&prob), &x0, &opts_for(entry.caps.iter_unit))
+            .unwrap_or_else(|e| {
+                panic!("{}: listed in fig3 but refused the Lasso: {e}", entry.name)
+            });
+        assert!(
+            res.objective < f0,
+            "{}: listed in fig3 but failed to descend (F = {} vs F(0) = {f0})",
+            entry.name,
+            res.objective
+        );
+    }
+}
+
+#[test]
+fn fig4_set_solves_the_logistic_it_advertises() {
+    let reg = SolverRegistry::global();
+    let ds = synth::rcv1_like(50, 40, 0.2, 92);
+    let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
+    let x0 = vec![0.0; 40];
+    let f0 = prob.objective(&x0);
+    let params = SolverParams {
+        p: 2,
+        eta: 0.1,
+        ..Default::default()
+    };
+    let fig4: Vec<_> = reg.entries().iter().filter(|e| e.caps.fig4_logreg).collect();
+    assert!(!fig4.is_empty(), "fig4 set vanished from the registry");
+    for entry in fig4 {
+        assert!(
+            entry.caps.logistic,
+            "{}: in the fig4 (logistic) set but does not declare the logistic loss",
+            entry.name
+        );
+        let res = entry
+            .create(&params)
+            .solve(
+                ProblemRef::Logistic(&prob),
+                &x0,
+                &opts_for(entry.caps.iter_unit),
+            )
+            .unwrap_or_else(|e| {
+                panic!("{}: listed in fig4 but refused the logistic loss: {e}", entry.name)
+            });
+        assert!(
+            res.objective < f0,
+            "{}: listed in fig4 but failed to descend (F = {} vs F(0) = {f0})",
+            entry.name,
+            res.objective
+        );
+    }
+}
+
+#[test]
+fn rate_swept_solvers_are_all_sgd_family_and_non_exact() {
+    // the sweep protocol only applies to constant-rate stochastic
+    // solvers; an exact CD solver wandering into the rate-swept set
+    // would get a meaningless eta sweep in the CLI
+    let reg = SolverRegistry::global();
+    for entry in reg.entries() {
+        if entry.caps.rate_swept {
+            assert!(
+                !entry.caps.exact_optimum,
+                "{}: rate-swept solvers are the SGD family (not exact optimizers)",
+                entry.name
+            );
+            assert_eq!(
+                entry.caps.iter_unit,
+                IterUnit::Epoch,
+                "{}: rate-swept solvers budget in epochs",
+                entry.name
+            );
+        }
+    }
+}
+
+#[test]
+fn capability_sets_only_contain_supported_losses() {
+    // cheap structural pass over EVERY entry (the solve-based checks
+    // above cover the two named sets): a set membership or loss flag
+    // combination that cannot work is caught here without a solve
+    let reg = SolverRegistry::global();
+    for entry in reg.entries() {
+        let caps = &entry.caps;
+        assert!(
+            caps.squared || caps.logistic,
+            "{}: registered solver supports no loss at all",
+            entry.name
+        );
+        if caps.fig3_lasso {
+            assert!(caps.squared, "{}: fig3 implies squared", entry.name);
+        }
+        if caps.fig4_logreg {
+            assert!(caps.logistic, "{}: fig4 implies logistic", entry.name);
+        }
+        if caps.pathwise_warmstart {
+            // strong-rule screening assumes an exact KKT optimum to
+            // re-check against
+            assert!(
+                caps.exact_optimum,
+                "{}: pathwise warm-start screening needs an exact optimizer",
+                entry.name
+            );
+        }
+    }
+}

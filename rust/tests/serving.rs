@@ -1,0 +1,367 @@
+//! Deterministic end-to-end harness for the serving subsystem
+//! (`api::serve`) — the three contracts the ISSUE names:
+//!
+//! 1. **Batch bit-identity**: coalesced `BatchPredictor` output is
+//!    bit-identical to one-at-a-time `Model::predict` /
+//!    `predict_proba`, for every batch composition.
+//! 2. **Worker-count independence**: a `FitQueue` job's result depends
+//!    only on its spec — 1 worker vs N workers produce bit-equal
+//!    weights on deterministic solvers.
+//! 3. **Hot-swap atomicity**: concurrent readers hammering a
+//!    `ModelStore` during publishes only ever see complete records —
+//!    version and weights always belong to the same publish.
+//!
+//! Everything is seeded (`testkit::requests`), so a failure replays
+//! exactly.
+
+use shotgun::api::serve::{
+    batch_design, BatchConfig, BatchPredictor, BatchServer, FitJob, FitQueue, JobState, ModelStore,
+};
+use shotgun::api::{Fit, Model};
+use shotgun::data::synth;
+use shotgun::objective::Loss;
+use shotgun::sparsela::Design;
+use shotgun::testkit::requests::{stream, StreamSpec};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn assert_bits_eq(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{tag}: bit mismatch at [{i}]: {x} vs {y}"
+        );
+    }
+}
+
+/// A real fitted model (not a synthetic weight vector) so the serving
+/// path is exercised against solver output.
+fn fitted_model(loss: Loss, seed: u64) -> Model {
+    let ds = match loss {
+        Loss::Squared => synth::sparse_imaging(60, 120, 0.1, seed),
+        Loss::Logistic => synth::rcv1_like(60, 120, 0.1, seed),
+    };
+    Fit::new(&ds.design, &ds.targets)
+        .loss(loss)
+        .lambda(0.05)
+        .solver(match loss {
+            Loss::Squared => "shooting",
+            Loss::Logistic => "shooting-cdn",
+        })
+        .options(|o| {
+            o.max_iters = 200_000;
+            o.tol = 1e-7;
+        })
+        .run()
+        .expect("small fit converges")
+        .model
+}
+
+// ---------------------------------------------------------------------
+// contract 1: batched prediction is bit-identical to sequential
+// ---------------------------------------------------------------------
+
+#[test]
+fn batched_prediction_is_bit_identical_to_sequential() {
+    for loss in [Loss::Squared, Loss::Logistic] {
+        let model = fitted_model(loss, 11);
+        let d = model.d();
+        let store = Arc::new(ModelStore::new());
+        store.publish("m", model.clone());
+
+        let spec = StreamSpec {
+            d,
+            count: 300,
+            max_nnz: 10,
+            proba_fraction: if loss == Loss::Logistic { 0.4 } else { 0.0 },
+        };
+        let requests = stream(&spec, 2027);
+
+        // sequential baseline: one-at-a-time Model::predict through the
+        // same canonical request embedding
+        let mut seq_pred = Vec::with_capacity(requests.len());
+        let mut seq_proba = Vec::with_capacity(requests.len());
+        for req in &requests {
+            let single: Design = batch_design(std::slice::from_ref(req), d).unwrap();
+            seq_pred.push(model.predict(&single).unwrap()[0]);
+            seq_proba.push(if req.proba {
+                Some(model.predict_proba(&single).unwrap()[0])
+            } else {
+                None
+            });
+        }
+
+        // batched, across very different batch compositions
+        for max_batch in [1usize, 7, 64, 300] {
+            let mut bp = BatchPredictor::new(
+                Arc::clone(&store),
+                "m",
+                BatchConfig {
+                    max_batch,
+                    ..Default::default()
+                },
+            );
+            let out = bp.run(&requests).expect("well-formed stream");
+            assert_eq!(out.len(), requests.len());
+            let got_pred: Vec<f64> = out.iter().map(|r| r.prediction).collect();
+            assert_bits_eq(
+                &got_pred,
+                &seq_pred,
+                &format!("{loss:?} predictions, max_batch={max_batch}"),
+            );
+            for (i, (resp, want)) in out.iter().zip(&seq_proba).enumerate() {
+                match (resp.proba, want) {
+                    (Some(got), Some(want)) => assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "proba mismatch at [{i}], max_batch={max_batch}"
+                    ),
+                    (None, None) => {}
+                    other => panic!("proba presence mismatch at [{i}]: {other:?}"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_server_matches_the_synchronous_front() {
+    // the threaded collector changes WHEN batches flush, never WHAT
+    // they contain — outputs must match the synchronous front exactly
+    let model = fitted_model(Loss::Squared, 12);
+    let d = model.d();
+    let store = Arc::new(ModelStore::new());
+    store.publish("m", model);
+    let requests = stream(&StreamSpec::new(d, 200), 5);
+
+    let mut sync_front = BatchPredictor::new(Arc::clone(&store), "m", BatchConfig::default());
+    let expect = sync_front.run(&requests).unwrap();
+
+    let server = BatchServer::spawn(
+        Arc::clone(&store),
+        "m",
+        BatchConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(300),
+        },
+    );
+    let tickets: Vec<_> = requests.iter().map(|r| server.submit(r.clone())).collect();
+    for (ticket, want) in tickets.into_iter().zip(&expect) {
+        let got = ticket.wait().expect("served");
+        assert_eq!(got.prediction.to_bits(), want.prediction.to_bits());
+        assert_eq!(got.score.to_bits(), want.score.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// contract 2: FitQueue results are independent of worker count
+// ---------------------------------------------------------------------
+
+fn queue_jobs(design: &Arc<Design>, targets: &Arc<Vec<f64>>) -> Vec<FitJob> {
+    // deterministic solvers only (the threaded engine is documented as
+    // non-deterministic in the registry capabilities)
+    let mut jobs = Vec::new();
+    for (solver, lam) in [
+        ("shooting", 0.3),
+        ("shooting", 0.15),
+        ("shotgun", 0.3),
+        ("shotgun-cdn", 0.2),
+        ("glmnet", 0.25),
+    ] {
+        jobs.push(
+            FitJob::new(
+                Arc::clone(design),
+                Arc::clone(targets),
+                Loss::Squared,
+                lam,
+            )
+            .solver_name(solver)
+            .options(|o| {
+                o.max_iters = 120_000;
+                o.tol = 1e-7;
+                o.seed = 33;
+            }),
+        );
+    }
+    jobs
+}
+
+#[test]
+fn fit_queue_results_are_independent_of_worker_count() {
+    let ds = synth::sparse_imaging(50, 90, 0.1, 21);
+    let design = Arc::new(ds.design);
+    let targets = Arc::new(ds.targets);
+
+    let solve_all = |workers: usize| -> Vec<Vec<f64>> {
+        let queue = FitQueue::new(workers, 16);
+        let ids: Vec<_> = queue_jobs(&design, &targets)
+            .into_iter()
+            .map(|j| queue.submit(j).expect("queue open"))
+            .collect();
+        // one design across all jobs -> exactly one shared cache entry
+        let results = ids
+            .into_iter()
+            .map(|id| match queue.wait(id).expect("known id") {
+                JobState::Done(report) => report.diagnostics.x.clone(),
+                other => panic!("job ended as {other:?}"),
+            })
+            .collect();
+        assert_eq!(queue.cache_hub().len(), 1);
+        results
+    };
+
+    let single = solve_all(1);
+    for workers in [2, 4] {
+        let multi = solve_all(workers);
+        for (i, (a, b)) in single.iter().zip(&multi).enumerate() {
+            assert_bits_eq(a, b, &format!("job {i}, {workers} workers vs 1"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// contract 3: hot-swap never serves a torn model
+// ---------------------------------------------------------------------
+
+#[test]
+fn hot_swap_never_serves_a_torn_model() {
+    // two distinguishable models: even versions carry weights_b, odd
+    // versions weights_a; a torn read would pair a version with the
+    // other publish's weights (or non-constant weights)
+    let d = 32;
+    let weights_a: Vec<f64> = (0..d).map(|j| 1.0 + j as f64).collect();
+    let weights_b: Vec<f64> = (0..d).map(|j| -(2.0 + j as f64)).collect();
+    let store = Arc::new(ModelStore::new());
+    store.publish("m", Model::from_dense(&weights_a, Loss::Squared, 0.1, "a"));
+
+    let probe = stream(&StreamSpec::new(d, 8), 99);
+    let record = store.get("m").unwrap();
+    let expect_a = shotgun::api::serve::predict_coalesced(&record, &probe).unwrap();
+    store.publish("m", Model::from_dense(&weights_b, Loss::Squared, 0.1, "b"));
+    let record = store.get("m").unwrap();
+    let expect_b = shotgun::api::serve::predict_coalesced(&record, &probe).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    const SWAPS: u64 = 400;
+
+    std::thread::scope(|scope| {
+        // writer: hot-swap a/b a few hundred times
+        {
+            let store = Arc::clone(&store);
+            let stop = Arc::clone(&stop);
+            let (wa, wb) = (weights_a.clone(), weights_b.clone());
+            scope.spawn(move || {
+                for k in 0..SWAPS {
+                    if k % 2 == 0 {
+                        store.publish("m", Model::from_dense(&wa, Loss::Squared, 0.1, "a"));
+                    } else {
+                        store.publish("m", Model::from_dense(&wb, Loss::Squared, 0.1, "b"));
+                    }
+                }
+                stop.store(true, Ordering::Release);
+            });
+        }
+        // readers: every observed record must be internally consistent
+        for _ in 0..3 {
+            let store = Arc::clone(&store);
+            let stop = Arc::clone(&stop);
+            let probe = probe.clone();
+            let expect_a = expect_a.clone();
+            let expect_b = expect_b.clone();
+            scope.spawn(move || {
+                let mut seen = 0u64;
+                while !stop.load(Ordering::Acquire) || seen == 0 {
+                    let rec = store.get("m").expect("name never disappears");
+                    // (version parity) <-> (solver tag) <-> (weights):
+                    // initial publish is v1 = "a", so odd versions are
+                    // always "a", even always "b"
+                    let expect_tag = if rec.version % 2 == 1 { "a" } else { "b" };
+                    assert_eq!(
+                        rec.model.solver, expect_tag,
+                        "torn record: version {} paired with solver {:?}",
+                        rec.version, rec.model.solver
+                    );
+                    let out =
+                        shotgun::api::serve::predict_coalesced(&rec, &probe).expect("probe");
+                    let want = if expect_tag == "a" { &expect_a } else { &expect_b };
+                    for (got, want) in out.iter().zip(want) {
+                        assert_eq!(
+                            got.score.to_bits(),
+                            want.score.to_bits(),
+                            "torn record: weights do not match version {}",
+                            rec.version
+                        );
+                    }
+                    seen += 1;
+                }
+                assert!(seen > 0);
+            });
+        }
+    });
+
+    // after the dust settles: 2 setup publishes + SWAPS from the writer
+    let final_rec = store.get("m").unwrap();
+    assert_eq!(final_rec.version, SWAPS + 2);
+}
+
+// ---------------------------------------------------------------------
+// composition: queue -> store -> batch, with a mid-stream hot swap
+// ---------------------------------------------------------------------
+
+#[test]
+fn queue_store_batch_compose_end_to_end() {
+    let ds = synth::sparse_imaging(50, 90, 0.1, 77);
+    let design = Arc::new(ds.design);
+    let targets = Arc::new(ds.targets);
+    let store = Arc::new(ModelStore::new());
+    let queue = FitQueue::with_store(2, 8, Arc::clone(&store));
+
+    // fit v1, serve, refit at a different lambda (hot-swap), serve again
+    let submit = |lam: f64| {
+        queue
+            .submit(
+                FitJob::new(
+                    Arc::clone(&design),
+                    Arc::clone(&targets),
+                    Loss::Squared,
+                    lam,
+                )
+                .solver_name("shooting")
+                .options(|o| {
+                    o.max_iters = 120_000;
+                    o.tol = 1e-7;
+                })
+                .publish_as("prod"),
+            )
+            .expect("queue open")
+    };
+    let id1 = submit(0.4);
+    assert!(matches!(
+        queue.wait(id1).expect("known"),
+        JobState::Done(_)
+    ));
+    let v1 = store.get("prod").unwrap();
+    assert_eq!(v1.version, 1);
+
+    let requests = stream(&StreamSpec::new(90, 64), 3);
+    let mut bp = BatchPredictor::new(Arc::clone(&store), "prod", BatchConfig::default());
+    let before = bp.run(&requests).unwrap();
+    assert!(before.iter().all(|r| r.model_version == 1));
+
+    let id2 = submit(0.1);
+    assert!(matches!(
+        queue.wait(id2).expect("known"),
+        JobState::Done(_)
+    ));
+    let after = bp.run(&requests).unwrap();
+    assert!(after.iter().all(|r| r.model_version == 2));
+    // the refit at a smaller lambda actually changed the served model
+    let changed = before
+        .iter()
+        .zip(&after)
+        .any(|(a, b)| a.score.to_bits() != b.score.to_bits());
+    assert!(changed, "hot-swap should change predictions");
+}

@@ -2,7 +2,9 @@
 # Run the hot-path microbenchmarks and refresh BENCH_hotpath.json (the
 # machine-readable perf trajectory tracked across PRs). Includes the
 # pathwise strong-rules on/off comparison (derived.path_strong_speedup
-# and derived.path_strong_objective_rel_gap).
+# and derived.path_strong_objective_rel_gap). Then replay the serving
+# benchmark (`repro serve`) and refresh BENCH_serving.json (throughput
+# + latency percentiles of the batching predictor).
 #
 # Usage: scripts/bench.sh [extra cargo bench args]
 set -euo pipefail
@@ -11,3 +13,13 @@ cargo bench --bench hotpath "$@"
 echo
 echo "--- BENCH_hotpath.json ---"
 cat BENCH_hotpath.json
+
+echo
+echo "== serving replay (BENCH_serving.json) =="
+cargo run --release --bin repro -- serve \
+  --data imaging:2048x4096:0.005 --lam 0.1 --solver shotgun \
+  --requests 20000 --max-batch 64 --max-wait-us 2000 --clients 8 \
+  --bench-out BENCH_serving.json
+echo
+echo "--- BENCH_serving.json ---"
+cat BENCH_serving.json

@@ -25,6 +25,12 @@ fi
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== serving subsystem: end-to-end harness + golden fixtures =="
+# also covered by `cargo test -q` above; run named so a serving
+# regression is visible as its own CI step
+cargo test -q --test serving --test golden_fixtures --test registry_capabilities \
+  --test model_edge_cases
+
 echo "== doctests: cargo test --doc =="
 cargo test --doc -q
 

@@ -1,0 +1,182 @@
+#!/usr/bin/env python3
+"""Generate the golden convergence fixtures under rust/tests/fixtures/.
+
+Each fixture is a small dense problem (column-normalized design,
+seeded) solved to near machine precision by an independent reference
+implementation of cyclic coordinate descent, written here in
+numpy — NOT by any solver in the Rust crate. The fixture records the
+data, lambda, the reference optimum x_star, and the optimal objective
+f_star; `rust/tests/golden_fixtures.rs` then asserts every registered
+exact-optimum solver reaches f_star within its documented tolerance.
+Because f_star comes from outside the crate, a silent convergence (or
+objective-convention) regression cannot re-bake itself into the
+fixtures.
+
+Objective conventions (must match rust/src/objective/):
+  squared:  F(x) = 0.5 * ||Ax - y||^2 + lam * ||x||_1
+  logistic: F(x) = sum_i log(1 + exp(-y_i * a_i.x)) + lam * ||x||_1
+
+Run from the repo root:  python3 scripts/make_fixtures.py
+"""
+
+import json
+import os
+
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures")
+
+
+def soft(z, t):
+    return np.sign(z) * max(abs(z) - t, 0.0)
+
+
+def solve_lasso_cd(A, y, lam, sweeps=400_000, tol=1e-15):
+    """Cyclic CD with exact per-coordinate minimization."""
+    n, d = A.shape
+    col_sq = (A * A).sum(axis=0)
+    x = np.zeros(d)
+    r = A @ x - y
+    for _ in range(sweeps):
+        max_dx = 0.0
+        for j in range(d):
+            if col_sq[j] == 0.0:
+                continue
+            g = A[:, j] @ r
+            z = x[j] - g / col_sq[j]
+            xj_new = soft(z, lam / col_sq[j])
+            dx = xj_new - x[j]
+            if dx != 0.0:
+                r += dx * A[:, j]
+                x[j] = xj_new
+            max_dx = max(max_dx, abs(dx))
+        if max_dx < tol:
+            break
+    return x
+
+
+def lasso_objective(A, y, lam, x):
+    r = A @ x - y
+    return 0.5 * float(r @ r) + lam * float(np.abs(x).sum())
+
+
+def solve_logistic_cd(A, y, lam, sweeps=400_000, tol=1e-14):
+    """Cyclic CD with the paper's beta = 1/4 Lipschitz step (monotone)."""
+    n, d = A.shape
+    col_sq = (A * A).sum(axis=0)
+    x = np.zeros(d)
+    z = A @ x  # margins a_i . x
+    for _ in range(sweeps):
+        max_dx = 0.0
+        for j in range(d):
+            if col_sq[j] == 0.0:
+                continue
+            m = y * z
+            sig = 1.0 / (1.0 + np.exp(m))  # sigma(-m), stable for m >= 0...
+            # ...use the numerically symmetric form for both signs:
+            sig = np.where(m >= 0, np.exp(-m) / (1.0 + np.exp(-m)), 1.0 / (1.0 + np.exp(m)))
+            g = -float((y * A[:, j] * sig).sum())
+            h = 0.25 * col_sq[j]
+            xj_new = soft(x[j] - g / h, lam / h)
+            dx = xj_new - x[j]
+            if dx != 0.0:
+                z += dx * A[:, j]
+                x[j] = xj_new
+            max_dx = max(max_dx, abs(dx))
+        if max_dx < tol:
+            break
+    return x
+
+
+def logistic_objective(A, y, lam, x):
+    m = y * (A @ x)
+    # log(1 + exp(-m)), stable
+    loss = np.logaddexp(0.0, -m).sum()
+    return float(loss) + lam * float(np.abs(x).sum())
+
+
+def normalized_design(rng, n, d):
+    A = rng.standard_normal((n, d))
+    A /= np.linalg.norm(A, axis=0)
+    return A
+
+
+def kkt_violation(A, y, lam, x, loss):
+    """Max KKT violation at x — the committed optimality proof for every
+    fixture (a CD bug in this script would otherwise bake a wrong f_star
+    into the Rust gate)."""
+    if loss == "squared":
+        g = A.T @ (A @ x - y)
+    else:
+        m = y * (A @ x)
+        sig = np.where(m >= 0, np.exp(-m) / (1.0 + np.exp(-m)), 1.0 / (1.0 + np.exp(m)))
+        g = -(A.T @ (y * sig))
+    viol = 0.0
+    for j in range(len(x)):
+        if abs(x[j]) > 1e-12:
+            viol = max(viol, abs(g[j] + lam * np.sign(x[j])))
+        else:
+            viol = max(viol, max(0.0, abs(g[j]) - lam))
+    return viol
+
+
+def fixture(name, loss, n, d, seed, lam_frac):
+    rng = np.random.default_rng(seed)
+    A = normalized_design(rng, n, d)
+    k = max(1, d // 4)
+    x_true = np.zeros(d)
+    support = rng.choice(d, size=k, replace=False)
+    x_true[support] = rng.standard_normal(k) * 2.0
+
+    if loss == "squared":
+        y = A @ x_true + 0.1 * rng.standard_normal(n)
+        lam = lam_frac * float(np.abs(A.T @ y).max())  # fraction of lambda_max
+        x_star = solve_lasso_cd(A, y, lam)
+        f_star = lasso_objective(A, y, lam, x_star)
+    else:
+        y = np.sign(A @ x_true + 0.2 * rng.standard_normal(n))
+        y[y == 0] = 1.0
+        # lambda_max for logistic: max |A^T grad| at x = 0 (grad_i = -y_i/2)
+        lam = lam_frac * float(np.abs(A.T @ (0.5 * y)).max())
+        x_star = solve_logistic_cd(A, y, lam)
+        f_star = logistic_objective(A, y, lam, x_star)
+
+    nnz = int((np.abs(x_star) > 1e-10).sum())
+    assert 0 < nnz < d, f"{name}: degenerate optimum (nnz = {nnz})"
+    viol = kkt_violation(A, y, lam, x_star, loss)
+    assert viol < 1e-12, f"{name}: x_star is not optimal (KKT violation {viol:.3e})"
+    doc = {
+        "format": "shotgun.fixture.v1",
+        "name": name,
+        "loss": loss,
+        "n": n,
+        "d": d,
+        "seed": seed,
+        # column-major to match DenseMatrix::from_col_major
+        "col_major": [float(v) for v in A.flatten(order="F")],
+        "targets": [float(v) for v in y],
+        "lam": lam,
+        "x_star": [float(v) for v in x_star],
+        "f_star": f_star,
+        "nnz_star": nnz,
+    }
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as fh:
+        json.dump(doc, fh, separators=(",", ":"))
+        fh.write("\n")
+    print(
+        f"{name}: n={n} d={d} lam={lam:.6g} f_star={f_star:.12g} "
+        f"nnz={nnz} kkt_violation={viol:.3e}"
+    )
+
+
+def main():
+    os.makedirs(OUT_DIR, exist_ok=True)
+    fixture("lasso_small", "squared", 12, 8, seed=1, lam_frac=0.2)
+    fixture("lasso_wide", "squared", 8, 16, seed=2, lam_frac=0.3)
+    fixture("logistic_small", "logistic", 16, 6, seed=3, lam_frac=0.2)
+    fixture("logistic_wide", "logistic", 10, 12, seed=4, lam_frac=0.3)
+
+
+if __name__ == "__main__":
+    main()
