@@ -28,62 +28,78 @@ fn main() {
         .parent()
         .expect("workspace root")
         .to_path_buf();
+    // SHOTGUN_BENCH_SMOKE=1 (scripts/bench.sh --smoke, the CI
+    // bench-smoke job): tiny problem sizes and second-scale budgets so
+    // the whole harness — including every derived.* field the gate
+    // checks — runs in seconds. Smoke numbers prove the plumbing, not
+    // the perf; the real trajectory comes from the full run.
+    let smoke = std::env::var("SHOTGUN_BENCH_SMOKE").ok().as_deref() == Some("1");
+    if smoke {
+        println!("(smoke mode: tiny sizes — CI plumbing check, not a perf measurement)");
+    }
+    let secs = |full: f64| if smoke { 0.05 } else { full };
     let mut results = Vec::new();
     let mut derived: Vec<(String, f64)> = Vec::new();
 
     // --- sparse column kernels (the per-update cost) ---
     {
-        let ds = synth::sparse_imaging(4096, 8192, 0.01, 1);
+        let (n, d) = if smoke { (512, 1024) } else { (4096, 8192) };
+        let ds = synth::sparse_imaging(n, d, 0.01, 1);
         let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
-        let r = prob.residual(&vec![0.0; 8192]);
+        let r = prob.residual(&vec![0.0; d]);
         let mut rng = Rng::new(2);
-        results.push(bench_for("col_dot sparse (n=4096, ~41 nnz)", 0.5, 64, || {
-            let j = rng.below(8192);
+        results.push(bench_for(&format!("col_dot sparse (n={n})"), secs(0.5), 64, || {
+            let j = rng.below(d);
             black_box(ds.design.col_dot(j, &r))
         }));
         let mut r2 = r.clone();
         let mut rng2 = Rng::new(3);
-        results.push(bench_for("col_axpy sparse", 0.5, 64, || {
-            let j = rng2.below(8192);
+        results.push(bench_for("col_axpy sparse", secs(0.5), 64, || {
+            let j = rng2.below(d);
             ds.design.col_axpy(j, 1e-9, &mut r2);
         }));
         // fused gather+scatter vs the two separate walks above
         let mut r3 = r.clone();
         let mut rng3 = Rng::new(4);
-        results.push(bench_for("col_dot_axpy fused (gather+scatter)", 0.5, 64, || {
-            let j = rng3.below(8192);
+        results.push(bench_for("col_dot_axpy fused (gather+scatter)", secs(0.5), 64, || {
+            let j = rng3.below(d);
             black_box(ds.design.col_dot_axpy(j, &mut r3, |g| 1e-12 * g))
         }));
     }
 
     // --- dense column kernels ---
     {
-        let ds = synth::singlepix_pm1(1024, 2048, 4);
+        let (n, d) = if smoke { (256, 512) } else { (1024, 2048) };
+        let ds = synth::singlepix_pm1(n, d, 4);
         let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
-        let r = prob.residual(&vec![0.0; 2048]);
+        let r = prob.residual(&vec![0.0; d]);
         let mut rng = Rng::new(5);
-        results.push(bench_for("col_dot dense (n=1024)", 0.5, 64, || {
-            let j = rng.below(2048);
+        results.push(bench_for(&format!("col_dot dense (n={n})"), secs(0.5), 64, || {
+            let j = rng.below(d);
             black_box(ds.design.col_dot(j, &r))
         }));
     }
 
     // --- one synchronous Shotgun round (P=8) ---
     {
-        let ds = synth::sparse_imaging(2048, 4096, 0.01, 6);
+        let (n, d) = if smoke { (256, 512) } else { (2048, 4096) };
+        let ds = synth::sparse_imaging(n, d, 0.01, 6);
         let prob = LassoProblem::new(&ds.design, &ds.targets, 0.05);
         let engine = ShotgunExact::new(ShotgunConfig {
             p: 8,
             ..Default::default()
         });
-        let mut x = vec![0.0; 4096];
+        let mut x = vec![0.0; d];
         let mut r = prob.residual(&x);
         let mut rng = Rng::new(7);
         let mut draws = Vec::new();
         let mut deltas = Vec::new();
-        results.push(bench_for("shotgun_round P=8 (sparse 2048x4096)", 1.0, 64, || {
-            engine.lasso_round(&prob, &mut x, &mut r, &mut rng, &mut draws, &mut deltas)
-        }));
+        results.push(bench_for(
+            &format!("shotgun_round P=8 (sparse {n}x{d})"),
+            secs(1.0),
+            64,
+            || engine.lasso_round(&prob, &mut x, &mut r, &mut rng, &mut draws, &mut deltas),
+        ));
     }
 
     // --- solve-to-tolerance: the scheduler's end-to-end payoff ---
@@ -93,12 +109,13 @@ fn main() {
     // in BENCH_hotpath.json (not asserted, so noisy machines don't turn
     // a perf wobble into a red bench run).
     {
-        let ds = synth::sparse_imaging(4096, 8192, 0.01, 1);
+        let (n, d) = if smoke { (512, 1024) } else { (4096, 8192) };
+        let ds = synth::sparse_imaging(n, d, 0.01, 1);
         let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
         let lam = 0.2 * prob0.lambda_max();
         let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
         let opts_on = SolveOptions {
-            max_iters: 4_000_000,
+            max_iters: if smoke { 400_000 } else { 4_000_000 },
             tol: 1e-6,
             record_every: u64::MAX,
             seed: 11,
@@ -113,7 +130,7 @@ fn main() {
                 p: 8,
                 ..Default::default()
             })
-            .solve_lasso(&prob, &vec![0.0; 8192], o)
+            .solve_lasso(&prob, &vec![0.0; d], o)
         };
         let f_on = solve(&opts_on);
         let f_off = solve(&opts_off);
@@ -123,12 +140,19 @@ fn main() {
             f_on.objective, f_on.updates, f_off.objective, f_off.updates, gap
         );
         assert!(gap < 1e-3, "shrinking changed the optimum (gap {gap:.3e})");
-        let on = bench("lasso solve-to-tol shrink=on  (sparse 4096x8192)", 1, 3, || {
-            black_box(solve(&opts_on).objective)
-        });
-        let off = bench("lasso solve-to-tol shrink=off (sparse 4096x8192)", 1, 3, || {
-            black_box(solve(&opts_off).objective)
-        });
+        let samples = if smoke { 2 } else { 3 };
+        let on = bench(
+            &format!("lasso solve-to-tol shrink=on  (sparse {n}x{d})"),
+            1,
+            samples,
+            || black_box(solve(&opts_on).objective),
+        );
+        let off = bench(
+            &format!("lasso solve-to-tol shrink=off (sparse {n}x{d})"),
+            1,
+            samples,
+            || black_box(solve(&opts_off).objective),
+        );
         let speedup = off.median_s / on.median_s.max(1e-12);
         println!("scheduler speedup (solve-to-tol): {speedup:.2}x (gate: >= 1.5x)");
         if speedup < 1.5 {
@@ -149,11 +173,12 @@ fn main() {
     // BENCH_hotpath.json as derived.path_strong_speedup.
     {
         use shotgun::solvers::path::{solve_path_lasso, PathConfig};
-        let ds = synth::sparse_imaging(2048, 4096, 0.01, 13);
+        let (n, d) = if smoke { (256, 512) } else { (2048, 4096) };
+        let ds = synth::sparse_imaging(n, d, 0.01, 13);
         let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
         let lam = 0.05 * prob0.lambda_max();
         let opts = SolveOptions {
-            max_iters: 4_000_000,
+            max_iters: if smoke { 400_000 } else { 4_000_000 },
             tol: 1e-6,
             record_every: u64::MAX,
             seed: 17,
@@ -180,12 +205,19 @@ fn main() {
             f_on.objective, f_on.updates, f_off.objective, f_off.updates, gap
         );
         assert!(gap < 1e-3, "strong rules changed the optimum (gap {gap:.3e})");
-        let on = bench("lasso pathwise strong-rules=on  (sparse 2048x4096)", 1, 3, || {
-            black_box(run(true).objective)
-        });
-        let off = bench("lasso pathwise strong-rules=off (sparse 2048x4096)", 1, 3, || {
-            black_box(run(false).objective)
-        });
+        let samples = if smoke { 2 } else { 3 };
+        let on = bench(
+            &format!("lasso pathwise strong-rules=on  (sparse {n}x{d})"),
+            1,
+            samples,
+            || black_box(run(true).objective),
+        );
+        let off = bench(
+            &format!("lasso pathwise strong-rules=off (sparse {n}x{d})"),
+            1,
+            samples,
+            || black_box(run(false).objective),
+        );
         let speedup = off.median_s / on.median_s.max(1e-12);
         println!("strong-rules speedup (pathwise solve): {speedup:.2}x");
         derived.push(("path_strong_speedup".into(), speedup));
@@ -198,7 +230,7 @@ fn main() {
     {
         let v = AtomicVec::from_slice(&vec![0.0; 4096]);
         let mut rng = Rng::new(8);
-        results.push(bench_for("atomic fetch_add x64", 0.5, 64, || {
+        results.push(bench_for("atomic fetch_add x64", secs(0.5), 64, || {
             for _ in 0..64 {
                 v.fetch_add(rng.below(4096), 1e-9);
             }
@@ -207,34 +239,47 @@ fn main() {
 
     // --- power iteration step ---
     {
-        let ds = synth::sparse_imaging(2048, 4096, 0.01, 9);
-        let mut v = vec![1.0 / (4096f64).sqrt(); 4096];
-        let mut av = vec![0.0; 2048];
-        let mut w = vec![0.0; 4096];
-        results.push(bench_for("power_iter step (sparse 2048x4096)", 0.5, 32, || {
-            ds.design.matvec(&v, &mut av);
-            ds.design.matvec_t(&av, &mut w);
-            let n = shotgun::sparsela::vecops::norm2(&w);
-            for (vi, wi) in v.iter_mut().zip(&w) {
-                *vi = wi / n.max(1e-30);
-            }
-        }));
+        let (n, d) = if smoke { (256, 512) } else { (2048, 4096) };
+        let ds = synth::sparse_imaging(n, d, 0.01, 9);
+        let mut v = vec![1.0 / (d as f64).sqrt(); d];
+        let mut av = vec![0.0; n];
+        let mut w = vec![0.0; d];
+        results.push(bench_for(
+            &format!("power_iter step (sparse {n}x{d})"),
+            secs(0.5),
+            32,
+            || {
+                ds.design.matvec(&v, &mut av);
+                ds.design.matvec_t(&av, &mut w);
+                let nrm = shotgun::sparsela::vecops::norm2(&w);
+                for (vi, wi) in v.iter_mut().zip(&w) {
+                    *vi = wi / nrm.max(1e-30);
+                }
+            },
+        ));
     }
 
     // --- CSC construction (counting-sort from_triplets) ---
     {
         use shotgun::sparsela::CscMatrix;
         let mut rng = Rng::new(10);
-        let (n, d) = (4096usize, 8192usize);
+        let (n, d, per_col) = if smoke {
+            (512usize, 1024usize, 10)
+        } else {
+            (4096usize, 8192usize, 40)
+        };
         let mut trip = Vec::new();
         for j in 0..d {
-            for _ in 0..40 {
+            for _ in 0..per_col {
                 trip.push((rng.below(n), j, rng.normal()));
             }
         }
-        results.push(bench_for("from_triplets (327k nnz)", 0.5, 4, || {
-            black_box(CscMatrix::from_triplets(n, d, &trip).nnz())
-        }));
+        results.push(bench_for(
+            &format!("from_triplets ({}k nnz)", d * per_col / 1000),
+            secs(0.5),
+            4,
+            || black_box(CscMatrix::from_triplets(n, d, &trip).nnz()),
+        ));
     }
 
     // --- XLA block-round dispatch (when artifacts are built) ---

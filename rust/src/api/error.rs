@@ -76,10 +76,7 @@ pub enum ShotgunError {
 }
 
 fn loss_name(loss: Loss) -> &'static str {
-    match loss {
-        Loss::Squared => "squared",
-        Loss::Logistic => "logistic",
-    }
+    loss.name()
 }
 
 impl fmt::Display for ShotgunError {

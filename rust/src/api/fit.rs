@@ -34,7 +34,9 @@ use super::error::ShotgunError;
 use super::model::Model;
 use super::registry::{ProblemRef, SolverParams, SolverRegistry};
 use crate::coordinator::PStar;
-use crate::objective::{LassoProblem, LogisticProblem, Loss, ProblemCache};
+use crate::objective::{
+    HuberProblem, LassoProblem, LogisticProblem, Loss, ProblemCache, SqHingeProblem,
+};
 use crate::solvers::common::{SolveOptions, SolveResult};
 use crate::solvers::path::{solve_path_cd, PathConfig};
 use crate::sparsela::Design;
@@ -302,7 +304,7 @@ impl<'a> Fit<'a> {
                     value: v,
                 });
             }
-            if self.loss == Loss::Logistic && v != 1.0 && v != -1.0 {
+            if self.loss.classifies() && v != 1.0 && v != -1.0 {
                 return Err(ShotgunError::BadLabel { index: i, value: v });
             }
         }
@@ -433,6 +435,17 @@ impl<'a> Fit<'a> {
             err: None,
         };
 
+        // one arm per (lambda-shape, loss): the fixed arms build the
+        // stage problem once; the path arms hand `solve_path_cd` a
+        // problem factory over the shared cache. Every loss routes
+        // through the SAME orchestrator — strong-rule screening uses the
+        // generic `CdObjective` gradient, so the beyond-paper losses get
+        // pathwise warm starts + screening for free (proven in
+        // `tests/beyond_losses.rs`).
+        let path_cfg = |spec: &PathSpec| PathConfig {
+            stages: spec.stages,
+            strong_rules: spec.strong_rules,
+        };
         let (result, lam) = match (&self.lambda, self.loss) {
             (Lambda::Fixed(lam), Loss::Squared) => {
                 let prob = LassoProblem::with_cache(a, y, *lam, &cache);
@@ -442,14 +455,18 @@ impl<'a> Fit<'a> {
                 let prob = LogisticProblem::with_cache(a, y, *lam, &cache);
                 (runner.run(ProblemRef::Logistic(&prob), &x0, &self.opts), *lam)
             }
+            (Lambda::Fixed(lam), Loss::SqHinge) => {
+                let prob = SqHingeProblem::with_cache(a, y, *lam, &cache);
+                (runner.run(ProblemRef::SqHinge(&prob), &x0, &self.opts), *lam)
+            }
+            (Lambda::Fixed(lam), Loss::Huber) => {
+                let prob = HuberProblem::with_cache(a, y, *lam, &cache);
+                (runner.run(ProblemRef::Huber(&prob), &x0, &self.opts), *lam)
+            }
             (Lambda::Path(spec), Loss::Squared) => {
-                let cfg = PathConfig {
-                    stages: spec.stages,
-                    strong_rules: spec.strong_rules,
-                };
                 let res = solve_path_cd(
                     spec.lam_target,
-                    &cfg,
+                    &path_cfg(spec),
                     &self.opts,
                     |l| LassoProblem::with_cache(a, y, l, &cache),
                     |obj, x0, o| runner.run(ProblemRef::Lasso(obj), x0, o),
@@ -457,16 +474,32 @@ impl<'a> Fit<'a> {
                 (res, spec.lam_target)
             }
             (Lambda::Path(spec), Loss::Logistic) => {
-                let cfg = PathConfig {
-                    stages: spec.stages,
-                    strong_rules: spec.strong_rules,
-                };
                 let res = solve_path_cd(
                     spec.lam_target,
-                    &cfg,
+                    &path_cfg(spec),
                     &self.opts,
                     |l| LogisticProblem::with_cache(a, y, l, &cache),
                     |obj, x0, o| runner.run(ProblemRef::Logistic(obj), x0, o),
+                );
+                (res, spec.lam_target)
+            }
+            (Lambda::Path(spec), Loss::SqHinge) => {
+                let res = solve_path_cd(
+                    spec.lam_target,
+                    &path_cfg(spec),
+                    &self.opts,
+                    |l| SqHingeProblem::with_cache(a, y, l, &cache),
+                    |obj, x0, o| runner.run(ProblemRef::SqHinge(obj), x0, o),
+                );
+                (res, spec.lam_target)
+            }
+            (Lambda::Path(spec), Loss::Huber) => {
+                let res = solve_path_cd(
+                    spec.lam_target,
+                    &path_cfg(spec),
+                    &self.opts,
+                    |l| HuberProblem::with_cache(a, y, l, &cache),
+                    |obj, x0, o| runner.run(ProblemRef::Huber(obj), x0, o),
                 );
                 (res, spec.lam_target)
             }
@@ -547,6 +580,40 @@ mod tests {
             .run()
             .unwrap_err();
         assert!(matches!(err, ShotgunError::InvalidPath { .. }));
+    }
+
+    #[test]
+    fn beyond_paper_losses_validate_and_solve() {
+        use crate::objective::{HuberProblem, SqHingeProblem};
+        // sqhinge is a classification loss: non-±1 targets are rejected
+        let ds = synth::sparco_like(20, 10, 0.4, 31);
+        let err = Fit::new(&ds.design, &ds.targets)
+            .loss(Loss::SqHinge)
+            .lambda(0.1)
+            .run()
+            .unwrap_err();
+        assert!(matches!(err, ShotgunError::BadLabel { .. }));
+        // and solves on ±1 labels
+        let dsc = synth::rcv1_like(40, 20, 0.3, 32);
+        let report = Fit::new(&dsc.design, &dsc.targets)
+            .loss(Loss::SqHinge)
+            .lambda(0.05)
+            .solver("shooting")
+            .run()
+            .unwrap();
+        let prob = SqHingeProblem::new(&dsc.design, &dsc.targets, 0.05);
+        assert!(report.objective() < prob.objective(&vec![0.0; 20]));
+        assert_eq!(report.model.loss, Loss::SqHinge);
+        // huber is a regression loss: real targets are fine
+        let report = Fit::new(&ds.design, &ds.targets)
+            .loss(Loss::Huber)
+            .lambda(0.05)
+            .solver("shooting")
+            .run()
+            .unwrap();
+        let prob = HuberProblem::new(&ds.design, &ds.targets, 0.05);
+        assert!(report.objective() < prob.objective(&vec![0.0; 10]));
+        assert_eq!(report.model.loss, Loss::Huber);
     }
 
     #[test]

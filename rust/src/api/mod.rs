@@ -64,6 +64,7 @@ pub use error::ShotgunError;
 pub use fit::{AutoChoice, Engine, Fit, FitReport, PathSpec};
 pub use model::Model;
 pub use registry::{
-    Capabilities, DynCdSolver, IterUnit, ProblemRef, RegistryEntry, SolverParams, SolverRegistry,
+    Capabilities, DynCdSolver, IterUnit, LossSet, ProblemRef, RegistryEntry, SolverParams,
+    SolverRegistry,
 };
 pub use serve::{BatchPredictor, BatchServer, FitJob, FitQueue, JobState, ModelStore};

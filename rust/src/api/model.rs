@@ -109,11 +109,12 @@ impl Model {
         Ok(z)
     }
 
-    /// Predictions for a batch: regression scores for the squared loss,
-    /// ±1 class labels for logistic.
+    /// Predictions for a batch: raw regression scores for the
+    /// squared/Huber losses, ±1 class labels for the classification
+    /// losses (logistic, squared hinge).
     pub fn predict(&self, a: &Design) -> Result<Vec<f64>, ShotgunError> {
         let mut z = self.decision_function(a)?;
-        if self.loss == Loss::Logistic {
+        if self.loss.classifies() {
             for zi in z.iter_mut() {
                 *zi = if *zi >= 0.0 { 1.0 } else { -1.0 };
             }
@@ -122,7 +123,8 @@ impl Model {
     }
 
     /// `P(y = +1 | a_i)` for a logistic model;
-    /// [`ShotgunError::ProbaUnsupported`] for the squared loss.
+    /// [`ShotgunError::ProbaUnsupported`] for every other loss (the
+    /// squared hinge classifies but has no probabilistic read-out).
     pub fn predict_proba(&self, a: &Design) -> Result<Vec<f64>, ShotgunError> {
         if self.loss != Loss::Logistic {
             return Err(ShotgunError::ProbaUnsupported { loss: self.loss });
@@ -152,10 +154,7 @@ impl Model {
         format!(
             "{{\"format\":\"shotgun.model.v1\",\"loss\":{},\"lam\":{},\"d\":{},\
              \"solver\":{},\"idx\":[{}],\"val\":[{}]}}",
-            escape(match self.loss {
-                Loss::Squared => "squared",
-                Loss::Logistic => "logistic",
-            }),
+            escape(self.loss.name()),
             num(self.lam),
             self.d,
             escape(&self.solver),
@@ -176,10 +175,14 @@ impl Model {
             Some("shotgun.model.v1") => {}
             other => return Err(bad(format!("unsupported format tag {other:?}"))),
         }
-        let loss = match field("loss")?.as_str() {
-            Some("squared") => Loss::Squared,
-            Some("logistic") => Loss::Logistic,
-            other => return Err(bad(format!("unknown loss {other:?}"))),
+        let loss = match field("loss")?.as_str().and_then(Loss::parse) {
+            Some(loss) => loss,
+            None => {
+                return Err(bad(format!(
+                    "unknown loss {:?}",
+                    field("loss")?.as_str()
+                )))
+            }
         };
         let lam = field("lam")?
             .as_f64()
@@ -304,6 +307,34 @@ mod tests {
         assert!(matches!(
             sq.predict_proba(&a),
             Err(ShotgunError::ProbaUnsupported { .. })
+        ));
+    }
+
+    #[test]
+    fn beyond_paper_losses_roundtrip_and_predict() {
+        let a = design(7, 10, 4);
+        let x = vec![1.0, -0.5, 0.0, 2.0];
+        // sqhinge classifies: ±1 labels, no proba
+        let m = Model::from_dense(&x, Loss::SqHinge, 0.1, "shooting-sqhinge");
+        let m2 = Model::from_json(&m.to_json()).expect("sqhinge roundtrip");
+        assert_eq!(m, m2);
+        let z = m.decision_function(&a).unwrap();
+        let labels = m.predict(&a).unwrap();
+        for i in 0..10 {
+            assert_eq!(labels[i], if z[i] >= 0.0 { 1.0 } else { -1.0 });
+        }
+        assert!(matches!(
+            m.predict_proba(&a),
+            Err(ShotgunError::ProbaUnsupported { loss: Loss::SqHinge })
+        ));
+        // huber regresses: raw scores
+        let m = Model::from_dense(&x, Loss::Huber, 0.1, "shooting-huber");
+        let m2 = Model::from_json(&m.to_json()).expect("huber roundtrip");
+        assert_eq!(m, m2);
+        assert_eq!(m.predict(&a).unwrap(), m.decision_function(&a).unwrap());
+        assert!(matches!(
+            m.predict_proba(&a),
+            Err(ShotgunError::ProbaUnsupported { loss: Loss::Huber })
         ));
     }
 

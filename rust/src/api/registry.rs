@@ -3,25 +3,29 @@
 //!
 //! [`DynCdSolver`] is the object-safe erasure of the per-solver
 //! `solve_cd<O: CdObjective>` generic: instead of a type parameter it
-//! takes a [`ProblemRef`] over the two concrete losses, so a
-//! `Box<dyn DynCdSolver>` can be picked at runtime by name. The generic,
-//! statically-dispatched solve bodies are untouched — an adapter only
-//! forwards, so results are bit-identical to the legacy trait calls
-//! (proven per solver in `tests/api_redesign.rs`).
+//! takes a [`ProblemRef`] over the concrete losses (squared, logistic,
+//! squared hinge, Huber), so a `Box<dyn DynCdSolver>` can be picked at
+//! runtime by name. The generic, statically-dispatched solve bodies are
+//! untouched — an adapter only forwards through the loss-agnostic
+//! [`CdSolve`] SPI, so results are bit-identical to the legacy trait
+//! calls (proven per solver in `tests/api_redesign.rs` and, for the
+//! beyond-paper losses, `tests/beyond_losses.rs`).
 //!
 //! Each [`RegistryEntry`] carries [`Capabilities`] — which losses it
-//! supports, whether it is parallel/deterministic, what one `max_iters`
-//! unit costs ([`IterUnit`]), and which figure-harness comparison sets
-//! it belongs to. The CLI (`main.rs`), the Fig. 3/4 harnesses, and the
-//! cross-validation tests all enumerate the registry instead of
-//! hand-rolling solver-name match arms, so registering a future solver
-//! here automatically covers it everywhere.
+//! supports ([`Capabilities::losses`], a [`LossSet`]), whether it is
+//! parallel/deterministic, what one `max_iters` unit costs
+//! ([`IterUnit`]), and which figure-harness comparison sets it belongs
+//! to. The CLI (`main.rs`), the Fig. 3/4 harnesses, the beyond-paper
+//! loss bench (`bench::beyond`), and the cross-validation tests all
+//! enumerate the registry instead of hand-rolling solver-name match
+//! arms, so registering a future solver here automatically covers it
+//! everywhere.
 
 use super::error::ShotgunError;
 use crate::coordinator::{Engine as ExecEngine, Shotgun, ShotgunCdn, ShotgunConfig};
-use crate::objective::{LassoProblem, LogisticProblem, Loss};
+use crate::objective::{HuberProblem, LassoProblem, LogisticProblem, Loss, SqHingeProblem};
 use crate::sparsela::Design;
-use crate::solvers::common::{LassoSolver, LogisticSolver, SolveOptions, SolveResult};
+use crate::solvers::common::{CdSolve, LassoSolver, SolveOptions, SolveResult};
 use crate::solvers::{
     cdn::ShootingCdn,
     fpc_as::FpcAs,
@@ -45,6 +49,8 @@ use std::sync::OnceLock;
 pub enum ProblemRef<'p, 'a> {
     Lasso(&'p LassoProblem<'a>),
     Logistic(&'p LogisticProblem<'a>),
+    SqHinge(&'p SqHingeProblem<'a>),
+    Huber(&'p HuberProblem<'a>),
 }
 
 impl ProblemRef<'_, '_> {
@@ -52,6 +58,8 @@ impl ProblemRef<'_, '_> {
         match self {
             ProblemRef::Lasso(_) => Loss::Squared,
             ProblemRef::Logistic(_) => Loss::Logistic,
+            ProblemRef::SqHinge(_) => Loss::SqHinge,
+            ProblemRef::Huber(_) => Loss::Huber,
         }
     }
 
@@ -59,6 +67,8 @@ impl ProblemRef<'_, '_> {
         match self {
             ProblemRef::Lasso(p) => p.a,
             ProblemRef::Logistic(p) => p.a,
+            ProblemRef::SqHinge(p) => p.a,
+            ProblemRef::Huber(p) => p.a,
         }
     }
 
@@ -70,6 +80,72 @@ impl ProblemRef<'_, '_> {
         match self {
             ProblemRef::Lasso(p) => p.lam,
             ProblemRef::Logistic(p) => p.lam,
+            ProblemRef::SqHinge(p) => p.lam,
+            ProblemRef::Huber(p) => p.lam,
+        }
+    }
+}
+
+/// A set of [`Loss`]es a solver supports — small, `Copy`, and usable in
+/// const registry tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LossSet(u8);
+
+const fn loss_bit(loss: Loss) -> u8 {
+    match loss {
+        Loss::Squared => 1 << 0,
+        Loss::Logistic => 1 << 1,
+        Loss::SqHinge => 1 << 2,
+        Loss::Huber => 1 << 3,
+    }
+}
+
+impl LossSet {
+    pub const EMPTY: LossSet = LossSet(0);
+
+    /// Only the given loss.
+    pub const fn just(loss: Loss) -> LossSet {
+        LossSet(loss_bit(loss))
+    }
+
+    /// This set plus one more loss.
+    pub const fn and(self, loss: Loss) -> LossSet {
+        LossSet(self.0 | loss_bit(loss))
+    }
+
+    /// Every loss the crate instantiates.
+    pub const fn all() -> LossSet {
+        LossSet::just(Loss::Squared)
+            .and(Loss::Logistic)
+            .and(Loss::SqHinge)
+            .and(Loss::Huber)
+    }
+
+    /// The squared loss alone (the published quadratic baselines).
+    pub const fn squared_only() -> LossSet {
+        LossSet::just(Loss::Squared)
+    }
+
+    pub fn contains(self, loss: Loss) -> bool {
+        self.0 & loss_bit(loss) != 0
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Member losses in [`Loss::ALL`] order.
+    pub fn iter(self) -> impl Iterator<Item = Loss> {
+        Loss::ALL.into_iter().filter(move |l| self.contains(*l))
+    }
+
+    /// Display form, e.g. `"squared+logistic+sqhinge+huber"`.
+    pub fn names(self) -> String {
+        let v: Vec<&str> = self.iter().map(|l| l.name()).collect();
+        if v.is_empty() {
+            "none".into()
+        } else {
+            v.join("+")
         }
     }
 }
@@ -82,7 +158,7 @@ pub trait DynCdSolver {
     /// Registry name of the underlying solver.
     fn name(&self) -> &'static str;
 
-    /// Solve either loss from `x0` under `opts`.
+    /// Solve any registered loss from `x0` under `opts`.
     fn solve(
         &mut self,
         prob: ProblemRef<'_, '_>,
@@ -109,10 +185,9 @@ pub enum IterUnit {
 /// Static per-solver metadata the harnesses key on.
 #[derive(Clone, Copy, Debug)]
 pub struct Capabilities {
-    /// Solves the squared loss (Eq. 2).
-    pub squared: bool,
-    /// Solves the logistic loss (Eq. 3).
-    pub logistic: bool,
+    /// Which losses this solver solves (squared Eq. 2, logistic Eq. 3,
+    /// plus the beyond-paper squared hinge and Huber).
+    pub losses: LossSet,
     /// Applies multiple updates concurrently (consumes `SolverParams::p`).
     pub parallel: bool,
     /// Same seed + inputs → bit-identical output (the threaded engine is
@@ -139,18 +214,14 @@ pub struct Capabilities {
 impl Capabilities {
     /// Does this solver handle the given loss?
     pub fn supports(&self, loss: Loss) -> bool {
-        match loss {
-            Loss::Squared => self.squared,
-            Loss::Logistic => self.logistic,
-        }
+        self.losses.contains(loss)
     }
 }
 
 impl Default for Capabilities {
     fn default() -> Self {
         Capabilities {
-            squared: true,
-            logistic: false,
+            losses: LossSet::squared_only(),
             parallel: false,
             deterministic: true,
             exact_optimum: true,
@@ -191,7 +262,11 @@ impl Default for SolverParams {
     }
 }
 
-type Factory = fn(&SolverParams) -> Box<dyn DynCdSolver>;
+/// Factory for a configured solver instance. The second argument is the
+/// entry's own `caps.losses`, injected by [`RegistryEntry::create`], so
+/// the `MultiLoss` adapter's defense-in-depth refusal can never drift
+/// from the capability table.
+type Factory = fn(&SolverParams, LossSet) -> Box<dyn DynCdSolver>;
 
 /// One registered solver: name, capabilities, and a factory.
 pub struct RegistryEntry {
@@ -203,7 +278,7 @@ pub struct RegistryEntry {
 impl RegistryEntry {
     /// Instantiate this solver with the given construction knobs.
     pub fn create(&self, params: &SolverParams) -> Box<dyn DynCdSolver> {
-        (self.factory)(params)
+        (self.factory)(params, self.caps.losses)
     }
 
     /// Display label for a configured instance (parallel solvers get a
@@ -294,13 +369,18 @@ impl SolverRegistry {
 // adapters: erase the concrete solver types behind DynCdSolver
 // ---------------------------------------------------------------------
 
-/// Adapter for solvers implementing both loss traits.
-struct BothLosses<S> {
+/// Adapter for solvers with a loss-agnostic [`CdSolve`] body: every
+/// [`ProblemRef`] variant re-enters the same statically-dispatched
+/// generic loop. The adapter still carries the entry's [`LossSet`] so
+/// the dyn handle itself refuses an unadvertised loss (defense in depth
+/// behind [`SolverRegistry::create_for`]'s pre-check).
+struct MultiLoss<S> {
     name: &'static str,
+    losses: LossSet,
     solver: S,
 }
 
-impl<S: LassoSolver + LogisticSolver> DynCdSolver for BothLosses<S> {
+impl<S: CdSolve> DynCdSolver for MultiLoss<S> {
     fn name(&self) -> &'static str {
         self.name
     }
@@ -311,14 +391,23 @@ impl<S: LassoSolver + LogisticSolver> DynCdSolver for BothLosses<S> {
         x0: &[f64],
         opts: &SolveOptions,
     ) -> Result<SolveResult, ShotgunError> {
-        match prob {
-            ProblemRef::Lasso(p) => Ok(self.solver.solve_lasso(p, x0, opts)),
-            ProblemRef::Logistic(p) => Ok(self.solver.solve_logistic(p, x0, opts)),
+        if !self.losses.contains(prob.loss()) {
+            return Err(ShotgunError::LossUnsupported {
+                solver: self.name.to_string(),
+                loss: prob.loss(),
+            });
         }
+        Ok(match prob {
+            ProblemRef::Lasso(p) => self.solver.solve_obj(p, x0, opts),
+            ProblemRef::Logistic(p) => self.solver.solve_obj(p, x0, opts),
+            ProblemRef::SqHinge(p) => self.solver.solve_obj(p, x0, opts),
+            ProblemRef::Huber(p) => self.solver.solve_obj(p, x0, opts),
+        })
     }
 }
 
-/// Adapter for squared-loss-only solvers.
+/// Adapter for squared-loss-only solvers (the published quadratic
+/// baselines, whose inner loops use residual-specific identities).
 struct LassoOnly<S> {
     name: &'static str,
     solver: S,
@@ -337,9 +426,9 @@ impl<S: LassoSolver> DynCdSolver for LassoOnly<S> {
     ) -> Result<SolveResult, ShotgunError> {
         match prob {
             ProblemRef::Lasso(p) => Ok(self.solver.solve_lasso(p, x0, opts)),
-            ProblemRef::Logistic(_) => Err(ShotgunError::LossUnsupported {
+            other => Err(ShotgunError::LossUnsupported {
                 solver: self.name.to_string(),
-                loss: Loss::Logistic,
+                loss: other.loss(),
             }),
         }
     }
@@ -366,9 +455,9 @@ impl DynCdSolver for HardL0Dyn {
                 let s = self.sparsity.unwrap_or((p.d() / 10).max(1));
                 Ok(HardL0::with_sparsity(s).solve_lasso(p, x0, opts))
             }
-            ProblemRef::Logistic(_) => Err(ShotgunError::LossUnsupported {
+            other => Err(ShotgunError::LossUnsupported {
                 solver: "hard-l0".to_string(),
-                loss: Loss::Logistic,
+                loss: other.loss(),
             }),
         }
     }
@@ -387,10 +476,23 @@ fn shotgun_config(p: usize, engine: ExecEngine) -> ShotgunConfig {
 }
 
 fn builtin_entries() -> Vec<RegistryEntry> {
+    // the generic-CD engines: ONE solve_cd body, so every registered
+    // loss (including the beyond-paper squared hinge + Huber) comes
+    // with the trait implementation
     let cd = Capabilities {
-        squared: true,
-        logistic: true,
+        losses: LossSet::all(),
         pathwise_warmstart: true,
+        ..Default::default()
+    };
+    // the SGD family steps through CdObjective::sample_grad_scale — the
+    // same loss-agnostic surface, so it advertises every loss too (at
+    // its usual limited precision: exact_optimum stays false)
+    let sgd_caps = Capabilities {
+        losses: LossSet::all(),
+        exact_optimum: false,
+        iter_unit: IterUnit::Epoch,
+        fig4_logreg: true,
+        rate_swept: true,
         ..Default::default()
     };
     vec![
@@ -401,9 +503,10 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 iter_unit: IterUnit::Round,
                 ..cd
             },
-            factory: |p| {
-                Box::new(BothLosses {
+            factory: |p, losses| {
+                Box::new(MultiLoss {
                     name: "shotgun",
+                    losses,
                     solver: Shotgun::new(shotgun_config(p.p, ExecEngine::Exact)),
                 })
             },
@@ -416,9 +519,10 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 iter_unit: IterUnit::Round,
                 ..cd
             },
-            factory: |p| {
-                Box::new(BothLosses {
+            factory: |p, losses| {
+                Box::new(MultiLoss {
                     name: "shotgun-threaded",
+                    losses,
                     solver: Shotgun::new(shotgun_config(p.p, ExecEngine::Threaded)),
                 })
             },
@@ -431,9 +535,10 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 fig4_logreg: true,
                 ..cd
             },
-            factory: |p| {
-                Box::new(BothLosses {
+            factory: |p, losses| {
+                Box::new(MultiLoss {
                     name: "shotgun-cdn",
+                    losses,
                     solver: ShotgunCdn::with_p(p.p.max(1)),
                 })
             },
@@ -445,9 +550,10 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 fig3_lasso: true,
                 ..cd
             },
-            factory: |_| {
-                Box::new(BothLosses {
+            factory: |_, losses| {
+                Box::new(MultiLoss {
                     name: "shooting",
+                    losses,
                     solver: Shooting,
                 })
             },
@@ -458,26 +564,21 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 fig4_logreg: true,
                 ..cd
             },
-            factory: |_| {
-                Box::new(BothLosses {
+            factory: |_, losses| {
+                Box::new(MultiLoss {
                     name: "shooting-cdn",
+                    losses,
                     solver: ShootingCdn::default(),
                 })
             },
         },
         RegistryEntry {
             name: "sgd",
-            caps: Capabilities {
-                logistic: true,
-                exact_optimum: false,
-                iter_unit: IterUnit::Epoch,
-                fig4_logreg: true,
-                rate_swept: true,
-                ..Default::default()
-            },
-            factory: |p| {
-                Box::new(BothLosses {
+            caps: sgd_caps,
+            factory: |p, losses| {
+                Box::new(MultiLoss {
                     name: "sgd",
+                    losses,
                     solver: Sgd::new(Rate::Constant(p.eta)),
                 })
             },
@@ -485,35 +586,25 @@ fn builtin_entries() -> Vec<RegistryEntry> {
         RegistryEntry {
             name: "parallel-sgd",
             caps: Capabilities {
-                logistic: true,
                 parallel: true,
-                exact_optimum: false,
-                iter_unit: IterUnit::Epoch,
-                fig4_logreg: true,
-                rate_swept: true,
-                ..Default::default()
+                ..sgd_caps
             },
-            factory: |p| {
-                Box::new(BothLosses {
+            factory: |p, losses| {
+                Box::new(MultiLoss {
                     name: "parallel-sgd",
+                    losses,
                     solver: ParallelSgd::new(p.p.max(1), Rate::Constant(p.eta)),
                 })
             },
         },
         RegistryEntry {
             name: "smidas",
-            caps: Capabilities {
-                logistic: true,
-                exact_optimum: false,
-                iter_unit: IterUnit::Epoch,
-                fig4_logreg: true,
-                rate_swept: true,
-                ..Default::default()
-            },
+            caps: sgd_caps,
             // the stability clamp documented on SolverParams::eta
-            factory: |p| {
-                Box::new(BothLosses {
+            factory: |p, losses| {
+                Box::new(MultiLoss {
                     name: "smidas",
+                    losses,
                     solver: Smidas::new(p.eta.min(0.1)),
                 })
             },
@@ -521,14 +612,15 @@ fn builtin_entries() -> Vec<RegistryEntry> {
         RegistryEntry {
             name: "hybrid",
             caps: Capabilities {
-                logistic: true,
+                losses: LossSet::all(),
                 parallel: true,
                 iter_unit: IterUnit::Round,
                 ..Default::default()
             },
-            factory: |p| {
-                Box::new(BothLosses {
+            factory: |p, losses| {
+                Box::new(MultiLoss {
                     name: "hybrid",
+                    losses,
                     solver: HybridSgdShotgun {
                         eta: p.eta,
                         p: p.p.max(1),
@@ -543,7 +635,7 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 fig3_lasso: true,
                 ..Default::default()
             },
-            factory: |_| {
+            factory: |_, _| {
                 Box::new(LassoOnly {
                     name: "l1-ls",
                     solver: L1Ls::default(),
@@ -556,7 +648,7 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 fig3_lasso: true,
                 ..Default::default()
             },
-            factory: |_| {
+            factory: |_, _| {
                 Box::new(LassoOnly {
                     name: "fpc-as",
                     solver: FpcAs::default(),
@@ -569,7 +661,7 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 fig3_lasso: true,
                 ..Default::default()
             },
-            factory: |_| {
+            factory: |_, _| {
                 Box::new(LassoOnly {
                     name: "gpsr-bb",
                     solver: GpsrBb::default(),
@@ -582,7 +674,7 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 fig3_lasso: true,
                 ..Default::default()
             },
-            factory: |_| {
+            factory: |_, _| {
                 Box::new(LassoOnly {
                     name: "sparsa",
                     solver: Sparsa::default(),
@@ -596,19 +688,20 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 fig3_lasso: true,
                 ..Default::default()
             },
-            factory: |p| Box::new(HardL0Dyn { sparsity: p.sparsity }),
+            factory: |p, _| Box::new(HardL0Dyn { sparsity: p.sparsity }),
         },
         RegistryEntry {
             name: "glmnet",
             caps: Capabilities {
-                logistic: true,
+                losses: LossSet::all(),
                 pathwise_warmstart: true,
                 fig3_lasso: true,
                 ..Default::default()
             },
-            factory: |p| {
-                Box::new(BothLosses {
+            factory: |p, losses| {
+                Box::new(MultiLoss {
                     name: "glmnet",
+                    losses,
                     solver: Glmnet {
                         covariance_max_d: p.covariance_max_d,
                     },
@@ -717,6 +810,56 @@ mod tests {
             .solve(ProblemRef::Logistic(&lp), &[0.0; 15], &opts)
             .unwrap();
         assert!(res.objective < lp.objective(&[0.0; 15]));
+    }
+
+    #[test]
+    fn loss_set_algebra() {
+        let all = LossSet::all();
+        for loss in Loss::ALL {
+            assert!(all.contains(loss), "{loss:?} missing from all()");
+        }
+        let sq = LossSet::squared_only();
+        assert!(sq.contains(Loss::Squared) && !sq.contains(Loss::Huber));
+        assert!(LossSet::EMPTY.is_empty() && !all.is_empty());
+        assert_eq!(all.names(), "squared+logistic+sqhinge+huber");
+        assert_eq!(LossSet::EMPTY.names(), "none");
+        assert_eq!(
+            LossSet::just(Loss::SqHinge).and(Loss::Huber).iter().count(),
+            2
+        );
+    }
+
+    #[test]
+    fn beyond_paper_losses_solve_through_the_registry() {
+        let reg = SolverRegistry::global();
+        let opts = SolveOptions {
+            max_iters: 60_000,
+            tol: 1e-7,
+            ..Default::default()
+        };
+        // squared hinge on ±1 labels
+        let ds = synth::rcv1_like(30, 15, 0.3, 21);
+        let prob = crate::objective::SqHingeProblem::new(&ds.design, &ds.targets, 0.05);
+        let mut s = reg.create("shooting", &SolverParams::default()).unwrap();
+        let res = s
+            .solve(ProblemRef::SqHinge(&prob), &[0.0; 15], &opts)
+            .unwrap();
+        assert!(res.objective < prob.objective(&[0.0; 15]));
+        assert_eq!(res.solver, "shooting-sqhinge");
+        // huber on real targets
+        let ds2 = synth::sparco_like(30, 15, 0.4, 22);
+        let prob2 = crate::objective::HuberProblem::new(&ds2.design, &ds2.targets, 0.05);
+        let res2 = s
+            .solve(ProblemRef::Huber(&prob2), &[0.0; 15], &opts)
+            .unwrap();
+        assert!(res2.objective < prob2.objective(&[0.0; 15]));
+        assert_eq!(res2.solver, "shooting-huber");
+        // squared-only baselines refuse with the right loss in the error
+        let mut quad = reg.create("gpsr-bb", &SolverParams::default()).unwrap();
+        match quad.solve(ProblemRef::Huber(&prob2), &[0.0; 15], &opts) {
+            Err(ShotgunError::LossUnsupported { loss, .. }) => assert_eq!(loss, Loss::Huber),
+            other => panic!("expected LossUnsupported, got {other:?}"),
+        }
     }
 
     #[test]

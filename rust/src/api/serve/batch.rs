@@ -186,7 +186,7 @@ pub fn predict_coalesced(
         if let Some(i) = requests.iter().position(|r| r.proba) {
             return Err(ShotgunError::BadRequest {
                 index: i,
-                reason: "proba requested from a squared-loss model".into(),
+                reason: format!("proba requested from a {}-loss model", model.loss.name()),
             });
         }
     }
@@ -196,7 +196,10 @@ pub fn predict_coalesced(
         .iter()
         .zip(scores)
         .map(|(req, z)| {
-            let prediction = if model.loss == Loss::Logistic {
+            // same semantics as Model::predict: classification losses
+            // (logistic, sqhinge) serve ±1 labels, regression losses
+            // the raw score
+            let prediction = if model.loss.classifies() {
                 if z >= 0.0 {
                     1.0
                 } else {

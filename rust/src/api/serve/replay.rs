@@ -172,15 +172,33 @@ impl ReplayStats {
     }
 
     /// The `BENCH_serving.json` document (machine-readable serving perf
-    /// trajectory, tracked across PRs).
-    pub fn to_bench_json(&self, dataset: &str, model_solver: &str) -> String {
+    /// trajectory, tracked across PRs). `unbatched` is the same stream
+    /// replayed at `max_batch = 1` (the `repro serve --compare-unbatched`
+    /// flag); when present, the `derived` section records the
+    /// batching-on/off speedup the CI bench-smoke gate checks for
+    /// NaN/missing values.
+    pub fn to_bench_json(
+        &self,
+        dataset: &str,
+        model_solver: &str,
+        unbatched: Option<&ReplayStats>,
+    ) -> String {
+        let derived = match unbatched {
+            Some(u) => format!(
+                "{{\n    \"batching_speedup_throughput\": {:.9e},\n    \
+                 \"batching_unbatched_rps\": {:.9e}\n  }}",
+                self.throughput_rps / u.throughput_rps.max(1e-12),
+                u.throughput_rps
+            ),
+            None => "{}".to_string(),
+        };
         format!(
             "{{\n  \"bench\": \"serving\",\n  \"dataset\": {},\n  \"model_solver\": {},\n  \
              \"config\": {{\"max_batch\": {}, \"max_wait_us\": {}, \"clients\": {}}},\n  \
              \"results\": {{\n    \"requests\": {},\n    \"seconds\": {:.6},\n    \
              \"throughput_rps\": {:.3},\n    \"latency_us\": {{\"p50\": {:.1}, \"p90\": {:.1}, \
              \"p99\": {:.1}, \"max\": {:.1}}},\n    \"batches\": {},\n    \
-             \"mean_batch\": {:.3}\n  }}\n}}\n",
+             \"mean_batch\": {:.3}\n  }},\n  \"derived\": {}\n}}\n",
             escape(dataset),
             escape(model_solver),
             self.max_batch,
@@ -194,7 +212,8 @@ impl ReplayStats {
             self.p99_us,
             self.max_us,
             self.batches,
-            self.mean_batch
+            self.mean_batch,
+            derived
         )
     }
 }
@@ -239,7 +258,7 @@ mod tests {
         assert!(stats.p50_us <= stats.p90_us && stats.p90_us <= stats.p99_us);
         assert!(stats.p99_us <= stats.max_us);
         assert!(stats.batches >= 1);
-        let json = stats.to_bench_json("unit-test", "none");
+        let json = stats.to_bench_json("unit-test", "none", None);
         let parsed = crate::util::json::Json::parse(&json).expect("valid JSON");
         assert_eq!(
             parsed.get("bench").and_then(|b| b.as_str().map(String::from)),
@@ -252,6 +271,16 @@ mod tests {
                 .and_then(|v| v.as_usize()),
             Some(97)
         );
+        // with an unbatched baseline the derived speedup must be a
+        // finite positive number (the CI bench-smoke gate's contract)
+        let with_base = stats.to_bench_json("unit-test", "none", Some(&stats));
+        let parsed = crate::util::json::Json::parse(&with_base).expect("valid JSON");
+        let speedup = parsed
+            .get("derived")
+            .and_then(|d| d.get("batching_speedup_throughput"))
+            .and_then(|v| v.as_f64())
+            .expect("derived speedup present");
+        assert!(speedup.is_finite() && speedup > 0.0);
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! **Beyond-paper loss comparisons** — the Fig. 3/4 methodology applied
+//! to the two losses the paper's framework covers but its experiments
+//! don't instantiate: squared hinge (the Fig. 4 classification shape, on
+//! rcv1-like and zeta-like data) and Huber (the Fig. 3 regression shape,
+//! on sparse-imaging data with injected outliers).
+//!
+//! The comparison sets are not hand-rolled: each instance runs every
+//! registry entry whose [`Capabilities::losses`] advertises the loss,
+//! timed to within `rel_tol` of a reference optimum computed by a long
+//! Shooting run (the same protocol as `lasso_f_star`). Shotgun P=8 is
+//! the reference axis, as in Fig. 3.
+
+use super::{BenchConfig, Report};
+use crate::api::{IterUnit, ProblemRef, SolverParams, SolverRegistry};
+use crate::data::{synth, Dataset};
+use crate::metrics::threshold;
+use crate::objective::{CdObjective, HuberProblem, Loss, SqHingeProblem};
+use crate::solvers::common::{CdSolve as _, SolveOptions};
+use crate::solvers::shooting::Shooting;
+
+pub struct BeyondPoint {
+    pub dataset: String,
+    pub loss: Loss,
+    pub solver: String,
+    /// Wall-clock seconds to reach within rel_tol of F* (None = failed).
+    pub seconds: Option<f64>,
+    pub shotgun_seconds: Option<f64>,
+}
+
+fn opts(cfg: &BenchConfig, d: usize) -> SolveOptions {
+    SolveOptions {
+        max_iters: 20_000_000 / (d as u64).max(1),
+        max_seconds: cfg.max_seconds,
+        tol: 1e-7,
+        record_every: (d as u64 / 4).max(1),
+        seed: cfg.seed,
+        ..Default::default()
+    }
+}
+
+/// Same budget shaping as Fig. 3: sweep/epoch-structured solvers get a
+/// sweep-denominated cap instead of an update-denominated one.
+fn budget_for(unit: IterUnit, base: &SolveOptions) -> SolveOptions {
+    match unit {
+        IterUnit::Sweep => SolveOptions {
+            max_iters: base.max_iters.min(2_000),
+            ..base.clone()
+        },
+        IterUnit::Epoch => SolveOptions {
+            max_iters: base.max_iters.min(300),
+            ..base.clone()
+        },
+        IterUnit::Update | IterUnit::Round => base.clone(),
+    }
+}
+
+/// Reference optimum: a long, tight Shooting run through the generic
+/// loop (the beyond-paper analog of `lasso_f_star`).
+fn f_star<O: CdObjective + Sync>(obj: &O, budget_iters: u64) -> f64 {
+    let opts = SolveOptions {
+        max_iters: budget_iters,
+        tol: 1e-10,
+        record_every: u64::MAX,
+        seed: 999,
+        ..Default::default()
+    };
+    Shooting
+        .solve_obj(obj, &vec![0.0; obj.d()], &opts)
+        .objective
+}
+
+/// Run every advertising registry entry on one problem; one scatter
+/// point per solver, Shotgun P=8 as the reference axis.
+fn run_problem(
+    ds_name: &str,
+    loss: Loss,
+    prob: ProblemRef<'_, '_>,
+    f_star: f64,
+    cfg: &BenchConfig,
+) -> Vec<BeyondPoint> {
+    let registry = SolverRegistry::global();
+    let d = prob.d();
+    let x0 = vec![0.0; d];
+    let thresh = threshold(f_star, cfg.rel_tol);
+    let o = opts(cfg, d);
+
+    let sg = registry
+        .create("shotgun", &SolverParams { p: 8, ..Default::default() })
+        .expect("shotgun is registered")
+        .solve(prob, &x0, &o)
+        .expect("shotgun advertises every loss");
+    let sg_time = sg
+        .trace
+        .points
+        .iter()
+        .find(|p| p.objective <= thresh)
+        .map(|p| p.seconds);
+
+    let mut points = Vec::new();
+    for entry in registry.entries().iter().filter(|e| e.caps.supports(loss)) {
+        let run_opts = budget_for(entry.caps.iter_unit, &o);
+        let res = entry
+            .create(&SolverParams::default())
+            .solve(prob, &x0, &run_opts)
+            .expect("capability-filtered set solves its loss");
+        let t = res
+            .trace
+            .points
+            .iter()
+            .find(|p| p.objective <= thresh)
+            .map(|p| p.seconds);
+        points.push(BeyondPoint {
+            dataset: ds_name.to_string(),
+            loss,
+            solver: entry.name.to_string(),
+            seconds: t,
+            shotgun_seconds: sg_time,
+        });
+    }
+    points
+}
+
+/// The squared-hinge instance set (Fig. 4's dataset shapes).
+pub fn run_sqhinge_instance(ds: &Dataset, lam: f64, cfg: &BenchConfig) -> Vec<BeyondPoint> {
+    let prob = SqHingeProblem::new(&ds.design, &ds.targets, lam);
+    let fs = f_star(&prob, 20_000_000 / (ds.d() as u64).max(1));
+    run_problem(&ds.name, Loss::SqHinge, ProblemRef::SqHinge(&prob), fs, cfg)
+}
+
+/// The Huber instance set (Fig. 3's regression shape, outliers injected
+/// so the robust loss actually differs from the Lasso).
+pub fn run_huber_instance(ds: &Dataset, lam: f64, cfg: &BenchConfig) -> Vec<BeyondPoint> {
+    let prob = HuberProblem::new(&ds.design, &ds.targets, lam);
+    let fs = f_star(&prob, 20_000_000 / (ds.d() as u64).max(1));
+    run_problem(&ds.name, Loss::Huber, ProblemRef::Huber(&prob), fs, cfg)
+}
+
+/// Inject gross outliers into a regression dataset's targets (seeded),
+/// so the Huber comparison exercises the linear branch. Indices are
+/// drawn WITHOUT replacement, so exactly `max(1, n*fraction)` distinct
+/// targets are corrupted (a repeated draw could otherwise cancel its
+/// own outlier).
+pub fn with_outliers(mut ds: Dataset, fraction: f64, magnitude: f64, seed: u64) -> Dataset {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let n = ds.targets.len();
+    let count = ((n as f64 * fraction) as usize).clamp(1, n);
+    let mut hit = vec![false; n];
+    let mut placed = 0;
+    while placed < count {
+        let i = rng.below(n);
+        if !hit[i] {
+            hit[i] = true;
+            ds.targets[i] += magnitude * rng.sign();
+            placed += 1;
+        }
+    }
+    ds.name = format!("{}+outliers", ds.name);
+    ds
+}
+
+fn report_points(report: &mut Report, points: &[BeyondPoint], lam: f64) {
+    for pt in points {
+        let ratio = match (pt.seconds, pt.shotgun_seconds) {
+            (Some(a), Some(b)) if b > 0.0 => format!("{:.2}x", a / b),
+            _ => "—".into(),
+        };
+        report.line(&format!(
+            "{:<34} {:<8} {:>6} {:<16} {:>12} {:>14} {:>8}",
+            pt.dataset,
+            pt.loss.name(),
+            lam,
+            pt.solver,
+            pt.seconds
+                .map(|t| format!("{t:.3}s"))
+                .unwrap_or_else(|| "—".into()),
+            pt.shotgun_seconds
+                .map(|t| format!("{t:.3}s"))
+                .unwrap_or_else(|| "—".into()),
+            ratio
+        ));
+        report.json(format!(
+            "{{\"exp\":\"beyond\",\"dataset\":\"{}\",\"loss\":\"{}\",\"lam\":{},\"solver\":\"{}\",\"seconds\":{},\"shotgun_seconds\":{}}}",
+            pt.dataset,
+            pt.loss.name(),
+            lam,
+            pt.solver,
+            pt.seconds.map(|t| t.to_string()).unwrap_or_else(|| "null".into()),
+            pt.shotgun_seconds.map(|t| t.to_string()).unwrap_or_else(|| "null".into()),
+        ));
+    }
+}
+
+pub fn run(cfg: &BenchConfig) {
+    let mut report = Report::new("beyond_losses");
+    report.line("=== Beyond-paper losses: squared hinge + Huber vs Shotgun P=8 ===");
+    report.line("(time to within 0.5% of F*; '—' = not reached within budget)");
+    report.line(&format!(
+        "{:<34} {:<8} {:>6} {:<16} {:>12} {:>14} {:>8}",
+        "dataset", "loss", "lam", "solver", "time", "shotgun-time", "ratio"
+    ));
+    let s = |v: usize| ((v as f64 * cfg.scale) as usize).max(16);
+
+    // squared hinge on the Fig. 4 dataset shapes
+    let zeta = synth::zeta_like(s(4096), s(256), cfg.seed);
+    let rcv1 = synth::rcv1_like(s(1024), s(2048), 0.05, cfg.seed + 1);
+    for ds in [&zeta, &rcv1] {
+        let prob0 = SqHingeProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam = 0.02 * prob0.lambda_max();
+        let pts = run_sqhinge_instance(ds, lam, cfg);
+        report_points(&mut report, &pts, lam);
+    }
+
+    // huber on the Fig. 3 regression shape, with injected outliers
+    let imaging = with_outliers(
+        synth::sparse_imaging(s(2048), s(4096), 0.01, cfg.seed + 2),
+        0.02,
+        25.0,
+        cfg.seed + 3,
+    );
+    let prob0 = HuberProblem::new(&imaging.design, &imaging.targets, 0.0);
+    let lam = 0.05 * prob0.lambda_max();
+    let pts = run_huber_instance(&imaging, lam, cfg);
+    report_points(&mut report, &pts, lam);
+
+    let _ = report.save(&cfg.out_dir);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instances_cover_every_advertising_entry() {
+        let cfg = BenchConfig {
+            max_seconds: 5.0,
+            ..Default::default()
+        };
+        let reg = SolverRegistry::global();
+
+        let dsc = synth::rcv1_like(40, 24, 0.3, 1);
+        let pts = run_sqhinge_instance(&dsc, 0.05, &cfg);
+        let expected = reg
+            .entries()
+            .iter()
+            .filter(|e| e.caps.supports(Loss::SqHinge))
+            .count();
+        assert_eq!(pts.len(), expected);
+        assert!(expected >= 9, "sqhinge comparison set shrank");
+
+        let dsr = with_outliers(synth::sparse_imaging(40, 60, 0.15, 2), 0.05, 20.0, 3);
+        assert!(dsr.name.ends_with("+outliers"));
+        let pts = run_huber_instance(&dsr, 0.1, &cfg);
+        let expected = reg
+            .entries()
+            .iter()
+            .filter(|e| e.caps.supports(Loss::Huber))
+            .count();
+        assert_eq!(pts.len(), expected);
+        assert!(expected >= 9, "huber comparison set shrank");
+        // shooting computes the reference, so it must reach tolerance
+        let shooting = pts.iter().find(|p| p.solver == "shooting").unwrap();
+        assert!(shooting.seconds.is_some());
+    }
+}

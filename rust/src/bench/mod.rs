@@ -5,6 +5,7 @@
 //! cargo benches are thin wrappers over these functions.
 
 pub mod ablations;
+pub mod beyond;
 pub mod bounds;
 pub mod fig2;
 pub mod fig3;
@@ -120,6 +121,7 @@ pub fn run_all(cfg: &BenchConfig) {
     bounds::run(cfg);
     headline::run(cfg);
     ablations::run(cfg);
+    beyond::run(cfg);
 }
 
 #[cfg(test)]

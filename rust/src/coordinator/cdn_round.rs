@@ -14,7 +14,7 @@ use super::ShotgunConfig;
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem};
 use crate::solvers::cdn::CdnConfig;
 use crate::solvers::common::{
-    LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult,
+    CdSolve, LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult,
 };
 use crate::util::rng::Rng;
 
@@ -138,6 +138,20 @@ impl ShotgunCdn {
         let mut res = rec.finish("shotgun-cdn", x, f, round, outcome_converged);
         res.solver = format!("shotgun-cdn-p{}", self.config.p);
         res
+    }
+}
+
+impl CdSolve for ShotgunCdn {
+    /// The loss-agnostic SPI — the CDN round uses each objective's
+    /// `newton_direction` + `line_search` (true second-order for
+    /// logistic/sqhinge/huber, exact closed-form for the squared loss).
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
     }
 }
 

@@ -16,7 +16,7 @@
 use super::schedule::ActiveSet;
 use super::ShotgunConfig;
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
-use crate::solvers::common::{Recorder, SolveOptions, SolveResult};
+use crate::solvers::common::{CdSolve, Recorder, SolveOptions, SolveResult};
 use crate::util::rng::Rng;
 
 /// What a round of parallel updates did (divergence detection feeds the
@@ -234,6 +234,8 @@ impl ShotgunExact {
         let base = match obj.loss() {
             Loss::Squared => "shotgun",
             Loss::Logistic => "shotgun-logistic",
+            Loss::SqHinge => "shotgun-sqhinge",
+            Loss::Huber => "shotgun-huber",
         };
         let mut res = rec.finish(base, x, f, round, outcome == RoundOutcome::Converged);
         res.solver = format!("{base}-p{}", self.config.p);
@@ -261,6 +263,18 @@ impl ShotgunExact {
         opts: &SolveOptions,
     ) -> SolveResult {
         self.solve_cd(prob, x0, opts)
+    }
+}
+
+impl CdSolve for ShotgunExact {
+    /// The loss-agnostic SPI — same body as the per-loss shims.
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
     }
 }
 

@@ -43,8 +43,8 @@ pub use pstar::PStar;
 pub use schedule::{ActiveSet, SharedActiveSet, ShrinkConfig};
 pub use threaded::ShotgunThreaded;
 
-use crate::objective::{LassoProblem, LogisticProblem};
-use crate::solvers::common::{LassoSolver, LogisticSolver, SolveOptions, SolveResult};
+use crate::objective::{CdObjective, LassoProblem, LogisticProblem};
+use crate::solvers::common::{CdSolve, LassoSolver, LogisticSolver, SolveOptions, SolveResult};
 
 /// Which engine executes the parallel rounds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -95,6 +95,22 @@ impl Shotgun {
             p,
             ..Default::default()
         })
+    }
+}
+
+impl CdSolve for Shotgun {
+    /// The loss-agnostic SPI: dispatch the configured engine's generic
+    /// solve loop (both engines run every registered loss).
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        match self.config.engine {
+            Engine::Exact => ShotgunExact::new(self.config.clone()).solve_cd(obj, x0, opts),
+            Engine::Threaded => ShotgunThreaded::new(self.config.clone()).solve_cd(obj, x0, opts),
+        }
     }
 }
 

@@ -32,7 +32,7 @@ use super::atomic::AtomicVec;
 use super::schedule::SharedActiveSet;
 use super::ShotgunConfig;
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
-use crate::solvers::common::{Recorder, SolveOptions, SolveResult};
+use crate::solvers::common::{CdSolve, Recorder, SolveOptions, SolveResult};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
@@ -332,6 +332,8 @@ impl ShotgunThreaded {
         let base = match obj.loss() {
             Loss::Squared => "shotgun-threaded",
             Loss::Logistic => "shotgun-threaded-logistic",
+            Loss::SqHinge => "shotgun-threaded-sqhinge",
+            Loss::Huber => "shotgun-threaded-huber",
         };
         let mut res = rec.finish(base, xs, f, iters, converged);
         res.solver = format!("{base}-p{}", self.config.p);
@@ -357,6 +359,19 @@ impl ShotgunThreaded {
         opts: &SolveOptions,
     ) -> SolveResult {
         self.solve_cd(prob, x0, opts)
+    }
+}
+
+impl CdSolve for ShotgunThreaded {
+    /// The loss-agnostic SPI — same body as the per-loss shims (the
+    /// `Sync` bound on the objective is exactly what the workers need).
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
     }
 }
 

@@ -17,13 +17,18 @@
 //! gradients, closed-form and Newton steps, per-sample gradients, KKT
 //! margins), implemented by [`objective::LassoProblem`] (squared loss,
 //! beta = 1) and [`objective::LogisticProblem`] (logistic, beta = 1/4)
-//! over a shared per-design [`objective::ProblemCache`]. Every engine
-//! and baseline — `ShotgunExact`, `ShotgunThreaded`, `ShotgunCdn`,
-//! `Shooting`, `Glmnet`, `ShootingCdn`, the SGD family — has exactly
-//! ONE `solve_cd<O: CdObjective>` body; the public `solve_lasso` /
+//! — the paper's two experiments — plus two beyond-paper
+//! instantiations, [`objective::SqHingeProblem`] (squared hinge /
+//! L2-SVM, beta = 1) and [`objective::HuberProblem`] (Huber robust
+//! regression, beta = 1), all over a shared per-design
+//! [`objective::ProblemCache`]. Every engine and baseline —
+//! `ShotgunExact`, `ShotgunThreaded`, `ShotgunCdn`, `Shooting`,
+//! `Glmnet`, `ShootingCdn`, the SGD family — has exactly ONE
+//! `solve_cd<O: CdObjective>` body (the loss-agnostic
+//! [`solvers::common::CdSolve`] SPI); the public `solve_lasso` /
 //! `solve_logistic` entry points are thin forwarding shims. Pathwise
 //! orchestration (lambda schedule, warm starts, sequential strong
-//! rules) lives once in [`solvers::path`], for all of them.
+//! rules) lives once in [`solvers::path`], for all four losses.
 //! * **Layer 2 (python/compile/model.py)** — the dense compute graph in
 //!   JAX, AOT-lowered once to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — the Pallas block-update
@@ -68,12 +73,28 @@
 //! // the model artifact survives a JSON round-trip bit-for-bit
 //! let restored = shotgun::api::Model::from_json(&clf.model.to_json())?;
 //! assert_eq!(restored, clf.model);
+//!
+//! // beyond the paper's experiments: squared hinge (L2-SVM) on the
+//! // same labels, and Huber robust regression on the same targets —
+//! // every engine runs them through the same generic CD loop
+//! let svm = Fit::new(&ds2.design, &ds2.targets)
+//!     .loss(Loss::SqHinge)
+//!     .lambda(0.05)
+//!     .run()?;
+//! assert_eq!(svm.model.predict(&ds2.design)?.len(), ds2.n());
+//! let robust = Fit::new(&ds.design, &ds.targets)
+//!     .loss(Loss::Huber)
+//!     .lambda(0.3)
+//!     .run()?;
+//! assert!(robust.converged());
 //! # Ok::<(), shotgun::api::ShotgunError>(())
 //! ```
 //!
-//! See [`api`] for the registry (pick any of the 15 solvers by name),
-//! pathwise fits with sequential strong rules, and the serving pattern
-//! (`ProblemCache` reuse across repeated fits on one design).
+//! See [`api`] for the registry (pick any of the 15 solvers by name,
+//! with [`api::Capabilities::losses`] saying which of the four losses
+//! each one solves), pathwise fits with sequential strong rules, and
+//! the serving pattern (`ProblemCache` reuse across repeated fits on
+//! one design).
 
 pub mod util;
 pub mod sparsela;
@@ -92,6 +113,16 @@ pub mod testkit;
 pub const BETA_SQUARED: f64 = 1.0;
 /// Assumption-2.1 constant for the logistic loss (paper Eq. 6).
 pub const BETA_LOGISTIC: f64 = 0.25;
+/// Assumption-2.1 constant for the squared hinge loss (beyond-paper):
+/// with the `1/2 max(0, 1 - m)^2` convention the second derivative is 1
+/// on the active set and 0 off it.
+pub const BETA_SQHINGE: f64 = 1.0;
+/// Assumption-2.1 constant for the Huber loss (beyond-paper): the
+/// second derivative is 1 inside the `|r| <= delta` band and 0 outside.
+pub const BETA_HUBER: f64 = 1.0;
+/// Default transition width for the Huber loss (`objective::HuberProblem`):
+/// quadratic inside `|r| <= delta`, linear outside.
+pub const HUBER_DELTA: f64 = 1.0;
 /// Magnitude below which a stored weight counts as zero for *reporting*
 /// (`SolveResult::nnz`, trace nnz columns, `api::Model::nnz`). Storage
 /// and arithmetic never truncate by it — it only keeps the various nnz

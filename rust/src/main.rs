@@ -22,7 +22,7 @@ use shotgun::api::{Engine, Fit, PathSpec, ShotgunError, SolverParams, SolverRegi
 use shotgun::bench::{self, BenchConfig};
 use shotgun::coordinator::PStar;
 use shotgun::data::{libsvm, synth, Dataset};
-use shotgun::objective::{LassoProblem, LogisticProblem, Loss};
+use shotgun::objective::{HuberProblem, LassoProblem, LogisticProblem, Loss, SqHingeProblem};
 use shotgun::runtime::XlaLassoEngine;
 use shotgun::solvers::common::SolveOptions;
 use shotgun::solvers::sgd::Sgd;
@@ -33,18 +33,20 @@ const HELP: &str = r#"repro — Shotgun (parallel coordinate descent for L1) rep
 
 USAGE:
   repro solve --data <spec> [--solver auto] [--p 8] [--lam 0.5]
-              [--loss squared|logistic] [--tol 1e-7] [--max-iters N]
-              [--budget secs] [--seed 42] [--eta R] [--sparsity K]
-              [--path-to LAM [--path-stages 6]] [--trace-out f.csv]
+              [--loss squared|logistic|sqhinge|huber] [--tol 1e-7]
+              [--max-iters N] [--budget secs] [--seed 42] [--eta R]
+              [--sparsity K] [--path-to LAM [--path-stages 6]]
+              [--trace-out f.csv]
   repro solvers
-  repro serve --data <spec> [--lam 0.1] [--loss squared|logistic]
+  repro serve --data <spec> [--lam 0.1] [--loss squared|logistic|sqhinge|huber]
               [--solver auto] [--requests 10000] [--max-nnz 8]
               [--proba-frac 0.0] [--file reqs.jsonl]
               [--gen-requests out.jsonl] [--max-batch 64]
               [--max-wait-us 2000] [--clients 4] [--fit-workers 2]
               [--bench-out BENCH_serving.json] [--store-out dir]
+              [--compare-unbatched]
   repro estimate-pstar --data <spec> [--seed 42]
-  repro bench <fig2|fig3|fig4|fig5|bounds|headline|ablations|all>
+  repro bench <fig2|fig3|fig4|fig5|bounds|headline|ablations|beyond|all>
               [--scale 0.25] [--out results] [--seed 42] [--budget 60]
   repro xla-demo [--artifacts artifacts] [--profile s] [--n 128] [--d 128]
   repro gen-data --data <spec> --out <file.svm>
@@ -81,6 +83,12 @@ fn parse_dims(s: &str) -> (usize, usize) {
     (n.parse().expect("bad n"), d.parse().expect("bad d"))
 }
 
+fn parse_loss(args: &Args) -> Loss {
+    let s = args.get_or("loss", "squared");
+    Loss::parse(&s)
+        .unwrap_or_else(|| panic!("unknown --loss {s:?} (squared|logistic|sqhinge|huber)"))
+}
+
 fn load_data(spec: &str, seed: u64) -> Dataset {
     if let Some(path) = spec.strip_prefix("file:") {
         return libsvm::load(Path::new(path), true).expect("load LIBSVM file");
@@ -112,10 +120,7 @@ fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
     let lam = args.f64_or("lam", 0.5);
     let p = args.usize_or("p", 8);
     let solver_name = args.get_or("solver", "auto");
-    let loss = match args.get_or("loss", "squared").as_str() {
-        "logistic" => Loss::Logistic,
-        _ => Loss::Squared,
-    };
+    let loss = parse_loss(args);
     let registry = SolverRegistry::global();
 
     // the paper's SGD protocol: sweep a constant rate when the chosen
@@ -138,6 +143,14 @@ fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
             }
             Loss::Squared => {
                 let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+                Sgd::sweep(&prob, &x0, &sweep_opts, 1e-4, 1.0, 7).0
+            }
+            Loss::SqHinge => {
+                let prob = SqHingeProblem::new(&ds.design, &ds.targets, lam);
+                Sgd::sweep(&prob, &x0, &sweep_opts, 1e-4, 1.0, 7).0
+            }
+            Loss::Huber => {
+                let prob = HuberProblem::new(&ds.design, &ds.targets, lam);
                 Sgd::sweep(&prob, &x0, &sweep_opts, 1e-4, 1.0, 7).0
             }
         };
@@ -235,10 +248,7 @@ fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
 
     let seed = args.usize_or("seed", 42) as u64;
     let ds = load_data(&args.get_or("data", "imaging:512x1024:0.02"), seed);
-    let loss = match args.get_or("loss", "squared").as_str() {
-        "logistic" => Loss::Logistic,
-        _ => Loss::Squared,
-    };
+    let loss = parse_loss(args);
     let lam = args.f64_or("lam", 0.1);
     let solver_name = args.get_or("solver", "auto");
     let dataset_tag = format!("{} (n={}, d={})", ds.name, ds.n(), ds.d());
@@ -328,10 +338,32 @@ fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
     let stats = replay(Arc::clone(&store), "default", &request_stream, &cfg)?;
     println!("{}", stats.report_line());
 
+    // --compare-unbatched: replay the same stream at max_batch = 1 so
+    // BENCH_serving.json carries the batching-on/off speedup as a
+    // derived field (the CI bench-smoke gate checks it is a number)
+    let unbatched = if args.bool("compare-unbatched") {
+        let cfg1 = shotgun::api::serve::ReplayConfig {
+            batch: shotgun::api::serve::BatchConfig {
+                max_batch: 1,
+                ..cfg.batch
+            },
+            clients: cfg.clients,
+        };
+        let base = replay(Arc::clone(&store), "default", &request_stream, &cfg1)?;
+        println!("unbatched {}", base.report_line());
+        println!(
+            "batching speedup: {:.2}x throughput",
+            stats.throughput_rps / base.throughput_rps.max(1e-12)
+        );
+        Some(base)
+    } else {
+        None
+    };
+
     let bench_out = args.get_or("bench-out", "BENCH_serving.json");
     std::fs::write(
         &bench_out,
-        stats.to_bench_json(&dataset_tag, &report.diagnostics.solver),
+        stats.to_bench_json(&dataset_tag, &report.diagnostics.solver, unbatched.as_ref()),
     )
     .map_err(|e| io_err(&bench_out, "write bench json", e))?;
     println!("serving benchmark written to {bench_out}");
@@ -346,16 +378,10 @@ fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
 fn cmd_solvers() {
     let registry = SolverRegistry::global();
     println!(
-        "{:<18} {:<18} {:>8} {:>13} {:>6} {:<8} {}",
+        "{:<18} {:<32} {:>8} {:>13} {:>6} {:<8} {}",
         "solver", "losses", "parallel", "deterministic", "exact", "unit", "sets"
     );
     for e in registry.entries() {
-        let losses = match (e.caps.squared, e.caps.logistic) {
-            (true, true) => "squared+logistic",
-            (true, false) => "squared",
-            (false, true) => "logistic",
-            (false, false) => "none",
-        };
         let mut sets = Vec::new();
         if e.caps.fig3_lasso {
             sets.push("fig3");
@@ -367,9 +393,9 @@ fn cmd_solvers() {
             sets.push("rate-swept");
         }
         println!(
-            "{:<18} {:<18} {:>8} {:>13} {:>6} {:<8} {}",
+            "{:<18} {:<32} {:>8} {:>13} {:>6} {:<8} {}",
             e.name,
-            losses,
+            e.caps.losses.names(),
             e.caps.parallel,
             e.caps.deterministic,
             e.caps.exact_optimum,
@@ -412,6 +438,7 @@ fn cmd_bench(args: &Args) {
         "bounds" => bench::bounds::run(&cfg),
         "headline" => bench::headline::run(&cfg),
         "ablations" => bench::ablations::run(&cfg),
+        "beyond" => bench::beyond::run(&cfg),
         "all" => bench::run_all(&cfg),
         other => panic!("unknown experiment {other:?}"),
     }
@@ -488,7 +515,7 @@ fn cmd_info() {
     } else {
         println!("artifacts: not built (run `make artifacts`)");
     }
-    #[cfg(feature = "xla")]
+    #[cfg(feature = "xla-pjrt")]
     match xla::PjRtClient::cpu() {
         Ok(c) => println!(
             "PJRT: platform {} with {} device(s)",
@@ -497,8 +524,8 @@ fn cmd_info() {
         ),
         Err(e) => println!("PJRT: unavailable ({e})"),
     }
-    #[cfg(not(feature = "xla"))]
-    println!("PJRT: not compiled in (build with --features xla)");
+    #[cfg(not(feature = "xla-pjrt"))]
+    println!("PJRT: not compiled in (build with --features xla-pjrt)");
 }
 
 fn main() {

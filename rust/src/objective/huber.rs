@@ -1,0 +1,496 @@
+//! Huber robust-regression objective — the second beyond-paper loss.
+//!
+//! `F(x) = sum_i H_delta(a_i^T x - y_i) + lam ||x||_1` with the Huber
+//! function `H_delta(r) = r^2/2` for `|r| <= delta` and
+//! `delta |r| - delta^2/2` beyond — quadratic near the data, linear on
+//! outliers, so a few corrupted targets cannot dominate the fit the way
+//! they do under the squared loss. `H'` is the clamp
+//! `clip(r, -delta, delta)`: C^1 with Lipschitz constant 1, so
+//! Assumption 2.1 holds with `beta_j = ||A_j||^2`
+//! ([`crate::BETA_HUBER`]) and the Theorem-3.2 `P*` bound is the same as
+//! the squared loss's.
+//!
+//! Cache: the residual `r = Ax - y` (same shape as the Lasso), refreshed
+//! by one sparse column axpy per update. The CDN machinery uses the
+//! in-band Hessian `h_jj = sum_{|r_i| <= delta} A_ij^2` (floored by a
+//! fraction of the Lipschitz bound — all-outlier columns have zero local
+//! curvature but a nonzero gradient) plus an Armijo backtracking line
+//! search on the column support.
+
+use super::{CdObjective, Loss, ProblemCache, MIN_BETA};
+use crate::sparsela::{vecops, Design};
+use std::sync::Arc;
+
+/// Fraction of the Lipschitz curvature `||A_j||^2` used to floor the
+/// in-band Hessian in the CDN direction (see the module docs).
+const HESS_FLOOR_FRAC: f64 = 1e-2;
+
+/// A Huber-regression instance:
+/// `min sum_i H_delta(a_i^T x - y_i) + lam ||x||_1`.
+pub struct HuberProblem<'a> {
+    pub a: &'a Design,
+    pub y: &'a [f64],
+    pub lam: f64,
+    /// Quadratic/linear transition width (default [`crate::HUBER_DELTA`]).
+    pub delta: f64,
+    /// `||A_j||^2` per column — with beta = 1 this IS the coordinate
+    /// curvature bound. Shared across pathwise stages via
+    /// [`ProblemCache`].
+    pub col_sq: Arc<Vec<f64>>,
+}
+
+/// `H_delta(r)`.
+#[inline]
+fn huber(r: f64, delta: f64) -> f64 {
+    let a = r.abs();
+    if a <= delta {
+        0.5 * r * r
+    } else {
+        delta * (a - 0.5 * delta)
+    }
+}
+
+/// `H'_delta(r) = clip(r, -delta, delta)`.
+#[inline]
+fn huber_grad(r: f64, delta: f64) -> f64 {
+    r.clamp(-delta, delta)
+}
+
+impl<'a> HuberProblem<'a> {
+    /// Standalone constructor at the crate-default transition width
+    /// [`crate::HUBER_DELTA`]; builds a fresh [`ProblemCache`].
+    pub fn new(a: &'a Design, y: &'a [f64], lam: f64) -> Self {
+        Self::with_cache(a, y, lam, &ProblemCache::new(a))
+    }
+
+    /// Constructor over a shared per-design cache (no O(nnz) pass), at
+    /// the default transition width.
+    pub fn with_cache(a: &'a Design, y: &'a [f64], lam: f64, cache: &ProblemCache) -> Self {
+        Self::with_delta(a, y, lam, crate::HUBER_DELTA, cache)
+    }
+
+    /// Full constructor: explicit transition width over a shared cache.
+    pub fn with_delta(
+        a: &'a Design,
+        y: &'a [f64],
+        lam: f64,
+        delta: f64,
+        cache: &ProblemCache,
+    ) -> Self {
+        assert_eq!(a.n(), y.len(), "targets length != n");
+        assert_eq!(a.d(), cache.d(), "cache built for a different design");
+        assert!(delta > 0.0, "huber delta must be positive");
+        HuberProblem {
+            a,
+            y,
+            lam,
+            delta,
+            col_sq: cache.col_sq(),
+        }
+    }
+
+    /// Per-coordinate curvature bound `beta_j = ||A_j||^2` (`H''` is at
+    /// most 1), floored by [`MIN_BETA`].
+    #[inline]
+    pub fn beta_j(&self, j: usize) -> f64 {
+        (crate::BETA_HUBER * self.col_sq[j]).max(MIN_BETA)
+    }
+
+    pub fn n(&self) -> usize {
+        self.a.n()
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.d()
+    }
+
+    /// Residual cache `r = Ax - y` (solvers carry and maintain this).
+    pub fn residual(&self, x: &[f64]) -> Vec<f64> {
+        let mut r = vec![0.0; self.n()];
+        self.a.matvec(x, &mut r);
+        for (ri, yi) in r.iter_mut().zip(self.y) {
+            *ri -= yi;
+        }
+        r
+    }
+
+    /// Objective from a maintained residual cache.
+    pub fn objective_from_residual(&self, r: &[f64], x: &[f64]) -> f64 {
+        let mut loss = 0.0;
+        for ri in r {
+            loss += huber(*ri, self.delta);
+        }
+        loss + self.lam * vecops::norm1(x)
+    }
+
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        let r = self.residual(x);
+        self.objective_from_residual(&r, x)
+    }
+
+    /// Smooth coordinate gradient `g_j = A_j^T clip(r, ±delta)` (one
+    /// column walk over the residual cache).
+    pub fn grad_j(&self, j: usize, r: &[f64]) -> f64 {
+        match self.a {
+            Design::Sparse(m) => {
+                let (idx, val) = m.col(j);
+                let mut acc = 0.0;
+                for (&i, &v) in idx.iter().zip(val) {
+                    acc += v * huber_grad(r[i as usize], self.delta);
+                }
+                acc
+            }
+            Design::Dense(m) => {
+                let col = m.col(j);
+                let mut acc = 0.0;
+                for i in 0..self.n() {
+                    acc += col[i] * huber_grad(r[i], self.delta);
+                }
+                acc
+            }
+        }
+    }
+
+    /// In-band coordinate curvature `h_jj = sum_{|r_i| <= delta} A_ij^2`,
+    /// floored by a fraction of the Lipschitz bound (see module docs).
+    pub fn hess_jj(&self, j: usize, r: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        match self.a {
+            Design::Sparse(m) => {
+                let (idx, val) = m.col(j);
+                for (&i, &v) in idx.iter().zip(val) {
+                    if r[i as usize].abs() <= self.delta {
+                        acc += v * v;
+                    }
+                }
+            }
+            Design::Dense(m) => {
+                let col = m.col(j);
+                for i in 0..self.n() {
+                    if r[i].abs() <= self.delta {
+                        acc += col[i] * col[i];
+                    }
+                }
+            }
+        }
+        acc.max(HESS_FLOOR_FRAC * self.col_sq[j]).max(MIN_BETA)
+    }
+
+    /// Fixed-step update (Eq. 5 with `beta_j = ||A_j||^2`).
+    #[inline]
+    pub fn cd_step(&self, j: usize, x_j: f64, r: &[f64]) -> f64 {
+        self.cd_step_from_g(j, x_j, self.grad_j(j, r))
+    }
+
+    #[inline]
+    pub fn cd_step_from_g(&self, j: usize, x_j: f64, g: f64) -> f64 {
+        vecops::cd_step(x_j, g, self.lam, self.beta_j(j))
+    }
+
+    /// Apply `x_j += dx` maintaining the residual cache `r += dx A_j`.
+    #[inline]
+    pub fn apply_step(&self, j: usize, dx: f64, x: &mut [f64], r: &mut [f64]) {
+        if dx != 0.0 {
+            x[j] += dx;
+            self.a.col_axpy(j, dx, r);
+        }
+    }
+
+    /// CDN coordinate direction: Newton step with the in-band `h_jj`,
+    /// L1-folded in closed form.
+    pub fn cdn_direction(&self, j: usize, x_j: f64, r: &[f64]) -> f64 {
+        let g = self.grad_j(j, r);
+        let h = self.hess_jj(j, r);
+        vecops::soft_threshold(x_j - g / h, self.lam / h) - x_j
+    }
+
+    /// Armijo backtracking along coordinate `j` (CDN-style), evaluated on
+    /// the column support only — O(nnz_j) per trial step.
+    pub fn cdn_line_search(&self, j: usize, x_j: f64, dx: f64, r: &[f64]) -> f64 {
+        if dx == 0.0 {
+            return 0.0;
+        }
+        let g = self.grad_j(j, r);
+        let sigma = 0.01;
+        let beta_back = 0.5;
+        let delta = self.delta;
+        let smooth_delta = |step: f64| -> f64 {
+            let mut acc = 0.0;
+            match self.a {
+                Design::Sparse(m) => {
+                    let (idx, val) = m.col(j);
+                    for (&i, &v) in idx.iter().zip(val) {
+                        let i = i as usize;
+                        acc += huber(r[i] + step * v, delta) - huber(r[i], delta);
+                    }
+                }
+                Design::Dense(m) => {
+                    let col = m.col(j);
+                    for i in 0..self.n() {
+                        acc += huber(r[i] + step * col[i], delta) - huber(r[i], delta);
+                    }
+                }
+            }
+            acc
+        };
+        let d_l1 = |step: f64| self.lam * ((x_j + step).abs() - x_j.abs());
+        let decrease_model = g * dx + self.lam * ((x_j + dx).abs() - x_j.abs());
+        let mut t = 1.0;
+        for _ in 0..30 {
+            let step = t * dx;
+            let actual = smooth_delta(step) + d_l1(step);
+            if actual <= sigma * t * decrease_model || actual <= -1e-15 {
+                return step;
+            }
+            t *= beta_back;
+        }
+        0.0
+    }
+
+    /// `lam_max`: smallest lam with `x = 0` optimal. At `x = 0` the
+    /// residual is `-y`, so `lam_max = ||A^T clip(-y, ±delta)||_inf`.
+    pub fn lambda_max(&self) -> f64 {
+        let w: Vec<f64> = self.y.iter().map(|yi| huber_grad(-yi, self.delta)).collect();
+        let mut g = vec![0.0; self.d()];
+        self.a.matvec_t(&w, &mut g);
+        vecops::norm_inf(&g)
+    }
+}
+
+impl CdObjective for HuberProblem<'_> {
+    fn loss(&self) -> Loss {
+        Loss::Huber
+    }
+
+    fn design(&self) -> &Design {
+        self.a
+    }
+
+    fn targets(&self) -> &[f64] {
+        self.y
+    }
+
+    fn lam(&self) -> f64 {
+        self.lam
+    }
+
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        self.col_sq[j]
+    }
+
+    fn beta_j(&self, j: usize) -> f64 {
+        HuberProblem::beta_j(self, j)
+    }
+
+    fn init_cache(&self, x: &[f64]) -> Vec<f64> {
+        self.residual(x)
+    }
+
+    fn value(&self, cache: &[f64], x: &[f64]) -> f64 {
+        self.objective_from_residual(cache, x)
+    }
+
+    /// `w_i = clip(r_i, ±delta)` so that `g_j = A_j^T w`.
+    #[inline]
+    fn grad_weight(&self, i: usize, cache_i: f64) -> f64 {
+        let _ = i;
+        huber_grad(cache_i, self.delta)
+    }
+
+    #[inline]
+    fn grad_j(&self, j: usize, cache: &[f64]) -> f64 {
+        HuberProblem::grad_j(self, j, cache)
+    }
+
+    #[inline]
+    fn cd_step_from_g(&self, j: usize, x_j: f64, g: f64) -> f64 {
+        HuberProblem::cd_step_from_g(self, j, x_j, g)
+    }
+
+    #[inline]
+    fn apply_update(&self, j: usize, dx: f64, x: &mut [f64], cache: &mut [f64]) {
+        self.apply_step(j, dx, x, cache)
+    }
+
+    /// Second-order CDN direction with the in-band Hessian.
+    fn newton_direction(&self, j: usize, x_j: f64, cache: &[f64]) -> f64 {
+        self.cdn_direction(j, x_j, cache)
+    }
+
+    /// Armijo backtracking on the column support.
+    fn line_search(&self, j: usize, x_j: f64, dx: f64, cache: &[f64]) -> f64 {
+        self.cdn_line_search(j, x_j, dx, cache)
+    }
+
+    /// The sample residual is `ax_i - y_i`; its Huber gradient scales the
+    /// row.
+    #[inline]
+    fn sample_grad_scale(&self, i: usize, ax_i: f64) -> f64 {
+        huber_grad(ax_i - self.y[i], self.delta)
+    }
+
+    fn lambda_max(&self) -> f64 {
+        HuberProblem::lambda_max(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsela::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64, n: usize, d: usize) -> (Design, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut m = DenseMatrix::from_fn(n, d, |_, _| rng.normal());
+        m.normalize_columns();
+        let a = Design::Dense(m);
+        // targets with a couple of gross outliers so the linear branch
+        // is actually exercised
+        let mut y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        y[0] += 25.0;
+        if n > 1 {
+            y[1] -= 25.0;
+        }
+        (a, y)
+    }
+
+    #[test]
+    fn huber_function_branches() {
+        assert_eq!(huber(0.5, 1.0), 0.125);
+        assert!((huber(3.0, 1.0) - 2.5).abs() < 1e-15);
+        assert!((huber(-3.0, 1.0) - 2.5).abs() < 1e-15);
+        assert_eq!(huber_grad(0.5, 1.0), 0.5);
+        assert_eq!(huber_grad(3.0, 1.0), 1.0);
+        assert_eq!(huber_grad(-3.0, 1.0), -1.0);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let (a, y) = problem(1, 24, 6);
+        let p = HuberProblem::new(&a, &y, 0.0);
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..6).map(|_| 0.5 * rng.normal()).collect();
+        let r = p.residual(&x);
+        let eps = 1e-6;
+        for j in 0..6 {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let mut xm = x.clone();
+            xm[j] -= eps;
+            let fd = (p.objective(&xp) - p.objective(&xm)) / (2.0 * eps);
+            assert!(
+                (p.grad_j(j, &r) - fd).abs() < 1e-5,
+                "grad_j {} vs fd {}",
+                p.grad_j(j, &r),
+                fd
+            );
+        }
+    }
+
+    #[test]
+    fn residual_cache_maintained() {
+        let (a, y) = problem(3, 15, 6);
+        let p = HuberProblem::new(&a, &y, 0.1);
+        let mut x = vec![0.0; 6];
+        let mut r = p.residual(&x);
+        for j in [2usize, 0, 5, 2] {
+            let dx = p.cd_step(j, x[j], &r);
+            p.apply_step(j, dx, &mut x, &mut r);
+        }
+        let fresh = p.residual(&x);
+        for (c, e) in r.iter().zip(&fresh) {
+            assert!((c - e).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cd_and_cdn_steps_descend() {
+        let (a, y) = problem(5, 40, 10);
+        let p = HuberProblem::new(&a, &y, 0.05);
+        let mut x = vec![0.0; 10];
+        let mut r = p.residual(&x);
+        let mut f = p.objective_from_residual(&r, &x);
+        let mut rng = Rng::new(6);
+        for t in 0..200 {
+            let j = rng.below(10);
+            let dx = if t % 2 == 0 {
+                p.cd_step(j, x[j], &r)
+            } else {
+                let dir = p.cdn_direction(j, x[j], &r);
+                p.cdn_line_search(j, x[j], dir, &r)
+            };
+            p.apply_step(j, dx, &mut x, &mut r);
+            let f2 = p.objective_from_residual(&r, &x);
+            assert!(f2 <= f + 1e-9, "step {t} increased F: {f} -> {f2}");
+            f = f2;
+        }
+    }
+
+    #[test]
+    fn outliers_move_the_huber_optimum_away_from_lasso() {
+        // the whole point of the loss: the gross outliers injected by
+        // problem() must pull the squared-loss fit but not the Huber fit
+        let (a, y) = problem(7, 30, 5);
+        let p = HuberProblem::new(&a, &y, 0.01);
+        let mut x = vec![0.0; 5];
+        let mut r = p.residual(&x);
+        let mut rng = Rng::new(8);
+        for _ in 0..4000 {
+            let j = rng.below(5);
+            let dx = p.cd_step(j, x[j], &r);
+            p.apply_step(j, dx, &mut x, &mut r);
+        }
+        // outlier residuals stay in the linear branch at the optimum
+        assert!(r[0].abs() > p.delta, "outlier absorbed: r[0] = {}", r[0]);
+        // and every gradient weight is clamped
+        for ri in &r {
+            assert!(huber_grad(*ri, p.delta).abs() <= p.delta + 1e-12);
+        }
+    }
+
+    #[test]
+    fn lambda_max_zeroes_steps() {
+        let (a, y) = problem(9, 30, 8);
+        let lam_max = HuberProblem::new(&a, &y, 0.0).lambda_max();
+        let p = HuberProblem::new(&a, &y, lam_max * 1.001);
+        let r = p.residual(&vec![0.0; 8]);
+        for j in 0..8 {
+            assert_eq!(p.cd_step(j, 0.0, &r), 0.0);
+            assert_eq!(p.cdn_direction(j, 0.0, &r), 0.0);
+        }
+    }
+
+    #[test]
+    fn trait_and_inherent_agree_bitwise() {
+        let (a, y) = problem(11, 18, 5);
+        let p = HuberProblem::new(&a, &y, 0.2);
+        let mut rng = Rng::new(12);
+        let x: Vec<f64> = (0..5).map(|_| 0.4 * rng.normal()).collect();
+        let r = p.residual(&x);
+        let cache = CdObjective::init_cache(&p, &x);
+        assert_eq!(cache, r);
+        assert_eq!(
+            CdObjective::value(&p, &cache, &x).to_bits(),
+            p.objective_from_residual(&r, &x).to_bits()
+        );
+        for j in 0..5 {
+            assert_eq!(
+                CdObjective::grad_j(&p, j, &cache).to_bits(),
+                p.grad_j(j, &r).to_bits()
+            );
+            assert_eq!(
+                CdObjective::newton_direction(&p, j, x[j], &cache).to_bits(),
+                p.cdn_direction(j, x[j], &r).to_bits()
+            );
+        }
+        // g_j = A_j^T w decomposition (the threaded engine's contract)
+        for j in 0..5 {
+            let mut g = 0.0;
+            for i in 0..18 {
+                g += a.to_dense().get(i, j) * CdObjective::grad_weight(&p, i, cache[i]);
+            }
+            assert!((g - p.grad_j(j, &cache)).abs() < 1e-10);
+        }
+    }
+}

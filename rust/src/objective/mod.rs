@@ -11,11 +11,14 @@
 //!   closed-form and Newton coordinate steps, per-sample gradients for
 //!   the SGD family, KKT margins for the scheduler.
 //! * [`LassoProblem`] ([`lasso`]) and [`LogisticProblem`]
-//!   ([`logistic`]) — the two instantiations. Both keep the paper's
-//!   `Ax`-cache trick (Friedman et al. 2010, §4.1.1): Lasso carries the
-//!   residual `r = Ax - y`, logistic the margin vector `z = Ax`; a
-//!   coordinate update `x_j += dx` refreshes either with one sparse
-//!   column axpy.
+//!   ([`logistic`]) — the paper's two instantiations — plus two
+//!   beyond-paper Assumption-2.1 losses: [`SqHingeProblem`]
+//!   ([`sqhinge`], squared hinge / L2-SVM classification) and
+//!   [`HuberProblem`] ([`huber`], robust regression). All four keep the
+//!   paper's `Ax`-cache trick (Friedman et al. 2010, §4.1.1): the
+//!   regression losses carry the residual `r = Ax - y`, the
+//!   classification losses the margin vector `z = Ax`; a coordinate
+//!   update `x_j += dx` refreshes either with one sparse column axpy.
 //! * [`ProblemCache`] ([`cache`]) — per-design metadata (`||A_j||^2`)
 //!   computed once and shared across problem instances, so pathwise
 //!   stages don't redo the O(nnz) pass per lambda.
@@ -24,13 +27,17 @@
 //! lasso column kernel survives the abstraction bit-for-bit.
 
 pub mod cache;
+pub mod huber;
 pub mod lasso;
 pub mod logistic;
+pub mod sqhinge;
 pub mod traits;
 
 pub use cache::ProblemCache;
+pub use huber::HuberProblem;
 pub use lasso::LassoProblem;
 pub use logistic::LogisticProblem;
+pub use sqhinge::SqHingeProblem;
 pub use traits::CdObjective;
 
 /// Floor for the per-coordinate curvature `beta_j` shared by every
@@ -45,15 +52,49 @@ pub enum Loss {
     Squared,
     /// `F(x) = sum log(1 + exp(-y a^T x)) + lam ||x||_1` (Eq. 3), beta = 1/4.
     Logistic,
+    /// Squared hinge (L2-SVM, beyond the paper's experiments):
+    /// `F(x) = 1/2 sum max(0, 1 - y a^T x)^2 + lam ||x||_1`, beta = 1.
+    SqHinge,
+    /// Huber robust regression (beyond the paper's experiments):
+    /// `F(x) = sum H_delta(a^T x - y) + lam ||x||_1`, beta = 1.
+    Huber,
 }
 
 impl Loss {
-    /// The Assumption-2.1 constant (paper Eq. 6).
+    /// Every loss the crate instantiates, in registry/display order.
+    pub const ALL: [Loss; 4] = [Loss::Squared, Loss::Logistic, Loss::SqHinge, Loss::Huber];
+
+    /// The Assumption-2.1 constant (paper Eq. 6; the beyond-paper losses
+    /// carry their own gradient Lipschitz bounds).
     pub fn beta(self) -> f64 {
         match self {
             Loss::Squared => crate::BETA_SQUARED,
             Loss::Logistic => crate::BETA_LOGISTIC,
+            Loss::SqHinge => crate::BETA_SQHINGE,
+            Loss::Huber => crate::BETA_HUBER,
         }
+    }
+
+    /// Canonical lowercase tag — the CLI `--loss` values and the
+    /// `Model`/fixture JSON vocabulary.
+    pub fn name(self) -> &'static str {
+        match self {
+            Loss::Squared => "squared",
+            Loss::Logistic => "logistic",
+            Loss::SqHinge => "sqhinge",
+            Loss::Huber => "huber",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn parse(s: &str) -> Option<Loss> {
+        Loss::ALL.into_iter().find(|l| l.name() == s)
+    }
+
+    /// Classification losses take ±1 labels and predict by `sign(a^T x)`;
+    /// regression losses take real targets and predict the raw score.
+    pub fn classifies(self) -> bool {
+        matches!(self, Loss::Logistic | Loss::SqHinge)
     }
 }
 
@@ -86,6 +127,18 @@ mod tests {
     fn beta_constants() {
         assert_eq!(Loss::Squared.beta(), 1.0);
         assert_eq!(Loss::Logistic.beta(), 0.25);
+        assert_eq!(Loss::SqHinge.beta(), 1.0);
+        assert_eq!(Loss::Huber.beta(), 1.0);
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for loss in Loss::ALL {
+            assert_eq!(Loss::parse(loss.name()), Some(loss));
+        }
+        assert_eq!(Loss::parse("hinge"), None);
+        assert!(Loss::SqHinge.classifies() && Loss::Logistic.classifies());
+        assert!(!Loss::Squared.classifies() && !Loss::Huber.classifies());
     }
 
     #[test]

@@ -1,0 +1,471 @@
+//! Squared-hinge (L2-SVM) objective — the first beyond-paper loss.
+//!
+//! `F(x) = 1/2 sum_i max(0, 1 - y_i a_i^T x)^2 + lam ||x||_1` with
+//! labels `y_i in {-1, +1}`. The `1/2` convention matches the crate's
+//! squared loss, so the gradient Lipschitz constant along any margin
+//! direction is exactly 1 ([`crate::BETA_SQHINGE`]) and the Theorem-3.2
+//! `P*` story carries over unchanged: the loss is C^1 with a
+//! piecewise-linear derivative, i.e. Assumption 2.1 holds with
+//! `beta_j = ||A_j||^2`.
+//!
+//! Cache: the margin vector `z = Ax` (same shape as logistic), refreshed
+//! by one sparse column axpy per update. The CDN second-order machinery
+//! uses the active-set Hessian `h_jj = sum_{i: y_i z_i < 1} A_ij^2`
+//! (floored by a fraction of the Lipschitz bound — off the active set
+//! the curvature vanishes while the gradient need not, and an unfloored
+//! Newton step would be unbounded) plus an Armijo backtracking line
+//! search on the column support.
+
+use super::{CdObjective, Loss, ProblemCache, MIN_BETA};
+use crate::sparsela::{vecops, Design};
+use std::sync::Arc;
+
+/// Fraction of the Lipschitz curvature `||A_j||^2` used to floor the
+/// active-set Hessian in the CDN direction (see the module docs).
+const HESS_FLOOR_FRAC: f64 = 1e-2;
+
+/// A squared-hinge instance:
+/// `min 1/2 sum_i max(0, 1 - y_i a_i^T x)^2 + lam ||x||_1`, y in {-1, +1}.
+pub struct SqHingeProblem<'a> {
+    pub a: &'a Design,
+    pub y: &'a [f64],
+    pub lam: f64,
+    /// `||A_j||^2` per column — with beta = 1 this IS the coordinate
+    /// curvature bound. Shared across pathwise stages via
+    /// [`ProblemCache`].
+    pub col_sq: Arc<Vec<f64>>,
+}
+
+/// The hinge slack `max(0, 1 - y z)` — positive exactly on the margin
+/// violators (the "active" samples).
+#[inline]
+fn slack(y: f64, z: f64) -> f64 {
+    (1.0 - y * z).max(0.0)
+}
+
+impl<'a> SqHingeProblem<'a> {
+    /// Standalone constructor: builds a fresh [`ProblemCache`] (one
+    /// O(nnz) pass). Pathwise callers should build the cache once and
+    /// use [`with_cache`](Self::with_cache) per stage instead.
+    pub fn new(a: &'a Design, y: &'a [f64], lam: f64) -> Self {
+        Self::with_cache(a, y, lam, &ProblemCache::new(a))
+    }
+
+    /// Constructor over a shared per-design cache (no O(nnz) pass).
+    pub fn with_cache(a: &'a Design, y: &'a [f64], lam: f64, cache: &ProblemCache) -> Self {
+        assert_eq!(a.n(), y.len(), "labels length != n");
+        assert_eq!(a.d(), cache.d(), "cache built for a different design");
+        debug_assert!(y.iter().all(|&v| v == 1.0 || v == -1.0), "labels must be ±1");
+        SqHingeProblem {
+            a,
+            y,
+            lam,
+            col_sq: cache.col_sq(),
+        }
+    }
+
+    /// Per-coordinate curvature bound `beta_j = ||A_j||^2` (the hinge
+    /// region's second derivative is exactly 1), floored by [`MIN_BETA`].
+    #[inline]
+    pub fn beta_j(&self, j: usize) -> f64 {
+        (crate::BETA_SQHINGE * self.col_sq[j]).max(MIN_BETA)
+    }
+
+    pub fn n(&self) -> usize {
+        self.a.n()
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.d()
+    }
+
+    /// Margin cache `z = A x` (solvers carry and maintain this).
+    pub fn margins(&self, x: &[f64]) -> Vec<f64> {
+        let mut z = vec![0.0; self.n()];
+        self.a.matvec(x, &mut z);
+        z
+    }
+
+    /// Objective from a maintained margin cache.
+    pub fn objective_from_margins(&self, z: &[f64], x: &[f64]) -> f64 {
+        let mut loss = 0.0;
+        for (zi, yi) in z.iter().zip(self.y) {
+            let s = slack(*yi, *zi);
+            loss += 0.5 * s * s;
+        }
+        loss + self.lam * vecops::norm1(x)
+    }
+
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        let z = self.margins(x);
+        self.objective_from_margins(&z, x)
+    }
+
+    /// Smooth coordinate gradient
+    /// `g_j = -sum_i y_i A_ij max(0, 1 - y_i z_i)` (one column walk over
+    /// the margin cache).
+    pub fn grad_j(&self, j: usize, z: &[f64]) -> f64 {
+        match self.a {
+            Design::Sparse(m) => {
+                let (idx, val) = m.col(j);
+                let mut acc = 0.0;
+                for (&i, &v) in idx.iter().zip(val) {
+                    let i = i as usize;
+                    acc -= v * self.y[i] * slack(self.y[i], z[i]);
+                }
+                acc
+            }
+            Design::Dense(m) => {
+                let col = m.col(j);
+                let mut acc = 0.0;
+                for i in 0..self.n() {
+                    acc -= col[i] * self.y[i] * slack(self.y[i], z[i]);
+                }
+                acc
+            }
+        }
+    }
+
+    /// Active-set coordinate curvature
+    /// `h_jj = sum_{i: y_i z_i < 1} A_ij^2`, floored by a fraction of the
+    /// Lipschitz bound (see the module docs — off the active set the
+    /// curvature vanishes while the gradient need not).
+    pub fn hess_jj(&self, j: usize, z: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        match self.a {
+            Design::Sparse(m) => {
+                let (idx, val) = m.col(j);
+                for (&i, &v) in idx.iter().zip(val) {
+                    let i = i as usize;
+                    if slack(self.y[i], z[i]) > 0.0 {
+                        acc += v * v;
+                    }
+                }
+            }
+            Design::Dense(m) => {
+                let col = m.col(j);
+                for i in 0..self.n() {
+                    if slack(self.y[i], z[i]) > 0.0 {
+                        acc += col[i] * col[i];
+                    }
+                }
+            }
+        }
+        acc.max(HESS_FLOOR_FRAC * self.col_sq[j]).max(MIN_BETA)
+    }
+
+    /// Fixed-step update (Eq. 5 with `beta_j = ||A_j||^2`).
+    #[inline]
+    pub fn cd_step(&self, j: usize, x_j: f64, z: &[f64]) -> f64 {
+        self.cd_step_from_g(j, x_j, self.grad_j(j, z))
+    }
+
+    #[inline]
+    pub fn cd_step_from_g(&self, j: usize, x_j: f64, g: f64) -> f64 {
+        vecops::cd_step(x_j, g, self.lam, self.beta_j(j))
+    }
+
+    /// Apply `x_j += dx` maintaining the margin cache `z += dx A_j`.
+    #[inline]
+    pub fn apply_step(&self, j: usize, dx: f64, x: &mut [f64], z: &mut [f64]) {
+        if dx != 0.0 {
+            x[j] += dx;
+            self.a.col_axpy(j, dx, z);
+        }
+    }
+
+    /// CDN coordinate direction: Newton step with the active-set `h_jj`,
+    /// L1-folded in closed form.
+    pub fn cdn_direction(&self, j: usize, x_j: f64, z: &[f64]) -> f64 {
+        let g = self.grad_j(j, z);
+        let h = self.hess_jj(j, z);
+        vecops::soft_threshold(x_j - g / h, self.lam / h) - x_j
+    }
+
+    /// Armijo backtracking along coordinate `j` (CDN-style), evaluated on
+    /// the column support only — O(nnz_j) per trial step.
+    pub fn cdn_line_search(&self, j: usize, x_j: f64, dx: f64, z: &[f64]) -> f64 {
+        if dx == 0.0 {
+            return 0.0;
+        }
+        let g = self.grad_j(j, z);
+        let sigma = 0.01;
+        let beta_back = 0.5;
+        let smooth_delta = |step: f64| -> f64 {
+            let half_sq = |s: f64| 0.5 * s * s;
+            let mut acc = 0.0;
+            match self.a {
+                Design::Sparse(m) => {
+                    let (idx, val) = m.col(j);
+                    for (&i, &v) in idx.iter().zip(val) {
+                        let i = i as usize;
+                        acc += half_sq(slack(self.y[i], z[i] + step * v))
+                            - half_sq(slack(self.y[i], z[i]));
+                    }
+                }
+                Design::Dense(m) => {
+                    let col = m.col(j);
+                    for i in 0..self.n() {
+                        acc += half_sq(slack(self.y[i], z[i] + step * col[i]))
+                            - half_sq(slack(self.y[i], z[i]));
+                    }
+                }
+            }
+            acc
+        };
+        let d_l1 = |step: f64| self.lam * ((x_j + step).abs() - x_j.abs());
+        let decrease_model = g * dx + self.lam * ((x_j + dx).abs() - x_j.abs());
+        let mut t = 1.0;
+        for _ in 0..30 {
+            let step = t * dx;
+            let actual = smooth_delta(step) + d_l1(step);
+            if actual <= sigma * t * decrease_model || actual <= -1e-15 {
+                return step;
+            }
+            t *= beta_back;
+        }
+        0.0
+    }
+
+    /// Classification error rate of `sign(Ax)` against labels.
+    pub fn error_rate(&self, x: &[f64]) -> f64 {
+        let z = self.margins(x);
+        let wrong = z
+            .iter()
+            .zip(self.y)
+            .filter(|(zi, yi)| **zi * **yi <= 0.0)
+            .count();
+        wrong as f64 / self.n() as f64
+    }
+
+    /// `lam_max`: smallest lam with `x = 0` optimal. At `x = 0` every
+    /// slack is 1, so `g = -A^T y` and `lam_max = ||A^T y||_inf`.
+    pub fn lambda_max(&self) -> f64 {
+        let mut g = vec![0.0; self.d()];
+        self.a.matvec_t(self.y, &mut g);
+        vecops::norm_inf(&g)
+    }
+}
+
+impl CdObjective for SqHingeProblem<'_> {
+    fn loss(&self) -> Loss {
+        Loss::SqHinge
+    }
+
+    fn design(&self) -> &Design {
+        self.a
+    }
+
+    fn targets(&self) -> &[f64] {
+        self.y
+    }
+
+    fn lam(&self) -> f64 {
+        self.lam
+    }
+
+    fn col_norm_sq(&self, j: usize) -> f64 {
+        self.col_sq[j]
+    }
+
+    fn beta_j(&self, j: usize) -> f64 {
+        SqHingeProblem::beta_j(self, j)
+    }
+
+    fn init_cache(&self, x: &[f64]) -> Vec<f64> {
+        self.margins(x)
+    }
+
+    fn value(&self, cache: &[f64], x: &[f64]) -> f64 {
+        self.objective_from_margins(cache, x)
+    }
+
+    /// `w_i = -y_i max(0, 1 - y_i z_i)` so that `g_j = A_j^T w`.
+    #[inline]
+    fn grad_weight(&self, i: usize, cache_i: f64) -> f64 {
+        -self.y[i] * slack(self.y[i], cache_i)
+    }
+
+    #[inline]
+    fn grad_j(&self, j: usize, cache: &[f64]) -> f64 {
+        SqHingeProblem::grad_j(self, j, cache)
+    }
+
+    #[inline]
+    fn cd_step_from_g(&self, j: usize, x_j: f64, g: f64) -> f64 {
+        SqHingeProblem::cd_step_from_g(self, j, x_j, g)
+    }
+
+    #[inline]
+    fn apply_update(&self, j: usize, dx: f64, x: &mut [f64], cache: &mut [f64]) {
+        self.apply_step(j, dx, x, cache)
+    }
+
+    /// Second-order CDN direction with the active-set Hessian.
+    fn newton_direction(&self, j: usize, x_j: f64, cache: &[f64]) -> f64 {
+        self.cdn_direction(j, x_j, cache)
+    }
+
+    /// Armijo backtracking on the column support.
+    fn line_search(&self, j: usize, x_j: f64, dx: f64, cache: &[f64]) -> f64 {
+        self.cdn_line_search(j, x_j, dx, cache)
+    }
+
+    #[inline]
+    fn sample_grad_scale(&self, i: usize, ax_i: f64) -> f64 {
+        -self.y[i] * slack(self.y[i], ax_i)
+    }
+
+    fn aux_metric(&self, x: &[f64]) -> f64 {
+        self.error_rate(x)
+    }
+
+    fn lambda_max(&self) -> f64 {
+        SqHingeProblem::lambda_max(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsela::DenseMatrix;
+    use crate::util::rng::Rng;
+
+    fn problem(seed: u64, n: usize, d: usize) -> (Design, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut m = DenseMatrix::from_fn(n, d, |_, _| rng.normal());
+        m.normalize_columns();
+        let a = Design::Dense(m);
+        let y: Vec<f64> = (0..n).map(|_| rng.sign()).collect();
+        (a, y)
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let (a, y) = problem(1, 24, 6);
+        let p = SqHingeProblem::new(&a, &y, 0.0);
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..6).map(|_| 0.5 * rng.normal()).collect();
+        let z = p.margins(&x);
+        let eps = 1e-6;
+        for j in 0..6 {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let mut xm = x.clone();
+            xm[j] -= eps;
+            let fd = (p.objective(&xp) - p.objective(&xm)) / (2.0 * eps);
+            assert!(
+                (p.grad_j(j, &z) - fd).abs() < 1e-5,
+                "grad_j {} vs fd {}",
+                p.grad_j(j, &z),
+                fd
+            );
+        }
+    }
+
+    #[test]
+    fn margin_cache_maintained() {
+        let (a, y) = problem(3, 15, 6);
+        let p = SqHingeProblem::new(&a, &y, 0.1);
+        let mut x = vec![0.0; 6];
+        let mut z = p.margins(&x);
+        for j in [2usize, 0, 5, 2] {
+            let dx = p.cd_step(j, x[j], &z);
+            p.apply_step(j, dx, &mut x, &mut z);
+        }
+        let fresh = p.margins(&x);
+        for (c, e) in z.iter().zip(&fresh) {
+            assert!((c - e).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cd_and_cdn_steps_descend() {
+        let (a, y) = problem(5, 40, 10);
+        let p = SqHingeProblem::new(&a, &y, 0.05);
+        let mut x = vec![0.0; 10];
+        let mut z = p.margins(&x);
+        let mut f = p.objective_from_margins(&z, &x);
+        let mut rng = Rng::new(6);
+        for t in 0..200 {
+            let j = rng.below(10);
+            let dx = if t % 2 == 0 {
+                p.cd_step(j, x[j], &z)
+            } else {
+                let dir = p.cdn_direction(j, x[j], &z);
+                p.cdn_line_search(j, x[j], dir, &z)
+            };
+            p.apply_step(j, dx, &mut x, &mut z);
+            let f2 = p.objective_from_margins(&z, &x);
+            assert!(f2 <= f + 1e-9, "step {t} increased F: {f} -> {f2}");
+            f = f2;
+        }
+    }
+
+    #[test]
+    fn lambda_max_zeroes_steps() {
+        let (a, y) = problem(7, 30, 8);
+        let lam_max = SqHingeProblem::new(&a, &y, 0.0).lambda_max();
+        let p = SqHingeProblem::new(&a, &y, lam_max * 1.001);
+        let z = p.margins(&vec![0.0; 8]);
+        for j in 0..8 {
+            assert_eq!(p.cd_step(j, 0.0, &z), 0.0);
+            assert_eq!(p.cdn_direction(j, 0.0, &z), 0.0);
+        }
+    }
+
+    #[test]
+    fn hessian_floor_keeps_newton_bounded() {
+        // drive every sample inactive (all margins far beyond 1): the
+        // local curvature is 0, the floored Newton direction must stay
+        // finite and the line search must not blow up the objective
+        let (a, y) = problem(9, 12, 4);
+        let p = SqHingeProblem::new(&a, &y, 0.01);
+        // x with huge margins in the +y direction for every sample
+        let mut z = vec![0.0; 12];
+        for (zi, yi) in z.iter_mut().zip(&y) {
+            *zi = 50.0 * yi;
+        }
+        let f = p.objective_from_margins(&z, &[10.0, 0.0, 0.0, 0.0]);
+        for j in 0..4 {
+            let dir = p.cdn_direction(j, 10.0, &z);
+            assert!(dir.is_finite());
+            let step = p.cdn_line_search(j, 10.0, dir, &z);
+            assert!(step.is_finite());
+        }
+        assert!(f.is_finite());
+    }
+
+    #[test]
+    fn trait_and_inherent_agree_bitwise() {
+        let (a, y) = problem(11, 18, 5);
+        let p = SqHingeProblem::new(&a, &y, 0.2);
+        let mut rng = Rng::new(12);
+        let x: Vec<f64> = (0..5).map(|_| 0.4 * rng.normal()).collect();
+        let z = p.margins(&x);
+        let cache = CdObjective::init_cache(&p, &x);
+        assert_eq!(cache, z);
+        assert_eq!(
+            CdObjective::value(&p, &cache, &x).to_bits(),
+            p.objective_from_margins(&z, &x).to_bits()
+        );
+        for j in 0..5 {
+            assert_eq!(
+                CdObjective::grad_j(&p, j, &cache).to_bits(),
+                p.grad_j(j, &z).to_bits()
+            );
+            assert_eq!(
+                CdObjective::newton_direction(&p, j, x[j], &cache).to_bits(),
+                p.cdn_direction(j, x[j], &z).to_bits()
+            );
+        }
+        // g_j = A_j^T w decomposition (the threaded engine's contract)
+        for j in 0..5 {
+            let mut g = 0.0;
+            for i in 0..18 {
+                g += a.to_dense().get(i, j) * CdObjective::grad_weight(&p, i, cache[i]);
+            }
+            assert!((g - p.grad_j(j, &cache)).abs() < 1e-10);
+        }
+    }
+}

@@ -2,10 +2,11 @@
 //! solves against (the GenCD-style abstraction of Scherrer et al.).
 //!
 //! The paper proves Shotgun once for a generic Assumption-2.1 loss and
-//! instantiates it twice (squared, beta = 1; logistic, beta = 1/4). The
-//! trait mirrors that: each solver has ONE `solve_cd<O: CdObjective>`
-//! body, and `LassoProblem` / `LogisticProblem` plug in through the
-//! cached-state machinery they already share:
+//! instantiates it twice (squared, beta = 1; logistic, beta = 1/4); the
+//! crate adds two beyond-paper instantiations (squared hinge and Huber,
+//! both beta = 1). The trait mirrors the generic statement: each solver
+//! has ONE `solve_cd<O: CdObjective>` body, and every problem type plugs
+//! in through the cached-state machinery they all share:
 //!
 //! * a per-sample **cache vector** maintained incrementally — the
 //!   residual `r = Ax - y` for the squared loss, the margin `z = Ax`

@@ -1,8 +1,9 @@
-//! Stub engine compiled when the `xla` feature is off (the default in
-//! the dependency-free build): same API surface as
-//! [`super::xla_engine::XlaLassoEngine`], every entry point reporting
-//! that the PJRT backend is unavailable. Callers that probe with
-//! `open(...)` (the e2e example, the benches) degrade gracefully.
+//! Stub engine compiled when the `xla-pjrt` feature is off (the default
+//! in the dependency-free build, including under the plain `xla`
+//! feature): same API surface as the real `xla_engine::XlaLassoEngine`,
+//! every entry point reporting that the PJRT backend is unavailable.
+//! Callers that probe with `open(...)` (the e2e example, the benches)
+//! degrade gracefully.
 
 use crate::anyhow;
 use crate::objective::LassoProblem;
@@ -17,7 +18,7 @@ pub struct XlaLassoEngine {
 impl XlaLassoEngine {
     pub fn open(_artifacts_dir: &Path, _profile: &str) -> Result<XlaLassoEngine> {
         Err(anyhow!(
-            "XLA runtime not built: compile with `--features xla` (needs the \
+            "XLA runtime not built: compile with `--features xla-pjrt` (needs the \
              external `xla` + `anyhow` crates; see rust/Cargo.toml)"
         ))
     }

@@ -8,7 +8,7 @@
 //! exact quadratic model degenerates both to the closed-form coordinate
 //! step (so the same body doubles as cyclic exact CD on the Lasso).
 
-use super::common::{LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
+use super::common::{CdSolve, LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem};
 use crate::util::rng::Rng;
 
@@ -130,6 +130,18 @@ impl ShootingCdn {
         let f = obj.value(&z, &x);
         rec.record(outer, f, &x, 0.0, true);
         rec.finish("shooting-cdn", x, f, outer, converged)
+    }
+}
+
+impl CdSolve for ShootingCdn {
+    /// The loss-agnostic SPI — same body as the per-loss shims.
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
     }
 }
 

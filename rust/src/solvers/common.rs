@@ -87,6 +87,29 @@ pub trait LogisticSolver {
     ) -> SolveResult;
 }
 
+/// The loss-agnostic solver SPI: a solver whose single generic
+/// `solve_cd<O: CdObjective>` body covers EVERY registered loss —
+/// squared, logistic, squared hinge, Huber, and any future
+/// Assumption-2.1 instantiation. `api::registry` erases this behind
+/// [`DynCdSolver`](crate::api::DynCdSolver) for the multi-loss entries;
+/// the per-loss [`LassoSolver`]/[`LogisticSolver`] shims stay as the
+/// historical two-loss surface and forward into the same body, so both
+/// routes are bit-identical (`tests/api_redesign.rs`,
+/// `tests/beyond_losses.rs`).
+///
+/// The `Sync` bound on the objective is what the threaded engine needs
+/// to share it across workers; every problem type in
+/// [`crate::objective`] satisfies it (shared borrows + `Arc` metadata).
+pub trait CdSolve {
+    /// Solve any [`CdObjective`] from `x0` under `opts`.
+    fn solve_obj<O: crate::objective::CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult;
+}
+
 /// Legacy convenience facade, deprecated: its blanket impl silently
 /// covered only Lasso solvers (a logistic solver got no `solve`), it
 /// hardcoded `SolveOptions::default()`, and it could not fail. The

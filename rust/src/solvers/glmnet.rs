@@ -13,7 +13,7 @@
 //! loop gates them on [`Loss::Squared`]; every other loss runs the
 //! naive-mode cyclic sweeps through the shared cache machinery.
 
-use super::common::{LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
+use super::common::{CdSolve, LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
 use crate::coordinator::schedule::ActiveSet;
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
 use std::collections::HashMap;
@@ -184,12 +184,28 @@ impl Glmnet {
         let base = match obj.loss() {
             Loss::Squared => "glmnet",
             Loss::Logistic => "glmnet-logistic",
+            Loss::SqHinge => "glmnet-sqhinge",
+            Loss::Huber => "glmnet-huber",
         };
         let mut res = rec.finish(base, x, f, sweep, converged);
         if obj.loss() == Loss::Squared && !use_cov {
             res.solver = "glmnet-naive".into();
         }
         res
+    }
+}
+
+impl CdSolve for Glmnet {
+    /// The loss-agnostic SPI — covariance mode stays gated on the
+    /// squared loss inside `solve_cd`; everything else runs naive
+    /// sweeps.
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
     }
 }
 

@@ -11,7 +11,7 @@
 //! improvement stalls relative to its first epoch. Both phases are
 //! generic over [`CdObjective`], so the hybrid runs either loss.
 
-use super::common::{LassoSolver, LogisticSolver, SolveOptions, SolveResult};
+use super::common::{CdSolve, LassoSolver, LogisticSolver, SolveOptions, SolveResult};
 use super::sgd::{Rate, Sgd};
 use crate::coordinator::ShotgunCdn;
 use crate::metrics::Trace;
@@ -126,6 +126,18 @@ impl HybridSgdShotgun {
             converged: res.converged,
             trace,
         }
+    }
+}
+
+impl CdSolve for HybridSgdShotgun {
+    /// The loss-agnostic SPI — same body as the per-loss shims.
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
     }
 }
 

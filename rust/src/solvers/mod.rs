@@ -31,6 +31,6 @@ pub mod hard_l0;
 pub mod hybrid;
 pub mod path;
 
-pub use common::{LassoSolver, LogisticSolver, SolveOptions, SolveResult};
+pub use common::{CdSolve, LassoSolver, LogisticSolver, SolveOptions, SolveResult};
 #[allow(deprecated)]
 pub use common::Solver;

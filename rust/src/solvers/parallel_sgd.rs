@@ -7,7 +7,7 @@
 //! exactly, which our reproduction confirms. Generic over
 //! [`CdObjective`] by delegating to the generic [`Sgd`] epoch loop.
 
-use super::common::{LassoSolver, LogisticSolver, SolveOptions, SolveResult};
+use super::common::{CdSolve, LassoSolver, LogisticSolver, SolveOptions, SolveResult};
 use super::sgd::{Rate, Sgd};
 use crate::metrics::{Trace, TracePoint};
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem};
@@ -87,6 +87,18 @@ impl ParallelSgd {
             converged: false,
             trace,
         }
+    }
+}
+
+impl CdSolve for ParallelSgd {
+    /// The loss-agnostic SPI — same body as the per-loss shims.
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
     }
 }
 

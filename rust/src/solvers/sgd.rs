@@ -12,7 +12,7 @@
 //! values in [1e-4, 1] and keeping the best training objective; `sweep`
 //! reproduces that protocol.
 
-use super::common::{LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
+use super::common::{CdSolve, LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
 use crate::sparsela::CsrMatrix;
 use crate::util::rng::Rng;
@@ -140,8 +140,24 @@ impl Sgd {
         let base = match obj.loss() {
             Loss::Squared => "sgd-lasso",
             Loss::Logistic => "sgd",
+            Loss::SqHinge => "sgd-sqhinge",
+            Loss::Huber => "sgd-huber",
         };
         rec.finish(base, x, f, iter, converged)
+    }
+}
+
+impl CdSolve for Sgd {
+    /// The loss-agnostic SPI — every loss runs through
+    /// [`CdObjective::sample_grad_scale`] and the same lazy-shrinkage
+    /// bookkeeping.
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
     }
 }
 

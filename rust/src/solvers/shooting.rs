@@ -7,7 +7,7 @@
 //! keeps its fused gather→step→scatter column kernel through the
 //! trait's `cd_update` (statically dispatched, bit-identical).
 
-use super::common::{LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
+use super::common::{CdSolve, LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
 use crate::coordinator::schedule::ActiveSet;
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
 use crate::util::rng::Rng;
@@ -91,8 +91,22 @@ impl Shooting {
         let base = match obj.loss() {
             Loss::Squared => "shooting",
             Loss::Logistic => "shooting-logistic",
+            Loss::SqHinge => "shooting-sqhinge",
+            Loss::Huber => "shooting-huber",
         };
         rec.finish(base, x, f, iter, converged)
+    }
+}
+
+impl CdSolve for Shooting {
+    /// The loss-agnostic SPI — same body as the per-loss shims.
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
     }
 }
 

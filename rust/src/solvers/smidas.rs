@@ -10,7 +10,7 @@
 //! Generic over [`CdObjective`]: the mirror machinery only needs the
 //! per-sample gradient scale, so the same body runs the squared loss.
 
-use super::common::{LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
+use super::common::{CdSolve, LassoSolver, LogisticSolver, Recorder, SolveOptions, SolveResult};
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem};
 use crate::util::rng::Rng;
 
@@ -107,6 +107,18 @@ fn link_inverse(theta: &[f64], q: f64, x: &mut [f64]) {
     let scale = norm.powf(2.0 - q);
     for (xj, &t) in x.iter_mut().zip(theta) {
         *xj = t.signum() * t.abs().powf(q - 1.0) * scale;
+    }
+}
+
+impl CdSolve for Smidas {
+    /// The loss-agnostic SPI — same body as the per-loss shims.
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
     }
 }
 

@@ -135,7 +135,7 @@ fn fit_reproduces_legacy_lasso_bit_for_bit() {
     for entry in SolverRegistry::global()
         .entries()
         .iter()
-        .filter(|e| e.caps.squared && e.caps.deterministic)
+        .filter(|e| e.caps.supports(Loss::Squared) && e.caps.deterministic)
     {
         let o = opts_for(entry.caps.iter_unit);
         let legacy = legacy_lasso(entry.name, &prob, &x0, &o);
@@ -173,7 +173,7 @@ fn fit_reproduces_legacy_logistic_bit_for_bit() {
     for entry in SolverRegistry::global()
         .entries()
         .iter()
-        .filter(|e| e.caps.logistic && e.caps.deterministic)
+        .filter(|e| e.caps.supports(Loss::Logistic) && e.caps.deterministic)
     {
         let o = opts_for(entry.caps.iter_unit);
         let legacy = legacy_logistic(entry.name, &prob, &x0, &o);
@@ -243,14 +243,14 @@ fn every_registered_solver_has_a_capability_consistent_roundtrip() {
         let lasso_res = s.solve(ProblemRef::Lasso(&lasso), &x0, &o);
         assert_eq!(
             lasso_res.is_ok(),
-            entry.caps.squared,
+            entry.caps.supports(Loss::Squared),
             "{}: squared capability mismatch",
             entry.name
         );
         let logit_res = s.solve(ProblemRef::Logistic(&logit), &x0, &o);
         assert_eq!(
             logit_res.is_ok(),
-            entry.caps.logistic,
+            entry.caps.supports(Loss::Logistic),
             "{}: logistic capability mismatch",
             entry.name
         );

@@ -1,0 +1,397 @@
+//! Beyond-paper loss acceptance tests: squared hinge + Huber through
+//! every layer.
+//!
+//! 1. **Bit-identity**: solving through the erased registry handle (and
+//!    the `Fit` front door) must reproduce the engines' generic
+//!    `solve_cd` called directly — same seed, same options, same bits —
+//!    for every deterministic solver advertising the loss. The direct
+//!    side is hand-constructed, like `tests/api_redesign.rs`'s legacy
+//!    tables.
+//! 2. **Fixture optimum**: `Engine::Auto` and the pathwise strong-rules
+//!    orchestrator land on the independent numpy reference optimum
+//!    (`rust/tests/fixtures/{sqhinge,huber}_*.json`) within 1e-4
+//!    relative — the per-solver sweep lives in
+//!    `tests/golden_fixtures.rs`.
+//! 3. **Pathwise for free**: strong-rule screening engages on a sparse
+//!    instance of each new loss (solver tag gains `+path-strong`)
+//!    without moving the optimum.
+//! 4. **Serving**: `FitQueue` jobs fit/publish the new losses, the
+//!    replay harness serves them, the model JSON round-trips
+//!    bit-exactly, and proba requests against a sqhinge model are
+//!    refused.
+
+use shotgun::api::serve::{replay, FitJob, FitQueue, JobState, ModelStore, ReplayConfig};
+use shotgun::api::{Engine, Fit, Model, PathSpec, ProblemRef, SolverParams, SolverRegistry};
+use shotgun::coordinator::{Shotgun, ShotgunCdn, ShotgunConfig};
+use shotgun::data::synth;
+use shotgun::objective::{CdObjective, HuberProblem, Loss, SqHingeProblem};
+use shotgun::solvers::common::{CdSolve, SolveOptions, SolveResult};
+use shotgun::solvers::{
+    cdn::ShootingCdn,
+    glmnet::Glmnet,
+    hybrid::HybridSgdShotgun,
+    parallel_sgd::ParallelSgd,
+    sgd::{Rate, Sgd},
+    shooting::Shooting,
+    smidas::Smidas,
+};
+use shotgun::sparsela::{DenseMatrix, Design};
+use shotgun::testkit::requests::{stream, StreamSpec};
+use shotgun::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const P: usize = 4;
+const ETA: f64 = 0.05;
+
+fn assert_bits_eq(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{tag}: weight {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// Direct construction of every multi-loss solver, driven through the
+/// generic `CdSolve` body — the statically-dispatched reference the
+/// erased registry path must reproduce bit-for-bit.
+fn direct_solve<O: CdObjective + Sync>(
+    name: &str,
+    obj: &O,
+    x0: &[f64],
+    o: &SolveOptions,
+) -> SolveResult {
+    match name {
+        "shotgun" => Shotgun::new(ShotgunConfig {
+            p: P,
+            ..Default::default()
+        })
+        .solve_obj(obj, x0, o),
+        "shotgun-cdn" => ShotgunCdn::with_p(P).solve_obj(obj, x0, o),
+        "shooting" => Shooting.solve_obj(obj, x0, o),
+        "shooting-cdn" => ShootingCdn::default().solve_obj(obj, x0, o),
+        "sgd" => Sgd::new(Rate::Constant(ETA)).solve_obj(obj, x0, o),
+        "parallel-sgd" => ParallelSgd::new(P, Rate::Constant(ETA)).solve_obj(obj, x0, o),
+        "smidas" => Smidas::new(ETA.min(0.1)).solve_obj(obj, x0, o),
+        "hybrid" => HybridSgdShotgun {
+            eta: ETA,
+            p: P,
+            ..Default::default()
+        }
+        .solve_obj(obj, x0, o),
+        "glmnet" => Glmnet::default().solve_obj(obj, x0, o),
+        other => panic!("no direct reference for {other} — extend this table"),
+    }
+}
+
+fn opts_for(unit: shotgun::api::IterUnit) -> SolveOptions {
+    let max_iters = match unit {
+        shotgun::api::IterUnit::Update | shotgun::api::IterUnit::Round => 60_000,
+        shotgun::api::IterUnit::Sweep => 1_500,
+        shotgun::api::IterUnit::Epoch => 40,
+    };
+    SolveOptions {
+        max_iters,
+        tol: 1e-7,
+        record_every: 512,
+        seed: 9,
+        ..Default::default()
+    }
+}
+
+fn run_bit_identity(loss: Loss) {
+    let ds = if loss.classifies() {
+        synth::rcv1_like(50, 40, 0.2, 41)
+    } else {
+        synth::sparse_imaging(50, 60, 0.1, 42)
+    };
+    let lam = 0.08;
+    let d = ds.d();
+    let x0 = vec![0.0; d];
+    let params = SolverParams {
+        p: P,
+        eta: ETA,
+        ..Default::default()
+    };
+    for entry in SolverRegistry::global()
+        .entries()
+        .iter()
+        .filter(|e| e.caps.supports(loss) && e.caps.deterministic)
+    {
+        let sqhinge;
+        let huber;
+        let o = opts_for(entry.caps.iter_unit);
+        let (direct, prob): (SolveResult, ProblemRef<'_, '_>) = match loss {
+            Loss::SqHinge => {
+                sqhinge = SqHingeProblem::new(&ds.design, &ds.targets, lam);
+                (
+                    direct_solve(entry.name, &sqhinge, &x0, &o),
+                    ProblemRef::SqHinge(&sqhinge),
+                )
+            }
+            Loss::Huber => {
+                huber = HuberProblem::new(&ds.design, &ds.targets, lam);
+                (
+                    direct_solve(entry.name, &huber, &x0, &o),
+                    ProblemRef::Huber(&huber),
+                )
+            }
+            other => panic!("not a beyond-paper loss: {other:?}"),
+        };
+        // route 1: the erased registry handle
+        let erased = entry
+            .create(&params)
+            .solve(prob, &x0, &o)
+            .unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+        assert_bits_eq(&erased.x, &direct.x, entry.name);
+        assert_eq!(
+            erased.objective.to_bits(),
+            direct.objective.to_bits(),
+            "{}: objective bits differ",
+            entry.name
+        );
+        // route 2: the Fit front door
+        let report = Fit::new(&ds.design, &ds.targets)
+            .loss(loss)
+            .lambda(lam)
+            .solver(entry.name)
+            .params(params.clone())
+            .options(|opt| *opt = o.clone())
+            .run()
+            .unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+        assert_bits_eq(&report.diagnostics.x, &direct.x, entry.name);
+        assert_bits_eq(&report.model.to_dense(), &direct.x, entry.name);
+        assert_eq!(report.model.loss, loss);
+        // the identity must come from real work, not a shared no-op
+        assert!(direct.updates > 0, "{}: reference did no work", entry.name);
+    }
+}
+
+#[test]
+fn registry_and_fit_match_direct_solve_cd_bit_for_bit_sqhinge() {
+    run_bit_identity(Loss::SqHinge);
+}
+
+#[test]
+fn registry_and_fit_match_direct_solve_cd_bit_for_bit_huber() {
+    run_bit_identity(Loss::Huber);
+}
+
+// ---------------------------------------------------------------------
+// fixture optimum through Engine::Auto and the pathwise orchestrator
+// ---------------------------------------------------------------------
+
+struct Fixture {
+    loss: Loss,
+    design: Design,
+    targets: Vec<f64>,
+    lam: f64,
+    f_star: f64,
+}
+
+fn load_fixture(file: &str) -> Fixture {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(file);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let doc = Json::parse(&text).expect("fixture is valid JSON");
+    let num_vec = |key: &str| -> Vec<f64> {
+        doc.get(key)
+            .and_then(Json::as_arr)
+            .unwrap_or_else(|| panic!("{file}: missing array {key}"))
+            .iter()
+            .map(|v| v.as_f64().expect("numeric array"))
+            .collect()
+    };
+    let n = doc.get("n").and_then(Json::as_usize).expect("n");
+    let d = doc.get("d").and_then(Json::as_usize).expect("d");
+    Fixture {
+        loss: doc
+            .get("loss")
+            .and_then(Json::as_str)
+            .and_then(Loss::parse)
+            .expect("fixture loss tag"),
+        design: Design::Dense(DenseMatrix::from_col_major(n, d, num_vec("col_major"))),
+        targets: num_vec("targets"),
+        lam: doc.get("lam").and_then(Json::as_f64).expect("lam"),
+        f_star: doc.get("f_star").and_then(Json::as_f64).expect("f_star"),
+    }
+}
+
+#[test]
+fn engine_auto_and_pathwise_reach_the_numpy_optimum_on_new_losses() {
+    for file in [
+        "sqhinge_small.json",
+        "sqhinge_wide.json",
+        "huber_small.json",
+        "huber_wide.json",
+    ] {
+        let fx = load_fixture(file);
+        // Engine::Auto (Theorem 3.2 picks P + the engine)
+        let auto = Fit::new(&fx.design, &fx.targets)
+            .loss(fx.loss)
+            .lambda(fx.lam)
+            .engine(Engine::Auto)
+            .options(|o| {
+                o.max_iters = 500_000;
+                o.tol = 1e-10;
+            })
+            .run()
+            .unwrap_or_else(|e| panic!("{file}: auto fit failed: {e}"));
+        let gap = (auto.objective() - fx.f_star) / fx.f_star.max(1.0);
+        assert!(
+            (-1e-8..=1e-4).contains(&gap),
+            "{file}: Engine::Auto landed at {} vs fixture {} (rel gap {gap:.2e})",
+            auto.objective(),
+            fx.f_star
+        );
+        // pathwise strong-rules orchestrator down to the fixture lambda
+        let path = Fit::new(&fx.design, &fx.targets)
+            .loss(fx.loss)
+            .path(PathSpec::to(fx.lam))
+            .solver("shooting")
+            .options(|o| {
+                o.max_iters = 500_000;
+                o.tol = 1e-10;
+            })
+            .run()
+            .unwrap_or_else(|e| panic!("{file}: pathwise fit failed: {e}"));
+        let gap = (path.objective() - fx.f_star) / fx.f_star.max(1.0);
+        assert!(
+            (-1e-8..=1e-4).contains(&gap),
+            "{file}: pathwise landed at {} vs fixture {} (rel gap {gap:.2e})",
+            path.objective(),
+            fx.f_star
+        );
+        assert!(
+            path.diagnostics.solver.contains("+path"),
+            "{file}: pathwise tag missing: {}",
+            path.diagnostics.solver
+        );
+    }
+}
+
+#[test]
+fn strong_rules_engage_and_preserve_the_optimum_on_new_losses() {
+    // sparse instances large enough for the screen to drop coordinates:
+    // the solver tag must gain "+path-strong" and the objective must
+    // match the strong-rules-off path
+    for loss in [Loss::SqHinge, Loss::Huber] {
+        let ds = if loss.classifies() {
+            synth::rcv1_like(80, 160, 0.06, 43)
+        } else {
+            synth::sparse_imaging(80, 160, 0.06, 44)
+        };
+        let lam_frac = 0.15;
+        let (lam, run) = {
+            let lam = match loss {
+                Loss::SqHinge => {
+                    lam_frac * SqHingeProblem::new(&ds.design, &ds.targets, 0.0).lambda_max()
+                }
+                _ => lam_frac * HuberProblem::new(&ds.design, &ds.targets, 0.0).lambda_max(),
+            };
+            let run = |strong: bool| {
+                Fit::new(&ds.design, &ds.targets)
+                    .loss(loss)
+                    .path(PathSpec {
+                        lam_target: lam,
+                        stages: 6,
+                        strong_rules: strong,
+                    })
+                    .solver("shooting")
+                    .options(|o| {
+                        o.max_iters = 400_000;
+                        o.tol = 1e-8;
+                    })
+                    .run()
+                    .expect("pathwise fit solves")
+            };
+            (lam, run)
+        };
+        let strong = run(true);
+        let plain = run(false);
+        assert!(
+            strong.diagnostics.solver.ends_with("+path-strong"),
+            "{loss:?}: screening never engaged at lam {lam}: {}",
+            strong.diagnostics.solver
+        );
+        let gap = (strong.objective() - plain.objective()).abs()
+            / plain.objective().abs().max(1e-12);
+        assert!(
+            gap < 1e-3,
+            "{loss:?}: strong rules moved the optimum (gap {gap:.2e})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// serving: fit queue, replay, JSON round-trip, proba refusal
+// ---------------------------------------------------------------------
+
+#[test]
+fn fit_queue_and_replay_serve_the_new_losses() {
+    for loss in [Loss::SqHinge, Loss::Huber] {
+        let ds = if loss.classifies() {
+            synth::rcv1_like(60, 80, 0.15, 45)
+        } else {
+            synth::sparse_imaging(60, 80, 0.15, 46)
+        };
+        let store = Arc::new(ModelStore::new());
+        let queue = FitQueue::with_store(2, 8, Arc::clone(&store));
+        let design = Arc::new(ds.design);
+        let targets = Arc::new(ds.targets);
+        let job = FitJob::new(Arc::clone(&design), Arc::clone(&targets), loss, 0.05)
+            .solver_name("shooting")
+            .options(|o| {
+                o.max_iters = 200_000;
+                o.tol = 1e-7;
+            })
+            .publish_as("beyond");
+        let id = queue.submit(job).expect("queue accepts the job");
+        let report = match queue.wait(id).expect("job is known") {
+            JobState::Done(report) => report,
+            other => panic!("{loss:?}: job did not finish: {other:?}"),
+        };
+        assert_eq!(report.model.loss, loss);
+
+        // the published artifact round-trips bit-exactly
+        let record = store.resolve("beyond").expect("published");
+        let restored = Model::from_json(&record.model.to_json()).expect("roundtrip");
+        assert_eq!(restored, record.model);
+
+        // replay a request stream against it (no proba: only logistic
+        // models carry a probabilistic read-out)
+        let spec = StreamSpec {
+            d: design.d(),
+            count: 200,
+            max_nnz: 6,
+            proba_fraction: 0.0,
+        };
+        let requests = stream(&spec, 2127);
+        let stats = replay(
+            Arc::clone(&store),
+            "beyond",
+            &requests,
+            &ReplayConfig::default(),
+        )
+        .expect("replay serves the stream");
+        assert_eq!(stats.requests, 200);
+
+        // a proba request against a non-logistic model is refused
+        let mut bad = requests[0].clone();
+        bad.proba = true;
+        let err = replay(
+            Arc::clone(&store),
+            "beyond",
+            std::slice::from_ref(&bad),
+            &ReplayConfig::default(),
+        )
+        .expect_err("proba must be refused");
+        assert!(
+            matches!(err, shotgun::api::ShotgunError::BadRequest { .. }),
+            "{loss:?}: wrong refusal: {err:?}"
+        );
+    }
+}

@@ -11,7 +11,7 @@
 //! an externally pinned optimum can.
 
 use shotgun::api::{IterUnit, ProblemRef, SolverParams, SolverRegistry};
-use shotgun::objective::{LassoProblem, LogisticProblem, Loss};
+use shotgun::objective::{HuberProblem, LassoProblem, LogisticProblem, Loss, SqHingeProblem};
 use shotgun::solvers::common::SolveOptions;
 use shotgun::sparsela::{DenseMatrix, Design};
 use shotgun::util::json::Json;
@@ -70,11 +70,13 @@ fn load_fixture(file: &str) -> Fixture {
             .and_then(Json::as_str)
             .unwrap_or(file)
             .to_string(),
-        loss: match doc.get("loss").and_then(Json::as_str) {
-            Some("squared") => Loss::Squared,
-            Some("logistic") => Loss::Logistic,
-            other => panic!("{file}: unknown loss {other:?}"),
-        },
+        loss: doc
+            .get("loss")
+            .and_then(Json::as_str)
+            .and_then(Loss::parse)
+            .unwrap_or_else(|| {
+                panic!("{file}: unknown loss {:?}", doc.get("loss").and_then(Json::as_str))
+            }),
         design: Design::Dense(DenseMatrix::from_col_major(n, d, col_major)),
         targets: num_vec("targets"),
         lam: doc.get("lam").and_then(Json::as_f64).expect("lam"),
@@ -89,6 +91,10 @@ fn all_fixtures() -> Vec<Fixture> {
         "lasso_wide.json",
         "logistic_small.json",
         "logistic_wide.json",
+        "sqhinge_small.json",
+        "sqhinge_wide.json",
+        "huber_small.json",
+        "huber_wide.json",
     ]
     .iter()
     .map(|f| load_fixture(f))
@@ -128,6 +134,12 @@ fn fixture_pins_match_this_crates_objective_conventions() {
             Loss::Logistic => {
                 LogisticProblem::new(&fx.design, &fx.targets, fx.lam).objective(&fx.x_star)
             }
+            Loss::SqHinge => {
+                SqHingeProblem::new(&fx.design, &fx.targets, fx.lam).objective(&fx.x_star)
+            }
+            Loss::Huber => {
+                HuberProblem::new(&fx.design, &fx.targets, fx.lam).objective(&fx.x_star)
+            }
         };
         let rel = (f_here - fx.f_star).abs() / fx.f_star.max(1.0);
         assert!(
@@ -151,6 +163,8 @@ fn every_exact_solver_reaches_the_golden_optima() {
         let x0 = vec![0.0; d];
         let lasso;
         let logistic;
+        let sqhinge;
+        let huber;
         let prob = match fx.loss {
             Loss::Squared => {
                 lasso = LassoProblem::new(&fx.design, &fx.targets, fx.lam);
@@ -159,6 +173,14 @@ fn every_exact_solver_reaches_the_golden_optima() {
             Loss::Logistic => {
                 logistic = LogisticProblem::new(&fx.design, &fx.targets, fx.lam);
                 ProblemRef::Logistic(&logistic)
+            }
+            Loss::SqHinge => {
+                sqhinge = SqHingeProblem::new(&fx.design, &fx.targets, fx.lam);
+                ProblemRef::SqHinge(&sqhinge)
+            }
+            Loss::Huber => {
+                huber = HuberProblem::new(&fx.design, &fx.targets, fx.lam);
+                ProblemRef::Huber(&huber)
             }
         };
         for entry in registry.entries() {

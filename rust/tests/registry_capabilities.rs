@@ -10,7 +10,7 @@
 
 use shotgun::api::{IterUnit, ProblemRef, SolverParams, SolverRegistry};
 use shotgun::data::synth;
-use shotgun::objective::{LassoProblem, LogisticProblem, Loss};
+use shotgun::objective::{HuberProblem, LassoProblem, LogisticProblem, Loss, SqHingeProblem};
 use shotgun::solvers::common::SolveOptions;
 
 fn opts_for(unit: IterUnit) -> SolveOptions {
@@ -45,7 +45,7 @@ fn fig3_set_solves_the_lasso_it_advertises() {
     assert!(!fig3.is_empty(), "fig3 set vanished from the registry");
     for entry in fig3 {
         assert!(
-            entry.caps.squared,
+            entry.caps.supports(Loss::Squared),
             "{}: in the fig3 (Lasso) set but does not declare the squared loss",
             entry.name
         );
@@ -80,7 +80,7 @@ fn fig4_set_solves_the_logistic_it_advertises() {
     assert!(!fig4.is_empty(), "fig4 set vanished from the registry");
     for entry in fig4 {
         assert!(
-            entry.caps.logistic,
+            entry.caps.supports(Loss::Logistic),
             "{}: in the fig4 (logistic) set but does not declare the logistic loss",
             entry.name
         );
@@ -100,6 +100,77 @@ fn fig4_set_solves_the_logistic_it_advertises() {
             entry.name,
             res.objective
         );
+    }
+}
+
+#[test]
+fn every_advertised_loss_is_actually_solved() {
+    // the generalization of the two set-specific checks above: for EVERY
+    // entry and EVERY loss in its LossSet, the solver must accept the
+    // problem (no LossUnsupported) and genuinely descend from x = 0.
+    // Registering a loss a solver cannot run fails here, as does
+    // dropping support a capability still advertises.
+    let reg = SolverRegistry::global();
+    let reg_ds = synth::sparco_like(40, 24, 0.35, 93);
+    let cls_ds = synth::rcv1_like(40, 24, 0.3, 94);
+    let lasso = LassoProblem::new(&reg_ds.design, &reg_ds.targets, 0.15);
+    let huber = HuberProblem::new(&reg_ds.design, &reg_ds.targets, 0.05);
+    let logistic = LogisticProblem::new(&cls_ds.design, &cls_ds.targets, 0.05);
+    let sqhinge = SqHingeProblem::new(&cls_ds.design, &cls_ds.targets, 0.05);
+    let x0 = vec![0.0; 24];
+    let params = SolverParams {
+        p: 2,
+        eta: 0.05,
+        ..Default::default()
+    };
+    for entry in reg.entries() {
+        for loss in entry.caps.losses.iter() {
+            let (prob, f0): (ProblemRef<'_, '_>, f64) = match loss {
+                Loss::Squared => (ProblemRef::Lasso(&lasso), lasso.objective(&x0)),
+                Loss::Logistic => (ProblemRef::Logistic(&logistic), logistic.objective(&x0)),
+                Loss::SqHinge => (ProblemRef::SqHinge(&sqhinge), sqhinge.objective(&x0)),
+                Loss::Huber => (ProblemRef::Huber(&huber), huber.objective(&x0)),
+            };
+            let res = entry
+                .create(&params)
+                .solve(prob, &x0, &opts_for(entry.caps.iter_unit))
+                .unwrap_or_else(|e| {
+                    panic!(
+                        "{}: advertises {} but refused it: {e}",
+                        entry.name,
+                        loss.name()
+                    )
+                });
+            assert!(
+                res.objective < f0,
+                "{}: advertises {} but failed to descend (F = {} vs F(0) = {f0})",
+                entry.name,
+                loss.name(),
+                res.objective
+            );
+        }
+        // and the dyn handle refuses what the capability table excludes
+        for loss in Loss::ALL {
+            if entry.caps.supports(loss) {
+                continue;
+            }
+            let prob: ProblemRef<'_, '_> = match loss {
+                Loss::Squared => ProblemRef::Lasso(&lasso),
+                Loss::Logistic => ProblemRef::Logistic(&logistic),
+                Loss::SqHinge => ProblemRef::SqHinge(&sqhinge),
+                Loss::Huber => ProblemRef::Huber(&huber),
+            };
+            let err = entry
+                .create(&params)
+                .solve(prob, &x0, &opts_for(entry.caps.iter_unit))
+                .expect_err("unadvertised loss must be refused");
+            assert!(
+                matches!(err, shotgun::api::ShotgunError::LossUnsupported { .. }),
+                "{}: wrong refusal for {}: {err:?}",
+                entry.name,
+                loss.name()
+            );
+        }
     }
 }
 
@@ -135,15 +206,23 @@ fn capability_sets_only_contain_supported_losses() {
     for entry in reg.entries() {
         let caps = &entry.caps;
         assert!(
-            caps.squared || caps.logistic,
+            !caps.losses.is_empty(),
             "{}: registered solver supports no loss at all",
             entry.name
         );
         if caps.fig3_lasso {
-            assert!(caps.squared, "{}: fig3 implies squared", entry.name);
+            assert!(
+                caps.supports(Loss::Squared),
+                "{}: fig3 implies squared",
+                entry.name
+            );
         }
         if caps.fig4_logreg {
-            assert!(caps.logistic, "{}: fig4 implies logistic", entry.name);
+            assert!(
+                caps.supports(Loss::Logistic),
+                "{}: fig4 implies logistic",
+                entry.name
+            );
         }
         if caps.pathwise_warmstart {
             // strong-rule screening assumes an exact KKT optimum to

@@ -40,16 +40,20 @@ fn assert_bits_eq(a: &[f64], b: &[f64], tag: &str) {
 /// A real fitted model (not a synthetic weight vector) so the serving
 /// path is exercised against solver output.
 fn fitted_model(loss: Loss, seed: u64) -> Model {
-    let ds = match loss {
-        Loss::Squared => synth::sparse_imaging(60, 120, 0.1, seed),
-        Loss::Logistic => synth::rcv1_like(60, 120, 0.1, seed),
+    // classification losses need ±1 labels; regression losses real
+    // targets — every loss goes through the same serving contract
+    let ds = if loss.classifies() {
+        synth::rcv1_like(60, 120, 0.1, seed)
+    } else {
+        synth::sparse_imaging(60, 120, 0.1, seed)
     };
     Fit::new(&ds.design, &ds.targets)
         .loss(loss)
         .lambda(0.05)
-        .solver(match loss {
-            Loss::Squared => "shooting",
-            Loss::Logistic => "shooting-cdn",
+        .solver(if loss.classifies() {
+            "shooting-cdn"
+        } else {
+            "shooting"
         })
         .options(|o| {
             o.max_iters = 200_000;
@@ -66,7 +70,9 @@ fn fitted_model(loss: Loss, seed: u64) -> Model {
 
 #[test]
 fn batched_prediction_is_bit_identical_to_sequential() {
-    for loss in [Loss::Squared, Loss::Logistic] {
+    // all four losses, including the beyond-paper pair: the coalesced
+    // path must be bit-identical whatever the predict semantics are
+    for loss in Loss::ALL {
         let model = fitted_model(loss, 11);
         let d = model.d();
         let store = Arc::new(ModelStore::new());

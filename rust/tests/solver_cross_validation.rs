@@ -41,7 +41,7 @@ fn lasso_optima(ds: &shotgun::data::Dataset, lam: f64) -> Vec<(String, f64)> {
     registry
         .entries()
         .iter()
-        .filter(|e| e.caps.squared && e.caps.exact_optimum)
+        .filter(|e| e.caps.supports(Loss::Squared) && e.caps.exact_optimum)
         .map(|e| {
             let res = e
                 .create(&params)

@@ -5,9 +5,11 @@
 //! Gated behind the `xla` cargo feature: the default build ships only
 //! the stub runtime (see `rust/Cargo.toml`), so a default
 //! `cargo test -q` never opens the engine at all — no stub probing, no
-//! artifacts/ scan. Run with `cargo test --features xla` on a machine
-//! with the vendored `xla` crate; the tests still skip cleanly there if
-//! `make artifacts` has not been run.
+//! artifacts/ scan. `cargo check --features xla --all-targets` (the CI
+//! xla-check job) compiles these tests against the stub surface so they
+//! cannot bit-rot; a real run needs `--features xla-pjrt` on a machine
+//! with the external `xla` crate, and the tests still skip cleanly
+//! there if `make artifacts` has not been run.
 #![cfg(feature = "xla")]
 
 use shotgun::coordinator::{Engine, ShotgunConfig, ShotgunExact};

@@ -3,12 +3,46 @@
 # machine-readable perf trajectory tracked across PRs). Includes the
 # pathwise strong-rules on/off comparison (derived.path_strong_speedup
 # and derived.path_strong_objective_rel_gap). Then replay the serving
-# benchmark (`repro serve`) and refresh BENCH_serving.json (throughput
-# + latency percentiles of the batching predictor).
+# benchmark (`repro serve --compare-unbatched`) and refresh
+# BENCH_serving.json (throughput + latency percentiles of the batching
+# predictor, plus derived.batching_speedup_throughput from the
+# max_batch=1 baseline replay).
 #
-# Usage: scripts/bench.sh [extra cargo bench args]
+# Usage:
+#   scripts/bench.sh [extra cargo bench args]   full run (perf numbers)
+#   scripts/bench.sh --smoke                    tiny sizes, seconds not
+#                                               minutes — the CI
+#                                               bench-smoke job; numbers
+#                                               prove the plumbing, not
+#                                               the perf
+#
+# Both modes finish by validating that every derived.* field in the two
+# BENCH json files is present and finite (scripts/check_bench.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "scripts/bench.sh: cargo not found on PATH." >&2
+  echo "Install the toolchain pinned in rust-toolchain.toml (e.g. via rustup) and re-run." >&2
+  exit 127
+fi
+
+SMOKE=0
+if [[ "${1:-}" == "--smoke" ]]; then
+  SMOKE=1
+  shift
+fi
+
+if [[ "$SMOKE" == "1" ]]; then
+  export SHOTGUN_BENCH_SMOKE=1
+  SERVE_ARGS=(--data imaging:256x512:0.02 --lam 0.1 --solver shotgun
+    --requests 2000 --max-batch 32 --max-wait-us 500 --clients 4)
+  echo "== bench.sh --smoke: tiny sizes, CI plumbing check =="
+else
+  SERVE_ARGS=(--data imaging:2048x4096:0.005 --lam 0.1 --solver shotgun
+    --requests 20000 --max-batch 64 --max-wait-us 2000 --clients 8)
+fi
+
 cargo bench --bench hotpath "$@"
 echo
 echo "--- BENCH_hotpath.json ---"
@@ -16,10 +50,12 @@ cat BENCH_hotpath.json
 
 echo
 echo "== serving replay (BENCH_serving.json) =="
-cargo run --release --bin repro -- serve \
-  --data imaging:2048x4096:0.005 --lam 0.1 --solver shotgun \
-  --requests 20000 --max-batch 64 --max-wait-us 2000 --clients 8 \
-  --bench-out BENCH_serving.json
+cargo run --release --bin repro -- serve "${SERVE_ARGS[@]}" \
+  --compare-unbatched --bench-out BENCH_serving.json
 echo
 echo "--- BENCH_serving.json ---"
 cat BENCH_serving.json
+
+echo
+echo "== derived-field gate (scripts/check_bench.py) =="
+python3 scripts/check_bench.py BENCH_hotpath.json BENCH_serving.json

@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Validate the machine-readable bench artifacts.
+
+The three EXPERIMENTS.md §Perf tables are fed by derived.* fields in
+BENCH_hotpath.json and BENCH_serving.json. This gate fails CI (the
+bench-smoke job, and the tail of scripts/bench.sh) when any required
+derived field is missing, non-numeric, NaN, or non-positive — i.e. when
+the harness silently stopped producing the numbers the tables track.
+
+Usage: python3 scripts/check_bench.py BENCH_hotpath.json BENCH_serving.json
+"""
+
+import json
+import math
+import sys
+
+# per-file required derived fields (speedups must be finite AND > 0;
+# the *_gap fields only need to be finite numbers)
+REQUIRED = {
+    "hotpath": {
+        "positive": ["shrink_speedup_sparse_lasso", "path_strong_speedup"],
+        "finite": ["shrink_objective_rel_gap", "path_strong_objective_rel_gap"],
+    },
+    "serving": {
+        "positive": ["batching_speedup_throughput", "batching_unbatched_rps"],
+        "finite": [],
+    },
+}
+
+
+def check(path):
+    errors = []
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    bench = doc.get("bench")
+    spec = REQUIRED.get(bench)
+    if spec is None:
+        return [f"{path}: unknown bench tag {bench!r}"]
+    derived = doc.get("derived")
+    if not isinstance(derived, dict):
+        return [f"{path}: missing derived section"]
+    for key in spec["positive"] + spec["finite"]:
+        v = derived.get(key)
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            errors.append(f"{path}: derived.{key} missing or non-numeric (got {v!r})")
+            continue
+        if math.isnan(v) or math.isinf(v):
+            errors.append(f"{path}: derived.{key} is not finite ({v})")
+        elif key in spec["positive"] and v <= 0.0:
+            errors.append(f"{path}: derived.{key} must be > 0 (got {v})")
+    # every other derived field must at least be a finite number
+    for key, v in derived.items():
+        if key in spec["positive"] or key in spec["finite"]:
+            continue
+        if not isinstance(v, (int, float)) or math.isnan(v) or math.isinf(v):
+            errors.append(f"{path}: derived.{key} is not a finite number ({v!r})")
+    return errors
+
+
+def main():
+    paths = sys.argv[1:]
+    if not paths:
+        print(__doc__)
+        return 2
+    errors = []
+    for path in paths:
+        errors.extend(check(path))
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print(f"ok: {len(paths)} bench artifact(s), all derived fields finite")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

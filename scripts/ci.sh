@@ -8,6 +8,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "scripts/ci.sh: cargo not found on PATH." >&2
+  echo "Install the toolchain pinned in rust-toolchain.toml, e.g.:" >&2
+  echo "  curl https://sh.rustup.rs -sSf | sh -s -- -y && rustup show" >&2
+  exit 127
+fi
+
 echo "== cargo fmt --check =="
 cargo fmt --all -- --check
 
@@ -16,6 +23,9 @@ cargo clippy --workspace --all-targets -- -D warnings
 
 echo "== cargo doc (deny warnings) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
+
+echo "== feature-gated xla surface (stub + integration tests) =="
+cargo check --features xla --all-targets
 
 if [[ "${1:-}" != "fast" ]]; then
   echo "== tier-1: cargo build --release =="
@@ -29,7 +39,7 @@ echo "== serving subsystem: end-to-end harness + golden fixtures =="
 # also covered by `cargo test -q` above; run named so a serving
 # regression is visible as its own CI step
 cargo test -q --test serving --test golden_fixtures --test registry_capabilities \
-  --test model_edge_cases
+  --test model_edge_cases --test beyond_losses
 
 echo "== doctests: cargo test --doc =="
 cargo test --doc -q

@@ -15,8 +15,15 @@ fixtures.
 Objective conventions (must match rust/src/objective/):
   squared:  F(x) = 0.5 * ||Ax - y||^2 + lam * ||x||_1
   logistic: F(x) = sum_i log(1 + exp(-y_i * a_i.x)) + lam * ||x||_1
+  sqhinge:  F(x) = 0.5 * sum_i max(0, 1 - y_i * a_i.x)^2 + lam * ||x||_1
+  huber:    F(x) = sum_i H_delta(a_i.x - y_i) + lam * ||x||_1, delta = 1
+            (H_delta(r) = r^2/2 inside |r| <= delta, delta*|r| - delta^2/2 beyond)
 
 Run from the repo root:  python3 scripts/make_fixtures.py
+
+The CI fixtures job reruns this script and fails on drift against the
+committed rust/tests/fixtures/*.json, so regeneration must be
+byte-stable (seeded numpy default_rng only).
 """
 
 import json
@@ -95,6 +102,73 @@ def logistic_objective(A, y, lam, x):
     return float(loss) + lam * float(np.abs(x).sum())
 
 
+def solve_sqhinge_cd(A, y, lam, sweeps=400_000, tol=1e-15):
+    """Cyclic CD with the beta = 1 Lipschitz step (1/2-convention squared
+    hinge: the active-set second derivative is exactly 1, so the step is
+    monotone)."""
+    n, d = A.shape
+    col_sq = (A * A).sum(axis=0)
+    x = np.zeros(d)
+    z = A @ x
+    for _ in range(sweeps):
+        max_dx = 0.0
+        for j in range(d):
+            if col_sq[j] == 0.0:
+                continue
+            slack = np.maximum(0.0, 1.0 - y * z)
+            g = -float((y * A[:, j] * slack).sum())
+            h = col_sq[j]
+            xj_new = soft(x[j] - g / h, lam / h)
+            dx = xj_new - x[j]
+            if dx != 0.0:
+                z += dx * A[:, j]
+                x[j] = xj_new
+            max_dx = max(max_dx, abs(dx))
+        if max_dx < tol:
+            break
+    return x
+
+
+def sqhinge_objective(A, y, lam, x):
+    slack = np.maximum(0.0, 1.0 - y * (A @ x))
+    return 0.5 * float((slack * slack).sum()) + lam * float(np.abs(x).sum())
+
+
+HUBER_DELTA = 1.0
+
+
+def solve_huber_cd(A, y, lam, sweeps=400_000, tol=1e-15, delta=HUBER_DELTA):
+    """Cyclic CD with the beta = 1 Lipschitz step (H'' <= 1)."""
+    n, d = A.shape
+    col_sq = (A * A).sum(axis=0)
+    x = np.zeros(d)
+    r = A @ x - y
+    for _ in range(sweeps):
+        max_dx = 0.0
+        for j in range(d):
+            if col_sq[j] == 0.0:
+                continue
+            w = np.clip(r, -delta, delta)
+            g = float((A[:, j] * w).sum())
+            h = col_sq[j]
+            xj_new = soft(x[j] - g / h, lam / h)
+            dx = xj_new - x[j]
+            if dx != 0.0:
+                r += dx * A[:, j]
+                x[j] = xj_new
+            max_dx = max(max_dx, abs(dx))
+        if max_dx < tol:
+            break
+    return x
+
+
+def huber_objective(A, y, lam, x, delta=HUBER_DELTA):
+    r = A @ x - y
+    a = np.abs(r)
+    h = np.where(a <= delta, 0.5 * r * r, delta * (a - 0.5 * delta))
+    return float(h.sum()) + lam * float(np.abs(x).sum())
+
+
 def normalized_design(rng, n, d):
     A = rng.standard_normal((n, d))
     A /= np.linalg.norm(A, axis=0)
@@ -107,10 +181,17 @@ def kkt_violation(A, y, lam, x, loss):
     into the Rust gate)."""
     if loss == "squared":
         g = A.T @ (A @ x - y)
-    else:
+    elif loss == "logistic":
         m = y * (A @ x)
         sig = np.where(m >= 0, np.exp(-m) / (1.0 + np.exp(-m)), 1.0 / (1.0 + np.exp(m)))
         g = -(A.T @ (y * sig))
+    elif loss == "sqhinge":
+        slack = np.maximum(0.0, 1.0 - y * (A @ x))
+        g = -(A.T @ (y * slack))
+    elif loss == "huber":
+        g = A.T @ np.clip(A @ x - y, -HUBER_DELTA, HUBER_DELTA)
+    else:
+        raise ValueError(f"unknown loss {loss!r}")
     viol = 0.0
     for j in range(len(x)):
         if abs(x[j]) > 1e-12:
@@ -133,13 +214,33 @@ def fixture(name, loss, n, d, seed, lam_frac):
         lam = lam_frac * float(np.abs(A.T @ y).max())  # fraction of lambda_max
         x_star = solve_lasso_cd(A, y, lam)
         f_star = lasso_objective(A, y, lam, x_star)
-    else:
+    elif loss == "logistic":
         y = np.sign(A @ x_true + 0.2 * rng.standard_normal(n))
         y[y == 0] = 1.0
         # lambda_max for logistic: max |A^T grad| at x = 0 (grad_i = -y_i/2)
         lam = lam_frac * float(np.abs(A.T @ (0.5 * y)).max())
         x_star = solve_logistic_cd(A, y, lam)
         f_star = logistic_objective(A, y, lam, x_star)
+    elif loss == "sqhinge":
+        y = np.sign(A @ x_true + 0.2 * rng.standard_normal(n))
+        y[y == 0] = 1.0
+        # lambda_max for sqhinge: at x = 0 every slack is 1, g = -A^T y
+        lam = lam_frac * float(np.abs(A.T @ y).max())
+        x_star = solve_sqhinge_cd(A, y, lam)
+        f_star = sqhinge_objective(A, y, lam, x_star)
+    elif loss == "huber":
+        y = A @ x_true + 0.1 * rng.standard_normal(n)
+        # gross outliers so the linear branch of the loss is exercised
+        # at the optimum (otherwise the fixture would just re-test the
+        # squared loss)
+        outliers = rng.choice(n, size=max(1, n // 6), replace=False)
+        y[outliers] += 20.0 * np.sign(rng.standard_normal(len(outliers)) + 0.25)
+        # lambda_max for huber: r = -y at x = 0, g = A^T clip(-y, ±delta)
+        lam = lam_frac * float(np.abs(A.T @ np.clip(-y, -HUBER_DELTA, HUBER_DELTA)).max())
+        x_star = solve_huber_cd(A, y, lam)
+        f_star = huber_objective(A, y, lam, x_star)
+    else:
+        raise ValueError(f"unknown loss {loss!r}")
 
     nnz = int((np.abs(x_star) > 1e-10).sum())
     assert 0 < nnz < d, f"{name}: degenerate optimum (nnz = {nnz})"
@@ -176,6 +277,10 @@ def main():
     fixture("lasso_wide", "squared", 8, 16, seed=2, lam_frac=0.3)
     fixture("logistic_small", "logistic", 16, 6, seed=3, lam_frac=0.2)
     fixture("logistic_wide", "logistic", 10, 12, seed=4, lam_frac=0.3)
+    fixture("sqhinge_small", "sqhinge", 16, 6, seed=5, lam_frac=0.2)
+    fixture("sqhinge_wide", "sqhinge", 10, 12, seed=6, lam_frac=0.3)
+    fixture("huber_small", "huber", 12, 8, seed=7, lam_frac=0.2)
+    fixture("huber_wide", "huber", 8, 16, seed=8, lam_frac=0.3)
 
 
 if __name__ == "__main__":
