@@ -35,6 +35,13 @@ pub enum ShotgunError {
     BadLabel { index: usize, value: f64 },
     /// Lambda is missing, negative, or non-finite.
     InvalidLambda { lam: f64, reason: &'static str },
+    /// A numeric solver parameter is out of its domain (`name` says
+    /// which, `reason` says why) — e.g. a non-positive Huber delta.
+    InvalidParam {
+        name: &'static str,
+        value: f64,
+        reason: &'static str,
+    },
     /// A pathwise request is malformed (non-positive target, zero stages).
     InvalidPath { reason: String },
     /// No solver registered under this name; `known` lists the registry.
@@ -100,6 +107,11 @@ impl fmt::Display for ShotgunError {
             ShotgunError::InvalidLambda { lam, reason } => {
                 write!(f, "invalid lambda {lam}: {reason}")
             }
+            ShotgunError::InvalidParam {
+                name,
+                value,
+                reason,
+            } => write!(f, "invalid {name} = {value}: {reason}"),
             ShotgunError::InvalidPath { reason } => write!(f, "invalid path spec: {reason}"),
             ShotgunError::UnknownSolver { name, known } => write!(
                 f,

@@ -364,6 +364,15 @@ impl<'a> Fit<'a> {
                 });
             }
         }
+        if let Some(delta) = self.params.huber_delta {
+            if !delta.is_finite() || delta <= 0.0 {
+                return Err(ShotgunError::InvalidParam {
+                    name: "huber_delta",
+                    value: delta,
+                    reason: "delta must be finite and positive",
+                });
+            }
+        }
         Ok(())
     }
 
@@ -446,6 +455,12 @@ impl<'a> Fit<'a> {
             stages: spec.stages,
             strong_rules: spec.strong_rules,
         };
+        // Huber constructor honoring the validated params.huber_delta
+        // override (both the fixed and the per-stage path arms use it)
+        let huber = |l: f64| match self.params.huber_delta {
+            Some(delta) => HuberProblem::with_delta(a, y, l, delta, &cache),
+            None => HuberProblem::with_cache(a, y, l, &cache),
+        };
         let (result, lam) = match (&self.lambda, self.loss) {
             (Lambda::Fixed(lam), Loss::Squared) => {
                 let prob = LassoProblem::with_cache(a, y, *lam, &cache);
@@ -460,7 +475,7 @@ impl<'a> Fit<'a> {
                 (runner.run(ProblemRef::SqHinge(&prob), &x0, &self.opts), *lam)
             }
             (Lambda::Fixed(lam), Loss::Huber) => {
-                let prob = HuberProblem::with_cache(a, y, *lam, &cache);
+                let prob = huber(*lam);
                 (runner.run(ProblemRef::Huber(&prob), &x0, &self.opts), *lam)
             }
             (Lambda::Path(spec), Loss::Squared) => {
@@ -498,7 +513,7 @@ impl<'a> Fit<'a> {
                     spec.lam_target,
                     &path_cfg(spec),
                     &self.opts,
-                    |l| HuberProblem::with_cache(a, y, l, &cache),
+                    huber,
                     |obj, x0, o| runner.run(ProblemRef::Huber(obj), x0, o),
                 );
                 (res, spec.lam_target)
@@ -614,6 +629,69 @@ mod tests {
         let prob = HuberProblem::new(&ds.design, &ds.targets, 0.05);
         assert!(report.objective() < prob.objective(&vec![0.0; 10]));
         assert_eq!(report.model.loss, Loss::Huber);
+    }
+
+    #[test]
+    fn huber_delta_flows_through_params() {
+        let ds = synth::sparco_like(40, 20, 0.3, 33);
+        let fit_with = |delta: Option<f64>| {
+            Fit::new(&ds.design, &ds.targets)
+                .loss(Loss::Huber)
+                .lambda(0.05)
+                .solver("shooting")
+                .params(SolverParams {
+                    huber_delta: delta,
+                    ..Default::default()
+                })
+                .run()
+                .unwrap()
+        };
+        // explicitly passing the default delta is the default fit
+        let default = fit_with(None);
+        let explicit = fit_with(Some(crate::HUBER_DELTA));
+        assert_eq!(default.objective().to_bits(), explicit.objective().to_bits());
+        // a much tighter transition width changes the objective — proof
+        // the knob reaches the problem construction
+        let tight = fit_with(Some(1e-3));
+        assert!(
+            (tight.objective() - default.objective()).abs() > 1e-12,
+            "delta override had no effect: {} vs {}",
+            tight.objective(),
+            default.objective()
+        );
+        // and the pathwise arms honor it too
+        let path = Fit::new(&ds.design, &ds.targets)
+            .loss(Loss::Huber)
+            .path(PathSpec::to(0.05))
+            .solver("shooting")
+            .params(SolverParams {
+                huber_delta: Some(1e-3),
+                ..Default::default()
+            })
+            .run()
+            .unwrap();
+        let gap = (path.objective() - tight.objective()).abs() / tight.objective().abs().max(1e-12);
+        assert!(gap < 1e-3, "path vs fixed gap {gap:.2e}");
+    }
+
+    #[test]
+    fn huber_delta_is_validated() {
+        let ds = synth::sparco_like(20, 10, 0.4, 34);
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = Fit::new(&ds.design, &ds.targets)
+                .loss(Loss::Huber)
+                .lambda(0.1)
+                .params(SolverParams {
+                    huber_delta: Some(bad),
+                    ..Default::default()
+                })
+                .run()
+                .unwrap_err();
+            assert!(
+                matches!(err, ShotgunError::InvalidParam { name: "huber_delta", .. }),
+                "delta {bad}: wrong error {err:?}"
+            );
+        }
     }
 
     #[test]

@@ -209,6 +209,10 @@ pub struct Capabilities {
     /// SGD family: `SolverParams::eta` should come from the paper's
     /// constant-rate sweep protocol (`Sgd::sweep`).
     pub rate_swept: bool,
+    /// Honors `SolveOptions::schedule` (and, for the threaded engine,
+    /// `SolveOptions::accumulator`) — the correlation-aware draw policy
+    /// reaches the round loop instead of being silently ignored.
+    pub schedule_aware: bool,
 }
 
 impl Capabilities {
@@ -230,6 +234,7 @@ impl Default for Capabilities {
             fig3_lasso: false,
             fig4_logreg: false,
             rate_swept: false,
+            schedule_aware: false,
         }
     }
 }
@@ -249,6 +254,10 @@ pub struct SolverParams {
     pub sparsity: Option<usize>,
     /// GLMNET's covariance-mode cutoff (see `Glmnet::covariance_max_d`).
     pub covariance_max_d: usize,
+    /// Huber transition width for the Huber loss (`None` = the
+    /// [`HuberProblem`] default). Validated at the `Fit` boundary:
+    /// must be finite and positive.
+    pub huber_delta: Option<f64>,
 }
 
 impl Default for SolverParams {
@@ -258,6 +267,7 @@ impl Default for SolverParams {
             eta: 0.1,
             sparsity: None,
             covariance_max_d: 4096,
+            huber_delta: None,
         }
     }
 }
@@ -501,6 +511,7 @@ fn builtin_entries() -> Vec<RegistryEntry> {
             caps: Capabilities {
                 parallel: true,
                 iter_unit: IterUnit::Round,
+                schedule_aware: true,
                 ..cd
             },
             factory: |p, losses| {
@@ -517,6 +528,7 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 parallel: true,
                 deterministic: false,
                 iter_unit: IterUnit::Round,
+                schedule_aware: true,
                 ..cd
             },
             factory: |p, losses| {
@@ -860,6 +872,15 @@ mod tests {
             Err(ShotgunError::LossUnsupported { loss, .. }) => assert_eq!(loss, Loss::Huber),
             other => panic!("expected LossUnsupported, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn schedule_awareness_tags_the_shotgun_engines() {
+        let reg = SolverRegistry::global();
+        assert!(reg.capabilities("shotgun").unwrap().schedule_aware);
+        assert!(reg.capabilities("shotgun-threaded").unwrap().schedule_aware);
+        assert!(!reg.capabilities("shooting").unwrap().schedule_aware);
+        assert!(!reg.capabilities("sgd").unwrap().schedule_aware);
     }
 
     #[test]

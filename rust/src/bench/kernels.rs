@@ -1,0 +1,309 @@
+//! **Kernels** — A/B harness for the PR-6 hot-path work:
+//!
+//! * SIMD dispatch vs the scalar reference kernels (sparse gather /
+//!   scatter and dense dot). With `--features simd` on AVX2 hardware
+//!   the dispatched side runs the explicit-lane bodies; without the
+//!   feature both sides run the same scalar loop and the ratio sits
+//!   near 1.0 — either way the derived field stays positive, which is
+//!   what the CI gate checks.
+//! * Sharded (bulk-synchronous) vs atomic (CAS) residual accumulation
+//!   in the threaded engine, solve-to-tolerance wall time.
+//! * Clustered (correlation-aware) vs uniform coordinate draws in the
+//!   exact engine, rounds-to-converge on a correlated design.
+//!
+//! `repro bench kernels` (or `scripts/bench.sh`). Results go to stdout,
+//! to `<out_dir>/kernels.{txt,jsonl}`, and — machine-readable, tracked
+//! across PRs and gated by `scripts/check_bench.py` — to
+//! `BENCH_kernels.json` with derived fields `simd_speedup`,
+//! `shard_vs_atomic_speedup`, and `clustered_vs_uniform_epochs`.
+
+use super::{BenchConfig, Report};
+use crate::coordinator::{AccumulatorMode, SchedulePolicy, ShotgunConfig, ShotgunExact, ShotgunThreaded};
+use crate::data::synth;
+use crate::metrics::harness::{bench, bench_for, black_box, BenchResult};
+use crate::objective::LassoProblem;
+use crate::sparsela::{csc, vecops, CscMatrix};
+use crate::solvers::common::SolveOptions;
+use crate::util::json::escape;
+use crate::util::rng::Rng;
+
+pub fn run(cfg: &BenchConfig) {
+    // SHOTGUN_BENCH_SMOKE=1 (scripts/bench.sh --smoke, the CI
+    // bench-smoke job): tiny sizes and second-scale budgets so every
+    // derived.* field the gate checks materializes in seconds.
+    let smoke = std::env::var("SHOTGUN_BENCH_SMOKE").ok().as_deref() == Some("1");
+    let mut report = Report::new("kernels");
+    report.line("=== kernel A/B: simd dispatch | sharded accumulator | clustered schedule ===");
+    if smoke {
+        report.line("(smoke mode: tiny sizes — CI plumbing check, not a perf measurement)");
+    }
+    let secs = |full: f64| if smoke { 0.05 } else { full };
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
+
+    // --- 1. SIMD dispatch vs scalar reference kernels ---------------
+    // The scalar bodies stay compiled under every feature set exactly
+    // so this A/B (and the bit-identity tests) can run them directly.
+    {
+        let (n, d, per_col) = if smoke { (512, 1024, 10) } else { (4096, 8192, 40) };
+        let mut rng = Rng::new(cfg.seed);
+        let mut trip = Vec::new();
+        for j in 0..d {
+            for _ in 0..per_col {
+                trip.push((rng.below(n), j, rng.normal()));
+            }
+        }
+        let m = CscMatrix::from_triplets(n, d, &trip);
+        let r: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+        let mut rj = Rng::new(cfg.seed + 1);
+        let disp_gather = bench_for("col_dot dispatched (sparse gather)", secs(0.4), 64, || {
+            let j = rj.below(d);
+            black_box(m.col_dot(j, &r))
+        });
+        let mut rj = Rng::new(cfg.seed + 1);
+        let scal_gather = bench_for("col_dot scalar reference", secs(0.4), 64, || {
+            let j = rj.below(d);
+            let (idx, val) = m.col(j);
+            black_box(csc::gather_scalar(idx, val, &r))
+        });
+
+        let mut r2 = r.clone();
+        let mut rj = Rng::new(cfg.seed + 2);
+        let disp_scatter = bench_for("col_axpy dispatched (sparse scatter)", secs(0.4), 64, || {
+            let j = rj.below(d);
+            m.col_axpy(j, 1e-12, &mut r2);
+        });
+        let mut r3 = r.clone();
+        let mut rj = Rng::new(cfg.seed + 2);
+        let scal_scatter = bench_for("col_axpy scalar reference", secs(0.4), 64, || {
+            let j = rj.below(d);
+            let (idx, val) = m.col(j);
+            csc::scatter_scalar(idx, val, 1e-12, &mut r3);
+        });
+
+        let nd = if smoke { 1 << 14 } else { 1 << 18 };
+        let a: Vec<f64> = (0..nd).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..nd).map(|_| rng.normal()).collect();
+        let disp_dot = bench_for("dot dispatched (dense)", secs(0.4), 64, || {
+            black_box(vecops::dot(&a, &b))
+        });
+        let scal_dot = bench_for("dot scalar reference", secs(0.4), 64, || {
+            black_box(vecops::dot_scalar(&a, &b))
+        });
+
+        // geometric mean of the per-kernel scalar/dispatch ratios; the
+        // dispatch medians are clamped away from zero so the ratio (and
+        // therefore derived.simd_speedup) is always finite and positive
+        let ratio = |s: &BenchResult, f: &BenchResult| s.median_s / f.median_s.max(1e-12);
+        let r_gather = ratio(&scal_gather, &disp_gather);
+        let r_scatter = ratio(&scal_scatter, &disp_scatter);
+        let r_dot = ratio(&scal_dot, &disp_dot);
+        let simd_speedup = (r_gather * r_scatter * r_dot).powf(1.0 / 3.0);
+        report.line(&format!(
+            "simd: gather {r_gather:.2}x scatter {r_scatter:.2}x dot {r_dot:.2}x -> geomean {simd_speedup:.2}x (feature {}, 1.0x = scalar parity)",
+            if cfg!(feature = "simd") { "on" } else { "off" }
+        ));
+        report.json(format!(
+            "{{\"exp\":\"simd\",\"gather_x\":{r_gather:.4},\"scatter_x\":{r_scatter:.4},\"dot_x\":{r_dot:.4},\"geomean_x\":{simd_speedup:.4},\"feature_on\":{}}}",
+            cfg!(feature = "simd")
+        ));
+        derived.push(("simd_speedup".into(), simd_speedup));
+        results.extend([disp_gather, scal_gather, disp_scatter, scal_scatter, disp_dot, scal_dot]);
+    }
+
+    // --- 2. sharded vs atomic accumulators (threaded engine) --------
+    // Same problem, same options, only `accumulator` differs. The
+    // sharded engine is bit-identical to the exact engine, so the
+    // objective cross-check below is a hard equality-of-optimum gate.
+    {
+        let (n, d) = if smoke { (256, 512) } else { (2048, 4096) };
+        let ds = synth::sparse_imaging(n, d, 0.01, cfg.seed + 3);
+        let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam = 0.2 * prob0.lambda_max();
+        let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+        let base = SolveOptions {
+            max_iters: if smoke { 400_000 } else { 4_000_000 },
+            tol: 1e-6,
+            record_every: u64::MAX,
+            seed: cfg.seed,
+            max_seconds: cfg.max_seconds,
+            ..Default::default()
+        };
+        let solve = |acc: AccumulatorMode| {
+            let opts = SolveOptions { accumulator: acc, ..base.clone() };
+            ShotgunThreaded::new(ShotgunConfig { p: 8, ..Default::default() })
+                .solve_lasso(&prob, &vec![0.0; d], &opts)
+        };
+        let f_atomic = solve(AccumulatorMode::Atomic);
+        let f_sharded = solve(AccumulatorMode::Sharded { threads: 0 });
+        let gap = (f_atomic.objective - f_sharded.objective).abs()
+            / f_sharded.objective.abs().max(1e-12);
+        report.line(&format!(
+            "accumulators: atomic F={:.8} ({} updates) | sharded F={:.8} ({} updates), rel gap {:.2e}",
+            f_atomic.objective, f_atomic.updates, f_sharded.objective, f_sharded.updates, gap
+        ));
+        assert!(gap < 1e-3, "accumulator mode changed the optimum (gap {gap:.3e})");
+        let samples = if smoke { 2 } else { 3 };
+        let atomic = bench(
+            &format!("lasso solve-to-tol atomic  (sparse {n}x{d}, P=8)"),
+            1,
+            samples,
+            || black_box(solve(AccumulatorMode::Atomic).objective),
+        );
+        let sharded = bench(
+            &format!("lasso solve-to-tol sharded (sparse {n}x{d}, P=8)"),
+            1,
+            samples,
+            || black_box(solve(AccumulatorMode::Sharded { threads: 0 }).objective),
+        );
+        let speedup = atomic.median_s / sharded.median_s.max(1e-12);
+        report.line(&format!(
+            "sharded-vs-atomic speedup (solve-to-tol): {speedup:.2}x (>1 = sharding wins on this core count)"
+        ));
+        report.json(format!(
+            "{{\"exp\":\"accumulator\",\"atomic_s\":{:.6},\"sharded_s\":{:.6},\"speedup_x\":{:.4},\"rel_gap\":{:.3e}}}",
+            atomic.median_s, sharded.median_s, speedup, gap
+        ));
+        derived.push(("shard_vs_atomic_speedup".into(), speedup));
+        derived.push(("shard_objective_rel_gap".into(), gap));
+        results.extend([atomic, sharded]);
+    }
+
+    // --- 3. clustered vs uniform schedule (exact engine) ------------
+    // On a correlated design the uniform policy keeps drawing
+    // conflicting coordinate pairs into the same round; the clustered
+    // policy spreads each round across minhash clusters. The measure is
+    // rounds-to-converge (wall-time-free, so it is stable in CI).
+    {
+        let (n, d) = if smoke { (192, 96) } else { (1024, 512) };
+        let ds = synth::correlated(n, d, 0.9, cfg.seed + 4);
+        let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam = 0.1 * prob0.lambda_max();
+        let prob = LassoProblem::new(&ds.design, &ds.targets, lam);
+        let base = SolveOptions {
+            max_iters: 4_000_000,
+            tol: 1e-6,
+            record_every: u64::MAX,
+            seed: cfg.seed,
+            max_seconds: cfg.max_seconds,
+            ..Default::default()
+        };
+        let solve = |policy: SchedulePolicy| {
+            let opts = SolveOptions { schedule: policy, ..base.clone() };
+            ShotgunExact::new(ShotgunConfig { p: 16, ..Default::default() })
+                .solve_lasso(&prob, &vec![0.0; d], &opts)
+        };
+        let uniform = solve(SchedulePolicy::Uniform);
+        let clustered = solve(SchedulePolicy::Clustered { clusters: 0 });
+        let gap = (uniform.objective - clustered.objective).abs()
+            / clustered.objective.abs().max(1e-12);
+        assert!(gap < 1e-3, "schedule policy changed the optimum (gap {gap:.3e})");
+        // rounds-to-converge ratio; >1 means the clustered policy needed
+        // fewer rounds on this correlated instance
+        let epochs = uniform.iters as f64 / (clustered.iters.max(1)) as f64;
+        report.line(&format!(
+            "schedule (correlated {n}x{d}, c=0.9, P=16): uniform {} rounds | clustered {} rounds -> {epochs:.2}x, rel gap {:.2e}",
+            uniform.iters, clustered.iters, gap
+        ));
+        report.json(format!(
+            "{{\"exp\":\"schedule\",\"uniform_rounds\":{},\"clustered_rounds\":{},\"ratio_x\":{:.4},\"rel_gap\":{:.3e}}}",
+            uniform.iters, clustered.iters, epochs, gap
+        ));
+        derived.push(("clustered_vs_uniform_epochs".into(), epochs));
+        derived.push(("schedule_objective_rel_gap".into(), gap));
+    }
+
+    report.line("");
+    for r in &results {
+        report.line(&r.report_line());
+    }
+    let _ = report.save(&cfg.out_dir);
+
+    // machine-readable perf trajectory, tracked across PRs and gated by
+    // scripts/check_bench.py (same shape as BENCH_hotpath.json); lands
+    // at the cwd, which scripts/bench.sh pins to the workspace root
+    let _ = std::fs::write("BENCH_kernels.json", to_bench_json(&results, &derived));
+    println!("\nwrote BENCH_kernels.json ({} entries)", results.len());
+}
+
+/// `BENCH_kernels.json`: one object with per-bench (name, ns/op,
+/// throughput) rows plus the derived headline numbers.
+fn to_bench_json(results: &[BenchResult], derived: &[(String, f64)]) -> String {
+    let mut s = String::from("{\n  \"bench\": \"kernels\",\n  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let ns = r.median_s * 1e9;
+        let ops = if r.median_s > 0.0 { 1.0 / r.median_s } else { 0.0 };
+        s.push_str(&format!(
+            "    {{\"name\": {}, \"ns_per_op\": {:.1}, \"ops_per_s\": {:.3}, \"samples\": {}}}{}\n",
+            escape(&r.name),
+            ns,
+            ops,
+            r.samples,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"derived\": {\n");
+    for (i, (k, v)) in derived.iter().enumerate() {
+        // scientific notation: the rel-gap metrics live around 1e-6..1e-9
+        // and fixed-point would flatten them to zero
+        s.push_str(&format!(
+            "    {}: {:.9e}{}\n",
+            escape(k),
+            v,
+            if i + 1 < derived.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  }\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_json_shape_parses_by_eye() {
+        let results = vec![bench("k", 0, 2, || 1 + 1)];
+        let derived = vec![
+            ("simd_speedup".to_string(), 1.0),
+            ("shard_vs_atomic_speedup".to_string(), 2.5),
+            ("clustered_vs_uniform_epochs".to_string(), 1.3),
+        ];
+        let doc = to_bench_json(&results, &derived);
+        assert!(doc.contains("\"bench\": \"kernels\""));
+        assert!(doc.contains("\"simd_speedup\""));
+        assert!(doc.contains("\"shard_vs_atomic_speedup\""));
+        assert!(doc.contains("\"clustered_vs_uniform_epochs\""));
+        // trailing-comma discipline: last result row and last derived
+        // row end without a comma
+        assert!(!doc.contains(",\n  ]"));
+        assert!(!doc.contains(",\n  }"));
+    }
+
+    #[test]
+    fn scalar_and_dispatched_kernels_agree_here_too() {
+        // belt-and-braces duplicate of the sparsela identity tests at
+        // the bench's own call sites
+        let mut rng = Rng::new(77);
+        let trip: Vec<(usize, usize, f64)> =
+            (0..300).map(|k| (rng.below(64), k % 32, rng.normal())).collect();
+        let m = CscMatrix::from_triplets(64, 32, &trip);
+        let r: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        for j in 0..32 {
+            let (idx, val) = m.col(j);
+            assert_eq!(
+                m.col_dot(j, &r).to_bits(),
+                csc::gather_scalar(idx, val, &r).to_bits()
+            );
+        }
+        let mut r1 = r.clone();
+        let mut r2 = r.clone();
+        for j in 0..32 {
+            let (idx, val) = m.col(j);
+            m.col_axpy(j, 0.37, &mut r1);
+            csc::scatter_scalar(idx, val, 0.37, &mut r2);
+        }
+        assert!(r1.iter().zip(&r2).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+}

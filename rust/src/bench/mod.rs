@@ -12,6 +12,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod headline;
+pub mod kernels;
 pub mod plot;
 
 use crate::objective::LassoProblem;
@@ -122,6 +123,7 @@ pub fn run_all(cfg: &BenchConfig) {
     headline::run(cfg);
     ablations::run(cfg);
     beyond::run(cfg);
+    kernels::run(cfg);
 }
 
 #[cfg(test)]

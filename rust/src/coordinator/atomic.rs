@@ -151,6 +151,75 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_updates_lose_nothing() {
+        // the transform CAS loop (the path `cas_step` rides on) must be
+        // linearizable too: each thread folds in a dyadic delta, so every
+        // intermediate sum is exactly representable and the final value
+        // has ONE correct answer
+        let a = Arc::new(AtomicF64::new(0.0));
+        let threads = 8;
+        let k = 10_000;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let a = Arc::clone(&a);
+                // per-thread delta: a small dyadic rational (multiple of
+                // 2^-4), sign-alternating across threads
+                let delta = (t as f64 + 1.0) * 0.0625 * if t % 2 == 0 { 1.0 } else { -1.0 };
+                std::thread::spawn(move || {
+                    for _ in 0..k {
+                        a.update(|v| v + delta);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let expect: f64 = (0..threads)
+            .map(|t| (t as f64 + 1.0) * 0.0625 * if t % 2 == 0 { 1.0 } else { -1.0 })
+            .sum::<f64>()
+            * k as f64;
+        assert_eq!(a.load().to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    fn concurrent_dyadic_fetch_adds_are_exact() {
+        // vector form of the contention test, with mixed magnitudes: all
+        // deltas are multiples of 2^-3 and the totals stay far below
+        // 2^50, so f64 addition is exact in every interleaving and the
+        // slot sums must land on the nose
+        let v = Arc::new(AtomicVec::from_slice(&[0.0; 8]));
+        let threads = 6;
+        let k = 5_000;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let v = Arc::clone(&v);
+                std::thread::spawn(move || {
+                    for i in 0..k {
+                        let slot = (t + i) % 8;
+                        let delta = ((slot + 1) as f64) * 0.125;
+                        v.fetch_add(slot, delta);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // each (t, i) pair hits slot (t+i)%8 exactly once
+        let mut expect = [0.0f64; 8];
+        for t in 0..threads {
+            for i in 0..k {
+                let slot = (t + i) % 8;
+                expect[slot] += ((slot + 1) as f64) * 0.125;
+            }
+        }
+        for (slot, (got, want)) in v.snapshot().iter().zip(&expect).enumerate() {
+            assert_eq!(got.to_bits(), want.to_bits(), "slot {slot}: {got} vs {want}");
+        }
+    }
+
+    #[test]
     fn special_values_roundtrip() {
         for v in [f64::INFINITY, f64::NEG_INFINITY, 0.0, -0.0, 1e-300] {
             let a = AtomicF64::new(v);

@@ -13,7 +13,7 @@
 //! forwarding shims. The paper's generic-Assumption-2.1 statement of
 //! Alg. 2 maps directly onto the trait.
 
-use super::schedule::ActiveSet;
+use super::schedule::{ActiveSet, FeatureClusters, SchedulePolicy};
 use super::ShotgunConfig;
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
 use crate::solvers::common::{CdSolve, Recorder, SolveOptions, SolveResult};
@@ -91,6 +91,10 @@ impl ShotgunExact {
     /// pruned from the active set on the way through — the scheduler's
     /// free lazy-shrinking pass. Pass `thr < 0` to disable pruning.
     ///
+    /// The P draws come from `policy` ([`SchedulePolicy::draw_round`]):
+    /// uniform reproduces the historical RNG trajectory exactly;
+    /// clustered stratifies the round across the `clusters` sketch.
+    ///
     /// Returns max |dx|; `draws` holds the (deduplicated iff
     /// `!multiset`) draw multiset afterwards for update accounting.
     #[allow(clippy::too_many_arguments)]
@@ -104,12 +108,11 @@ impl ShotgunExact {
         draws: &mut Vec<usize>,
         deltas: &mut Vec<f64>,
         thr: f64,
+        policy: &SchedulePolicy,
+        clusters: Option<&FeatureClusters>,
     ) -> f64 {
-        draws.clear();
         deltas.clear();
-        for _ in 0..self.config.p {
-            draws.push(active.draw(rng));
-        }
+        policy.draw_round(active, clusters, rng, self.config.p, draws);
         draws.sort_unstable();
         if !self.config.multiset {
             draws.dedup();
@@ -173,6 +176,17 @@ impl ShotgunExact {
             f64::NEG_INFINITY
         };
         let mut active = ActiveSet::for_options(d, &opts.shrink);
+        // one O(nnz) correlation sketch per solve when the clustered
+        // policy is on (arXiv 1212.4174); None = uniform paper draws
+        let clusters = if opts.schedule.is_clustered() {
+            Some(FeatureClusters::build(
+                obj.design(),
+                opts.schedule.resolve_k(d),
+                opts.seed,
+            ))
+        } else {
+            None
+        };
         let mut draws = Vec::with_capacity(self.config.p);
         let mut deltas = Vec::with_capacity(self.config.p);
         let mut window_max: f64 = 0.0;
@@ -200,6 +214,8 @@ impl ShotgunExact {
                 &mut draws,
                 &mut deltas,
                 thr,
+                &opts.schedule,
+                clusters.as_ref(),
             );
             rec.updates += draws.len() as u64;
             window_max = window_max.max(max_dx);
@@ -416,6 +432,42 @@ mod tests {
         let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
         let o = SolveOptions {
             max_iters: 2_000,
+            ..opts()
+        };
+        let a = ShotgunExact::new(config(4)).solve_lasso(&prob, &vec![0.0; 80], &o);
+        let b = ShotgunExact::new(config(4)).solve_lasso(&prob, &vec![0.0; 80], &o);
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn clustered_schedule_reaches_same_optimum() {
+        // the draw policy changes the trajectory, never the optimum:
+        // clustered rounds must converge to the uniform objective
+        let ds = synth::sparse_imaging(60, 120, 0.08, 21);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.08);
+        let uni = opts();
+        let clu = SolveOptions {
+            schedule: SchedulePolicy::Clustered { clusters: 0 },
+            ..opts()
+        };
+        let a = ShotgunExact::new(config(8)).solve_lasso(&prob, &vec![0.0; 120], &uni);
+        let b = ShotgunExact::new(config(8)).solve_lasso(&prob, &vec![0.0; 120], &clu);
+        assert!(a.converged && b.converged, "{} / {}", a.solver, b.solver);
+        assert!(
+            (a.objective - b.objective).abs() < 1e-7,
+            "uniform {} vs clustered {}",
+            a.objective,
+            b.objective
+        );
+    }
+
+    #[test]
+    fn clustered_schedule_deterministic_given_seed() {
+        let ds = synth::sparse_imaging(40, 80, 0.1, 7);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let o = SolveOptions {
+            max_iters: 2_000,
+            schedule: SchedulePolicy::Clustered { clusters: 16 },
             ..opts()
         };
         let a = ShotgunExact::new(config(4)).solve_lasso(&prob, &vec![0.0; 80], &o);

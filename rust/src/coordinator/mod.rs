@@ -40,7 +40,10 @@ pub mod threaded;
 pub use cdn_round::ShotgunCdn;
 pub use exact::{RoundOutcome, ShotgunExact};
 pub use pstar::PStar;
-pub use schedule::{ActiveSet, SharedActiveSet, ShrinkConfig};
+pub use schedule::{
+    AccumulatorMode, ActiveSet, FeatureClusters, SchedulePolicy, SharedActiveSet, ShrinkConfig,
+    WorkerDrawState,
+};
 pub use threaded::ShotgunThreaded;
 
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem};

@@ -312,6 +312,261 @@ impl SharedActiveSet {
     }
 }
 
+// ---------------------------------------------------------------------
+// Correlation-aware draw policy (Scherrer et al., arXiv 1212.4174)
+// ---------------------------------------------------------------------
+
+/// How a CD engine draws its P-coordinate parallel update sets, carried
+/// in `SolveOptions` so every engine sees the same knob.
+///
+/// [`Uniform`](SchedulePolicy::Uniform) is the paper's Shotgun
+/// (uniform with replacement — Theorem 3.2's analysis). `Clustered`
+/// implements the feature-clustering idea of arXiv 1212.4174: two
+/// columns that co-occur on the same rows interfere (their `A_i^T A_j`
+/// term is what shrinks P*), so a round that draws its P coordinates
+/// from P *different* clusters of correlated features sees less
+/// interference than a uniform draw — the effective spectral radius of
+/// the drawn submatrix drops and rounds-to-convergence falls on
+/// correlated designs (`repro bench kernels` A/Bs exactly this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SchedulePolicy {
+    /// Uniform i.i.d. draws from the active set (paper behavior).
+    #[default]
+    Uniform,
+    /// Stratify each round's P draws across feature clusters built from
+    /// a min-hash sketch of the CSC column structure
+    /// ([`FeatureClusters::build`]). `clusters = 0` = auto
+    /// (`sqrt(d)` clamped to `[2, 256]`).
+    Clustered {
+        /// Number of clusters K (0 = auto).
+        clusters: usize,
+    },
+}
+
+impl SchedulePolicy {
+    /// Does this policy need a [`FeatureClusters`] sketch?
+    #[inline]
+    pub fn is_clustered(&self) -> bool {
+        matches!(self, SchedulePolicy::Clustered { .. })
+    }
+
+    /// Effective cluster count for dimension `d` (resolves the 0 = auto
+    /// convention; meaningless for `Uniform`).
+    pub fn resolve_k(&self, d: usize) -> usize {
+        match *self {
+            SchedulePolicy::Uniform => 1,
+            SchedulePolicy::Clustered { clusters: 0 } => {
+                ((d as f64).sqrt() as usize).clamp(2, 256)
+            }
+            SchedulePolicy::Clustered { clusters } => clusters.max(1),
+        }
+    }
+
+    /// Fill `draws` with one synchronous round's `p` coordinates.
+    ///
+    /// `Uniform` reproduces the historical engine behavior RNG-call for
+    /// RNG-call (`p` times [`ActiveSet::draw`]), so existing seeds keep
+    /// their exact trajectories. `Clustered` rejection-samples each slot
+    /// (up to 3 retries) away from clusters already used this round —
+    /// best-effort stratification, never an infinite loop when the
+    /// active set collapses into few clusters.
+    pub fn draw_round(
+        &self,
+        active: &ActiveSet,
+        clusters: Option<&FeatureClusters>,
+        rng: &mut Rng,
+        p: usize,
+        draws: &mut Vec<usize>,
+    ) {
+        draws.clear();
+        if active.is_empty() {
+            return;
+        }
+        match (self, clusters) {
+            (SchedulePolicy::Clustered { .. }, Some(cl)) => {
+                for _ in 0..p {
+                    let mut j = active.draw(rng);
+                    for _ in 0..3 {
+                        let c = cl.cluster_of(j);
+                        if !draws.iter().any(|&q| cl.cluster_of(q) == c) {
+                            break;
+                        }
+                        j = active.draw(rng);
+                    }
+                    draws.push(j);
+                }
+            }
+            _ => {
+                for _ in 0..p {
+                    draws.push(active.draw(rng));
+                }
+            }
+        }
+    }
+}
+
+/// How `ShotgunThreaded` maintains the shared `Ax` cache, carried in
+/// `SolveOptions::accumulator`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AccumulatorMode {
+    /// One shared [`AtomicVec`](crate::coordinator::atomic::AtomicVec):
+    /// every worker CAS-loops `fetch_add` on the same cache lines
+    /// (the paper's lock-free Shotgun; fastest at low contention).
+    #[default]
+    Atomic,
+    /// Bulk-synchronous sharding: each worker computes its slice of a
+    /// round's updates against an immutable snapshot into a private
+    /// buffer; the coordinator merges the shards at the round boundary
+    /// in canonical coordinate order. No CAS traffic at all, at the
+    /// cost of a barrier + merge per round — the §4.3 memory-wall
+    /// trade the `repro bench kernels` harness measures head-to-head.
+    /// Merged results are bit-equal for any worker count (same seed),
+    /// unlike the benignly-racing atomic path.
+    Sharded {
+        /// Worker thread count (0 = one thread per P).
+        threads: usize,
+    },
+}
+
+/// SplitMix64 finalizer — the min-hash for [`FeatureClusters`].
+#[inline]
+fn mix(seed: u64, v: u64) -> u64 {
+    let mut z = v
+        .wrapping_add(seed)
+        .wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// A cheap feature-correlation sketch over the design's column
+/// structure: cluster id = (min-hash of the column's row-index set)
+/// mod K. Columns that share rows — the co-occurrence that creates the
+/// `A_i^T A_j` interference terms of Theorem 3.2 — are likely to share
+/// their minimizing row under a random hash, hence land in the same
+/// cluster; disjoint columns collide only by chance (~1/K). One O(nnz)
+/// pass, no pairwise correlation matrix.
+///
+/// Dense designs have no structural sparsity to sketch, so columns are
+/// striped round-robin (`j mod K`) — stratification then degenerates to
+/// "spread draws across the index range", which is the right neutral
+/// behavior.
+#[derive(Clone, Debug)]
+pub struct FeatureClusters {
+    k: usize,
+    cluster_of: Vec<u32>,
+}
+
+impl FeatureClusters {
+    /// Build the sketch for `a` with `k` clusters (`k >= 1` enforced).
+    /// Deterministic in (`a`, `k`, `seed`).
+    pub fn build(a: &crate::sparsela::Design, k: usize, seed: u64) -> Self {
+        let k = k.max(1);
+        let d = a.d();
+        let mut cluster_of = Vec::with_capacity(d);
+        match a {
+            crate::sparsela::Design::Sparse(m) => {
+                for j in 0..d {
+                    let (rows, _) = m.col(j);
+                    let h = rows
+                        .iter()
+                        .map(|&i| mix(seed, i as u64))
+                        .min()
+                        // empty column: harmless arbitrary stripe
+                        .unwrap_or_else(|| mix(seed, (d + j) as u64));
+                    cluster_of.push((h % k as u64) as u32);
+                }
+            }
+            crate::sparsela::Design::Dense(_) => {
+                for j in 0..d {
+                    cluster_of.push((j % k) as u32);
+                }
+            }
+        }
+        FeatureClusters { k, cluster_of }
+    }
+
+    /// Number of clusters K.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Cluster id of coordinate `j` (in `[0, K)`).
+    #[inline]
+    pub fn cluster_of(&self, j: usize) -> usize {
+        self.cluster_of[j] as usize
+    }
+}
+
+/// Per-worker draw state for the *asynchronous* threaded engine, where
+/// there is no round boundary to stratify against: each worker instead
+/// rejection-samples away from the clusters of its own last few draws
+/// (a ring of up to `min(p-1, 8)`), approximating "the P in-flight
+/// updates span P clusters" without any cross-thread coordination.
+///
+/// With the `Uniform` policy the ring is empty and `draw` performs
+/// exactly the historical `act[rng.below(act.len())]` — RNG-call
+/// compatible with pre-policy builds.
+#[derive(Clone, Debug)]
+pub struct WorkerDrawState {
+    recent: [u32; 8],
+    cap: usize,
+    len: usize,
+    pos: usize,
+}
+
+impl WorkerDrawState {
+    /// Ring capacity `min(p - 1, 8)` for clustered policies, 0 (inert)
+    /// for `Uniform`.
+    pub fn new(policy: &SchedulePolicy, p: usize) -> Self {
+        let cap = if policy.is_clustered() {
+            p.saturating_sub(1).min(8)
+        } else {
+            0
+        };
+        WorkerDrawState {
+            recent: [0; 8],
+            cap,
+            len: 0,
+            pos: 0,
+        }
+    }
+
+    /// Draw one coordinate from the active snapshot `act`.
+    pub fn draw(
+        &mut self,
+        act: &[u32],
+        clusters: Option<&FeatureClusters>,
+        rng: &mut Rng,
+    ) -> usize {
+        let mut j = act[rng.below(act.len())] as usize;
+        if self.cap == 0 {
+            return j;
+        }
+        let Some(cl) = clusters else {
+            return j;
+        };
+        for _ in 0..3 {
+            let c = cl.cluster_of(j) as u32;
+            if !self.recent[..self.len].contains(&c) {
+                break;
+            }
+            j = act[rng.below(act.len())] as usize;
+        }
+        // remember the accepted draw's cluster
+        let c = cl.cluster_of(j) as u32;
+        if self.len < self.cap {
+            self.recent[self.len] = c;
+            self.len += 1;
+        } else {
+            self.recent[self.pos] = c;
+            self.pos = (self.pos + 1) % self.cap;
+        }
+        j
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -476,5 +731,146 @@ mod tests {
         assert!(ActiveSet::for_options(5, &empty).is_full());
         let (_, shared) = SharedActiveSet::for_options(5, &screened).snapshot();
         assert_eq!(&*shared, &[2, 3]);
+    }
+
+    /// Two-block design: columns within a block share the exact same
+    /// row-support, blocks are disjoint.
+    fn two_block_design(n: usize, d: usize) -> crate::sparsela::Design {
+        let half = d / 2;
+        let mut trip = Vec::new();
+        for j in 0..d {
+            let rows: std::ops::Range<usize> = if j < half { 0..n / 2 } else { n / 2..n };
+            for i in rows {
+                trip.push((i, j, 1.0 + (i + j) as f64 * 0.01));
+            }
+        }
+        crate::sparsela::Design::Sparse(crate::sparsela::CscMatrix::from_triplets(n, d, &trip))
+    }
+
+    #[test]
+    fn clusters_group_identical_support() {
+        let a = two_block_design(16, 12);
+        let cl = FeatureClusters::build(&a, 4, 42);
+        assert_eq!(cl.k(), 4);
+        // identical row support => identical min-hash => same cluster
+        for j in 1..6 {
+            assert_eq!(cl.cluster_of(j), cl.cluster_of(0), "block A column {j}");
+            assert_eq!(cl.cluster_of(6 + j), cl.cluster_of(6), "block B column {j}");
+        }
+        for j in 0..12 {
+            assert!(cl.cluster_of(j) < 4);
+        }
+    }
+
+    #[test]
+    fn clusters_deterministic_and_seed_sensitive() {
+        let a = two_block_design(16, 12);
+        let c1 = FeatureClusters::build(&a, 8, 7);
+        let c2 = FeatureClusters::build(&a, 8, 7);
+        assert_eq!(c1.cluster_of, c2.cluster_of);
+        // dense fallback stripes round-robin
+        let dm = crate::sparsela::DenseMatrix::zeros(4, 10);
+        let cd = FeatureClusters::build(&crate::sparsela::Design::Dense(dm), 3, 0);
+        for j in 0..10 {
+            assert_eq!(cd.cluster_of(j), j % 3);
+        }
+    }
+
+    #[test]
+    fn resolve_k_auto_and_explicit() {
+        assert_eq!(SchedulePolicy::Uniform.resolve_k(100), 1);
+        assert_eq!(SchedulePolicy::Clustered { clusters: 7 }.resolve_k(100), 7);
+        let auto = SchedulePolicy::Clustered { clusters: 0 }.resolve_k(10_000);
+        assert_eq!(auto, 100);
+        assert_eq!(SchedulePolicy::Clustered { clusters: 0 }.resolve_k(2), 2);
+    }
+
+    /// Uniform draw_round must consume the RNG exactly like the
+    /// pre-policy engines: p plain ActiveSet::draw calls.
+    #[test]
+    fn uniform_round_is_rng_compatible() {
+        let set = ActiveSet::full(50);
+        let mut r1 = Rng::new(99);
+        let mut r2 = Rng::new(99);
+        let mut draws = Vec::new();
+        SchedulePolicy::Uniform.draw_round(&set, None, &mut r1, 8, &mut draws);
+        let expect: Vec<usize> = (0..8).map(|_| set.draw(&mut r2)).collect();
+        assert_eq!(draws, expect);
+    }
+
+    #[test]
+    fn clustered_round_spreads_across_blocks() {
+        let a = two_block_design(32, 16);
+        let cl = FeatureClusters::build(&a, 8, 3);
+        let set = ActiveSet::full(16);
+        let policy = SchedulePolicy::Clustered { clusters: 8 };
+        let mut rng = Rng::new(5);
+        let mut draws = Vec::new();
+        // the two blocks may hash to the same cluster (~1/8 chance at
+        // this seed); stratification is only observable when they don't
+        if cl.cluster_of(0) == cl.cluster_of(15) {
+            return;
+        }
+        let (mut cross, mut rounds) = (0, 0);
+        for _ in 0..300 {
+            policy.draw_round(&set, Some(&cl), &mut rng, 2, &mut draws);
+            assert_eq!(draws.len(), 2);
+            assert!(draws.iter().all(|&j| j < 16));
+            rounds += 1;
+            if (draws[0] < 8) != (draws[1] < 8) {
+                cross += 1;
+            }
+        }
+        // uniform would cross blocks ~50% of rounds; rejection sampling
+        // (3 retries) fails only ~ (1/2)^4 of the time
+        assert!(
+            cross * 4 > rounds * 3,
+            "clustered rounds crossed blocks only {cross}/{rounds}"
+        );
+    }
+
+    #[test]
+    fn worker_draw_state_uniform_is_rng_compatible() {
+        let act: Vec<u32> = (0..40).collect();
+        let mut st = WorkerDrawState::new(&SchedulePolicy::Uniform, 8);
+        let mut r1 = Rng::new(123);
+        let mut r2 = Rng::new(123);
+        for _ in 0..50 {
+            let j = st.draw(&act, None, &mut r1);
+            assert_eq!(j, act[r2.below(act.len())] as usize);
+        }
+    }
+
+    #[test]
+    fn worker_draw_state_avoids_recent_clusters() {
+        let a = two_block_design(32, 16);
+        let cl = FeatureClusters::build(&a, 8, 3);
+        if cl.cluster_of(0) == cl.cluster_of(15) {
+            return; // hash collision between blocks; nothing to observe
+        }
+        let act: Vec<u32> = (0..16).collect();
+        let policy = SchedulePolicy::Clustered { clusters: 8 };
+        let mut st = WorkerDrawState::new(&policy, 2);
+        let mut rng = Rng::new(17);
+        let (mut alternations, mut total) = (0, 0);
+        let mut prev = None;
+        for _ in 0..600 {
+            let j = st.draw(&act, Some(&cl), &mut rng);
+            assert!(j < 16);
+            let block = j < 8;
+            if let Some(pb) = prev {
+                total += 1;
+                if pb != block {
+                    alternations += 1;
+                }
+            }
+            prev = Some(block);
+        }
+        // with a ring of 1 recent cluster the walk should alternate
+        // blocks far more often than the uniform 50%
+        assert!(
+            alternations * 4 > total * 3,
+            "worker draws alternated blocks only {alternations}/{total}"
+        );
     }
 }

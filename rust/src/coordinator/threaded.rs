@@ -29,12 +29,15 @@
 //! from the calibrated memory-wall model in [`crate::simcore`]).
 
 use super::atomic::AtomicVec;
-use super::schedule::SharedActiveSet;
-use super::ShotgunConfig;
+use super::schedule::{
+    AccumulatorMode, ActiveSet, FeatureClusters, SharedActiveSet, WorkerDrawState,
+};
+use super::{RoundOutcome, ShotgunConfig};
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
 use crate::solvers::common::{CdSolve, Recorder, SolveOptions, SolveResult};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex, RwLock};
 
 pub struct ShotgunThreaded {
     pub config: ShotgunConfig,
@@ -78,6 +81,13 @@ fn cas_step<O: CdObjective>(obj: &O, x: &AtomicVec, j: usize, g: f64) -> f64 {
 pub struct DriftCache {
     cache: Vec<f64>,
     x_prev: Vec<f64>,
+    /// `||A_j||` per column, hoisted out of [`advance`](Self::advance):
+    /// the drift bound needs the norm (not its square) for every changed
+    /// coordinate on every monitor wake, and `col_norm_sq(j)` is already
+    /// the `ProblemCache::col_sq`-backed O(1) lookup — one sqrt pass at
+    /// construction removes the per-wake sqrt from the loop and keeps
+    /// the shared cache the single source of column curvature.
+    col_nrm: Vec<f64>,
     drift: f64,
     limit: f64,
 }
@@ -87,6 +97,7 @@ impl DriftCache {
         DriftCache {
             cache: obj.init_cache(x0),
             x_prev: x0.to_vec(),
+            col_nrm: (0..obj.d()).map(|j| obj.col_norm_sq(j).sqrt()).collect(),
             drift: 0.0,
             limit,
         }
@@ -114,7 +125,7 @@ impl DriftCache {
             let dx = xj - *prev;
             if dx != 0.0 {
                 obj.design().col_axpy(j, dx, &mut self.cache);
-                self.drift += dx.abs() * obj.col_norm_sq(j).sqrt();
+                self.drift += dx.abs() * self.col_nrm[j];
                 *prev = xj;
             }
         }
@@ -135,6 +146,73 @@ impl DriftCache {
     }
 }
 
+/// The round snapshot shared by the sharded engine's threads: workers
+/// read `(x, cache, uniq)` under the read lock during the compute phase;
+/// only the coordinator writes (prep and merge happen while every worker
+/// is parked at a barrier, so the write lock is never contended).
+struct ShardRound {
+    x: Vec<f64>,
+    cache: Vec<f64>,
+    /// This round's unique draws as `(j, multiplicity)`, sorted by `j` —
+    /// the canonical order the chunks partition and the merge follows.
+    uniq: Vec<(u32, u32)>,
+    stop: bool,
+}
+
+/// One worker's private shard buffers, drained by the coordinator at the
+/// round boundary: the `(dx, g)` Jacobi step per owned unique coordinate
+/// (in chunk order) and the `(row, delta)` cache-update list.
+#[derive(Default)]
+struct ShardOut {
+    steps: Vec<(f64, f64)>,
+    scatter: Vec<(u32, f64)>,
+}
+
+/// Contiguous chunk `[lo, hi)` of a `len`-element round owned by worker
+/// `w` of `workers` — the standard balanced split.
+fn shard_chunk(len: usize, w: usize, workers: usize) -> (usize, usize) {
+    (w * len / workers, (w + 1) * len / workers)
+}
+
+/// The sharded compute phase for one worker: Jacobi steps for its chunk
+/// of the round's unique coordinates, all against the shared `(x, cache)`
+/// snapshot, plus the cache deltas its effective steps will scatter. The
+/// deltas are `eff * A_ij` exactly as `col_axpy` would compute them (the
+/// dense walk deliberately keeps explicit zeros — adding `eff * 0.0` can
+/// flip a `-0.0` cache entry, and bit-identity with the exact engine is
+/// the contract here).
+fn shard_compute<O: CdObjective>(
+    obj: &O,
+    sh: &ShardRound,
+    w: usize,
+    workers: usize,
+    out: &mut ShardOut,
+) {
+    let (lo, hi) = shard_chunk(sh.uniq.len(), w, workers);
+    for &(j, count) in &sh.uniq[lo..hi] {
+        let j = j as usize;
+        let g = obj.grad_j(j, &sh.cache);
+        let dx = obj.cd_step_from_g(j, sh.x[j], g);
+        out.steps.push((dx, g));
+        let eff = count as f64 * dx;
+        if eff != 0.0 {
+            match obj.design() {
+                crate::sparsela::Design::Sparse(m) => {
+                    let (idx, val) = m.col(j);
+                    for (&i, &v) in idx.iter().zip(val) {
+                        out.scatter.push((i, eff * v));
+                    }
+                }
+                crate::sparsela::Design::Dense(m) => {
+                    for (i, &v) in m.col(j).iter().enumerate() {
+                        out.scatter.push((i as u32, eff * v));
+                    }
+                }
+            }
+        }
+    }
+}
+
 impl ShotgunThreaded {
     pub fn new(config: ShotgunConfig) -> Self {
         assert!(config.p >= 1);
@@ -142,13 +220,19 @@ impl ShotgunThreaded {
     }
 
     /// The single solve loop, generic over the objective: asynchronous
-    /// CAS workers + the shrinking/convergence monitor.
+    /// CAS workers + the shrinking/convergence monitor
+    /// ([`AccumulatorMode::Atomic`]), or the bulk-synchronous sharded
+    /// engine ([`AccumulatorMode::Sharded`]) when
+    /// `opts.accumulator` selects it.
     pub fn solve_cd<O: CdObjective + Sync>(
         &mut self,
         obj: &O,
         x0: &[f64],
         opts: &SolveOptions,
     ) -> SolveResult {
+        if let AccumulatorMode::Sharded { threads } = opts.accumulator {
+            return self.solve_cd_sharded(obj, x0, opts, threads);
+        }
         let d = obj.d();
         let p = self.config.p;
         let x = AtomicVec::from_slice(x0);
@@ -171,6 +255,18 @@ impl ShotgunThreaded {
         let worker_budgets = split_budget(budget, p);
         let mut converged = false;
 
+        // correlation sketch for the clustered draw policy, shared
+        // read-only across workers (None = uniform paper draws)
+        let clusters = if opts.schedule.is_clustered() {
+            Some(FeatureClusters::build(
+                obj.design(),
+                opts.schedule.resolve_k(d),
+                opts.seed,
+            ))
+        } else {
+            None
+        };
+
         std::thread::scope(|scope| {
             for (w, &my_budget) in worker_budgets.iter().enumerate() {
                 let x = &x;
@@ -179,7 +275,9 @@ impl ShotgunThreaded {
                 let total_updates = &total_updates;
                 let window_max_bits = &window_max_bits;
                 let shared = &shared;
+                let clusters = &clusters;
                 let mut rng = Rng::new(opts.seed.wrapping_add(w as u64 * 0x9E37));
+                let mut draw_state = WorkerDrawState::new(&opts.schedule, p);
                 scope.spawn(move || {
                     let (mut epoch, mut act) = shared.snapshot();
                     for _ in 0..my_budget {
@@ -193,7 +291,11 @@ impl ShotgunThreaded {
                             epoch = s.0;
                             act = s.1;
                         }
-                        let j = act[rng.below(act.len())] as usize;
+                        // uniform: the historical act[rng.below(len)]
+                        // draw; clustered: rejection-sample away from
+                        // this worker's own recent clusters (there is no
+                        // round boundary to stratify against)
+                        let j = draw_state.draw(&act, clusters.as_ref(), &mut rng);
                         // fused update: fetch the column once, gather the
                         // gradient-weighted dot from the live cache,
                         // CAS-update x_j, then scatter the same
@@ -337,6 +439,217 @@ impl ShotgunThreaded {
         };
         let mut res = rec.finish(base, xs, f, iters, converged);
         res.solver = format!("{base}-p{}", self.config.p);
+        res
+    }
+
+    /// The bulk-synchronous sharded engine ([`AccumulatorMode::Sharded`]):
+    /// no CAS traffic on the shared cache — each round the coordinator
+    /// publishes the `(x, cache)` snapshot plus the round's unique draws
+    /// behind an `RwLock`, workers compute disjoint chunks into private
+    /// shard buffers (zero write sharing), and the coordinator merges the
+    /// shards in canonical coordinate order at the round boundary.
+    ///
+    /// Because the draws, the Jacobi snapshot semantics, the merge order,
+    /// and the convergence cadence all mirror [`super::ShotgunExact`]'s
+    /// loop exactly, the returned iterate is BIT-IDENTICAL to the exact
+    /// engine's for any worker count — determinism the asynchronous CAS
+    /// path cannot offer (`sharded_bit_identical_to_exact_engine`,
+    /// `sharded_deterministic_across_worker_counts`). `threads == 0`
+    /// sizes the pool at `P`.
+    fn solve_cd_sharded<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+        threads: usize,
+    ) -> SolveResult {
+        let d = obj.d();
+        let p = self.config.p;
+        let workers = if threads == 0 { p } else { threads }.max(1);
+        let cache0 = obj.init_cache(x0);
+        let f0 = obj.value(&cache0, x0);
+        let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
+        let mut rec = Recorder::new(opts);
+        rec.record(0, f0, x0, 0.0, true);
+
+        let thr = if opts.shrink.enabled {
+            opts.shrink.threshold(obj.lam())
+        } else {
+            f64::NEG_INFINITY
+        };
+        let mut active = ActiveSet::for_options(d, &opts.shrink);
+        let clusters = if opts.schedule.is_clustered() {
+            Some(FeatureClusters::build(
+                obj.design(),
+                opts.schedule.resolve_k(d),
+                opts.seed,
+            ))
+        } else {
+            None
+        };
+        let mut rng = Rng::new(opts.seed);
+        let mut draws = Vec::with_capacity(p);
+        let mut window_max: f64 = 0.0;
+        let mut outcome = RoundOutcome::Progress;
+        let mut round = 0u64;
+        let rounds_per_window = (d as u64 / p as u64).max(1);
+
+        let shared = RwLock::new(ShardRound {
+            x: x0.to_vec(),
+            cache: cache0,
+            uniq: Vec::with_capacity(p),
+            stop: false,
+        });
+        let outs: Vec<Mutex<ShardOut>> = (0..workers)
+            .map(|_| Mutex::new(ShardOut::default()))
+            .collect();
+        let barrier = Barrier::new(workers);
+
+        std::thread::scope(|scope| {
+            // workers 1..W; the coordinator (this thread) is worker 0
+            for w in 1..workers {
+                let shared = &shared;
+                let outs = &outs;
+                let barrier = &barrier;
+                scope.spawn(move || loop {
+                    barrier.wait(); // A: round published (or stop)
+                    {
+                        let sh = shared.read().unwrap();
+                        if sh.stop {
+                            return;
+                        }
+                        let mut out = outs[w].lock().unwrap();
+                        shard_compute(obj, &sh, w, workers, &mut out);
+                    }
+                    barrier.wait(); // B: shard ready for the merge
+                });
+            }
+
+            loop {
+                // ---- prep: decide stop, or publish the next round ----
+                // (workers are parked at barrier A, so the write lock is
+                // free; it is never held across a barrier wait)
+                let stopping = {
+                    let mut sh = shared.write().unwrap();
+                    let mut stop =
+                        outcome != RoundOutcome::Progress || rec.out_of_budget(round);
+                    if !stop && active.is_empty() {
+                        // everything pruned: the full KKT recheck either
+                        // certifies the optimum or refills the set
+                        if active
+                            .recheck_full(opts.tol, |k| obj.cd_step(k, sh.x[k], &sh.cache))
+                            < opts.tol
+                        {
+                            outcome = RoundOutcome::Converged;
+                            rec.record(round, obj.value(&sh.cache, &sh.x), &sh.x, 0.0, true);
+                            stop = true;
+                        }
+                    }
+                    if !stop {
+                        round += 1;
+                        opts.schedule
+                            .draw_round(&active, clusters.as_ref(), &mut rng, p, &mut draws);
+                        draws.sort_unstable();
+                        if !self.config.multiset {
+                            draws.dedup();
+                        }
+                        rec.updates += draws.len() as u64;
+                        sh.uniq.clear();
+                        let mut k = 0;
+                        while k < draws.len() {
+                            let j = draws[k];
+                            let mut count = 0u32;
+                            while k < draws.len() && draws[k] == j {
+                                k += 1;
+                                count += 1;
+                            }
+                            sh.uniq.push((j as u32, count));
+                        }
+                    }
+                    sh.stop = stop;
+                    stop
+                };
+                barrier.wait(); // A
+                if stopping {
+                    break; // workers saw sh.stop and returned at A too
+                }
+                {
+                    let sh = shared.read().unwrap();
+                    let mut out = outs[0].lock().unwrap();
+                    shard_compute(obj, &sh, 0, workers, &mut out);
+                }
+                barrier.wait(); // B
+
+                // ---- merge: drain shards in canonical uniq order ----
+                let mut sh = shared.write().unwrap();
+                let mut max_dx: f64 = 0.0;
+                let mut u = 0usize;
+                for out_m in outs.iter() {
+                    let mut out = out_m.lock().unwrap();
+                    for &(dx, g) in out.steps.iter() {
+                        let (j, count) = sh.uniq[u];
+                        u += 1;
+                        let j = j as usize;
+                        max_dx = max_dx.max(dx.abs());
+                        if dx == 0.0 && sh.x[j] == 0.0 && g.abs() < thr {
+                            active.prune(j);
+                        }
+                        let eff = count as f64 * dx;
+                        if eff != 0.0 {
+                            sh.x[j] += eff;
+                        }
+                    }
+                    for &(i, dv) in out.scatter.iter() {
+                        sh.cache[i as usize] += dv;
+                    }
+                    out.steps.clear();
+                    out.scatter.clear();
+                }
+                debug_assert_eq!(u, sh.uniq.len(), "shards must partition the round");
+                window_max = window_max.max(max_dx);
+                // convergence / divergence on the exact engine's cadence
+                if round % rounds_per_window == 0 {
+                    let f = obj.value(&sh.cache, &sh.x);
+                    if !f.is_finite() || f > f_diverge {
+                        outcome = RoundOutcome::Diverged;
+                        rec.record(round, f, &sh.x, 0.0, true);
+                    } else if window_max < opts.tol
+                        && active.recheck_full(opts.tol, |k| obj.cd_step(k, sh.x[k], &sh.cache))
+                            < opts.tol
+                    {
+                        outcome = RoundOutcome::Converged;
+                        rec.record(round, f, &sh.x, 0.0, true);
+                    } else {
+                        window_max = 0.0;
+                    }
+                }
+                if outcome == RoundOutcome::Progress && round % opts.record_every == 0 {
+                    let aux = if opts.aux_every_record {
+                        obj.aux_metric(&sh.x)
+                    } else {
+                        0.0
+                    };
+                    rec.record(round, obj.value(&sh.cache, &sh.x), &sh.x, aux, true);
+                }
+            }
+        });
+
+        let sh = shared.into_inner().unwrap();
+        // the cache is exactly maintained (merge order is canonical), so
+        // the reported objective comes from it like the exact engine's
+        let f = obj.value(&sh.cache, &sh.x);
+        rec.record(round, f, &sh.x, 0.0, true);
+        let base = match obj.loss() {
+            Loss::Squared => "shotgun-threaded",
+            Loss::Logistic => "shotgun-threaded-logistic",
+            Loss::SqHinge => "shotgun-threaded-sqhinge",
+            Loss::Huber => "shotgun-threaded-huber",
+        };
+        let mut res = rec.finish(base, sh.x, f, round, outcome == RoundOutcome::Converged);
+        res.solver = format!("{base}-p{p}-sharded");
+        if outcome == RoundOutcome::Diverged {
+            res.solver.push_str("-diverged");
+        }
         res
     }
 
@@ -521,6 +834,126 @@ mod tests {
             "threaded {} vs exact {}",
             thr.objective,
             exact.objective
+        );
+    }
+
+    #[test]
+    fn sharded_bit_identical_to_exact_engine() {
+        // the sharded engine IS the exact trajectory (same draws, same
+        // snapshot semantics, same canonical merge order) — not merely
+        // the same optimum
+        let ds = synth::sparse_imaging(60, 120, 0.08, 3);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let opts = SolveOptions {
+            max_iters: 300_000,
+            tol: 1e-8,
+            ..Default::default()
+        };
+        let sh_opts = SolveOptions {
+            accumulator: AccumulatorMode::Sharded { threads: 3 },
+            ..opts.clone()
+        };
+        let ex =
+            crate::coordinator::ShotgunExact::new(config(4)).solve_lasso(&prob, &vec![0.0; 120], &opts);
+        let sh = ShotgunThreaded::new(config(4)).solve_lasso(&prob, &vec![0.0; 120], &sh_opts);
+        assert!(sh.solver.ends_with("-sharded"), "{}", sh.solver);
+        assert_eq!(ex.iters, sh.iters, "round counts must match");
+        assert_eq!(ex.updates, sh.updates);
+        assert_eq!(ex.converged, sh.converged);
+        for (j, (a, b)) in ex.x.iter().zip(&sh.x).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "x[{j}]: exact {a} vs sharded {b}");
+        }
+        assert_eq!(ex.objective.to_bits(), sh.objective.to_bits());
+    }
+
+    #[test]
+    fn sharded_deterministic_across_worker_counts() {
+        // chunks partition the canonical round order, so the merge (and
+        // therefore every float op) is invariant to the thread count
+        let ds = synth::sparse_imaging(40, 80, 0.1, 7);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let base = SolveOptions {
+            max_iters: 50_000,
+            tol: 1e-8,
+            ..Default::default()
+        };
+        let runs: Vec<Vec<f64>> = [1usize, 2, 5]
+            .iter()
+            .map(|&threads| {
+                let o = SolveOptions {
+                    accumulator: AccumulatorMode::Sharded { threads },
+                    ..base.clone()
+                };
+                ShotgunThreaded::new(config(4))
+                    .solve_lasso(&prob, &vec![0.0; 80], &o)
+                    .x
+            })
+            .collect();
+        for other in &runs[1..] {
+            for (a, b) in runs[0].iter().zip(other) {
+                assert_eq!(a.to_bits(), b.to_bits(), "worker count changed the result");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_clustered_logistic_converges() {
+        // the non-default engine x schedule x loss corner: sharded
+        // accumulator, clustered draws, margin cache
+        let ds = synth::rcv1_like(50, 30, 0.3, 7);
+        let prob = LogisticProblem::new(&ds.design, &ds.targets, 0.05);
+        let opts = SolveOptions {
+            max_iters: 200_000,
+            tol: 1e-6,
+            schedule: crate::coordinator::SchedulePolicy::Clustered { clusters: 0 },
+            accumulator: AccumulatorMode::Sharded { threads: 0 },
+            ..Default::default()
+        };
+        let res = ShotgunThreaded::new(config(2)).solve_logistic(&prob, &vec![0.0; 30], &opts);
+        assert!(
+            res.solver.starts_with("shotgun-threaded-logistic") && res.solver.ends_with("-sharded"),
+            "{}",
+            res.solver
+        );
+        assert!(res.objective < prob.objective(&vec![0.0; 30]));
+        // merge-maintained cache must report the scratch objective
+        assert!((prob.objective(&res.x) - res.objective).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharded_divergence_detected() {
+        // fully correlated design, P far above P*: the sharded engine
+        // must reproduce the exact engine's divergence abort
+        let ds = synth::correlated(64, 32, 0.95, 3);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.05);
+        let opts = SolveOptions {
+            max_iters: 200_000,
+            tol: 1e-9,
+            accumulator: AccumulatorMode::Sharded { threads: 2 },
+            ..Default::default()
+        };
+        let res = ShotgunThreaded::new(config(32)).solve_lasso(&prob, &vec![0.0; 32], &opts);
+        assert!(res.solver.ends_with("-diverged"), "{}", res.solver);
+    }
+
+    #[test]
+    fn atomic_clustered_schedule_converges() {
+        // the async CAS path with the per-worker rejection draws: same
+        // optimum as always, verified by KKT
+        let ds = synth::sparse_imaging(60, 120, 0.08, 9);
+        let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+        let opts = SolveOptions {
+            max_iters: 300_000,
+            tol: 1e-8,
+            schedule: crate::coordinator::SchedulePolicy::Clustered { clusters: 0 },
+            ..Default::default()
+        };
+        let res = ShotgunThreaded::new(config(4)).solve_lasso(&prob, &vec![0.0; 120], &opts);
+        let r = prob.residual(&res.x);
+        assert!(
+            prob.kkt_violation(&res.x, &r) < 1e-4,
+            "kkt {}",
+            prob.kkt_violation(&res.x, &r)
         );
     }
 

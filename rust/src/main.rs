@@ -20,7 +20,7 @@
 
 use shotgun::api::{Engine, Fit, PathSpec, ShotgunError, SolverParams, SolverRegistry};
 use shotgun::bench::{self, BenchConfig};
-use shotgun::coordinator::PStar;
+use shotgun::coordinator::{AccumulatorMode, PStar, SchedulePolicy};
 use shotgun::data::{libsvm, synth, Dataset};
 use shotgun::objective::{HuberProblem, LassoProblem, LogisticProblem, Loss, SqHingeProblem};
 use shotgun::runtime::XlaLassoEngine;
@@ -35,7 +35,10 @@ USAGE:
   repro solve --data <spec> [--solver auto] [--p 8] [--lam 0.5]
               [--loss squared|logistic|sqhinge|huber] [--tol 1e-7]
               [--max-iters N] [--budget secs] [--seed 42] [--eta R]
-              [--sparsity K] [--path-to LAM [--path-stages 6]]
+              [--sparsity K] [--huber-delta D]
+              [--schedule uniform|clustered[:K]]
+              [--accumulator atomic|sharded[:T]]
+              [--path-to LAM [--path-stages 6]]
               [--trace-out f.csv]
   repro solvers
   repro serve --data <spec> [--lam 0.1] [--loss squared|logistic|sqhinge|huber]
@@ -46,7 +49,7 @@ USAGE:
               [--bench-out BENCH_serving.json] [--store-out dir]
               [--compare-unbatched]
   repro estimate-pstar --data <spec> [--seed 42]
-  repro bench <fig2|fig3|fig4|fig5|bounds|headline|ablations|beyond|all>
+  repro bench <fig2|fig3|fig4|fig5|bounds|headline|ablations|beyond|kernels|all>
               [--scale 0.25] [--out results] [--seed 42] [--budget 60]
   repro xla-demo [--artifacts artifacts] [--profile s] [--n 128] [--d 128]
   repro gen-data --data <spec> --out <file.svm>
@@ -66,6 +69,15 @@ DATA SPECS (--data):
 SOLVERS (--solver): "auto" (Theorem 3.2 picks P and the engine) or any
   registry name — run `repro solvers` for the roster + capabilities.
   (legacy: `--solver shotgun --engine threaded` maps to shotgun-threaded)
+
+SCHEDULING (schedule-aware solvers only — the "sched" set in
+  `repro solvers`):
+  --schedule clustered[:K]   stratify each parallel round across K
+                             correlation clusters (K omitted or 0 = auto)
+  --accumulator sharded[:T]  threaded engine: bulk-synchronous per-worker
+                             shards (T threads; 0 = P) merged at round
+                             boundaries instead of atomic CAS — and
+                             bit-identical to the exact engine
 
 SERVE REQUEST FORMAT (--file, one JSON object per line; blank lines and
   `#` comments skipped):
@@ -87,6 +99,30 @@ fn parse_loss(args: &Args) -> Loss {
     let s = args.get_or("loss", "squared");
     Loss::parse(&s)
         .unwrap_or_else(|| panic!("unknown --loss {s:?} (squared|logistic|sqhinge|huber)"))
+}
+
+/// `--schedule uniform | clustered[:K]` (omitted K = auto-sized).
+fn parse_schedule(s: &str) -> SchedulePolicy {
+    match (s, s.split_once(':')) {
+        ("uniform", _) => SchedulePolicy::Uniform,
+        ("clustered", _) => SchedulePolicy::Clustered { clusters: 0 },
+        (_, Some(("clustered", k))) => SchedulePolicy::Clustered {
+            clusters: k.parse().expect("bad --schedule cluster count"),
+        },
+        _ => panic!("unknown --schedule {s:?} (uniform|clustered[:K])"),
+    }
+}
+
+/// `--accumulator atomic | sharded[:T]` (omitted T = P threads).
+fn parse_accumulator(s: &str) -> AccumulatorMode {
+    match (s, s.split_once(':')) {
+        ("atomic", _) => AccumulatorMode::Atomic,
+        ("sharded", _) => AccumulatorMode::Sharded { threads: 0 },
+        (_, Some(("sharded", t))) => AccumulatorMode::Sharded {
+            threads: t.parse().expect("bad --accumulator thread count"),
+        },
+        _ => panic!("unknown --accumulator {s:?} (atomic|sharded[:T])"),
+    }
 }
 
 fn load_data(spec: &str, seed: u64) -> Dataset {
@@ -174,6 +210,9 @@ fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
             p,
             eta,
             sparsity: args.get("sparsity").and_then(|s| s.parse().ok()),
+            huber_delta: args
+                .get("huber-delta")
+                .map(|s| s.parse().expect("bad --huber-delta")),
             ..Default::default()
         })
         .options(|o| {
@@ -182,6 +221,12 @@ fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
             o.tol = args.f64_or("tol", 1e-7);
             o.record_every = args.usize_or("record-every", 256) as u64;
             o.seed = seed;
+            if let Some(s) = args.get("schedule") {
+                o.schedule = parse_schedule(&s);
+            }
+            if let Some(s) = args.get("accumulator") {
+                o.accumulator = parse_accumulator(&s);
+            }
         });
     if let Some(target) = args.get("path-to") {
         let target: f64 = target.parse().map_err(|_| ShotgunError::InvalidPath {
@@ -302,6 +347,9 @@ fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
         })
         .publish_as("default");
     job.params.p = args.usize_or("p", 8);
+    job.params.huber_delta = args
+        .get("huber-delta")
+        .map(|s| s.parse().expect("bad --huber-delta"));
     if solver_name != "auto" {
         job = job.solver_name(solver_name.clone());
     }
@@ -392,6 +440,9 @@ fn cmd_solvers() {
         if e.caps.rate_swept {
             sets.push("rate-swept");
         }
+        if e.caps.schedule_aware {
+            sets.push("sched");
+        }
         println!(
             "{:<18} {:<32} {:>8} {:>13} {:>6} {:<8} {}",
             e.name,
@@ -439,6 +490,7 @@ fn cmd_bench(args: &Args) {
         "headline" => bench::headline::run(&cfg),
         "ablations" => bench::ablations::run(&cfg),
         "beyond" => bench::beyond::run(&cfg),
+        "kernels" => bench::kernels::run(&cfg),
         "all" => bench::run_all(&cfg),
         other => panic!("unknown experiment {other:?}"),
     }

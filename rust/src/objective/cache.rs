@@ -8,15 +8,21 @@
 //! stage's `with_cache` constructor, and all stages share one
 //! allocation (regression-tested via `Arc::ptr_eq`).
 
+use crate::coordinator::FeatureClusters;
 use crate::sparsela::Design;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-/// Shared per-design metadata: currently the column squared-norm cache.
-/// Cheap to clone (one `Arc` bump).
+/// Shared per-design metadata: the column squared-norm cache, plus a
+/// lazily-built memo of the correlation-cluster sketch the scheduling
+/// policy uses. Cheap to clone (`Arc` bumps).
 #[derive(Clone, Debug)]
 pub struct ProblemCache {
     d: usize,
     col_sq: Arc<Vec<f64>>,
+    /// Memoized [`FeatureClusters`] keyed by `(k, seed)` — pathwise
+    /// solves and A/B benches request the same sketch per stage, and the
+    /// build is an O(nnz) minhash pass worth paying once per design.
+    clusters: Arc<Mutex<Option<(usize, u64, Arc<FeatureClusters>)>>>,
 }
 
 impl ProblemCache {
@@ -25,12 +31,30 @@ impl ProblemCache {
         ProblemCache {
             d: a.d(),
             col_sq: Arc::new(a.col_norms_sq()),
+            clusters: Arc::new(Mutex::new(None)),
         }
     }
 
     /// Handle to the shared `||A_j||^2` vector.
     pub fn col_sq(&self) -> Arc<Vec<f64>> {
         Arc::clone(&self.col_sq)
+    }
+
+    /// The correlation-cluster sketch for `a` at `(k, seed)`, built on
+    /// first request and shared afterwards; a request with a different
+    /// key rebuilds and replaces the memo (callers across one path/bench
+    /// use one key, so a 1-entry memo is the right size).
+    pub fn feature_clusters(&self, a: &Design, k: usize, seed: u64) -> Arc<FeatureClusters> {
+        assert_eq!(a.d(), self.d, "cache is design-specific");
+        let mut slot = self.clusters.lock().unwrap();
+        if let Some((ck, cs, fc)) = slot.as_ref() {
+            if *ck == k && *cs == seed {
+                return Arc::clone(fc);
+            }
+        }
+        let fc = Arc::new(FeatureClusters::build(a, k, seed));
+        *slot = Some((k, seed, Arc::clone(&fc)));
+        fc
     }
 
     /// Number of columns this cache was built for (constructors assert
@@ -67,5 +91,23 @@ mod tests {
         let h1 = cache.col_sq();
         let h2 = cache.clone().col_sq();
         assert!(Arc::ptr_eq(&h1, &h2));
+    }
+
+    #[test]
+    fn feature_clusters_memoized_per_key() {
+        let mut rng = Rng::new(3);
+        let m = DenseMatrix::from_fn(10, 6, |_, _| rng.normal());
+        let a = Design::Dense(m);
+        let cache = ProblemCache::new(&a);
+        let c1 = cache.feature_clusters(&a, 3, 7);
+        let c2 = cache.feature_clusters(&a, 3, 7);
+        assert!(Arc::ptr_eq(&c1, &c2), "same key must share the sketch");
+        // clones share the memo too (one sketch per design, not per clone)
+        let c3 = cache.clone().feature_clusters(&a, 3, 7);
+        assert!(Arc::ptr_eq(&c1, &c3));
+        // a different key rebuilds
+        let c4 = cache.feature_clusters(&a, 4, 7);
+        assert!(!Arc::ptr_eq(&c1, &c4));
+        assert_eq!(c4.k(), 4);
     }
 }

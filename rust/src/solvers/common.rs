@@ -1,6 +1,6 @@
 //! Shared solver interfaces, options, and trace recording.
 
-use crate::coordinator::schedule::ShrinkConfig;
+use crate::coordinator::schedule::{AccumulatorMode, SchedulePolicy, ShrinkConfig};
 use crate::metrics::{Stopwatch, Trace, TracePoint};
 use crate::objective::{LassoProblem, LogisticProblem};
 use crate::sparsela::{vecops, Design};
@@ -27,6 +27,16 @@ pub struct SolveOptions {
     /// before convergence keeps the returned optimum identical either
     /// way.
     pub shrink: ShrinkConfig,
+    /// How CD engines draw parallel update sets: uniform (paper) or
+    /// stratified across correlation clusters
+    /// ([`SchedulePolicy::Clustered`], arXiv 1212.4174). Honored by the
+    /// Shotgun exact and threaded engines; sequential solvers ignore it.
+    pub schedule: SchedulePolicy,
+    /// Shared-`Ax` maintenance for the threaded engine: lock-free
+    /// atomics (paper) or bulk-synchronous per-worker shards merged at
+    /// round boundaries ([`AccumulatorMode::Sharded`]). Other engines
+    /// ignore it.
+    pub accumulator: AccumulatorMode,
 }
 
 impl Default for SolveOptions {
@@ -39,6 +49,8 @@ impl Default for SolveOptions {
             seed: 1,
             aux_every_record: false,
             shrink: ShrinkConfig::default(),
+            schedule: SchedulePolicy::default(),
+            accumulator: AccumulatorMode::default(),
         }
     }
 }

@@ -8,11 +8,11 @@ use super::vecops;
 /// 4-accumulator unrolled sparse gather: `sum_k val[k] * r[idx[k]]`.
 /// Independent accumulators break the FP-add dependency chain while the
 /// loads are in flight (the gather is DRAM-latency bound; EXPERIMENTS.md
-/// §Perf). Shared by [`CscMatrix::col_dot`] and
-/// [`CscMatrix::col_dot_axpy`] so the fused kernel is bit-for-bit
-/// identical to the two-call path.
+/// §Perf). This is the *scalar reference* kernel: the dispatched
+/// [`gather`] below must match it bit-for-bit (`sparsela::simd` tests),
+/// and `repro bench kernels` times the two against each other.
 #[inline]
-fn gather(idx: &[u32], val: &[f64], r: &[f64]) -> f64 {
+pub(crate) fn gather_scalar(idx: &[u32], val: &[f64], r: &[f64]) -> f64 {
     let ci = idx.chunks_exact(4);
     let cv = val.chunks_exact(4);
     let (ri, rv) = (ci.remainder(), cv.remainder());
@@ -29,13 +29,44 @@ fn gather(idx: &[u32], val: &[f64], r: &[f64]) -> f64 {
     s
 }
 
-/// Sparse scatter `r[idx[k]] += s * val[k]` (shared by
-/// [`CscMatrix::col_axpy`] and [`CscMatrix::col_dot_axpy`]).
+/// Dispatched sparse gather, shared by [`CscMatrix::col_dot`] and
+/// [`CscMatrix::col_dot_axpy`] so the fused kernel is bit-for-bit
+/// identical to the two-call path. Routes to the AVX2 body when the
+/// `simd` feature is on and the CPU supports it (bit-identical by
+/// construction — see `sparsela::simd`); otherwise [`gather_scalar`].
 #[inline]
-fn scatter(idx: &[u32], val: &[f64], s: f64, r: &mut [f64]) {
+pub(crate) fn gather(idx: &[u32], val: &[f64], r: &[f64]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd::avx2_active() && r.len() < super::simd::GATHER_LEN_LIMIT {
+        // SAFETY: AVX2 probed at runtime; idx/val come from the same
+        // column so their lengths match; CSC validation bounds every
+        // row index below r.len(); the length guard keeps gather
+        // indices non-negative under i32 sign extension.
+        return unsafe { super::simd::gather_avx2(idx, val, r) };
+    }
+    gather_scalar(idx, val, r)
+}
+
+/// Sparse scatter `r[idx[k]] += s * val[k]` — scalar reference for the
+/// dispatched [`scatter`].
+#[inline]
+pub(crate) fn scatter_scalar(idx: &[u32], val: &[f64], s: f64, r: &mut [f64]) {
     for (&i, &v) in idx.iter().zip(val) {
         r[i as usize] += s * v;
     }
+}
+
+/// Dispatched sparse scatter (shared by [`CscMatrix::col_axpy`] and
+/// [`CscMatrix::col_dot_axpy`]).
+#[inline]
+pub(crate) fn scatter(idx: &[u32], val: &[f64], s: f64, r: &mut [f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd::avx2_active() {
+        // SAFETY: AVX2 probed at runtime; slice lengths match (same
+        // column); CSC validation bounds every row index below r.len().
+        return unsafe { super::simd::scatter_avx2(idx, val, s, r) };
+    }
+    scatter_scalar(idx, val, s, r)
 }
 
 #[derive(Clone, Debug, PartialEq)]

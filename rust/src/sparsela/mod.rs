@@ -10,12 +10,18 @@
 //!
 //! [`power`] implements power iteration for the spectral radius
 //! `rho(A^T A)` — the paper's parallelism measure (Theorem 3.2).
+//!
+//! [`simd`] holds the `--features simd` explicit-lane kernel bodies
+//! (AVX2, runtime-dispatched) that the csc/vecops hot loops route
+//! through; the scalar references stay compiled for A/B benching and
+//! the bit-identity tests.
 
 pub mod csc;
 pub mod csr;
 pub mod dense;
 pub mod design;
 pub mod power;
+pub mod simd;
 pub mod vecops;
 
 pub use csc::CscMatrix;

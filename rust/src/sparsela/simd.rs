@@ -1,0 +1,325 @@
+//! Explicit-width SIMD bodies for the sparse/dense hot-loop kernels,
+//! behind the `simd` cargo feature.
+//!
+//! The pinned stable toolchain (rust-toolchain.toml) has no
+//! `std::simd`, so the lane code is written with `std::arch::x86_64`
+//! AVX2 intrinsics behind a runtime-detected dispatch shim:
+//! [`avx2_active`] caches one `is_x86_feature_detected!("avx2")` probe,
+//! and the dispatchers in `csc.rs` / `vecops.rs` fall back to the
+//! scalar reference kernels when the feature is off, the arch is not
+//! x86_64, or the CPU lacks AVX2. The scalar kernels stay compiled and
+//! callable either way — `repro bench kernels` measures
+//! dispatch-vs-scalar inside a single binary, and the identity tests
+//! below compare the two paths directly.
+//!
+//! # Bit-identity contract
+//!
+//! Every AVX2 body performs the *same IEEE-754 operation sequence per
+//! accumulator lane* as its scalar reference, so results are
+//! bit-identical (not merely ULP-close) and the golden fixtures stay
+//! byte-for-byte green with the feature on:
+//!
+//! * `gather`: the scalar kernel keeps 4 independent accumulators over
+//!   `chunks_exact(4)` and reduces `(a0 + a1) + (a2 + a3)`. The AVX2
+//!   kernel keeps one 4-lane vertical accumulator (lane k == scalar
+//!   `acc[k]`), then applies the identical horizontal reduction and the
+//!   identical scalar remainder loop.
+//! * `dot`: the scalar kernel is 8-way unrolled with a sequential
+//!   `acc8.iter().sum()` reduction. The AVX2 kernel keeps two 4-lane
+//!   accumulators (lanes 0-3 and 4-7), spills all 8 lanes, and sums
+//!   them in the same left-to-right order.
+//! * `scatter` / `axpy`: per-element `r[i] += s * v` — the vector mul
+//!   followed by a scalar (or lane-wise) add rounds exactly like the
+//!   scalar `mul`-then-`add`.
+//!
+//! No FMA anywhere: `_mm256_fmadd_pd` fuses the rounding step and would
+//! break bit-identity with the scalar `mul` + `add` pair.
+//!
+//! Index safety: AVX2 `vpgatherdpd` sign-extends its 32-bit indices, so
+//! the dispatchers only take the SIMD path when the destination vector
+//! is shorter than 2^31 (always true for this crate's problem sizes;
+//! the check is one branch).
+
+/// Is the AVX2 path live? `false` unless the `simd` feature is enabled,
+/// the target is x86_64, *and* the CPU reports AVX2 at runtime. The
+/// probe result is cached in a static so the hot loops pay one relaxed
+/// atomic load, not a `cpuid`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+pub fn avx2_active() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    // 0 = unprobed, 1 = available, 2 = unavailable
+    static STATE: AtomicU8 = AtomicU8::new(0);
+    match STATE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let yes = std::arch::is_x86_feature_detected!("avx2");
+            STATE.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// Scalar-fallback build: the AVX2 path is never live.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+#[inline]
+pub fn avx2_active() -> bool {
+    false
+}
+
+/// Largest vector length the 32-bit-index gather path accepts (see
+/// module docs on `vpgatherdpd` sign extension).
+pub const GATHER_LEN_LIMIT: usize = 1 << 31;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub use avx2::{axpy_avx2, dot_avx2, gather_avx2, scatter_avx2};
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use std::arch::x86_64::{
+        __m128i, _mm256_add_pd, _mm256_i32gather_pd, _mm256_loadu_pd, _mm256_mul_pd,
+        _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd, _mm_loadu_si128,
+    };
+
+    /// AVX2 sparse gather: `sum_k val[k] * r[idx[k]]`, bit-identical to
+    /// the scalar 4-accumulator kernel in `csc.rs` (see module docs).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available ([`super::avx2_active`]),
+    /// `idx.len() == val.len()`, every `idx[k] < r.len()`, and
+    /// `r.len() < GATHER_LEN_LIMIT` (indices must stay non-negative
+    /// after the gather's i32 sign extension).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_avx2(idx: &[u32], val: &[f64], r: &[f64]) -> f64 {
+        debug_assert_eq!(idx.len(), val.len());
+        debug_assert!(r.len() < super::GATHER_LEN_LIMIT);
+        let ci = idx.chunks_exact(4);
+        let cv = val.chunks_exact(4);
+        let (ri, rv) = (ci.remainder(), cv.remainder());
+        let base = r.as_ptr();
+        let mut vacc = _mm256_setzero_pd();
+        for (pi, pv) in ci.zip(cv) {
+            // 4 u32 row indices -> one __m128i lane vector
+            let vidx: __m128i = _mm_loadu_si128(pi.as_ptr() as *const __m128i);
+            let vr = _mm256_i32gather_pd::<8>(base, vidx);
+            let vv = _mm256_loadu_pd(pv.as_ptr());
+            // lane k: acc[k] += val[k] * r[idx[k]]  (mul then add, no FMA)
+            vacc = _mm256_add_pd(vacc, _mm256_mul_pd(vv, vr));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), vacc);
+        let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        for (&i, &v) in ri.iter().zip(rv) {
+            s += v * r[i as usize];
+        }
+        s
+    }
+
+    /// AVX2 sparse scatter: `r[idx[k]] += s * val[k]`. The products for
+    /// 4 entries are formed in one vector mul, then applied with scalar
+    /// adds (AVX2 has no scatter store); each element sees exactly the
+    /// scalar `mul`-then-`add` rounding. Column row indices are strictly
+    /// sorted (no duplicates), so lane independence is guaranteed.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available, `idx.len() == val.len()`,
+    /// and every `idx[k] < r.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scatter_avx2(idx: &[u32], val: &[f64], s: f64, r: &mut [f64]) {
+        debug_assert_eq!(idx.len(), val.len());
+        let ci = idx.chunks_exact(4);
+        let cv = val.chunks_exact(4);
+        let (ri, rv) = (ci.remainder(), cv.remainder());
+        let vs = _mm256_set1_pd(s);
+        let mut prod = [0.0f64; 4];
+        for (pi, pv) in ci.zip(cv) {
+            let vv = _mm256_loadu_pd(pv.as_ptr());
+            _mm256_storeu_pd(prod.as_mut_ptr(), _mm256_mul_pd(vs, vv));
+            for k in 0..4 {
+                r[pi[k] as usize] += prod[k];
+            }
+        }
+        for (&i, &v) in ri.iter().zip(rv) {
+            r[i as usize] += s * v;
+        }
+    }
+
+    /// AVX2 dense dot product, bit-identical to the scalar 8-way kernel
+    /// in `vecops.rs`: two 4-lane vertical accumulators stand in for
+    /// `acc8[0..4]` / `acc8[4..8]`, spilled and summed left-to-right.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let cx = x.chunks_exact(8);
+        let cy = y.chunks_exact(8);
+        let (rx, ry) = (cx.remainder(), cy.remainder());
+        let mut lo = _mm256_setzero_pd();
+        let mut hi = _mm256_setzero_pd();
+        for (px, py) in cx.zip(cy) {
+            let x0 = _mm256_loadu_pd(px.as_ptr());
+            let y0 = _mm256_loadu_pd(py.as_ptr());
+            let x1 = _mm256_loadu_pd(px.as_ptr().add(4));
+            let y1 = _mm256_loadu_pd(py.as_ptr().add(4));
+            lo = _mm256_add_pd(lo, _mm256_mul_pd(x0, y0));
+            hi = _mm256_add_pd(hi, _mm256_mul_pd(x1, y1));
+        }
+        let mut acc8 = [0.0f64; 8];
+        _mm256_storeu_pd(acc8.as_mut_ptr(), lo);
+        _mm256_storeu_pd(acc8.as_mut_ptr().add(4), hi);
+        // same sequential left-to-right reduction as acc8.iter().sum()
+        let mut acc = 0.0f64;
+        for a in acc8 {
+            acc += a;
+        }
+        for (a, b) in rx.iter().zip(ry) {
+            acc += a * b;
+        }
+        acc
+    }
+
+    /// AVX2 dense axpy: `y += alpha * x`, element-wise mul-then-add
+    /// (bit-identical to the scalar loop).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let valpha = _mm256_set1_pd(alpha);
+        let mut k = 0;
+        while k + 4 <= n {
+            let vx = _mm256_loadu_pd(x.as_ptr().add(k));
+            let vy = _mm256_loadu_pd(y.as_ptr().add(k));
+            let vr = _mm256_add_pd(vy, _mm256_mul_pd(valpha, vx));
+            _mm256_storeu_pd(y.as_mut_ptr().add(k), vr);
+            k += 4;
+        }
+        while k < n {
+            y[k] += alpha * x[k];
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::sparsela::{csc, vecops};
+    use crate::util::rng::Rng;
+
+    /// Random sparse column over an n-length vector: sorted unique row
+    /// indices (the CSC invariant) + normal values.
+    fn random_column(rng: &mut Rng, n: usize, nnz: usize) -> (Vec<u32>, Vec<f64>) {
+        let mut idx: Vec<u32> = rng
+            .sample_without_replacement(n, nnz)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        idx.sort_unstable();
+        let val: Vec<f64> = (0..idx.len()).map(|_| rng.normal()).collect();
+        (idx, val)
+    }
+
+    /// The dispatched gather must be BIT-identical to the scalar
+    /// reference for every column shape (chunks + remainder), whether
+    /// the AVX2 path is live or the dispatcher fell back. Runs (and
+    /// must pass) with and without `--features simd`.
+    #[test]
+    fn gather_dispatch_bit_identical_to_scalar() {
+        let mut rng = Rng::new(0x51_4D_D1);
+        for case in 0..200 {
+            let n = 1 + rng.below(257);
+            let nnz = rng.below(n + 1);
+            let (idx, val) = random_column(&mut rng, n, nnz);
+            let r: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let scalar = csc::gather_scalar(&idx, &val, &r);
+            let fast = csc::gather(&idx, &val, &r);
+            assert_eq!(
+                scalar.to_bits(),
+                fast.to_bits(),
+                "case {case}: n={n} nnz={} scalar={scalar:e} fast={fast:e}",
+                idx.len()
+            );
+        }
+    }
+
+    #[test]
+    fn scatter_dispatch_bit_identical_to_scalar() {
+        let mut rng = Rng::new(0x5C_A7_7E);
+        for case in 0..200 {
+            let n = 1 + rng.below(257);
+            let nnz = rng.below(n + 1);
+            let (idx, val) = random_column(&mut rng, n, nnz);
+            let s = rng.normal();
+            let base: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut a = base.clone();
+            let mut b = base;
+            csc::scatter_scalar(&idx, &val, s, &mut a);
+            csc::scatter(&idx, &val, s, &mut b);
+            for i in 0..n {
+                assert_eq!(
+                    a[i].to_bits(),
+                    b[i].to_bits(),
+                    "case {case}: row {i} scalar={:e} fast={:e}",
+                    a[i],
+                    b[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_dispatch_bit_identical_to_scalar() {
+        let mut rng = Rng::new(0xD0_7D_07);
+        for case in 0..200 {
+            let n = rng.below(300);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let scalar = vecops::dot_scalar(&x, &y);
+            let fast = vecops::dot(&x, &y);
+            assert_eq!(
+                scalar.to_bits(),
+                fast.to_bits(),
+                "case {case}: n={n} scalar={scalar:e} fast={fast:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_dispatch_bit_identical_to_scalar() {
+        let mut rng = Rng::new(0xA0_09_11);
+        for case in 0..200 {
+            let n = rng.below(300);
+            let alpha = rng.normal();
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let base: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut a = base.clone();
+            let mut b = base;
+            vecops::axpy_scalar(alpha, &x, &mut a);
+            vecops::axpy(alpha, &x, &mut b);
+            for i in 0..n {
+                assert_eq!(
+                    a[i].to_bits(),
+                    b[i].to_bits(),
+                    "case {case}: element {i}"
+                );
+            }
+        }
+    }
+
+    /// With the feature off the probe must report inactive; with it on,
+    /// whatever the CPU says — either way the call must be consistent.
+    #[test]
+    fn avx2_probe_is_stable() {
+        let first = super::avx2_active();
+        for _ in 0..10 {
+            assert_eq!(super::avx2_active(), first);
+        }
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        assert!(!first);
+    }
+}

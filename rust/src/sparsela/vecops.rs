@@ -3,20 +3,37 @@
 //! These are the scalar hot loops of the L3 engines; the benches in
 //! `benches/hotpath.rs` track them. Keep them allocation-free.
 
-/// `y += alpha * x` (dense axpy).
+/// `y += alpha * x` (dense axpy) — scalar reference for the dispatched
+/// [`axpy`]; kept callable so `repro bench kernels` can A/B it.
 #[inline]
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+pub(crate) fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
     }
 }
 
+/// `y += alpha * x` (dense axpy). With `--features simd` on an AVX2
+/// machine this routes to the explicit-lane body in `sparsela::simd`
+/// (bit-identical: element-wise mul-then-add either way).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd::avx2_active() {
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: AVX2 probed at runtime; lengths asserted equal.
+        return unsafe { super::simd::axpy_avx2(alpha, x, y) };
+    }
+    axpy_scalar(alpha, x, y)
+}
+
 /// Dense dot product, 8-way unrolled: independent accumulators break the
 /// FP-add dependency chain and vectorize under `-C target-cpu=native`
 /// (measured 2.4x on the dense col_dot hot path; EXPERIMENTS.md §Perf).
+/// Scalar reference for the dispatched [`dot`]; the `sparsela::simd`
+/// identity tests pin the two bit-for-bit.
 #[inline]
-pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+pub(crate) fn dot_scalar(x: &[f64], y: &[f64]) -> f64 {
     debug_assert_eq!(x.len(), y.len());
     let mut acc8 = [0.0f64; 8];
     let cx = x.chunks_exact(8);
@@ -32,6 +49,20 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
         acc += a * b;
     }
     acc
+}
+
+/// Dense dot product. With `--features simd` on an AVX2 machine this
+/// routes to the explicit-lane body in `sparsela::simd` (two 4-lane
+/// accumulators mirroring the scalar kernel's `acc8`, bit-identical).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if super::simd::avx2_active() {
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: AVX2 probed at runtime; lengths asserted equal.
+        return unsafe { super::simd::dot_avx2(x, y) };
+    }
+    dot_scalar(x, y)
 }
 
 /// Squared L2 norm.

@@ -11,7 +11,12 @@
 //! an externally pinned optimum can.
 
 use shotgun::api::{IterUnit, ProblemRef, SolverParams, SolverRegistry};
-use shotgun::objective::{HuberProblem, LassoProblem, LogisticProblem, Loss, SqHingeProblem};
+use shotgun::coordinator::{
+    AccumulatorMode, SchedulePolicy, ShotgunConfig, ShotgunExact, ShotgunThreaded,
+};
+use shotgun::objective::{
+    CdObjective, HuberProblem, LassoProblem, LogisticProblem, Loss, SqHingeProblem,
+};
 use shotgun::solvers::common::SolveOptions;
 use shotgun::sparsela::{DenseMatrix, Design};
 use shotgun::util::json::Json;
@@ -213,4 +218,93 @@ fn every_exact_solver_reaches_the_golden_optima() {
             );
         }
     }
+}
+
+/// The PR-6 engine knobs (sharded accumulator, clustered schedule) are
+/// not separate registry entries — they are `SolveOptions` toggles on
+/// the shotgun engines. Gate them against the same external optima.
+fn check_gap(fx: &Fixture, tag: &str, objective: f64) {
+    let gap = (objective - fx.f_star) / fx.f_star.max(1.0);
+    assert!(
+        gap <= REL_TOL,
+        "{}: {tag} converged to F = {objective} but the golden optimum is {} (rel gap {gap:.2e})",
+        fx.name,
+        fx.f_star
+    );
+    assert!(
+        gap >= -1e-8,
+        "{}: {tag} reported F = {objective} BELOW the golden optimum {} — objective drift?",
+        fx.name,
+        fx.f_star
+    );
+}
+
+fn for_each_fixture_objective(mut run: impl FnMut(&Fixture, &dyn Fn(&SolveOptions) -> f64)) {
+    for fx in all_fixtures() {
+        let x0 = vec![0.0; fx.design.d()];
+        match fx.loss {
+            Loss::Squared => {
+                let p = LassoProblem::new(&fx.design, &fx.targets, fx.lam);
+                run(&fx, &|o| solve_both(&p, &x0, o));
+            }
+            Loss::Logistic => {
+                let p = LogisticProblem::new(&fx.design, &fx.targets, fx.lam);
+                run(&fx, &|o| solve_both(&p, &x0, o));
+            }
+            Loss::SqHinge => {
+                let p = SqHingeProblem::new(&fx.design, &fx.targets, fx.lam);
+                run(&fx, &|o| solve_both(&p, &x0, o));
+            }
+            Loss::Huber => {
+                let p = HuberProblem::new(&fx.design, &fx.targets, fx.lam);
+                run(&fx, &|o| solve_both(&p, &x0, o));
+            }
+        }
+    }
+}
+
+/// Solve with the engine the options select (exact for schedule-only
+/// runs, threaded for sharded runs) and return the objective.
+fn solve_both<O: CdObjective + Sync>(p: &O, x0: &[f64], opts: &SolveOptions) -> f64 {
+    let cfg = ShotgunConfig {
+        p: 2,
+        ..Default::default()
+    };
+    if matches!(opts.accumulator, AccumulatorMode::Sharded { .. }) {
+        ShotgunThreaded::new(cfg).solve_cd(p, x0, opts).objective
+    } else {
+        ShotgunExact::new(cfg).solve_cd(p, x0, opts).objective
+    }
+}
+
+#[test]
+fn sharded_accumulator_reaches_the_golden_optima() {
+    let opts = SolveOptions {
+        accumulator: AccumulatorMode::Sharded { threads: 3 },
+        ..opts_for(IterUnit::Update)
+    };
+    for_each_fixture_objective(|fx, solve| check_gap(fx, "shotgun sharded", solve(&opts)));
+}
+
+#[test]
+fn clustered_schedule_reaches_the_golden_optima() {
+    let opts = SolveOptions {
+        schedule: SchedulePolicy::Clustered { clusters: 0 },
+        ..opts_for(IterUnit::Update)
+    };
+    for_each_fixture_objective(|fx, solve| check_gap(fx, "shotgun clustered", solve(&opts)));
+}
+
+#[test]
+fn clustered_schedule_under_sharded_accumulator_reaches_the_golden_optima() {
+    // the two knobs compose: clustered draws decide WHAT each round
+    // touches, the sharded accumulator decides HOW the round commits
+    let opts = SolveOptions {
+        schedule: SchedulePolicy::Clustered { clusters: 0 },
+        accumulator: AccumulatorMode::Sharded { threads: 2 },
+        ..opts_for(IterUnit::Update)
+    };
+    for_each_fixture_objective(|fx, solve| {
+        check_gap(fx, "shotgun clustered+sharded", solve(&opts))
+    });
 }

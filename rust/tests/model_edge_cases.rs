@@ -178,6 +178,14 @@ fn all_variants() -> Vec<(ShotgunError, &'static str)> {
             "lambda",
         ),
         (
+            ShotgunError::InvalidParam {
+                name: "huber_delta",
+                value: -0.5,
+                reason: "delta must be finite and positive",
+            },
+            "huber_delta",
+        ),
+        (
             ShotgunError::InvalidPath {
                 reason: "stages must be >= 1".into(),
             },

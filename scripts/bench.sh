@@ -6,7 +6,10 @@
 # benchmark (`repro serve --compare-unbatched`) and refresh
 # BENCH_serving.json (throughput + latency percentiles of the batching
 # predictor, plus derived.batching_speedup_throughput from the
-# max_batch=1 baseline replay).
+# max_batch=1 baseline replay). Then run the kernel A/B harness
+# (`repro bench kernels`) and refresh BENCH_kernels.json
+# (derived.simd_speedup, derived.shard_vs_atomic_speedup,
+# derived.clustered_vs_uniform_epochs).
 #
 # Usage:
 #   scripts/bench.sh [extra cargo bench args]   full run (perf numbers)
@@ -57,5 +60,15 @@ echo "--- BENCH_serving.json ---"
 cat BENCH_serving.json
 
 echo
+echo "== kernel A/B harness (BENCH_kernels.json) =="
+# compiled with the simd feature so the dispatched side of the A/B is
+# the AVX2 path wherever the host supports it (runtime-detected; on
+# non-AVX2 hosts both sides run the scalar kernels and the ratio ~1.0)
+cargo run --release -p shotgun --features simd --bin repro -- bench kernels
+echo
+echo "--- BENCH_kernels.json ---"
+cat BENCH_kernels.json
+
+echo
 echo "== derived-field gate (scripts/check_bench.py) =="
-python3 scripts/check_bench.py BENCH_hotpath.json BENCH_serving.json
+python3 scripts/check_bench.py BENCH_hotpath.json BENCH_serving.json BENCH_kernels.json

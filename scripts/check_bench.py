@@ -1,13 +1,14 @@
 #!/usr/bin/env python3
 """Validate the machine-readable bench artifacts.
 
-The three EXPERIMENTS.md §Perf tables are fed by derived.* fields in
-BENCH_hotpath.json and BENCH_serving.json. This gate fails CI (the
-bench-smoke job, and the tail of scripts/bench.sh) when any required
-derived field is missing, non-numeric, NaN, or non-positive — i.e. when
-the harness silently stopped producing the numbers the tables track.
+The EXPERIMENTS.md §Perf tables are fed by derived.* fields in
+BENCH_hotpath.json, BENCH_serving.json, and BENCH_kernels.json. This
+gate fails CI (the bench-smoke job, and the tail of scripts/bench.sh)
+when any required derived field is missing, non-numeric, NaN, or
+non-positive — i.e. when the harness silently stopped producing the
+numbers the tables track.
 
-Usage: python3 scripts/check_bench.py BENCH_hotpath.json BENCH_serving.json
+Usage: python3 scripts/check_bench.py BENCH_hotpath.json BENCH_serving.json BENCH_kernels.json
 """
 
 import json
@@ -24,6 +25,19 @@ REQUIRED = {
     "serving": {
         "positive": ["batching_speedup_throughput", "batching_unbatched_rps"],
         "finite": [],
+    },
+    # the PR-6 hot-path A/Bs: simd dispatch vs scalar, sharded vs
+    # atomic accumulation, clustered vs uniform draws. All three are
+    # ratios, so "present, finite, > 0" is the invariant — near 1.0 is
+    # a legitimate value (e.g. simd feature off), 0/NaN means the
+    # harness broke.
+    "kernels": {
+        "positive": [
+            "simd_speedup",
+            "shard_vs_atomic_speedup",
+            "clustered_vs_uniform_epochs",
+        ],
+        "finite": ["shard_objective_rel_gap", "schedule_objective_rel_gap"],
     },
 }
 
