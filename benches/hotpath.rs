@@ -226,6 +226,91 @@ fn main() {
         results.push(off);
     }
 
+    // --- portfolio racing vs Engine::Auto (solve-to-tolerance) ---
+    // same problem, same tolerance: Auto commits to one engine/P from
+    // the spectral estimate, the portfolio races the roster and takes
+    // the first to converge. Wall-clock ratio goes to
+    // derived.portfolio_vs_auto_speedup; per-label win counts over
+    // repeated races go to derived.portfolio_win_rate_<label>.
+    {
+        use shotgun::api::{Engine, Fit};
+        use shotgun::objective::ProblemCache;
+        let (n, d) = if smoke { (256, 512) } else { (2048, 4096) };
+        let ds = synth::sparse_imaging(n, d, 0.01, 21);
+        let prob0 = LassoProblem::new(&ds.design, &ds.targets, 0.0);
+        let lam = 0.2 * prob0.lambda_max();
+        // shared cache: both engines reuse ONE memoized P* estimate, so
+        // the comparison times the solves, not repeated power iterations
+        let cache = ProblemCache::new(&ds.design);
+        let fit = |engine: Engine| {
+            Fit::new(&ds.design, &ds.targets)
+                .lambda(lam)
+                .engine(engine)
+                .cache(&cache)
+                .options(|o| {
+                    o.max_iters = if smoke { 400_000 } else { 4_000_000 };
+                    o.tol = 1e-6;
+                    o.record_every = u64::MAX;
+                    o.seed = 23;
+                })
+                .run()
+                .expect("bench fit solves")
+        };
+        let r_auto = fit(Engine::Auto);
+        let r_port = fit(Engine::Portfolio);
+        let gap = (r_port.objective() - r_auto.objective()).abs()
+            / r_auto.objective().abs().max(1e-12);
+        println!(
+            "portfolio F={:.8} ({}) vs auto F={:.8} ({}), rel gap {:.2e}",
+            r_port.objective(),
+            r_port.diagnostics.solver,
+            r_auto.objective(),
+            r_auto.diagnostics.solver,
+            gap
+        );
+        assert!(gap < 1e-3, "portfolio winner missed the optimum (gap {gap:.3e})");
+        // win-rate tally over repeated races (scheduling noise makes
+        // the winner a distribution, not a constant)
+        let races = if smoke { 2 } else { 5 };
+        let mut wins: Vec<(String, usize)> = Vec::new();
+        for _ in 0..races {
+            let rep = fit(Engine::Portfolio);
+            let w = rep.portfolio.expect("portfolio engine reports its race").winner;
+            match wins.iter_mut().find(|(l, _)| *l == w) {
+                Some((_, c)) => *c += 1,
+                None => wins.push((w, 1)),
+            }
+        }
+        for (label, c) in &wins {
+            println!("portfolio winner {label}: {c}/{races} races");
+        }
+        let samples = if smoke { 2 } else { 3 };
+        let auto_b = bench(
+            &format!("lasso solve-to-tol engine=auto      (sparse {n}x{d})"),
+            1,
+            samples,
+            || black_box(fit(Engine::Auto).objective()),
+        );
+        let port_b = bench(
+            &format!("lasso solve-to-tol engine=portfolio (sparse {n}x{d})"),
+            1,
+            samples,
+            || black_box(fit(Engine::Portfolio).objective()),
+        );
+        let speedup = auto_b.median_s / port_b.median_s.max(1e-12);
+        println!("portfolio speedup over auto (solve-to-tol): {speedup:.2}x");
+        derived.push(("portfolio_vs_auto_speedup".into(), speedup));
+        derived.push(("portfolio_objective_rel_gap".into(), gap));
+        for (label, c) in &wins {
+            derived.push((
+                format!("portfolio_win_rate_{label}"),
+                *c as f64 / races as f64,
+            ));
+        }
+        results.push(auto_b);
+        results.push(port_b);
+    }
+
     // --- atomic CAS residual update (threaded engine inner op) ---
     {
         let v = AtomicVec::from_slice(&vec![0.0; 4096]);

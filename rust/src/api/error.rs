@@ -61,6 +61,13 @@ pub enum ShotgunError {
         seconds: f64,
         objective: f64,
     },
+    /// The solve was cancelled by an external
+    /// [`StopFlag`](crate::solvers::common::StopFlag) before reaching
+    /// convergence — distinct from [`BudgetExhausted`](Self::
+    /// BudgetExhausted), which means the solver ran its budget dry on
+    /// its own. Surfaced by [`Fit`](crate::api::Fit) whenever the
+    /// caller's wired flag was raised and the result is not converged.
+    Cancelled { solver: String },
     /// A serialized [`Model`](crate::api::Model) failed to parse.
     ModelFormat { reason: String },
     /// A filesystem operation failed (store persistence, request
@@ -137,6 +144,9 @@ impl fmt::Display for ShotgunError {
                 "budget exhausted without convergence after {iters} iterations \
                  ({seconds:.3}s, F = {objective})"
             ),
+            ShotgunError::Cancelled { solver } => {
+                write!(f, "solve cancelled by stop flag before {solver} converged")
+            }
             ShotgunError::ModelFormat { reason } => {
                 write!(f, "malformed model document: {reason}")
             }

@@ -33,7 +33,7 @@
 use super::error::ShotgunError;
 use super::model::Model;
 use super::registry::{ProblemRef, SolverParams, SolverRegistry};
-use crate::coordinator::PStar;
+use crate::coordinator::PortfolioReport;
 use crate::objective::{
     HuberProblem, LassoProblem, LogisticProblem, Loss, ProblemCache, SqHingeProblem,
 };
@@ -57,6 +57,11 @@ pub enum Engine {
     /// Asynchronous multicore engine (the paper's implementation) at a
     /// fixed P.
     Threaded { p: usize },
+    /// Race a roster of configurations ({exact, atomic, sharded, CDN}
+    /// x P in {P*, P*/2, hw}) to tolerance on scoped threads; first to
+    /// converge cancels the rest via a shared stop flag. The race is
+    /// reported in [`FitReport::portfolio`].
+    Portfolio,
 }
 
 /// What `Engine::Auto` decided, reported back in [`FitReport::auto`].
@@ -73,11 +78,12 @@ pub struct AutoChoice {
 }
 
 impl AutoChoice {
-    /// The concrete engine this choice resolved to. `Engine::Auto` pays
-    /// a power-iteration pass per fit; serving loops over one design
-    /// should run Auto once and feed this back via [`Fit::engine`] so
-    /// repeated fits skip the estimate (`rho` depends only on the
-    /// design, not on lambda or the loss).
+    /// The concrete engine this choice resolved to. The power-iteration
+    /// estimate behind `Engine::Auto` is memoized per design in
+    /// [`ProblemCache`], so serving loops that share a cache via
+    /// [`Fit::cache`] already skip re-estimation; feeding this back via
+    /// [`Fit::engine`] additionally skips the engine-choice logic
+    /// (`rho` depends only on the design, not on lambda or the loss).
     pub fn engine(&self) -> Engine {
         if self.threaded {
             Engine::Threaded { p: self.p }
@@ -119,6 +125,9 @@ pub struct FitReport {
     pub model: Model,
     pub diagnostics: SolveResult,
     pub auto: Option<AutoChoice>,
+    /// What the race looked like when [`Engine::Portfolio`] (or the
+    /// `"portfolio"` registry entry) drove: winner + loser stats.
+    pub portfolio: Option<PortfolioReport>,
 }
 
 impl FitReport {
@@ -377,7 +386,9 @@ impl<'a> Fit<'a> {
     }
 
     /// Resolve the engine/solver choice to a registry name + params.
-    fn resolve(&self) -> (String, SolverParams, Option<AutoChoice>) {
+    /// `cache` carries the memoized Theorem 3.2 estimate, so Auto and
+    /// Portfolio pay the power iteration once per design, not per fit.
+    fn resolve(&self, cache: &ProblemCache) -> (String, SolverParams, Option<AutoChoice>) {
         match &self.choice {
             Choice::Name(name) => (name.clone(), self.params.clone(), None),
             Choice::Engine(Engine::Exact { p }) => (
@@ -396,8 +407,21 @@ impl<'a> Fit<'a> {
                 },
                 None,
             ),
+            Choice::Engine(Engine::Portfolio) => {
+                // the roster scales off P*; the registry factory builds
+                // the member grid from params.p (see `Portfolio::roster`)
+                let est = cache.pstar(self.design, self.opts.seed);
+                (
+                    "portfolio".into(),
+                    SolverParams {
+                        p: est.p_star.max(1),
+                        ..self.params.clone()
+                    },
+                    None,
+                )
+            }
             Choice::Engine(Engine::Auto) => {
-                let est = PStar::quick(self.design, self.opts.seed);
+                let est = cache.pstar(self.design, self.opts.seed);
                 let hw = std::thread::available_parallelism()
                     .map(|v| v.get())
                     .unwrap_or(8);
@@ -425,13 +449,16 @@ impl<'a> Fit<'a> {
     /// Validate, pick the solver, solve, and package the artifact.
     pub fn run(self) -> Result<FitReport, ShotgunError> {
         self.validate()?;
-        let (name, params, auto) = self.resolve();
-        let registry = SolverRegistry::global();
-        let mut solver = registry.create_for(&name, self.loss, &params)?;
+        // the cache is built BEFORE the solver choice resolves, so the
+        // Auto/Portfolio spectral estimate lands in (and is reused
+        // from) its per-design memo
         let cache = match &self.cache {
             Some(c) => c.clone(),
             None => ProblemCache::new(self.design),
         };
+        let (name, params, auto) = self.resolve(&cache);
+        let registry = SolverRegistry::global();
+        let mut solver = registry.create_for(&name, self.loss, &params)?;
         let d = self.design.d();
         let x0 = self.x0.clone().unwrap_or_else(|| vec![0.0; d]);
         let (a, y) = (self.design, self.targets);
@@ -523,6 +550,14 @@ impl<'a> Fit<'a> {
         if let Some(e) = runner.err {
             return Err(e);
         }
+        // a caller-wired stop flag that fired before convergence is a
+        // cancellation, not a fit — surface it as the typed error
+        // instead of a silently-partial report
+        if self.opts.stop.raised() && !result.converged {
+            return Err(ShotgunError::Cancelled {
+                solver: result.solver.clone(),
+            });
+        }
         if self.require_convergence && !result.converged {
             return Err(ShotgunError::BudgetExhausted {
                 iters: result.iters,
@@ -530,11 +565,13 @@ impl<'a> Fit<'a> {
                 objective: result.objective,
             });
         }
+        let portfolio = solver.portfolio_report().cloned();
         let model = Model::from_dense(&result.x, self.loss, lam, result.solver.clone());
         Ok(FitReport {
             model,
             diagnostics: result,
             auto,
+            portfolio,
         })
     }
 }

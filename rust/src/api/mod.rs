@@ -11,6 +11,11 @@
 //!   paper's Theorem 3.2 — power-iterate `rho(A^T A)`, set
 //!   `P* = ceil(d/rho)` — and picks the engine, so the headline theory
 //!   is the default UX rather than a buried diagnostic.
+//!   [`Engine::Portfolio`] replaces the launch-time guess with a race:
+//!   a roster of engine x P configs runs concurrently and the first to
+//!   converge cancels the rest
+//!   ([`Portfolio`](crate::coordinator::Portfolio); the race report
+//!   lands in [`FitReport::portfolio`](fit::FitReport)).
 //! * [`SolverRegistry`] ([`registry`]) — every engine and baseline
 //!   behind an object-safe [`DynCdSolver`] with per-solver
 //!   [`Capabilities`]; the CLI, the figure harnesses, and the
@@ -31,10 +36,10 @@
 //!
 //! Build the [`ProblemCache`](crate::objective::ProblemCache) once per
 //! design and hand it to every request — no per-fit O(nnz) metadata
-//! pass (see `examples/serving.rs`). Name a solver (or reuse a prior
-//! [`AutoChoice::engine`]) in the loop: `Engine::Auto` re-estimates
-//! `rho` by power iteration on every fit, which is exactly the kind of
-//! per-request O(nnz) work the shared cache exists to delete:
+//! pass (see `examples/serving.rs`). The cache also memoizes the
+//! `Engine::Auto` / [`Engine::Portfolio`] power-iteration estimate of
+//! `rho(A^T A)`, so repeated fits against one design pay for the
+//! spectral probe once instead of per request:
 //!
 //! ```
 //! use shotgun::api::Fit;

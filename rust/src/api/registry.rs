@@ -22,7 +22,9 @@
 //! everywhere.
 
 use super::error::ShotgunError;
-use crate::coordinator::{Engine as ExecEngine, Shotgun, ShotgunCdn, ShotgunConfig};
+use crate::coordinator::{
+    Engine as ExecEngine, Portfolio, PortfolioReport, Shotgun, ShotgunCdn, ShotgunConfig,
+};
 use crate::objective::{HuberProblem, LassoProblem, LogisticProblem, Loss, SqHingeProblem};
 use crate::sparsela::Design;
 use crate::solvers::common::{CdSolve, LassoSolver, SolveOptions, SolveResult};
@@ -165,6 +167,12 @@ pub trait DynCdSolver {
         x0: &[f64],
         opts: &SolveOptions,
     ) -> Result<SolveResult, ShotgunError>;
+
+    /// The last race's [`PortfolioReport`], for the `"portfolio"` entry;
+    /// every other solver keeps the default `None`.
+    fn portfolio_report(&self) -> Option<&PortfolioReport> {
+        None
+    }
 }
 
 /// What one `SolveOptions::max_iters` unit means for a solver — budget
@@ -473,6 +481,44 @@ impl DynCdSolver for HardL0Dyn {
     }
 }
 
+/// Adapter for the racing engine: forwards like [`MultiLoss`] but also
+/// surfaces the last race's [`PortfolioReport`] through the dyn handle
+/// so the front door can attach it to `FitReport::portfolio`.
+struct PortfolioDyn {
+    losses: LossSet,
+    portfolio: Portfolio,
+}
+
+impl DynCdSolver for PortfolioDyn {
+    fn name(&self) -> &'static str {
+        "portfolio"
+    }
+
+    fn solve(
+        &mut self,
+        prob: ProblemRef<'_, '_>,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> Result<SolveResult, ShotgunError> {
+        if !self.losses.contains(prob.loss()) {
+            return Err(ShotgunError::LossUnsupported {
+                solver: "portfolio".to_string(),
+                loss: prob.loss(),
+            });
+        }
+        Ok(match prob {
+            ProblemRef::Lasso(p) => self.portfolio.solve_cd(p, x0, opts),
+            ProblemRef::Logistic(p) => self.portfolio.solve_cd(p, x0, opts),
+            ProblemRef::SqHinge(p) => self.portfolio.solve_cd(p, x0, opts),
+            ProblemRef::Huber(p) => self.portfolio.solve_cd(p, x0, opts),
+        })
+    }
+
+    fn portfolio_report(&self) -> Option<&PortfolioReport> {
+        self.portfolio.report()
+    }
+}
+
 // ---------------------------------------------------------------------
 // the built-in roster
 // ---------------------------------------------------------------------
@@ -720,6 +766,24 @@ fn builtin_entries() -> Vec<RegistryEntry> {
                 })
             },
         },
+        RegistryEntry {
+            name: "portfolio",
+            caps: Capabilities {
+                parallel: true,
+                deterministic: false,
+                iter_unit: IterUnit::Round,
+                schedule_aware: true,
+                ..cd
+            },
+            // SolverParams::p seeds the roster as the P* estimate —
+            // Fit resolves it through the memoized ProblemCache::pstar
+            factory: |p, losses| {
+                Box::new(PortfolioDyn {
+                    losses,
+                    portfolio: Portfolio::auto(p.p),
+                })
+            },
+        },
     ]
 }
 
@@ -881,6 +945,32 @@ mod tests {
         assert!(reg.capabilities("shotgun-threaded").unwrap().schedule_aware);
         assert!(!reg.capabilities("shooting").unwrap().schedule_aware);
         assert!(!reg.capabilities("sgd").unwrap().schedule_aware);
+    }
+
+    #[test]
+    fn portfolio_entry_registered() {
+        let reg = SolverRegistry::global();
+        let caps = reg.capabilities("portfolio").unwrap();
+        assert!(caps.parallel && !caps.deterministic && caps.schedule_aware);
+        assert!(matches!(caps.iter_unit, IterUnit::Round));
+        assert!(
+            !caps.fig3_lasso && !caps.fig4_logreg,
+            "the racing meta-engine is not a paper comparator"
+        );
+        for loss in Loss::ALL {
+            assert!(caps.supports(loss), "{loss:?} missing from portfolio");
+        }
+        let params = SolverParams {
+            p: 3,
+            ..Default::default()
+        };
+        assert_eq!(reg.get("portfolio").unwrap().label(&params), "portfolio-p3");
+        let s = reg.create("portfolio", &params).unwrap();
+        assert_eq!(s.name(), "portfolio");
+        assert!(s.portfolio_report().is_none(), "no race has run yet");
+        // every OTHER solver keeps the trait default
+        let shooting = reg.create("shooting", &params).unwrap();
+        assert!(shooting.portfolio_report().is_none());
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! * the XLA engine (`runtime::xla_engine`) — the TPU-shaped synchronous
 //!   block round through the AOT Pallas kernels (DESIGN.md
 //!   §Hardware-Adaptation).
+//! * [`portfolio`] — the racing meta-engine: a roster of the above
+//!   (engine family x P) runs concurrently on scoped threads, first to
+//!   tolerance raises a shared stop flag and the losers' states are
+//!   recorded in a [`PortfolioReport`].
 //!
 //! Every engine has ONE `solve_cd` body generic over
 //! [`crate::objective::CdObjective`] — the squared and logistic losses
@@ -22,7 +26,9 @@
 //! [`pstar`] provides the plug-in `P* = ceil(d/rho)` estimate
 //! (Theorem 3.2) via power iteration — the default engine choice of the
 //! public front door ([`Engine::Auto`](crate::api::Engine) in
-//! [`api::Fit`](crate::api::Fit) runs it on every fit); [`cdn_round`] is Shotgun CDN
+//! [`api::Fit`](crate::api::Fit) reads it through the
+//! [`ProblemCache`](crate::objective::ProblemCache) memo, one estimate
+//! per design per seed); [`cdn_round`] is Shotgun CDN
 //! (§4.2.1) — second-order rounds, generic over the same trait;
 //! [`schedule`] is the coordinate scheduler (active-set shrinking with
 //! KKT recheck) every engine and sequential baseline draws from, which
@@ -33,12 +39,14 @@ pub mod atomic;
 pub mod beyond_l1;
 pub mod cdn_round;
 pub mod exact;
+pub mod portfolio;
 pub mod pstar;
 pub mod schedule;
 pub mod threaded;
 
 pub use cdn_round::ShotgunCdn;
 pub use exact::{RoundOutcome, ShotgunExact};
+pub use portfolio::{MemberConfig, MemberKind, MemberStat, Portfolio, PortfolioReport};
 pub use pstar::PStar;
 pub use schedule::{
     AccumulatorMode, ActiveSet, FeatureClusters, SchedulePolicy, SharedActiveSet, ShrinkConfig,

@@ -1,0 +1,366 @@
+//! The portfolio racing engine: run a small roster of solver configs
+//! (engine family x worker count) concurrently on scoped threads, all
+//! attacking the same problem from the same start, and return the first
+//! one to reach tolerance. The winner raises the shared [`StopFlag`]
+//! wired into every member's [`SolveOptions`]; losers observe it within
+//! one round/epoch (every solve loop gates on
+//! [`Recorder::out_of_budget`](crate::solvers::common::Recorder::out_of_budget),
+//! and the asynchronous monitor polls it between wakes) and exit with
+//! their partial state, which is recorded as loser stats in the
+//! [`PortfolioReport`].
+//!
+//! Why race at all: `Engine::Auto` commits to ONE engine and ONE worker
+//! count up front from a single power-iteration estimate of Theorem
+//! 3.2's `rho(A^T A)` — a launch-time guess that is wrong whenever the
+//! estimate is loose or the conflict structure changes as the active
+//! set shrinks. Racing {exact, threaded-atomic, threaded-sharded, CDN}
+//! x P in {P*, P*/2, hw} costs bounded extra CPU (the losers die one
+//! round after the winner) and removes the guess from the critical
+//! path. Scherrer et al. (arXiv 1206.6409) observe that the update
+//! scheme choice dominates wall-clock on large L1 problems; the
+//! portfolio makes that choice empirically per problem.
+//!
+//! `std::thread::scope` structurally guarantees every racing thread is
+//! joined before `solve_cd` returns — no detached loser can outlive the
+//! call (`tests/portfolio.rs` pins this and the forced-winner
+//! bit-identity contract).
+
+use super::schedule::AccumulatorMode;
+use super::{ShotgunCdn, ShotgunConfig, ShotgunExact, ShotgunThreaded};
+use crate::objective::CdObjective;
+use crate::solvers::common::{CdSolve, SolveOptions, SolveResult, StopFlag};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Which solver family a portfolio member runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemberKind {
+    /// Synchronous exact Shotgun rounds (deterministic).
+    Exact,
+    /// Asynchronous CAS workers (the paper's implementation).
+    ThreadedAtomic,
+    /// Bulk-synchronous sharded accumulator (deterministic).
+    ThreadedSharded,
+    /// Shotgun CDN second-order rounds (§4.2.1).
+    Cdn,
+}
+
+impl MemberKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MemberKind::Exact => "exact",
+            MemberKind::ThreadedAtomic => "atomic",
+            MemberKind::ThreadedSharded => "sharded",
+            MemberKind::Cdn => "cdn",
+        }
+    }
+}
+
+/// One racing configuration: engine family x parallel update count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemberConfig {
+    pub kind: MemberKind,
+    pub p: usize,
+}
+
+impl MemberConfig {
+    /// Stable display/bench key, e.g. `"sharded-p4"`.
+    pub fn label(&self) -> String {
+        format!("{}-p{}", self.kind.as_str(), self.p)
+    }
+
+    /// Run this configuration alone (no race). The portfolio's member
+    /// threads call exactly this body with the shared race flag wired
+    /// into `opts.stop`, so a forced-winner portfolio result is
+    /// bit-identical to this standalone run for the deterministic
+    /// members (`tests/portfolio.rs::forced_winner_bit_identical`).
+    pub fn solve<O: CdObjective + Sync>(
+        &self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+        divergence_factor: f64,
+    ) -> SolveResult {
+        let cfg = ShotgunConfig {
+            p: self.p,
+            divergence_factor,
+            ..Default::default()
+        };
+        match self.kind {
+            MemberKind::Exact => ShotgunExact::new(cfg).solve_cd(obj, x0, opts),
+            MemberKind::ThreadedAtomic => {
+                let o = SolveOptions {
+                    accumulator: AccumulatorMode::Atomic,
+                    ..opts.clone()
+                };
+                ShotgunThreaded::new(cfg).solve_cd(obj, x0, &o)
+            }
+            MemberKind::ThreadedSharded => {
+                let o = SolveOptions {
+                    accumulator: AccumulatorMode::Sharded { threads: 0 },
+                    ..opts.clone()
+                };
+                ShotgunThreaded::new(cfg).solve_cd(obj, x0, &o)
+            }
+            MemberKind::Cdn => ShotgunCdn::with_p(self.p).solve_cd(obj, x0, opts),
+        }
+    }
+}
+
+/// A loser's state at the moment it observed the stop flag.
+#[derive(Clone, Debug)]
+pub struct MemberStat {
+    pub label: String,
+    pub engine: &'static str,
+    pub p: usize,
+    /// Rounds/epochs completed when the member exited (at cancellation
+    /// for losers that were still running).
+    pub iters_at_cancel: u64,
+    pub converged: bool,
+    pub objective: f64,
+    pub seconds: f64,
+}
+
+/// What the race looked like: who won, and where every loser was when
+/// the flag came down. Attached to
+/// [`FitReport::portfolio`](crate::api::FitReport) by the front door.
+#[derive(Clone, Debug)]
+pub struct PortfolioReport {
+    /// Winning member's label (e.g. `"sharded-p4"`).
+    pub winner: String,
+    /// Index into the member roster.
+    pub winner_index: usize,
+    pub losers: Vec<MemberStat>,
+}
+
+/// The racing engine itself. Implements [`CdSolve`], so the registry
+/// erases it behind [`DynCdSolver`](crate::api::DynCdSolver) like every
+/// other engine; callers go through `Engine::Portfolio` or the
+/// `"portfolio"` registry entry.
+pub struct Portfolio {
+    pub members: Vec<MemberConfig>,
+    /// Test hook: every member still runs, but only this index may
+    /// claim the race (it raises the stop flag when it finishes,
+    /// converged or not) — the deterministic harness behind the
+    /// forced-winner bit-identity contract.
+    pub forced_winner: Option<usize>,
+    /// Divergence abort factor forwarded to every member.
+    pub divergence_factor: f64,
+    last_report: Option<PortfolioReport>,
+}
+
+/// Hardware worker-pool bound used by the default roster.
+pub fn hw_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+impl Portfolio {
+    pub fn new(members: Vec<MemberConfig>) -> Portfolio {
+        assert!(!members.is_empty(), "portfolio needs at least one member");
+        Portfolio {
+            members,
+            forced_winner: None,
+            divergence_factor: ShotgunConfig::default().divergence_factor,
+            last_report: None,
+        }
+    }
+
+    /// The default roster: {exact, atomic, sharded, CDN} x P in
+    /// {P*, P*/2, hw}, deduplicated (small P* collapses the P axis).
+    /// P is clamped to `max(4*hw, 16)` — the threaded members spawn P
+    /// OS threads, and a loose power-iteration estimate on a
+    /// near-orthogonal design can put P* in the thousands.
+    pub fn roster(p_star: usize, hw: usize) -> Vec<MemberConfig> {
+        let cap = (hw * 4).max(16);
+        let ps = [
+            p_star.clamp(1, cap),
+            (p_star / 2).clamp(1, cap),
+            hw.clamp(1, cap),
+        ];
+        let kinds = [
+            MemberKind::Exact,
+            MemberKind::ThreadedAtomic,
+            MemberKind::ThreadedSharded,
+            MemberKind::Cdn,
+        ];
+        let mut members = Vec::new();
+        for &kind in &kinds {
+            for &p in &ps {
+                let m = MemberConfig { kind, p };
+                if !members.contains(&m) {
+                    members.push(m);
+                }
+            }
+        }
+        members
+    }
+
+    /// Roster from a P* estimate, bounded by the hardware pool.
+    pub fn auto(p_star: usize) -> Portfolio {
+        Portfolio::new(Portfolio::roster(p_star, hw_parallelism()))
+    }
+
+    /// The last race's report (winner + loser stats), if any.
+    pub fn report(&self) -> Option<&PortfolioReport> {
+        self.last_report.as_ref()
+    }
+
+    /// Race every member to tolerance; return the winner's result with
+    /// `solver` renamed to `portfolio[<winner's solver>]`. All racing
+    /// threads are joined before this returns (scoped threads). The
+    /// caller's own `opts.stop` is bridged into the race flag, so an
+    /// external cancel stops every member.
+    pub fn solve_cd<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let n_members = self.members.len();
+        let race = StopFlag::new();
+        let winner = AtomicUsize::new(usize::MAX);
+        let finished = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<SolveResult>>> =
+            (0..n_members).map(|_| Mutex::new(None)).collect();
+        let forced = self.forced_winner;
+        let df = self.divergence_factor;
+
+        std::thread::scope(|scope| {
+            for (i, &member) in self.members.iter().enumerate() {
+                let race = &race;
+                let winner = &winner;
+                let finished = &finished;
+                let slots = &slots;
+                scope.spawn(move || {
+                    let m_opts = SolveOptions {
+                        stop: race.clone(),
+                        ..opts.clone()
+                    };
+                    let res = member.solve(obj, x0, &m_opts, df);
+                    // claim protocol: first CONVERGED member wins the
+                    // CAS and flags everyone down; under a forced
+                    // winner, only that index may claim (converged or
+                    // not), so losers can never perturb its trajectory
+                    let claims = match forced {
+                        Some(f) => f == i,
+                        None => res.converged,
+                    };
+                    if claims
+                        && winner
+                            .compare_exchange(
+                                usize::MAX,
+                                i,
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            )
+                            .is_ok()
+                    {
+                        race.raise();
+                    }
+                    *slots[i].lock().unwrap() = Some(res);
+                    finished.fetch_add(1, Ordering::Release);
+                });
+            }
+            // bridge the caller's external stop into the race while the
+            // field comes home
+            while finished.load(Ordering::Acquire) < n_members {
+                if opts.stop.raised() {
+                    race.raise();
+                }
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        });
+
+        let mut results: Vec<SolveResult> = slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("every member records a result"))
+            .collect();
+        let win = match (forced, winner.load(Ordering::Acquire)) {
+            (Some(f), _) => f,
+            (None, usize::MAX) => {
+                // nobody converged (budget/cancel): best finite
+                // objective wins the salvage
+                results
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| r.objective.is_finite())
+                    .min_by(|(_, a), (_, b)| a.objective.total_cmp(&b.objective))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            }
+            (None, w) => w,
+        };
+        let losers = results
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != win)
+            .map(|(i, r)| MemberStat {
+                label: self.members[i].label(),
+                engine: self.members[i].kind.as_str(),
+                p: self.members[i].p,
+                iters_at_cancel: r.iters,
+                converged: r.converged,
+                objective: r.objective,
+                seconds: r.seconds,
+            })
+            .collect();
+        self.last_report = Some(PortfolioReport {
+            winner: self.members[win].label(),
+            winner_index: win,
+            losers,
+        });
+        let mut res = results.swap_remove(win);
+        res.solver = format!("portfolio[{}]", res.solver);
+        res
+    }
+}
+
+impl CdSolve for Portfolio {
+    fn solve_obj<O: CdObjective + Sync>(
+        &mut self,
+        obj: &O,
+        x0: &[f64],
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        self.solve_cd(obj, x0, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_shape_and_dedup() {
+        // generous P*: full 4 x 3 grid, all distinct
+        let full = Portfolio::roster(8, 16);
+        assert_eq!(full.len(), 12);
+        // P* = 1 collapses {P*, P*/2} and hw = 1 collapses everything
+        let tiny = Portfolio::roster(1, 1);
+        assert_eq!(tiny.len(), 4, "{tiny:?}");
+        for m in &tiny {
+            assert_eq!(m.p, 1);
+        }
+        // labels are unique keys
+        let labels: std::collections::HashSet<String> =
+            full.iter().map(|m| m.label()).collect();
+        assert_eq!(labels.len(), full.len());
+        // a runaway P* estimate is clamped to max(4*hw, 16): no member
+        // may ask a threaded engine for thousands of OS threads
+        let clamped = Portfolio::roster(10_000, 4);
+        assert!(clamped.iter().all(|m| m.p <= 16), "{clamped:?}");
+        assert_eq!(clamped.len(), 8, "P collapses to {{16, 4}} per kind");
+    }
+
+    #[test]
+    fn member_labels() {
+        let m = MemberConfig {
+            kind: MemberKind::ThreadedSharded,
+            p: 4,
+        };
+        assert_eq!(m.label(), "sharded-p4");
+        assert_eq!(MemberKind::Cdn.as_str(), "cdn");
+    }
+}

@@ -36,8 +36,8 @@ use super::{RoundOutcome, ShotgunConfig};
 use crate::objective::{CdObjective, LassoProblem, LogisticProblem, Loss};
 use crate::solvers::common::{CdSolve, Recorder, SolveOptions, SolveResult};
 use crate::util::rng::Rng;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Barrier, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex, RwLock};
 
 pub struct ShotgunThreaded {
     pub config: ShotgunConfig,
@@ -90,6 +90,17 @@ pub struct DriftCache {
     col_nrm: Vec<f64>,
     drift: f64,
     limit: f64,
+    /// Rayleigh-quotient accumulator for online P adaptation (opt-in
+    /// via [`enable_rayleigh`](Self::enable_rayleigh)): across monitor
+    /// wakes, `ray_num += ||A dx||^2` and `ray_den += ||dx||^2` over
+    /// the observed update directions `dx = x - x_prev`, so
+    /// `ray_num / ray_den` is a Rayleigh estimate of `rho(A^T A)`
+    /// along the directions CD is actually moving — Theorem 3.2's
+    /// spectral bound measured at runtime instead of guessed once by
+    /// power iteration. `None` = tracking off (zero cost).
+    ray_scratch: Option<Vec<f64>>,
+    ray_num: f64,
+    ray_den: f64,
 }
 
 impl DriftCache {
@@ -100,7 +111,29 @@ impl DriftCache {
             col_nrm: (0..obj.d()).map(|j| obj.col_norm_sq(j).sqrt()).collect(),
             drift: 0.0,
             limit,
+            ray_scratch: None,
+            ray_num: 0.0,
+            ray_den: 0.0,
         }
+    }
+
+    /// Turn on Rayleigh tracking (see the field docs); sized off the
+    /// cache, one extra n-vector.
+    pub fn enable_rayleigh(&mut self) {
+        self.ray_scratch = Some(vec![0.0; self.cache.len()]);
+    }
+
+    /// `rho(A^T A)` estimated along the observed update directions, or
+    /// `None` before any tracked movement (or with tracking off).
+    pub fn rho_estimate(&self) -> Option<f64> {
+        (self.ray_den > 0.0 && self.ray_num > 0.0).then(|| self.ray_num / self.ray_den)
+    }
+
+    /// Start a fresh estimation window (called after each resize so
+    /// stale directions do not dominate the next decision).
+    pub fn reset_rayleigh(&mut self) {
+        self.ray_num = 0.0;
+        self.ray_den = 0.0;
     }
 
     /// The drift limit used by the monitor for a given tolerance: keeps
@@ -126,7 +159,21 @@ impl DriftCache {
             if dx != 0.0 {
                 obj.design().col_axpy(j, dx, &mut self.cache);
                 self.drift += dx.abs() * self.col_nrm[j];
+                if let Some(s) = &mut self.ray_scratch {
+                    obj.design().col_axpy(j, dx, s);
+                    self.ray_den += dx * dx;
+                }
                 *prev = xj;
+            }
+        }
+        // fold this wake's direction into the Rayleigh estimate:
+        // scratch holds A (x - x_prev); square-sum it and re-zero
+        if let Some(s) = &mut self.ray_scratch {
+            for v in s.iter_mut() {
+                if *v != 0.0 {
+                    self.ray_num += *v * *v;
+                    *v = 0.0;
+                }
             }
         }
         if self.drift > self.limit {
@@ -156,6 +203,12 @@ struct ShardRound {
     /// This round's unique draws as `(j, multiplicity)`, sorted by `j` —
     /// the canonical order the chunks partition and the merge follows.
     uniq: Vec<(u32, u32)>,
+    /// How many of the pool's workers compute this round — the online-P
+    /// controller's logical resize. Workers `w >= active_workers` still
+    /// hit both barriers but own an empty chunk, so growing/shrinking
+    /// never re-partitions the canonical order mid-round and the
+    /// trajectory stays bit-identical at every worker count.
+    active_workers: usize,
     stop: bool,
 }
 
@@ -181,14 +234,12 @@ fn shard_chunk(len: usize, w: usize, workers: usize) -> (usize, usize) {
 /// dense walk deliberately keeps explicit zeros — adding `eff * 0.0` can
 /// flip a `-0.0` cache entry, and bit-identity with the exact engine is
 /// the contract here).
-fn shard_compute<O: CdObjective>(
-    obj: &O,
-    sh: &ShardRound,
-    w: usize,
-    workers: usize,
-    out: &mut ShardOut,
-) {
-    let (lo, hi) = shard_chunk(sh.uniq.len(), w, workers);
+fn shard_compute<O: CdObjective>(obj: &O, sh: &ShardRound, w: usize, out: &mut ShardOut) {
+    let aw = sh.active_workers;
+    if w >= aw {
+        return; // parked out of the live set this round
+    }
+    let (lo, hi) = shard_chunk(sh.uniq.len(), w, aw);
     for &(j, count) in &sh.uniq[lo..hi] {
         let j = j as usize;
         let g = obj.grad_j(j, &sh.cache);
@@ -210,6 +261,92 @@ fn shard_compute<O: CdObjective>(
                 }
             }
         }
+    }
+}
+
+/// One asynchronous worker's draw/update state, plus the fused update
+/// body shared VERBATIM by the fixed-budget and adaptive worker loops —
+/// the two loops differ only in how updates are claimed (pre-split
+/// budgets vs a shared counter gated by the live-set size), never in
+/// the update protocol itself.
+struct WorkerCtx {
+    rng: Rng,
+    draw_state: WorkerDrawState,
+    epoch: u64,
+    act: Arc<Vec<u32>>,
+}
+
+impl WorkerCtx {
+    fn new(w: usize, p: usize, opts: &SolveOptions, shared: &SharedActiveSet) -> Self {
+        let (epoch, act) = shared.snapshot();
+        WorkerCtx {
+            rng: Rng::new(opts.seed.wrapping_add(w as u64 * 0x9E37)),
+            draw_state: WorkerDrawState::new(&opts.schedule, p),
+            epoch,
+            act,
+        }
+    }
+
+    /// One update: refresh the local active-set snapshot if the monitor
+    /// published (one relaxed load), draw a coordinate, then the fused
+    /// column walk — fetch the column once, gather the gradient-weighted
+    /// dot from the live cache, CAS-update `x_j`, and scatter the same
+    /// (indices, values) walk; only the iteration shape differs per
+    /// design.
+    #[inline]
+    fn update<O: CdObjective>(
+        &mut self,
+        obj: &O,
+        x: &AtomicVec,
+        r: &AtomicVec,
+        shared: &SharedActiveSet,
+        clusters: Option<&FeatureClusters>,
+        window_max_bits: &AtomicU64,
+        total_updates: &AtomicU64,
+    ) {
+        if shared.epoch_relaxed() != self.epoch {
+            let s = shared.snapshot();
+            self.epoch = s.0;
+            self.act = s.1;
+        }
+        // uniform: the historical act[rng.below(len)] draw; clustered:
+        // rejection-sample away from this worker's own recent clusters
+        // (there is no round boundary to stratify against)
+        let j = self.draw_state.draw(&self.act, clusters, &mut self.rng);
+        let dx = match obj.design() {
+            crate::sparsela::Design::Sparse(m) => {
+                let (idx, val) = m.col(j);
+                let mut g = 0.0;
+                for (&i, &v) in idx.iter().zip(val) {
+                    let i = i as usize;
+                    g += v * obj.grad_weight(i, r.load(i));
+                }
+                let dx = cas_step(obj, x, j, g);
+                if dx != 0.0 {
+                    for (&i, &v) in idx.iter().zip(val) {
+                        r.fetch_add(i as usize, dx * v);
+                    }
+                }
+                dx
+            }
+            crate::sparsela::Design::Dense(m) => {
+                let col = m.col(j);
+                let mut g = 0.0;
+                for (i, &v) in col.iter().enumerate() {
+                    g += v * obj.grad_weight(i, r.load(i));
+                }
+                let dx = cas_step(obj, x, j, g);
+                if dx != 0.0 {
+                    for (i, &v) in col.iter().enumerate() {
+                        r.fetch_add(i, dx * v);
+                    }
+                }
+                dx
+            }
+        };
+        // fold |dx| into the shared window max
+        window_max_bits.fetch_max(dx.abs().to_bits(), Ordering::Relaxed);
+        total_updates.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -252,7 +389,24 @@ impl ShotgunThreaded {
 
         // total update budget: max_iters rounds x P updates
         let budget = opts.max_iters.saturating_mul(p as u64);
-        let worker_budgets = split_budget(budget, p);
+        // online P adaptation (adapt_p_every > 0): spawn the full
+        // hardware pool but gate workers behind the live-set size
+        // `p_live`; the monitor re-estimates Theorem 3.2's spectral
+        // bound from observed update directions and resizes between
+        // wakes. Updates are then claimed from one shared counter (the
+        // pre-split budgets assume a fixed worker set).
+        let adapt = opts.adapt_p_every > 0;
+        let hw = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(p);
+        let pool = if adapt { p.max(hw) } else { p };
+        let p_live = AtomicUsize::new(p.min(pool));
+        let claimed = AtomicU64::new(0);
+        let worker_budgets = if adapt {
+            Vec::new()
+        } else {
+            split_budget(budget, p)
+        };
         let mut converged = false;
 
         // correlation sketch for the clustered draw policy, shared
@@ -268,7 +422,7 @@ impl ShotgunThreaded {
         };
 
         std::thread::scope(|scope| {
-            for (w, &my_budget) in worker_budgets.iter().enumerate() {
+            for w in 0..pool {
                 let x = &x;
                 let r = &r;
                 let stop = &stop;
@@ -276,65 +430,51 @@ impl ShotgunThreaded {
                 let window_max_bits = &window_max_bits;
                 let shared = &shared;
                 let clusters = &clusters;
-                let mut rng = Rng::new(opts.seed.wrapping_add(w as u64 * 0x9E37));
-                let mut draw_state = WorkerDrawState::new(&opts.schedule, p);
+                let p_live = &p_live;
+                let claimed = &claimed;
+                let my_budget = if adapt { 0 } else { worker_budgets[w] };
                 scope.spawn(move || {
-                    let (mut epoch, mut act) = shared.snapshot();
-                    for _ in 0..my_budget {
-                        if stop.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        // one relaxed load keeps the local active-set
-                        // snapshot current across monitor publishes
-                        if shared.epoch_relaxed() != epoch {
-                            let s = shared.snapshot();
-                            epoch = s.0;
-                            act = s.1;
-                        }
-                        // uniform: the historical act[rng.below(len)]
-                        // draw; clustered: rejection-sample away from
-                        // this worker's own recent clusters (there is no
-                        // round boundary to stratify against)
-                        let j = draw_state.draw(&act, clusters.as_ref(), &mut rng);
-                        // fused update: fetch the column once, gather the
-                        // gradient-weighted dot from the live cache,
-                        // CAS-update x_j, then scatter the same
-                        // (indices, values) walk; only the iteration
-                        // shape differs per design
-                        let dx = match obj.design() {
-                            crate::sparsela::Design::Sparse(m) => {
-                                let (idx, val) = m.col(j);
-                                let mut g = 0.0;
-                                for (&i, &v) in idx.iter().zip(val) {
-                                    let i = i as usize;
-                                    g += v * obj.grad_weight(i, r.load(i));
-                                }
-                                let dx = cas_step(obj, x, j, g);
-                                if dx != 0.0 {
-                                    for (&i, &v) in idx.iter().zip(val) {
-                                        r.fetch_add(i as usize, dx * v);
-                                    }
-                                }
-                                dx
+                    let mut ctx = WorkerCtx::new(w, p, opts, shared);
+                    if adapt {
+                        // adaptive loop: claim updates from the shared
+                        // counter while inside the live set; parked
+                        // workers nap until the controller grows P
+                        loop {
+                            if stop.load(Ordering::Relaxed) {
+                                return;
                             }
-                            crate::sparsela::Design::Dense(m) => {
-                                let col = m.col(j);
-                                let mut g = 0.0;
-                                for (i, &v) in col.iter().enumerate() {
-                                    g += v * obj.grad_weight(i, r.load(i));
-                                }
-                                let dx = cas_step(obj, x, j, g);
-                                if dx != 0.0 {
-                                    for (i, &v) in col.iter().enumerate() {
-                                        r.fetch_add(i, dx * v);
-                                    }
-                                }
-                                dx
+                            if w >= p_live.load(Ordering::Relaxed) {
+                                std::thread::sleep(std::time::Duration::from_micros(50));
+                                continue;
                             }
-                        };
-                        // fold |dx| into the shared window max
-                        window_max_bits.fetch_max(dx.abs().to_bits(), Ordering::Relaxed);
-                        total_updates.fetch_add(1, Ordering::Relaxed);
+                            if claimed.fetch_add(1, Ordering::Relaxed) >= budget {
+                                return;
+                            }
+                            ctx.update(
+                                obj,
+                                x,
+                                r,
+                                shared,
+                                clusters.as_ref(),
+                                window_max_bits,
+                                total_updates,
+                            );
+                        }
+                    } else {
+                        for _ in 0..my_budget {
+                            if stop.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            ctx.update(
+                                obj,
+                                x,
+                                r,
+                                shared,
+                                clusters.as_ref(),
+                                window_max_bits,
+                                total_updates,
+                            );
+                        }
                     }
                 });
             }
@@ -343,13 +483,18 @@ impl ShotgunThreaded {
             // scheduler shrinking against the drift-bounded cache
             let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
             let mut last_updates = 0u64;
+            let mut wakes = 0u64;
             let mut drift = DriftCache::new(obj, x0, DriftCache::limit_for_tol(opts.tol));
+            if adapt {
+                drift.enable_rayleigh();
+            }
             loop {
                 std::thread::sleep(std::time::Duration::from_micros(200));
                 let ups = total_updates.load(Ordering::Relaxed);
                 let done = ups >= budget;
                 if ups.saturating_sub(last_updates) >= d as u64 || done {
                     last_updates = ups;
+                    wakes += 1;
                     let xs = x.snapshot();
                     // incremental cache advance (the CAS-maintained r
                     // drifts and is never trusted; the DriftCache pays
@@ -414,8 +559,22 @@ impl ShotgunThreaded {
                             shared.publish(next);
                         }
                     }
+                    // online P controller: every adapt_p_every wakes,
+                    // re-read the Rayleigh estimate of rho(A^T A) and
+                    // resize the live worker set to Theorem 3.2's
+                    // P* = d / rho, bounded by the spawned pool
+                    if adapt && wakes % opts.adapt_p_every == 0 {
+                        if let Some(rho) = drift.rho_estimate() {
+                            let p_new = ((d as f64 / rho).ceil().max(1.0) as usize).min(pool);
+                            p_live.store(p_new.max(1), Ordering::Relaxed);
+                            drift.reset_rayleigh();
+                        }
+                    }
                 }
-                if done || (opts.max_seconds > 0.0 && rec.watch.seconds() > opts.max_seconds) {
+                if done
+                    || opts.stop.raised()
+                    || (opts.max_seconds > 0.0 && rec.watch.seconds() > opts.max_seconds)
+                {
                     stop.store(true, Ordering::Relaxed);
                     break;
                 }
@@ -439,6 +598,9 @@ impl ShotgunThreaded {
         };
         let mut res = rec.finish(base, xs, f, iters, converged);
         res.solver = format!("{base}-p{}", self.config.p);
+        if adapt {
+            res.solver.push_str("-adapt");
+        }
         res
     }
 
@@ -466,7 +628,19 @@ impl ShotgunThreaded {
         let d = obj.d();
         let p = self.config.p;
         let workers = if threads == 0 { p } else { threads }.max(1);
+        // online adaptation (adapt_p_every > 0): the controller resizes
+        // the LIVE worker subset (`ShardRound::active_workers`) from a
+        // merge-time Rayleigh estimate of rho(A^T A); the round's draw
+        // count P and the canonical merge order never change, so the
+        // trajectory stays bit-identical to the exact engine across
+        // every resize.
+        let adapt = opts.adapt_p_every > 0;
         let cache0 = obj.init_cache(x0);
+        let n_rows = cache0.len();
+        let mut ray_scratch = if adapt { vec![0.0f64; n_rows] } else { Vec::new() };
+        let mut ray_touched: Vec<u32> = Vec::new();
+        let mut ray_num = 0.0f64;
+        let mut ray_den = 0.0f64;
         let f0 = obj.value(&cache0, x0);
         let f_diverge = self.config.divergence_factor * f0.abs().max(1.0);
         let mut rec = Recorder::new(opts);
@@ -498,6 +672,7 @@ impl ShotgunThreaded {
             x: x0.to_vec(),
             cache: cache0,
             uniq: Vec::with_capacity(p),
+            active_workers: workers,
             stop: false,
         });
         let outs: Vec<Mutex<ShardOut>> = (0..workers)
@@ -519,7 +694,7 @@ impl ShotgunThreaded {
                             return;
                         }
                         let mut out = outs[w].lock().unwrap();
-                        shard_compute(obj, &sh, w, workers, &mut out);
+                        shard_compute(obj, &sh, w, &mut out);
                     }
                     barrier.wait(); // B: shard ready for the merge
                 });
@@ -576,7 +751,7 @@ impl ShotgunThreaded {
                 {
                     let sh = shared.read().unwrap();
                     let mut out = outs[0].lock().unwrap();
-                    shard_compute(obj, &sh, 0, workers, &mut out);
+                    shard_compute(obj, &sh, 0, &mut out);
                 }
                 barrier.wait(); // B
 
@@ -597,15 +772,47 @@ impl ShotgunThreaded {
                         let eff = count as f64 * dx;
                         if eff != 0.0 {
                             sh.x[j] += eff;
+                            if adapt {
+                                ray_den += eff * eff;
+                            }
                         }
                     }
                     for &(i, dv) in out.scatter.iter() {
                         sh.cache[i as usize] += dv;
+                        if adapt {
+                            // the summed scatter deltas per row ARE this
+                            // round's A * dx — reuse them for the
+                            // Rayleigh numerator
+                            ray_scratch[i as usize] += dv;
+                            ray_touched.push(i);
+                        }
                     }
                     out.steps.clear();
                     out.scatter.clear();
                 }
                 debug_assert_eq!(u, sh.uniq.len(), "shards must partition the round");
+                if adapt {
+                    // fold ||A dx||^2 from the touched rows (first visit
+                    // wins; re-visits see the zeroed slot and add 0)
+                    for &i in ray_touched.iter() {
+                        let v = ray_scratch[i as usize];
+                        if v != 0.0 {
+                            ray_num += v * v;
+                            ray_scratch[i as usize] = 0.0;
+                        }
+                    }
+                    ray_touched.clear();
+                    // resize the live worker subset every adapt_p_every
+                    // rounds: Theorem 3.2's P* = d / rho along observed
+                    // update directions, bounded by the spawned pool
+                    if round % opts.adapt_p_every == 0 && ray_den > 0.0 && ray_num > 0.0 {
+                        let rho = ray_num / ray_den;
+                        let aw = ((d as f64 / rho).ceil().max(1.0) as usize).clamp(1, workers);
+                        sh.active_workers = aw;
+                        ray_num = 0.0;
+                        ray_den = 0.0;
+                    }
+                }
                 window_max = window_max.max(max_dx);
                 // convergence / divergence on the exact engine's cadence
                 if round % rounds_per_window == 0 {
@@ -647,6 +854,9 @@ impl ShotgunThreaded {
         };
         let mut res = rec.finish(base, sh.x, f, round, outcome == RoundOutcome::Converged);
         res.solver = format!("{base}-p{p}-sharded");
+        if adapt {
+            res.solver.push_str("-adapt");
+        }
         if outcome == RoundOutcome::Diverged {
             res.solver.push_str("-diverged");
         }

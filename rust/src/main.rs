@@ -35,7 +35,7 @@ USAGE:
   repro solve --data <spec> [--solver auto] [--p 8] [--lam 0.5]
               [--loss squared|logistic|sqhinge|huber] [--tol 1e-7]
               [--max-iters N] [--budget secs] [--seed 42] [--eta R]
-              [--sparsity K] [--huber-delta D]
+              [--sparsity K] [--huber-delta D] [--adapt-p K]
               [--schedule uniform|clustered[:K]]
               [--accumulator atomic|sharded[:T]]
               [--path-to LAM [--path-stages 6]]
@@ -66,9 +66,18 @@ DATA SPECS (--data):
   rcv1:<n>x<d>:<density>          sparse logistic, d > n
   correlated:<n>x<d>:<c>          correlation dial c in [0,1]
 
-SOLVERS (--solver): "auto" (Theorem 3.2 picks P and the engine) or any
-  registry name — run `repro solvers` for the roster + capabilities.
+SOLVERS (--solver): "auto" (Theorem 3.2 picks P and the engine),
+  "portfolio" (race {exact, atomic, sharded, cdn} x {P*, P*/2, hw} to
+  tolerance; first to converge cancels the rest), or any registry name —
+  run `repro solvers` for the roster + capabilities.
   (legacy: `--solver shotgun --engine threaded` maps to shotgun-threaded)
+
+ONLINE P ADAPTATION (threaded engine):
+  --adapt-p K   every K monitor wakes (atomic) / K merge rounds
+                (sharded), re-estimate rho from the observed update
+                directions (Rayleigh quotient) and resize the live
+                worker set to ceil(d/rho_hat), bounded by the hardware
+                pool (0 = off, the default)
 
 SCHEDULING (schedule-aware solvers only — the "sched" set in
   `repro solvers`):
@@ -221,6 +230,7 @@ fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
             o.tol = args.f64_or("tol", 1e-7);
             o.record_every = args.usize_or("record-every", 256) as u64;
             o.seed = seed;
+            o.adapt_p_every = args.usize_or("adapt-p", 0) as u64;
             if let Some(s) = args.get("schedule") {
                 o.schedule = parse_schedule(&s);
             }
@@ -243,6 +253,9 @@ fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
     let engine_flag = args.get("engine");
     fit = match (solver_name.as_str(), engine_flag) {
         ("auto", _) => fit.engine(Engine::Auto),
+        // Engine::Portfolio (not the bare registry entry) so the roster
+        // scales off the memoized P* estimate instead of --p
+        ("portfolio", _) | (_, Some("portfolio")) => fit.engine(Engine::Portfolio),
         ("shotgun", Some("threaded")) => fit.solver("shotgun-threaded"),
         (name, _) => fit.solver(name),
     };
@@ -255,6 +268,23 @@ fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
             if auto.threaded { "threaded" } else { "exact" },
             auto.p
         );
+    }
+    if let Some(pf) = &report.portfolio {
+        println!(
+            "portfolio race: {} won over {} losers",
+            pf.winner,
+            pf.losers.len()
+        );
+        for l in &pf.losers {
+            println!(
+                "  {:<14} cancelled at {} iters (F = {:.6}, {:.3}s{})",
+                l.label,
+                l.iters_at_cancel,
+                l.objective,
+                l.seconds,
+                if l.converged { ", converged" } else { "" }
+            );
+        }
     }
     let res = &report.diagnostics;
     println!(

@@ -4,6 +4,53 @@ use crate::coordinator::schedule::{AccumulatorMode, SchedulePolicy, ShrinkConfig
 use crate::metrics::{Stopwatch, Trace, TracePoint};
 use crate::objective::{LassoProblem, LogisticProblem};
 use crate::sparsela::{vecops, Design};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Cooperative cancellation token polled by every solve loop.
+///
+/// Default is *unwired* (`StopFlag::none()`): `raised()` is always
+/// false and `raise()` is a no-op, so a plain solve pays one `Option`
+/// check per round and behaves exactly as before. The portfolio engine
+/// wires one shared flag (`StopFlag::new()`) into every racing
+/// member's [`SolveOptions`]; the first member to converge raises it
+/// and the losers observe it within one epoch via
+/// [`Recorder::out_of_budget`] (or the threaded monitor's poll).
+/// Callers can also wire their own flag to cancel a fit externally.
+#[derive(Clone, Debug, Default)]
+pub struct StopFlag(Option<Arc<AtomicBool>>);
+
+impl StopFlag {
+    /// A wired flag, initially lowered. Clones share the same cell.
+    pub fn new() -> StopFlag {
+        StopFlag(Some(Arc::new(AtomicBool::new(false))))
+    }
+
+    /// The unwired default: never raised, `raise()` is a no-op.
+    pub fn none() -> StopFlag {
+        StopFlag(None)
+    }
+
+    /// True when this flag can actually be raised (i.e. wired).
+    pub fn is_wired(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Request cancellation. No-op on an unwired flag.
+    pub fn raise(&self) {
+        if let Some(cell) = &self.0 {
+            cell.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Has someone requested cancellation?
+    pub fn raised(&self) -> bool {
+        match &self.0 {
+            Some(cell) => cell.load(Ordering::Relaxed),
+            None => false,
+        }
+    }
+}
 
 /// Options shared by every solver.
 #[derive(Clone, Debug)]
@@ -37,6 +84,18 @@ pub struct SolveOptions {
     /// round boundaries ([`AccumulatorMode::Sharded`]). Other engines
     /// ignore it.
     pub accumulator: AccumulatorMode,
+    /// Cooperative stop flag: every solve loop polls it once per
+    /// round/epoch (via [`Recorder::out_of_budget`]) and exits with
+    /// `converged = false` when raised. Unwired by default (zero-cost);
+    /// the portfolio engine shares one wired flag across its racers.
+    pub stop: StopFlag,
+    /// Online P adaptation cadence for the threaded engine (Theorem
+    /// 3.2 as a runtime controller): every `adapt_p_every` monitor
+    /// wakes (atomic path) or rounds (sharded path) re-estimate the
+    /// spectral bound from observed update directions and resize the
+    /// live worker set, bounded by the hardware pool. 0 = off
+    /// (default). Other engines ignore it.
+    pub adapt_p_every: u64,
 }
 
 impl Default for SolveOptions {
@@ -51,6 +110,8 @@ impl Default for SolveOptions {
             shrink: ShrinkConfig::default(),
             schedule: SchedulePolicy::default(),
             accumulator: AccumulatorMode::default(),
+            stop: StopFlag::none(),
+            adapt_p_every: 0,
         }
     }
 }
@@ -185,10 +246,14 @@ impl<'o> Recorder<'o> {
         }
     }
 
-    /// True when a hard budget (time or iterations) is exhausted.
+    /// True when a hard budget (time or iterations) is exhausted, or a
+    /// cooperative stop was raised via [`SolveOptions::stop`]. Every
+    /// solver's outer loop gates on this, which is what gives the
+    /// portfolio engine per-epoch cancellation for free.
     pub fn out_of_budget(&self, iter: u64) -> bool {
         iter >= self.opts.max_iters
             || (self.opts.max_seconds > 0.0 && self.watch.seconds() >= self.opts.max_seconds)
+            || self.opts.stop.raised()
     }
 
     pub fn finish(
@@ -240,5 +305,27 @@ mod tests {
         let rec = Recorder::new(&opts);
         assert!(!rec.out_of_budget(9));
         assert!(rec.out_of_budget(10));
+    }
+
+    #[test]
+    fn stop_flag_semantics() {
+        let unwired = StopFlag::none();
+        unwired.raise();
+        assert!(!unwired.raised());
+        assert!(!unwired.is_wired());
+
+        let wired = StopFlag::new();
+        let shared = wired.clone();
+        assert!(!wired.raised());
+        shared.raise();
+        assert!(wired.raised(), "clones share the same cell");
+
+        let opts = SolveOptions {
+            max_iters: 100,
+            stop: wired,
+            ..Default::default()
+        };
+        let rec = Recorder::new(&opts);
+        assert!(rec.out_of_budget(0), "raised stop exhausts the budget");
     }
 }

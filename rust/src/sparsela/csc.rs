@@ -211,7 +211,9 @@ impl CscMatrix {
     /// Bit-for-bit equivalent to [`col_dot`](Self::col_dot) followed by
     /// [`col_axpy`](Self::col_axpy) (property-tested in
     /// `tests/proptests.rs`): both paths run the same [`gather`] /
-    /// [`scatter`] kernels.
+    /// [`scatter`] bodies. When AVX2 is live this dispatches ONCE into
+    /// the fused `col_dot_axpy_avx2` region rather than probing per
+    /// kernel (`repro bench kernels` times fused vs two-call).
     #[inline]
     pub fn col_dot_axpy(
         &self,
@@ -222,6 +224,14 @@ impl CscMatrix {
         let (a, b) = (self.indptr[j], self.indptr[j + 1]);
         let idx = &self.indices[a..b];
         let val = &self.values[a..b];
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if super::simd::avx2_active() && r.len() < super::simd::GATHER_LEN_LIMIT {
+            // SAFETY: AVX2 probed at runtime; idx/val span one column so
+            // their lengths match; CSC validation bounds every row index
+            // below r.len(); the length guard keeps gather indices
+            // non-negative under i32 sign extension.
+            return unsafe { super::simd::col_dot_axpy_avx2(idx, val, r, step) };
+        }
         let g = gather(idx, val, r);
         let s = step(g);
         if s != 0.0 {

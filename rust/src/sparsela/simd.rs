@@ -73,7 +73,7 @@ pub fn avx2_active() -> bool {
 pub const GATHER_LEN_LIMIT: usize = 1 << 31;
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-pub use avx2::{axpy_avx2, dot_avx2, gather_avx2, scatter_avx2};
+pub use avx2::{axpy_avx2, col_dot_axpy_avx2, dot_avx2, gather_avx2, scatter_avx2};
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 mod avx2 {
@@ -143,6 +143,34 @@ mod avx2 {
         for (&i, &v) in ri.iter().zip(rv) {
             r[i as usize] += s * v;
         }
+    }
+
+    /// Fused AVX2 coordinate update: `g = gather`, `s = step(g)`, then
+    /// (when `s != 0`) the scatter — all inside ONE `target_feature`
+    /// region, so the dispatcher in `CscMatrix::col_dot_axpy` pays a
+    /// single runtime-probe branch and one cold-callable boundary per
+    /// update instead of two. Bit-identical to the two-call path by
+    /// construction (same gather/scatter bodies, same mul-then-add
+    /// rounding) — `tests/proptests.rs` fuzzes the equivalence and
+    /// `csc.rs::fused_matches_two_call_path` pins it.
+    ///
+    /// # Safety
+    /// Same contract as [`gather_avx2`] + [`scatter_avx2`]: AVX2
+    /// available, `idx.len() == val.len()`, every `idx[k] < r.len()`,
+    /// and `r.len() < GATHER_LEN_LIMIT`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn col_dot_axpy_avx2(
+        idx: &[u32],
+        val: &[f64],
+        r: &mut [f64],
+        step: impl FnOnce(f64) -> f64,
+    ) -> (f64, f64) {
+        let g = gather_avx2(idx, val, r);
+        let s = step(g);
+        if s != 0.0 {
+            scatter_avx2(idx, val, s, r);
+        }
+        (g, s)
     }
 
     /// AVX2 dense dot product, bit-identical to the scalar 8-way kernel
@@ -306,6 +334,42 @@ mod tests {
                     a[i].to_bits(),
                     b[i].to_bits(),
                     "case {case}: element {i}"
+                );
+            }
+        }
+    }
+
+    /// The single-dispatch fused update must stay bit-identical to the
+    /// two-call path (which itself is bit-identical to scalar) for every
+    /// column shape — with and without `--features simd`.
+    #[test]
+    fn fused_col_update_bit_identical_to_two_call() {
+        use crate::sparsela::CscMatrix;
+        let mut rng = Rng::new(0xF0_5E_D1);
+        for case in 0..200 {
+            let n = 1 + rng.below(257);
+            let nnz = rng.below(n + 1);
+            let (idx, val) = random_column(&mut rng, n, nnz);
+            let trip: Vec<(usize, usize, f64)> = idx
+                .iter()
+                .zip(&val)
+                .map(|(&i, &v)| (i as usize, 0, v))
+                .collect();
+            let m = CscMatrix::from_triplets(n, 1, &trip);
+            let base: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut r_fused = base.clone();
+            let mut r_split = base;
+            let (g, s) = m.col_dot_axpy(0, &mut r_fused, |g| 0.25 * g - 1.0);
+            let g2 = m.col_dot(0, &r_split);
+            let s2 = 0.25 * g2 - 1.0;
+            m.col_axpy(0, s2, &mut r_split);
+            assert_eq!(g.to_bits(), g2.to_bits(), "case {case}: g");
+            assert_eq!(s.to_bits(), s2.to_bits(), "case {case}: s");
+            for i in 0..n {
+                assert_eq!(
+                    r_fused[i].to_bits(),
+                    r_split[i].to_bits(),
+                    "case {case}: row {i}"
                 );
             }
         }

@@ -220,6 +220,12 @@ fn all_variants() -> Vec<(ShotgunError, &'static str)> {
             "budget",
         ),
         (
+            ShotgunError::Cancelled {
+                solver: "portfolio[shotgun-threaded-p4-sharded]".into(),
+            },
+            "cancelled",
+        ),
+        (
             ShotgunError::ModelFormat {
                 reason: "missing field \"d\"".into(),
             },

@@ -1,0 +1,329 @@
+//! Portfolio racing engine: cancellation semantics.
+//!
+//! The contracts pinned here (referenced from
+//! `coordinator/portfolio.rs` docs):
+//!
+//! 1. **Forced-winner bit-identity** — a race whose winner is forced to
+//!    a deterministic member returns that member's standalone result
+//!    bit-for-bit: the shared stop flag is only ever raised by the
+//!    forced member itself (after it finishes), so the losers cannot
+//!    perturb its trajectory.
+//! 2. **Losers observe the flag and exit early** — a pre-raised
+//!    external stop cancels every member kind (exact, atomic, sharded,
+//!    CDN) far below its iteration budget; this is the same
+//!    `Recorder::out_of_budget` poll the race winner relies on.
+//! 3. **No detached threads** — `std::thread::scope` joins every racing
+//!    thread before `solve_cd` returns; the OS thread count is back to
+//!    its pre-race value at return (Linux, `/proc/self/status`).
+//! 4. **Online P adaptation is observation-only for the sharded
+//!    engine** — `adapt_p_every > 0` resizes the live worker subset at
+//!    merge boundaries, so the trajectory stays bit-identical to the
+//!    exact engine; the atomic path (which resizes for real) still
+//!    reaches the KKT optimum.
+//! 5. **Front door** — `Engine::Portfolio` through `api::Fit` attaches
+//!    the race report, and an externally cancelled fit surfaces
+//!    `ShotgunError::Cancelled` instead of a silent partial result.
+
+use shotgun::api::{Engine, Fit, ShotgunError};
+use shotgun::coordinator::{
+    AccumulatorMode, MemberConfig, MemberKind, Portfolio, ShotgunConfig, ShotgunExact,
+    ShotgunThreaded,
+};
+use shotgun::data::synth;
+use shotgun::objective::LassoProblem;
+use shotgun::solvers::common::{SolveOptions, StopFlag};
+
+fn assert_bits_eq(a: &[f64], b: &[f64], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (j, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: x[{j}] differs ({x} vs {y})");
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn os_thread_count() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .expect("/proc/self/status readable")
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .expect("Threads: line present")
+        .trim()
+        .parse()
+        .expect("thread count parses")
+}
+
+#[test]
+fn forced_winner_bit_identical_to_standalone() {
+    let ds = synth::sparse_imaging(60, 120, 0.08, 3);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+    let x0 = vec![0.0; 120];
+    let opts = SolveOptions {
+        max_iters: 300_000,
+        tol: 1e-8,
+        ..Default::default()
+    };
+    let df = ShotgunConfig::default().divergence_factor;
+    // every deterministic member kind takes a turn as the forced winner
+    let members = vec![
+        MemberConfig {
+            kind: MemberKind::Exact,
+            p: 4,
+        },
+        MemberConfig {
+            kind: MemberKind::ThreadedSharded,
+            p: 4,
+        },
+        MemberConfig {
+            kind: MemberKind::Cdn,
+            p: 2,
+        },
+    ];
+    for forced in 0..members.len() {
+        let tag = members[forced].label();
+        let standalone = members[forced].solve(&prob, &x0, &opts, df);
+        assert!(standalone.converged, "{tag}: standalone must converge");
+
+        let mut port = Portfolio::new(members.clone());
+        port.forced_winner = Some(forced);
+        let raced = port.solve_cd(&prob, &x0, &opts);
+
+        assert_eq!(raced.solver, format!("portfolio[{}]", standalone.solver));
+        assert_eq!(raced.iters, standalone.iters, "{tag}: iters");
+        assert_eq!(raced.updates, standalone.updates, "{tag}: updates");
+        assert_eq!(raced.converged, standalone.converged, "{tag}: converged");
+        assert_eq!(
+            raced.objective.to_bits(),
+            standalone.objective.to_bits(),
+            "{tag}: objective {} vs {}",
+            raced.objective,
+            standalone.objective
+        );
+        assert_bits_eq(&raced.x, &standalone.x, &tag);
+
+        let rep = port.report().expect("race leaves a report");
+        assert_eq!(rep.winner_index, forced, "{tag}");
+        assert_eq!(rep.winner, members[forced].label());
+        assert_eq!(rep.losers.len(), members.len() - 1);
+        for l in &rep.losers {
+            assert_ne!(l.label, rep.winner);
+            assert!(l.objective.is_finite(), "{}: loser objective", l.label);
+        }
+    }
+}
+
+#[test]
+fn pre_raised_stop_cancels_every_member_kind() {
+    // tol = 0 makes convergence impossible and max_iters is set far out
+    // of reach, so the ONLY way any member (or the race) returns
+    // quickly is the cooperative stop-flag poll — one per round/epoch
+    // in the synchronous engines, one per monitor wake in the atomic
+    // engine. The caller's external flag is bridged into the race flag
+    // by the portfolio's main thread.
+    let ds = synth::sparse_imaging(40, 80, 0.1, 7);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+    let x0 = vec![0.0; 80];
+    let ext = StopFlag::new();
+    ext.raise();
+    let max_iters = 5_000_000u64;
+    let opts = SolveOptions {
+        max_iters,
+        tol: 0.0,
+        stop: ext.clone(),
+        ..Default::default()
+    };
+    let mut port = Portfolio::new(
+        [
+            MemberKind::Exact,
+            MemberKind::ThreadedAtomic,
+            MemberKind::ThreadedSharded,
+            MemberKind::Cdn,
+        ]
+        .into_iter()
+        .map(|kind| MemberConfig { kind, p: 2 })
+        .collect(),
+    );
+    let res = port.solve_cd(&prob, &x0, &opts);
+    assert!(res.solver.starts_with("portfolio["), "{}", res.solver);
+    assert!(!res.converged, "cancelled race must not claim convergence");
+    assert!(
+        res.iters < max_iters,
+        "salvage winner ran to budget instead of observing the stop"
+    );
+    let rep = port.report().expect("cancelled race still reports");
+    assert_eq!(rep.losers.len(), 3);
+    for l in &rep.losers {
+        assert!(!l.converged, "{}: cancelled loser converged?", l.label);
+        assert!(
+            l.iters_at_cancel < max_iters,
+            "{}: ran to budget ({}) instead of observing the stop",
+            l.label,
+            l.iters_at_cancel
+        );
+    }
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn racing_threads_all_joined_before_return() {
+    let ds = synth::sparse_imaging(40, 80, 0.1, 5);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+    let x0 = vec![0.0; 80];
+    let opts = SolveOptions {
+        max_iters: 200_000,
+        tol: 1e-6,
+        ..Default::default()
+    };
+    let before = os_thread_count();
+    let mut port = Portfolio::new(
+        [
+            MemberKind::Exact,
+            MemberKind::ThreadedAtomic,
+            MemberKind::ThreadedSharded,
+            MemberKind::Cdn,
+        ]
+        .into_iter()
+        .map(|kind| MemberConfig { kind, p: 2 })
+        .collect(),
+    );
+    // a leaked thread per race would accumulate monotonically; scoped
+    // threads are joined synchronously inside solve_cd, so the count
+    // settles back to the baseline. (Other tests run concurrently under
+    // the default harness, so poll with a grace window instead of
+    // demanding instant equality.)
+    for round in 0..3 {
+        let res = port.solve_cd(&prob, &x0, &opts);
+        assert!(res.objective.is_finite(), "round {round}");
+    }
+    let mut after = os_thread_count();
+    for _ in 0..500 {
+        if after <= before {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        after = os_thread_count();
+    }
+    assert!(
+        after <= before,
+        "racing threads must all be joined before solve_cd returns \
+         (before {before}, after {after})"
+    );
+}
+
+#[test]
+fn sharded_adapt_resize_keeps_exact_bit_identity() {
+    // the online-P controller on the sharded engine resizes the LIVE
+    // worker subset only; draws, snapshot semantics, and the canonical
+    // merge order never change, so the adaptive run is still
+    // bit-identical to the exact engine — resizing is unobservable in
+    // the trajectory
+    let ds = synth::sparse_imaging(60, 120, 0.08, 3);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+    let x0 = vec![0.0; 120];
+    let base = SolveOptions {
+        max_iters: 300_000,
+        tol: 1e-8,
+        ..Default::default()
+    };
+    let ex = ShotgunExact::new(ShotgunConfig {
+        p: 4,
+        ..Default::default()
+    })
+    .solve_lasso(&prob, &x0, &base);
+    let sh_opts = SolveOptions {
+        accumulator: AccumulatorMode::Sharded { threads: 3 },
+        adapt_p_every: 2,
+        ..base
+    };
+    let sh = ShotgunThreaded::new(ShotgunConfig {
+        p: 4,
+        ..Default::default()
+    })
+    .solve_lasso(&prob, &x0, &sh_opts);
+    assert!(sh.solver.ends_with("-sharded-adapt"), "{}", sh.solver);
+    assert_eq!(ex.iters, sh.iters);
+    assert_eq!(ex.updates, sh.updates);
+    assert_eq!(ex.converged, sh.converged);
+    assert_eq!(ex.objective.to_bits(), sh.objective.to_bits());
+    assert_bits_eq(&ex.x, &sh.x, "adaptive sharded vs exact");
+}
+
+#[test]
+fn atomic_adapt_reaches_the_optimum() {
+    // the atomic path resizes for real (workers parked behind the
+    // p_live gate); the contract there is convergence, not determinism
+    let ds = synth::sparse_imaging(60, 120, 0.08, 9);
+    let prob = LassoProblem::new(&ds.design, &ds.targets, 0.1);
+    let opts = SolveOptions {
+        max_iters: 300_000,
+        tol: 1e-8,
+        adapt_p_every: 3,
+        ..Default::default()
+    };
+    let res = ShotgunThreaded::new(ShotgunConfig {
+        p: 2,
+        ..Default::default()
+    })
+    .solve_lasso(&prob, &vec![0.0; 120], &opts);
+    assert!(res.solver.ends_with("-adapt"), "{}", res.solver);
+    let r = prob.residual(&res.x);
+    assert!(
+        prob.kkt_violation(&res.x, &r) < 1e-4,
+        "kkt {}",
+        prob.kkt_violation(&res.x, &r)
+    );
+}
+
+#[test]
+fn engine_portfolio_end_to_end_attaches_race_report() {
+    let ds = synth::sparse_imaging(60, 120, 0.08, 3);
+    let report = Fit::new(&ds.design, &ds.targets)
+        .lambda(0.1)
+        .engine(Engine::Portfolio)
+        .options(|o| {
+            o.max_iters = 300_000;
+            o.tol = 1e-7;
+            o.seed = 9;
+        })
+        .run()
+        .expect("portfolio fit solves");
+    assert!(
+        report.diagnostics.solver.starts_with("portfolio["),
+        "{}",
+        report.diagnostics.solver
+    );
+    assert!(report.converged());
+    let race = report.portfolio.as_ref().expect("race report attached");
+    assert!(!race.winner.is_empty());
+    assert!(race.losers.iter().all(|l| l.label != race.winner));
+    // winner + losers account for the whole roster (labels unique)
+    let mut labels: Vec<&str> = race.losers.iter().map(|l| l.label.as_str()).collect();
+    labels.push(race.winner.as_str());
+    labels.sort_unstable();
+    labels.dedup();
+    assert_eq!(labels.len(), race.losers.len() + 1);
+}
+
+#[test]
+fn fit_external_stop_surfaces_cancelled_error() {
+    // a pre-raised caller flag cancels the solve before convergence;
+    // the front door refuses to hand back the partial iterate as if it
+    // were a fit
+    let ds = synth::sparse_imaging(40, 80, 0.1, 11);
+    let ext = StopFlag::new();
+    ext.raise();
+    let err = Fit::new(&ds.design, &ds.targets)
+        .lambda(0.1)
+        .solver("shotgun")
+        .options(|o| {
+            o.max_iters = 100_000;
+            o.tol = 0.0;
+            o.stop = ext.clone();
+        })
+        .run()
+        .expect_err("cancelled fit must error");
+    match &err {
+        ShotgunError::Cancelled { solver } => assert!(!solver.is_empty()),
+        other => panic!("expected Cancelled, got {other}"),
+    }
+    assert!(err.to_string().contains("cancelled"), "{err}");
+}

@@ -52,6 +52,20 @@ echo "--- BENCH_hotpath.json ---"
 cat BENCH_hotpath.json
 
 echo
+echo "== portfolio racing engine (CLI path) =="
+# exercise the portfolio end to end through the CLI: the race must pick
+# a winner, cancel the losers, and print the report (the hotpath bench
+# above already gates derived.portfolio_vs_auto_speedup and the
+# win-rate fields; this proves the --solver portfolio plumbing)
+if [[ "$SMOKE" == "1" ]]; then
+  cargo run --release --bin repro -- solve --data imaging:256x512:0.02 \
+    --lam 0.1 --solver portfolio --tol 1e-6 --max-iters 200000
+else
+  cargo run --release --bin repro -- solve --data imaging:2048x4096:0.005 \
+    --lam 0.1 --solver portfolio --tol 1e-6
+fi
+
+echo
 echo "== serving replay (BENCH_serving.json) =="
 cargo run --release --bin repro -- serve "${SERVE_ARGS[@]}" \
   --compare-unbatched --bench-out BENCH_serving.json

@@ -19,8 +19,14 @@ import sys
 # the *_gap fields only need to be finite numbers)
 REQUIRED = {
     "hotpath": {
-        "positive": ["shrink_speedup_sparse_lasso", "path_strong_speedup"],
-        "finite": ["shrink_objective_rel_gap", "path_strong_objective_rel_gap"],
+        "positive": ["shrink_speedup_sparse_lasso", "path_strong_speedup",
+                     "portfolio_vs_auto_speedup"],
+        "finite": ["shrink_objective_rel_gap", "path_strong_objective_rel_gap",
+                   "portfolio_objective_rel_gap"],
+        # the portfolio win-rate keys are label-suffixed (the winning
+        # config varies run to run), so the spec requires AT LEAST ONE
+        # key per prefix, each finite and > 0
+        "positive_prefix": ["portfolio_win_rate_"],
     },
     "serving": {
         "positive": ["batching_speedup_throughput", "batching_unbatched_rps"],
@@ -65,6 +71,20 @@ def check(path):
             errors.append(f"{path}: derived.{key} is not finite ({v})")
         elif key in spec["positive"] and v <= 0.0:
             errors.append(f"{path}: derived.{key} must be > 0 (got {v})")
+    for prefix in spec.get("positive_prefix", []):
+        matched = [k for k in derived if k.startswith(prefix)]
+        if not matched:
+            errors.append(f"{path}: no derived.{prefix}* field (harness emitted none)")
+        for key in matched:
+            v = derived[key]
+            if (
+                not isinstance(v, (int, float))
+                or isinstance(v, bool)
+                or math.isnan(v)
+                or math.isinf(v)
+                or v <= 0.0
+            ):
+                errors.append(f"{path}: derived.{key} must be finite and > 0 (got {v!r})")
     # every other derived field must at least be a finite number
     for key, v in derived.items():
         if key in spec["positive"] or key in spec["finite"]:
