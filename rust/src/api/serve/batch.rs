@@ -33,14 +33,15 @@ use super::super::error::ShotgunError;
 use super::super::model::Model;
 use super::store::{ModelRecord, ModelStore};
 use crate::objective::{sigma_neg, Loss};
+use crate::simserve::clock::{dur_ticks, Clock, Tick};
 use crate::sparsela::{CscMatrix, Design};
 use crate::util::json::{Json, Writer};
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::mpsc::{self, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// One scoring request: a sparse feature row (`(index, value)` pairs)
 /// plus whether a logistic probability read-out is wanted.
@@ -229,10 +230,27 @@ pub struct BatchPredictor {
     model_name: String,
     cfg: BatchConfig,
     pending: Vec<PredictRequest>,
+    clock: Clock,
+    /// Clock reading when the oldest pending request was buffered.
+    first_pending_at: Option<Tick>,
 }
 
 impl BatchPredictor {
     pub fn new(store: Arc<ModelStore>, model_name: impl Into<String>, cfg: BatchConfig) -> Self {
+        Self::with_clock(store, model_name, cfg, Clock::wall())
+    }
+
+    /// Same front on an explicit [`Clock`] — under a sim clock the
+    /// `max_wait` deadline ([`next_deadline`](Self::next_deadline) /
+    /// [`flush_if_due`](Self::flush_if_due)) runs on virtual time, so a
+    /// caller-driven event loop gets the [`BatchServer`] flush policy
+    /// without a collector thread.
+    pub fn with_clock(
+        store: Arc<ModelStore>,
+        model_name: impl Into<String>,
+        cfg: BatchConfig,
+        clock: Clock,
+    ) -> Self {
         BatchPredictor {
             store,
             model_name: model_name.into(),
@@ -241,6 +259,8 @@ impl BatchPredictor {
                 ..cfg
             },
             pending: Vec::new(),
+            clock,
+            first_pending_at: None,
         }
     }
 
@@ -249,12 +269,33 @@ impl BatchPredictor {
         self.pending.len()
     }
 
+    /// When the pending partial batch is due to flush (`first request's
+    /// arrival + max_wait`, in this predictor's clock ticks); `None`
+    /// with nothing pending.
+    pub fn next_deadline(&self) -> Option<Tick> {
+        self.first_pending_at
+            .map(|t| t.saturating_add(dur_ticks(self.cfg.max_wait)))
+    }
+
+    /// Flush iff the pending batch's `max_wait` deadline has passed on
+    /// this predictor's clock — the [`BatchServer`] timer-flush policy,
+    /// driven by the caller instead of a collector thread.
+    pub fn flush_if_due(&mut self) -> Result<Option<Vec<PredictResponse>>, ShotgunError> {
+        match self.next_deadline() {
+            Some(d) if self.clock.now() >= d => self.flush().map(Some),
+            _ => Ok(None),
+        }
+    }
+
     /// Buffer a request. Returns the flushed responses whenever the
     /// buffer reaches `max_batch` (in submit order), `None` otherwise.
     pub fn submit(
         &mut self,
         req: PredictRequest,
     ) -> Result<Option<Vec<PredictResponse>>, ShotgunError> {
+        if self.pending.is_empty() {
+            self.first_pending_at = Some(self.clock.now());
+        }
         self.pending.push(req);
         if self.pending.len() >= self.cfg.max_batch {
             return self.flush().map(Some);
@@ -264,6 +305,7 @@ impl BatchPredictor {
 
     /// Serve everything pending as one coalesced batch.
     pub fn flush(&mut self) -> Result<Vec<PredictResponse>, ShotgunError> {
+        self.first_pending_at = None;
         if self.pending.is_empty() {
             return Ok(Vec::new());
         }
@@ -329,13 +371,30 @@ impl PendingPredict {
             })
         })
     }
+
+    /// Non-blocking check: `Some` once the batch containing this
+    /// request has been served (consuming the response), `None` while
+    /// it is still in flight. The simulation driver drains tickets with
+    /// this at quiescence instead of blocking a thread per ticket.
+    pub fn poll(&self) -> Option<Result<PredictResponse, ShotgunError>> {
+        match self.rx.try_recv() {
+            Ok(outcome) => Some(outcome),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(ShotgunError::BadRequest {
+                index: 0,
+                reason: "batch server shut down before serving this request".into(),
+            })),
+        }
+    }
 }
 
 /// A per-client submit handle for a [`BatchServer`] (see
-/// [`BatchServer::submitter`]).
+/// [`BatchServer::submitter`]). Dropping a submitter kicks the
+/// collector so it notices when the last sender disconnects.
 #[derive(Clone)]
 pub struct Submitter {
     tx: Option<mpsc::Sender<Envelope>>,
+    clock: Clock,
 }
 
 impl Submitter {
@@ -344,8 +403,16 @@ impl Submitter {
         let (reply, rx) = mpsc::channel();
         if let Some(tx) = &self.tx {
             let _ = tx.send(Envelope { req, reply });
+            self.clock.kick();
         }
         PendingPredict { rx }
+    }
+}
+
+impl Drop for Submitter {
+    fn drop(&mut self) {
+        self.tx.take();
+        self.clock.kick();
     }
 }
 
@@ -357,6 +424,7 @@ pub struct BatchServer {
     tx: Option<mpsc::Sender<Envelope>>,
     worker: Option<JoinHandle<()>>,
     counters: Arc<ServerCounters>,
+    clock: Clock,
 }
 
 impl BatchServer {
@@ -364,6 +432,20 @@ impl BatchServer {
     /// re-resolved per batch, so hot-swapped models take effect on the
     /// next batch boundary.
     pub fn spawn(store: Arc<ModelStore>, model_name: impl Into<String>, cfg: BatchConfig) -> Self {
+        Self::spawn_with_clock(store, model_name, cfg, Clock::wall())
+    }
+
+    /// Spawn the collector on an explicit [`Clock`]. With
+    /// [`Clock::wall`] (what [`spawn`](Self::spawn) passes) this is
+    /// real-time serving; with [`Clock::sim`] the REAL collector thread
+    /// parks on virtual time and the `max_wait` flush fires when the
+    /// simulation driver advances past the deadline.
+    pub fn spawn_with_clock(
+        store: Arc<ModelStore>,
+        model_name: impl Into<String>,
+        cfg: BatchConfig,
+        clock: Clock,
+    ) -> Self {
         let model_name = model_name.into();
         let cfg = BatchConfig {
             max_batch: cfg.max_batch.max(1),
@@ -372,13 +454,19 @@ impl BatchServer {
         let counters = Arc::new(ServerCounters::default());
         let shared = Arc::clone(&counters);
         let (tx, rx) = mpsc::channel::<Envelope>();
+        // register on the spawning thread so a sim driver can never
+        // observe the window before the collector announces itself
+        let guard = clock.register();
+        let thread_clock = clock.clone();
         let worker = std::thread::spawn(move || {
-            collector_loop(&store, &model_name, cfg, &rx, &shared);
+            let _guard = guard;
+            collector_loop(&store, &model_name, cfg, &rx, &shared, &thread_clock);
         });
         BatchServer {
             tx: Some(tx),
             worker: Some(worker),
             counters,
+            clock,
         }
     }
 
@@ -390,6 +478,7 @@ impl BatchServer {
             // a send error means the collector exited; the ticket then
             // reports shutdown on wait()
             let _ = tx.send(Envelope { req, reply });
+            self.clock.kick();
         }
         PendingPredict { rx }
     }
@@ -400,6 +489,7 @@ impl BatchServer {
     pub fn submitter(&self) -> Submitter {
         Submitter {
             tx: self.tx.clone(),
+            clock: self.clock.clone(),
         }
     }
 
@@ -413,6 +503,7 @@ impl BatchServer {
     /// (they keep the collector's channel alive).
     pub fn shutdown(&mut self) {
         self.tx.take();
+        self.clock.kick();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -431,29 +522,43 @@ fn collector_loop(
     cfg: BatchConfig,
     rx: &mpsc::Receiver<Envelope>,
     counters: &ServerCounters,
+    clock: &Clock,
 ) {
+    // the check-then-park protocol (see `simserve::clock`): the token
+    // is taken BEFORE try_recv, so a kick from a submit landing between
+    // the check and the park makes the park return immediately — no
+    // lost wakeups on either clock
+    let max_wait = dur_ticks(cfg.max_wait);
     loop {
-        // block for the batch's first request
-        let first = match rx.recv() {
-            Ok(e) => e,
-            Err(_) => return, // all senders gone, queue drained
+        // wait (parked, no deadline) for the batch's first request
+        let first = loop {
+            let tok = clock.park_token();
+            match rx.try_recv() {
+                Ok(e) => break e,
+                Err(TryRecvError::Empty) => clock.park(tok, None),
+                Err(TryRecvError::Disconnected) => return, // drained
+            }
         };
         let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
+        let deadline = clock.now().saturating_add(max_wait);
         let mut disconnected = false;
         while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(e) => batch.push(e),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
+            let tok = clock.park_token();
+            match rx.try_recv() {
+                Ok(e) => {
+                    batch.push(e);
+                    continue;
+                }
+                Err(TryRecvError::Disconnected) => {
                     disconnected = true;
                     break;
                 }
+                Err(TryRecvError::Empty) => {}
             }
+            if clock.now() >= deadline {
+                break; // max_wait expired: flush the partial batch
+            }
+            clock.park(tok, Some(deadline));
         }
         dispatch(store, model_name, batch, counters);
         if disconnected {
@@ -590,6 +695,37 @@ mod tests {
         assert_eq!(flushed[1].score, -1.0);
         assert_eq!(bp.pending(), 0);
         assert!(bp.flush().unwrap().is_empty());
+    }
+
+    #[test]
+    fn predictor_timer_flush_runs_on_the_injected_clock() {
+        let store = store_with(&[1.0, 0.5], Loss::Squared);
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        let mut bp = BatchPredictor::with_clock(
+            store,
+            "m",
+            BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+            },
+            clock,
+        );
+        assert!(bp.next_deadline().is_none());
+        assert!(bp.flush_if_due().unwrap().is_none());
+        sim.advance_to(1_000);
+        assert!(bp
+            .submit(PredictRequest::new(vec![(0, 2.0)]))
+            .unwrap()
+            .is_none());
+        // deadline = first request's arrival (1µs) + max_wait (500µs)
+        assert_eq!(bp.next_deadline(), Some(501_000));
+        assert!(bp.flush_if_due().unwrap().is_none(), "not due yet");
+        sim.advance_to(501_000);
+        let out = bp.flush_if_due().unwrap().expect("due at the deadline");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].score, 2.0);
+        assert!(bp.next_deadline().is_none(), "flush clears the deadline");
     }
 
     #[test]

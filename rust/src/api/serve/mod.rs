@@ -27,6 +27,15 @@
 //! `tests/serving.rs` is the deterministic end-to-end harness proving
 //! the three contracts (batch bit-identity, worker-count independence,
 //! swap atomicity).
+//!
+//! Every time-dependent wait in this module runs on a
+//! [`Clock`](crate::simserve::clock::Clock) (wall time by default):
+//! `BatchServer::spawn_with_clock` / `FitQueue::with_clock` accept a
+//! [`Clock::sim`](crate::simserve::clock::Clock::sim) so the
+//! [`simserve`](crate::simserve) subsystem can run these REAL threaded
+//! components on deterministic virtual time, with
+//! [`FitJob::fault`](queue::FitJob::fault) injecting worker panics and
+//! slow fits through the production code paths.
 
 pub mod batch;
 pub mod queue;
@@ -37,6 +46,6 @@ pub use batch::{
     batch_design, predict_coalesced, BatchConfig, BatchPredictor, BatchServer, PendingPredict,
     PredictRequest, PredictResponse, ServerCounters, Submitter,
 };
-pub use queue::{CacheHub, FitJob, FitQueue, JobId, JobLambda, JobSolver, JobState};
+pub use queue::{CacheHub, FitFault, FitJob, FitQueue, JobId, JobLambda, JobSolver, JobState};
 pub use replay::{replay, ReplayConfig, ReplayStats};
 pub use store::{ModelRecord, ModelStore};

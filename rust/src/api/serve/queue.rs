@@ -30,11 +30,12 @@ use super::super::fit::{Engine, Fit, FitReport, PathSpec};
 use super::super::registry::SolverParams;
 use super::store::ModelStore;
 use crate::objective::{Loss, ProblemCache};
+use crate::simserve::clock::{Clock, Tick};
 use crate::sparsela::Design;
 use crate::solvers::common::SolveOptions;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::mpsc::{self, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Condvar, Mutex, PoisonError, Weak};
 use std::thread::JoinHandle;
 
@@ -56,6 +57,20 @@ pub enum JobSolver {
     Name(String),
 }
 
+/// An injected disturbance for chaos/simulation testing (`simserve`):
+/// exercises the queue's REAL failure and timing paths on demand
+/// instead of waiting for them to happen in production.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FitFault {
+    /// Panic inside the worker mid-fit — drives the `catch_unwind` →
+    /// `Failed(JobPanicked)` path; the worker must survive.
+    Panic,
+    /// The fit takes `cost` extra clock ticks (virtual under a sim
+    /// clock, a real sleep on a wall clock), occupying its worker for
+    /// that long before the solve runs.
+    SlowFit { cost: Tick },
+}
+
 /// One queued fit: owns its data (`Arc`, so many jobs share one design
 /// allocation) plus the per-job solver/budget settings.
 #[derive(Clone)]
@@ -73,6 +88,9 @@ pub struct FitJob {
     /// Publish the fitted model into the queue's [`ModelStore`] under
     /// this name as soon as the job finishes.
     pub publish_as: Option<String>,
+    /// Injected fault (simulation/chaos testing only; `None` in
+    /// production).
+    pub fault: Option<FitFault>,
 }
 
 impl FitJob {
@@ -88,6 +106,7 @@ impl FitJob {
             opts: SolveOptions::default(),
             require_convergence: false,
             publish_as: None,
+            fault: None,
         }
     }
 
@@ -108,6 +127,12 @@ impl FitJob {
 
     pub fn publish_as(mut self, name: impl Into<String>) -> Self {
         self.publish_as = Some(name.into());
+        self
+    }
+
+    /// Inject a [`FitFault`] (simulation/chaos testing).
+    pub fn fault(mut self, fault: FitFault) -> Self {
+        self.fault = Some(fault);
         self
     }
 }
@@ -224,21 +249,39 @@ pub struct FitQueue {
     workers: Vec<JoinHandle<()>>,
     shared: Arc<Shared>,
     next_id: Mutex<JobId>,
+    clock: Clock,
 }
 
 impl FitQueue {
     /// `workers` solver threads over a queue holding at most `capacity`
     /// waiting jobs (both floored at 1).
     pub fn new(workers: usize, capacity: usize) -> FitQueue {
-        Self::build(workers, capacity, None)
+        Self::build(workers, capacity, None, Clock::wall())
     }
 
     /// A queue that publishes `publish_as` jobs into `store`.
     pub fn with_store(workers: usize, capacity: usize, store: Arc<ModelStore>) -> FitQueue {
-        Self::build(workers, capacity, Some(store))
+        Self::build(workers, capacity, Some(store), Clock::wall())
     }
 
-    fn build(workers: usize, capacity: usize, store: Option<Arc<ModelStore>>) -> FitQueue {
+    /// A queue on an explicit [`Clock`] — under a sim clock the worker
+    /// threads park on virtual time (quiescence-visible to the
+    /// simulation driver) and [`FitFault::SlowFit`] costs are virtual.
+    pub fn with_clock(
+        workers: usize,
+        capacity: usize,
+        store: Option<Arc<ModelStore>>,
+        clock: Clock,
+    ) -> FitQueue {
+        Self::build(workers, capacity, store, clock)
+    }
+
+    fn build(
+        workers: usize,
+        capacity: usize,
+        store: Option<Arc<ModelStore>>,
+        clock: Clock,
+    ) -> FitQueue {
         let shared = Arc::new(Shared {
             states: Mutex::new(HashMap::new()),
             done: Condvar::new(),
@@ -251,7 +294,14 @@ impl FitQueue {
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(&rx, &shared))
+                // register on the spawning thread (no unregistered
+                // window a sim driver could race with)
+                let guard = clock.register();
+                let clock = clock.clone();
+                std::thread::spawn(move || {
+                    let _guard = guard;
+                    worker_loop(&rx, &shared, &clock);
+                })
             })
             .collect();
         FitQueue {
@@ -259,6 +309,7 @@ impl FitQueue {
             workers: handles,
             shared,
             next_id: Mutex::new(0),
+            clock,
         }
     }
 
@@ -278,11 +329,25 @@ impl FitQueue {
             self.shared.set(id, JobState::Failed(ShotgunError::QueueClosed));
             return Err(ShotgunError::QueueClosed);
         }
+        self.clock.kick();
         Ok(id)
     }
 
     /// Enqueue without blocking: `Ok(None)` means the queue is full.
     pub fn try_submit(&self, job: FitJob) -> Result<Option<JobId>, ShotgunError> {
+        let id = self.try_submit_deferred(job)?;
+        if id.is_some() {
+            self.clock.kick();
+        }
+        Ok(id)
+    }
+
+    /// [`try_submit`](Self::try_submit) WITHOUT waking the workers —
+    /// the simulation driver enqueues a whole burst atomically with
+    /// this and then calls [`kick_workers`](Self::kick_workers) once,
+    /// so how many jobs the bounded channel rejects is a function of
+    /// `capacity` alone, not of how fast workers drain mid-burst.
+    pub fn try_submit_deferred(&self, job: FitJob) -> Result<Option<JobId>, ShotgunError> {
         let (id, tx) = self.register()?;
         self.shared.set(id, JobState::Queued);
         match tx.try_send(WorkItem { id, job }) {
@@ -300,6 +365,12 @@ impl FitQueue {
                 Err(ShotgunError::QueueClosed)
             }
         }
+    }
+
+    /// Wake the workers to drain jobs enqueued with
+    /// [`try_submit_deferred`](Self::try_submit_deferred).
+    pub fn kick_workers(&self) {
+        self.clock.kick();
     }
 
     /// The job's current state (`None` for an id this queue never
@@ -368,6 +439,7 @@ impl FitQueue {
     /// Stop accepting jobs, finish everything queued, join the workers.
     pub fn shutdown(&mut self) {
         self.tx.take();
+        self.clock.kick();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -380,19 +452,29 @@ impl Drop for FitQueue {
     }
 }
 
-fn worker_loop(rx: &Mutex<mpsc::Receiver<WorkItem>>, shared: &Shared) {
+fn worker_loop(rx: &Mutex<mpsc::Receiver<WorkItem>>, shared: &Shared, clock: &Clock) {
     loop {
-        // hold the receiver lock only for the pop, not the solve
-        let item = {
-            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
-            guard.recv()
+        // idle workers park on the clock (check-then-park, see
+        // `simserve::clock`); the receiver lock is held only for the
+        // non-blocking pop, never for the wait or the solve
+        let item = loop {
+            let tok = clock.park_token();
+            let polled = {
+                let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
+                guard.try_recv()
+            };
+            match polled {
+                Ok(i) => break Some(i),
+                Err(TryRecvError::Empty) => clock.park(tok, None),
+                Err(TryRecvError::Disconnected) => break None, // drained
+            }
         };
         let WorkItem { id, job } = match item {
-            Ok(i) => i,
-            Err(_) => return, // queue closed and drained
+            Some(i) => i,
+            None => return, // queue closed and drained
         };
         shared.set(id, JobState::Running);
-        let state = match catch_unwind(AssertUnwindSafe(|| run_job(&job, shared))) {
+        let state = match catch_unwind(AssertUnwindSafe(|| run_job(&job, shared, clock))) {
             Ok(Ok(report)) => {
                 if let (Some(store), Some(name)) = (&shared.store, &job.publish_as) {
                     store.publish(name, report.model.clone());
@@ -413,7 +495,15 @@ fn worker_loop(rx: &Mutex<mpsc::Receiver<WorkItem>>, shared: &Shared) {
     }
 }
 
-fn run_job(job: &FitJob, shared: &Shared) -> Result<FitReport, ShotgunError> {
+fn run_job(job: &FitJob, shared: &Shared, clock: &Clock) -> Result<FitReport, ShotgunError> {
+    match job.fault {
+        // a REAL panic, so the catch_unwind machinery above (not a
+        // special case) turns it into Failed(JobPanicked)
+        Some(FitFault::Panic) => panic!("injected fault: worker panic mid-fit"),
+        // the fit occupies this worker for `cost` ticks before solving
+        Some(FitFault::SlowFit { cost }) => clock.sleep(cost),
+        None => {}
+    }
     let cache = shared.hub.for_design(&job.design);
     let opts = job.opts.clone();
     let mut fit = Fit::new(&job.design, &job.targets)
@@ -484,6 +574,30 @@ mod tests {
         }
         // the worker survives to run the next job
         let ok = queue.submit(job(&ds, 0.4)).unwrap();
+        assert!(matches!(
+            queue.wait(ok).expect("known id"),
+            JobState::Done(_)
+        ));
+    }
+
+    #[test]
+    fn injected_faults_drive_the_real_failure_paths() {
+        let ds = dataset(8);
+        let queue = FitQueue::new(1, 4);
+        let id = queue
+            .submit(job(&ds, 0.5).fault(FitFault::Panic))
+            .unwrap();
+        match queue.wait(id).expect("known id") {
+            JobState::Failed(ShotgunError::JobPanicked { reason }) => {
+                assert!(reason.contains("injected fault"), "reason: {reason}");
+            }
+            other => panic!("expected JobPanicked, got {other:?}"),
+        }
+        // the worker survives the injected panic, and a SlowFit job
+        // (100µs wall sleep here) still completes normally
+        let ok = queue
+            .submit(job(&ds, 0.4).fault(FitFault::SlowFit { cost: 100_000 }))
+            .unwrap();
         assert!(matches!(
             queue.wait(ok).expect("known id"),
             JobState::Done(_)

@@ -16,9 +16,9 @@
 use super::super::error::ShotgunError;
 use super::batch::{BatchConfig, BatchServer, PredictRequest};
 use super::store::ModelStore;
+use crate::simserve::clock::{Clock, Tick};
 use crate::util::json::escape;
 use std::sync::Arc;
-use std::time::Instant;
 
 /// Replay knobs.
 #[derive(Clone, Copy, Debug)]
@@ -80,8 +80,14 @@ pub fn replay(
     cfg: &ReplayConfig,
 ) -> Result<ReplayStats, ShotgunError> {
     let clients = cfg.clients.max(1);
-    let mut server = BatchServer::spawn(Arc::clone(&store), model_name, cfg.batch);
-    let started = Instant::now();
+    // all stamps below go through the Clock abstraction (WallClock
+    // here: replay measures real elapsed time; clients BLOCK on their
+    // tickets, so a virtual-time replay would need driver-polled
+    // clients — that harness is `simserve::scenario`)
+    let clock = Clock::wall();
+    let mut server =
+        BatchServer::spawn_with_clock(Arc::clone(&store), model_name, cfg.batch, clock.clone());
+    let started = clock.now();
 
     // shard the stream round-robin across client threads. Each client
     // PIPELINES up to max_batch requests before waiting on its oldest
@@ -99,20 +105,23 @@ pub fn replay(
                 // each client owns its own submit handle (dropped with
                 // the thread, so shutdown below can join the collector)
                 let submitter = server.submitter();
+                let clock = clock.clone();
                 scope.spawn(move || -> Result<Vec<f64>, ShotgunError> {
+                    let elapsed_us =
+                        |t0: Tick, clock: &Clock| clock.now().saturating_sub(t0) as f64 * 1e-3;
                     let mut lat = Vec::with_capacity(shard.len());
                     let mut in_flight = std::collections::VecDeque::with_capacity(window);
                     for req in shard {
                         if in_flight.len() >= window {
-                            let (t0, ticket): (Instant, _) = in_flight.pop_front().unwrap();
+                            let (t0, ticket): (Tick, _) = in_flight.pop_front().unwrap();
                             ticket.wait()?;
-                            lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                            lat.push(elapsed_us(t0, &clock));
                         }
-                        in_flight.push_back((Instant::now(), submitter.submit(req.clone())));
+                        in_flight.push_back((clock.now(), submitter.submit(req.clone())));
                     }
                     for (t0, ticket) in in_flight {
                         ticket.wait()?;
-                        lat.push(t0.elapsed().as_secs_f64() * 1e6);
+                        lat.push(elapsed_us(t0, &clock));
                     }
                     Ok(lat)
                 })
@@ -123,7 +132,7 @@ pub fn replay(
             .map(|h| h.join().expect("client thread panicked"))
             .collect()
     });
-    let seconds = started.elapsed().as_secs_f64();
+    let seconds = clock.now().saturating_sub(started) as f64 * 1e-9;
     let mut lat: Vec<f64> = latencies_us?.into_iter().flatten().collect();
     lat.sort_by(|a, b| a.total_cmp(b));
 

@@ -105,6 +105,7 @@ pub mod solvers;
 pub mod coordinator;
 pub mod api;
 pub mod simcore;
+pub mod simserve;
 pub mod runtime;
 pub mod bench;
 pub mod testkit;

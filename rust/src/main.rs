@@ -6,6 +6,9 @@
 //!   serve          fit + publish a model, replay a request stream
 //!                  against the batching server, report throughput and
 //!                  latency percentiles into BENCH_serving.json
+//!   sim            run the deterministic simserve scenario suite
+//!                  (virtual time, real serving components) and report
+//!                  outcome stats into BENCH_simserve.json
 //!   estimate-pstar power-iteration rho + P* for a dataset
 //!   bench <exp>    regenerate a paper table/figure
 //!                  (fig2|fig3|fig4|fig5|bounds|headline|ablations|all)
@@ -48,6 +51,8 @@ USAGE:
               [--max-wait-us 2000] [--clients 4] [--fit-workers 2]
               [--bench-out BENCH_serving.json] [--store-out dir]
               [--compare-unbatched]
+  repro sim [--smoke] [--seed 42] [--scenario <name>]
+            [--bench-out BENCH_simserve.json]
   repro estimate-pstar --data <spec> [--seed 42]
   repro bench <fig2|fig3|fig4|fig5|bounds|headline|ablations|beyond|kernels|all>
               [--scale 0.25] [--out results] [--seed 42] [--budget 60]
@@ -97,6 +102,16 @@ SERVE REQUEST FORMAT (--file, one JSON object per line; blank lines and
   P(y=+1) and requires a logistic model. Without --file, `serve`
   generates a seeded stream (--requests/--max-nnz/--proba-frac);
   --gen-requests writes that stream as JSONL and exits.
+
+SIM (repro sim): the deterministic serving simulator — REAL
+  BatchServer/FitQueue threads on a virtual clock, so every outcome
+  stat (batches, latency percentiles, fault counters) is a pure
+  function of the scenario + seed. --smoke (or SHOTGUN_BENCH_SMOKE=1)
+  shrinks horizons for CI; --scenario <name> runs one scenario and
+  skips the bench JSON (its derived metrics need the full suite).
+  Scenarios: baseline-batch8, baseline-batch64, diurnal, bursty,
+  zipf-hot-model, worker-panic-recovery, hot-swap-under-load,
+  queue-saturation, client-stall.
 "#;
 
 fn parse_dims(s: &str) -> (usize, usize) {
@@ -453,6 +468,61 @@ fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
     Ok(())
 }
 
+/// `repro sim`: run the simserve scenario suite to quiescence on
+/// virtual time and write `BENCH_simserve.json`. With `--scenario` only
+/// that scenario runs and no bench JSON is written (the derived metrics
+/// read specific named scenarios from the full suite).
+fn cmd_sim(args: &Args) -> Result<(), ShotgunError> {
+    use shotgun::simserve::report::{report_line, run_suite, suite};
+
+    let seed = args.usize_or("seed", 42) as u64;
+    let smoke = args.bool("smoke")
+        || std::env::var("SHOTGUN_BENCH_SMOKE").ok().as_deref() == Some("1");
+    let filter = args.get("scenario");
+    if let Some(name) = filter {
+        let names: Vec<&str> = suite(smoke, seed).iter().map(|s| s.name).collect();
+        if !names.contains(&name) {
+            return Err(ShotgunError::BadRequest {
+                index: 0,
+                reason: format!(
+                    "unknown scenario {name:?} (valid: {})",
+                    names.join(", ")
+                ),
+            });
+        }
+    }
+    println!(
+        "simserve suite ({}, seed {seed}): real serving components, virtual time",
+        if smoke { "smoke" } else { "full" }
+    );
+    let report = run_suite(smoke, seed, filter)?;
+    for o in &report.outcomes {
+        println!("{}", report_line(o));
+    }
+    let requests: u64 = report.outcomes.iter().map(|o| o.requests).sum();
+    println!(
+        "{} scenarios, {} requests, {} responses bit-checked against sequential predict",
+        report.outcomes.len(),
+        requests,
+        report
+            .outcomes
+            .iter()
+            .map(|o| o.bit_identity_checked)
+            .sum::<u64>()
+    );
+    if filter.is_none() {
+        let out = args.get_or("bench-out", "BENCH_simserve.json");
+        std::fs::write(&out, report.to_bench_json()).map_err(|e| ShotgunError::Io {
+            path: out.clone(),
+            reason: format!("write bench json: {e}"),
+        })?;
+        println!("simulation benchmark written to {out}");
+    } else {
+        println!("(--scenario filter active; BENCH_simserve.json not written)");
+    }
+    Ok(())
+}
+
 fn cmd_solvers() {
     let registry = SolverRegistry::global();
     println!(
@@ -622,6 +692,12 @@ fn main() {
         Some("solvers") => cmd_solvers(),
         Some("serve") => {
             if let Err(e) = cmd_serve(&args) {
+                eprintln!("error: {e}");
+                std::process::exit(1);
+            }
+        }
+        Some("sim") => {
+            if let Err(e) = cmd_sim(&args) {
                 eprintln!("error: {e}");
                 std::process::exit(1);
             }

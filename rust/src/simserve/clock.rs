@@ -1,0 +1,543 @@
+//! The `Clock` abstraction the serving plane runs on — wall time in
+//! production, discrete virtual time under simulation.
+//!
+//! Every time-dependent wait in `api::serve` (the collector's
+//! `max_wait` flush timer, the fit workers' idle wait) goes through a
+//! [`Clock`] instead of `Instant::now()`/`recv_timeout`. With
+//! [`Clock::wall`] (the default everywhere) the behavior is exactly the
+//! old one: real threads, real timeouts. With [`Clock::sim`] the same
+//! REAL component threads park on a virtual timeline that only the
+//! simulation driver advances — the Calimero sync_sim pattern (real
+//! components + simulated clock), not mocks.
+//!
+//! # The eventcount protocol (no lost wakeups)
+//!
+//! A waiter that checks a channel and then sleeps can miss a message
+//! sent in between. The clock closes that race with a generation
+//! counter: the waiter reads a token ([`park_token`](Clock::park_token))
+//! **before** checking its work source, and [`park`](Clock::park)
+//! returns immediately if any [`kick`](Clock::kick) landed after the
+//! token was taken. Producers kick after every enqueue, so the
+//! check-then-park loop
+//!
+//! ```text
+//! loop {
+//!     let tok = clock.park_token();
+//!     match source.try_recv() {
+//!         Ok(item) => ...,
+//!         Err(Empty) => clock.park(tok, deadline),
+//!         Err(Disconnected) => return,
+//!     }
+//! }
+//! ```
+//!
+//! never sleeps through a wakeup, on either clock.
+//!
+//! # Quiescence (sim only)
+//!
+//! Component threads register with the clock
+//! ([`register`](Clock::register), RAII deregistration). The driver's
+//! [`SimClock::until_quiescent`] blocks until **every** registered
+//! thread is parked with no reason to wake — no pending kick, no
+//! expired deadline. At quiescence nothing can happen until the driver
+//! advances time ([`SimClock::advance_to`], typically to
+//! [`SimClock::next_deadline`]), so batch composition, flush order, and
+//! every latency stamp are functions of the scenario alone, independent
+//! of machine speed and OS scheduling.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Virtual or wall nanoseconds since the clock's epoch.
+pub type Tick = u64;
+
+/// One virtual (or wall) second, in [`Tick`]s.
+pub const SECOND: Tick = 1_000_000_000;
+
+/// `Duration` → ticks, saturating (a `Duration` can exceed u64 ns).
+pub fn dur_ticks(d: Duration) -> Tick {
+    u64::try_from(d.as_nanos()).unwrap_or(Tick::MAX)
+}
+
+/// The time source the serving components run on (see module docs).
+/// Cheap to clone — clones share the underlying clock.
+#[derive(Clone)]
+pub enum Clock {
+    /// Real time over [`Instant`]; waits are condvar timeouts.
+    Wall(Arc<WallClock>),
+    /// Discrete virtual time advanced explicitly by a driver.
+    Sim(Arc<SimClock>),
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::wall()
+    }
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Clock::Wall(_) => write!(f, "Clock::Wall({} ns)", self.now()),
+            Clock::Sim(_) => write!(f, "Clock::Sim({} ns)", self.now()),
+        }
+    }
+}
+
+impl Clock {
+    /// A fresh wall clock (epoch = now). The production default.
+    pub fn wall() -> Clock {
+        Clock::Wall(Arc::new(WallClock::new()))
+    }
+
+    /// A fresh simulated clock at tick 0.
+    pub fn sim() -> Clock {
+        Clock::Sim(Arc::new(SimClock::new()))
+    }
+
+    /// The sim driver handle, if this is a sim clock.
+    pub fn sim_handle(&self) -> Option<&Arc<SimClock>> {
+        match self {
+            Clock::Wall(_) => None,
+            Clock::Sim(s) => Some(s),
+        }
+    }
+
+    /// Nanoseconds since the clock's epoch.
+    pub fn now(&self) -> Tick {
+        match self {
+            Clock::Wall(w) => w.now(),
+            Clock::Sim(s) => s.now(),
+        }
+    }
+
+    /// Take a wakeup token. Must be read BEFORE checking the work
+    /// source the subsequent [`park`](Self::park) waits for.
+    pub fn park_token(&self) -> u64 {
+        match self {
+            Clock::Wall(w) => w.generation(),
+            Clock::Sim(s) => s.generation(),
+        }
+    }
+
+    /// Sleep until a [`kick`](Self::kick) lands after `token` was
+    /// taken, or until `deadline` (ticks) passes, whichever is first.
+    /// Returns immediately if either already happened. Spurious returns
+    /// are allowed — callers loop.
+    pub fn park(&self, token: u64, deadline: Option<Tick>) {
+        match self {
+            Clock::Wall(w) => w.park(token, deadline),
+            Clock::Sim(s) => s.park(token, deadline),
+        }
+    }
+
+    /// Wake every parked thread (they re-check their work sources).
+    pub fn kick(&self) {
+        match self {
+            Clock::Wall(w) => w.kick(),
+            Clock::Sim(s) => s.kick(),
+        }
+    }
+
+    /// Register the calling component thread for quiescence accounting
+    /// (no-op on a wall clock). Call on the spawning thread and move
+    /// the guard into the component thread; registration lasts until
+    /// the guard drops.
+    pub fn register(&self) -> ClockGuard {
+        match self {
+            Clock::Wall(_) => ClockGuard { sim: None },
+            Clock::Sim(s) => {
+                s.register();
+                ClockGuard {
+                    sim: Some(Arc::clone(s)),
+                }
+            }
+        }
+    }
+
+    /// Let `cost` ticks pass on this clock: a real sleep on the wall
+    /// clock, a parked wait for the driver to advance past the deadline
+    /// on the sim clock. Used by fault injection to model work that
+    /// takes time (e.g. a slow fit occupying its worker).
+    pub fn sleep(&self, cost: Tick) {
+        match self {
+            Clock::Wall(_) => std::thread::sleep(Duration::from_nanos(cost)),
+            Clock::Sim(s) => {
+                let deadline = s.now().saturating_add(cost);
+                loop {
+                    let tok = s.generation();
+                    if s.now() >= deadline {
+                        return;
+                    }
+                    s.park(tok, Some(deadline));
+                }
+            }
+        }
+    }
+}
+
+/// RAII registration of a component thread on a sim clock (see
+/// [`Clock::register`]). Dropping deregisters and re-checks quiescence.
+pub struct ClockGuard {
+    sim: Option<Arc<SimClock>>,
+}
+
+impl Drop for ClockGuard {
+    fn drop(&mut self) {
+        if let Some(sim) = self.sim.take() {
+            sim.deregister();
+        }
+    }
+}
+
+/// Real time: `Instant` for `now`, a generation-counted condvar for
+/// park/kick (see the module docs' eventcount protocol).
+pub struct WallClock {
+    epoch: OnceLock<Instant>,
+    gen: Mutex<u64>,
+    wake: Condvar,
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        let epoch = OnceLock::new();
+        let _ = epoch.set(Instant::now());
+        WallClock {
+            epoch,
+            gen: Mutex::new(0),
+            wake: Condvar::new(),
+        }
+    }
+
+    fn epoch(&self) -> Instant {
+        *self.epoch.get_or_init(Instant::now)
+    }
+
+    fn now(&self) -> Tick {
+        u64::try_from(self.epoch().elapsed().as_nanos()).unwrap_or(Tick::MAX)
+    }
+
+    fn generation(&self) -> u64 {
+        *self.gen.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn park(&self, token: u64, deadline: Option<Tick>) {
+        let mut gen = self.gen.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if *gen != token {
+                return;
+            }
+            match deadline {
+                None => {
+                    gen = self
+                        .wake
+                        .wait(gen)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+                Some(d) => {
+                    let now = self.now();
+                    if now >= d {
+                        return;
+                    }
+                    let (g, timeout) = self
+                        .wake
+                        .wait_timeout(gen, Duration::from_nanos(d - now))
+                        .unwrap_or_else(PoisonError::into_inner);
+                    gen = g;
+                    if timeout.timed_out() && self.now() >= d {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    fn kick(&self) {
+        let mut gen = self.gen.lock().unwrap_or_else(PoisonError::into_inner);
+        *gen = gen.wrapping_add(1);
+        self.wake.notify_all();
+    }
+}
+
+/// One parked component thread, as the sim driver sees it.
+struct Sleeper {
+    /// The generation its park token was taken at — a later kick means
+    /// it is about to wake.
+    token: u64,
+    /// Its wake deadline, if any.
+    deadline: Option<Tick>,
+}
+
+struct SimState {
+    now: Tick,
+    gen: u64,
+    registered: usize,
+    /// Parked threads by sleeper id.
+    parked: HashMap<u64, Sleeper>,
+    next_sleeper: u64,
+}
+
+impl SimState {
+    /// True when nothing can happen until the driver advances time:
+    /// every registered thread is parked with a current token and an
+    /// unexpired (or absent) deadline.
+    fn quiescent(&self) -> bool {
+        self.parked.len() == self.registered
+            && self
+                .parked
+                .values()
+                .all(|s| s.token == self.gen && s.deadline.is_none_or(|d| self.now < d))
+    }
+}
+
+/// Discrete virtual time plus the driver API (see the module docs).
+///
+/// Component threads use it through [`Clock::Sim`]; the scenario driver
+/// holds the `Arc<SimClock>` directly and alternates
+/// [`until_quiescent`](Self::until_quiescent) →
+/// [`next_deadline`](Self::next_deadline) →
+/// [`advance_to`](Self::advance_to).
+pub struct SimClock {
+    state: Mutex<SimState>,
+    /// Component threads wait here (woken by kick/advance).
+    sleepers: Condvar,
+    /// The driver waits here for quiescence.
+    driver: Condvar,
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock {
+            state: Mutex::new(SimState {
+                now: 0,
+                gen: 0,
+                registered: 0,
+                parked: HashMap::new(),
+                next_sleeper: 0,
+            }),
+            sleepers: Condvar::new(),
+            driver: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, SimState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Tick {
+        self.lock().now
+    }
+
+    fn generation(&self) -> u64 {
+        self.lock().gen
+    }
+
+    fn register(&self) {
+        self.lock().registered += 1;
+    }
+
+    fn deregister(&self) {
+        let mut st = self.lock();
+        st.registered = st.registered.saturating_sub(1);
+        // one fewer thread to wait for — quiescence may hold now
+        self.driver.notify_all();
+    }
+
+    fn park(&self, token: u64, deadline: Option<Tick>) {
+        let mut st = self.lock();
+        if st.token_stale(token) || deadline.is_some_and(|d| st.now >= d) {
+            return;
+        }
+        let id = st.next_sleeper;
+        st.next_sleeper += 1;
+        st.parked.insert(id, Sleeper { token, deadline });
+        // this thread may have completed quiescence
+        self.driver.notify_all();
+        while st.parked[&id].token == st.gen
+            && st.parked[&id].deadline.is_none_or(|d| st.now < d)
+        {
+            st = self
+                .sleepers
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+        st.parked.remove(&id);
+    }
+
+    /// Wake all sleepers (a producer enqueued work).
+    pub fn kick(&self) {
+        let mut st = self.lock();
+        st.gen = st.gen.wrapping_add(1);
+        self.sleepers.notify_all();
+    }
+
+    // ---- driver API -------------------------------------------------
+
+    /// Block until every registered component thread is parked with
+    /// nothing to do (see [`SimState::quiescent`]). With no registered
+    /// threads this returns immediately.
+    pub fn until_quiescent(&self) {
+        let mut st = self.lock();
+        while !st.quiescent() {
+            st = self
+                .driver
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// The earliest wake deadline among parked threads — the next
+    /// instant anything is scheduled to happen. Meaningful at
+    /// quiescence.
+    pub fn next_deadline(&self) -> Option<Tick> {
+        self.lock().parked.values().filter_map(|s| s.deadline).min()
+    }
+
+    /// Move virtual time forward to `t` (monotonic; earlier `t` is a
+    /// no-op on `now`) and wake sleepers so expired deadlines fire.
+    pub fn advance_to(&self, t: Tick) {
+        let mut st = self.lock();
+        st.now = st.now.max(t);
+        st.gen = st.gen.wrapping_add(1);
+        self.sleepers.notify_all();
+    }
+
+    /// Registered component threads (tests/diagnostics).
+    pub fn registered(&self) -> usize {
+        self.lock().registered
+    }
+}
+
+impl SimState {
+    fn token_stale(&self, token: u64) -> bool {
+        self.gen != token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::mpsc;
+
+    #[test]
+    fn wall_clock_is_monotonic_and_parks_until_deadline() {
+        let clock = Clock::wall();
+        let t0 = clock.now();
+        let tok = clock.park_token();
+        // 2ms deadline: park returns at/after it even with no kick
+        clock.park(tok, Some(t0 + 2_000_000));
+        assert!(clock.now() >= t0 + 2_000_000);
+        // a pre-expired deadline returns immediately
+        clock.park(clock.park_token(), Some(0));
+    }
+
+    #[test]
+    fn wall_kick_wakes_a_parked_thread() {
+        let clock = Clock::wall();
+        let clock2 = clock.clone();
+        let (tx, rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            let tok = clock2.park_token();
+            tx.send(()).unwrap();
+            // no deadline: only the kick can end this park
+            clock2.park(tok, None);
+        });
+        rx.recv().unwrap();
+        // kick until the parked thread exits (covers the window where
+        // the kick lands before the park does — the token makes that
+        // park return immediately)
+        while !h.is_finished() {
+            clock.kick();
+            std::thread::yield_now();
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn sim_time_is_driver_controlled() {
+        let clock = Clock::sim();
+        assert_eq!(clock.now(), 0);
+        let sim = clock.sim_handle().unwrap();
+        sim.advance_to(5 * SECOND);
+        assert_eq!(clock.now(), 5 * SECOND);
+        sim.advance_to(SECOND); // monotonic: no going back
+        assert_eq!(clock.now(), 5 * SECOND);
+    }
+
+    #[test]
+    fn sim_quiescence_and_deadline_stepping() {
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        let woke_at = Arc::new(AtomicU64::new(u64::MAX));
+        let guard = clock.register();
+        let h = {
+            let clock = clock.clone();
+            let woke_at = Arc::clone(&woke_at);
+            std::thread::spawn(move || {
+                let _guard = guard;
+                // sleep 3 virtual seconds: parks until the driver
+                // advances past the deadline
+                clock.sleep(3 * SECOND);
+                woke_at.store(clock.now(), Ordering::SeqCst);
+            })
+        };
+        sim.until_quiescent();
+        // the sleeper's deadline is the only scheduled instant
+        assert_eq!(sim.next_deadline(), Some(3 * SECOND));
+        assert_eq!(woke_at.load(Ordering::SeqCst), u64::MAX);
+        sim.advance_to(3 * SECOND);
+        h.join().unwrap();
+        assert_eq!(woke_at.load(Ordering::SeqCst), 3 * SECOND);
+        // thread deregistered on exit; quiescence is trivial again
+        sim.until_quiescent();
+        assert_eq!(sim.registered(), 0);
+        assert_eq!(sim.next_deadline(), None);
+    }
+
+    #[test]
+    fn sim_kick_beats_deadline_and_tokens_prevent_lost_wakeups() {
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        // token taken, THEN a kick lands, THEN park: must not sleep
+        let tok = clock.park_token();
+        clock.kick();
+        clock.park(tok, None); // returns immediately (stale token)
+
+        // a registered thread parked without deadline wakes on kick
+        let guard = clock.register();
+        let (tx, rx) = mpsc::channel();
+        let h = {
+            let clock = clock.clone();
+            std::thread::spawn(move || {
+                let _guard = guard;
+                loop {
+                    let tok = clock.park_token();
+                    if rx.try_recv().is_ok() {
+                        return clock.now();
+                    }
+                    clock.park(tok, None);
+                }
+            })
+        };
+        sim.until_quiescent();
+        sim.advance_to(7);
+        tx.send(()).unwrap();
+        clock.kick();
+        assert_eq!(h.join().unwrap(), 7);
+    }
+}

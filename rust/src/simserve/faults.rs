@@ -1,0 +1,101 @@
+//! Fault injection — scheduled disturbances a scenario drives through
+//! the REAL serving components.
+//!
+//! Each [`Fault`] names an instant on the virtual timeline and a
+//! disturbance the scenario runner injects when the event loop reaches
+//! it. None of them bypass production code: a [`Fault::WorkerPanic`]
+//! is a real `panic!` inside a real `FitQueue` worker (caught by the
+//! queue's own `catch_unwind` machinery), a [`Fault::HotSwap`] is a
+//! real refit job publishing into the live [`ModelStore`]
+//! (crate::api::serve::ModelStore), and [`Fault::QueueSaturation`]
+//! drives the bounded channel's typed overload rejections. The delayed
+//! flush path (a partial batch sitting on the `max_wait` timer) needs
+//! no explicit fault — any arrival gap longer than `max_wait` (the
+//! `Bursty` off-phase, a [`Fault::ClientStall`] window) exercises it.
+//!
+//! The invariant every fault scenario must preserve: **batch
+//! bit-identity**. Whatever breaks, every response that does come back
+//! is bit-identical to a one-at-a-time `Model::predict` against the
+//! model version that served it (the scenario runner checks each
+//! response).
+
+use super::clock::Tick;
+
+/// One scheduled disturbance (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Fault {
+    /// At `at`, submit a fit job that panics inside its worker — the
+    /// `catch_unwind` → `Failed(JobPanicked)` path. Serving must not
+    /// notice, and the worker must survive to run later jobs.
+    WorkerPanic { at: Tick },
+    /// At `at`, submit a refit of model 0 at regularization `lam` that
+    /// occupies its worker for `cost` virtual ticks, then publishes
+    /// under the serving name — a hot swap landing mid-traffic. The
+    /// runner measures the swap-visibility lag (publish → first
+    /// response served by the new version).
+    HotSwap { at: Tick, lam: f64, cost: Tick },
+    /// At `at`, wedge every fit worker with a job costing `wedge_cost`
+    /// ticks, then burst `jobs` non-blocking submissions into the
+    /// bounded queue. With all workers wedged, acceptances are exactly
+    /// the queue's free capacity and the rest are typed rejections —
+    /// independent of worker count and machine speed.
+    QueueSaturation {
+        at: Tick,
+        jobs: usize,
+        wedge_cost: Tick,
+    },
+    /// A slow-reader stall: arrivals in `[at, at + dur)` are deferred
+    /// and delivered as one burst at `at + dur` (an upstream client
+    /// that stopped reading, then caught up). Applied to the workload
+    /// stream before the event loop starts.
+    ClientStall { at: Tick, dur: Tick },
+}
+
+impl Fault {
+    /// When the fault fires (for `ClientStall`, when the stall begins).
+    pub fn at(&self) -> Tick {
+        match *self {
+            Fault::WorkerPanic { at }
+            | Fault::HotSwap { at, .. }
+            | Fault::QueueSaturation { at, .. }
+            | Fault::ClientStall { at, .. } => at,
+        }
+    }
+
+    /// Does this fault need a `FitQueue` in the scenario?
+    pub fn needs_queue(&self) -> bool {
+        !matches!(self, Fault::ClientStall { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simserve::clock::SECOND;
+
+    #[test]
+    fn fault_instants_and_queue_needs() {
+        let faults = [
+            Fault::WorkerPanic { at: SECOND },
+            Fault::HotSwap {
+                at: 2 * SECOND,
+                lam: 0.1,
+                cost: 7,
+            },
+            Fault::QueueSaturation {
+                at: 3 * SECOND,
+                jobs: 10,
+                wedge_cost: 11,
+            },
+            Fault::ClientStall {
+                at: 4 * SECOND,
+                dur: SECOND,
+            },
+        ];
+        for (i, f) in faults.iter().enumerate() {
+            assert_eq!(f.at(), (i as u64 + 1) * SECOND);
+        }
+        assert!(faults[..3].iter().all(Fault::needs_queue));
+        assert!(!faults[3].needs_queue());
+    }
+}

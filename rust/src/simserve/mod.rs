@@ -1,0 +1,51 @@
+//! `simserve` — a deterministic traffic & fault simulator for the
+//! serving plane.
+//!
+//! The serving subsystem ([`api::serve`](crate::api::serve)) is real
+//! threads, real channels, real timers — which makes its interesting
+//! behaviors (batch composition under bursty load, hot swaps landing
+//! mid-traffic, worker panics, queue saturation) timing-dependent and
+//! unreproducible under test. This module removes the wall clock from
+//! that equation while keeping everything else real:
+//!
+//! * [`clock`] — the [`Clock`](clock::Clock) abstraction:
+//!   [`WallClock`](clock::WallClock) for production (the default
+//!   everywhere), [`SimClock`](clock::SimClock) for discrete virtual
+//!   time with quiescence detection. `BatchServer`, `FitQueue`, and the
+//!   replay harness all run on it — under a sim clock the REAL
+//!   collector and worker threads park on a virtual timeline only the
+//!   driver advances (the sync-simulation pattern: real components,
+//!   simulated time — not mocks).
+//! * [`workload`] — seeded traffic generators: constant / diurnal /
+//!   bursty [`RateCurve`](workload::RateCurve)s driving a
+//!   non-homogeneous Poisson arrival process, Zipf heavy-tailed
+//!   per-model popularity, deterministic request content. Same spec +
+//!   seed → bit-identical stream.
+//! * [`faults`] — scheduled disturbances injected through production
+//!   code paths: worker panic mid-fit, hot swap under load, bounded
+//!   queue saturation, slow-reader stalls.
+//! * [`scenario`] — the event-loop runner: drive a named scenario to
+//!   quiescence, emitting a typed [`Outcome`](scenario::Outcome)
+//!   (throughput, virtual latency percentiles, fault counters,
+//!   swap-visibility lag) while checking every response bit-for-bit
+//!   against sequential predict.
+//! * [`report`] — the canonical scenario [`suite`](report::suite) and
+//!   the `BENCH_simserve.json` document behind `repro sim`.
+//!
+//! The determinism claim, precisely: an [`Outcome`] is a pure function
+//! of its [`Scenario`](scenario::Scenario) — independent of machine
+//! speed, OS scheduling, and fit-queue worker count. `tests/simserve.rs`
+//! enforces run-to-run and cross-worker-count equality of the whole
+//! outcome struct, latencies included.
+
+pub mod clock;
+pub mod faults;
+pub mod report;
+pub mod scenario;
+pub mod workload;
+
+pub use clock::{Clock, SimClock, Tick, WallClock, SECOND};
+pub use faults::Fault;
+pub use report::{run_suite, suite, SuiteReport, REQUIRED_SCENARIOS};
+pub use scenario::{Outcome, Scenario};
+pub use workload::{Arrival, RateCurve, WorkloadSpec, Zipf};

@@ -1,0 +1,483 @@
+//! The named scenario suite behind `repro sim`, and the
+//! `BENCH_simserve.json` report it emits.
+//!
+//! [`suite`] defines the canonical scenarios (one [`Scenario`] each,
+//! same names in smoke and full mode — smoke shrinks horizons/rates so
+//! CI finishes in seconds). [`run_suite`] executes them (optionally
+//! filtered to one name) and [`SuiteReport::to_bench_json`] renders the
+//! machine-readable document `scripts/check_bench.py` gates:
+//!
+//! * `derived.batching_latency_p99_ratio` — p99 virtual latency of the
+//!   `max_batch = 64` baseline over the `max_batch = 8` one (same
+//!   workload, same seed): what deeper coalescing costs in tail latency.
+//! * `derived.fault_recovery_rounds` — batches flushed between the
+//!   worker-panic injection and the recovery hot-swap becoming visible.
+//! * `derived.swap_visibility_lag_us` — hot-swap publish → first
+//!   response served by the new version, virtual microseconds.
+//!
+//! Every number in the report is virtual-time deterministic: same
+//! suite + seed → byte-identical JSON, on any machine.
+
+use super::clock::{Tick, SECOND};
+use super::faults::Fault;
+use super::scenario::{run, Outcome, Scenario};
+use super::workload::{RateCurve, WorkloadSpec};
+use crate::api::serve::BatchConfig;
+use crate::api::ShotgunError;
+use crate::objective::Loss;
+use std::time::Duration;
+
+/// One virtual millisecond.
+const MS: Tick = SECOND / 1000;
+
+/// The scenario names the acceptance gate requires (a subset of
+/// [`suite`]; `tests/simserve.rs` checks coverage).
+pub const REQUIRED_SCENARIOS: [&str; 7] = [
+    "baseline-batch8",
+    "baseline-batch64",
+    "diurnal",
+    "bursty",
+    "zipf-hot-model",
+    "worker-panic-recovery",
+    "hot-swap-under-load",
+];
+
+/// The canonical named scenarios (see module docs). `smoke` shrinks
+/// horizons 10x and rates 2.5x; names and structure are identical in
+/// both modes.
+pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
+    let stretch: u64 = if smoke { 1 } else { 10 };
+    let rate: f64 = if smoke { 1.0 } else { 2.5 };
+    let train_n = if smoke { 60 } else { 120 };
+    let ms = |x: u64| x * stretch * MS;
+    let sd = |k: u64| seed.wrapping_mul(1000).wrapping_add(k);
+    let batch = |max_batch: usize, max_wait_us: u64| BatchConfig {
+        max_batch,
+        max_wait: Duration::from_micros(max_wait_us),
+    };
+    let workload = |curve: RateCurve, horizon: Tick, models: usize, zipf: f64, proba: f64| {
+        WorkloadSpec {
+            curve,
+            horizon,
+            models,
+            zipf_exponent: zipf,
+            d: 64,
+            max_nnz: 8,
+            proba_fraction: proba,
+        }
+    };
+
+    let mut out = Vec::new();
+    // -- baseline batching sweep: ONE workload, two batch policies; the
+    // p99 ratio between them is the headline derived metric
+    let baseline = workload(
+        RateCurve::Constant { rps: 8_000.0 * rate },
+        ms(250),
+        1,
+        0.0,
+        0.0,
+    );
+    for (name, max_batch) in [("baseline-batch8", 8), ("baseline-batch64", 64)] {
+        out.push(Scenario {
+            name,
+            workload: baseline.clone(),
+            batch: batch(max_batch, 20_000),
+            faults: vec![],
+            fit_workers: 2,
+            fit_capacity: 8,
+            seed: sd(1), // same seed: same arrivals, different batching
+            loss: Loss::Squared,
+            train_n,
+            train_lam: 0.1,
+        });
+    }
+    // -- diurnal day/night curve over two logistic models (proba mix)
+    out.push(Scenario {
+        name: "diurnal",
+        workload: workload(
+            RateCurve::Diurnal {
+                base_rps: 500.0 * rate,
+                peak_rps: 3_000.0 * rate,
+                period: ms(100),
+            },
+            ms(200),
+            2,
+            0.8,
+            0.25,
+        ),
+        batch: batch(32, 2_000),
+        faults: vec![],
+        fit_workers: 2,
+        fit_capacity: 8,
+        seed: sd(2),
+        loss: Loss::Logistic,
+        train_n,
+        train_lam: 0.1,
+    });
+    // -- bursty on/off square wave; the off-phase gaps exercise the
+    // delayed (max_wait timer) flush path
+    out.push(Scenario {
+        name: "bursty",
+        workload: workload(
+            RateCurve::Bursty {
+                on_rps: 4_000.0 * rate,
+                off_rps: 50.0 * rate,
+                on: ms(50),
+                off: ms(150),
+            },
+            ms(400),
+            1,
+            0.0,
+            0.0,
+        ),
+        batch: batch(16, 2_000),
+        faults: vec![],
+        fit_workers: 2,
+        fit_capacity: 8,
+        seed: sd(3),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+    });
+    // -- Zipf heavy tail: one hot model, five cold ones
+    out.push(Scenario {
+        name: "zipf-hot-model",
+        workload: workload(
+            RateCurve::Constant { rps: 2_000.0 * rate },
+            ms(200),
+            6,
+            1.1,
+            0.2,
+        ),
+        batch: batch(16, 2_000),
+        faults: vec![],
+        fit_workers: 2,
+        fit_capacity: 8,
+        seed: sd(4),
+        loss: Loss::Logistic,
+        train_n,
+        train_lam: 0.1,
+    });
+    // -- worker panic mid-fit, then a recovery hot-swap: proves the
+    // worker survives and counts the batches served while degraded
+    let h = ms(200);
+    out.push(Scenario {
+        name: "worker-panic-recovery",
+        workload: workload(RateCurve::Constant { rps: 2_000.0 * rate }, h, 1, 0.0, 0.0),
+        batch: batch(16, 2_000),
+        faults: vec![
+            Fault::WorkerPanic { at: h / 6 },
+            Fault::HotSwap {
+                at: h / 3,
+                lam: 0.08,
+                // odd cost: completion never ties a Poisson-derived
+                // flush deadline, keeping the timeline unambiguous
+                cost: 37_000_001,
+            },
+        ],
+        fit_workers: 2,
+        fit_capacity: 8,
+        seed: sd(5),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+    });
+    // -- hot swap under peak load: swap-visibility lag is the metric
+    out.push(Scenario {
+        name: "hot-swap-under-load",
+        workload: workload(RateCurve::Constant { rps: 3_000.0 * rate }, h, 1, 0.0, 0.0),
+        batch: batch(32, 2_000),
+        faults: vec![Fault::HotSwap {
+            at: h / 3,
+            lam: 0.12,
+            cost: 23_000_003,
+        }],
+        fit_workers: 2,
+        fit_capacity: 8,
+        seed: sd(6),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+    });
+    // -- queue saturation: all workers wedged, burst overflows the
+    // bounded queue; rejections = burst - free capacity, exactly
+    out.push(Scenario {
+        name: "queue-saturation",
+        workload: workload(
+            RateCurve::Constant { rps: 500.0 * rate },
+            ms(100),
+            1,
+            0.0,
+            0.0,
+        ),
+        batch: batch(8, 2_000),
+        faults: vec![Fault::QueueSaturation {
+            at: ms(25),
+            jobs: 6,
+            wedge_cost: 11_000_009,
+        }],
+        fit_workers: 2,
+        fit_capacity: 4, // 2 wedges + 2 burst accepted -> 4 rejected
+        seed: sd(7),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+    });
+    // -- slow-reader stall: a mid-stream arrival gap, then a catch-up
+    // burst (delayed flushes on the way in, deep batches on the way out)
+    out.push(Scenario {
+        name: "client-stall",
+        workload: workload(
+            RateCurve::Constant { rps: 2_000.0 * rate },
+            ms(150),
+            1,
+            0.0,
+            0.0,
+        ),
+        batch: batch(16, 2_000),
+        faults: vec![Fault::ClientStall {
+            at: ms(50),
+            dur: ms(50),
+        }],
+        fit_workers: 2,
+        fit_capacity: 8,
+        seed: sd(8),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+    });
+    out
+}
+
+/// Outcomes of a (possibly filtered) suite run.
+#[derive(Clone, Debug)]
+pub struct SuiteReport {
+    pub smoke: bool,
+    pub seed: u64,
+    pub outcomes: Vec<Outcome>,
+}
+
+/// Run the named suite. `filter = Some(name)` runs just that scenario
+/// (unknown names yield an empty report — the CLI turns that into an
+/// error with the valid names).
+pub fn run_suite(
+    smoke: bool,
+    seed: u64,
+    filter: Option<&str>,
+) -> Result<SuiteReport, ShotgunError> {
+    let mut outcomes = Vec::new();
+    for sc in suite(smoke, seed) {
+        if filter.is_some_and(|f| f != sc.name) {
+            continue;
+        }
+        outcomes.push(run(&sc)?);
+    }
+    Ok(SuiteReport {
+        smoke,
+        seed,
+        outcomes,
+    })
+}
+
+/// One human-readable line per scenario (the CLI's table body).
+pub fn report_line(o: &Outcome) -> String {
+    let mut line = format!(
+        "{:<22} {:>7} req -> {:>7} ok | {:>6} batches (mean {:>5.1}) | us p50 {:>8.1} p99 {:>9.1} | {:.3} vs",
+        o.name,
+        o.requests,
+        o.responses,
+        o.batches,
+        o.mean_batch,
+        o.p50_us,
+        o.p99_us,
+        o.virtual_seconds,
+    );
+    if let Some(lag) = o.swap_lag_us {
+        line.push_str(&format!(" | swap lag {lag:.1}us"));
+    }
+    if let Some(rounds) = o.recovery_batches {
+        line.push_str(&format!(" | recovery {rounds} rounds"));
+    }
+    if o.rejected_jobs > 0 {
+        line.push_str(&format!(" | {} jobs rejected", o.rejected_jobs));
+    }
+    line
+}
+
+impl SuiteReport {
+    /// The outcome of scenario `name`, if it ran.
+    pub fn outcome(&self, name: &str) -> Option<&Outcome> {
+        self.outcomes.iter().find(|o| o.name == name)
+    }
+
+    /// The `BENCH_simserve.json` document. Requires the full unfiltered
+    /// suite (the derived metrics read specific named scenarios).
+    pub fn to_bench_json(&self) -> String {
+        let need = |name: &str| -> &Outcome {
+            self.outcome(name)
+                .unwrap_or_else(|| panic!("bench JSON needs scenario {name:?}; run unfiltered"))
+        };
+        let b8 = need("baseline-batch8");
+        let b64 = need("baseline-batch64");
+        let panic_recovery = need("worker-panic-recovery");
+        let swap = need("hot-swap-under-load");
+        let ratio = b64.p99_us / b8.p99_us.max(1e-12);
+        let recovery_rounds = panic_recovery
+            .recovery_batches
+            .expect("worker-panic-recovery measures recovery") as f64;
+        let swap_lag = swap
+            .swap_lag_us
+            .expect("hot-swap-under-load measures swap lag");
+        let requests_total: u64 = self.outcomes.iter().map(|o| o.requests).sum();
+
+        let mut scenarios = String::new();
+        for (i, o) in self.outcomes.iter().enumerate() {
+            if i > 0 {
+                scenarios.push_str(",\n");
+            }
+            let mut extras = String::new();
+            if let Some(lag) = o.swap_lag_us {
+                extras.push_str(&format!(", \"swap_lag_us\": {lag:.3}"));
+            }
+            if let Some(rounds) = o.recovery_batches {
+                extras.push_str(&format!(", \"recovery_batches\": {rounds}"));
+            }
+            scenarios.push_str(&format!(
+                "    {{\"name\": \"{}\", \"requests\": {}, \"responses\": {}, \
+                 \"failed_responses\": {}, \"batches\": {}, \"mean_batch\": {:.3}, \
+                 \"virtual_seconds\": {:.6}, \"throughput_rps\": {:.3}, \
+                 \"latency_us\": {{\"p50\": {:.3}, \"p90\": {:.3}, \"p99\": {:.3}, \"max\": {:.3}}}, \
+                 \"bit_identity_checked\": {}, \"completed_jobs\": {}, \"failed_jobs\": {}, \
+                 \"rejected_jobs\": {}, \"max_version_served\": {}{}}}",
+                o.name,
+                o.requests,
+                o.responses,
+                o.failed_responses,
+                o.batches,
+                o.mean_batch,
+                o.virtual_seconds,
+                o.throughput_rps,
+                o.p50_us,
+                o.p90_us,
+                o.p99_us,
+                o.max_us,
+                o.bit_identity_checked,
+                o.completed_jobs,
+                o.failed_jobs,
+                o.rejected_jobs,
+                o.max_version_served,
+                extras
+            ));
+        }
+        format!(
+            "{{\n  \"bench\": \"simserve\",\n  \"mode\": \"{}\",\n  \"seed\": {},\n  \
+             \"config\": {{\"scenarios\": {}, \"virtual_time\": true}},\n  \
+             \"scenarios\": [\n{}\n  ],\n  \"derived\": {{\n    \
+             \"batching_latency_p99_ratio\": {:.9e},\n    \
+             \"fault_recovery_rounds\": {:.1},\n    \
+             \"swap_visibility_lag_us\": {:.3},\n    \
+             \"sim_scenarios\": {},\n    \
+             \"sim_requests_total\": {}\n  }}\n}}\n",
+            if self.smoke { "smoke" } else { "full" },
+            self.seed,
+            self.outcomes.len(),
+            scenarios,
+            ratio,
+            recovery_rounds,
+            swap_lag,
+            self.outcomes.len(),
+            requests_total
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn suite_names_are_stable_and_cover_the_required_set() {
+        for smoke in [true, false] {
+            let scs = suite(smoke, 7);
+            assert!(scs.len() >= 8, "suite has {} scenarios", scs.len());
+            let names: Vec<&str> = scs.iter().map(|s| s.name).collect();
+            for required in REQUIRED_SCENARIOS {
+                assert!(names.contains(&required), "missing scenario {required}");
+            }
+            // names unique
+            let mut dedup = names.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), names.len(), "duplicate scenario names");
+            // the baseline pair shares one workload + seed
+            let b8 = scs.iter().find(|s| s.name == "baseline-batch8").unwrap();
+            let b64 = scs.iter().find(|s| s.name == "baseline-batch64").unwrap();
+            assert_eq!(b8.seed, b64.seed);
+            assert_eq!(b8.workload.horizon, b64.workload.horizon);
+            assert_ne!(b8.batch.max_batch, b64.batch.max_batch);
+        }
+    }
+
+    #[test]
+    fn bench_json_is_valid_and_derived_fields_are_finite() {
+        let outcome = |name: &str, p99: f64| Outcome {
+            name: name.to_string(),
+            requests: 100,
+            responses: 100,
+            failed_responses: 0,
+            batches: 20,
+            mean_batch: 5.0,
+            virtual_seconds: 0.25,
+            throughput_rps: 400.0,
+            p50_us: p99 / 2.0,
+            p90_us: p99 * 0.9,
+            p99_us: p99,
+            max_us: p99 * 1.1,
+            bit_identity_checked: 100,
+            completed_jobs: 0,
+            failed_jobs: 0,
+            rejected_jobs: 0,
+            swap_lag_us: None,
+            recovery_batches: None,
+            max_version_served: 1,
+        };
+        let mut panic_recovery = outcome("worker-panic-recovery", 900.0);
+        panic_recovery.failed_jobs = 1;
+        panic_recovery.completed_jobs = 1;
+        panic_recovery.recovery_batches = Some(7);
+        panic_recovery.swap_lag_us = Some(1500.0);
+        let mut swap = outcome("hot-swap-under-load", 1100.0);
+        swap.swap_lag_us = Some(2100.5);
+        swap.max_version_served = 2;
+        let report = SuiteReport {
+            smoke: true,
+            seed: 42,
+            outcomes: vec![
+                outcome("baseline-batch8", 1000.0),
+                outcome("baseline-batch64", 8000.0),
+                panic_recovery,
+                swap,
+            ],
+        };
+        let json = report.to_bench_json();
+        let doc = Json::parse(&json).expect("valid JSON");
+        assert_eq!(
+            doc.get("bench").and_then(|b| b.as_str().map(String::from)),
+            Some("simserve".into())
+        );
+        let derived = doc.get("derived").expect("derived section");
+        let f = |k: &str| derived.get(k).and_then(|v| v.as_f64()).expect(k);
+        assert!((f("batching_latency_p99_ratio") - 8.0).abs() < 1e-9);
+        assert_eq!(f("fault_recovery_rounds"), 7.0);
+        assert!((f("swap_visibility_lag_us") - 2100.5).abs() < 1e-9);
+        assert_eq!(f("sim_scenarios"), 4.0);
+        assert_eq!(f("sim_requests_total"), 400.0);
+        // per-scenario entries parse too
+        let entries = doc.get("scenarios").and_then(Json::as_arr).expect("array");
+        assert_eq!(entries.len(), 4);
+        // a single-line human report renders the optional fields
+        let line = report_line(&report.outcomes[3]);
+        assert!(line.contains("hot-swap-under-load") && line.contains("swap lag"));
+    }
+}

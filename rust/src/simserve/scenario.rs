@@ -1,0 +1,637 @@
+//! The scenario runner — one named (workload × faults × config) case
+//! executed to quiescence on virtual time.
+//!
+//! A [`Scenario`] assembles the REAL serving stack — trained
+//! [`Model`]s in a [`ModelStore`], one [`BatchServer`] collector
+//! thread per model, an optional [`FitQueue`] worker pool — all on one
+//! [`Clock::sim`], then drives the discrete-event loop:
+//!
+//! 1. wait for **quiescence** (every component thread parked with
+//!    nothing to do — see [`SimClock::until_quiescent`]);
+//! 2. observe: poll finished fit jobs (recording hot-swap publishes),
+//!    drain completed predict tickets (stamping exact virtual
+//!    latencies and checking batch bit-identity per response);
+//! 3. advance virtual time to the next instant anything happens — the
+//!    earlier of the next workload/fault event and the components' own
+//!    next deadline ([`SimClock::next_deadline`], e.g. a collector's
+//!    `max_wait` flush). Ties resolve deadline-first, so an arrival at
+//!    exactly a flush instant deterministically joins the *next* batch.
+//!
+//! Because threads only make progress between quiescence points and
+//! the driver serializes every injection, the resulting [`Outcome`] —
+//! batch composition, latency percentiles, fault counters — is a pure
+//! function of the scenario, independent of machine speed, OS
+//! scheduling, and fit-queue worker count. Running a scenario twice
+//! (or with 1 vs 8 workers) must produce `==` outcomes;
+//! `tests/simserve.rs` enforces exactly that.
+//!
+//! **Bit-identity under faults:** every drained response is checked
+//! bit-for-bit against a one-at-a-time [`Model::predict`] /
+//! `decision_function` / `predict_proba` on the model *version* that
+//! served it. A mismatch panics — no fault scenario is allowed to bend
+//! the serving determinism contract.
+
+use super::clock::{Clock, Tick};
+use super::faults::Fault;
+use super::workload::{Arrival, WorkloadSpec};
+use crate::api::serve::{
+    batch_design, BatchConfig, BatchServer, FitFault, FitJob, FitQueue, JobId, JobState,
+    ModelStore, PendingPredict, Submitter,
+};
+use crate::api::{Fit, Model, ShotgunError};
+use crate::data::synth;
+use crate::objective::Loss;
+use crate::sparsela::Design;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// One named simulation case (see module docs).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Stable name (scenario suite key, JSON report key).
+    pub name: &'static str,
+    /// The traffic.
+    pub workload: WorkloadSpec,
+    /// Batching policy of every server in the scenario.
+    pub batch: BatchConfig,
+    /// Scheduled disturbances (empty = serve-only scenario).
+    pub faults: Vec<Fault>,
+    /// Fit-queue worker threads (only spawned if a fault needs them).
+    pub fit_workers: usize,
+    /// Fit-queue bounded capacity.
+    pub fit_capacity: usize,
+    /// Workload + request-content seed.
+    pub seed: u64,
+    /// Loss of the served models (decides predict semantics).
+    pub loss: Loss,
+    /// Training rows for the pre-fitted models.
+    pub train_n: usize,
+    /// Regularization of the pre-fitted models.
+    pub train_lam: f64,
+}
+
+/// Typed outcome stats of one scenario run. `PartialEq` on purpose:
+/// determinism tests assert run-to-run (and worker-count) equality of
+/// the WHOLE struct, floats included — equal runs must produce
+/// bit-equal numbers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Outcome {
+    pub name: String,
+    /// Requests submitted / successful responses / typed failures.
+    pub requests: u64,
+    pub responses: u64,
+    pub failed_responses: u64,
+    /// Coalesced batches across all servers, and their mean size.
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Virtual end-to-end duration and served throughput over it.
+    pub virtual_seconds: f64,
+    pub throughput_rps: f64,
+    /// Virtual submit→reply latency percentiles, microseconds.
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// Responses checked bit-for-bit against sequential predict.
+    pub bit_identity_checked: u64,
+    /// Fit-queue terminal counts (0 when the scenario has no queue).
+    pub completed_jobs: u64,
+    pub failed_jobs: u64,
+    /// Typed overload rejections from the bounded queue.
+    pub rejected_jobs: u64,
+    /// Hot-swap publish → first response served by the new version
+    /// (virtual µs), when the scenario hot-swaps.
+    pub swap_lag_us: Option<f64>,
+    /// Batches flushed between the worker-panic injection and the
+    /// recovery publish becoming visible, when the scenario injects
+    /// both.
+    pub recovery_batches: Option<u64>,
+    /// Highest model version that served a response.
+    pub max_version_served: u64,
+}
+
+/// Latency percentile by nearest-rank on a sorted slice.
+fn percentile(sorted_us: &[f64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+fn model_name(idx: usize) -> String {
+    format!("m{idx}")
+}
+
+fn solver_for(loss: Loss) -> &'static str {
+    if loss.classifies() {
+        "shooting-cdn"
+    } else {
+        "shooting"
+    }
+}
+
+/// What a pending fit job was injected for.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum JobKind {
+    /// `Fault::WorkerPanic`'s poisoned job.
+    Panic,
+    /// `Fault::HotSwap`'s refit (publishes model 0).
+    Swap,
+    /// `Fault::QueueSaturation`'s worker-wedging slow job.
+    Wedge,
+    /// `Fault::QueueSaturation`'s burst filler.
+    Burst,
+}
+
+enum Ev {
+    Arrive(usize),
+    Fault(usize),
+}
+
+struct InFlight {
+    submitted: Tick,
+    arrival: usize,
+    ticket: PendingPredict,
+}
+
+/// Everything the drain/poll observers mutate.
+struct Observed {
+    latencies_us: Vec<f64>,
+    responses: u64,
+    failed_responses: u64,
+    bit_checked: u64,
+    max_version: u64,
+    completed_jobs: u64,
+    failed_jobs: u64,
+    /// `(publish tick, published version)` of the hot-swap, once its
+    /// job completes.
+    swap_published: Option<(Tick, u64)>,
+    swap_visible_at: Option<Tick>,
+    /// All-server batch count when the panic was injected / when the
+    /// swap became visible.
+    panic_batches: Option<u64>,
+    recovery_batches: Option<u64>,
+}
+
+/// Run the scenario to quiescence (see module docs).
+pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
+    let models = sc.workload.models.max(1);
+    let d = sc.workload.d;
+    let clock = Clock::sim();
+    let sim = Arc::clone(clock.sim_handle().expect("sim clock"));
+    let store = Arc::new(ModelStore::new());
+
+    // -- pre-sim: train + publish one real model per name (virtual t=0)
+    let mut versions: HashMap<(usize, u64), Arc<Model>> = HashMap::new();
+    let mut train0: Option<(Arc<Design>, Arc<Vec<f64>>)> = None;
+    for m in 0..models {
+        let ds = if sc.loss.classifies() {
+            synth::rcv1_like(sc.train_n, d, 0.1, sc.seed.wrapping_add(m as u64))
+        } else {
+            synth::sparse_imaging(sc.train_n, d, 0.1, sc.seed.wrapping_add(m as u64))
+        };
+        let design = Arc::new(ds.design);
+        let targets = Arc::new(ds.targets);
+        let report = Fit::new(&design, &targets)
+            .loss(sc.loss)
+            .lambda(sc.train_lam)
+            .solver(solver_for(sc.loss))
+            .options(|o| {
+                o.max_iters = 200_000;
+                o.tol = 1e-6;
+            })
+            .run()?;
+        store.publish(&model_name(m), report.model);
+        let rec = store.get(&model_name(m)).expect("just published");
+        versions.insert((m, rec.version), Arc::clone(&rec.model));
+        if m == 0 {
+            train0 = Some((design, targets));
+        }
+    }
+    let train0 = train0.expect("at least one model");
+
+    // -- the real components, all on the one sim clock
+    let mut servers: Vec<BatchServer> = (0..models)
+        .map(|m| {
+            BatchServer::spawn_with_clock(Arc::clone(&store), model_name(m), sc.batch, clock.clone())
+        })
+        .collect();
+    let submitters: Vec<Submitter> = servers.iter().map(BatchServer::submitter).collect();
+    let batches_now = |servers: &[BatchServer]| -> u64 {
+        servers
+            .iter()
+            .map(|s| s.counters().batches.load(Ordering::Relaxed))
+            .sum()
+    };
+    let mut queue: Option<FitQueue> = sc.faults.iter().any(Fault::needs_queue).then(|| {
+        FitQueue::with_clock(
+            sc.fit_workers,
+            sc.fit_capacity,
+            Some(Arc::clone(&store)),
+            clock.clone(),
+        )
+    });
+
+    // -- the event list: workload arrivals (ClientStall windows applied
+    // as a pre-pass) merged with runtime faults, stably ordered by tick
+    // (arrivals before faults at equal instants)
+    let mut arrivals: Vec<Arrival> = sc.workload.generate(sc.seed);
+    for fault in &sc.faults {
+        if let Fault::ClientStall { at, dur } = *fault {
+            let resume = at.saturating_add(dur);
+            for a in arrivals.iter_mut() {
+                if a.at >= at && a.at < resume {
+                    a.at = resume; // delivered as one catch-up burst
+                }
+            }
+        }
+    }
+    let runtime_faults: Vec<Fault> = sc
+        .faults
+        .iter()
+        .filter(|f| !matches!(f, Fault::ClientStall { .. }))
+        .cloned()
+        .collect();
+    let mut events: Vec<(Tick, Ev)> = arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, a)| (a.at, Ev::Arrive(i)))
+        .chain(
+            runtime_faults
+                .iter()
+                .enumerate()
+                .map(|(k, f)| (f.at(), Ev::Fault(k))),
+        )
+        .collect();
+    events.sort_by_key(|(t, _)| *t);
+
+    // -- run the event loop
+    let mut obs = Observed {
+        latencies_us: Vec::with_capacity(arrivals.len()),
+        responses: 0,
+        failed_responses: 0,
+        bit_checked: 0,
+        max_version: 0,
+        completed_jobs: 0,
+        failed_jobs: 0,
+        swap_published: None,
+        swap_visible_at: None,
+        panic_batches: None,
+        recovery_batches: None,
+    };
+    let mut tickets: Vec<InFlight> = Vec::new();
+    let mut pending_jobs: Vec<(JobId, JobKind)> = Vec::new();
+    let mut requests = 0u64;
+    let mut rejected_jobs = 0u64;
+    let mut pending_panic_snapshot = false;
+    let mut ei = 0usize;
+    loop {
+        sim.until_quiescent();
+        if pending_panic_snapshot {
+            obs.panic_batches = Some(batches_now(&servers));
+            pending_panic_snapshot = false;
+        }
+        // jobs before tickets: a hot-swap publish must be in the
+        // version map before a response served by it is checked
+        poll_jobs(queue.as_ref(), &mut pending_jobs, &mut obs, &store, &mut versions, &sim);
+        drain_tickets(&mut tickets, &arrivals, &mut obs, &versions, &sim, || {
+            batches_now(&servers)
+        });
+
+        let next_event = events.get(ei).map(|(t, _)| *t);
+        match (next_event, sim.next_deadline()) {
+            (None, None) => break,
+            // deadline-first at ties: the flush at `td` happens before
+            // arrivals at the same instant (they join the next batch)
+            (Some(te), Some(td)) if td <= te => sim.advance_to(td),
+            (Some(te), _) => {
+                if te > sim.now() {
+                    sim.advance_to(te);
+                    sim.until_quiescent();
+                }
+                while ei < events.len() && events[ei].0 <= sim.now() {
+                    let (_, ev) = &events[ei];
+                    ei += 1;
+                    match ev {
+                        Ev::Arrive(i) => {
+                            let a = &arrivals[*i];
+                            tickets.push(InFlight {
+                                submitted: sim.now(),
+                                arrival: *i,
+                                ticket: submitters[a.model].submit(a.request.clone()),
+                            });
+                            requests += 1;
+                        }
+                        Ev::Fault(k) => inject(
+                            &runtime_faults[*k],
+                            sc,
+                            &train0,
+                            queue.as_ref().expect("fault scenarios build a queue"),
+                            &mut pending_jobs,
+                            &mut rejected_jobs,
+                            &mut pending_panic_snapshot,
+                        )?,
+                    }
+                }
+            }
+            (None, Some(td)) => sim.advance_to(td),
+        }
+    }
+    // events exhausted and nothing scheduled: one last observation pass
+    poll_jobs(queue.as_ref(), &mut pending_jobs, &mut obs, &store, &mut versions, &sim);
+    drain_tickets(&mut tickets, &arrivals, &mut obs, &versions, &sim, || {
+        batches_now(&servers)
+    });
+    assert!(
+        pending_jobs.is_empty(),
+        "{}: fit jobs still pending at quiescence",
+        sc.name
+    );
+    let end = sim.now().max(sc.workload.horizon);
+
+    // -- teardown (kicks + joins), then account anything shutdown flushed
+    drop(submitters);
+    let batches = batches_now(&servers);
+    let served: u64 = servers
+        .iter()
+        .map(|s| s.counters().requests.load(Ordering::Relaxed))
+        .sum();
+    for s in &mut servers {
+        s.shutdown();
+    }
+    if let Some(q) = queue.as_mut() {
+        q.shutdown();
+    }
+    for inflight in tickets {
+        match inflight.ticket.poll() {
+            Some(Ok(_)) | None => obs.failed_responses += 1, // undrained at quiescence = a bug surfaced
+            Some(Err(_)) => obs.failed_responses += 1,
+        }
+    }
+
+    obs.latencies_us.sort_by(|a, b| a.total_cmp(b));
+    let virtual_seconds = end as f64 * 1e-9;
+    Ok(Outcome {
+        name: sc.name.to_string(),
+        requests,
+        responses: obs.responses,
+        failed_responses: obs.failed_responses,
+        batches,
+        mean_batch: if batches == 0 {
+            0.0
+        } else {
+            served as f64 / batches as f64
+        },
+        virtual_seconds,
+        throughput_rps: if virtual_seconds > 0.0 {
+            obs.responses as f64 / virtual_seconds
+        } else {
+            0.0
+        },
+        p50_us: percentile(&obs.latencies_us, 0.50),
+        p90_us: percentile(&obs.latencies_us, 0.90),
+        p99_us: percentile(&obs.latencies_us, 0.99),
+        max_us: obs.latencies_us.last().copied().unwrap_or(0.0),
+        bit_identity_checked: obs.bit_checked,
+        completed_jobs: obs.completed_jobs,
+        failed_jobs: obs.failed_jobs,
+        rejected_jobs,
+        swap_lag_us: match (obs.swap_published, obs.swap_visible_at) {
+            (Some((published, _)), Some(visible)) => {
+                Some(visible.saturating_sub(published) as f64 * 1e-3)
+            }
+            _ => None,
+        },
+        recovery_batches: obs.recovery_batches,
+        max_version_served: obs.max_version,
+    })
+}
+
+/// Inject one runtime fault (driver-side; see `Fault` docs).
+fn inject(
+    fault: &Fault,
+    sc: &Scenario,
+    train0: &(Arc<Design>, Arc<Vec<f64>>),
+    queue: &FitQueue,
+    pending_jobs: &mut Vec<(JobId, JobKind)>,
+    rejected_jobs: &mut u64,
+    pending_panic_snapshot: &mut bool,
+) -> Result<(), ShotgunError> {
+    let base_job = |lam: f64| {
+        FitJob::new(
+            Arc::clone(&train0.0),
+            Arc::clone(&train0.1),
+            sc.loss,
+            lam,
+        )
+        .solver_name(solver_for(sc.loss))
+        .options(|o| {
+            o.max_iters = 200_000;
+            o.tol = 1e-6;
+        })
+    };
+    match *fault {
+        Fault::WorkerPanic { .. } => {
+            let id = queue.submit(base_job(sc.train_lam).fault(FitFault::Panic))?;
+            pending_jobs.push((id, JobKind::Panic));
+            *pending_panic_snapshot = true;
+        }
+        Fault::HotSwap { lam, cost, .. } => {
+            let id = queue.submit(
+                base_job(lam)
+                    .publish_as(model_name(0))
+                    .fault(FitFault::SlowFit { cost }),
+            )?;
+            pending_jobs.push((id, JobKind::Swap));
+        }
+        Fault::QueueSaturation {
+            jobs, wedge_cost, ..
+        } => {
+            // deferred submits + one kick: the whole burst lands in the
+            // bounded channel before any worker wakes, so acceptance is
+            // a function of capacity alone (see try_submit_deferred).
+            // Wedges go first (FIFO → they occupy every worker), with
+            // distinct costs so no two completions tie on the timeline.
+            for w in 0..sc.fit_workers.max(1) {
+                let cost = wedge_cost + w as Tick * 1_000_001;
+                match queue
+                    .try_submit_deferred(base_job(sc.train_lam).fault(FitFault::SlowFit { cost }))?
+                {
+                    Some(id) => pending_jobs.push((id, JobKind::Wedge)),
+                    None => *rejected_jobs += 1,
+                }
+            }
+            for _ in 0..jobs {
+                match queue.try_submit_deferred(base_job(sc.train_lam))? {
+                    Some(id) => pending_jobs.push((id, JobKind::Burst)),
+                    None => *rejected_jobs += 1,
+                }
+            }
+            queue.kick_workers();
+        }
+        Fault::ClientStall { .. } => unreachable!("applied to the workload pre-pass"),
+    }
+    Ok(())
+}
+
+/// Observe terminal fit jobs (at quiescence). A completed hot-swap
+/// records its published version + instant; a panic job counts as a
+/// typed failure.
+fn poll_jobs(
+    queue: Option<&FitQueue>,
+    pending_jobs: &mut Vec<(JobId, JobKind)>,
+    obs: &mut Observed,
+    store: &ModelStore,
+    versions: &mut HashMap<(usize, u64), Arc<Model>>,
+    sim: &super::clock::SimClock,
+) {
+    let Some(queue) = queue else { return };
+    pending_jobs.retain(|&(id, kind)| {
+        match queue.status(id) {
+            Some(JobState::Done(_)) => {
+                obs.completed_jobs += 1;
+                if kind == JobKind::Swap {
+                    let rec = store.get(&model_name(0)).expect("published name");
+                    versions.insert((0, rec.version), Arc::clone(&rec.model));
+                    obs.swap_published = Some((sim.now(), rec.version));
+                }
+                let _ = queue.take(id);
+                false
+            }
+            Some(JobState::Failed(_)) => {
+                obs.failed_jobs += 1;
+                assert_eq!(
+                    kind,
+                    JobKind::Panic,
+                    "only the injected panic job may fail (job {id})"
+                );
+                let _ = queue.take(id);
+                false
+            }
+            _ => true,
+        }
+    });
+}
+
+/// Drain completed tickets (at quiescence): stamp virtual latencies,
+/// check batch bit-identity per response, track swap visibility.
+fn drain_tickets(
+    tickets: &mut Vec<InFlight>,
+    arrivals: &[Arrival],
+    obs: &mut Observed,
+    versions: &HashMap<(usize, u64), Arc<Model>>,
+    sim: &super::clock::SimClock,
+    batches_now: impl Fn() -> u64,
+) {
+    let now = sim.now();
+    let mut still = Vec::with_capacity(tickets.len());
+    for inflight in tickets.drain(..) {
+        let Some(outcome) = inflight.ticket.poll() else {
+            still.push(inflight);
+            continue;
+        };
+        let arrival = &arrivals[inflight.arrival];
+        match outcome {
+            Err(_) => obs.failed_responses += 1,
+            Ok(resp) => {
+                obs.responses += 1;
+                obs.latencies_us
+                    .push(now.saturating_sub(inflight.submitted) as f64 * 1e-3);
+                obs.max_version = obs.max_version.max(resp.model_version);
+                // bit-identity against sequential predict on the exact
+                // version that served the batch
+                let model = versions
+                    .get(&(arrival.model, resp.model_version))
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "response for model {} served by unknown version {}",
+                            arrival.model, resp.model_version
+                        )
+                    });
+                let single = batch_design(std::slice::from_ref(&arrival.request), model.d())
+                    .expect("request validated by the batch path");
+                let score = model.decision_function(&single).expect("score")[0];
+                let pred = model.predict(&single).expect("predict")[0];
+                assert_eq!(
+                    resp.score.to_bits(),
+                    score.to_bits(),
+                    "bit-identity: score diverged from sequential predict"
+                );
+                assert_eq!(
+                    resp.prediction.to_bits(),
+                    pred.to_bits(),
+                    "bit-identity: prediction diverged from sequential predict"
+                );
+                if arrival.request.proba {
+                    let proba = model.predict_proba(&single).expect("proba")[0];
+                    assert_eq!(
+                        resp.proba.map(f64::to_bits),
+                        Some(proba.to_bits()),
+                        "bit-identity: proba diverged from sequential predict"
+                    );
+                }
+                obs.bit_checked += 1;
+                // swap visibility: first response carrying the swapped
+                // version (recovery metric rides on the same instant)
+                if let Some((_, version)) = obs.swap_published {
+                    if resp.model_version >= version && obs.swap_visible_at.is_none() {
+                        obs.swap_visible_at = Some(now);
+                        if let Some(panic_batches) = obs.panic_batches {
+                            obs.recovery_batches =
+                                Some(batches_now().saturating_sub(panic_batches));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    *tickets = still;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simserve::clock::SECOND;
+    use crate::simserve::workload::RateCurve;
+    use std::time::Duration;
+
+    #[test]
+    fn tiny_serve_only_scenario_runs_to_quiescence() {
+        let sc = Scenario {
+            name: "unit-tiny",
+            workload: WorkloadSpec {
+                curve: RateCurve::Constant { rps: 400.0 },
+                horizon: SECOND / 4,
+                models: 1,
+                zipf_exponent: 0.0,
+                d: 24,
+                max_nnz: 5,
+                proba_fraction: 0.0,
+            },
+            batch: BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(800),
+            },
+            faults: vec![],
+            fit_workers: 1,
+            fit_capacity: 4,
+            seed: 5,
+            loss: Loss::Squared,
+            train_n: 40,
+            train_lam: 0.2,
+        };
+        let out = run(&sc).expect("scenario runs");
+        assert!(out.requests > 0);
+        assert_eq!(out.responses, out.requests);
+        assert_eq!(out.failed_responses, 0);
+        assert_eq!(out.bit_identity_checked, out.responses);
+        assert!(out.batches > 0);
+        assert!(out.p50_us <= out.p99_us && out.p99_us <= out.max_us);
+        // the max_wait flush bounds every latency
+        assert!(out.max_us <= 800.0 + 1e-9, "max latency {}", out.max_us);
+        // deterministic: a second run is outcome-equal
+        assert_eq!(out, run(&sc).expect("second run"));
+    }
+}

@@ -1,0 +1,355 @@
+//! Seeded workload generation — the million-user traffic shapes as
+//! deterministic arrival streams.
+//!
+//! A [`WorkloadSpec`] fully determines a stream of [`Arrival`]s (same
+//! spec + seed → bit-identical stream): arrival instants from a
+//! non-homogeneous Poisson process over a [`RateCurve`] (Lewis-Shedler
+//! thinning against the curve's peak rate), per-arrival model routing
+//! from a [`Zipf`] popularity law (the heavy-tailed "one hot model,
+//! many cold ones" shape), and request content drawn the same way as
+//! `testkit::requests` (sparse rows, seeded).
+//!
+//! The three curve families cover the scenario axes the ROADMAP names:
+//! * [`RateCurve::Constant`] — the baseline closed-form load;
+//! * [`RateCurve::Diurnal`] — a smooth day/night cosine between a base
+//!   and a peak rate;
+//! * [`RateCurve::Bursty`] — an on/off square wave (thundering herds,
+//!   delayed-flush windows in the gaps).
+//!
+//! `tests/simserve.rs` holds the property tests: bit-identical streams
+//! per seed, arrival counts integrating to
+//! [`RateCurve::expected_total`], and the Zipf tail matching its
+//! exponent.
+
+use super::clock::Tick;
+use crate::api::serve::PredictRequest;
+use crate::util::rng::Rng;
+
+/// Requests-per-second as a function of virtual time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RateCurve {
+    /// λ(t) = `rps`.
+    Constant { rps: f64 },
+    /// Smooth diurnal curve: λ(t) = base + (peak − base) · (1 − cos(2πt/period)) / 2
+    /// — starts at `base_rps`, peaks mid-`period`, returns to base.
+    Diurnal {
+        base_rps: f64,
+        peak_rps: f64,
+        period: Tick,
+    },
+    /// Square wave: `on_rps` for `on` ticks, then `off_rps` for `off`
+    /// ticks, repeating.
+    Bursty {
+        on_rps: f64,
+        off_rps: f64,
+        on: Tick,
+        off: Tick,
+    },
+}
+
+impl RateCurve {
+    /// Instantaneous rate at `t`, requests per second.
+    pub fn rate_at(&self, t: Tick) -> f64 {
+        match *self {
+            RateCurve::Constant { rps } => rps,
+            RateCurve::Diurnal {
+                base_rps,
+                peak_rps,
+                period,
+            } => {
+                let phase = t as f64 / period.max(1) as f64;
+                base_rps
+                    + (peak_rps - base_rps) * (1.0 - (2.0 * std::f64::consts::PI * phase).cos())
+                        / 2.0
+            }
+            RateCurve::Bursty {
+                on_rps,
+                off_rps,
+                on,
+                off,
+            } => {
+                let cycle = on.saturating_add(off).max(1);
+                if t % cycle < on {
+                    on_rps
+                } else {
+                    off_rps
+                }
+            }
+        }
+    }
+
+    /// The curve's maximum rate (the thinning envelope).
+    pub fn peak(&self) -> f64 {
+        match *self {
+            RateCurve::Constant { rps } => rps,
+            RateCurve::Diurnal {
+                base_rps, peak_rps, ..
+            } => base_rps.max(peak_rps),
+            RateCurve::Bursty {
+                on_rps, off_rps, ..
+            } => on_rps.max(off_rps),
+        }
+    }
+
+    /// ∫λ dt over `[0, horizon)` — the expected arrival count (closed
+    /// form per family; the integration property test compares actual
+    /// counts against this within Poisson tolerance).
+    pub fn expected_total(&self, horizon: Tick) -> f64 {
+        let h = horizon as f64 * 1e-9; // seconds
+        match *self {
+            RateCurve::Constant { rps } => rps * h,
+            RateCurve::Diurnal {
+                base_rps,
+                peak_rps,
+                period,
+            } => {
+                // ∫ (1 - cos(2πt/T))/2 dt = (h - T sin(2πh/T)/(2π)) / 2
+                let t_s = period.max(1) as f64 * 1e-9;
+                let two_pi = 2.0 * std::f64::consts::PI;
+                let shaped = (h - t_s * (two_pi * h / t_s).sin() / two_pi) / 2.0;
+                base_rps * h + (peak_rps - base_rps) * shaped
+            }
+            RateCurve::Bursty {
+                on_rps,
+                off_rps,
+                on,
+                off,
+            } => {
+                let cycle = on.saturating_add(off).max(1);
+                let full = horizon / cycle;
+                let rem = horizon % cycle;
+                let on_ticks = full * on + rem.min(on);
+                let off_ticks = horizon - on_ticks;
+                on_rps * (on_ticks as f64 * 1e-9) + off_rps * (off_ticks as f64 * 1e-9)
+            }
+        }
+    }
+}
+
+/// Arrival instants over `[0, horizon)` for a non-homogeneous Poisson
+/// process with rate `curve` — Lewis-Shedler thinning: draw candidate
+/// gaps from the peak-rate homogeneous process, keep each candidate
+/// with probability `rate_at(t) / peak`. Deterministic in `rng`.
+pub fn arrivals(curve: &RateCurve, horizon: Tick, rng: &mut Rng) -> Vec<Tick> {
+    let peak = curve.peak();
+    if !peak.is_finite() || peak <= 0.0 || horizon == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let horizon_s = horizon as f64 * 1e-9;
+    let mut t_s = 0.0f64;
+    loop {
+        // exponential gap at the envelope rate; uniform() is in [0, 1)
+        // so 1-u is in (0, 1] and the log is finite
+        t_s += -(1.0 - rng.uniform()).ln() / peak;
+        if t_s >= horizon_s {
+            return out;
+        }
+        let tick = (t_s * 1e9) as Tick;
+        if rng.uniform() * peak < curve.rate_at(tick) {
+            out.push(tick.min(horizon - 1));
+        }
+    }
+}
+
+/// Zipf popularity over `n` items: item `k` has weight `1/(k+1)^s`.
+/// `s = 0` is uniform; larger `s` concentrates mass on item 0 (the hot
+/// model).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, exponent: f64) -> Zipf {
+        let n = n.max(1);
+        let mut cdf: Vec<f64> = (0..n)
+            .map(|k| ((k + 1) as f64).powf(-exponent))
+            .collect();
+        let total: f64 = cdf.iter().sum();
+        let mut acc = 0.0;
+        for w in cdf.iter_mut() {
+            acc += *w / total;
+            *w = acc;
+        }
+        // guard against rounding: the last bucket must cover u -> 1.0
+        if let Some(last) = cdf.last_mut() {
+            *last = 1.0;
+        }
+        Zipf { cdf }
+    }
+
+    /// Number of items.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Probability of item `k`.
+    pub fn pmf(&self, k: usize) -> f64 {
+        let lo = if k == 0 { 0.0 } else { self.cdf[k - 1] };
+        self.cdf[k] - lo
+    }
+
+    /// Draw one item index.
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        self.cdf
+            .partition_point(|&c| c <= u)
+            .min(self.cdf.len() - 1)
+    }
+}
+
+/// One generated request: when it arrives, which model it targets, and
+/// its feature row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arrival {
+    /// Arrival instant, virtual ticks.
+    pub at: Tick,
+    /// Target model index (`0 .. WorkloadSpec::models`).
+    pub model: usize,
+    /// The request body.
+    pub request: PredictRequest,
+}
+
+/// Everything that determines a workload (same spec + seed →
+/// bit-identical [`generate`] output).
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Arrival-rate shape.
+    pub curve: RateCurve,
+    /// Stream length in virtual ticks.
+    pub horizon: Tick,
+    /// Number of served models requests route across.
+    pub models: usize,
+    /// Zipf exponent for per-model popularity (0 = uniform).
+    pub zipf_exponent: f64,
+    /// Feature dimension requests index into (the models' `d`).
+    pub d: usize,
+    /// Max nonzero features per request (uniform in `[1, max_nnz]`).
+    pub max_nnz: usize,
+    /// Fraction of requests asking for a probability read-out (keep 0
+    /// unless the served models are logistic).
+    pub proba_fraction: f64,
+}
+
+impl WorkloadSpec {
+    /// Generate the full arrival stream from `seed` (see type docs).
+    pub fn generate(&self, seed: u64) -> Vec<Arrival> {
+        assert!(self.d > 0, "workload needs d >= 1");
+        let mut rng = Rng::new(seed);
+        let times = arrivals(&self.curve, self.horizon, &mut rng);
+        let zipf = Zipf::new(self.models.max(1), self.zipf_exponent);
+        let max_nnz = self.max_nnz.clamp(1, self.d);
+        times
+            .into_iter()
+            .map(|at| {
+                let model = zipf.draw(&mut rng);
+                // same row shape as testkit::requests::stream
+                let k = 1 + rng.below(max_nnz);
+                let mut idx = rng.sample_without_replacement(self.d, k);
+                idx.sort_unstable();
+                let features = idx.into_iter().map(|j| (j as u32, rng.normal())).collect();
+                let proba =
+                    self.proba_fraction > 0.0 && rng.bernoulli(self.proba_fraction);
+                Arrival {
+                    at,
+                    model,
+                    request: PredictRequest { features, proba },
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simserve::clock::SECOND;
+
+    fn spec(curve: RateCurve) -> WorkloadSpec {
+        WorkloadSpec {
+            curve,
+            horizon: 2 * SECOND,
+            models: 4,
+            zipf_exponent: 1.0,
+            d: 32,
+            max_nnz: 6,
+            proba_fraction: 0.0,
+        }
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let s = spec(RateCurve::Diurnal {
+            base_rps: 200.0,
+            peak_rps: 1000.0,
+            period: SECOND,
+        });
+        let a = s.generate(9);
+        assert_eq!(a, s.generate(9), "same seed, same stream");
+        assert_ne!(a, s.generate(10), "different seed, different stream");
+        assert!(!a.is_empty());
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at, "arrivals are time-ordered");
+        }
+        for arr in &a {
+            assert!(arr.at < s.horizon);
+            assert!(arr.model < s.models);
+            assert!(!arr.request.features.is_empty());
+            assert!(arr.request.features.len() <= 6);
+        }
+    }
+
+    #[test]
+    fn constant_curve_count_matches_expectation() {
+        let curve = RateCurve::Constant { rps: 500.0 };
+        let mut rng = Rng::new(3);
+        let n = arrivals(&curve, 4 * SECOND, &mut rng).len() as f64;
+        let want = curve.expected_total(4 * SECOND);
+        assert_eq!(want, 2000.0);
+        // Poisson: 6 sigma around the mean is a ~1e-9 false-positive
+        assert!((n - want).abs() < 6.0 * want.sqrt() + 1.0, "n = {n}");
+    }
+
+    #[test]
+    fn bursty_rate_and_integral_are_piecewise() {
+        let curve = RateCurve::Bursty {
+            on_rps: 900.0,
+            off_rps: 100.0,
+            on: SECOND / 4,
+            off: (3 * SECOND) / 4,
+        };
+        assert_eq!(curve.rate_at(0), 900.0);
+        assert_eq!(curve.rate_at(SECOND / 2), 100.0);
+        assert_eq!(curve.rate_at(SECOND), 900.0);
+        // one full cycle: 900 * 0.25s + 100 * 0.75s
+        let total = curve.expected_total(SECOND);
+        assert!((total - 300.0).abs() < 1e-9, "total = {total}");
+    }
+
+    #[test]
+    fn zipf_is_normalized_and_head_heavy() {
+        let z = Zipf::new(10, 1.2);
+        assert_eq!(z.len(), 10);
+        let sum: f64 = (0..10).map(|k| z.pmf(k)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(z.pmf(0) > z.pmf(1) && z.pmf(1) > z.pmf(9));
+        // exponent 0 is uniform
+        let u = Zipf::new(8, 0.0);
+        for k in 0..8 {
+            assert!((u.pmf(k) - 0.125).abs() < 1e-12);
+        }
+        // draws hit every bucket and never go out of range
+        let mut rng = Rng::new(1);
+        let mut seen = [0usize; 10];
+        for _ in 0..5_000 {
+            seen[z.draw(&mut rng)] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 0));
+        assert!(seen[0] > seen[9]);
+    }
+}

@@ -16,7 +16,7 @@ pub struct Args {
 /// `data.svm` positional). Register the crate's boolean flags here.
 pub const BOOL_FLAGS: &[&str] = &[
     "verbose", "quiet", "help", "no-normalize", "exact", "json", "no-path",
-    "no-active-set", "no-cache", "sync", "force", "compare-unbatched",
+    "no-active-set", "no-cache", "sync", "force", "compare-unbatched", "smoke",
 ];
 
 impl Args {

@@ -20,6 +20,7 @@ use shotgun::api::serve::{
 use shotgun::api::{Fit, Model};
 use shotgun::data::synth;
 use shotgun::objective::Loss;
+use shotgun::simserve::Clock;
 use shotgun::sparsela::Design;
 use shotgun::testkit::requests::{stream, StreamSpec};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -134,9 +135,13 @@ fn batched_prediction_is_bit_identical_to_sequential() {
 }
 
 #[test]
-fn batch_server_matches_the_synchronous_front() {
+fn batch_server_matches_the_synchronous_front_on_virtual_time() {
     // the threaded collector changes WHEN batches flush, never WHAT
-    // they contain — outputs must match the synchronous front exactly
+    // they contain — outputs must match the synchronous front exactly.
+    // The collector runs on a SimClock, so the 300us max_wait flush
+    // fires exactly when the driver advances past it — the test asserts
+    // flush *timing*, not just values, and can never flake on a slow
+    // host the way a wall-clock 300us window could.
     let model = fitted_model(Loss::Squared, 12);
     let d = model.d();
     let store = Arc::new(ModelStore::new());
@@ -146,20 +151,49 @@ fn batch_server_matches_the_synchronous_front() {
     let mut sync_front = BatchPredictor::new(Arc::clone(&store), "m", BatchConfig::default());
     let expect = sync_front.run(&requests).unwrap();
 
-    let server = BatchServer::spawn(
+    let clock = Clock::sim();
+    let sim = Arc::clone(clock.sim_handle().unwrap());
+    let mut server = BatchServer::spawn_with_clock(
         Arc::clone(&store),
         "m",
         BatchConfig {
             max_batch: 16,
             max_wait: Duration::from_micros(300),
         },
+        clock,
     );
     let tickets: Vec<_> = requests.iter().map(|r| server.submit(r.clone())).collect();
-    for (ticket, want) in tickets.into_iter().zip(&expect) {
-        let got = ticket.wait().expect("served");
+    sim.until_quiescent();
+    // all 200 requests landed at virtual tick 0: twelve full batches of
+    // 16 flush immediately, the last 8 sit on the max_wait timer
+    let mut got: Vec<_> = tickets
+        .iter()
+        .map(|t| t.poll().map(|r| r.expect("served")))
+        .collect();
+    assert!(got[..192].iter().all(Option::is_some), "full batches flush at once");
+    assert!(
+        got[192..].iter().all(Option::is_none),
+        "the partial batch must wait for the virtual max_wait deadline"
+    );
+    assert_eq!(
+        sim.next_deadline(),
+        Some(300_000),
+        "flush deadline = first pending arrival (tick 0) + 300us"
+    );
+    sim.advance_to(300_000);
+    sim.until_quiescent();
+    for (ticket, slot) in tickets.iter().zip(&mut got) {
+        if slot.is_none() {
+            *slot = Some(ticket.poll().expect("flushed at the deadline").expect("served"));
+        }
+    }
+    assert_eq!(server.counters().batches.load(Ordering::Relaxed), 13);
+    for (got, want) in got.iter().zip(&expect) {
+        let got = got.as_ref().expect("every ticket served");
         assert_eq!(got.prediction.to_bits(), want.prediction.to_bits());
         assert_eq!(got.score.to_bits(), want.score.to_bits());
     }
+    server.shutdown();
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,315 @@
+//! End-to-end harness for the `simserve` simulator — the acceptance
+//! contracts the ISSUE names:
+//!
+//! 1. **Run-to-run determinism**: every named scenario produces an
+//!    `==`-equal `Outcome` (latency percentiles included) on repeated
+//!    runs.
+//! 2. **Worker-count independence**: fit-queue scenarios produce the
+//!    same outcome with 1, 2, or 4 workers.
+//! 3. **Fault semantics**: the injected panic fails exactly its own
+//!    job (the worker survives to run the recovery swap), saturation
+//!    rejections are an exact function of queue capacity, a client
+//!    stall deepens batches without losing requests — and batch
+//!    bit-identity holds under every fault (the scenario runner checks
+//!    each response; a violation panics the run).
+//! 4. **Workload laws** (property tests over random specs): same seed →
+//!    bit-identical streams, arrival counts integrate the rate curve,
+//!    and the Zipf popularity tail matches its exponent.
+
+use shotgun::simserve::report::{run_suite, suite, REQUIRED_SCENARIOS};
+use shotgun::simserve::scenario::run;
+use shotgun::simserve::workload::arrivals;
+use shotgun::simserve::{RateCurve, Scenario, WorkloadSpec, Zipf, SECOND};
+use shotgun::testkit;
+use shotgun::util::json::Json;
+use shotgun::util::rng::Rng;
+
+fn named(seed: u64, name: &str) -> Scenario {
+    suite(true, seed)
+        .into_iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("suite has no scenario {name:?}"))
+}
+
+// ---------------------------------------------------------------------
+// contract 1: run-to-run determinism of the whole named suite
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_named_scenario_is_run_to_run_deterministic() {
+    let first = run_suite(true, 42, None).expect("suite runs");
+    let second = run_suite(true, 42, None).expect("suite runs");
+    // PartialEq over the WHOLE outcome struct: request counts, batch
+    // composition, latency percentiles, fault counters — floats must be
+    // bit-equal, not merely close
+    assert_eq!(first.outcomes, second.outcomes);
+    // non-vacuous: a different seed produces different traffic
+    let other = run_suite(true, 43, None).expect("suite runs");
+    assert_ne!(first.outcomes, other.outcomes);
+}
+
+// ---------------------------------------------------------------------
+// contract 2: fit-queue scenarios are worker-count independent
+// ---------------------------------------------------------------------
+
+#[test]
+fn fault_scenarios_are_worker_count_independent() {
+    for name in ["worker-panic-recovery", "hot-swap-under-load"] {
+        let base = named(42, name);
+        let outcomes: Vec<_> = [1usize, 2, 4]
+            .into_iter()
+            .map(|workers| {
+                let mut sc = base.clone();
+                sc.fit_workers = workers;
+                run(&sc).expect("scenario runs")
+            })
+            .collect();
+        assert_eq!(outcomes[0], outcomes[1], "{name}: 1 vs 2 workers");
+        assert_eq!(outcomes[1], outcomes[2], "{name}: 2 vs 4 workers");
+    }
+}
+
+// ---------------------------------------------------------------------
+// contract 3: fault semantics
+// ---------------------------------------------------------------------
+
+#[test]
+fn suite_outcomes_hold_the_declared_invariants_and_feed_the_bench_json() {
+    let rep = run_suite(true, 42, None).expect("suite runs");
+    let names: Vec<&str> = rep.outcomes.iter().map(|o| o.name.as_str()).collect();
+    for required in REQUIRED_SCENARIOS {
+        assert!(names.contains(&required), "suite must run {required}");
+    }
+    for o in &rep.outcomes {
+        // every request served, none dropped or failed, every response
+        // checked bit-for-bit against sequential predict
+        assert_eq!(o.responses, o.requests, "{}: lost requests", o.name);
+        assert_eq!(o.failed_responses, 0, "{}: failed responses", o.name);
+        assert_eq!(o.bit_identity_checked, o.responses, "{}", o.name);
+        assert!(o.requests > 0 && o.batches > 0, "{}: empty run", o.name);
+        assert!(
+            o.p50_us <= o.p90_us && o.p90_us <= o.p99_us && o.p99_us <= o.max_us,
+            "{}: percentiles out of order",
+            o.name
+        );
+        assert!(o.virtual_seconds > 0.0 && o.throughput_rps > 0.0, "{}", o.name);
+    }
+    // worker panic: exactly the poisoned job fails, the worker survives
+    // to complete the recovery swap, and the swap becomes visible
+    let panic_recovery = rep.outcome("worker-panic-recovery").expect("ran");
+    assert_eq!(panic_recovery.failed_jobs, 1);
+    assert_eq!(panic_recovery.completed_jobs, 1);
+    assert_eq!(panic_recovery.max_version_served, 2, "recovery swap served");
+    assert!(panic_recovery.recovery_batches.expect("measured") > 0);
+    // hot swap under load: finite positive visibility lag, new version
+    // takes over at a batch boundary
+    let swap = rep.outcome("hot-swap-under-load").expect("ran");
+    let lag = swap.swap_lag_us.expect("swap observed");
+    assert!(lag.is_finite() && lag > 0.0, "swap lag {lag}");
+    assert_eq!(swap.max_version_served, 2);
+    // saturation: 2 wedges + 2 of the 6-job burst fit the 4-slot
+    // channel; the other 4 are typed rejections
+    let sat = rep.outcome("queue-saturation").expect("ran");
+    assert_eq!(sat.rejected_jobs, 4);
+    assert_eq!(sat.completed_jobs, 4);
+    assert_eq!(sat.failed_jobs, 0);
+    // bursty traffic exercises the delayed (max_wait timer) flush path:
+    // off-phase batches stay well under max_batch
+    let bursty = rep.outcome("bursty").expect("ran");
+    assert!(bursty.mean_batch < 16.0, "mean batch {}", bursty.mean_batch);
+
+    // the bench document is valid JSON with the derived fields the CI
+    // gate (scripts/check_bench.py) requires to be finite and positive
+    let doc = Json::parse(&rep.to_bench_json()).expect("valid JSON");
+    assert_eq!(
+        doc.get("bench").and_then(|b| b.as_str().map(String::from)),
+        Some("simserve".into())
+    );
+    let derived = doc.get("derived").expect("derived section");
+    for key in [
+        "batching_latency_p99_ratio",
+        "fault_recovery_rounds",
+        "swap_visibility_lag_us",
+        "sim_scenarios",
+        "sim_requests_total",
+    ] {
+        let v = derived.get(key).and_then(|v| v.as_f64()).expect(key);
+        assert!(v.is_finite() && v > 0.0, "{key} = {v}");
+    }
+}
+
+#[test]
+fn queue_saturation_rejections_follow_capacity_exactly() {
+    let base = named(7, "queue-saturation");
+    for workers in [1usize, 2, 3] {
+        let mut sc = base.clone();
+        sc.fit_workers = workers;
+        let out = run(&sc).expect("scenario runs");
+        // `workers` wedges occupy every worker before the 6-job burst
+        // lands; the bounded channel (capacity 4) accepts 4 - workers of
+        // the burst and rejects the rest — machine speed never enters
+        assert_eq!(
+            out.rejected_jobs,
+            (workers + 6 - 4) as u64,
+            "{workers} workers"
+        );
+        assert_eq!(out.completed_jobs, 4, "{workers} workers");
+        assert_eq!(out.failed_jobs, 0);
+        assert_eq!(out.responses, out.requests, "serving must not notice");
+    }
+}
+
+#[test]
+fn client_stall_defers_arrivals_into_a_catchup_burst() {
+    let base = named(42, "client-stall");
+    let stalled = run(&base).expect("scenario runs");
+    assert_eq!(stalled, run(&base).expect("second run"), "deterministic");
+    // the same workload without the stall: same requests served, but
+    // the catch-up burst after the stall fills batches far deeper than
+    // the steady stream does
+    let mut no_stall = base.clone();
+    no_stall.faults.clear();
+    let plain = run(&no_stall).expect("scenario runs");
+    assert_eq!(plain.requests, stalled.requests, "no arrivals lost");
+    assert_eq!(stalled.responses, stalled.requests);
+    assert!(
+        stalled.mean_batch > plain.mean_batch,
+        "catch-up burst must deepen batches: {} vs {}",
+        stalled.mean_batch,
+        plain.mean_batch
+    );
+}
+
+// ---------------------------------------------------------------------
+// contract 4: workload generator laws (property tests)
+// ---------------------------------------------------------------------
+
+fn random_curve(rng: &mut Rng) -> RateCurve {
+    match rng.below(3) {
+        0 => RateCurve::Constant {
+            rps: 200.0 + rng.uniform() * 3_000.0,
+        },
+        1 => RateCurve::Diurnal {
+            base_rps: 100.0 + rng.uniform() * 500.0,
+            peak_rps: 1_000.0 + rng.uniform() * 4_000.0,
+            period: SECOND / 4 + rng.below(4) as u64 * (SECOND / 4),
+        },
+        _ => RateCurve::Bursty {
+            on_rps: 1_000.0 + rng.uniform() * 4_000.0,
+            off_rps: rng.uniform() * 200.0,
+            on: SECOND / 8 + rng.below(3) as u64 * (SECOND / 8),
+            off: SECOND / 8 + rng.below(5) as u64 * (SECOND / 8),
+        },
+    }
+}
+
+#[test]
+fn same_spec_and_seed_give_bit_identical_streams() {
+    testkit::check(
+        "simserve-stream-bit-identical",
+        0xB17,
+        24,
+        |rng| {
+            let spec = WorkloadSpec {
+                curve: random_curve(rng),
+                horizon: SECOND / 4 + rng.below(4) as u64 * (SECOND / 4),
+                models: 1 + rng.below(6),
+                zipf_exponent: rng.uniform() * 1.5,
+                d: 16 + rng.below(64),
+                max_nnz: 1 + rng.below(10),
+                proba_fraction: 0.0,
+            };
+            let seed = rng.below(1 << 30) as u64;
+            (spec, seed)
+        },
+        |(spec, seed)| {
+            let a = spec.generate(*seed);
+            if a != spec.generate(*seed) {
+                return Err("same spec + seed must be bit-identical".into());
+            }
+            if !a.is_empty() && a == spec.generate(seed.wrapping_add(1)) {
+                return Err("different seed should change the stream".into());
+            }
+            for w in a.windows(2) {
+                if w[0].at > w[1].at {
+                    return Err("arrivals must be time-ordered".into());
+                }
+            }
+            for arr in &a {
+                if arr.at >= spec.horizon || arr.model >= spec.models {
+                    return Err(format!("arrival out of range: {arr:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn arrival_counts_integrate_the_rate_curve() {
+    testkit::check(
+        "simserve-rate-integral",
+        0x1A7,
+        20,
+        |rng| {
+            let curve = random_curve(rng);
+            let horizon = SECOND + rng.below(3) as u64 * SECOND;
+            let seed = rng.below(1 << 30) as u64;
+            (curve, horizon, seed)
+        },
+        |(curve, horizon, seed)| {
+            let mut rng = Rng::new(*seed);
+            let n = arrivals(curve, *horizon, &mut rng).len() as f64;
+            let want = curve.expected_total(*horizon);
+            // Poisson count: 6 sigma + slack is a ~1e-9 false-positive
+            let tol = 6.0 * want.sqrt() + 20.0;
+            if (n - want).abs() > tol {
+                return Err(format!("{curve:?}: {n} arrivals, expected {want:.1} ± {tol:.1}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zipf_tail_matches_its_exponent() {
+    testkit::check(
+        "simserve-zipf-tail",
+        0x21F,
+        8,
+        |rng| {
+            let n = 3 + rng.below(10);
+            let s = 0.5 + rng.uniform();
+            let seed = rng.below(1 << 30) as u64;
+            (n, s, seed)
+        },
+        |&(n, s, seed)| {
+            let z = Zipf::new(n, s);
+            // the constructed pmf IS the Zipf law: p(0)/p(k) = (k+1)^s
+            for k in 1..n {
+                let want = ((k + 1) as f64).powf(s);
+                let got = z.pmf(0) / z.pmf(k);
+                if (got / want - 1.0).abs() > 1e-9 {
+                    return Err(format!("pmf ratio {got} != (k+1)^s = {want} at k={k}"));
+                }
+            }
+            // and draws follow it: head/tail frequency ratios within
+            // 25% of the law over 200k samples
+            let mut rng = Rng::new(seed);
+            let mut freq = vec![0u64; n];
+            for _ in 0..200_000 {
+                freq[z.draw(&mut rng)] += 1;
+            }
+            for k in [1, n - 1] {
+                let want = ((k + 1) as f64).powf(s);
+                let got = freq[0] as f64 / freq[k].max(1) as f64;
+                if (got / want - 1.0).abs() > 0.25 {
+                    return Err(format!(
+                        "freq ratio {got:.3} vs law {want:.3} at k={k} (n={n}, s={s:.3})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

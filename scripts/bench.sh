@@ -9,7 +9,11 @@
 # max_batch=1 baseline replay). Then run the kernel A/B harness
 # (`repro bench kernels`) and refresh BENCH_kernels.json
 # (derived.simd_speedup, derived.shard_vs_atomic_speedup,
-# derived.clustered_vs_uniform_epochs).
+# derived.clustered_vs_uniform_epochs). Finally run the deterministic
+# serving simulator (`repro sim`) and refresh BENCH_simserve.json
+# (derived.batching_latency_p99_ratio, derived.fault_recovery_rounds,
+# derived.swap_visibility_lag_us — all on virtual time, so identical
+# across machines and runs).
 #
 # Usage:
 #   scripts/bench.sh [extra cargo bench args]   full run (perf numbers)
@@ -84,5 +88,16 @@ echo "--- BENCH_kernels.json ---"
 cat BENCH_kernels.json
 
 echo
+echo "== serving simulator (BENCH_simserve.json) =="
+# virtual-time scenario suite: smoke mode is picked up automatically via
+# SHOTGUN_BENCH_SMOKE=1 exported above; the full run stretches horizons
+# 10x and rates 2.5x. Either way the emitted numbers are deterministic
+# functions of the seed.
+cargo run --release --bin repro -- sim --seed 42 --bench-out BENCH_simserve.json
+echo
+echo "--- BENCH_simserve.json ---"
+cat BENCH_simserve.json
+
+echo
 echo "== derived-field gate (scripts/check_bench.py) =="
-python3 scripts/check_bench.py BENCH_hotpath.json BENCH_serving.json BENCH_kernels.json
+python3 scripts/check_bench.py BENCH_hotpath.json BENCH_serving.json BENCH_kernels.json BENCH_simserve.json

@@ -2,13 +2,13 @@
 """Validate the machine-readable bench artifacts.
 
 The EXPERIMENTS.md §Perf tables are fed by derived.* fields in
-BENCH_hotpath.json, BENCH_serving.json, and BENCH_kernels.json. This
-gate fails CI (the bench-smoke job, and the tail of scripts/bench.sh)
-when any required derived field is missing, non-numeric, NaN, or
-non-positive — i.e. when the harness silently stopped producing the
-numbers the tables track.
+BENCH_hotpath.json, BENCH_serving.json, BENCH_kernels.json, and
+BENCH_simserve.json. This gate fails CI (the bench-smoke job, and the
+tail of scripts/bench.sh) when any required derived field is missing,
+non-numeric, NaN, or non-positive — i.e. when the harness silently
+stopped producing the numbers the tables track.
 
-Usage: python3 scripts/check_bench.py BENCH_hotpath.json BENCH_serving.json BENCH_kernels.json
+Usage: python3 scripts/check_bench.py BENCH_hotpath.json BENCH_serving.json BENCH_kernels.json BENCH_simserve.json
 """
 
 import json
@@ -44,6 +44,15 @@ REQUIRED = {
             "clustered_vs_uniform_epochs",
         ],
         "finite": ["shard_objective_rel_gap", "schedule_objective_rel_gap"],
+    },
+    # the PR-8 deterministic serving simulator (`repro sim`): virtual-
+    # latency cost of deeper batching, worker-panic recovery measured in
+    # batch rounds, hot-swap visibility lag. All virtual-time, so the
+    # values are machine-independent; 0/NaN means the simulator stopped
+    # measuring, not that the machine was fast.
+    "simserve": {
+        "positive": ["batching_latency_p99_ratio", "fault_recovery_rounds"],
+        "finite": ["swap_visibility_lag_us"],
     },
 }
 

@@ -41,6 +41,11 @@ echo "== serving subsystem: end-to-end harness + golden fixtures =="
 cargo test -q --test serving --test golden_fixtures --test registry_capabilities \
   --test model_edge_cases --test beyond_losses
 
+echo "== sim-scenarios: deterministic traffic & fault simulator =="
+# run-to-run and cross-worker-count Outcome equality for the named
+# scenario suite, fault semantics, and the workload-generator laws
+cargo test -q --test simserve
+
 echo "== doctests: cargo test --doc =="
 cargo test --doc -q
 
