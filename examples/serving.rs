@@ -36,7 +36,7 @@ fn main() {
 
     // --- fit side: queue jobs at several lambdas, publish the winner ---
     let store = Arc::new(ModelStore::new());
-    let queue = FitQueue::with_store(2, 8, Arc::clone(&store));
+    let queue = FitQueue::with_store(2, 8, Arc::clone(&store)).expect("valid queue params");
     let lambdas = [0.8, 0.4, 0.2, 0.1];
     let ids: Vec<_> = lambdas
         .iter()

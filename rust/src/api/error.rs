@@ -87,6 +87,21 @@ pub enum ShotgunError {
     /// A fit job panicked inside a solver; the worker caught it and the
     /// queue kept running.
     JobPanicked { reason: String },
+    /// The [`BatchServer`](crate::api::serve::BatchServer) shut down
+    /// before serving this request — a *server* lifecycle condition,
+    /// distinct from [`BadRequest`](Self::BadRequest) (a malformed
+    /// client input). Returned by `PendingPredict::wait`/`poll` when
+    /// the reply channel disconnects.
+    ServerShutdown,
+    /// Admission control rejected this predict request: the server
+    /// already had `in_flight` requests against a configured cap of
+    /// `limit` (see `BatchConfig::max_in_flight`). Shed immediately at
+    /// submit — the request never entered a batch.
+    Overloaded { in_flight: usize, limit: usize },
+    /// A queued fit job's deadline passed before a worker dequeued it;
+    /// the job never ran. `late` is how far past the deadline the
+    /// dequeue happened, in clock ticks (nanoseconds).
+    DeadlineExpired { late: u64 },
 }
 
 fn loss_name(loss: Loss) -> &'static str {
@@ -173,6 +188,18 @@ impl fmt::Display for ShotgunError {
             ShotgunError::JobPanicked { reason } => {
                 write!(f, "fit job panicked in the solver: {reason}")
             }
+            ShotgunError::ServerShutdown => {
+                write!(f, "batch server shut down before serving this request")
+            }
+            ShotgunError::Overloaded { in_flight, limit } => write!(
+                f,
+                "server overloaded: {in_flight} requests in flight (limit {limit}); \
+                 request shed, retry later"
+            ),
+            ShotgunError::DeadlineExpired { late } => write!(
+                f,
+                "fit job deadline expired {late} ticks before a worker picked it up"
+            ),
         }
     }
 }

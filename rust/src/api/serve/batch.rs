@@ -28,6 +28,24 @@
 //!   `max_batch` or after `max_wait`, whichever comes first; clients
 //!   get a [`PendingPredict`] ticket to wait on. Batching here changes
 //!   only latency, never values (the contract above).
+//!
+//! **Multi-tenant routing:** one collector serves MANY model names.
+//! Every request carries a name ([`BatchServer::submit_to`]; plain
+//! [`submit`](BatchServer::submit) uses the server's default name), and
+//! a flush partitions its envelopes by name — one coalesced
+//! `decision_function` per `(name, version)` group, in first-seen
+//! order. Grouping never changes values: per row, the batched
+//! accumulation is independent of which other rows share the batch, so
+//! the bit-identity contract above holds per group exactly as it does
+//! for a single-model batch.
+//!
+//! **Admission control:** [`BatchConfig::max_in_flight`] bounds the
+//! number of submitted-but-unconsumed requests. A submit over the
+//! bound is shed immediately with a typed
+//! [`ShotgunError::Overloaded`] — the request never enters a batch,
+//! and the caller's ticket resolves without blocking. A slot is held
+//! until the client consumes or drops its [`PendingPredict`] ticket,
+//! so the bound covers queued AND unread-reply memory.
 
 use super::super::error::ShotgunError;
 use super::super::model::Model;
@@ -132,6 +150,12 @@ pub struct BatchConfig {
     /// [`BatchServer`] only: flush a partial batch this long after its
     /// first request arrived.
     pub max_wait: Duration,
+    /// [`BatchServer`] only: admission bound — submits while this many
+    /// requests are in flight (submitted, ticket not yet consumed or
+    /// dropped) are shed with [`ShotgunError::Overloaded`].
+    /// `usize::MAX` (the default) disables shedding; `0` sheds
+    /// everything.
+    pub max_in_flight: usize,
 }
 
 impl Default for BatchConfig {
@@ -139,6 +163,7 @@ impl Default for BatchConfig {
         BatchConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
+            max_in_flight: usize::MAX,
         }
     }
 }
@@ -332,11 +357,14 @@ impl BatchPredictor {
 }
 
 /// Throughput counters a [`BatchServer`] maintains (relaxed atomics —
-/// monitoring, not synchronization).
+/// monitoring, not synchronization). `batches` counts coalesced
+/// `decision_function` calls — one per `(name)` group per flush.
 #[derive(Default, Debug)]
 pub struct ServerCounters {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
+    /// Requests shed by admission control (never entered a batch).
+    pub shed: AtomicU64,
 }
 
 impl ServerCounters {
@@ -352,24 +380,70 @@ impl ServerCounters {
 }
 
 struct Envelope {
+    /// Model name this request routes to (shared, not re-allocated per
+    /// request on the submit hot path).
+    name: Arc<str>,
     req: PredictRequest,
     reply: mpsc::Sender<Result<PredictResponse, ShotgunError>>,
 }
 
-/// Ticket for an in-flight [`BatchServer`] request.
+/// The in-flight admission gate (see [`BatchConfig::max_in_flight`]).
+/// A slot is acquired at submit and released when the client's
+/// [`PendingPredict`] is consumed or dropped — all on client threads,
+/// never the collector, so shed decisions under a sim clock are a pure
+/// function of the driver's submit/drain order.
+struct Admission {
+    in_flight: AtomicU64,
+    limit: u64,
+}
+
+impl Admission {
+    fn new(limit: usize) -> Arc<Admission> {
+        Arc::new(Admission {
+            in_flight: AtomicU64::new(0),
+            limit: limit as u64,
+        })
+    }
+
+    /// Try to take a slot; on failure the count is restored and the
+    /// typed overload error reports the observed in-flight level.
+    fn try_acquire(&self) -> Result<(), ShotgunError> {
+        let prev = self.in_flight.fetch_add(1, Ordering::Relaxed);
+        if prev >= self.limit {
+            self.in_flight.fetch_sub(1, Ordering::Relaxed);
+            return Err(ShotgunError::Overloaded {
+                in_flight: prev as usize,
+                limit: self.limit as usize,
+            });
+        }
+        Ok(())
+    }
+
+    fn release(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Ticket for an in-flight [`BatchServer`] request. Holding the ticket
+/// holds the request's admission slot; consuming (`wait`), polling to
+/// completion, or dropping it releases the slot.
 pub struct PendingPredict {
     rx: mpsc::Receiver<Result<PredictResponse, ShotgunError>>,
+    /// `Some` while this ticket holds an admission slot (shed tickets
+    /// never acquired one).
+    gate: Option<Arc<Admission>>,
 }
 
 impl PendingPredict {
-    /// Block until the batch containing this request is served.
+    /// Block until the batch containing this request is served. A
+    /// reply-channel disconnect means the server shut down first —
+    /// surfaced as the typed [`ShotgunError::ServerShutdown`], not a
+    /// fabricated client error.
     pub fn wait(self) -> Result<PredictResponse, ShotgunError> {
-        self.rx.recv().unwrap_or_else(|_| {
-            Err(ShotgunError::BadRequest {
-                index: 0,
-                reason: "batch server shut down before serving this request".into(),
-            })
-        })
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| Err(ShotgunError::ServerShutdown))
+        // self drops here, releasing the admission slot
     }
 
     /// Non-blocking check: `Some` once the batch containing this
@@ -380,11 +454,46 @@ impl PendingPredict {
         match self.rx.try_recv() {
             Ok(outcome) => Some(outcome),
             Err(TryRecvError::Empty) => None,
-            Err(TryRecvError::Disconnected) => Some(Err(ShotgunError::BadRequest {
-                index: 0,
-                reason: "batch server shut down before serving this request".into(),
-            })),
+            Err(TryRecvError::Disconnected) => Some(Err(ShotgunError::ServerShutdown)),
         }
+    }
+}
+
+impl Drop for PendingPredict {
+    fn drop(&mut self) {
+        if let Some(gate) = self.gate.take() {
+            gate.release();
+        }
+    }
+}
+
+/// Build a ticket + envelope pair through the admission gate: either
+/// the envelope is enqueued (ticket holds a slot), or the ticket is
+/// pre-resolved with [`ShotgunError::Overloaded`] and nothing reaches
+/// the collector.
+fn submit_via(
+    tx: &Option<mpsc::Sender<Envelope>>,
+    clock: &Clock,
+    admission: &Arc<Admission>,
+    counters: &ServerCounters,
+    name: Arc<str>,
+    req: PredictRequest,
+) -> PendingPredict {
+    let (reply, rx) = mpsc::channel();
+    if let Err(overloaded) = admission.try_acquire() {
+        counters.shed.fetch_add(1, Ordering::Relaxed);
+        let _ = reply.send(Err(overloaded));
+        return PendingPredict { rx, gate: None };
+    }
+    if let Some(tx) = tx {
+        // a send error means the collector exited; the ticket then
+        // reports ServerShutdown on wait()/poll()
+        let _ = tx.send(Envelope { name, req, reply });
+        clock.kick();
+    }
+    PendingPredict {
+        rx,
+        gate: Some(Arc::clone(admission)),
     }
 }
 
@@ -395,17 +504,31 @@ impl PendingPredict {
 pub struct Submitter {
     tx: Option<mpsc::Sender<Envelope>>,
     clock: Clock,
+    default_name: Arc<str>,
+    admission: Arc<Admission>,
+    counters: Arc<ServerCounters>,
 }
 
 impl Submitter {
     /// Same contract as [`BatchServer::submit`].
     pub fn submit(&self, req: PredictRequest) -> PendingPredict {
-        let (reply, rx) = mpsc::channel();
-        if let Some(tx) = &self.tx {
-            let _ = tx.send(Envelope { req, reply });
-            self.clock.kick();
-        }
-        PendingPredict { rx }
+        self.submit_to_shared(Arc::clone(&self.default_name), req)
+    }
+
+    /// Same contract as [`BatchServer::submit_to`].
+    pub fn submit_to(&self, name: &str, req: PredictRequest) -> PendingPredict {
+        self.submit_to_shared(Arc::from(name), req)
+    }
+
+    fn submit_to_shared(&self, name: Arc<str>, req: PredictRequest) -> PendingPredict {
+        submit_via(
+            &self.tx,
+            &self.clock,
+            &self.admission,
+            &self.counters,
+            name,
+            req,
+        )
     }
 }
 
@@ -425,14 +548,31 @@ pub struct BatchServer {
     worker: Option<JoinHandle<()>>,
     counters: Arc<ServerCounters>,
     clock: Clock,
+    default_name: Arc<str>,
+    admission: Arc<Admission>,
 }
 
 impl BatchServer {
     /// Spawn the collector against `store[model_name]`. The name is
     /// re-resolved per batch, so hot-swapped models take effect on the
-    /// next batch boundary.
+    /// next batch boundary. Requests may still route to OTHER names via
+    /// [`submit_to`](Self::submit_to); `model_name` is only the default
+    /// for plain [`submit`](Self::submit).
     pub fn spawn(store: Arc<ModelStore>, model_name: impl Into<String>, cfg: BatchConfig) -> Self {
         Self::spawn_with_clock(store, model_name, cfg, Clock::wall())
+    }
+
+    /// Spawn a multi-tenant router collector: requests carry their own
+    /// model name ([`submit_to`](Self::submit_to)); plain
+    /// [`submit`](Self::submit) routes to `"default"`. One collector
+    /// thread serves every name in the store.
+    pub fn spawn_router(store: Arc<ModelStore>, cfg: BatchConfig) -> Self {
+        Self::spawn_with_clock(store, "default", cfg, Clock::wall())
+    }
+
+    /// [`spawn_router`](Self::spawn_router) on an explicit [`Clock`].
+    pub fn spawn_router_with_clock(store: Arc<ModelStore>, cfg: BatchConfig, clock: Clock) -> Self {
+        Self::spawn_with_clock(store, "default", cfg, clock)
     }
 
     /// Spawn the collector on an explicit [`Clock`]. With
@@ -446,7 +586,7 @@ impl BatchServer {
         cfg: BatchConfig,
         clock: Clock,
     ) -> Self {
-        let model_name = model_name.into();
+        let default_name: Arc<str> = Arc::from(model_name.into().as_str());
         let cfg = BatchConfig {
             max_batch: cfg.max_batch.max(1),
             ..cfg
@@ -460,27 +600,40 @@ impl BatchServer {
         let thread_clock = clock.clone();
         let worker = std::thread::spawn(move || {
             let _guard = guard;
-            collector_loop(&store, &model_name, cfg, &rx, &shared, &thread_clock);
+            collector_loop(&store, cfg, &rx, &shared, &thread_clock);
         });
         BatchServer {
             tx: Some(tx),
             worker: Some(worker),
             counters,
             clock,
+            default_name,
+            admission: Admission::new(cfg.max_in_flight),
         }
     }
 
-    /// Enqueue a request; the returned ticket resolves when its batch
-    /// is flushed.
+    /// Enqueue a request against the server's default model name; the
+    /// returned ticket resolves when its batch is flushed (or
+    /// immediately with [`ShotgunError::Overloaded`] when shed).
     pub fn submit(&self, req: PredictRequest) -> PendingPredict {
-        let (reply, rx) = mpsc::channel();
-        if let Some(tx) = &self.tx {
-            // a send error means the collector exited; the ticket then
-            // reports shutdown on wait()
-            let _ = tx.send(Envelope { req, reply });
-            self.clock.kick();
-        }
-        PendingPredict { rx }
+        self.submit_shared(Arc::clone(&self.default_name), req)
+    }
+
+    /// Enqueue a request routed to `name`. The flush coalesces all
+    /// same-name requests of the batch into one scoring call.
+    pub fn submit_to(&self, name: &str, req: PredictRequest) -> PendingPredict {
+        self.submit_shared(Arc::from(name), req)
+    }
+
+    fn submit_shared(&self, name: Arc<str>, req: PredictRequest) -> PendingPredict {
+        submit_via(
+            &self.tx,
+            &self.clock,
+            &self.admission,
+            &self.counters,
+            name,
+            req,
+        )
     }
 
     /// A cloneable, thread-ownable submit handle: each concurrent
@@ -490,6 +643,9 @@ impl BatchServer {
         Submitter {
             tx: self.tx.clone(),
             clock: self.clock.clone(),
+            default_name: Arc::clone(&self.default_name),
+            admission: Arc::clone(&self.admission),
+            counters: Arc::clone(&self.counters),
         }
     }
 
@@ -518,7 +674,6 @@ impl Drop for BatchServer {
 
 fn collector_loop(
     store: &ModelStore,
-    model_name: &str,
     cfg: BatchConfig,
     rx: &mpsc::Receiver<Envelope>,
     counters: &ServerCounters,
@@ -560,36 +715,52 @@ fn collector_loop(
             }
             clock.park(tok, Some(deadline));
         }
-        dispatch(store, model_name, batch, counters);
+        dispatch(store, batch, counters);
         if disconnected {
             return;
         }
     }
 }
 
-fn dispatch(store: &ModelStore, model_name: &str, batch: Vec<Envelope>, counters: &ServerCounters) {
-    // take ownership so the request rows are NOT re-cloned on the hot
-    // path — the envelope split below is the only move
-    let (requests, replies): (Vec<PredictRequest>, Vec<_>) =
-        batch.into_iter().map(|e| (e.req, e.reply)).unzip();
-    let outcome = store
-        .resolve(model_name)
-        .and_then(|record| predict_coalesced(&record, &requests));
-    counters
-        .requests
-        .fetch_add(requests.len() as u64, Ordering::Relaxed);
-    counters.batches.fetch_add(1, Ordering::Relaxed);
-    match outcome {
-        Ok(responses) => {
-            for (reply, resp) in replies.iter().zip(responses) {
-                let _ = reply.send(Ok(resp));
-            }
+fn dispatch(store: &ModelStore, batch: Vec<Envelope>, counters: &ServerCounters) {
+    // partition by model name, first-seen order (deterministic for a
+    // deterministic envelope order — no hashing). Flushes are small
+    // (max_batch) and carry few distinct names, so a linear probe beats
+    // a map allocation per flush.
+    let mut groups: Vec<(Arc<str>, Vec<Envelope>)> = Vec::new();
+    for env in batch {
+        match groups.iter_mut().find(|(name, _)| *name == env.name) {
+            Some((_, group)) => group.push(env),
+            None => groups.push((Arc::clone(&env.name), vec![env])),
         }
-        Err(e) => {
-            // a batch-level failure (unknown model, malformed request)
-            // fails every waiter with the same typed error
-            for reply in &replies {
-                let _ = reply.send(Err(e.clone()));
+    }
+    for (name, group) in groups {
+        // take ownership so the request rows are NOT re-cloned on the
+        // hot path — the envelope split below is the only move
+        let (requests, replies): (Vec<PredictRequest>, Vec<_>) =
+            group.into_iter().map(|e| (e.req, e.reply)).unzip();
+        // resolve ONCE per group: every response in the group is served
+        // by one complete (name, version) record
+        let outcome = store
+            .resolve(&name)
+            .and_then(|record| predict_coalesced(&record, &requests));
+        counters
+            .requests
+            .fetch_add(requests.len() as u64, Ordering::Relaxed);
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        match outcome {
+            Ok(responses) => {
+                for (reply, resp) in replies.iter().zip(responses) {
+                    let _ = reply.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                // a group-level failure (unknown model, malformed
+                // request) fails every waiter of THAT group with the
+                // same typed error; other groups still serve
+                for reply in &replies {
+                    let _ = reply.send(Err(e.clone()));
+                }
             }
         }
     }
@@ -708,6 +879,7 @@ mod tests {
             BatchConfig {
                 max_batch: 8,
                 max_wait: Duration::from_micros(500),
+                ..Default::default()
             },
             clock,
         );
@@ -752,6 +924,7 @@ mod tests {
             BatchConfig {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
+                ..Default::default()
             },
         );
         let tickets: Vec<PendingPredict> = (0..10)
@@ -774,5 +947,79 @@ mod tests {
             .wait()
             .unwrap_err();
         assert!(matches!(err, ShotgunError::UnknownModel { .. }));
+    }
+
+    #[test]
+    fn shutdown_tickets_surface_server_shutdown_from_wait_and_poll() {
+        // regression: a reply-channel disconnect used to come back as
+        // BadRequest { index: 0 } — a fabricated client error for a
+        // server lifecycle condition
+        let store = store_with(&[1.0], Loss::Squared);
+        let mut server = BatchServer::spawn(Arc::clone(&store), "m", BatchConfig::default());
+        server.shutdown();
+        // a submitter taken after shutdown has no channel left
+        let submitter = server.submitter();
+        // submitted after shutdown: never enqueued, never served
+        let err = server.submit(PredictRequest::new(vec![])).wait().unwrap_err();
+        assert_eq!(err, ShotgunError::ServerShutdown);
+        let ticket = submitter.submit(PredictRequest::new(vec![]));
+        match ticket.poll() {
+            Some(Err(ShotgunError::ServerShutdown)) => {}
+            other => panic!("poll reported {other:?}, not ServerShutdown"),
+        }
+    }
+
+    #[test]
+    fn router_coalesces_per_name_groups() {
+        let store = Arc::new(ModelStore::new());
+        store.publish("a", Model::from_dense(&[1.0], Loss::Squared, 0.1, "t"));
+        store.publish("b", Model::from_dense(&[10.0], Loss::Squared, 0.1, "t"));
+        let server = BatchServer::spawn_router(
+            Arc::clone(&store),
+            BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        let ta = server.submit_to("a", PredictRequest::new(vec![(0, 2.0)]));
+        let tb = server.submit_to("b", PredictRequest::new(vec![(0, 2.0)]));
+        let tg = server.submit_to("ghost", PredictRequest::new(vec![]));
+        assert_eq!(ta.wait().unwrap().score, 2.0);
+        assert_eq!(tb.wait().unwrap().score, 20.0);
+        // an unknown name fails ONLY its own group
+        assert!(matches!(
+            tg.wait().unwrap_err(),
+            ShotgunError::UnknownModel { .. }
+        ));
+    }
+
+    #[test]
+    fn admission_sheds_typed_overload_and_recovers() {
+        let store = store_with(&[1.0], Loss::Squared);
+        let server = BatchServer::spawn(
+            Arc::clone(&store),
+            "m",
+            BatchConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                max_in_flight: 2,
+            },
+        );
+        // two live tickets fill the in-flight budget (held, not waited)
+        let t1 = server.submit(PredictRequest::new(vec![(0, 1.0)]));
+        let t2 = server.submit(PredictRequest::new(vec![(0, 2.0)]));
+        let shed = server.submit(PredictRequest::new(vec![(0, 3.0)]));
+        match shed.poll() {
+            Some(Err(ShotgunError::Overloaded { limit: 2, .. })) => {}
+            other => panic!("expected an immediate Overloaded, got {other:?}"),
+        }
+        assert_eq!(server.counters().shed.load(Ordering::Relaxed), 1);
+        // consuming a ticket frees its slot; the next submit is admitted
+        assert_eq!(t1.wait().unwrap().score, 1.0);
+        let t4 = server.submit(PredictRequest::new(vec![(0, 4.0)]));
+        assert_eq!(t4.wait().unwrap().score, 4.0);
+        assert_eq!(t2.wait().unwrap().score, 2.0);
+        assert_eq!(server.counters().shed.load(Ordering::Relaxed), 1);
     }
 }

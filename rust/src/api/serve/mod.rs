@@ -6,19 +6,30 @@
 //! (the ROADMAP's "heavy traffic from millions of users" north star):
 //!
 //! * [`ModelStore`] ([`store`]) — versioned, hot-swappable named
-//!   models behind atomic `Arc` swaps; JSON persistence per name.
+//!   models sharded over per-shard `RwLock`s by a consistent-hash ring
+//!   (a hot-swap on one model never stalls reads on another shard);
+//!   JSON persistence per name, shard-count independent on disk, and
+//!   stale-snapshot-proof reloads ([`StoreLoad`]).
 //! * [`BatchPredictor`] / [`BatchServer`] ([`batch`]) — coalesce
 //!   predict requests into one [`Design`](crate::sparsela::Design)
 //!   batch per flush (configurable `max_batch`/`max_wait`), amortizing
 //!   the per-request walk over the model's weights; responses are
 //!   bit-identical to one-at-a-time [`Model::predict`](crate::api::Model::predict).
-//! * [`FitQueue`] ([`queue`]) — a bounded multi-worker fit queue (std
-//!   threads + channels) with typed job states, per-job engine/budget
-//!   settings, shared [`ProblemCache`](crate::objective::ProblemCache)
-//!   reuse across jobs on one design, and publish-on-finish into the
-//!   store.
+//!   `spawn_router` serves MANY model names through one collector
+//!   (requests carry a name; each flush partitions by `(name, version)`
+//!   and dispatches one coalesced batch per group), and a bounded
+//!   `max_in_flight` admission gate sheds overload with typed
+//!   [`Overloaded`](crate::api::ShotgunError::Overloaded) rejections.
+//! * [`FitQueue`] ([`queue`]) — a bounded multi-worker fit queue with
+//!   priority lanes ([`JobPriority`]: High / Normal / Batch), per-job
+//!   deadlines (expired jobs fail typed at dequeue, never run),
+//!   cancellation of queued AND running jobs, typed job states, per-job
+//!   engine/budget settings, shared
+//!   [`ProblemCache`](crate::objective::ProblemCache) reuse across jobs
+//!   on one design, and publish-on-finish into the store.
 //! * [`mod@replay`] — the `repro serve` harness: replay a request
-//!   stream, measure throughput + latency percentiles, emit
+//!   stream (single-model, or routed across N tenants via
+//!   [`replay_multi`]), measure throughput + latency percentiles, emit
 //!   `BENCH_serving.json`.
 //!
 //! The pieces compose: a `FitQueue` publishes into a `ModelStore` that
@@ -46,6 +57,8 @@ pub use batch::{
     batch_design, predict_coalesced, BatchConfig, BatchPredictor, BatchServer, PendingPredict,
     PredictRequest, PredictResponse, ServerCounters, Submitter,
 };
-pub use queue::{CacheHub, FitFault, FitJob, FitQueue, JobId, JobLambda, JobSolver, JobState};
-pub use replay::{replay, ReplayConfig, ReplayStats};
-pub use store::{ModelRecord, ModelStore};
+pub use queue::{
+    CacheHub, FitFault, FitJob, FitQueue, JobId, JobLambda, JobPriority, JobSolver, JobState,
+};
+pub use replay::{replay, replay_multi, MultiTenantStats, ReplayConfig, ReplayStats};
+pub use store::{ModelRecord, ModelStore, StoreLoad};

@@ -2,15 +2,31 @@
 //!
 //! The fit side of the serving story: training requests arrive faster
 //! than one thread can solve them, so a pool of `workers` std threads
-//! drains a bounded channel of [`FitJob`]s, runs each through the
-//! [`Fit`](crate::api::Fit) front door, and (optionally) publishes the
-//! resulting model straight into a [`ModelStore`] under the job's
-//! `publish_as` name. Everything is std (`sync_channel` + `Mutex` +
-//! `Condvar`) — no new dependencies.
+//! drains a bounded three-lane priority queue of [`FitJob`]s, runs each
+//! through the [`Fit`](crate::api::Fit) front door, and (optionally)
+//! publishes the resulting model straight into a [`ModelStore`] under
+//! the job's `publish_as` name. Everything is std (`Mutex` + `Condvar`
+//! + `VecDeque`) — no new dependencies.
 //!
 //! * **Bounded**: [`submit`](FitQueue::submit) blocks once `capacity`
 //!   jobs are queued (back-pressure instead of unbounded memory);
-//!   [`try_submit`](FitQueue::try_submit) refuses instead.
+//!   [`try_submit`](FitQueue::try_submit) refuses instead. `capacity`
+//!   counts queued-not-yet-popped jobs across ALL priority lanes, so
+//!   the "rejected == workers + jobs − capacity" saturation law is
+//!   priority-independent. Both `workers == 0` and `capacity == 0` are
+//!   rejected at construction with a typed `InvalidParam` — they were
+//!   previously rewritten to 1 silently, which off-by-oned that law.
+//! * **Priorities**: each job carries a [`JobPriority`]
+//!   (`High`/`Normal`/`Batch`); workers always drain higher lanes
+//!   first, FIFO within a lane.
+//! * **Deadlines**: a job with [`deadline_at`](FitJob::deadline_at) in
+//!   the past *at dequeue time* never runs — it fails with the typed
+//!   `DeadlineExpired`, releasing its worker for live work.
+//! * **Cancellation**: [`cancel`](FitQueue::cancel) removes a queued
+//!   job outright and raises the running job's
+//!   [`StopFlag`](crate::solvers::common::StopFlag) so the solve loop
+//!   winds down at its next poll (best-effort — a solve that converges
+//!   before polling still reports `Done`).
 //! * **Typed states**: [`JobState`] is
 //!   `Queued -> Running -> Done(FitReport) | Failed(ShotgunError)`;
 //!   [`wait`](FitQueue::wait) blocks on the terminal state. A job that
@@ -32,10 +48,9 @@ use super::store::ModelStore;
 use crate::objective::{Loss, ProblemCache};
 use crate::simserve::clock::{Clock, Tick};
 use crate::sparsela::Design;
-use crate::solvers::common::SolveOptions;
-use std::collections::HashMap;
+use crate::solvers::common::{SolveOptions, StopFlag};
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{self, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Condvar, Mutex, PoisonError, Weak};
 use std::thread::JoinHandle;
 
@@ -71,6 +86,21 @@ pub enum FitFault {
     SlowFit { cost: Tick },
 }
 
+/// Scheduling class of a [`FitJob`]: workers always drain `High`
+/// before `Normal` before `Batch`, FIFO within a class. Priority picks
+/// the ORDER jobs run in, never whether they run — the capacity bound
+/// and the saturation law are priority-independent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum JobPriority {
+    /// Latency-sensitive (an operator retrain, an urgent hot-swap).
+    High,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Throughput work that should never delay the other two.
+    Batch,
+}
+
 /// One queued fit: owns its data (`Arc`, so many jobs share one design
 /// allocation) plus the per-job solver/budget settings.
 #[derive(Clone)]
@@ -91,6 +121,12 @@ pub struct FitJob {
     /// Injected fault (simulation/chaos testing only; `None` in
     /// production).
     pub fault: Option<FitFault>,
+    /// Scheduling class (see [`JobPriority`]).
+    pub priority: JobPriority,
+    /// Absolute clock instant (the queue's clock, ticks) after which
+    /// the job must not START. Checked at dequeue: an expired job fails
+    /// with `DeadlineExpired` and never occupies a worker.
+    pub deadline: Option<Tick>,
 }
 
 impl FitJob {
@@ -107,6 +143,8 @@ impl FitJob {
             require_convergence: false,
             publish_as: None,
             fault: None,
+            priority: JobPriority::default(),
+            deadline: None,
         }
     }
 
@@ -133,6 +171,19 @@ impl FitJob {
     /// Inject a [`FitFault`] (simulation/chaos testing).
     pub fn fault(mut self, fault: FitFault) -> Self {
         self.fault = Some(fault);
+        self
+    }
+
+    /// Set the scheduling class (see [`JobPriority`]).
+    pub fn priority(mut self, priority: JobPriority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Fail (typed `DeadlineExpired`) instead of running if no worker
+    /// dequeues the job by clock instant `at` (queue-clock ticks).
+    pub fn deadline_at(mut self, at: Tick) -> Self {
+        self.deadline = Some(at);
         self
     }
 }
@@ -221,6 +272,140 @@ struct WorkItem {
     job: FitJob,
 }
 
+/// Outcome of a non-blocking push.
+enum Pushed {
+    Ok,
+    /// All lanes together are at capacity.
+    Full,
+    Closed,
+}
+
+/// Outcome of a non-blocking pop.
+enum Popped {
+    Item(WorkItem),
+    Empty,
+    /// Closed AND drained — the worker can exit.
+    Closed,
+}
+
+struct PrioState {
+    /// One FIFO lane per [`JobPriority`], `High` first.
+    lanes: [VecDeque<WorkItem>; 3],
+    closed: bool,
+}
+
+/// The bounded three-lane queue replacing the old FIFO `sync_channel`:
+/// same capacity semantics (`capacity` counts queued-not-yet-popped
+/// items, across all lanes), same blocking/non-blocking push split,
+/// plus lane-ordered pops and mid-queue removal for cancellation.
+/// Workers are woken through the [`Clock`] eventcount (as before), so
+/// only pushers wait on the internal condvar.
+struct PrioQueue {
+    state: Mutex<PrioState>,
+    /// Signalled when a pop or removal frees capacity, and at close.
+    space: Condvar,
+    capacity: usize,
+}
+
+impl PrioQueue {
+    fn new(capacity: usize) -> PrioQueue {
+        PrioQueue {
+            state: Mutex::new(PrioState {
+                lanes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                closed: false,
+            }),
+            space: Condvar::new(),
+            capacity,
+        }
+    }
+
+    fn lane(priority: JobPriority) -> usize {
+        match priority {
+            JobPriority::High => 0,
+            JobPriority::Normal => 1,
+            JobPriority::Batch => 2,
+        }
+    }
+
+    fn queued(state: &PrioState) -> usize {
+        state.lanes.iter().map(VecDeque::len).sum()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PrioState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Block while at capacity; `false` means the queue closed first.
+    fn push_blocking(&self, item: WorkItem) -> bool {
+        let lane = Self::lane(item.job.priority);
+        let mut state = self.lock();
+        loop {
+            if state.closed {
+                return false;
+            }
+            if Self::queued(&state) < self.capacity {
+                state.lanes[lane].push_back(item);
+                return true;
+            }
+            state = self
+                .space
+                .wait(state)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    fn try_push(&self, item: WorkItem) -> Pushed {
+        let lane = Self::lane(item.job.priority);
+        let mut state = self.lock();
+        if state.closed {
+            Pushed::Closed
+        } else if Self::queued(&state) >= self.capacity {
+            Pushed::Full
+        } else {
+            state.lanes[lane].push_back(item);
+            Pushed::Ok
+        }
+    }
+
+    fn try_pop(&self) -> Popped {
+        let mut state = self.lock();
+        for lane in &mut state.lanes {
+            if let Some(item) = lane.pop_front() {
+                self.space.notify_one();
+                return Popped::Item(item);
+            }
+        }
+        if state.closed {
+            Popped::Closed
+        } else {
+            Popped::Empty
+        }
+    }
+
+    /// Remove a still-queued job by id (cancellation).
+    fn remove(&self, id: JobId) -> Option<WorkItem> {
+        let mut state = self.lock();
+        for lane in &mut state.lanes {
+            if let Some(pos) = lane.iter().position(|w| w.id == id) {
+                let item = lane.remove(pos);
+                self.space.notify_one();
+                return item;
+            }
+        }
+        None
+    }
+
+    /// Stop accepting pushes; queued items still drain.
+    fn close(&self) {
+        self.lock().closed = true;
+        self.space.notify_all();
+    }
+
+    fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
+}
+
 type StateTable = Mutex<HashMap<JobId, JobState>>;
 
 struct Shared {
@@ -228,6 +413,9 @@ struct Shared {
     done: Condvar,
     hub: CacheHub,
     store: Option<Arc<ModelStore>>,
+    /// Stop flags of currently RUNNING jobs, keyed by id — the handle
+    /// [`FitQueue::cancel`] raises to reach into a live solve.
+    stops: Mutex<HashMap<JobId, StopFlag>>,
 }
 
 impl Shared {
@@ -245,7 +433,7 @@ impl Shared {
 
 /// The bounded multi-worker fit queue (see the module docs).
 pub struct FitQueue {
-    tx: Option<SyncSender<WorkItem>>,
+    queue: Arc<PrioQueue>,
     workers: Vec<JoinHandle<()>>,
     shared: Arc<Shared>,
     next_id: Mutex<JobId>,
@@ -254,13 +442,20 @@ pub struct FitQueue {
 
 impl FitQueue {
     /// `workers` solver threads over a queue holding at most `capacity`
-    /// waiting jobs (both floored at 1).
-    pub fn new(workers: usize, capacity: usize) -> FitQueue {
+    /// waiting jobs. Both must be >= 1: zero of either is rejected with
+    /// a typed [`ShotgunError::InvalidParam`] rather than silently
+    /// rewritten (a rewrite would skew the documented
+    /// "rejected == workers + jobs − capacity" saturation law).
+    pub fn new(workers: usize, capacity: usize) -> Result<FitQueue, ShotgunError> {
         Self::build(workers, capacity, None, Clock::wall())
     }
 
     /// A queue that publishes `publish_as` jobs into `store`.
-    pub fn with_store(workers: usize, capacity: usize, store: Arc<ModelStore>) -> FitQueue {
+    pub fn with_store(
+        workers: usize,
+        capacity: usize,
+        store: Arc<ModelStore>,
+    ) -> Result<FitQueue, ShotgunError> {
         Self::build(workers, capacity, Some(store), Clock::wall())
     }
 
@@ -272,7 +467,7 @@ impl FitQueue {
         capacity: usize,
         store: Option<Arc<ModelStore>>,
         clock: Clock,
-    ) -> FitQueue {
+    ) -> Result<FitQueue, ShotgunError> {
         Self::build(workers, capacity, store, clock)
     }
 
@@ -281,18 +476,32 @@ impl FitQueue {
         capacity: usize,
         store: Option<Arc<ModelStore>>,
         clock: Clock,
-    ) -> FitQueue {
+    ) -> Result<FitQueue, ShotgunError> {
+        if workers == 0 {
+            return Err(ShotgunError::InvalidParam {
+                name: "workers",
+                value: 0.0,
+                reason: "a fit queue needs at least one worker thread",
+            });
+        }
+        if capacity == 0 {
+            return Err(ShotgunError::InvalidParam {
+                name: "capacity",
+                value: 0.0,
+                reason: "a fit queue needs room for at least one queued job",
+            });
+        }
         let shared = Arc::new(Shared {
             states: Mutex::new(HashMap::new()),
             done: Condvar::new(),
             hub: CacheHub::default(),
             store,
+            stops: Mutex::new(HashMap::new()),
         });
-        let (tx, rx) = mpsc::sync_channel::<WorkItem>(capacity.max(1));
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..workers.max(1))
+        let queue = Arc::new(PrioQueue::new(capacity));
+        let handles = (0..workers)
             .map(|_| {
-                let rx = Arc::clone(&rx);
+                let queue = Arc::clone(&queue);
                 let shared = Arc::clone(&shared);
                 // register on the spawning thread (no unregistered
                 // window a sim driver could race with)
@@ -300,32 +509,34 @@ impl FitQueue {
                 let clock = clock.clone();
                 std::thread::spawn(move || {
                     let _guard = guard;
-                    worker_loop(&rx, &shared, &clock);
+                    worker_loop(&queue, &shared, &clock);
                 })
             })
             .collect();
-        FitQueue {
-            tx: Some(tx),
+        Ok(FitQueue {
+            queue,
             workers: handles,
             shared,
             next_id: Mutex::new(0),
             clock,
-        }
+        })
     }
 
-    fn register(&self) -> Result<(JobId, &SyncSender<WorkItem>), ShotgunError> {
-        let tx = self.tx.as_ref().ok_or(ShotgunError::QueueClosed)?;
+    fn register(&self) -> Result<JobId, ShotgunError> {
+        if self.queue.is_closed() {
+            return Err(ShotgunError::QueueClosed);
+        }
         let mut next = self.next_id.lock().unwrap_or_else(PoisonError::into_inner);
         *next += 1;
-        Ok((*next, tx))
+        Ok(*next)
     }
 
     /// Enqueue a job, BLOCKING while the queue is at capacity
     /// (back-pressure). Returns its [`JobId`].
     pub fn submit(&self, job: FitJob) -> Result<JobId, ShotgunError> {
-        let (id, tx) = self.register()?;
+        let id = self.register()?;
         self.shared.set(id, JobState::Queued);
-        if tx.send(WorkItem { id, job }).is_err() {
+        if !self.queue.push_blocking(WorkItem { id, job }) {
             self.shared.set(id, JobState::Failed(ShotgunError::QueueClosed));
             return Err(ShotgunError::QueueClosed);
         }
@@ -345,14 +556,14 @@ impl FitQueue {
     /// [`try_submit`](Self::try_submit) WITHOUT waking the workers —
     /// the simulation driver enqueues a whole burst atomically with
     /// this and then calls [`kick_workers`](Self::kick_workers) once,
-    /// so how many jobs the bounded channel rejects is a function of
+    /// so how many jobs the bounded queue rejects is a function of
     /// `capacity` alone, not of how fast workers drain mid-burst.
     pub fn try_submit_deferred(&self, job: FitJob) -> Result<Option<JobId>, ShotgunError> {
-        let (id, tx) = self.register()?;
+        let id = self.register()?;
         self.shared.set(id, JobState::Queued);
-        match tx.try_send(WorkItem { id, job }) {
-            Ok(()) => Ok(Some(id)),
-            Err(TrySendError::Full(_)) => {
+        match self.queue.try_push(WorkItem { id, job }) {
+            Pushed::Ok => Ok(Some(id)),
+            Pushed::Full => {
                 self.shared
                     .states
                     .lock()
@@ -360,11 +571,39 @@ impl FitQueue {
                     .remove(&id);
                 Ok(None)
             }
-            Err(TrySendError::Disconnected(_)) => {
+            Pushed::Closed => {
                 self.shared.set(id, JobState::Failed(ShotgunError::QueueClosed));
                 Err(ShotgunError::QueueClosed)
             }
         }
+    }
+
+    /// Cancel a job, best-effort. A still-QUEUED job is removed without
+    /// running and fails as `Cancelled`; a RUNNING job has its
+    /// [`StopFlag`] raised so the solve loop winds down at its next
+    /// poll (ending `Failed(Cancelled)` unless it converged first).
+    /// Returns `true` if the cancel reached a queued or running job,
+    /// `false` for terminal/unknown ids (nothing to do).
+    pub fn cancel(&self, id: JobId) -> bool {
+        if self.queue.remove(id).is_some() {
+            self.shared.set(
+                id,
+                JobState::Failed(ShotgunError::Cancelled {
+                    solver: "fit-queue".into(),
+                }),
+            );
+            return true;
+        }
+        let stops = self
+            .shared
+            .stops
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        if let Some(flag) = stops.get(&id) {
+            flag.raise();
+            return true;
+        }
+        false
     }
 
     /// Wake the workers to drain jobs enqueued with
@@ -438,7 +677,7 @@ impl FitQueue {
 
     /// Stop accepting jobs, finish everything queued, join the workers.
     pub fn shutdown(&mut self) {
-        self.tx.take();
+        self.queue.close();
         self.clock.kick();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -452,27 +691,50 @@ impl Drop for FitQueue {
     }
 }
 
-fn worker_loop(rx: &Mutex<mpsc::Receiver<WorkItem>>, shared: &Shared, clock: &Clock) {
+fn worker_loop(queue: &PrioQueue, shared: &Shared, clock: &Clock) {
     loop {
         // idle workers park on the clock (check-then-park, see
-        // `simserve::clock`); the receiver lock is held only for the
+        // `simserve::clock`); the queue lock is held only for the
         // non-blocking pop, never for the wait or the solve
         let item = loop {
             let tok = clock.park_token();
-            let polled = {
-                let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
-                guard.try_recv()
-            };
-            match polled {
-                Ok(i) => break Some(i),
-                Err(TryRecvError::Empty) => clock.park(tok, None),
-                Err(TryRecvError::Disconnected) => break None, // drained
+            match queue.try_pop() {
+                Popped::Item(i) => break Some(i),
+                Popped::Empty => clock.park(tok, None),
+                Popped::Closed => break None, // drained
             }
         };
-        let WorkItem { id, job } = match item {
+        let WorkItem { id, mut job } = match item {
             Some(i) => i,
             None => return, // queue closed and drained
         };
+        // deadline check at dequeue: an expired job fails typed and
+        // never occupies the worker
+        if let Some(deadline) = job.deadline {
+            let now = clock.now();
+            if now > deadline {
+                shared.set(
+                    id,
+                    JobState::Failed(ShotgunError::DeadlineExpired {
+                        late: now - deadline,
+                    }),
+                );
+                continue;
+            }
+        }
+        // wire a stop flag (reusing the caller's if already wired) and
+        // expose it under the job id so cancel() can reach a live solve
+        let stop = if job.opts.stop.is_wired() {
+            job.opts.stop.clone()
+        } else {
+            StopFlag::new()
+        };
+        job.opts.stop = stop.clone();
+        shared
+            .stops
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(id, stop);
         shared.set(id, JobState::Running);
         let state = match catch_unwind(AssertUnwindSafe(|| run_job(&job, shared, clock))) {
             Ok(Ok(report)) => {
@@ -491,6 +753,11 @@ fn worker_loop(rx: &Mutex<mpsc::Receiver<WorkItem>>, shared: &Shared, clock: &Cl
                 JobState::Failed(ShotgunError::JobPanicked { reason })
             }
         };
+        shared
+            .stops
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .remove(&id);
         shared.set(id, state);
     }
 }
@@ -547,7 +814,7 @@ mod tests {
     #[test]
     fn jobs_run_to_done_and_share_the_cache() {
         let ds = dataset(1);
-        let queue = FitQueue::new(2, 8);
+        let queue = FitQueue::new(2, 8).unwrap();
         let ids: Vec<JobId> = [0.5, 0.3, 0.2]
             .iter()
             .map(|&lam| queue.submit(job(&ds, lam)).unwrap())
@@ -565,7 +832,7 @@ mod tests {
     #[test]
     fn failures_are_typed_not_fatal() {
         let ds = dataset(2);
-        let queue = FitQueue::new(1, 4);
+        let queue = FitQueue::new(1, 4).unwrap();
         let bad = job(&ds, 0.5).solver_name("no-such-solver");
         let id = queue.submit(bad).unwrap();
         match queue.wait(id).expect("known id") {
@@ -583,7 +850,7 @@ mod tests {
     #[test]
     fn injected_faults_drive_the_real_failure_paths() {
         let ds = dataset(8);
-        let queue = FitQueue::new(1, 4);
+        let queue = FitQueue::new(1, 4).unwrap();
         let id = queue
             .submit(job(&ds, 0.5).fault(FitFault::Panic))
             .unwrap();
@@ -608,7 +875,7 @@ mod tests {
     fn publishes_into_the_store() {
         let ds = dataset(3);
         let store = Arc::new(ModelStore::new());
-        let queue = FitQueue::with_store(2, 4, Arc::clone(&store));
+        let queue = FitQueue::with_store(2, 4, Arc::clone(&store)).unwrap();
         let id = queue
             .submit(job(&ds, 0.3).publish_as("prod"))
             .unwrap();
@@ -625,7 +892,7 @@ mod tests {
     #[test]
     fn take_consumes_terminal_states() {
         let ds = dataset(7);
-        let queue = FitQueue::new(1, 4);
+        let queue = FitQueue::new(1, 4).unwrap();
         let id = queue.submit(job(&ds, 0.4)).unwrap();
         assert!(matches!(queue.wait(id), Some(JobState::Done(_))));
         // wait leaves the state readable; take consumes it exactly once
@@ -640,7 +907,7 @@ mod tests {
     #[test]
     fn unknown_ids_and_shutdown() {
         let ds = dataset(4);
-        let mut queue = FitQueue::new(1, 2);
+        let mut queue = FitQueue::new(1, 2).unwrap();
         assert!(queue.status(99).is_none());
         assert!(queue.wait(99).is_none());
         let id = queue.submit(job(&ds, 0.5)).unwrap();
@@ -668,5 +935,139 @@ mod tests {
         // dead designs are pruned on the next access
         let _ = hub.for_design(&b.0);
         assert_eq!(hub.len(), 1);
+    }
+
+    #[test]
+    fn zero_workers_or_capacity_is_a_typed_construction_error() {
+        // regression: capacity 0 was silently rewritten to 1 (and
+        // workers 0 to 1), off-by-one-ing the documented
+        // "rejected == workers + jobs - capacity" saturation law
+        assert!(matches!(
+            FitQueue::new(0, 4),
+            Err(ShotgunError::InvalidParam {
+                name: "workers",
+                ..
+            })
+        ));
+        assert!(matches!(
+            FitQueue::new(1, 0),
+            Err(ShotgunError::InvalidParam {
+                name: "capacity",
+                ..
+            })
+        ));
+        // workers is validated first when both are zero
+        assert!(matches!(
+            FitQueue::with_store(0, 0, Arc::new(ModelStore::new())),
+            Err(ShotgunError::InvalidParam {
+                name: "workers",
+                ..
+            })
+        ));
+    }
+
+    #[test]
+    fn priority_lanes_drain_high_before_normal_before_batch() {
+        let ds = dataset(9);
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        let queue = FitQueue::with_clock(1, 16, None, clock).unwrap();
+        // wedge the single worker for 10ms of virtual time
+        let wedge = queue
+            .submit(job(&ds, 0.5).fault(FitFault::SlowFit { cost: 10_000_000 }))
+            .unwrap();
+        sim.until_quiescent();
+        // with the worker busy, enqueue in WORST order for priority:
+        // Batch first, High last — each occupying 1ms when run
+        let slow = FitFault::SlowFit { cost: 1_000_000 };
+        let batch = queue
+            .submit(job(&ds, 0.45).priority(JobPriority::Batch).fault(slow))
+            .unwrap();
+        let normal = queue.submit(job(&ds, 0.4).fault(slow)).unwrap();
+        let high = queue
+            .submit(job(&ds, 0.35).priority(JobPriority::High).fault(slow))
+            .unwrap();
+        sim.until_quiescent();
+        assert!(matches!(queue.status(high), Some(JobState::Queued)));
+        // the wedge completes at t=10ms; the worker must pick HIGH next
+        sim.advance_to(10_000_000);
+        sim.until_quiescent();
+        assert!(matches!(queue.status(wedge), Some(JobState::Done(_))));
+        assert!(matches!(queue.status(high), Some(JobState::Running)));
+        assert!(matches!(queue.status(normal), Some(JobState::Queued)));
+        assert!(matches!(queue.status(batch), Some(JobState::Queued)));
+        // then NORMAL, with BATCH still waiting
+        sim.advance_to(11_000_000);
+        sim.until_quiescent();
+        assert!(matches!(queue.status(high), Some(JobState::Done(_))));
+        assert!(matches!(queue.status(normal), Some(JobState::Running)));
+        assert!(matches!(queue.status(batch), Some(JobState::Queued)));
+        while let Some(d) = sim.next_deadline() {
+            sim.advance_to(d);
+            sim.until_quiescent();
+        }
+        assert!(matches!(queue.status(batch), Some(JobState::Done(_))));
+    }
+
+    #[test]
+    fn expired_deadlines_fail_typed_at_dequeue_without_running() {
+        let ds = dataset(10);
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        let queue = FitQueue::with_clock(1, 8, None, clock).unwrap();
+        let wedge = queue
+            .submit(job(&ds, 0.5).fault(FitFault::SlowFit { cost: 10_000_000 }))
+            .unwrap();
+        // due at 1ms — but the only worker is busy until 10ms
+        let doomed = queue.submit(job(&ds, 0.4).deadline_at(1_000_000)).unwrap();
+        // due at 60ms — dequeued (10ms) well within its deadline
+        let alive = queue.submit(job(&ds, 0.3).deadline_at(60_000_000)).unwrap();
+        sim.until_quiescent();
+        while let Some(d) = sim.next_deadline() {
+            sim.advance_to(d);
+            sim.until_quiescent();
+        }
+        match queue.status(doomed) {
+            Some(JobState::Failed(ShotgunError::DeadlineExpired { late })) => {
+                // dequeued exactly when the wedge finished: 10ms, 9ms late
+                assert_eq!(late, 9_000_000);
+            }
+            other => panic!("expected DeadlineExpired, got {other:?}"),
+        }
+        assert!(matches!(queue.status(alive), Some(JobState::Done(_))));
+        assert!(matches!(queue.status(wedge), Some(JobState::Done(_))));
+    }
+
+    #[test]
+    fn cancel_removes_queued_jobs_and_stops_running_ones() {
+        let ds = dataset(11);
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        let queue = FitQueue::with_clock(1, 8, None, clock).unwrap();
+        let wedge = queue
+            .submit(job(&ds, 0.5).fault(FitFault::SlowFit { cost: 10_000_000 }))
+            .unwrap();
+        let queued = queue.submit(job(&ds, 0.4)).unwrap();
+        sim.until_quiescent();
+        // a queued job is removed outright and never runs
+        assert!(queue.cancel(queued));
+        assert!(matches!(
+            queue.status(queued),
+            Some(JobState::Failed(ShotgunError::Cancelled { .. }))
+        ));
+        // the running job's stop flag is raised mid-(virtual)-sleep;
+        // the solve loop sees it before the first sweep and winds down
+        assert!(queue.cancel(wedge));
+        while let Some(d) = sim.next_deadline() {
+            sim.advance_to(d);
+            sim.until_quiescent();
+        }
+        assert!(matches!(
+            queue.status(wedge),
+            Some(JobState::Failed(ShotgunError::Cancelled { .. }))
+        ));
+        // terminal and unknown ids: nothing left to cancel
+        assert!(!queue.cancel(wedge));
+        assert!(!queue.cancel(999));
     }
 }

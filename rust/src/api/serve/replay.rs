@@ -14,10 +14,12 @@
 //! `BENCH_hotpath.json`).
 
 use super::super::error::ShotgunError;
+use super::super::model::Model;
 use super::batch::{BatchConfig, BatchServer, PredictRequest};
 use super::store::ModelStore;
 use crate::simserve::clock::{Clock, Tick};
 use crate::util::json::escape;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// Replay knobs.
@@ -59,6 +61,9 @@ pub struct ReplayStats {
     pub max_batch: usize,
     pub max_wait_us: u64,
     pub clients: usize,
+    /// Requests shed by admission control (`max_in_flight`); excluded
+    /// from the latency percentiles and `requests`.
+    pub shed: usize,
 }
 
 /// Latency percentile by linear index (sorted input, `q` in [0, 1]).
@@ -111,17 +116,33 @@ pub fn replay(
                         |t0: Tick, clock: &Clock| clock.now().saturating_sub(t0) as f64 * 1e-3;
                     let mut lat = Vec::with_capacity(shard.len());
                     let mut in_flight = std::collections::VecDeque::with_capacity(window);
+                    // a shed request (typed Overloaded under a
+                    // max_in_flight bound) is expected load-shedding,
+                    // not a harness failure: skip its latency sample
+                    // and keep replaying; any other error fails fast
+                    let settle = |t0: Tick,
+                                  outcome: Result<_, ShotgunError>,
+                                  lat: &mut Vec<f64>,
+                                  clock: &Clock|
+                     -> Result<(), ShotgunError> {
+                        match outcome {
+                            Ok(_) => {
+                                lat.push(elapsed_us(t0, clock));
+                                Ok(())
+                            }
+                            Err(ShotgunError::Overloaded { .. }) => Ok(()),
+                            Err(e) => Err(e),
+                        }
+                    };
                     for req in shard {
                         if in_flight.len() >= window {
                             let (t0, ticket): (Tick, _) = in_flight.pop_front().unwrap();
-                            ticket.wait()?;
-                            lat.push(elapsed_us(t0, &clock));
+                            settle(t0, ticket.wait(), &mut lat, &clock)?;
                         }
                         in_flight.push_back((clock.now(), submitter.submit(req.clone())));
                     }
                     for (t0, ticket) in in_flight {
-                        ticket.wait()?;
-                        lat.push(elapsed_us(t0, &clock));
+                        settle(t0, ticket.wait(), &mut lat, &clock)?;
                     }
                     Ok(lat)
                 })
@@ -136,11 +157,9 @@ pub fn replay(
     let mut lat: Vec<f64> = latencies_us?.into_iter().flatten().collect();
     lat.sort_by(|a, b| a.total_cmp(b));
 
-    let batches = server
-        .counters()
-        .batches
-        .load(std::sync::atomic::Ordering::Relaxed);
+    let batches = server.counters().batches.load(Ordering::Relaxed);
     let mean_batch = server.counters().mean_batch();
+    let shed = server.counters().shed.load(Ordering::Relaxed) as usize;
     server.shutdown();
 
     Ok(ReplayStats {
@@ -160,6 +179,150 @@ pub fn replay(
         max_batch: cfg.batch.max_batch,
         max_wait_us: cfg.batch.max_wait.as_micros() as u64,
         clients,
+        shed,
+    })
+}
+
+/// What a multi-tenant replay measured on top of [`ReplayStats`]: the
+/// same request stream routed round-robin across `models` names through
+/// ONE router server, optionally with a hot-swap loop republishing to
+/// the first name the whole time.
+#[derive(Clone, Debug)]
+pub struct MultiTenantStats {
+    /// Distinct model names the stream was routed across.
+    pub models: usize,
+    /// Store shard count the router served from.
+    pub shards: usize,
+    /// Requests per second over the whole multi-model stream.
+    pub throughput_rps: f64,
+    /// Worst single `publish` duration (microseconds) observed by the
+    /// hot-swap loop while the replay ran — the shard-level write stall
+    /// an unrelated reader could have seen at most. 0 when no swap
+    /// model was supplied.
+    pub swap_stall_us: f64,
+    /// Requests shed by admission control during the multi-model run.
+    pub shed: usize,
+}
+
+/// Replay `requests` round-robin across `names` through one router
+/// server (`BatchServer::spawn_router_with_clock`). Request `i` goes to
+/// `names[i % names.len()]`; every name must already be published in
+/// `store`. When `swap` is given, a background loop republishes it to
+/// `names[0]` for the duration of the replay and
+/// [`MultiTenantStats::swap_stall_us`] records the worst publish
+/// latency — on a sharded store that stall is confined to one shard.
+pub fn replay_multi(
+    store: Arc<ModelStore>,
+    names: &[String],
+    requests: &[PredictRequest],
+    cfg: &ReplayConfig,
+    swap: Option<&Model>,
+) -> Result<MultiTenantStats, ShotgunError> {
+    if names.is_empty() {
+        return Err(ShotgunError::InvalidParam {
+            name: "models",
+            value: 0.0,
+            reason: "multi-tenant replay needs at least one model name",
+        });
+    }
+    let clients = cfg.clients.max(1);
+    let clock = Clock::wall();
+    let mut server =
+        BatchServer::spawn_router_with_clock(Arc::clone(&store), cfg.batch, clock.clone());
+    let shards = store.shard_count();
+    let done = Arc::new(AtomicBool::new(false));
+
+    let started = clock.now();
+    let (served, swap_stall_us): (Result<usize, ShotgunError>, f64) =
+        std::thread::scope(|scope| {
+            // hot-swap loop: keep republishing to names[0] while the
+            // clients replay, tracking the worst publish duration (the
+            // max write-stall any same-shard reader could observe)
+            let swapper = swap.map(|model| {
+                let store = Arc::clone(&store);
+                let hot = names[0].clone();
+                let model = model.clone();
+                let done = Arc::clone(&done);
+                let clock = clock.clone();
+                scope.spawn(move || -> f64 {
+                    // publish-then-check: at least one republish happens
+                    // even if the replay finishes before this thread is
+                    // first scheduled
+                    let mut worst_us = 0.0f64;
+                    loop {
+                        let t0 = clock.now();
+                        store.publish(&hot, model.clone());
+                        let us = clock.now().saturating_sub(t0) as f64 * 1e-3;
+                        worst_us = worst_us.max(us);
+                        if done.load(Ordering::Acquire) {
+                            return worst_us;
+                        }
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                })
+            });
+            let window = cfg.batch.max_batch.max(1);
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    // round-robin by ORIGINAL stream index, so the
+                    // name assignment is independent of `clients`
+                    let shard: Vec<(usize, &PredictRequest)> = requests
+                        .iter()
+                        .enumerate()
+                        .skip(c)
+                        .step_by(clients)
+                        .collect();
+                    let submitter = server.submitter();
+                    scope.spawn(move || -> Result<usize, ShotgunError> {
+                        let mut served = 0usize;
+                        let mut in_flight = std::collections::VecDeque::with_capacity(window);
+                        let mut settle = |outcome: Result<_, ShotgunError>| match outcome {
+                            Ok(_) => {
+                                served += 1;
+                                Ok(())
+                            }
+                            Err(ShotgunError::Overloaded { .. }) => Ok(()),
+                            Err(e) => Err(e),
+                        };
+                        for (i, req) in shard {
+                            if in_flight.len() >= window {
+                                let ticket: super::batch::PendingPredict =
+                                    in_flight.pop_front().unwrap();
+                                settle(ticket.wait())?;
+                            }
+                            in_flight
+                                .push_back(submitter.submit_to(&names[i % names.len()], req.clone()));
+                        }
+                        for ticket in in_flight {
+                            settle(ticket.wait())?;
+                        }
+                        Ok(served)
+                    })
+                })
+                .collect();
+            let served = handles
+                .into_iter()
+                .map(|h| h.join().expect("client thread panicked"))
+                .sum::<Result<usize, ShotgunError>>();
+            done.store(true, Ordering::Release);
+            let stall = swapper.map_or(0.0, |h| h.join().expect("swapper thread panicked"));
+            (served, stall)
+        });
+    let seconds = clock.now().saturating_sub(started) as f64 * 1e-9;
+    let shed = server.counters().shed.load(Ordering::Relaxed) as usize;
+    server.shutdown();
+    let served = served?;
+
+    Ok(MultiTenantStats {
+        models: names.len(),
+        shards,
+        throughput_rps: if seconds > 0.0 {
+            served as f64 / seconds
+        } else {
+            0.0
+        },
+        swap_stall_us,
+        shed,
     })
 }
 
@@ -185,21 +348,41 @@ impl ReplayStats {
     /// replayed at `max_batch = 1` (the `repro serve --compare-unbatched`
     /// flag); when present, the `derived` section records the
     /// batching-on/off speedup the CI bench-smoke gate checks for
-    /// NaN/missing values.
+    /// NaN/missing values. `multi` is the multi-tenant routed replay
+    /// (`repro serve --models N`); when present, `derived` additionally
+    /// records `multi_model_routing_overhead` (single-model rps over
+    /// routed rps — ~1.0 means routing is free) and
+    /// `shard_swap_stall_us` (worst hot-swap publish latency under
+    /// load).
     pub fn to_bench_json(
         &self,
         dataset: &str,
         model_solver: &str,
         unbatched: Option<&ReplayStats>,
+        multi: Option<&MultiTenantStats>,
     ) -> String {
-        let derived = match unbatched {
-            Some(u) => format!(
-                "{{\n    \"batching_speedup_throughput\": {:.9e},\n    \
-                 \"batching_unbatched_rps\": {:.9e}\n  }}",
-                self.throughput_rps / u.throughput_rps.max(1e-12),
-                u.throughput_rps
-            ),
-            None => "{}".to_string(),
+        let mut fields: Vec<String> = Vec::new();
+        if let Some(u) = unbatched {
+            fields.push(format!(
+                "\"batching_speedup_throughput\": {:.9e}",
+                self.throughput_rps / u.throughput_rps.max(1e-12)
+            ));
+            fields.push(format!("\"batching_unbatched_rps\": {:.9e}", u.throughput_rps));
+        }
+        if let Some(m) = multi {
+            fields.push(format!(
+                "\"multi_model_routing_overhead\": {:.9e}",
+                self.throughput_rps / m.throughput_rps.max(1e-12)
+            ));
+            fields.push(format!("\"shard_swap_stall_us\": {:.9e}", m.swap_stall_us));
+            fields.push(format!("\"multi_model_rps\": {:.9e}", m.throughput_rps));
+            fields.push(format!("\"multi_models\": {}", m.models));
+            fields.push(format!("\"multi_shards\": {}", m.shards));
+        }
+        let derived = if fields.is_empty() {
+            "{}".to_string()
+        } else {
+            format!("{{\n    {}\n  }}", fields.join(",\n    "))
         };
         format!(
             "{{\n  \"bench\": \"serving\",\n  \"dataset\": {},\n  \"model_solver\": {},\n  \
@@ -257,17 +440,19 @@ mod tests {
             batch: BatchConfig {
                 max_batch: 8,
                 max_wait: Duration::from_micros(200),
+                ..Default::default()
             },
             clients: 3,
         };
         let stats = replay(store, "m", &requests, &cfg).expect("replay");
         assert_eq!(stats.requests, 97);
+        assert_eq!(stats.shed, 0, "unbounded admission sheds nothing");
         assert!(stats.seconds > 0.0);
         assert!(stats.throughput_rps > 0.0);
         assert!(stats.p50_us <= stats.p90_us && stats.p90_us <= stats.p99_us);
         assert!(stats.p99_us <= stats.max_us);
         assert!(stats.batches >= 1);
-        let json = stats.to_bench_json("unit-test", "none", None);
+        let json = stats.to_bench_json("unit-test", "none", None, None);
         let parsed = crate::util::json::Json::parse(&json).expect("valid JSON");
         assert_eq!(
             parsed.get("bench").and_then(|b| b.as_str().map(String::from)),
@@ -282,7 +467,7 @@ mod tests {
         );
         // with an unbatched baseline the derived speedup must be a
         // finite positive number (the CI bench-smoke gate's contract)
-        let with_base = stats.to_bench_json("unit-test", "none", Some(&stats));
+        let with_base = stats.to_bench_json("unit-test", "none", Some(&stats), None);
         let parsed = crate::util::json::Json::parse(&with_base).expect("valid JSON");
         let speedup = parsed
             .get("derived")
@@ -290,6 +475,63 @@ mod tests {
             .and_then(|v| v.as_f64())
             .expect("derived speedup present");
         assert!(speedup.is_finite() && speedup > 0.0);
+    }
+
+    #[test]
+    fn multi_tenant_replay_routes_and_reports() {
+        let store = Arc::new(ModelStore::with_shards(4));
+        let names: Vec<String> = (0..3).map(|i| format!("m{i}")).collect();
+        for (i, name) in names.iter().enumerate() {
+            store.publish(
+                name,
+                Model::from_dense(&[1.0 + i as f64, -0.5], Loss::Squared, 0.1, "test"),
+            );
+        }
+        let requests: Vec<PredictRequest> = (0..60)
+            .map(|i| PredictRequest::new(vec![(i % 2, 1.0 + i as f64)]))
+            .collect();
+        let cfg = ReplayConfig {
+            batch: BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+                ..Default::default()
+            },
+            clients: 2,
+        };
+        let swap = Model::from_dense(&[9.0, 9.0], Loss::Squared, 0.1, "swap");
+        let multi =
+            replay_multi(Arc::clone(&store), &names, &requests, &cfg, Some(&swap)).expect("multi");
+        assert_eq!(multi.models, 3);
+        assert_eq!(multi.shards, 4);
+        assert!(multi.throughput_rps > 0.0);
+        assert!(multi.swap_stall_us.is_finite() && multi.swap_stall_us >= 0.0);
+        assert_eq!(multi.shed, 0);
+        // the swap loop really republished: m0's version moved past 1
+        assert!(store.resolve("m0").expect("m0 present").version > 1);
+
+        // routed derived fields land in the bench JSON and parse finite
+        let single = replay(Arc::clone(&store), "m0", &requests, &cfg).expect("single");
+        let json = single.to_bench_json("unit-test", "none", None, Some(&multi));
+        let parsed = crate::util::json::Json::parse(&json).expect("valid JSON");
+        let overhead = parsed
+            .get("derived")
+            .and_then(|d| d.get("multi_model_routing_overhead"))
+            .and_then(|v| v.as_f64())
+            .expect("routing overhead present");
+        assert!(overhead.is_finite() && overhead > 0.0);
+        let stall = parsed
+            .get("derived")
+            .and_then(|d| d.get("shard_swap_stall_us"))
+            .and_then(|v| v.as_f64())
+            .expect("swap stall present");
+        assert!(stall.is_finite() && stall >= 0.0);
+    }
+
+    #[test]
+    fn multi_tenant_replay_rejects_empty_name_list() {
+        let store = Arc::new(ModelStore::new());
+        let err = replay_multi(store, &[], &[], &ReplayConfig::default(), None).unwrap_err();
+        assert!(matches!(err, ShotgunError::InvalidParam { name: "models", .. }));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! `ModelStore` — versioned, hot-swappable named models.
+//! `ModelStore` — versioned, hot-swappable named models, sharded.
 //!
 //! The serving process keeps every live model behind a name
 //! (`"default"`, `"user-tier-premium"`, ...). Publishing a new fit for
@@ -10,12 +10,24 @@
 //! finish against the version they started with (regression-tested in
 //! `tests/serving.rs::hot_swap_never_serves_a_torn_model`).
 //!
-//! Versions are per-name and monotonic within a store's lifetime.
-//! [`save_dir`](ModelStore::save_dir)/[`load_dir`](ModelStore::load_dir)
-//! persist the store as one `shotgun.store.v1` JSON document per name
-//! (the [`Model`] artifact plus name/version provenance) through
+//! Multi-tenant scaling: the table is split into N shards (see
+//! [`ModelStore::with_shards`]), each behind its own `RwLock`, with
+//! names assigned by a consistent-hash ring (FNV-1a over vnode labels).
+//! A hot-swap's write lock therefore stalls only readers of names on
+//! the SAME shard — a publish to `"m0"` never blocks a predict on a
+//! name that hashes elsewhere. The public API is unchanged from the
+//! single-shard store; shard placement is an internal detail exposed
+//! read-only via [`shard_of`](ModelStore::shard_of) for tests and
+//! diagnostics.
+//!
+//! Versions are per-name and monotonic within a store's lifetime —
+//! including across [`load_dir`](ModelStore::load_dir), which skips
+//! persisted records that are not newer than what the store already
+//! holds. [`save_dir`](ModelStore::save_dir)/`load_dir` persist the
+//! store as one `shotgun.store.v1` JSON document per name (the
+//! [`Model`] artifact plus name/version provenance) through
 //! [`crate::util::json`], so a restarted scorer resumes from the last
-//! published set.
+//! published set. The on-disk layout is shard-count independent.
 
 use super::super::error::ShotgunError;
 use super::super::model::Model;
@@ -79,15 +91,51 @@ impl ModelRecord {
     }
 }
 
+/// What [`ModelStore::load_dir`] did: how many persisted records were
+/// published into the store, and how many were skipped because the
+/// store already held that name at the same or a newer version.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreLoad {
+    /// Records inserted (name absent, or persisted version is newer).
+    pub loaded: usize,
+    /// Records skipped as stale (current version >= persisted version).
+    pub stale: usize,
+}
+
+/// FNV-1a over `bytes` — shared by file-name hashing and the shard ring.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Vnodes per shard on the consistent-hash ring. Enough that name
+/// placement is roughly uniform at small shard counts.
+const VNODES_PER_SHARD: usize = 16;
+
+/// Default shard count for [`ModelStore::new`].
+const DEFAULT_SHARDS: usize = 8;
+
 /// The hot-swappable name → model table (see the module docs).
 ///
 /// All methods take `&self`; wrap the store in an `Arc` and share it
 /// between the fit side ([`FitQueue`](super::FitQueue) publishes into
 /// it) and the serve side ([`BatchPredictor`](super::BatchPredictor)
 /// resolves from it per batch).
-#[derive(Default)]
 pub struct ModelStore {
-    inner: RwLock<BTreeMap<String, Arc<ModelRecord>>>,
+    shards: Vec<RwLock<BTreeMap<String, Arc<ModelRecord>>>>,
+    /// Consistent-hash ring: sorted `(point, shard)` pairs. A name
+    /// lands on the first vnode at or after its hash, wrapping.
+    ring: Vec<(u64, usize)>,
+}
+
+impl Default for ModelStore {
+    fn default() -> ModelStore {
+        ModelStore::with_shards(DEFAULT_SHARDS)
+    }
 }
 
 impl ModelStore {
@@ -95,21 +143,56 @@ impl ModelStore {
         ModelStore::default()
     }
 
-    /// Read access that outlives a writer's panic: serving keeps going
-    /// on the last consistent table rather than poisoning every reader.
-    fn read(&self) -> std::sync::RwLockReadGuard<'_, BTreeMap<String, Arc<ModelRecord>>> {
-        self.inner.read().unwrap_or_else(PoisonError::into_inner)
+    /// A store with exactly `shards` inner tables (`0` is treated as
+    /// `1` — an empty store cannot hold anything). More shards means a
+    /// hot-swap write lock stalls a smaller slice of the name space;
+    /// the public behavior is otherwise identical at every count.
+    pub fn with_shards(shards: usize) -> ModelStore {
+        let n = shards.max(1);
+        let mut ring = Vec::with_capacity(n * VNODES_PER_SHARD);
+        for s in 0..n {
+            for k in 0..VNODES_PER_SHARD {
+                ring.push((fnv1a(format!("shard{s}:vnode{k}").as_bytes()), s));
+            }
+        }
+        ring.sort_unstable();
+        ModelStore {
+            shards: (0..n).map(|_| RwLock::new(BTreeMap::new())).collect(),
+            ring,
+        }
     }
 
-    fn write(&self) -> std::sync::RwLockWriteGuard<'_, BTreeMap<String, Arc<ModelRecord>>> {
-        self.inner.write().unwrap_or_else(PoisonError::into_inner)
+    /// Number of inner shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard `name` lives on — stable for a given shard count.
+    pub fn shard_of(&self, name: &str) -> usize {
+        let h = fnv1a(name.as_bytes());
+        let i = self.ring.partition_point(|&(point, _)| point < h);
+        self.ring[if i == self.ring.len() { 0 } else { i }].1
+    }
+
+    /// Read access that outlives a writer's panic: serving keeps going
+    /// on the last consistent table rather than poisoning every reader.
+    fn read(&self, shard: usize) -> std::sync::RwLockReadGuard<'_, BTreeMap<String, Arc<ModelRecord>>> {
+        self.shards[shard]
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn write(&self, shard: usize) -> std::sync::RwLockWriteGuard<'_, BTreeMap<String, Arc<ModelRecord>>> {
+        self.shards[shard]
+            .write()
+            .unwrap_or_else(PoisonError::into_inner)
     }
 
     /// Publish `model` under `name`, returning the new version. The
     /// swap is atomic: concurrent readers see the old record or this
-    /// one, both complete.
+    /// one, both complete. Only `name`'s shard is locked.
     pub fn publish(&self, name: &str, model: Model) -> u64 {
-        let mut table = self.write();
+        let mut table = self.write(self.shard_of(name));
         let version = table.get(name).map(|r| r.version + 1).unwrap_or(1);
         table.insert(
             name.to_string(),
@@ -125,7 +208,7 @@ impl ModelStore {
     /// The current record for `name` (an `Arc` clone — holding it keeps
     /// that version alive across later publishes).
     pub fn get(&self, name: &str) -> Option<Arc<ModelRecord>> {
-        self.read().get(name).cloned()
+        self.read(self.shard_of(name)).get(name).cloned()
     }
 
     /// Like [`get`](ModelStore::get) but typed for serving paths.
@@ -138,20 +221,24 @@ impl ModelStore {
 
     /// Remove `name`, returning its last record.
     pub fn remove(&self, name: &str) -> Option<Arc<ModelRecord>> {
-        self.write().remove(name)
+        self.write(self.shard_of(name)).remove(name)
     }
 
-    /// Registered names, sorted.
+    /// Registered names, sorted (merged across shards).
     pub fn names(&self) -> Vec<String> {
-        self.read().keys().cloned().collect()
+        let mut names: Vec<String> = (0..self.shards.len())
+            .flat_map(|s| self.read(s).keys().cloned().collect::<Vec<_>>())
+            .collect();
+        names.sort_unstable();
+        names
     }
 
     pub fn len(&self) -> usize {
-        self.read().len()
+        (0..self.shards.len()).map(|s| self.read(s).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.read().is_empty()
+        (0..self.shards.len()).all(|s| self.read(s).is_empty())
     }
 
     /// Filesystem-safe file name for a record. Model names are
@@ -171,19 +258,18 @@ impl ModelStore {
             })
             .collect();
         safe.truncate(48);
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in name.as_bytes() {
-            h ^= u64::from(*b);
-            h = h.wrapping_mul(0x0100_0000_01b3);
-        }
+        let h = fnv1a(name.as_bytes());
         format!("{safe}-{h:016x}.store.json")
     }
 
     /// Write every record to `dir/<sanitized-name>-<hash>.store.json`
     /// (see [`file_name_for`](Self::file_name_for) — names with path
-    /// separators cannot escape `dir`).
+    /// separators cannot escape `dir`). The layout carries no shard
+    /// information: a store saved at one shard count loads at another.
     pub fn save_dir(&self, dir: &Path) -> Result<(), ShotgunError> {
-        let records: Vec<Arc<ModelRecord>> = self.read().values().cloned().collect();
+        let records: Vec<Arc<ModelRecord>> = (0..self.shards.len())
+            .flat_map(|s| self.read(s).values().cloned().collect::<Vec<_>>())
+            .collect();
         std::fs::create_dir_all(dir).map_err(|e| ShotgunError::Io {
             path: dir.display().to_string(),
             reason: format!("create: {e}"),
@@ -199,14 +285,24 @@ impl ModelStore {
     }
 
     /// Load every `*.store.json` under `dir`, publishing each at its
-    /// persisted version (later publishes continue from there). Returns
-    /// the number of records loaded.
-    pub fn load_dir(&self, dir: &Path) -> Result<usize, ShotgunError> {
+    /// persisted version (later publishes continue from there).
+    ///
+    /// Per-name version monotonicity is preserved: a persisted record
+    /// whose version is NOT newer than what the store currently holds
+    /// for that name is skipped and counted in
+    /// [`StoreLoad::stale`] — loading an older snapshot into a live
+    /// store never regresses a name's version.
+    ///
+    /// On error the load is PARTIAL: records read before the failing
+    /// file stay inserted (directory iteration order is
+    /// platform-defined). Callers that need all-or-nothing should load
+    /// into a fresh store and merge on success.
+    pub fn load_dir(&self, dir: &Path) -> Result<StoreLoad, ShotgunError> {
         let entries = std::fs::read_dir(dir).map_err(|e| ShotgunError::Io {
             path: dir.display().to_string(),
             reason: format!("read dir: {e}"),
         })?;
-        let mut loaded = 0;
+        let mut report = StoreLoad::default();
         for entry in entries.flatten() {
             let path = entry.path();
             if !path
@@ -221,10 +317,16 @@ impl ModelStore {
                 reason: format!("read: {e}"),
             })?;
             let rec = ModelRecord::from_json(&text)?;
-            self.write().insert(rec.name.clone(), Arc::new(rec));
-            loaded += 1;
+            let mut table = self.write(self.shard_of(&rec.name));
+            match table.get(&rec.name) {
+                Some(cur) if cur.version >= rec.version => report.stale += 1,
+                _ => {
+                    table.insert(rec.name.clone(), Arc::new(rec));
+                    report.loaded += 1;
+                }
+            }
         }
-        Ok(loaded)
+        Ok(report)
     }
 }
 
@@ -293,11 +395,42 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("shotgun_store_{}", std::process::id()));
         store.save_dir(&dir).expect("save");
         let restored = ModelStore::new();
-        assert_eq!(restored.load_dir(&dir).expect("load"), 2);
+        let report = restored.load_dir(&dir).expect("load");
+        assert_eq!(report, StoreLoad { loaded: 2, stale: 0 });
         assert_eq!(restored.get("beta").unwrap().version, 2);
         assert_eq!(restored.get("beta").unwrap().model.to_dense(), vec![0.5]);
         // versions continue from the persisted point
         assert_eq!(restored.publish("beta", model(&[0.75])), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn loading_a_stale_snapshot_never_regresses_versions() {
+        // save a snapshot at beta=v1, then advance the live store to
+        // v2: loading the old snapshot must NOT regress the version
+        // (the pre-fix store blindly inserted and served v1 again)
+        let dir = std::env::temp_dir().join(format!("shotgun_store_s_{}", std::process::id()));
+        let snapshot = ModelStore::new();
+        snapshot.publish("beta", model(&[0.25]));
+        snapshot.publish("gamma", model(&[9.0]));
+        snapshot.save_dir(&dir).expect("save");
+
+        let live = ModelStore::new();
+        live.publish("beta", model(&[0.5]));
+        live.publish("beta", model(&[0.75]));
+        let report = live.load_dir(&dir).expect("load");
+        // beta@1 is stale against live v2; gamma is genuinely new
+        assert_eq!(report, StoreLoad { loaded: 1, stale: 1 });
+        assert_eq!(live.get("beta").unwrap().version, 2);
+        assert_eq!(live.get("beta").unwrap().model.to_dense(), vec![0.75]);
+        assert_eq!(live.get("gamma").unwrap().version, 1);
+        // publish-after-load continues from the MAX version, not the
+        // snapshot's
+        assert_eq!(live.publish("beta", model(&[1.0])), 3);
+        // equal versions are stale too (idempotent re-load)
+        let again = live.load_dir(&dir).expect("reload");
+        assert_eq!(again, StoreLoad { loaded: 0, stale: 2 });
+        assert_eq!(live.get("gamma").unwrap().version, 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -320,7 +453,7 @@ mod tests {
         // the hash suffix keeps same-sanitization names distinct, and
         // the real names round-trip through the document body
         let restored = ModelStore::new();
-        assert_eq!(restored.load_dir(&dir).expect("load"), 3);
+        assert_eq!(restored.load_dir(&dir).expect("load").loaded, 3);
         assert_eq!(
             restored.names(),
             vec![
@@ -331,5 +464,31 @@ mod tests {
         );
         assert_eq!(restored.get("tier/premium").unwrap().model.to_dense(), vec![1.0]);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharding_is_transparent_and_placement_is_stable() {
+        for shards in [1, 2, 4, 7] {
+            let store = ModelStore::with_shards(shards);
+            assert_eq!(store.shard_count(), shards);
+            for i in 0..20 {
+                let name = format!("m{i}");
+                assert!(store.shard_of(&name) < shards);
+                assert_eq!(store.publish(&name, model(&[i as f64])), 1);
+            }
+            assert_eq!(store.len(), 20);
+            for i in 0..20 {
+                let name = format!("m{i}");
+                // placement is a pure function of (name, shard count)
+                assert_eq!(store.shard_of(&name), store.shard_of(&name));
+                assert_eq!(store.get(&name).unwrap().model.to_dense(), vec![i as f64]);
+            }
+            assert_eq!(store.names().len(), 20);
+        }
+        // zero clamps to one rather than constructing an unusable store
+        let store = ModelStore::with_shards(0);
+        assert_eq!(store.shard_count(), 1);
+        store.publish("x", model(&[1.0]));
+        assert_eq!(store.get("x").unwrap().version, 1);
     }
 }

@@ -49,6 +49,7 @@ USAGE:
               [--proba-frac 0.0] [--file reqs.jsonl]
               [--gen-requests out.jsonl] [--max-batch 64]
               [--max-wait-us 2000] [--clients 4] [--fit-workers 2]
+              [--models N] [--shards S] [--max-in-flight M]
               [--bench-out BENCH_serving.json] [--store-out dir]
               [--compare-unbatched]
   repro sim [--smoke] [--seed 42] [--scenario <name>]
@@ -102,6 +103,13 @@ SERVE REQUEST FORMAT (--file, one JSON object per line; blank lines and
   P(y=+1) and requires a logistic model. Without --file, `serve`
   generates a seeded stream (--requests/--max-nnz/--proba-frac);
   --gen-requests writes that stream as JSONL and exits.
+  --models N (default 1): also replay the stream routed round-robin
+  across N copies of the fitted model through ONE router collector,
+  with a hot-swap loop hammering the first name; emits
+  derived.multi_model_routing_overhead and derived.shard_swap_stall_us.
+  --shards S (default 8) sizes the ModelStore's consistent-hash shard
+  map; --max-in-flight M (default unbounded) turns on admission
+  control (excess requests shed with a typed Overloaded error).
 
 SIM (repro sim): the deterministic serving simulator — REAL
   BatchServer/FitQueue threads on a virtual clock, so every outcome
@@ -111,7 +119,8 @@ SIM (repro sim): the deterministic serving simulator — REAL
   skips the bench JSON (its derived metrics need the full suite).
   Scenarios: baseline-batch8, baseline-batch64, diurnal, bursty,
   zipf-hot-model, worker-panic-recovery, hot-swap-under-load,
-  queue-saturation, client-stall.
+  queue-saturation, client-stall, multi-model-routing,
+  shard-swap-under-load, priority-inversion, overload-shedding.
 "#;
 
 fn parse_dims(s: &str) -> (usize, usize) {
@@ -330,7 +339,7 @@ fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
 /// `--bench-out` (default `BENCH_serving.json`).
 fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
     use shotgun::api::serve::{
-        replay, BatchConfig, FitJob, FitQueue, JobState, ModelStore, ReplayConfig,
+        replay, replay_multi, BatchConfig, FitJob, FitQueue, JobState, ModelStore, ReplayConfig,
     };
     use shotgun::testkit::requests::{self, StreamSpec};
     use std::sync::Arc;
@@ -375,12 +384,12 @@ fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
     }
 
     // --- fit side: queue the training job, publish into the store ---
-    let store = Arc::new(ModelStore::new());
+    let store = Arc::new(ModelStore::with_shards(args.usize_or("shards", 8)));
     let queue = FitQueue::with_store(
         args.usize_or("fit-workers", 2),
         args.usize_or("fit-capacity", 16),
         Arc::clone(&store),
-    );
+    )?;
     let design = Arc::new(ds.design);
     let targets = Arc::new(ds.targets);
     let mut job = FitJob::new(design, targets, loss, lam)
@@ -418,6 +427,7 @@ fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
         batch: BatchConfig {
             max_batch: args.usize_or("max-batch", 64),
             max_wait: Duration::from_micros(args.usize_or("max-wait-us", 2_000) as u64),
+            max_in_flight: args.usize_or("max-in-flight", usize::MAX),
         },
         clients: args.usize_or("clients", 4),
     };
@@ -453,10 +463,41 @@ fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
         None
     };
 
+    // --models N: the same stream routed round-robin across N copies of
+    // the fitted model through ONE router collector, with a hot-swap
+    // loop republishing the first name the whole time — the routing
+    // overhead and worst swap stall become derived bench fields
+    let models = args.usize_or("models", 1);
+    let multi = if models > 1 {
+        let names: Vec<String> = (0..models).map(|i| format!("m{i}")).collect();
+        for name in &names {
+            store.publish(name, (*record.model).clone());
+        }
+        let m = replay_multi(
+            Arc::clone(&store),
+            &names,
+            &request_stream,
+            &cfg,
+            Some(record.model.as_ref()),
+        )?;
+        println!(
+            "multi-tenant ({} models, {} shards): {:.0} req/s | worst swap stall {:.1}us | {} shed",
+            m.models, m.shards, m.throughput_rps, m.swap_stall_us, m.shed
+        );
+        Some(m)
+    } else {
+        None
+    };
+
     let bench_out = args.get_or("bench-out", "BENCH_serving.json");
     std::fs::write(
         &bench_out,
-        stats.to_bench_json(&dataset_tag, &report.diagnostics.solver, unbatched.as_ref()),
+        stats.to_bench_json(
+            &dataset_tag,
+            &report.diagnostics.solver,
+            unbatched.as_ref(),
+            multi.as_ref(),
+        ),
     )
     .map_err(|e| io_err(&bench_out, "write bench json", e))?;
     println!("serving benchmark written to {bench_out}");

@@ -49,6 +49,21 @@ pub enum Fault {
     /// that stopped reading, then caught up). Applied to the workload
     /// stream before the event loop starts.
     ClientStall { at: Tick, dur: Tick },
+    /// At `at`, with the workers already wedged (pair this with a
+    /// jobs-free [`Fault::QueueSaturation`] a tick earlier), burst a
+    /// priority-inversion workload through the lanes: `expired_jobs`
+    /// Normal jobs whose deadlines lapse while the workers are wedged
+    /// (they must fail typed at dequeue, never run), `batch_jobs`
+    /// Batch-lane fillers costing `fill_cost` ticks each, and finally
+    /// ONE High job submitted LAST. The High job must still finish
+    /// before any Batch filler starts — the lane order beats the
+    /// submission order.
+    PriorityBurst {
+        at: Tick,
+        batch_jobs: usize,
+        expired_jobs: usize,
+        fill_cost: Tick,
+    },
 }
 
 impl Fault {
@@ -58,7 +73,8 @@ impl Fault {
             Fault::WorkerPanic { at }
             | Fault::HotSwap { at, .. }
             | Fault::QueueSaturation { at, .. }
-            | Fault::ClientStall { at, .. } => at,
+            | Fault::ClientStall { at, .. }
+            | Fault::PriorityBurst { at, .. } => at,
         }
     }
 
@@ -91,11 +107,18 @@ mod tests {
                 at: 4 * SECOND,
                 dur: SECOND,
             },
+            Fault::PriorityBurst {
+                at: 5 * SECOND,
+                batch_jobs: 4,
+                expired_jobs: 2,
+                fill_cost: 13,
+            },
         ];
         for (i, f) in faults.iter().enumerate() {
             assert_eq!(f.at(), (i as u64 + 1) * SECOND);
         }
         assert!(faults[..3].iter().all(Fault::needs_queue));
         assert!(!faults[3].needs_queue());
+        assert!(faults[4].needs_queue());
     }
 }

@@ -14,6 +14,11 @@
 //!   worker-panic injection and the recovery hot-swap becoming visible.
 //! * `derived.swap_visibility_lag_us` — hot-swap publish → first
 //!   response served by the new version, virtual microseconds.
+//! * `derived.overload_shed_requests` — requests the admission gate
+//!   shed with typed `Overloaded` in the `overload-shedding` scenario.
+//! * `derived.priority_queue_lead_jobs` — Batch fillers the
+//!   `priority-inversion` High job beat to completion (must equal the
+//!   burst size).
 //!
 //! Every number in the report is virtual-time deterministic: same
 //! suite + seed → byte-identical JSON, on any machine.
@@ -32,7 +37,7 @@ const MS: Tick = SECOND / 1000;
 
 /// The scenario names the acceptance gate requires (a subset of
 /// [`suite`]; `tests/simserve.rs` checks coverage).
-pub const REQUIRED_SCENARIOS: [&str; 7] = [
+pub const REQUIRED_SCENARIOS: [&str; 11] = [
     "baseline-batch8",
     "baseline-batch64",
     "diurnal",
@@ -40,6 +45,10 @@ pub const REQUIRED_SCENARIOS: [&str; 7] = [
     "zipf-hot-model",
     "worker-panic-recovery",
     "hot-swap-under-load",
+    "multi-model-routing",
+    "shard-swap-under-load",
+    "priority-inversion",
+    "overload-shedding",
 ];
 
 /// The canonical named scenarios (see module docs). `smoke` shrinks
@@ -54,6 +63,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
     let batch = |max_batch: usize, max_wait_us: u64| BatchConfig {
         max_batch,
         max_wait: Duration::from_micros(max_wait_us),
+        ..BatchConfig::default()
     };
     let workload = |curve: RateCurve, horizon: Tick, models: usize, zipf: f64, proba: f64| {
         WorkloadSpec {
@@ -85,6 +95,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
             faults: vec![],
             fit_workers: 2,
             fit_capacity: 8,
+            store_shards: 4,
             seed: sd(1), // same seed: same arrivals, different batching
             loss: Loss::Squared,
             train_n,
@@ -109,6 +120,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         faults: vec![],
         fit_workers: 2,
         fit_capacity: 8,
+        store_shards: 4,
         seed: sd(2),
         loss: Loss::Logistic,
         train_n,
@@ -134,6 +146,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         faults: vec![],
         fit_workers: 2,
         fit_capacity: 8,
+        store_shards: 4,
         seed: sd(3),
         loss: Loss::Squared,
         train_n,
@@ -153,6 +166,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         faults: vec![],
         fit_workers: 2,
         fit_capacity: 8,
+        store_shards: 4,
         seed: sd(4),
         loss: Loss::Logistic,
         train_n,
@@ -177,6 +191,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         ],
         fit_workers: 2,
         fit_capacity: 8,
+        store_shards: 4,
         seed: sd(5),
         loss: Loss::Squared,
         train_n,
@@ -194,6 +209,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         }],
         fit_workers: 2,
         fit_capacity: 8,
+        store_shards: 4,
         seed: sd(6),
         loss: Loss::Squared,
         train_n,
@@ -218,6 +234,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         }],
         fit_workers: 2,
         fit_capacity: 4, // 2 wedges + 2 burst accepted -> 4 rejected
+        store_shards: 4,
         seed: sd(7),
         loss: Loss::Squared,
         train_n,
@@ -241,7 +258,116 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         }],
         fit_workers: 2,
         fit_capacity: 8,
+        store_shards: 4,
         seed: sd(8),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+    });
+    // -- multi-tenant routing: four models through ONE router collector
+    // (Zipf-skewed name mix), sharded store; every response must still
+    // be bit-identical on its own (name, version)
+    out.push(Scenario {
+        name: "multi-model-routing",
+        workload: workload(
+            RateCurve::Constant { rps: 3_000.0 * rate },
+            ms(200),
+            4,
+            1.0,
+            0.0,
+        ),
+        batch: batch(16, 2_000),
+        faults: vec![],
+        fit_workers: 2,
+        fit_capacity: 8,
+        store_shards: 4,
+        seed: sd(9),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+    });
+    // -- hot swap on one tenant of a sharded multi-tenant store: the
+    // swap lands on m0's shard while traffic keeps flowing to the rest
+    out.push(Scenario {
+        name: "shard-swap-under-load",
+        workload: workload(
+            RateCurve::Constant { rps: 2_000.0 * rate },
+            h,
+            3,
+            0.5,
+            0.0,
+        ),
+        batch: batch(16, 2_000),
+        faults: vec![Fault::HotSwap {
+            at: h / 3,
+            lam: 0.09,
+            cost: 29_000_009,
+        }],
+        fit_workers: 2,
+        fit_capacity: 8,
+        store_shards: 4,
+        seed: sd(10),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+    });
+    // -- priority inversion: wedge the workers (jobs-free saturation),
+    // then burst doomed-deadline Normals + slow Batch fillers + one
+    // High job submitted LAST; the High job must still win the lanes.
+    // The burst fires a fixed 1ms after the wedge (the wedge holds for
+    // 9ms in both smoke and full mode, so the workers are still busy)
+    out.push(Scenario {
+        name: "priority-inversion",
+        workload: workload(
+            RateCurve::Constant { rps: 500.0 * rate },
+            ms(100),
+            1,
+            0.0,
+            0.0,
+        ),
+        batch: batch(8, 2_000),
+        faults: vec![
+            Fault::QueueSaturation {
+                at: ms(30),
+                jobs: 0, // wedge-only: no burst fillers of its own
+                wedge_cost: 9_000_007,
+            },
+            Fault::PriorityBurst {
+                at: ms(30) + MS,
+                batch_jobs: 4,
+                expired_jobs: 2,
+                fill_cost: 3_000_001,
+            },
+        ],
+        fit_workers: 2,
+        fit_capacity: 16,
+        store_shards: 4,
+        seed: sd(11),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+    });
+    // -- overload shedding: a tight max_in_flight gate under heavy
+    // constant load; sheds must be typed Overloaded, never hangs
+    out.push(Scenario {
+        name: "overload-shedding",
+        workload: workload(
+            RateCurve::Constant { rps: 8_000.0 * rate },
+            ms(100),
+            1,
+            0.0,
+            0.0,
+        ),
+        batch: BatchConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(2_000),
+            max_in_flight: 8,
+        },
+        faults: vec![],
+        fit_workers: 2,
+        fit_capacity: 8,
+        store_shards: 4,
+        seed: sd(12),
         loss: Loss::Squared,
         train_n,
         train_lam: 0.1,
@@ -301,6 +427,15 @@ pub fn report_line(o: &Outcome) -> String {
     if o.rejected_jobs > 0 {
         line.push_str(&format!(" | {} jobs rejected", o.rejected_jobs));
     }
+    if o.overloaded_responses > 0 {
+        line.push_str(&format!(" | {} shed", o.overloaded_responses));
+    }
+    if o.expired_jobs > 0 {
+        line.push_str(&format!(" | {} expired", o.expired_jobs));
+    }
+    if o.high_lead_jobs > 0 {
+        line.push_str(&format!(" | high led {}", o.high_lead_jobs));
+    }
     line
 }
 
@@ -321,6 +456,8 @@ impl SuiteReport {
         let b64 = need("baseline-batch64");
         let panic_recovery = need("worker-panic-recovery");
         let swap = need("hot-swap-under-load");
+        let inversion = need("priority-inversion");
+        let shedding = need("overload-shedding");
         let ratio = b64.p99_us / b8.p99_us.max(1e-12);
         let recovery_rounds = panic_recovery
             .recovery_batches
@@ -344,15 +481,19 @@ impl SuiteReport {
             }
             scenarios.push_str(&format!(
                 "    {{\"name\": \"{}\", \"requests\": {}, \"responses\": {}, \
-                 \"failed_responses\": {}, \"batches\": {}, \"mean_batch\": {:.3}, \
+                 \"failed_responses\": {}, \"shutdown_responses\": {}, \
+                 \"overloaded_responses\": {}, \"batches\": {}, \"mean_batch\": {:.3}, \
                  \"virtual_seconds\": {:.6}, \"throughput_rps\": {:.3}, \
                  \"latency_us\": {{\"p50\": {:.3}, \"p90\": {:.3}, \"p99\": {:.3}, \"max\": {:.3}}}, \
                  \"bit_identity_checked\": {}, \"completed_jobs\": {}, \"failed_jobs\": {}, \
-                 \"rejected_jobs\": {}, \"max_version_served\": {}{}}}",
+                 \"rejected_jobs\": {}, \"expired_jobs\": {}, \"high_lead_jobs\": {}, \
+                 \"max_version_served\": {}{}}}",
                 o.name,
                 o.requests,
                 o.responses,
                 o.failed_responses,
+                o.shutdown_responses,
+                o.overloaded_responses,
                 o.batches,
                 o.mean_batch,
                 o.virtual_seconds,
@@ -365,6 +506,8 @@ impl SuiteReport {
                 o.completed_jobs,
                 o.failed_jobs,
                 o.rejected_jobs,
+                o.expired_jobs,
+                o.high_lead_jobs,
                 o.max_version_served,
                 extras
             ));
@@ -376,6 +519,8 @@ impl SuiteReport {
              \"batching_latency_p99_ratio\": {:.9e},\n    \
              \"fault_recovery_rounds\": {:.1},\n    \
              \"swap_visibility_lag_us\": {:.3},\n    \
+             \"overload_shed_requests\": {},\n    \
+             \"priority_queue_lead_jobs\": {},\n    \
              \"sim_scenarios\": {},\n    \
              \"sim_requests_total\": {}\n  }}\n}}\n",
             if self.smoke { "smoke" } else { "full" },
@@ -385,6 +530,8 @@ impl SuiteReport {
             ratio,
             recovery_rounds,
             swap_lag,
+            shedding.overloaded_responses,
+            inversion.high_lead_jobs,
             self.outcomes.len(),
             requests_total
         )
@@ -426,6 +573,8 @@ mod tests {
             requests: 100,
             responses: 100,
             failed_responses: 0,
+            shutdown_responses: 0,
+            overloaded_responses: 0,
             batches: 20,
             mean_batch: 5.0,
             virtual_seconds: 0.25,
@@ -438,6 +587,8 @@ mod tests {
             completed_jobs: 0,
             failed_jobs: 0,
             rejected_jobs: 0,
+            expired_jobs: 0,
+            high_lead_jobs: 0,
             swap_lag_us: None,
             recovery_batches: None,
             max_version_served: 1,
@@ -450,6 +601,13 @@ mod tests {
         let mut swap = outcome("hot-swap-under-load", 1100.0);
         swap.swap_lag_us = Some(2100.5);
         swap.max_version_served = 2;
+        let mut inversion = outcome("priority-inversion", 700.0);
+        inversion.completed_jobs = 7;
+        inversion.expired_jobs = 2;
+        inversion.high_lead_jobs = 4;
+        let mut shedding = outcome("overload-shedding", 600.0);
+        shedding.responses = 80;
+        shedding.overloaded_responses = 20;
         let report = SuiteReport {
             smoke: true,
             seed: 42,
@@ -458,6 +616,8 @@ mod tests {
                 outcome("baseline-batch64", 8000.0),
                 panic_recovery,
                 swap,
+                inversion,
+                shedding,
             ],
         };
         let json = report.to_bench_json();
@@ -471,13 +631,19 @@ mod tests {
         assert!((f("batching_latency_p99_ratio") - 8.0).abs() < 1e-9);
         assert_eq!(f("fault_recovery_rounds"), 7.0);
         assert!((f("swap_visibility_lag_us") - 2100.5).abs() < 1e-9);
-        assert_eq!(f("sim_scenarios"), 4.0);
-        assert_eq!(f("sim_requests_total"), 400.0);
+        assert_eq!(f("overload_shed_requests"), 20.0);
+        assert_eq!(f("priority_queue_lead_jobs"), 4.0);
+        assert_eq!(f("sim_scenarios"), 6.0);
+        assert_eq!(f("sim_requests_total"), 600.0);
         // per-scenario entries parse too
         let entries = doc.get("scenarios").and_then(Json::as_arr).expect("array");
-        assert_eq!(entries.len(), 4);
+        assert_eq!(entries.len(), 6);
         // a single-line human report renders the optional fields
         let line = report_line(&report.outcomes[3]);
         assert!(line.contains("hot-swap-under-load") && line.contains("swap lag"));
+        let line = report_line(&report.outcomes[4]);
+        assert!(line.contains("2 expired") && line.contains("high led 4"));
+        let line = report_line(&report.outcomes[5]);
+        assert!(line.contains("20 shed"));
     }
 }

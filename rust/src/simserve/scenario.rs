@@ -2,9 +2,10 @@
 //! executed to quiescence on virtual time.
 //!
 //! A [`Scenario`] assembles the REAL serving stack — trained
-//! [`Model`]s in a [`ModelStore`], one [`BatchServer`] collector
-//! thread per model, an optional [`FitQueue`] worker pool — all on one
-//! [`Clock::sim`], then drives the discrete-event loop:
+//! [`Model`]s in a sharded [`ModelStore`], ONE routed [`BatchServer`]
+//! collector serving every model name, an optional prioritized
+//! [`FitQueue`] worker pool — all on one [`Clock::sim`], then drives
+//! the discrete-event loop:
 //!
 //! 1. wait for **quiescence** (every component thread parked with
 //!    nothing to do — see [`SimClock::until_quiescent`]);
@@ -35,8 +36,8 @@ use super::clock::{Clock, Tick};
 use super::faults::Fault;
 use super::workload::{Arrival, WorkloadSpec};
 use crate::api::serve::{
-    batch_design, BatchConfig, BatchServer, FitFault, FitJob, FitQueue, JobId, JobState,
-    ModelStore, PendingPredict, Submitter,
+    batch_design, BatchConfig, BatchServer, FitFault, FitJob, FitQueue, JobId, JobPriority,
+    JobState, ModelStore, PendingPredict,
 };
 use crate::api::{Fit, Model, ShotgunError};
 use crate::data::synth;
@@ -61,6 +62,8 @@ pub struct Scenario {
     pub fit_workers: usize,
     /// Fit-queue bounded capacity.
     pub fit_capacity: usize,
+    /// `ModelStore` shard count (0 clamps to 1).
+    pub store_shards: usize,
     /// Workload + request-content seed.
     pub seed: u64,
     /// Loss of the served models (decides predict semantics).
@@ -82,6 +85,12 @@ pub struct Outcome {
     pub requests: u64,
     pub responses: u64,
     pub failed_responses: u64,
+    /// Tickets resolved `Err(ServerShutdown)` — the reply channel died
+    /// before serving (0 in every healthy scenario).
+    pub shutdown_responses: u64,
+    /// Requests shed with a typed `Err(Overloaded)` by the admission
+    /// gate (`BatchConfig::max_in_flight`).
+    pub overloaded_responses: u64,
     /// Coalesced batches across all servers, and their mean size.
     pub batches: u64,
     pub mean_batch: f64,
@@ -100,6 +109,14 @@ pub struct Outcome {
     pub failed_jobs: u64,
     /// Typed overload rejections from the bounded queue.
     pub rejected_jobs: u64,
+    /// Jobs that failed typed `DeadlineExpired` at dequeue (a
+    /// `PriorityBurst`'s doomed Normal jobs) — never run, never counted
+    /// in `failed_jobs`.
+    pub expired_jobs: u64,
+    /// The instant a `PriorityBurst`'s High job completed, how many of
+    /// its Batch fillers it beat (still queued or running). Equals the
+    /// burst's `batch_jobs` when the lanes work; 0 without a burst.
+    pub high_lead_jobs: u64,
     /// Hot-swap publish → first response served by the new version
     /// (virtual µs), when the scenario hot-swaps.
     pub swap_lag_us: Option<f64>,
@@ -143,6 +160,13 @@ enum JobKind {
     Wedge,
     /// `Fault::QueueSaturation`'s burst filler.
     Burst,
+    /// `Fault::PriorityBurst`'s High-lane job (submitted LAST).
+    HighPri,
+    /// `Fault::PriorityBurst`'s Batch-lane slow filler.
+    BatchFiller,
+    /// `Fault::PriorityBurst`'s doomed Normal job — its deadline lapses
+    /// while the workers are wedged, so it must fail typed at dequeue.
+    Expired,
 }
 
 enum Ev {
@@ -161,10 +185,15 @@ struct Observed {
     latencies_us: Vec<f64>,
     responses: u64,
     failed_responses: u64,
+    shutdown_responses: u64,
+    overloaded_responses: u64,
     bit_checked: u64,
     max_version: u64,
     completed_jobs: u64,
     failed_jobs: u64,
+    expired_jobs: u64,
+    /// Set once, the first poll that sees the High job Done.
+    high_lead_jobs: Option<u64>,
     /// `(publish tick, published version)` of the hot-swap, once its
     /// job completes.
     swap_published: Option<(Tick, u64)>,
@@ -181,7 +210,7 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
     let d = sc.workload.d;
     let clock = Clock::sim();
     let sim = Arc::clone(clock.sim_handle().expect("sim clock"));
-    let store = Arc::new(ModelStore::new());
+    let store = Arc::new(ModelStore::with_shards(sc.store_shards));
 
     // -- pre-sim: train + publish one real model per name (virtual t=0)
     let mut versions: HashMap<(usize, u64), Arc<Model>> = HashMap::new();
@@ -212,18 +241,13 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
     }
     let train0 = train0.expect("at least one model");
 
-    // -- the real components, all on the one sim clock
-    let mut servers: Vec<BatchServer> = (0..models)
-        .map(|m| {
-            BatchServer::spawn_with_clock(Arc::clone(&store), model_name(m), sc.batch, clock.clone())
-        })
-        .collect();
-    let submitters: Vec<Submitter> = servers.iter().map(BatchServer::submitter).collect();
-    let batches_now = |servers: &[BatchServer]| -> u64 {
-        servers
-            .iter()
-            .map(|s| s.counters().batches.load(Ordering::Relaxed))
-            .sum()
+    // -- the real components, all on the one sim clock: ONE router
+    // collector serves every model name (requests carry their name)
+    let mut server =
+        BatchServer::spawn_router_with_clock(Arc::clone(&store), sc.batch, clock.clone());
+    let submitter = server.submitter();
+    let batches_now = |server: &BatchServer| -> u64 {
+        server.counters().batches.load(Ordering::Relaxed)
     };
     let mut queue: Option<FitQueue> = sc.faults.iter().any(Fault::needs_queue).then(|| {
         FitQueue::with_clock(
@@ -232,6 +256,7 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
             Some(Arc::clone(&store)),
             clock.clone(),
         )
+        .expect("scenario fit-queue params are valid")
     });
 
     // -- the event list: workload arrivals (ClientStall windows applied
@@ -272,10 +297,14 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
         latencies_us: Vec::with_capacity(arrivals.len()),
         responses: 0,
         failed_responses: 0,
+        shutdown_responses: 0,
+        overloaded_responses: 0,
         bit_checked: 0,
         max_version: 0,
         completed_jobs: 0,
         failed_jobs: 0,
+        expired_jobs: 0,
+        high_lead_jobs: None,
         swap_published: None,
         swap_visible_at: None,
         panic_batches: None,
@@ -290,14 +319,14 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
     loop {
         sim.until_quiescent();
         if pending_panic_snapshot {
-            obs.panic_batches = Some(batches_now(&servers));
+            obs.panic_batches = Some(batches_now(&server));
             pending_panic_snapshot = false;
         }
         // jobs before tickets: a hot-swap publish must be in the
         // version map before a response served by it is checked
         poll_jobs(queue.as_ref(), &mut pending_jobs, &mut obs, &store, &mut versions, &sim);
         drain_tickets(&mut tickets, &arrivals, &mut obs, &versions, &sim, || {
-            batches_now(&servers)
+            batches_now(&server)
         });
 
         let next_event = events.get(ei).map(|(t, _)| *t);
@@ -320,7 +349,8 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
                             tickets.push(InFlight {
                                 submitted: sim.now(),
                                 arrival: *i,
-                                ticket: submitters[a.model].submit(a.request.clone()),
+                                ticket: submitter
+                                    .submit_to(&model_name(a.model), a.request.clone()),
                             });
                             requests += 1;
                         }
@@ -329,6 +359,7 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
                             sc,
                             &train0,
                             queue.as_ref().expect("fault scenarios build a queue"),
+                            sim.now(),
                             &mut pending_jobs,
                             &mut rejected_jobs,
                             &mut pending_panic_snapshot,
@@ -342,7 +373,7 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
     // events exhausted and nothing scheduled: one last observation pass
     poll_jobs(queue.as_ref(), &mut pending_jobs, &mut obs, &store, &mut versions, &sim);
     drain_tickets(&mut tickets, &arrivals, &mut obs, &versions, &sim, || {
-        batches_now(&servers)
+        batches_now(&server)
     });
     assert!(
         pending_jobs.is_empty(),
@@ -352,22 +383,19 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
     let end = sim.now().max(sc.workload.horizon);
 
     // -- teardown (kicks + joins), then account anything shutdown flushed
-    drop(submitters);
-    let batches = batches_now(&servers);
-    let served: u64 = servers
-        .iter()
-        .map(|s| s.counters().requests.load(Ordering::Relaxed))
-        .sum();
-    for s in &mut servers {
-        s.shutdown();
-    }
+    drop(submitter);
+    let batches = batches_now(&server);
+    let served: u64 = server.counters().requests.load(Ordering::Relaxed);
+    server.shutdown();
     if let Some(q) = queue.as_mut() {
         q.shutdown();
     }
     for inflight in tickets {
         match inflight.ticket.poll() {
-            Some(Ok(_)) | None => obs.failed_responses += 1, // undrained at quiescence = a bug surfaced
-            Some(Err(_)) => obs.failed_responses += 1,
+            Some(Err(ShotgunError::ServerShutdown)) => obs.shutdown_responses += 1,
+            Some(Err(ShotgunError::Overloaded { .. })) => obs.overloaded_responses += 1,
+            // undrained at quiescence = a bug surfaced
+            Some(Ok(_)) | Some(Err(_)) | None => obs.failed_responses += 1,
         }
     }
 
@@ -378,6 +406,8 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
         requests,
         responses: obs.responses,
         failed_responses: obs.failed_responses,
+        shutdown_responses: obs.shutdown_responses,
+        overloaded_responses: obs.overloaded_responses,
         batches,
         mean_batch: if batches == 0 {
             0.0
@@ -398,6 +428,8 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
         completed_jobs: obs.completed_jobs,
         failed_jobs: obs.failed_jobs,
         rejected_jobs,
+        expired_jobs: obs.expired_jobs,
+        high_lead_jobs: obs.high_lead_jobs.unwrap_or(0),
         swap_lag_us: match (obs.swap_published, obs.swap_visible_at) {
             (Some((published, _)), Some(visible)) => {
                 Some(visible.saturating_sub(published) as f64 * 1e-3)
@@ -415,6 +447,7 @@ fn inject(
     sc: &Scenario,
     train0: &(Arc<Design>, Arc<Vec<f64>>),
     queue: &FitQueue,
+    now: Tick,
     pending_jobs: &mut Vec<(JobId, JobKind)>,
     rejected_jobs: &mut u64,
     pending_panic_snapshot: &mut bool,
@@ -471,6 +504,49 @@ fn inject(
             }
             queue.kick_workers();
         }
+        Fault::PriorityBurst {
+            batch_jobs,
+            expired_jobs,
+            fill_cost,
+            ..
+        } => {
+            // the workers are already wedged (pair with a jobs-free
+            // QueueSaturation an instant earlier), so the whole
+            // inverted burst lands in the lanes before any worker
+            // wakes. Submission order is deliberately worst-case —
+            // doomed Normals, slow Batch fillers, High LAST — because
+            // lane order, not arrival order, must decide who runs
+            // first. Filler costs are staggered so no two completions
+            // tie on the timeline.
+            for _ in 0..expired_jobs {
+                // lapses while the workers are still wedged → must
+                // fail typed at dequeue, never run
+                match queue
+                    .try_submit_deferred(base_job(sc.train_lam).deadline_at(now + 1_000))?
+                {
+                    Some(id) => pending_jobs.push((id, JobKind::Expired)),
+                    None => *rejected_jobs += 1,
+                }
+            }
+            for k in 0..batch_jobs {
+                let cost = fill_cost + k as Tick * 1_000_003;
+                match queue.try_submit_deferred(
+                    base_job(sc.train_lam)
+                        .priority(JobPriority::Batch)
+                        .fault(FitFault::SlowFit { cost }),
+                )? {
+                    Some(id) => pending_jobs.push((id, JobKind::BatchFiller)),
+                    None => *rejected_jobs += 1,
+                }
+            }
+            match queue
+                .try_submit_deferred(base_job(sc.train_lam).priority(JobPriority::High))?
+            {
+                Some(id) => pending_jobs.push((id, JobKind::HighPri)),
+                None => *rejected_jobs += 1,
+            }
+            queue.kick_workers();
+        }
         Fault::ClientStall { .. } => unreachable!("applied to the workload pre-pass"),
     }
     Ok(())
@@ -488,6 +564,27 @@ fn poll_jobs(
     sim: &super::clock::SimClock,
 ) {
     let Some(queue) = queue else { return };
+    // the priority-inversion observable, captured BEFORE the retain
+    // pass mutates pending_jobs: the first poll that sees the High job
+    // Done counts how many Batch fillers it beat (still non-terminal)
+    if obs.high_lead_jobs.is_none() {
+        let high_done = pending_jobs
+            .iter()
+            .any(|&(id, kind)| {
+                kind == JobKind::HighPri
+                    && matches!(queue.status(id), Some(JobState::Done(_)))
+            });
+        if high_done {
+            let lead = pending_jobs
+                .iter()
+                .filter(|&&(id, kind)| {
+                    kind == JobKind::BatchFiller
+                        && !queue.status(id).is_some_and(|s| s.is_terminal())
+                })
+                .count() as u64;
+            obs.high_lead_jobs = Some(lead);
+        }
+    }
     pending_jobs.retain(|&(id, kind)| {
         match queue.status(id) {
             Some(JobState::Done(_)) => {
@@ -500,13 +597,24 @@ fn poll_jobs(
                 let _ = queue.take(id);
                 false
             }
-            Some(JobState::Failed(_)) => {
-                obs.failed_jobs += 1;
-                assert_eq!(
-                    kind,
-                    JobKind::Panic,
-                    "only the injected panic job may fail (job {id})"
-                );
+            Some(JobState::Failed(err)) => {
+                match kind {
+                    JobKind::Panic => {
+                        assert!(
+                            matches!(err, ShotgunError::JobPanicked { .. }),
+                            "panic job {id} failed as {err}"
+                        );
+                        obs.failed_jobs += 1;
+                    }
+                    JobKind::Expired => {
+                        assert!(
+                            matches!(err, ShotgunError::DeadlineExpired { .. }),
+                            "doomed job {id} failed as {err}, not DeadlineExpired"
+                        );
+                        obs.expired_jobs += 1;
+                    }
+                    _ => panic!("job {id} ({kind:?}) failed unexpectedly: {err}"),
+                }
                 let _ = queue.take(id);
                 false
             }
@@ -534,6 +642,8 @@ fn drain_tickets(
         };
         let arrival = &arrivals[inflight.arrival];
         match outcome {
+            Err(ShotgunError::ServerShutdown) => obs.shutdown_responses += 1,
+            Err(ShotgunError::Overloaded { .. }) => obs.overloaded_responses += 1,
             Err(_) => obs.failed_responses += 1,
             Ok(resp) => {
                 obs.responses += 1;
@@ -613,10 +723,12 @@ mod tests {
             batch: BatchConfig {
                 max_batch: 8,
                 max_wait: Duration::from_micros(800),
+                ..Default::default()
             },
             faults: vec![],
             fit_workers: 1,
             fit_capacity: 4,
+            store_shards: 2,
             seed: 5,
             loss: Loss::Squared,
             train_n: 40,
@@ -626,6 +738,8 @@ mod tests {
         assert!(out.requests > 0);
         assert_eq!(out.responses, out.requests);
         assert_eq!(out.failed_responses, 0);
+        assert_eq!(out.shutdown_responses, 0);
+        assert_eq!(out.overloaded_responses, 0);
         assert_eq!(out.bit_identity_checked, out.responses);
         assert!(out.batches > 0);
         assert!(out.p50_us <= out.p99_us && out.p99_us <= out.max_us);

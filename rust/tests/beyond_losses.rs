@@ -339,7 +339,7 @@ fn fit_queue_and_replay_serve_the_new_losses() {
             synth::sparse_imaging(60, 80, 0.15, 46)
         };
         let store = Arc::new(ModelStore::new());
-        let queue = FitQueue::with_store(2, 8, Arc::clone(&store));
+        let queue = FitQueue::with_store(2, 8, Arc::clone(&store)).expect("valid queue params");
         let design = Arc::new(ds.design);
         let targets = Arc::new(ds.targets);
         let job = FitJob::new(Arc::clone(&design), Arc::clone(&targets), loss, 0.05)

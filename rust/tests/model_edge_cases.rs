@@ -259,6 +259,15 @@ fn all_variants() -> Vec<(ShotgunError, &'static str)> {
             },
             "panic",
         ),
+        (ShotgunError::ServerShutdown, "shut down"),
+        (
+            ShotgunError::Overloaded {
+                in_flight: 128,
+                limit: 64,
+            },
+            "overloaded",
+        ),
+        (ShotgunError::DeadlineExpired { late: 77 }, "deadline"),
     ]
 }
 

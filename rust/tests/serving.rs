@@ -159,6 +159,7 @@ fn batch_server_matches_the_synchronous_front_on_virtual_time() {
         BatchConfig {
             max_batch: 16,
             max_wait: Duration::from_micros(300),
+            ..Default::default()
         },
         clock,
     );
@@ -236,7 +237,7 @@ fn fit_queue_results_are_independent_of_worker_count() {
     let targets = Arc::new(ds.targets);
 
     let solve_all = |workers: usize| -> Vec<Vec<f64>> {
-        let queue = FitQueue::new(workers, 16);
+        let queue = FitQueue::new(workers, 16).expect("valid queue params");
         let ids: Vec<_> = queue_jobs(&design, &targets)
             .into_iter()
             .map(|j| queue.submit(j).expect("queue open"))
@@ -357,7 +358,7 @@ fn queue_store_batch_compose_end_to_end() {
     let design = Arc::new(ds.design);
     let targets = Arc::new(ds.targets);
     let store = Arc::new(ModelStore::new());
-    let queue = FitQueue::with_store(2, 8, Arc::clone(&store));
+    let queue = FitQueue::with_store(2, 8, Arc::clone(&store)).expect("valid queue params");
 
     // fit v1, serve, refit at a different lambda (hot-swap), serve again
     let submit = |lam: f64| {
@@ -404,4 +405,145 @@ fn queue_store_batch_compose_end_to_end() {
         .zip(&after)
         .any(|(a, b)| a.score.to_bits() != b.score.to_bits());
     assert!(changed, "hot-swap should change predictions");
+}
+
+// ---------------------------------------------------------------------
+// multi-tenant: one router collector, many names, sharded store
+// ---------------------------------------------------------------------
+
+#[test]
+fn routed_multi_model_batches_are_bit_identical_to_sequential() {
+    // three distinct fitted models behind ONE router collector; requests
+    // interleave names, so every flush carries mixed-name groups. Each
+    // response must be bit-identical to a one-at-a-time predict on ITS
+    // model, whatever the batch composition was.
+    let models: Vec<Model> = [11u64, 22, 33]
+        .iter()
+        .map(|&seed| fitted_model(Loss::Squared, seed))
+        .collect();
+    let d = models[0].d();
+    let store = Arc::new(ModelStore::with_shards(4));
+    for (i, m) in models.iter().enumerate() {
+        store.publish(&format!("m{i}"), m.clone());
+    }
+    let requests = stream(&StreamSpec::new(d, 120), 7);
+
+    for max_batch in [1usize, 5, 32] {
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        let mut server = BatchServer::spawn_router_with_clock(
+            Arc::clone(&store),
+            BatchConfig {
+                max_batch,
+                max_wait: Duration::from_micros(500),
+                ..Default::default()
+            },
+            clock,
+        );
+        let submitter = server.submitter();
+        let tickets: Vec<_> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| submitter.submit_to(&format!("m{}", i % 3), r.clone()))
+            .collect();
+        // drive virtual time until every pending flush (including the
+        // final partial batch on the max_wait timer) has fired
+        sim.until_quiescent();
+        while let Some(t) = sim.next_deadline() {
+            sim.advance_to(t);
+            sim.until_quiescent();
+        }
+        for (i, ticket) in tickets.iter().enumerate() {
+            let resp = ticket
+                .poll()
+                .unwrap_or_else(|| panic!("ticket {i} still pending, max_batch={max_batch}"))
+                .expect("served");
+            let model = &models[i % 3];
+            let single = batch_design(std::slice::from_ref(&requests[i]), d).unwrap();
+            assert_eq!(
+                resp.score.to_bits(),
+                model.decision_function(&single).unwrap()[0].to_bits(),
+                "routed score diverged at [{i}], max_batch={max_batch}"
+            );
+            assert_eq!(
+                resp.prediction.to_bits(),
+                model.predict(&single).unwrap()[0].to_bits(),
+                "routed prediction diverged at [{i}], max_batch={max_batch}"
+            );
+        }
+        drop(tickets);
+        drop(submitter);
+        server.shutdown();
+    }
+}
+
+#[test]
+fn swaps_on_one_shard_leave_other_shards_untouched_under_load() {
+    // a hot-swap storm on one name must not stall or perturb a name on
+    // a DIFFERENT shard: its record Arc stays pointer-identical (the
+    // other shard's write lock was never taken) and its version never
+    // moves, while the swapped name itself stays torn-free
+    let d = 16;
+    let weights_a: Vec<f64> = (0..d).map(|j| 1.0 + j as f64).collect();
+    let weights_b: Vec<f64> = (0..d).map(|j| -(2.0 + j as f64)).collect();
+    let store = Arc::new(ModelStore::with_shards(4));
+    store.publish(
+        "stable",
+        Model::from_dense(&weights_a, Loss::Squared, 0.1, "keep"),
+    );
+    let hot = (0..)
+        .map(|k| format!("hot{k}"))
+        .find(|n| store.shard_of(n) != store.shard_of("stable"))
+        .expect("some name lands on another of the 4 shards");
+    store.publish(&hot, Model::from_dense(&weights_a, Loss::Squared, 0.1, "a"));
+    let stable_rec = store.get("stable").unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    const SWAPS: u64 = 300;
+    std::thread::scope(|scope| {
+        {
+            let store = Arc::clone(&store);
+            let stop = Arc::clone(&stop);
+            let hot = hot.clone();
+            let (wa, wb) = (weights_a.clone(), weights_b.clone());
+            scope.spawn(move || {
+                for k in 0..SWAPS {
+                    // initial publish is v1 = "a": even versions are "b"
+                    if k % 2 == 0 {
+                        store.publish(&hot, Model::from_dense(&wb, Loss::Squared, 0.1, "b"));
+                    } else {
+                        store.publish(&hot, Model::from_dense(&wa, Loss::Squared, 0.1, "a"));
+                    }
+                }
+                stop.store(true, Ordering::Release);
+            });
+        }
+        for _ in 0..3 {
+            let store = Arc::clone(&store);
+            let stop = Arc::clone(&stop);
+            let hot = hot.clone();
+            let stable_rec = Arc::clone(&stable_rec);
+            scope.spawn(move || {
+                let mut seen = 0u64;
+                while !stop.load(Ordering::Acquire) || seen == 0 {
+                    let rec = store.get("stable").expect("name never disappears");
+                    assert!(
+                        Arc::ptr_eq(&rec, &stable_rec),
+                        "a swap on {hot:?} replaced the record on another shard"
+                    );
+                    assert_eq!(rec.version, 1);
+                    let h = store.get(&hot).expect("hot name present");
+                    let expect_tag = if h.version % 2 == 1 { "a" } else { "b" };
+                    assert_eq!(
+                        h.model.solver, expect_tag,
+                        "torn record on the swapped shard: version {}",
+                        h.version
+                    );
+                    seen += 1;
+                }
+            });
+        }
+    });
+    assert_eq!(store.get(&hot).unwrap().version, SWAPS + 1);
+    assert_eq!(store.get("stable").unwrap().version, 1);
 }

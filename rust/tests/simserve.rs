@@ -54,7 +54,13 @@ fn every_named_scenario_is_run_to_run_deterministic() {
 
 #[test]
 fn fault_scenarios_are_worker_count_independent() {
-    for name in ["worker-panic-recovery", "hot-swap-under-load"] {
+    for name in [
+        "worker-panic-recovery",
+        "hot-swap-under-load",
+        "multi-model-routing",
+        "shard-swap-under-load",
+        "overload-shedding",
+    ] {
         let base = named(42, name);
         let outcomes: Vec<_> = [1usize, 2, 4]
             .into_iter()
@@ -81,10 +87,20 @@ fn suite_outcomes_hold_the_declared_invariants_and_feed_the_bench_json() {
         assert!(names.contains(&required), "suite must run {required}");
     }
     for o in &rep.outcomes {
-        // every request served, none dropped or failed, every response
-        // checked bit-for-bit against sequential predict
-        assert_eq!(o.responses, o.requests, "{}: lost requests", o.name);
+        // every request either served or shed with a typed Overloaded —
+        // never dropped, failed, or lost to a shutdown race; every
+        // served response checked bit-for-bit against sequential predict
+        assert_eq!(
+            o.responses + o.overloaded_responses,
+            o.requests,
+            "{}: lost requests",
+            o.name
+        );
         assert_eq!(o.failed_responses, 0, "{}: failed responses", o.name);
+        assert_eq!(o.shutdown_responses, 0, "{}: shutdown races", o.name);
+        if o.name != "overload-shedding" {
+            assert_eq!(o.overloaded_responses, 0, "{}: unexpected sheds", o.name);
+        }
         assert_eq!(o.bit_identity_checked, o.responses, "{}", o.name);
         assert!(o.requests > 0 && o.batches > 0, "{}: empty run", o.name);
         assert!(
@@ -117,6 +133,29 @@ fn suite_outcomes_hold_the_declared_invariants_and_feed_the_bench_json() {
     // off-phase batches stay well under max_batch
     let bursty = rep.outcome("bursty").expect("ran");
     assert!(bursty.mean_batch < 16.0, "mean batch {}", bursty.mean_batch);
+    // priority inversion: the last-submitted High job beats every Batch
+    // filler, and the doomed-deadline Normals fail typed without running
+    let inversion = rep.outcome("priority-inversion").expect("ran");
+    assert_eq!(inversion.high_lead_jobs, 4, "High must beat all fillers");
+    assert_eq!(inversion.expired_jobs, 2, "doomed jobs expire typed");
+    assert_eq!(inversion.failed_jobs, 0, "expired are not failures");
+    assert_eq!(inversion.rejected_jobs, 0, "capacity 16 fits the burst");
+    // overload shedding: the gate sheds typed Overloaded under pressure
+    // and every non-shed request still serves bit-identically
+    let shedding = rep.outcome("overload-shedding").expect("ran");
+    assert!(
+        shedding.overloaded_responses > 0,
+        "gate must shed under 8k rps with max_in_flight 8"
+    );
+    assert!(shedding.responses > 0, "gate must not shed everything");
+    // multi-model routing: one collector served four tenants
+    let routing = rep.outcome("multi-model-routing").expect("ran");
+    assert_eq!(routing.responses, routing.requests);
+    // shard swap: the hot swap on m0's shard stayed invisible to the
+    // other tenants except as a version bump on m0 itself
+    let shard_swap = rep.outcome("shard-swap-under-load").expect("ran");
+    assert_eq!(shard_swap.max_version_served, 2);
+    assert!(shard_swap.swap_lag_us.expect("swap observed") > 0.0);
 
     // the bench document is valid JSON with the derived fields the CI
     // gate (scripts/check_bench.py) requires to be finite and positive
@@ -130,11 +169,34 @@ fn suite_outcomes_hold_the_declared_invariants_and_feed_the_bench_json() {
         "batching_latency_p99_ratio",
         "fault_recovery_rounds",
         "swap_visibility_lag_us",
+        "overload_shed_requests",
+        "priority_queue_lead_jobs",
         "sim_scenarios",
         "sim_requests_total",
     ] {
         let v = derived.get(key).and_then(|v| v.as_f64()).expect(key);
         assert!(v.is_finite() && v > 0.0, "{key} = {v}");
+    }
+}
+
+#[test]
+fn priority_inversion_laws_hold_at_any_worker_count() {
+    // the High job's lead and the expired count are lane laws, not
+    // timing accidents: worker 0's wedge always frees first (staggered
+    // costs), pops High before any filler, and the doomed Normals are
+    // long expired by then — independent of how many workers exist
+    let base = named(42, "priority-inversion");
+    for workers in [1usize, 2, 3] {
+        let mut sc = base.clone();
+        sc.fit_workers = workers;
+        let out = run(&sc).expect("scenario runs");
+        assert_eq!(out.high_lead_jobs, 4, "{workers} workers");
+        assert_eq!(out.expired_jobs, 2, "{workers} workers");
+        assert_eq!(out.failed_jobs, 0, "{workers} workers");
+        assert_eq!(out.rejected_jobs, 0, "{workers} workers");
+        // 1 High + 4 fillers + `workers` wedges complete
+        assert_eq!(out.completed_jobs, 5 + workers as u64, "{workers} workers");
+        assert_eq!(out.responses, out.requests, "serving must not notice");
     }
 }
 

@@ -43,11 +43,13 @@ fi
 if [[ "$SMOKE" == "1" ]]; then
   export SHOTGUN_BENCH_SMOKE=1
   SERVE_ARGS=(--data imaging:256x512:0.02 --lam 0.1 --solver shotgun
-    --requests 2000 --max-batch 32 --max-wait-us 500 --clients 4)
+    --requests 2000 --max-batch 32 --max-wait-us 500 --clients 4
+    --models 4 --shards 4)
   echo "== bench.sh --smoke: tiny sizes, CI plumbing check =="
 else
   SERVE_ARGS=(--data imaging:2048x4096:0.005 --lam 0.1 --solver shotgun
-    --requests 20000 --max-batch 64 --max-wait-us 2000 --clients 8)
+    --requests 20000 --max-batch 64 --max-wait-us 2000 --clients 8
+    --models 4 --shards 4)
 fi
 
 cargo bench --bench hotpath "$@"

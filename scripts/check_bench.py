@@ -29,8 +29,13 @@ REQUIRED = {
         "positive_prefix": ["portfolio_win_rate_"],
     },
     "serving": {
-        "positive": ["batching_speedup_throughput", "batching_unbatched_rps"],
-        "finite": [],
+        # multi_model_routing_overhead is the single-tenant/multi-tenant
+        # throughput ratio (PR-9 router); shard_swap_stall_us is the worst
+        # publish stall observed while readers hammer other shards — 0 is a
+        # legitimate value on a fast box, so it only needs to be finite.
+        "positive": ["batching_speedup_throughput", "batching_unbatched_rps",
+                     "multi_model_routing_overhead"],
+        "finite": ["shard_swap_stall_us"],
     },
     # the PR-6 hot-path A/Bs: simd dispatch vs scalar, sharded vs
     # atomic accumulation, clustered vs uniform draws. All three are
@@ -51,7 +56,13 @@ REQUIRED = {
     # values are machine-independent; 0/NaN means the simulator stopped
     # measuring, not that the machine was fast.
     "simserve": {
-        "positive": ["batching_latency_p99_ratio", "fault_recovery_rounds"],
+        # PR-9 adds overload_shed_requests (typed Overloaded rejections in
+        # the overload-shedding scenario — the scenario is tuned so sheds
+        # always happen, hence > 0) and priority_queue_lead_jobs (batch
+        # fillers still pending when the High job finished; > 0 proves the
+        # priority lanes actually reorder work).
+        "positive": ["batching_latency_p99_ratio", "fault_recovery_rounds",
+                     "overload_shed_requests", "priority_queue_lead_jobs"],
         "finite": ["swap_visibility_lag_us"],
     },
 }

@@ -43,7 +43,9 @@ cargo test -q --test serving --test golden_fixtures --test registry_capabilities
 
 echo "== sim-scenarios: deterministic traffic & fault simulator =="
 # run-to-run and cross-worker-count Outcome equality for the named
-# scenario suite, fault semantics, and the workload-generator laws
+# scenario suite (incl. the multi-tenant quartet: multi-model-routing,
+# shard-swap-under-load, priority-inversion, overload-shedding), fault
+# semantics, and the workload-generator laws
 cargo test -q --test simserve
 
 echo "== doctests: cargo test --doc =="
