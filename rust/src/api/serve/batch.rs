@@ -40,12 +40,44 @@
 //! for a single-model batch.
 //!
 //! **Admission control:** [`BatchConfig::max_in_flight`] bounds the
-//! number of submitted-but-unconsumed requests. A submit over the
+//! number of submitted-but-unresolved requests. A submit over the
 //! bound is shed immediately with a typed
 //! [`ShotgunError::Overloaded`] — the request never enters a batch,
 //! and the caller's ticket resolves without blocking. A slot is held
-//! until the client consumes or drops its [`PendingPredict`] ticket,
-//! so the bound covers queued AND unread-reply memory.
+//! until the ticket resolves (`wait`, or `poll` returning `Some`) or
+//! is dropped — NOT until the response object is dropped, so a caller
+//! who keeps resolved tickets alive does not artificially trigger
+//! `Overloaded`.
+//!
+//! **Flush fairness:** [`BatchConfig::fairness`] picks which pending
+//! rows ride each router flush when more are pending than `max_batch`.
+//! [`FlushFairness::FirstSeen`] (the default) takes the oldest rows in
+//! arrival order — one flooding tenant can fill every flush.
+//! [`FlushFairness::DeficitRr`] cycles the pending model names in
+//! first-seen order, taking up to `quantum` rows per model per pass, so
+//! every pending tenant rides every flush. Only group *selection*
+//! changes — rows of one model always flush in FIFO arrival order, so
+//! the per-group bit-identity contract is untouched.
+//! [`BatchConfig::flush_cost`] optionally models the dispatch path
+//! being occupied for a fixed duration per flush (zero, the default,
+//! preserves the PR-9 behavior exactly); with a non-zero cost a backlog
+//! can form and the fairness policy decides who waits.
+//!
+//! ```
+//! use shotgun::api::serve::{BatchConfig, FlushFairness};
+//! let cfg = BatchConfig {
+//!     fairness: FlushFairness::DeficitRr { quantum: 4 },
+//!     ..BatchConfig::default()
+//! };
+//! assert_eq!(cfg.max_batch, 64); // other knobs keep their defaults
+//! ```
+//!
+//! **Cancellation:** dropping a [`PendingPredict`] ticket releases its
+//! admission slot AND marks the pending row (a shared flag, the
+//! `StopFlag` pattern from the fit side) so the collector skips it at
+//! flush — a shed or abandoned request never costs a
+//! `decision_function` row once its ticket is gone. Skipped rows are
+//! counted in [`ServerCounters::cancelled`].
 
 use super::super::error::ShotgunError;
 use super::super::model::Model;
@@ -54,8 +86,10 @@ use crate::objective::{sigma_neg, Loss};
 use crate::simserve::clock::{dur_ticks, Clock, Tick};
 use crate::sparsela::{CscMatrix, Design};
 use crate::util::json::{Json, Writer};
+use std::cell::Cell;
+use std::collections::VecDeque;
 use std::fmt::Write as _;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -142,6 +176,31 @@ pub struct PredictResponse {
     pub model_version: u64,
 }
 
+/// Which pending rows ride a [`BatchServer`] flush when more rows are
+/// pending than `max_batch` (see the module docs' fairness section).
+///
+/// Selection never reorders rows *within* a model: whatever the policy,
+/// a model's rows flush in FIFO arrival order, so per-group responses
+/// stay bit-identical to one-at-a-time [`Model::predict`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushFairness {
+    /// Oldest rows first, regardless of model — the PR-9 behavior and
+    /// the default. A tenant that floods the router fills every flush
+    /// and everyone else queues behind it.
+    FirstSeen,
+    /// Deficit round-robin over model names: each flush cycles the
+    /// pending models (first-seen order, rotating start), taking up to
+    /// `quantum` rows per model per pass until the flush holds
+    /// `max_batch` rows or nothing is pending. With
+    /// `max_batch >= models * quantum` every pending model is served
+    /// every flush, so a model with `p` queued rows fully drains within
+    /// `ceil(p / quantum)` flushes no matter how arrivals interleave.
+    DeficitRr {
+        /// Rows granted to each model per round-robin pass (>= 1).
+        quantum: usize,
+    },
+}
+
 /// Batching knobs shared by both fronts.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchConfig {
@@ -151,11 +210,20 @@ pub struct BatchConfig {
     /// first request arrived.
     pub max_wait: Duration,
     /// [`BatchServer`] only: admission bound — submits while this many
-    /// requests are in flight (submitted, ticket not yet consumed or
+    /// requests are in flight (submitted, ticket not yet resolved or
     /// dropped) are shed with [`ShotgunError::Overloaded`].
     /// `usize::MAX` (the default) disables shedding; `0` sheds
     /// everything.
     pub max_in_flight: usize,
+    /// [`BatchServer`] only: per-flush row selection policy when the
+    /// backlog exceeds `max_batch` (default [`FlushFairness::FirstSeen`]).
+    pub fairness: FlushFairness,
+    /// [`BatchServer`] only: how long each dispatched flush occupies
+    /// the collector before it resumes collecting (default zero — the
+    /// PR-9 behavior). Models downstream dispatch occupancy; the
+    /// simulator uses it to create contention the fairness policy has
+    /// to arbitrate.
+    pub flush_cost: Duration,
 }
 
 impl Default for BatchConfig {
@@ -164,6 +232,8 @@ impl Default for BatchConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(2),
             max_in_flight: usize::MAX,
+            fairness: FlushFairness::FirstSeen,
+            flush_cost: Duration::ZERO,
         }
     }
 }
@@ -365,6 +435,10 @@ pub struct ServerCounters {
     pub batches: AtomicU64,
     /// Requests shed by admission control (never entered a batch).
     pub shed: AtomicU64,
+    /// Pending rows whose ticket was dropped before their flush — the
+    /// collector skipped them, so they never cost a
+    /// `decision_function` row (and are not counted in `requests`).
+    pub cancelled: AtomicU64,
 }
 
 impl ServerCounters {
@@ -385,6 +459,10 @@ struct Envelope {
     name: Arc<str>,
     req: PredictRequest,
     reply: mpsc::Sender<Result<PredictResponse, ShotgunError>>,
+    /// Shared with the client's [`PendingPredict`]; raised when the
+    /// ticket drops so the collector skips this row at flush (the
+    /// `StopFlag` pattern from the fit side).
+    cancelled: Arc<AtomicBool>,
 }
 
 /// The in-flight admission gate (see [`BatchConfig::max_in_flight`]).
@@ -424,14 +502,21 @@ impl Admission {
     }
 }
 
-/// Ticket for an in-flight [`BatchServer`] request. Holding the ticket
-/// holds the request's admission slot; consuming (`wait`), polling to
-/// completion, or dropping it releases the slot.
+/// Ticket for an in-flight [`BatchServer`] request. The ticket holds
+/// the request's admission slot until the request *resolves* —
+/// consuming ([`wait`](Self::wait)), a [`poll`](Self::poll) returning
+/// `Some`, or dropping the ticket all release it. Dropping an
+/// unresolved ticket additionally cancels the request: the collector
+/// skips the row at flush and it never costs a scoring row.
 pub struct PendingPredict {
     rx: mpsc::Receiver<Result<PredictResponse, ShotgunError>>,
     /// `Some` while this ticket holds an admission slot (shed tickets
-    /// never acquired one).
-    gate: Option<Arc<Admission>>,
+    /// never acquired one; resolved tickets already released theirs).
+    /// `Cell` so `poll(&self)` can release at resolve time.
+    gate: Cell<Option<Arc<Admission>>>,
+    /// Shared with this ticket's envelope (`None` for shed tickets,
+    /// which never had one); raised on drop.
+    cancelled: Option<Arc<AtomicBool>>,
 }
 
 impl PendingPredict {
@@ -440,30 +525,47 @@ impl PendingPredict {
     /// surfaced as the typed [`ShotgunError::ServerShutdown`], not a
     /// fabricated client error.
     pub fn wait(self) -> Result<PredictResponse, ShotgunError> {
-        self.rx
+        let outcome = self
+            .rx
             .recv()
-            .unwrap_or_else(|_| Err(ShotgunError::ServerShutdown))
-        // self drops here, releasing the admission slot
+            .unwrap_or_else(|_| Err(ShotgunError::ServerShutdown));
+        self.resolve_gate();
+        outcome
     }
 
     /// Non-blocking check: `Some` once the batch containing this
     /// request has been served (consuming the response), `None` while
     /// it is still in flight. The simulation driver drains tickets with
     /// this at quiescence instead of blocking a thread per ticket.
+    /// Resolution releases the admission slot — keeping the resolved
+    /// ticket alive afterwards does not count against `max_in_flight`.
     pub fn poll(&self) -> Option<Result<PredictResponse, ShotgunError>> {
-        match self.rx.try_recv() {
-            Ok(outcome) => Some(outcome),
-            Err(TryRecvError::Empty) => None,
-            Err(TryRecvError::Disconnected) => Some(Err(ShotgunError::ServerShutdown)),
+        let outcome = match self.rx.try_recv() {
+            Ok(outcome) => outcome,
+            Err(TryRecvError::Empty) => return None,
+            Err(TryRecvError::Disconnected) => Err(ShotgunError::ServerShutdown),
+        };
+        self.resolve_gate();
+        Some(outcome)
+    }
+
+    /// Release the admission slot exactly once, at resolve time.
+    fn resolve_gate(&self) {
+        if let Some(gate) = self.gate.take() {
+            gate.release();
         }
     }
 }
 
 impl Drop for PendingPredict {
     fn drop(&mut self) {
-        if let Some(gate) = self.gate.take() {
-            gate.release();
+        // mark the row cancelled FIRST, then free the slot: a submit
+        // admitted by the freed slot must never be outrun by this
+        // row's flush (the flag is already visible to the collector)
+        if let Some(flag) = &self.cancelled {
+            flag.store(true, Ordering::Relaxed);
         }
+        self.resolve_gate();
     }
 }
 
@@ -483,17 +585,28 @@ fn submit_via(
     if let Err(overloaded) = admission.try_acquire() {
         counters.shed.fetch_add(1, Ordering::Relaxed);
         let _ = reply.send(Err(overloaded));
-        return PendingPredict { rx, gate: None };
+        return PendingPredict {
+            rx,
+            gate: Cell::new(None),
+            cancelled: None,
+        };
     }
+    let cancelled = Arc::new(AtomicBool::new(false));
     if let Some(tx) = tx {
         // a send error means the collector exited; the ticket then
         // reports ServerShutdown on wait()/poll()
-        let _ = tx.send(Envelope { name, req, reply });
+        let _ = tx.send(Envelope {
+            name,
+            req,
+            reply,
+            cancelled: Arc::clone(&cancelled),
+        });
         clock.kick();
     }
     PendingPredict {
         rx,
-        gate: Some(Arc::clone(admission)),
+        gate: Cell::new(Some(Arc::clone(admission))),
+        cancelled: Some(cancelled),
     }
 }
 
@@ -672,6 +785,122 @@ impl Drop for BatchServer {
     }
 }
 
+/// One received-but-unflushed request inside the collector.
+struct PendingRow {
+    /// Clock reading when the collector received the row — the row's
+    /// `max_wait` flush deadline is `recv_at + max_wait`.
+    recv_at: Tick,
+    env: Envelope,
+}
+
+/// The collector's pending buffer plus the per-flush selection policy
+/// (see [`FlushFairness`]). Rows live here between being received off
+/// the submit channel and riding a flush; cancelled rows are purged
+/// (and counted) at selection time, so a dropped ticket's row never
+/// reaches [`dispatch`].
+struct FlushQueue {
+    fairness: FlushFairness,
+    /// Arrival order — front is the oldest pending row.
+    rows: VecDeque<PendingRow>,
+    /// DeficitRr: rotates which model starts each flush's cycle so the
+    /// tail pass (when `max_batch` runs out mid-cycle) is not always
+    /// paid by the same tenant.
+    rotation: usize,
+}
+
+impl FlushQueue {
+    fn new(fairness: FlushFairness) -> FlushQueue {
+        FlushQueue {
+            fairness,
+            rows: VecDeque::new(),
+            rotation: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn push(&mut self, recv_at: Tick, env: Envelope) {
+        self.rows.push_back(PendingRow { recv_at, env });
+    }
+
+    /// When the oldest pending row was received (`None` when empty) —
+    /// its `max_wait` deadline schedules the next timer flush.
+    fn oldest_at(&self) -> Option<Tick> {
+        self.rows.front().map(|r| r.recv_at)
+    }
+
+    /// Purge rows whose ticket was dropped; count them as cancelled.
+    fn drop_cancelled(&mut self, counters: &ServerCounters) {
+        let before = self.rows.len();
+        self.rows
+            .retain(|r| !r.env.cancelled.load(Ordering::Relaxed));
+        let dropped = (before - self.rows.len()) as u64;
+        if dropped > 0 {
+            counters.cancelled.fetch_add(dropped, Ordering::Relaxed);
+        }
+    }
+
+    /// Take the rows riding this flush, per the fairness policy. Rows
+    /// of one model are always taken in FIFO arrival order (the
+    /// bit-identity contract); only which models' rows fill the flush
+    /// differs between policies.
+    fn select(&mut self, max_batch: usize, counters: &ServerCounters) -> Vec<Envelope> {
+        self.drop_cancelled(counters);
+        match self.fairness {
+            FlushFairness::FirstSeen => {
+                let take = self.rows.len().min(max_batch);
+                self.rows.drain(..take).map(|r| r.env).collect()
+            }
+            FlushFairness::DeficitRr { quantum } => {
+                let quantum = quantum.max(1);
+                // distinct pending names, first-seen order (no hashing
+                // — flushes are small and determinism matters)
+                let mut names: Vec<Arc<str>> = Vec::new();
+                for row in &self.rows {
+                    if !names.iter().any(|n| *n == row.env.name) {
+                        names.push(Arc::clone(&row.env.name));
+                    }
+                }
+                if names.is_empty() {
+                    return Vec::new();
+                }
+                let start = self.rotation % names.len();
+                self.rotation = self.rotation.wrapping_add(1);
+                let mut flush = Vec::with_capacity(max_batch.min(self.rows.len()));
+                let mut progressed = true;
+                'fill: while flush.len() < max_batch && progressed {
+                    progressed = false;
+                    for k in 0..names.len() {
+                        let name = &names[(start + k) % names.len()];
+                        let mut taken = 0;
+                        let mut i = 0;
+                        while i < self.rows.len() && taken < quantum {
+                            if flush.len() >= max_batch {
+                                break 'fill;
+                            }
+                            if self.rows[i].env.name == *name {
+                                let row = self.rows.remove(i).expect("index in range");
+                                flush.push(row.env);
+                                taken += 1;
+                                progressed = true;
+                            } else {
+                                i += 1;
+                            }
+                        }
+                    }
+                }
+                flush
+            }
+        }
+    }
+}
+
 fn collector_loop(
     store: &ModelStore,
     cfg: BatchConfig,
@@ -684,40 +913,49 @@ fn collector_loop(
     // the check and the park makes the park return immediately — no
     // lost wakeups on either clock
     let max_wait = dur_ticks(cfg.max_wait);
-    loop {
-        // wait (parked, no deadline) for the batch's first request
-        let first = loop {
+    let flush_cost = dur_ticks(cfg.flush_cost);
+    let mut pending = FlushQueue::new(cfg.fairness);
+    let mut open = true;
+    while open || !pending.is_empty() {
+        // collect until a flush is due: max_batch rows pending, the
+        // oldest pending row's max_wait deadline expired, or the last
+        // sender disconnected (then everything pending flushes out)
+        while open && pending.len() < cfg.max_batch {
             let tok = clock.park_token();
             match rx.try_recv() {
-                Ok(e) => break e,
-                Err(TryRecvError::Empty) => clock.park(tok, None),
-                Err(TryRecvError::Disconnected) => return, // drained
-            }
-        };
-        let mut batch = vec![first];
-        let deadline = clock.now().saturating_add(max_wait);
-        let mut disconnected = false;
-        while batch.len() < cfg.max_batch {
-            let tok = clock.park_token();
-            match rx.try_recv() {
-                Ok(e) => {
-                    batch.push(e);
+                Ok(env) => {
+                    pending.push(clock.now(), env);
                     continue;
                 }
                 Err(TryRecvError::Disconnected) => {
-                    disconnected = true;
+                    open = false;
                     break;
                 }
                 Err(TryRecvError::Empty) => {}
             }
-            if clock.now() >= deadline {
-                break; // max_wait expired: flush the partial batch
+            match pending.oldest_at() {
+                // nothing pending: wait (parked, no deadline) for the
+                // next batch's first request
+                None => clock.park(tok, None),
+                Some(t) => {
+                    let deadline = t.saturating_add(max_wait);
+                    if clock.now() >= deadline {
+                        break; // max_wait expired: flush what we have
+                    }
+                    clock.park(tok, Some(deadline));
+                }
             }
-            clock.park(tok, Some(deadline));
         }
-        dispatch(store, batch, counters);
-        if disconnected {
-            return;
+        let flush = pending.select(cfg.max_batch, counters);
+        if !flush.is_empty() {
+            dispatch(store, flush, counters);
+            if flush_cost > 0 {
+                // the flush occupies the dispatch path: nothing is
+                // collected while the cost elapses, so a backlog can
+                // form and the fairness policy arbitrates the next
+                // flush's composition
+                clock.sleep(flush_cost);
+            }
         }
     }
 }
@@ -1004,6 +1242,7 @@ mod tests {
                 max_batch: 1,
                 max_wait: Duration::from_millis(1),
                 max_in_flight: 2,
+                ..Default::default()
             },
         );
         // two live tickets fill the in-flight budget (held, not waited)
@@ -1021,5 +1260,165 @@ mod tests {
         assert_eq!(t4.wait().unwrap().score, 4.0);
         assert_eq!(t2.wait().unwrap().score, 2.0);
         assert_eq!(server.counters().shed.load(Ordering::Relaxed), 1);
+    }
+
+    /// Spawn a two-model router on a sim clock with a 50µs flush cost,
+    /// flood 6 rows for "a", then one row for "b" — the shape the
+    /// fairness policies disagree on.
+    fn flooded_router(
+        fairness: FlushFairness,
+    ) -> (
+        BatchServer,
+        Arc<crate::simserve::clock::SimClock>,
+        Vec<PendingPredict>,
+        PendingPredict,
+    ) {
+        let store = Arc::new(ModelStore::new());
+        store.publish("a", Model::from_dense(&[1.0], Loss::Squared, 0.1, "t"));
+        store.publish("b", Model::from_dense(&[1.0], Loss::Squared, 0.1, "t"));
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        let server = BatchServer::spawn_router_with_clock(
+            store,
+            BatchConfig {
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                flush_cost: Duration::from_micros(50),
+                fairness,
+                ..Default::default()
+            },
+            clock,
+        );
+        let flood: Vec<_> = (0..6)
+            .map(|i| server.submit_to("a", PredictRequest::new(vec![(0, i as f64)])))
+            .collect();
+        let victim = server.submit_to("b", PredictRequest::new(vec![(0, 9.0)]));
+        sim.until_quiescent();
+        (server, sim, flood, victim)
+    }
+
+    #[test]
+    fn deficit_rr_serves_every_pending_model_each_flush() {
+        // FirstSeen: the first flush (at tick 0) is all flood rows; the
+        // victim waits out the 50µs flush cost behind the backlog and
+        // only rides the SECOND flush (at the oldest leftover row's
+        // 100µs max_wait deadline)
+        let (mut server, sim, _flood, victim) = flooded_router(FlushFairness::FirstSeen);
+        assert!(
+            victim.poll().is_none(),
+            "FirstSeen lets the flood fill the first flush"
+        );
+        sim.advance_to(50_000); // flush cost elapses; partial batch waits
+        sim.until_quiescent();
+        assert!(victim.poll().is_none());
+        sim.advance_to(100_000); // leftover rows' max_wait deadline
+        sim.until_quiescent();
+        assert_eq!(victim.poll().expect("second flush").unwrap().score, 9.0);
+        server.shutdown();
+
+        // DeficitRr quantum=2: first flush = 2 flood rows + the victim
+        // + 1 more flood row — the victim rides the FIRST flush
+        let (mut server, sim, flood, victim) = flooded_router(FlushFairness::DeficitRr {
+            quantum: 2,
+        });
+        let resp = victim
+            .poll()
+            .expect("DeficitRr gives the victim a seat in the first flush")
+            .unwrap();
+        assert_eq!(resp.score.to_bits(), 9.0f64.to_bits());
+        // flood rows flush FIFO within their model: a0, a1 (quantum),
+        // then a2 on the second round-robin pass
+        for (i, t) in flood.iter().enumerate().take(3) {
+            let r = t.poll().expect("first flush").unwrap();
+            assert_eq!(r.score.to_bits(), (i as f64).to_bits());
+        }
+        assert!(flood[3].poll().is_none(), "backlog defers to flush 2");
+        // flush cost elapses at 50µs; the leftover partial batch then
+        // flushes at its max_wait deadline
+        sim.advance_to(50_000);
+        sim.until_quiescent();
+        assert!(flood[3].poll().is_none());
+        sim.advance_to(100_000);
+        sim.until_quiescent();
+        for (i, t) in flood.iter().enumerate().skip(3) {
+            let r = t.poll().expect("second flush").unwrap();
+            assert_eq!(r.score.to_bits(), (i as f64).to_bits());
+        }
+        assert_eq!(server.counters().batches.load(Ordering::Relaxed), 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn dropped_tickets_are_skipped_at_flush() {
+        // three rows sit on the max_wait timer; dropping two tickets
+        // before the deadline means the flush serves ONLY the survivor
+        // — the dropped rows never cost a decision_function row
+        let store = store_with(&[1.0], Loss::Squared);
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        let mut server = BatchServer::spawn_with_clock(
+            Arc::clone(&store),
+            "m",
+            BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
+            clock,
+        );
+        let t0 = server.submit(PredictRequest::new(vec![(0, 1.0)]));
+        let t1 = server.submit(PredictRequest::new(vec![(0, 2.0)]));
+        let t2 = server.submit(PredictRequest::new(vec![(0, 3.0)]));
+        sim.until_quiescent();
+        assert_eq!(sim.next_deadline(), Some(100_000));
+        drop(t0);
+        drop(t2);
+        sim.advance_to(100_000);
+        sim.until_quiescent();
+        let resp = t1.poll().expect("survivor served at the deadline").unwrap();
+        assert_eq!(resp.score, 2.0);
+        assert_eq!(server.counters().cancelled.load(Ordering::Relaxed), 2);
+        assert_eq!(
+            server.counters().requests.load(Ordering::Relaxed),
+            1,
+            "cancelled rows never reach the scoring call"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn resolved_tickets_release_their_admission_slot_when_kept_alive() {
+        // regression: the in-flight slot used to be released only on
+        // ticket DROP, so a caller keeping resolved tickets alive (a
+        // results cache, a driver draining by poll) starved admission
+        let store = store_with(&[1.0], Loss::Squared);
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        let mut server = BatchServer::spawn_with_clock(
+            Arc::clone(&store),
+            "m",
+            BatchConfig {
+                max_batch: 2,
+                max_wait: Duration::from_micros(100),
+                max_in_flight: 2,
+                ..Default::default()
+            },
+            clock,
+        );
+        let t1 = server.submit(PredictRequest::new(vec![(0, 1.0)]));
+        let t2 = server.submit(PredictRequest::new(vec![(0, 2.0)]));
+        sim.until_quiescent(); // max_batch reached: both served
+        assert_eq!(t1.poll().expect("served").unwrap().score, 1.0);
+        assert_eq!(t2.poll().expect("served").unwrap().score, 2.0);
+        // both tickets stay alive — but their slots are free, so the
+        // next submits are admitted, not shed
+        let t3 = server.submit(PredictRequest::new(vec![(0, 3.0)]));
+        let t4 = server.submit(PredictRequest::new(vec![(0, 4.0)]));
+        sim.until_quiescent();
+        assert_eq!(t3.poll().expect("admitted").unwrap().score, 3.0);
+        assert_eq!(t4.poll().expect("admitted").unwrap().score, 4.0);
+        assert_eq!(server.counters().shed.load(Ordering::Relaxed), 0);
+        drop((t1, t2, t3, t4));
+        server.shutdown();
     }
 }

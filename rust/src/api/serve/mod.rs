@@ -8,8 +8,11 @@
 //! * [`ModelStore`] ([`store`]) — versioned, hot-swappable named
 //!   models sharded over per-shard `RwLock`s by a consistent-hash ring
 //!   (a hot-swap on one model never stalls reads on another shard);
-//!   JSON persistence per name, shard-count independent on disk, and
-//!   stale-snapshot-proof reloads ([`StoreLoad`]).
+//!   JSON persistence per name, shard-count independent on disk,
+//!   stale-snapshot-proof reloads ([`StoreLoad`]), and per-name heat
+//!   tracking feeding an explicit [`ModelStore::rebalance`] that
+//!   re-homes hot names off a loaded shard through an epoch-published
+//!   routing overlay (readers never block).
 //! * [`BatchPredictor`] / [`BatchServer`] ([`batch`]) — coalesce
 //!   predict requests into one [`Design`](crate::sparsela::Design)
 //!   batch per flush (configurable `max_batch`/`max_wait`), amortizing
@@ -17,12 +20,17 @@
 //!   bit-identical to one-at-a-time [`Model::predict`](crate::api::Model::predict).
 //!   `spawn_router` serves MANY model names through one collector
 //!   (requests carry a name; each flush partitions by `(name, version)`
-//!   and dispatches one coalesced batch per group), and a bounded
+//!   and dispatches one coalesced batch per group), a bounded
 //!   `max_in_flight` admission gate sheds overload with typed
-//!   [`Overloaded`](crate::api::ShotgunError::Overloaded) rejections.
+//!   [`Overloaded`](crate::api::ShotgunError::Overloaded) rejections,
+//!   a [`FlushFairness`] policy (first-seen or deficit round-robin)
+//!   decides whose rows ride an over-subscribed flush, and dropping a
+//!   [`PendingPredict`] ticket cancels its row — the collector skips
+//!   it at flush.
 //! * [`FitQueue`] ([`queue`]) — a bounded multi-worker fit queue with
 //!   priority lanes ([`JobPriority`]: High / Normal / Batch), per-job
-//!   deadlines (expired jobs fail typed at dequeue, never run),
+//!   deadlines (earliest-deadline-first dequeue within a lane; expired
+//!   jobs fail typed at dequeue, never run),
 //!   cancellation of queued AND running jobs, typed job states, per-job
 //!   engine/budget settings, shared
 //!   [`ProblemCache`](crate::objective::ProblemCache) reuse across jobs
@@ -54,8 +62,8 @@ pub mod replay;
 pub mod store;
 
 pub use batch::{
-    batch_design, predict_coalesced, BatchConfig, BatchPredictor, BatchServer, PendingPredict,
-    PredictRequest, PredictResponse, ServerCounters, Submitter,
+    batch_design, predict_coalesced, BatchConfig, BatchPredictor, BatchServer, FlushFairness,
+    PendingPredict, PredictRequest, PredictResponse, ServerCounters, Submitter,
 };
 pub use queue::{
     CacheHub, FitFault, FitJob, FitQueue, JobId, JobLambda, JobPriority, JobSolver, JobState,

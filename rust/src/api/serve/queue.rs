@@ -18,10 +18,19 @@
 //!   previously rewritten to 1 silently, which off-by-oned that law.
 //! * **Priorities**: each job carries a [`JobPriority`]
 //!   (`High`/`Normal`/`Batch`); workers always drain higher lanes
-//!   first, FIFO within a lane.
-//! * **Deadlines**: a job with [`deadline_at`](FitJob::deadline_at) in
-//!   the past *at dequeue time* never runs — it fails with the typed
-//!   `DeadlineExpired`, releasing its worker for live work.
+//!   first. Lane priority DOMINATES deadlines: a `High` job with no
+//!   deadline still runs before a `Normal` job due in a microsecond.
+//! * **Deadlines + EDF**: a job with
+//!   [`deadline_at`](FitJob::deadline_at) in the past *at dequeue
+//!   time* never runs — it fails with the typed `DeadlineExpired`,
+//!   releasing its worker for live work. Within a lane, dequeue is
+//!   earliest-deadline-first: workers pop the job minimizing
+//!   `(deadline, id)`, with deadline-free jobs sorting last (their
+//!   deadline reads as `Tick::MAX`). The id tiebreak makes the pop
+//!   order a pure function of queue contents — ids are assigned
+//!   monotonically at submit, so a lane with no deadlines at all
+//!   degenerates to exactly the old FIFO lane, and determinism (and
+//!   the worker-count-independence law) holds under EDF too.
 //! * **Cancellation**: [`cancel`](FitQueue::cancel) removes a queued
 //!   job outright and raises the running job's
 //!   [`StopFlag`](crate::solvers::common::StopFlag) so the solve loop
@@ -87,9 +96,10 @@ pub enum FitFault {
 }
 
 /// Scheduling class of a [`FitJob`]: workers always drain `High`
-/// before `Normal` before `Batch`, FIFO within a class. Priority picks
-/// the ORDER jobs run in, never whether they run — the capacity bound
-/// and the saturation law are priority-independent.
+/// before `Normal` before `Batch`; within a class, earliest deadline
+/// first with FIFO (job-id) tiebreak. Priority picks the ORDER jobs
+/// run in, never whether they run — the capacity bound and the
+/// saturation law are priority-independent.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum JobPriority {
     /// Latency-sensitive (an operator retrain, an urgent hot-swap).
@@ -182,6 +192,8 @@ impl FitJob {
 
     /// Fail (typed `DeadlineExpired`) instead of running if no worker
     /// dequeues the job by clock instant `at` (queue-clock ticks).
+    /// Within its priority lane the job is also dequeued
+    /// earliest-deadline-first, ahead of deadline-free jobs.
     pub fn deadline_at(mut self, at: Tick) -> Self {
         self.deadline = Some(at);
         self
@@ -367,10 +379,23 @@ impl PrioQueue {
         }
     }
 
+    /// Index of the item a worker should take from `lane`: minimum
+    /// `(deadline, id)`, deadline-free jobs reading as `Tick::MAX` so
+    /// they sort after every dated job. Ids are assigned monotonically
+    /// at submit, so the id tiebreak IS FIFO order — a lane with no
+    /// deadlines pops exactly like the old `pop_front` lane, and the
+    /// choice is a pure function of queue contents (deterministic
+    /// regardless of worker count or wakeup interleaving).
+    fn edf_index(lane: &VecDeque<WorkItem>) -> Option<usize> {
+        (0..lane.len())
+            .min_by_key(|&i| (lane[i].job.deadline.unwrap_or(Tick::MAX), lane[i].id))
+    }
+
     fn try_pop(&self) -> Popped {
         let mut state = self.lock();
         for lane in &mut state.lanes {
-            if let Some(item) = lane.pop_front() {
+            if let Some(i) = Self::edf_index(lane) {
+                let item = lane.remove(i).expect("edf index in bounds");
                 self.space.notify_one();
                 return Popped::Item(item);
             }
@@ -1036,6 +1061,54 @@ mod tests {
         }
         assert!(matches!(queue.status(alive), Some(JobState::Done(_))));
         assert!(matches!(queue.status(wedge), Some(JobState::Done(_))));
+    }
+
+    #[test]
+    fn within_a_lane_earliest_deadline_dequeues_first() {
+        let ds = dataset(12);
+        let clock = Clock::sim();
+        let sim = Arc::clone(clock.sim_handle().unwrap());
+        let queue = FitQueue::with_clock(1, 16, None, clock).unwrap();
+        // wedge the single worker for 10ms of virtual time
+        let _wedge = queue
+            .submit(job(&ds, 0.5).fault(FitFault::SlowFit { cost: 10_000_000 }))
+            .unwrap();
+        sim.until_quiescent();
+        // Normal-lane jobs arrive with deadlines in REVERSE urgency
+        // order (latest first, no-deadline in the middle), 1ms each
+        let slow = FitFault::SlowFit { cost: 1_000_000 };
+        let late = queue
+            .submit(job(&ds, 0.45).deadline_at(30_000_000).fault(slow))
+            .unwrap();
+        let dateless = queue.submit(job(&ds, 0.42).fault(slow)).unwrap();
+        let early = queue
+            .submit(job(&ds, 0.4).deadline_at(12_000_000).fault(slow))
+            .unwrap();
+        // lane priority dominates: a deadline-FREE High job still
+        // beats every dated Normal job
+        let high = queue
+            .submit(job(&ds, 0.35).priority(JobPriority::High).fault(slow))
+            .unwrap();
+        sim.until_quiescent();
+        sim.advance_to(10_000_000);
+        sim.until_quiescent();
+        assert!(matches!(queue.status(high), Some(JobState::Running)));
+        // then EDF within Normal: early (due 12ms) before late (due
+        // 30ms) before the deadline-free job, despite arrival order
+        sim.advance_to(11_000_000);
+        sim.until_quiescent();
+        assert!(matches!(queue.status(early), Some(JobState::Running)));
+        assert!(matches!(queue.status(late), Some(JobState::Queued)));
+        sim.advance_to(12_000_000);
+        sim.until_quiescent();
+        assert!(matches!(queue.status(late), Some(JobState::Running)));
+        assert!(matches!(queue.status(dateless), Some(JobState::Queued)));
+        while let Some(d) = sim.next_deadline() {
+            sim.advance_to(d);
+            sim.until_quiescent();
+        }
+        assert!(matches!(queue.status(early), Some(JobState::Done(_))));
+        assert!(matches!(queue.status(dateless), Some(JobState::Done(_))));
     }
 
     #[test]

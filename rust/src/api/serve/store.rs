@@ -20,6 +20,20 @@
 //! read-only via [`shard_of`](ModelStore::shard_of) for tests and
 //! diagnostics.
 //!
+//! Hot-shard rebalancing: the hash route is static, so one hot name
+//! can pin a shard while its neighbours idle. The store counts routed
+//! reads per shard ([`shard_loads`](ModelStore::shard_loads)) and per
+//! name, and an explicit [`rebalance`](ModelStore::rebalance) call
+//! greedily re-homes the hottest names from the most- to the
+//! least-loaded shard via an *overlay* map consulted before the ring.
+//! The overlay is epoch-published (an `Arc` pointer swap under a
+//! momentary write lock), so readers never wait on a rebalance beyond
+//! the same brief per-shard lock a hot-swap already implies; write
+//! paths re-check their route after locking so a racing publish can
+//! never strand a version in an abandoned shard. Routing stays a pure
+//! function of (name, shard count, overlay epoch) — deterministic
+//! between explicit `rebalance()` calls.
+//!
 //! Versions are per-name and monotonic within a store's lifetime —
 //! including across [`load_dir`](ModelStore::load_dir), which skips
 //! persisted records that are not newer than what the store already
@@ -34,7 +48,8 @@ use super::super::model::Model;
 use crate::util::json::{escape, Json};
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::{Arc, PoisonError, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError, RwLock};
 
 /// One published model: immutable after [`ModelStore::publish`].
 #[derive(Clone, Debug)]
@@ -130,6 +145,21 @@ pub struct ModelStore {
     /// Consistent-hash ring: sorted `(point, shard)` pairs. A name
     /// lands on the first vnode at or after its hash, wrapping.
     ring: Vec<(u64, usize)>,
+    /// Routed reads per shard (diagnostics and rebalance studies).
+    hits: Vec<AtomicU64>,
+    /// Per-name read counters for every published name — the heat
+    /// signal [`rebalance`](ModelStore::rebalance) ranks names by.
+    /// Read-locked to bump (write only when a name first appears).
+    heat: RwLock<BTreeMap<String, AtomicU64>>,
+    /// Rebalance overlay: names routed AWAY from their ring shard.
+    /// Epoch-published — writers build a new map and swap the `Arc`
+    /// under a momentary write lock, so route lookups never wait on
+    /// an in-progress rebalance.
+    overlay: RwLock<Arc<BTreeMap<String, usize>>>,
+    /// Serializes concurrent [`rebalance`](ModelStore::rebalance)
+    /// calls (route reads inside a move must not interleave with
+    /// another mover's epoch flips).
+    rebalancing: Mutex<()>,
 }
 
 impl Default for ModelStore {
@@ -159,6 +189,10 @@ impl ModelStore {
         ModelStore {
             shards: (0..n).map(|_| RwLock::new(BTreeMap::new())).collect(),
             ring,
+            hits: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            heat: RwLock::new(BTreeMap::new()),
+            overlay: RwLock::new(Arc::new(BTreeMap::new())),
+            rebalancing: Mutex::new(()),
         }
     }
 
@@ -167,11 +201,28 @@ impl ModelStore {
         self.shards.len()
     }
 
-    /// Which shard `name` lives on — stable for a given shard count.
-    pub fn shard_of(&self, name: &str) -> usize {
+    /// The consistent-hash (ring) shard for `name`, ignoring any
+    /// rebalance overlay.
+    fn ring_shard(&self, name: &str) -> usize {
         let h = fnv1a(name.as_bytes());
         let i = self.ring.partition_point(|&(point, _)| point < h);
         self.ring[if i == self.ring.len() { 0 } else { i }].1
+    }
+
+    /// Which shard `name` lives on: the rebalance overlay when it
+    /// routes the name, the hash ring otherwise. Stable for a given
+    /// shard count between explicit [`rebalance`](Self::rebalance)
+    /// calls.
+    pub fn shard_of(&self, name: &str) -> usize {
+        let overlay = self
+            .overlay
+            .read()
+            .unwrap_or_else(PoisonError::into_inner);
+        if let Some(&shard) = overlay.get(name) {
+            return shard;
+        }
+        drop(overlay);
+        self.ring_shard(name)
     }
 
     /// Read access that outlives a writer's panic: serving keeps going
@@ -188,11 +239,63 @@ impl ModelStore {
             .unwrap_or_else(PoisonError::into_inner)
     }
 
+    /// Lock `name`'s shard, RE-CHECKING the route after acquisition: a
+    /// concurrent [`rebalance`](Self::rebalance) may flip the overlay
+    /// epoch between the route lookup and the lock grant, and touching
+    /// the stale shard would read (or worse, write) where readers no
+    /// longer look. The mover holds BOTH shard write locks across an
+    /// epoch flip, so once this lock is granted the re-checked route
+    /// cannot change again until the guard drops.
+    fn read_routed(
+        &self,
+        name: &str,
+    ) -> (usize, std::sync::RwLockReadGuard<'_, BTreeMap<String, Arc<ModelRecord>>>) {
+        loop {
+            let shard = self.shard_of(name);
+            let guard = self.read(shard);
+            if self.shard_of(name) == shard {
+                return (shard, guard);
+            }
+        }
+    }
+
+    /// Write-lock twin of [`read_routed`](Self::read_routed).
+    fn write_routed(
+        &self,
+        name: &str,
+    ) -> (usize, std::sync::RwLockWriteGuard<'_, BTreeMap<String, Arc<ModelRecord>>>) {
+        loop {
+            let shard = self.shard_of(name);
+            let guard = self.write(shard);
+            if self.shard_of(name) == shard {
+                return (shard, guard);
+            }
+        }
+    }
+
+    /// Ensure `name` has a heat counter (created cold). Read-lock fast
+    /// path; the write lock is taken only the first time a name is
+    /// seen.
+    fn note_name(&self, name: &str) {
+        {
+            let heat = self.heat.read().unwrap_or_else(PoisonError::into_inner);
+            if heat.contains_key(name) {
+                return;
+            }
+        }
+        self.heat
+            .write()
+            .unwrap_or_else(PoisonError::into_inner)
+            .entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0));
+    }
+
     /// Publish `model` under `name`, returning the new version. The
     /// swap is atomic: concurrent readers see the old record or this
     /// one, both complete. Only `name`'s shard is locked.
     pub fn publish(&self, name: &str, model: Model) -> u64 {
-        let mut table = self.write(self.shard_of(name));
+        self.note_name(name);
+        let (_, mut table) = self.write_routed(name);
         let version = table.get(name).map(|r| r.version + 1).unwrap_or(1);
         table.insert(
             name.to_string(),
@@ -206,9 +309,20 @@ impl ModelStore {
     }
 
     /// The current record for `name` (an `Arc` clone — holding it keeps
-    /// that version alive across later publishes).
+    /// that version alive across later publishes). Counts the access
+    /// toward the routed shard's load and the name's heat.
     pub fn get(&self, name: &str) -> Option<Arc<ModelRecord>> {
-        self.read(self.shard_of(name)).get(name).cloned()
+        let (shard, table) = self.read_routed(name);
+        self.hits[shard].fetch_add(1, Ordering::Relaxed);
+        if let Some(counter) = self
+            .heat
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(name)
+        {
+            counter.fetch_add(1, Ordering::Relaxed);
+        }
+        table.get(name).cloned()
     }
 
     /// Like [`get`](ModelStore::get) but typed for serving paths.
@@ -219,9 +333,30 @@ impl ModelStore {
         })
     }
 
-    /// Remove `name`, returning its last record.
+    /// Remove `name`, returning its last record. Drops the name's heat
+    /// counter and any overlay route, so a later re-publish starts
+    /// cold on the ring shard.
     pub fn remove(&self, name: &str) -> Option<Arc<ModelRecord>> {
-        self.write(self.shard_of(name)).remove(name)
+        let rec = {
+            let (_, mut table) = self.write_routed(name);
+            table.remove(name)
+        };
+        if rec.is_some() {
+            self.heat
+                .write()
+                .unwrap_or_else(PoisonError::into_inner)
+                .remove(name);
+            let mut overlay = self
+                .overlay
+                .write()
+                .unwrap_or_else(PoisonError::into_inner);
+            if overlay.contains_key(name) {
+                let mut map = (**overlay).clone();
+                map.remove(name);
+                *overlay = Arc::new(map);
+            }
+        }
+        rec
     }
 
     /// Registered names, sorted (merged across shards).
@@ -239,6 +374,142 @@ impl ModelStore {
 
     pub fn is_empty(&self) -> bool {
         (0..self.shards.len()).all(|s| self.read(s).is_empty())
+    }
+
+    /// Routed reads per shard since construction (index = shard).
+    /// Compare snapshots before/after a traffic window to measure how
+    /// skewed the route is and what [`rebalance`](Self::rebalance)
+    /// bought.
+    pub fn shard_loads(&self) -> Vec<u64> {
+        self.hits.iter().map(|h| h.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Names currently routed away from their ring shard by the
+    /// rebalance overlay, with their destination shard (name-sorted).
+    pub fn overlay_routes(&self) -> Vec<(String, usize)> {
+        self.overlay
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .iter()
+            .map(|(n, &s)| (n.clone(), s))
+            .collect()
+    }
+
+    /// Spread hot names across shards: greedily re-home the hottest
+    /// name of the most-loaded shard onto the least-loaded shard, as
+    /// long as the move strictly shrinks the load gap (per-name heat
+    /// counters are the load signal). Returns how many names moved.
+    ///
+    /// The policy is deterministic: shard ties break on the lowest
+    /// index, heat ties on the lexicographically smallest name, so the
+    /// same access history always yields the same placement.
+    /// Re-homing is atomic per name (see `move_name`) — readers and
+    /// writers racing a rebalance see either the old or the new route,
+    /// never a missing name.
+    pub fn rebalance(&self) -> usize {
+        let _serial = self
+            .rebalancing
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        // name-sorted heat snapshot (BTreeMap iteration order)
+        let heat: Vec<(String, u64)> = self
+            .heat
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .iter()
+            .map(|(n, c)| (n.clone(), c.load(Ordering::Relaxed)))
+            .collect();
+        let shards = self.shards.len();
+        let mut load = vec![0u64; shards];
+        // (heat index, current shard) per name
+        let mut placed: Vec<(usize, usize)> = Vec::with_capacity(heat.len());
+        for (i, (name, count)) in heat.iter().enumerate() {
+            let s = self.shard_of(name);
+            load[s] += count;
+            placed.push((i, s));
+        }
+        let mut moves: Vec<(usize, usize)> = Vec::new();
+        loop {
+            let (mut smax, mut smin) = (0usize, 0usize);
+            for s in 1..shards {
+                if load[s] > load[smax] {
+                    smax = s;
+                }
+                if load[s] < load[smin] {
+                    smin = s;
+                }
+            }
+            let gap = load[smax] - load[smin];
+            // hottest name on the loaded shard; strict `>` keeps the
+            // FIRST (smallest-name) maximum on ties
+            let mut pick: Option<usize> = None;
+            for (pi, &(hi, s)) in placed.iter().enumerate() {
+                if s == smax
+                    && heat[hi].1 > 0
+                    && pick.is_none_or(|p| heat[hi].1 > heat[placed[p].0].1)
+                {
+                    pick = Some(pi);
+                }
+            }
+            let Some(pi) = pick else { break };
+            let count = heat[placed[pi].0].1;
+            // moving `count` shrinks the pair's gap only if count < gap
+            // (the sum-of-squares potential strictly drops, so this
+            // loop terminates)
+            if count >= gap {
+                break;
+            }
+            load[smax] -= count;
+            load[smin] += count;
+            placed[pi].1 = smin;
+            moves.push((placed[pi].0, smin));
+        }
+        let mut moved = 0;
+        for (hi, dst) in moves {
+            if self.move_name(&heat[hi].0, dst) {
+                moved += 1;
+            }
+        }
+        moved
+    }
+
+    /// Atomically re-home `name` onto shard `dst`: the record crosses
+    /// tables and the overlay epoch flips while BOTH shard write locks
+    /// are held, so a racing reader either routes to the old shard
+    /// (waiting on its lock like any hot-swap) or routes to the new
+    /// shard after the flip — it never observes the name absent
+    /// mid-flight. Writers re-check their route after locking
+    /// (`write_routed`), so a racing publish cannot strand a version
+    /// in the abandoned shard.
+    fn move_name(&self, name: &str, dst: usize) -> bool {
+        let src = self.shard_of(name);
+        if src == dst {
+            return false;
+        }
+        let (first, second) = (src.min(dst), src.max(dst));
+        let first_g = self.write(first);
+        let second_g = self.write(second);
+        let (mut src_g, mut dst_g) = if src == first {
+            (first_g, second_g)
+        } else {
+            (second_g, first_g)
+        };
+        let Some(rec) = src_g.remove(name) else {
+            return false; // nothing published under the name
+        };
+        dst_g.insert(name.to_string(), rec);
+        let mut overlay = self
+            .overlay
+            .write()
+            .unwrap_or_else(PoisonError::into_inner);
+        let mut map = (**overlay).clone();
+        if dst == self.ring_shard(name) {
+            map.remove(name); // moved back home — no route needed
+        } else {
+            map.insert(name.to_string(), dst);
+        }
+        *overlay = Arc::new(map);
+        true
     }
 
     /// Filesystem-safe file name for a record. Model names are
@@ -317,7 +588,8 @@ impl ModelStore {
                 reason: format!("read: {e}"),
             })?;
             let rec = ModelRecord::from_json(&text)?;
-            let mut table = self.write(self.shard_of(&rec.name));
+            self.note_name(&rec.name);
+            let (_, mut table) = self.write_routed(&rec.name);
             match table.get(&rec.name) {
                 Some(cur) if cur.version >= rec.version => report.stale += 1,
                 _ => {
@@ -464,6 +736,90 @@ mod tests {
         );
         assert_eq!(restored.get("tier/premium").unwrap().model.to_dense(), vec![1.0]);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rebalance_rehomes_hot_names_and_routing_follows() {
+        let store = ModelStore::with_shards(2);
+        let names: Vec<String> = (0..24).map(|i| format!("m{i}")).collect();
+        for (i, n) in names.iter().enumerate() {
+            store.publish(n, model(&[i as f64]));
+        }
+        // uniform traffic: the ring's placement skew IS the hot shard
+        for n in &names {
+            for _ in 0..10 {
+                store.get(n).unwrap();
+            }
+        }
+        let loads = store.shard_loads();
+        assert_eq!(loads.iter().sum::<u64>(), 240);
+        let moved = store.rebalance();
+        assert!(moved >= 1, "skewed placement should shed names");
+        assert!(!store.overlay_routes().is_empty());
+        // greedy fixed point: an immediate second pass has nothing to do
+        assert_eq!(store.rebalance(), 0);
+        // every overlay route is what shard_of now reports
+        for (name, dst) in store.overlay_routes() {
+            assert_eq!(store.shard_of(&name), dst);
+        }
+        // records survived the move bit-for-bit, versions intact
+        for (i, n) in names.iter().enumerate() {
+            let rec = store.get(n).unwrap();
+            assert_eq!(rec.version, 1);
+            assert_eq!(rec.model.to_dense(), vec![i as f64]);
+        }
+        // publish-after-move lands on the overlay shard and versions on
+        let (moved_name, dst) = store.overlay_routes().remove(0);
+        assert_eq!(store.publish(&moved_name, model(&[42.0])), 2);
+        assert_eq!(store.shard_of(&moved_name), dst);
+        assert_eq!(store.get(&moved_name).unwrap().model.to_dense(), vec![42.0]);
+        // removal clears the overlay route; a re-publish starts cold
+        store.remove(&moved_name);
+        assert!(store
+            .overlay_routes()
+            .iter()
+            .all(|(n, _)| n != &moved_name));
+        assert_eq!(store.publish(&moved_name, model(&[7.0])), 1);
+        // same history on a fresh store -> identical placement
+        let twin = ModelStore::with_shards(2);
+        for (i, n) in names.iter().enumerate() {
+            twin.publish(n, model(&[i as f64]));
+        }
+        for n in &names {
+            for _ in 0..10 {
+                twin.get(n).unwrap();
+            }
+        }
+        twin.rebalance();
+        let mut expect = store.overlay_routes();
+        // the moved_name was removed+republished on `store`, dropping
+        // its route there; ignore it for the comparison
+        expect.retain(|(n, _)| n != &moved_name);
+        let mut got = twin.overlay_routes();
+        got.retain(|(n, _)| n != &moved_name);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn rebalance_without_skew_or_heat_is_a_no_op() {
+        // single shard: nowhere to move
+        let store = ModelStore::with_shards(1);
+        store.publish("only", model(&[1.0]));
+        for _ in 0..10 {
+            store.get("only").unwrap();
+        }
+        assert_eq!(store.rebalance(), 0);
+        // no heat: nothing to rank
+        let store = ModelStore::with_shards(4);
+        assert_eq!(store.rebalance(), 0);
+        store.publish("x", model(&[1.0]));
+        assert_eq!(store.rebalance(), 0);
+        // one hot name: moving the entire load never shrinks the gap
+        for _ in 0..10 {
+            store.get("x").unwrap();
+        }
+        assert_eq!(store.rebalance(), 0);
+        assert!(store.overlay_routes().is_empty());
     }
 
     #[test]

@@ -50,6 +50,7 @@ USAGE:
               [--gen-requests out.jsonl] [--max-batch 64]
               [--max-wait-us 2000] [--clients 4] [--fit-workers 2]
               [--models N] [--shards S] [--max-in-flight M]
+              [--fairness firstseen|drr[:Q]]
               [--bench-out BENCH_serving.json] [--store-out dir]
               [--compare-unbatched]
   repro sim [--smoke] [--seed 42] [--scenario <name>]
@@ -339,7 +340,8 @@ fn cmd_solve(args: &Args) -> Result<(), ShotgunError> {
 /// `--bench-out` (default `BENCH_serving.json`).
 fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
     use shotgun::api::serve::{
-        replay, replay_multi, BatchConfig, FitJob, FitQueue, JobState, ModelStore, ReplayConfig,
+        replay, replay_multi, BatchConfig, FitJob, FitQueue, FlushFairness, JobState, ModelStore,
+        ReplayConfig,
     };
     use shotgun::testkit::requests::{self, StreamSpec};
     use std::sync::Arc;
@@ -423,20 +425,34 @@ fn cmd_serve(args: &Args) -> Result<(), ShotgunError> {
     );
 
     // --- serve side: replay the stream through the batching server ---
+    // --fairness firstseen (default) | drr[:quantum] — the flush-time
+    // row selection policy when the backlog exceeds max_batch
+    let fairness_arg = args.get_or("fairness", "firstseen");
+    let fairness = match fairness_arg.as_str() {
+        "firstseen" => FlushFairness::FirstSeen,
+        "drr" => FlushFairness::DeficitRr { quantum: 4 },
+        s => match s.strip_prefix("drr:").and_then(|q| q.parse().ok()) {
+            Some(quantum) if quantum > 0 => FlushFairness::DeficitRr { quantum },
+            _ => panic!("unknown --fairness {s:?} (firstseen | drr[:quantum])"),
+        },
+    };
     let cfg = ReplayConfig {
         batch: BatchConfig {
             max_batch: args.usize_or("max-batch", 64),
             max_wait: Duration::from_micros(args.usize_or("max-wait-us", 2_000) as u64),
             max_in_flight: args.usize_or("max-in-flight", usize::MAX),
+            fairness,
+            ..BatchConfig::default()
         },
         clients: args.usize_or("clients", 4),
     };
     println!(
-        "replaying {} requests (max_batch {}, max_wait {}us, {} clients)...",
+        "replaying {} requests (max_batch {}, max_wait {}us, {} clients, fairness {:?})...",
         request_stream.len(),
         cfg.batch.max_batch,
         cfg.batch.max_wait.as_micros(),
-        cfg.clients
+        cfg.clients,
+        cfg.batch.fairness
     );
     let stats = replay(Arc::clone(&store), "default", &request_stream, &cfg)?;
     println!("{}", stats.report_line());

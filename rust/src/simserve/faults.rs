@@ -6,8 +6,9 @@
 //! it. None of them bypass production code: a [`Fault::WorkerPanic`]
 //! is a real `panic!` inside a real `FitQueue` worker (caught by the
 //! queue's own `catch_unwind` machinery), a [`Fault::HotSwap`] is a
-//! real refit job publishing into the live [`ModelStore`]
-//! (crate::api::serve::ModelStore), and [`Fault::QueueSaturation`]
+//! real refit job publishing into the live
+//! [`ModelStore`](crate::api::serve::ModelStore), and
+//! [`Fault::QueueSaturation`]
 //! drives the bounded channel's typed overload rejections. The delayed
 //! flush path (a partial batch sitting on the `max_wait` timer) needs
 //! no explicit fault — any arrival gap longer than `max_wait` (the
@@ -64,6 +65,35 @@ pub enum Fault {
         expired_jobs: usize,
         fill_cost: Tick,
     },
+    /// At `at`, wedge every fit worker — ONE wedge costing `job_cost`
+    /// ticks, the rest costing long enough to sit out the whole burst —
+    /// then submit `jobs` Normal-lane jobs in REVERSE deadline order
+    /// (latest deadline first), each costing `job_cost` and with
+    /// deadline rank `r` (0 = earliest) due at `at + job_cost*(r+2)`.
+    /// The one short-wedged worker frees at `at + job_cost` and drains
+    /// the burst earliest-deadline-first, dequeuing rank `r` at
+    /// `at + job_cost*(r+1)` — inside its deadline, so EVERY job meets
+    /// its deadline regardless of worker count. Under the old FIFO
+    /// lane the earliest deadline would be popped LAST and expire for
+    /// any `jobs >= 3`.
+    DeadlineBurst {
+        at: Tick,
+        jobs: usize,
+        job_cost: Tick,
+    },
+    /// At `at`, the driver DROPS the `count` oldest unresolved predict
+    /// tickets — clients that shed or abandoned their requests while
+    /// the rows sat on the router's `max_wait` timer. The router must
+    /// release their admission slots immediately and skip the rows at
+    /// flush (no `decision_function` work for a reader that left).
+    TicketDrop { at: Tick, count: usize },
+    /// At `at`, the driver calls
+    /// [`ModelStore::rebalance`](crate::api::serve::ModelStore::rebalance):
+    /// per-name heat
+    /// accumulated so far re-homes hot names off the loaded shard, and
+    /// the runner snapshots per-shard load before/after to measure the
+    /// occupancy gain.
+    Rebalance { at: Tick },
 }
 
 impl Fault {
@@ -74,13 +104,19 @@ impl Fault {
             | Fault::HotSwap { at, .. }
             | Fault::QueueSaturation { at, .. }
             | Fault::ClientStall { at, .. }
-            | Fault::PriorityBurst { at, .. } => at,
+            | Fault::PriorityBurst { at, .. }
+            | Fault::DeadlineBurst { at, .. }
+            | Fault::TicketDrop { at, .. }
+            | Fault::Rebalance { at } => at,
         }
     }
 
     /// Does this fault need a `FitQueue` in the scenario?
     pub fn needs_queue(&self) -> bool {
-        !matches!(self, Fault::ClientStall { .. })
+        !matches!(
+            self,
+            Fault::ClientStall { .. } | Fault::TicketDrop { .. } | Fault::Rebalance { .. }
+        )
     }
 }
 
@@ -113,6 +149,16 @@ mod tests {
                 expired_jobs: 2,
                 fill_cost: 13,
             },
+            Fault::DeadlineBurst {
+                at: 6 * SECOND,
+                jobs: 5,
+                job_cost: 17,
+            },
+            Fault::TicketDrop {
+                at: 7 * SECOND,
+                count: 3,
+            },
+            Fault::Rebalance { at: 8 * SECOND },
         ];
         for (i, f) in faults.iter().enumerate() {
             assert_eq!(f.at(), (i as u64 + 1) * SECOND);
@@ -120,5 +166,8 @@ mod tests {
         assert!(faults[..3].iter().all(Fault::needs_queue));
         assert!(!faults[3].needs_queue());
         assert!(faults[4].needs_queue());
+        assert!(faults[5].needs_queue());
+        assert!(!faults[6].needs_queue());
+        assert!(!faults[7].needs_queue());
     }
 }

@@ -23,11 +23,14 @@
 //!   seed → bit-identical stream.
 //! * [`faults`] — scheduled disturbances injected through production
 //!   code paths: worker panic mid-fit, hot swap under load, bounded
-//!   queue saturation, slow-reader stalls.
+//!   queue saturation, slow-reader stalls, reverse-order deadline
+//!   bursts (EDF vs FIFO), driver-side ticket drops (cancellation
+//!   propagation), and store rebalancing.
 //! * [`scenario`] — the event-loop runner: drive a named scenario to
 //!   quiescence, emitting a typed [`Outcome`](scenario::Outcome)
 //!   (throughput, virtual latency percentiles, fault counters,
-//!   swap-visibility lag) while checking every response bit-for-bit
+//!   swap-visibility lag, victim-tenant p99, deadline hit counts,
+//!   rebalance load shares) while checking every response bit-for-bit
 //!   against sequential predict.
 //! * [`report`] — the canonical scenario [`suite`](report::suite) and
 //!   the `BENCH_simserve.json` document behind `repro sim`.

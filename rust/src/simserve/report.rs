@@ -19,6 +19,20 @@
 //! * `derived.priority_queue_lead_jobs` — Batch fillers the
 //!   `priority-inversion` High job beat to completion (must equal the
 //!   burst size).
+//! * `derived.fairness_p99_ratio` — the non-flooding tenant's p99 under
+//!   `FirstSeen` over its p99 under `DeficitRr`, from the
+//!   `flooding-tenant-*` A/B pair (same workload, same seed; > 1 means
+//!   deficit round-robin protected the victim).
+//! * `derived.edf_deadline_hit_rate` — fraction of the
+//!   `edf-beats-fifo` dated jobs that completed inside their deadlines
+//!   (1.0 when EDF works; plain FIFO would expire the earliest).
+//! * `derived.cancelled_flush_rows` — pending rows the router skipped
+//!   at flush in `dropped-ticket-no-work` because their ticket was
+//!   dropped (cancellation propagation: shed clients cost no
+//!   `decision_function` work).
+//! * `derived.rebalance_p99_gain` — hottest shard's share of routed
+//!   store reads before over after the `hot-shard-rebalance` move
+//!   (> 1 means rebalancing actually spread the heat).
 //!
 //! Every number in the report is virtual-time deterministic: same
 //! suite + seed → byte-identical JSON, on any machine.
@@ -27,7 +41,7 @@ use super::clock::{Tick, SECOND};
 use super::faults::Fault;
 use super::scenario::{run, Outcome, Scenario};
 use super::workload::{RateCurve, WorkloadSpec};
-use crate::api::serve::BatchConfig;
+use crate::api::serve::{BatchConfig, FlushFairness};
 use crate::api::ShotgunError;
 use crate::objective::Loss;
 use std::time::Duration;
@@ -37,7 +51,7 @@ const MS: Tick = SECOND / 1000;
 
 /// The scenario names the acceptance gate requires (a subset of
 /// [`suite`]; `tests/simserve.rs` checks coverage).
-pub const REQUIRED_SCENARIOS: [&str; 11] = [
+pub const REQUIRED_SCENARIOS: [&str; 16] = [
     "baseline-batch8",
     "baseline-batch64",
     "diurnal",
@@ -49,6 +63,11 @@ pub const REQUIRED_SCENARIOS: [&str; 11] = [
     "shard-swap-under-load",
     "priority-inversion",
     "overload-shedding",
+    "flooding-tenant-firstseen",
+    "flooding-tenant-fairness",
+    "edf-beats-fifo",
+    "dropped-ticket-no-work",
+    "hot-shard-rebalance",
 ];
 
 /// The canonical named scenarios (see module docs). `smoke` shrinks
@@ -100,6 +119,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
             loss: Loss::Squared,
             train_n,
             train_lam: 0.1,
+            victim_model: None,
         });
     }
     // -- diurnal day/night curve over two logistic models (proba mix)
@@ -125,6 +145,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Logistic,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
     });
     // -- bursty on/off square wave; the off-phase gaps exercise the
     // delayed (max_wait timer) flush path
@@ -151,6 +172,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Squared,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
     });
     // -- Zipf heavy tail: one hot model, five cold ones
     out.push(Scenario {
@@ -171,6 +193,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Logistic,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
     });
     // -- worker panic mid-fit, then a recovery hot-swap: proves the
     // worker survives and counts the batches served while degraded
@@ -196,6 +219,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Squared,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
     });
     // -- hot swap under peak load: swap-visibility lag is the metric
     out.push(Scenario {
@@ -214,6 +238,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Squared,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
     });
     // -- queue saturation: all workers wedged, burst overflows the
     // bounded queue; rejections = burst - free capacity, exactly
@@ -239,6 +264,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Squared,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
     });
     // -- slow-reader stall: a mid-stream arrival gap, then a catch-up
     // burst (delayed flushes on the way in, deep batches on the way out)
@@ -263,6 +289,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Squared,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
     });
     // -- multi-tenant routing: four models through ONE router collector
     // (Zipf-skewed name mix), sharded store; every response must still
@@ -285,6 +312,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Squared,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
     });
     // -- hot swap on one tenant of a sharded multi-tenant store: the
     // swap lands on m0's shard while traffic keeps flowing to the rest
@@ -310,6 +338,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Squared,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
     });
     // -- priority inversion: wedge the workers (jobs-free saturation),
     // then burst doomed-deadline Normals + slow Batch fillers + one
@@ -346,6 +375,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Squared,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
     });
     // -- overload shedding: a tight max_in_flight gate under heavy
     // constant load; sheds must be typed Overloaded, never hangs
@@ -362,6 +392,7 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
             max_batch: 32,
             max_wait: Duration::from_micros(2_000),
             max_in_flight: 8,
+            ..BatchConfig::default()
         },
         faults: vec![],
         fit_workers: 2,
@@ -371,6 +402,128 @@ pub fn suite(smoke: bool, seed: u64) -> Vec<Scenario> {
         loss: Loss::Squared,
         train_n,
         train_lam: 0.1,
+        victim_model: None,
+    });
+    // -- flooding tenant A/B: one tenant floods the shared router while
+    // a victim tenant trickles; same workload + seed, two fairness
+    // policies. A non-zero flush_cost makes flushes occupy the
+    // collector (capacity 8 rows / ~1.7ms < arrival rate), so a backlog
+    // forms and the flush policy decides who waits. The victim's p99
+    // ratio between the two runs is the headline fairness metric.
+    for (name, fairness) in [
+        ("flooding-tenant-firstseen", FlushFairness::FirstSeen),
+        (
+            "flooding-tenant-fairness",
+            FlushFairness::DeficitRr { quantum: 2 },
+        ),
+    ] {
+        out.push(Scenario {
+            name,
+            workload: workload(
+                RateCurve::Constant { rps: 6_000.0 * rate },
+                ms(60),
+                2,
+                3.0, // zipf 3.0 over 2 models: ~8/9 flood, ~1/9 victim
+                0.0,
+            ),
+            batch: BatchConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(2_000),
+                fairness,
+                flush_cost: Duration::from_micros(1_667),
+                ..BatchConfig::default()
+            },
+            faults: vec![],
+            fit_workers: 2,
+            fit_capacity: 8,
+            store_shards: 4,
+            seed: sd(13), // same seed: same arrivals, different fairness
+            loss: Loss::Squared,
+            train_n,
+            train_lam: 0.1,
+            victim_model: Some(1),
+        });
+    }
+    // -- EDF within a lane: wedge the workers, then burst dated Normal
+    // jobs in REVERSE deadline order. Earliest-deadline-first dequeue
+    // meets every deadline at any worker count; the old FIFO lane would
+    // expire the earliest-due job (see Fault::DeadlineBurst docs).
+    out.push(Scenario {
+        name: "edf-beats-fifo",
+        workload: workload(
+            RateCurve::Constant { rps: 500.0 * rate },
+            ms(100),
+            1,
+            0.0,
+            0.0,
+        ),
+        batch: batch(8, 2_000),
+        faults: vec![Fault::DeadlineBurst {
+            at: ms(30),
+            jobs: 4,
+            job_cost: 5_000_003,
+        }],
+        fit_workers: 2,
+        fit_capacity: 16,
+        store_shards: 4,
+        seed: sd(14),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+        victim_model: None,
+    });
+    // -- cancellation propagation: slow trickle onto a deep max_wait
+    // timer (rows pool on the partial-batch deadline), then the driver
+    // drops the 3 oldest in-flight tickets. The router must release
+    // their admission slots at once and skip exactly those rows at
+    // flush — shed clients cost no decision_function work.
+    out.push(Scenario {
+        name: "dropped-ticket-no-work",
+        workload: workload(
+            RateCurve::Constant { rps: 400.0 * rate },
+            ms(100),
+            1,
+            0.0,
+            0.0,
+        ),
+        batch: batch(64, 20_000),
+        faults: vec![Fault::TicketDrop {
+            at: ms(50),
+            count: 3,
+        }],
+        fit_workers: 2,
+        fit_capacity: 8,
+        store_shards: 4,
+        seed: sd(15),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+        victim_model: None,
+    });
+    // -- hot-shard rebalancing: six tenants whose names all hash onto
+    // one shard of four (the fnv1a vnode ring clusters short names —
+    // see ROADMAP), Zipf-skewed traffic, then a mid-horizon rebalance.
+    // The hottest shard's share of routed reads must drop after the
+    // overlay re-homes hot names.
+    out.push(Scenario {
+        name: "hot-shard-rebalance",
+        workload: workload(
+            RateCurve::Constant { rps: 3_000.0 * rate },
+            ms(100),
+            6,
+            0.7,
+            0.0,
+        ),
+        batch: batch(16, 2_000),
+        faults: vec![Fault::Rebalance { at: ms(50) }],
+        fit_workers: 2,
+        fit_capacity: 8,
+        store_shards: 4,
+        seed: sd(16),
+        loss: Loss::Squared,
+        train_n,
+        train_lam: 0.1,
+        victim_model: None,
     });
     out
 }
@@ -436,6 +589,32 @@ pub fn report_line(o: &Outcome) -> String {
     if o.high_lead_jobs > 0 {
         line.push_str(&format!(" | high led {}", o.high_lead_jobs));
     }
+    if o.cancelled_requests > 0 {
+        line.push_str(&format!(
+            " | {} dropped ({} rows skipped)",
+            o.cancelled_requests, o.cancelled_rows
+        ));
+    }
+    if o.deadline_jobs > 0 {
+        line.push_str(&format!(
+            " | deadlines {}/{}",
+            o.deadline_met_jobs, o.deadline_jobs
+        ));
+    }
+    if let Some(p99) = o.victim_p99_us {
+        line.push_str(&format!(" | victim p99 {p99:.1}us"));
+    }
+    if let Some(moved) = o.rebalance_moved {
+        let (b, a) = (
+            o.hot_share_before.unwrap_or(0.0),
+            o.hot_share_after.unwrap_or(0.0),
+        );
+        line.push_str(&format!(
+            " | rebalance {moved} moved, hot {:.0}% -> {:.0}%",
+            b * 100.0,
+            a * 100.0
+        ));
+    }
     line
 }
 
@@ -458,6 +637,11 @@ impl SuiteReport {
         let swap = need("hot-swap-under-load");
         let inversion = need("priority-inversion");
         let shedding = need("overload-shedding");
+        let firstseen = need("flooding-tenant-firstseen");
+        let drr = need("flooding-tenant-fairness");
+        let edf = need("edf-beats-fifo");
+        let dropped = need("dropped-ticket-no-work");
+        let rebalance = need("hot-shard-rebalance");
         let ratio = b64.p99_us / b8.p99_us.max(1e-12);
         let recovery_rounds = panic_recovery
             .recovery_batches
@@ -465,6 +649,22 @@ impl SuiteReport {
         let swap_lag = swap
             .swap_lag_us
             .expect("hot-swap-under-load measures swap lag");
+        let fairness_ratio = firstseen
+            .victim_p99_us
+            .expect("flooding-tenant-firstseen tracks the victim")
+            / drr
+                .victim_p99_us
+                .expect("flooding-tenant-fairness tracks the victim")
+                .max(1e-12);
+        let edf_hit_rate =
+            edf.deadline_met_jobs as f64 / (edf.deadline_jobs as f64).max(1.0);
+        let rebalance_gain = rebalance
+            .hot_share_before
+            .expect("hot-shard-rebalance snapshots shard loads")
+            / rebalance
+                .hot_share_after
+                .expect("hot-shard-rebalance snapshots shard loads")
+                .max(1e-12);
         let requests_total: u64 = self.outcomes.iter().map(|o| o.requests).sum();
 
         let mut scenarios = String::new();
@@ -479,6 +679,17 @@ impl SuiteReport {
             if let Some(rounds) = o.recovery_batches {
                 extras.push_str(&format!(", \"recovery_batches\": {rounds}"));
             }
+            if let Some(p99) = o.victim_p99_us {
+                extras.push_str(&format!(", \"victim_p99_us\": {p99:.3}"));
+            }
+            if let Some(moved) = o.rebalance_moved {
+                extras.push_str(&format!(", \"rebalance_moved\": {moved}"));
+            }
+            if let (Some(b), Some(a)) = (o.hot_share_before, o.hot_share_after) {
+                extras.push_str(&format!(
+                    ", \"hot_share_before\": {b:.6}, \"hot_share_after\": {a:.6}"
+                ));
+            }
             scenarios.push_str(&format!(
                 "    {{\"name\": \"{}\", \"requests\": {}, \"responses\": {}, \
                  \"failed_responses\": {}, \"shutdown_responses\": {}, \
@@ -487,6 +698,8 @@ impl SuiteReport {
                  \"latency_us\": {{\"p50\": {:.3}, \"p90\": {:.3}, \"p99\": {:.3}, \"max\": {:.3}}}, \
                  \"bit_identity_checked\": {}, \"completed_jobs\": {}, \"failed_jobs\": {}, \
                  \"rejected_jobs\": {}, \"expired_jobs\": {}, \"high_lead_jobs\": {}, \
+                 \"cancelled_requests\": {}, \"cancelled_rows\": {}, \
+                 \"deadline_jobs\": {}, \"deadline_met_jobs\": {}, \
                  \"max_version_served\": {}{}}}",
                 o.name,
                 o.requests,
@@ -508,6 +721,10 @@ impl SuiteReport {
                 o.rejected_jobs,
                 o.expired_jobs,
                 o.high_lead_jobs,
+                o.cancelled_requests,
+                o.cancelled_rows,
+                o.deadline_jobs,
+                o.deadline_met_jobs,
                 o.max_version_served,
                 extras
             ));
@@ -521,6 +738,10 @@ impl SuiteReport {
              \"swap_visibility_lag_us\": {:.3},\n    \
              \"overload_shed_requests\": {},\n    \
              \"priority_queue_lead_jobs\": {},\n    \
+             \"fairness_p99_ratio\": {:.9e},\n    \
+             \"edf_deadline_hit_rate\": {:.6},\n    \
+             \"cancelled_flush_rows\": {},\n    \
+             \"rebalance_p99_gain\": {:.9e},\n    \
              \"sim_scenarios\": {},\n    \
              \"sim_requests_total\": {}\n  }}\n}}\n",
             if self.smoke { "smoke" } else { "full" },
@@ -532,6 +753,10 @@ impl SuiteReport {
             swap_lag,
             shedding.overloaded_responses,
             inversion.high_lead_jobs,
+            fairness_ratio,
+            edf_hit_rate,
+            dropped.cancelled_rows,
+            rebalance_gain,
             self.outcomes.len(),
             requests_total
         )
@@ -563,6 +788,22 @@ mod tests {
             assert_eq!(b8.seed, b64.seed);
             assert_eq!(b8.workload.horizon, b64.workload.horizon);
             assert_ne!(b8.batch.max_batch, b64.batch.max_batch);
+            // the fairness A/B pair differs ONLY in the flush policy
+            let fs = scs
+                .iter()
+                .find(|s| s.name == "flooding-tenant-firstseen")
+                .unwrap();
+            let dr = scs
+                .iter()
+                .find(|s| s.name == "flooding-tenant-fairness")
+                .unwrap();
+            assert_eq!(fs.seed, dr.seed);
+            assert_eq!(fs.workload.horizon, dr.workload.horizon);
+            assert_eq!(fs.batch.max_batch, dr.batch.max_batch);
+            assert_eq!(fs.batch.flush_cost, dr.batch.flush_cost);
+            assert_ne!(fs.batch.fairness, dr.batch.fairness);
+            assert_eq!(fs.victim_model, Some(1));
+            assert_eq!(dr.victim_model, Some(1));
         }
     }
 
@@ -592,6 +833,14 @@ mod tests {
             swap_lag_us: None,
             recovery_batches: None,
             max_version_served: 1,
+            cancelled_requests: 0,
+            cancelled_rows: 0,
+            victim_p99_us: None,
+            deadline_jobs: 0,
+            deadline_met_jobs: 0,
+            rebalance_moved: None,
+            hot_share_before: None,
+            hot_share_after: None,
         };
         let mut panic_recovery = outcome("worker-panic-recovery", 900.0);
         panic_recovery.failed_jobs = 1;
@@ -608,6 +857,22 @@ mod tests {
         let mut shedding = outcome("overload-shedding", 600.0);
         shedding.responses = 80;
         shedding.overloaded_responses = 20;
+        let mut firstseen = outcome("flooding-tenant-firstseen", 5000.0);
+        firstseen.victim_p99_us = Some(4000.0);
+        let mut drr = outcome("flooding-tenant-fairness", 5000.0);
+        drr.victim_p99_us = Some(500.0);
+        let mut edf = outcome("edf-beats-fifo", 700.0);
+        edf.deadline_jobs = 4;
+        edf.deadline_met_jobs = 4;
+        edf.completed_jobs = 6;
+        let mut dropped = outcome("dropped-ticket-no-work", 20000.0);
+        dropped.responses = 97;
+        dropped.cancelled_requests = 3;
+        dropped.cancelled_rows = 3;
+        let mut rebalance = outcome("hot-shard-rebalance", 800.0);
+        rebalance.rebalance_moved = Some(4);
+        rebalance.hot_share_before = Some(1.0);
+        rebalance.hot_share_after = Some(0.4);
         let report = SuiteReport {
             smoke: true,
             seed: 42,
@@ -618,6 +883,11 @@ mod tests {
                 swap,
                 inversion,
                 shedding,
+                firstseen,
+                drr,
+                edf,
+                dropped,
+                rebalance,
             ],
         };
         let json = report.to_bench_json();
@@ -633,11 +903,15 @@ mod tests {
         assert!((f("swap_visibility_lag_us") - 2100.5).abs() < 1e-9);
         assert_eq!(f("overload_shed_requests"), 20.0);
         assert_eq!(f("priority_queue_lead_jobs"), 4.0);
-        assert_eq!(f("sim_scenarios"), 6.0);
-        assert_eq!(f("sim_requests_total"), 600.0);
+        assert!((f("fairness_p99_ratio") - 8.0).abs() < 1e-9);
+        assert!((f("edf_deadline_hit_rate") - 1.0).abs() < 1e-12);
+        assert_eq!(f("cancelled_flush_rows"), 3.0);
+        assert!((f("rebalance_p99_gain") - 2.5).abs() < 1e-9);
+        assert_eq!(f("sim_scenarios"), 11.0);
+        assert_eq!(f("sim_requests_total"), 1100.0);
         // per-scenario entries parse too
         let entries = doc.get("scenarios").and_then(Json::as_arr).expect("array");
-        assert_eq!(entries.len(), 6);
+        assert_eq!(entries.len(), 11);
         // a single-line human report renders the optional fields
         let line = report_line(&report.outcomes[3]);
         assert!(line.contains("hot-swap-under-load") && line.contains("swap lag"));
@@ -645,5 +919,13 @@ mod tests {
         assert!(line.contains("2 expired") && line.contains("high led 4"));
         let line = report_line(&report.outcomes[5]);
         assert!(line.contains("20 shed"));
+        let line = report_line(&report.outcomes[7]);
+        assert!(line.contains("victim p99 500.0us"));
+        let line = report_line(&report.outcomes[8]);
+        assert!(line.contains("deadlines 4/4"));
+        let line = report_line(&report.outcomes[9]);
+        assert!(line.contains("3 dropped (3 rows skipped)"));
+        let line = report_line(&report.outcomes[10]);
+        assert!(line.contains("rebalance 4 moved, hot 100% -> 40%"));
     }
 }

@@ -26,6 +26,14 @@
 //! (or with 1 vs 8 workers) must produce `==` outcomes;
 //! `tests/simserve.rs` enforces exactly that.
 //!
+//! Most faults are injected through the fit queue; `TicketDrop` and
+//! `Rebalance` are *driver-side* — the runner drops live predict
+//! tickets (exercising cancellation propagation: the rows must cost no
+//! flush work) or calls the store's rebalance and snapshots per-shard
+//! loads around it. A scenario may also name a
+//! [`victim_model`](Scenario::victim_model) whose latencies are
+//! tracked separately — the fairness A/B observable.
+//!
 //! **Bit-identity under faults:** every drained response is checked
 //! bit-for-bit against a one-at-a-time [`Model::predict`] /
 //! `decision_function` / `predict_proba` on the model *version* that
@@ -72,6 +80,10 @@ pub struct Scenario {
     pub train_n: usize,
     /// Regularization of the pre-fitted models.
     pub train_lam: f64,
+    /// Track this model's latencies separately and report their p99 in
+    /// [`Outcome::victim_p99_us`] — the fairness A/B observable (the
+    /// non-flooding tenant in the flooding-tenant scenarios).
+    pub victim_model: Option<usize>,
 }
 
 /// Typed outcome stats of one scenario run. `PartialEq` on purpose:
@@ -126,6 +138,27 @@ pub struct Outcome {
     pub recovery_batches: Option<u64>,
     /// Highest model version that served a response.
     pub max_version_served: u64,
+    /// Predict tickets the driver dropped mid-flight
+    /// ([`Fault::TicketDrop`]) — shed clients whose rows must cost no
+    /// `decision_function` work.
+    pub cancelled_requests: u64,
+    /// Pending rows the router skipped at flush because their ticket
+    /// was dropped (the server's own cancellation counter; covers
+    /// every server in the scenario).
+    pub cancelled_rows: u64,
+    /// p99 latency (virtual µs) over the victim model's responses,
+    /// when the scenario names a [`Scenario::victim_model`].
+    pub victim_p99_us: Option<f64>,
+    /// [`Fault::DeadlineBurst`] accounting: jobs submitted with
+    /// deadlines, and how many completed within them (EDF observable).
+    pub deadline_jobs: u64,
+    pub deadline_met_jobs: u64,
+    /// [`Fault::Rebalance`] accounting: names re-homed, and the
+    /// hottest shard's share of routed store reads before/after the
+    /// move (1.0 = one shard took every read in that window).
+    pub rebalance_moved: Option<u64>,
+    pub hot_share_before: Option<f64>,
+    pub hot_share_after: Option<f64>,
 }
 
 /// Latency percentile by nearest-rank on a sorted slice.
@@ -167,6 +200,9 @@ enum JobKind {
     /// `Fault::PriorityBurst`'s doomed Normal job — its deadline lapses
     /// while the workers are wedged, so it must fail typed at dequeue.
     Expired,
+    /// `Fault::DeadlineBurst`'s dated Normal job — under EDF every one
+    /// of them is dequeued inside its deadline and completes.
+    DeadlineJob,
 }
 
 enum Ev {
@@ -183,6 +219,8 @@ struct InFlight {
 /// Everything the drain/poll observers mutate.
 struct Observed {
     latencies_us: Vec<f64>,
+    /// Latencies of the victim model's responses only (fairness A/B).
+    victim_latencies_us: Vec<f64>,
     responses: u64,
     failed_responses: u64,
     shutdown_responses: u64,
@@ -202,6 +240,15 @@ struct Observed {
     /// swap became visible.
     panic_batches: Option<u64>,
     recovery_batches: Option<u64>,
+    /// Tickets the driver dropped (`Fault::TicketDrop`).
+    cancelled_requests: u64,
+    /// `Fault::DeadlineBurst` totals: submitted with deadlines / done.
+    deadline_jobs: u64,
+    deadline_met_jobs: u64,
+    /// Per-shard store loads at the `Fault::Rebalance` instant, and
+    /// how many names the rebalance moved.
+    rebalance_loads_before: Option<Vec<u64>>,
+    rebalance_moved: Option<u64>,
 }
 
 /// Run the scenario to quiescence (see module docs).
@@ -295,6 +342,7 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
     // -- run the event loop
     let mut obs = Observed {
         latencies_us: Vec::with_capacity(arrivals.len()),
+        victim_latencies_us: Vec::new(),
         responses: 0,
         failed_responses: 0,
         shutdown_responses: 0,
@@ -309,6 +357,11 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
         swap_visible_at: None,
         panic_batches: None,
         recovery_batches: None,
+        cancelled_requests: 0,
+        deadline_jobs: 0,
+        deadline_met_jobs: 0,
+        rebalance_loads_before: None,
+        rebalance_moved: None,
     };
     let mut tickets: Vec<InFlight> = Vec::new();
     let mut pending_jobs: Vec<(JobId, JobKind)> = Vec::new();
@@ -325,7 +378,7 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
         // jobs before tickets: a hot-swap publish must be in the
         // version map before a response served by it is checked
         poll_jobs(queue.as_ref(), &mut pending_jobs, &mut obs, &store, &mut versions, &sim);
-        drain_tickets(&mut tickets, &arrivals, &mut obs, &versions, &sim, || {
+        drain_tickets(&mut tickets, &arrivals, sc.victim_model, &mut obs, &versions, &sim, || {
             batches_now(&server)
         });
 
@@ -358,11 +411,14 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
                             &runtime_faults[*k],
                             sc,
                             &train0,
-                            queue.as_ref().expect("fault scenarios build a queue"),
+                            queue.as_ref(),
+                            &store,
                             sim.now(),
+                            &mut tickets,
                             &mut pending_jobs,
                             &mut rejected_jobs,
                             &mut pending_panic_snapshot,
+                            &mut obs,
                         )?,
                     }
                 }
@@ -372,7 +428,7 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
     }
     // events exhausted and nothing scheduled: one last observation pass
     poll_jobs(queue.as_ref(), &mut pending_jobs, &mut obs, &store, &mut versions, &sim);
-    drain_tickets(&mut tickets, &arrivals, &mut obs, &versions, &sim, || {
+    drain_tickets(&mut tickets, &arrivals, sc.victim_model, &mut obs, &versions, &sim, || {
         batches_now(&server)
     });
     assert!(
@@ -387,9 +443,29 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
     let batches = batches_now(&server);
     let served: u64 = server.counters().requests.load(Ordering::Relaxed);
     server.shutdown();
+    // after shutdown: the final flush has skipped any dropped rows
+    let cancelled_rows = server.counters().cancelled.load(Ordering::Relaxed);
     if let Some(q) = queue.as_mut() {
         q.shutdown();
     }
+    // rebalance observable: the hot shard's share of routed store
+    // reads, before the rebalance instant vs after it
+    let hot_share = |loads: &[u64]| -> Option<f64> {
+        let total: u64 = loads.iter().sum();
+        (total > 0).then(|| loads.iter().max().copied().unwrap_or(0) as f64 / total as f64)
+    };
+    let (hot_share_before, hot_share_after) = match &obs.rebalance_loads_before {
+        Some(before) => {
+            let after: Vec<u64> = store
+                .shard_loads()
+                .iter()
+                .zip(before.iter())
+                .map(|(total, b)| total.saturating_sub(*b))
+                .collect();
+            (hot_share(before), hot_share(&after))
+        }
+        None => (None, None),
+    };
     for inflight in tickets {
         match inflight.ticket.poll() {
             Some(Err(ShotgunError::ServerShutdown)) => obs.shutdown_responses += 1,
@@ -400,6 +476,7 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
     }
 
     obs.latencies_us.sort_by(|a, b| a.total_cmp(b));
+    obs.victim_latencies_us.sort_by(|a, b| a.total_cmp(b));
     let virtual_seconds = end as f64 * 1e-9;
     Ok(Outcome {
         name: sc.name.to_string(),
@@ -438,20 +515,54 @@ pub fn run(sc: &Scenario) -> Result<Outcome, ShotgunError> {
         },
         recovery_batches: obs.recovery_batches,
         max_version_served: obs.max_version,
+        cancelled_requests: obs.cancelled_requests,
+        cancelled_rows,
+        victim_p99_us: sc
+            .victim_model
+            .map(|_| percentile(&obs.victim_latencies_us, 0.99)),
+        deadline_jobs: obs.deadline_jobs,
+        deadline_met_jobs: obs.deadline_met_jobs,
+        rebalance_moved: obs.rebalance_moved,
+        hot_share_before,
+        hot_share_after,
     })
 }
 
 /// Inject one runtime fault (driver-side; see `Fault` docs).
+#[allow(clippy::too_many_arguments)]
 fn inject(
     fault: &Fault,
     sc: &Scenario,
     train0: &(Arc<Design>, Arc<Vec<f64>>),
-    queue: &FitQueue,
+    queue: Option<&FitQueue>,
+    store: &ModelStore,
     now: Tick,
+    tickets: &mut Vec<InFlight>,
     pending_jobs: &mut Vec<(JobId, JobKind)>,
     rejected_jobs: &mut u64,
     pending_panic_snapshot: &mut bool,
+    obs: &mut Observed,
 ) -> Result<(), ShotgunError> {
+    // driver-only faults first: they need no FitQueue
+    match *fault {
+        Fault::TicketDrop { count, .. } => {
+            // drop the `count` OLDEST unresolved tickets (front of the
+            // submission-ordered vec): each drop releases its admission
+            // slot immediately and flags the pending row so the
+            // collector skips it at flush
+            let n = count.min(tickets.len());
+            tickets.drain(..n); // dropping a ticket flags + releases it
+            obs.cancelled_requests += n as u64;
+            return Ok(());
+        }
+        Fault::Rebalance { .. } => {
+            obs.rebalance_loads_before = Some(store.shard_loads());
+            obs.rebalance_moved = Some(store.rebalance() as u64);
+            return Ok(());
+        }
+        _ => {}
+    }
+    let queue = queue.expect("queue faults build a FitQueue");
     let base_job = |lam: f64| {
         FitJob::new(
             Arc::clone(&train0.0),
@@ -547,7 +658,55 @@ fn inject(
             }
             queue.kick_workers();
         }
+        Fault::DeadlineBurst { jobs, job_cost, .. } => {
+            // wedge every worker so the whole dated burst lands in the
+            // Normal lane before anyone pops. Wedges carry deadlines
+            // just under the burst's earliest (they are dequeued at
+            // `now`, so never expired) — under EDF a dated burst would
+            // otherwise jump the dateless wedges. ONE wedge is short
+            // (`job_cost`); the rest sit out the whole burst, with
+            // staggered costs so no two completions tie.
+            for w in 0..sc.fit_workers.max(1) {
+                let cost = if w == 0 {
+                    job_cost
+                } else {
+                    (jobs as Tick + 2) * job_cost + w as Tick * 1_000_001
+                };
+                match queue.try_submit_deferred(
+                    base_job(sc.train_lam)
+                        .deadline_at(now + 1 + w as Tick)
+                        .fault(FitFault::SlowFit { cost }),
+                )? {
+                    Some(id) => pending_jobs.push((id, JobKind::Wedge)),
+                    None => *rejected_jobs += 1,
+                }
+            }
+            // the dated burst, submitted in REVERSE deadline order
+            // (latest first): rank r (0 = earliest) is due at
+            // now + job_cost*(r+2) and costs job_cost. The short-wedged
+            // worker frees at now + job_cost and EDF-drains rank r at
+            // now + job_cost*(r+1) — inside its deadline, every time.
+            // FIFO would pop rank 0 LAST at now + job_cost*jobs and
+            // expire it for any jobs >= 3.
+            for r in (0..jobs).rev() {
+                match queue.try_submit_deferred(
+                    base_job(sc.train_lam)
+                        .deadline_at(now + job_cost * (r as Tick + 2))
+                        .fault(FitFault::SlowFit { cost: job_cost }),
+                )? {
+                    Some(id) => {
+                        pending_jobs.push((id, JobKind::DeadlineJob));
+                        obs.deadline_jobs += 1;
+                    }
+                    None => *rejected_jobs += 1,
+                }
+            }
+            queue.kick_workers();
+        }
         Fault::ClientStall { .. } => unreachable!("applied to the workload pre-pass"),
+        Fault::TicketDrop { .. } | Fault::Rebalance { .. } => {
+            unreachable!("driver-side faults handled above")
+        }
     }
     Ok(())
 }
@@ -589,6 +748,11 @@ fn poll_jobs(
         match queue.status(id) {
             Some(JobState::Done(_)) => {
                 obs.completed_jobs += 1;
+                if kind == JobKind::DeadlineJob {
+                    // it ran, so the dequeue-time check passed — the
+                    // deadline was met
+                    obs.deadline_met_jobs += 1;
+                }
                 if kind == JobKind::Swap {
                     let rec = store.get(&model_name(0)).expect("published name");
                     versions.insert((0, rec.version), Arc::clone(&rec.model));
@@ -613,6 +777,16 @@ fn poll_jobs(
                         );
                         obs.expired_jobs += 1;
                     }
+                    // a DeadlineBurst job that missed is a typed expiry
+                    // (deadline_met_jobs then undercounts deadline_jobs
+                    // — the scenario assertion catches it)
+                    JobKind::DeadlineJob => {
+                        assert!(
+                            matches!(err, ShotgunError::DeadlineExpired { .. }),
+                            "dated job {id} failed as {err}, not DeadlineExpired"
+                        );
+                        obs.expired_jobs += 1;
+                    }
                     _ => panic!("job {id} ({kind:?}) failed unexpectedly: {err}"),
                 }
                 let _ = queue.take(id);
@@ -628,6 +802,7 @@ fn poll_jobs(
 fn drain_tickets(
     tickets: &mut Vec<InFlight>,
     arrivals: &[Arrival],
+    victim: Option<usize>,
     obs: &mut Observed,
     versions: &HashMap<(usize, u64), Arc<Model>>,
     sim: &super::clock::SimClock,
@@ -647,8 +822,11 @@ fn drain_tickets(
             Err(_) => obs.failed_responses += 1,
             Ok(resp) => {
                 obs.responses += 1;
-                obs.latencies_us
-                    .push(now.saturating_sub(inflight.submitted) as f64 * 1e-3);
+                let latency_us = now.saturating_sub(inflight.submitted) as f64 * 1e-3;
+                obs.latencies_us.push(latency_us);
+                if victim == Some(arrival.model) {
+                    obs.victim_latencies_us.push(latency_us);
+                }
                 obs.max_version = obs.max_version.max(resp.model_version);
                 // bit-identity against sequential predict on the exact
                 // version that served the batch
@@ -733,6 +911,7 @@ mod tests {
             loss: Loss::Squared,
             train_n: 40,
             train_lam: 0.2,
+            victim_model: None,
         };
         let out = run(&sc).expect("scenario runs");
         assert!(out.requests > 0);

@@ -15,13 +15,15 @@
 //! exactly.
 
 use shotgun::api::serve::{
-    batch_design, BatchConfig, BatchPredictor, BatchServer, FitJob, FitQueue, JobState, ModelStore,
+    batch_design, BatchConfig, BatchPredictor, BatchServer, FitJob, FitQueue, FlushFairness,
+    JobState, ModelStore,
 };
 use shotgun::api::{Fit, Model};
 use shotgun::data::synth;
 use shotgun::objective::Loss;
 use shotgun::simserve::Clock;
 use shotgun::sparsela::Design;
+use shotgun::testkit;
 use shotgun::testkit::requests::{stream, StreamSpec};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -194,6 +196,52 @@ fn batch_server_matches_the_synchronous_front_on_virtual_time() {
         assert_eq!(got.prediction.to_bits(), want.prediction.to_bits());
         assert_eq!(got.score.to_bits(), want.score.to_bits());
     }
+    server.shutdown();
+}
+
+#[test]
+fn resolved_tickets_free_their_admission_slots_at_resolve_time() {
+    // regression: the in-flight gate used to decrement only when a
+    // ticket was DROPPED, so a client that kept resolved tickets alive
+    // (to read responses later) eventually wedged admission shut. The
+    // slot must free when the response is delivered, not when the
+    // ticket goes away.
+    let model = fitted_model(Loss::Squared, 13);
+    let d = model.d();
+    let store = Arc::new(ModelStore::new());
+    store.publish("m", model);
+    let clock = Clock::sim();
+    let sim = Arc::clone(clock.sim_handle().unwrap());
+    let mut server = BatchServer::spawn_with_clock(
+        Arc::clone(&store),
+        "m",
+        BatchConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            max_in_flight: 4,
+            ..Default::default()
+        },
+        clock,
+    );
+    let requests = stream(&StreamSpec::new(d, 12), 17);
+    let mut kept = Vec::new(); // resolved tickets deliberately kept alive
+    for (k, chunk) in requests.chunks(4).enumerate() {
+        let tickets: Vec<_> = chunk.iter().map(|r| server.submit(r.clone())).collect();
+        sim.until_quiescent(); // backlog == max_batch: flushes at once
+        for (i, t) in tickets.iter().enumerate() {
+            assert!(
+                t.poll().expect("full batch flushed").is_ok(),
+                "chunk {k} ticket {i}: shed although the previous chunk resolved"
+            );
+        }
+        kept.extend(tickets);
+    }
+    assert_eq!(
+        server.counters().shed.load(Ordering::Relaxed),
+        0,
+        "resolved-but-alive tickets must not occupy admission slots"
+    );
+    drop(kept);
     server.shutdown();
 }
 
@@ -475,6 +523,171 @@ fn routed_multi_model_batches_are_bit_identical_to_sequential() {
         drop(submitter);
         server.shutdown();
     }
+}
+
+#[test]
+fn deficit_round_robin_flush_partitioning_follows_the_quantum_law() {
+    // three fitted tenants behind one router collector; cases randomize
+    // per-model backlogs, the arrival interleaving, and the DRR
+    // quantum. The laws under test:
+    //  * FirstSeen flushes are exactly the global arrival order;
+    //  * DeficitRr with max_batch = 3*quantum gives every pending model
+    //    at least min(quantum, pending) rows per flush, so a model with
+    //    p backlogged rows drains within ceil(p/quantum) flushes — for
+    //    ANY interleaving — and rows never reorder within a model;
+    //  * under BOTH policies every response stays bit-identical to a
+    //    one-at-a-time predict on its own model.
+    let models: Vec<Model> = [101u64, 202, 303]
+        .iter()
+        .map(|&seed| fitted_model(Loss::Squared, seed))
+        .collect();
+    let d = models[0].d();
+    let store = Arc::new(ModelStore::with_shards(4));
+    for (i, m) in models.iter().enumerate() {
+        store.publish(&format!("m{i}"), m.clone());
+    }
+
+    testkit::check(
+        "serving-drr-quantum-law",
+        0xD22,
+        12,
+        |rng| {
+            let quantum = 1 + rng.below(3);
+            let counts = [1 + rng.below(9), 1 + rng.below(9), 1 + rng.below(9)];
+            let mut order: Vec<usize> = (0..3)
+                .flat_map(|m| std::iter::repeat(m).take(counts[m]))
+                .collect();
+            // Fisher–Yates over the arrival interleaving
+            for i in (1..order.len()).rev() {
+                let j = rng.below(i + 1);
+                order.swap(i, j);
+            }
+            (quantum, counts, order, rng.below(1 << 30) as u64)
+        },
+        |(quantum, counts, order, seed)| {
+            let requests = stream(&StreamSpec::new(d, order.len()), *seed);
+            for fairness in [
+                FlushFairness::FirstSeen,
+                FlushFairness::DeficitRr { quantum: *quantum },
+            ] {
+                let clock = Clock::sim();
+                let sim = Arc::clone(clock.sim_handle().unwrap());
+                let mut server = BatchServer::spawn_router_with_clock(
+                    Arc::clone(&store),
+                    BatchConfig {
+                        max_batch: 3 * quantum,
+                        // all rows land at tick 0, so the timer deadline
+                        // is long past at every wake: each wake flushes
+                        max_wait: Duration::from_micros(1),
+                        fairness,
+                        // a non-zero flush cost separates consecutive
+                        // flushes in virtual time, making each flush's
+                        // composition observable from ticket resolution
+                        flush_cost: Duration::from_micros(1_000),
+                        ..Default::default()
+                    },
+                    clock,
+                );
+                let submitter = server.submitter();
+                let tickets: Vec<_> = order
+                    .iter()
+                    .zip(&requests)
+                    .map(|(m, r)| submitter.submit_to(&format!("m{m}"), r.clone()))
+                    .collect();
+                let mut resolved = vec![false; tickets.len()];
+                let drain = |resolved: &mut Vec<bool>| -> Result<Vec<usize>, String> {
+                    let mut new_rows = Vec::new();
+                    for (i, t) in tickets.iter().enumerate() {
+                        if resolved[i] {
+                            continue;
+                        }
+                        let Some(out) = t.poll() else { continue };
+                        let resp = out.map_err(|e| format!("row {i} failed: {e:?}"))?;
+                        let model = &models[order[i]];
+                        let single =
+                            batch_design(std::slice::from_ref(&requests[i]), d).unwrap();
+                        let want = model.predict(&single).unwrap()[0];
+                        if resp.prediction.to_bits() != want.to_bits() {
+                            return Err(format!(
+                                "{fairness:?}: row {i} prediction diverged from its model"
+                            ));
+                        }
+                        let want = model.decision_function(&single).unwrap()[0];
+                        if resp.score.to_bits() != want.to_bits() {
+                            return Err(format!(
+                                "{fairness:?}: row {i} score diverged from its model"
+                            ));
+                        }
+                        resolved[i] = true;
+                        new_rows.push(i);
+                    }
+                    Ok(new_rows)
+                };
+                // each deadline wake dispatches at most one flush (the
+                // flush-cost sleep separates them), so the newly
+                // resolved tickets after a wake ARE that flush's rows
+                let mut flushes: Vec<Vec<usize>> = Vec::new();
+                sim.until_quiescent();
+                let rows = drain(&mut resolved)?;
+                if !rows.is_empty() {
+                    flushes.push(rows);
+                }
+                while let Some(t) = sim.next_deadline() {
+                    sim.advance_to(t);
+                    sim.until_quiescent();
+                    let rows = drain(&mut resolved)?;
+                    if !rows.is_empty() {
+                        flushes.push(rows);
+                    }
+                }
+                if !resolved.iter().all(|&r| r) {
+                    return Err(format!("{fairness:?}: rows left unserved"));
+                }
+                let flat: Vec<usize> = flushes.concat();
+                match fairness {
+                    FlushFairness::FirstSeen => {
+                        // global FIFO: flushes are arrival-order slices
+                        if flat != (0..order.len()).collect::<Vec<_>>() {
+                            return Err(format!(
+                                "FirstSeen must drain in arrival order, got {flat:?}"
+                            ));
+                        }
+                    }
+                    FlushFairness::DeficitRr { quantum } => {
+                        for m in 0..3 {
+                            // drained within ceil(p/quantum) flushes
+                            let bound = counts[m].div_ceil(quantum);
+                            let early: usize = flushes
+                                .iter()
+                                .take(bound)
+                                .map(|f| f.iter().filter(|&&i| order[i] == m).count())
+                                .sum();
+                            if early != counts[m] {
+                                return Err(format!(
+                                    "model {m}: {early}/{} rows in the first {bound} \
+                                     flushes (quantum {quantum}, order {order:?})",
+                                    counts[m]
+                                ));
+                            }
+                            // FIFO within the model: arrival indices of
+                            // m never decrease across the flush sequence
+                            let seq: Vec<usize> =
+                                flat.iter().copied().filter(|&i| order[i] == m).collect();
+                            if seq.windows(2).any(|w| w[0] > w[1]) {
+                                return Err(format!(
+                                    "model {m}: rows reordered within the model: {seq:?}"
+                                ));
+                            }
+                        }
+                    }
+                }
+                drop(tickets);
+                drop(submitter);
+                server.shutdown();
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

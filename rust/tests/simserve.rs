@@ -12,7 +12,12 @@
 //!    stall deepens batches without losing requests — and batch
 //!    bit-identity holds under every fault (the scenario runner checks
 //!    each response; a violation panics the run).
-//! 4. **Workload laws** (property tests over random specs): same seed →
+//! 4. **QoS laws**: deficit round-robin protects the victim tenant of
+//!    a flooding neighbor, EDF meets every deadline FIFO would expire,
+//!    dropped tickets cost zero flush rows, and a rebalance moves heat
+//!    off the hot shard — each deterministic and (where a queue is
+//!    involved) worker-count independent.
+//! 5. **Workload laws** (property tests over random specs): same seed →
 //!    bit-identical streams, arrival counts integrate the rate curve,
 //!    and the Zipf popularity tail matches its exponent.
 
@@ -60,6 +65,12 @@ fn fault_scenarios_are_worker_count_independent() {
         "multi-model-routing",
         "shard-swap-under-load",
         "overload-shedding",
+        // queue-free QoS scenarios: fit_workers is inert, but the whole
+        // outcome must still be identical whatever it is set to
+        "flooding-tenant-firstseen",
+        "flooding-tenant-fairness",
+        "dropped-ticket-no-work",
+        "hot-shard-rebalance",
     ] {
         let base = named(42, name);
         let outcomes: Vec<_> = [1usize, 2, 4]
@@ -87,11 +98,12 @@ fn suite_outcomes_hold_the_declared_invariants_and_feed_the_bench_json() {
         assert!(names.contains(&required), "suite must run {required}");
     }
     for o in &rep.outcomes {
-        // every request either served or shed with a typed Overloaded —
-        // never dropped, failed, or lost to a shutdown race; every
-        // served response checked bit-for-bit against sequential predict
+        // every request either served, shed with a typed Overloaded, or
+        // deliberately dropped by the driver — never failed or lost to
+        // a shutdown race; every served response checked bit-for-bit
+        // against sequential predict
         assert_eq!(
-            o.responses + o.overloaded_responses,
+            o.responses + o.overloaded_responses + o.cancelled_requests,
             o.requests,
             "{}: lost requests",
             o.name
@@ -100,6 +112,10 @@ fn suite_outcomes_hold_the_declared_invariants_and_feed_the_bench_json() {
         assert_eq!(o.shutdown_responses, 0, "{}: shutdown races", o.name);
         if o.name != "overload-shedding" {
             assert_eq!(o.overloaded_responses, 0, "{}: unexpected sheds", o.name);
+        }
+        if o.name != "dropped-ticket-no-work" {
+            assert_eq!(o.cancelled_requests, 0, "{}: unexpected drops", o.name);
+            assert_eq!(o.cancelled_rows, 0, "{}: unexpected skipped rows", o.name);
         }
         assert_eq!(o.bit_identity_checked, o.responses, "{}", o.name);
         assert!(o.requests > 0 && o.batches > 0, "{}: empty run", o.name);
@@ -156,6 +172,39 @@ fn suite_outcomes_hold_the_declared_invariants_and_feed_the_bench_json() {
     let shard_swap = rep.outcome("shard-swap-under-load").expect("ran");
     assert_eq!(shard_swap.max_version_served, 2);
     assert!(shard_swap.swap_lag_us.expect("swap observed") > 0.0);
+    // flooding tenant A/B: same arrivals, and deficit round-robin must
+    // cut the victim tenant's p99 vs first-seen draining
+    let fs = rep.outcome("flooding-tenant-firstseen").expect("ran");
+    let dr = rep.outcome("flooding-tenant-fairness").expect("ran");
+    assert_eq!(fs.requests, dr.requests, "A/B pair shares its workload");
+    let fs_p99 = fs.victim_p99_us.expect("victim tracked");
+    let dr_p99 = dr.victim_p99_us.expect("victim tracked");
+    assert!(
+        fs_p99 > dr_p99,
+        "DeficitRr must protect the victim: FirstSeen p99 {fs_p99} vs DRR {dr_p99}"
+    );
+    // EDF: every dated job of the burst completes inside its deadline
+    let edf = rep.outcome("edf-beats-fifo").expect("ran");
+    assert_eq!(edf.deadline_jobs, 4);
+    assert_eq!(edf.deadline_met_jobs, 4, "EDF meets every deadline");
+    assert_eq!(edf.expired_jobs, 0);
+    // dropped tickets: exactly the dropped rows are skipped at flush
+    let dropped = rep.outcome("dropped-ticket-no-work").expect("ran");
+    assert_eq!(dropped.cancelled_requests, 3, "driver dropped 3 tickets");
+    assert_eq!(dropped.cancelled_rows, 3, "their rows cost no flush work");
+    // rebalance: heat moves off the (degenerately) hot shard
+    let reb = rep.outcome("hot-shard-rebalance").expect("ran");
+    assert!(reb.rebalance_moved.expect("measured") >= 1, "names re-homed");
+    let before = reb.hot_share_before.expect("snapshotted");
+    let after = reb.hot_share_after.expect("snapshotted");
+    assert!(
+        before > 0.99,
+        "the fnv1a vnode ring homes every mN name on one shard: {before}"
+    );
+    assert!(
+        after < before,
+        "rebalance must spread routed reads: {before} -> {after}"
+    );
 
     // the bench document is valid JSON with the derived fields the CI
     // gate (scripts/check_bench.py) requires to be finite and positive
@@ -171,6 +220,10 @@ fn suite_outcomes_hold_the_declared_invariants_and_feed_the_bench_json() {
         "swap_visibility_lag_us",
         "overload_shed_requests",
         "priority_queue_lead_jobs",
+        "fairness_p99_ratio",
+        "edf_deadline_hit_rate",
+        "cancelled_flush_rows",
+        "rebalance_p99_gain",
         "sim_scenarios",
         "sim_requests_total",
     ] {
@@ -197,6 +250,47 @@ fn priority_inversion_laws_hold_at_any_worker_count() {
         // 1 High + 4 fillers + `workers` wedges complete
         assert_eq!(out.completed_jobs, 5 + workers as u64, "{workers} workers");
         assert_eq!(out.responses, out.requests, "serving must not notice");
+    }
+}
+
+#[test]
+fn edf_deadline_laws_hold_at_any_worker_count() {
+    // the DeadlineBurst is built so rank r (0 = earliest due) dequeues
+    // at wedge-release + job_cost*(r+1), inside its deadline of
+    // job_cost*(r+2) — a lane law, not a timing accident. Only the
+    // wedge count varies with workers: completed = workers + jobs.
+    let base = named(42, "edf-beats-fifo");
+    for workers in [1usize, 2, 4] {
+        let mut sc = base.clone();
+        sc.fit_workers = workers;
+        let out = run(&sc).expect("scenario runs");
+        assert_eq!(out.deadline_jobs, 4, "{workers} workers");
+        assert_eq!(out.deadline_met_jobs, 4, "{workers} workers");
+        assert_eq!(out.expired_jobs, 0, "{workers} workers");
+        assert_eq!(out.failed_jobs, 0, "{workers} workers");
+        assert_eq!(out.rejected_jobs, 0, "{workers} workers");
+        assert_eq!(out.completed_jobs, 4 + workers as u64, "{workers} workers");
+        assert_eq!(out.responses, out.requests, "serving must not notice");
+    }
+}
+
+#[test]
+fn deficit_round_robin_protects_the_victim_tenant_across_seeds() {
+    // the fairness win is a policy property, not a seed accident: under
+    // a standing backlog the FirstSeen victim waits its global FIFO
+    // position, while DRR serves its (short) per-model queue every flush
+    for seed in [7u64, 42] {
+        let fs = run(&named(seed, "flooding-tenant-firstseen")).expect("runs");
+        let dr = run(&named(seed, "flooding-tenant-fairness")).expect("runs");
+        assert_eq!(fs.requests, dr.requests, "seed {seed}: same arrivals");
+        assert_eq!(fs.responses, fs.requests, "seed {seed}: nothing lost");
+        assert_eq!(dr.responses, dr.requests, "seed {seed}: nothing lost");
+        let fs_p99 = fs.victim_p99_us.expect("victim tracked");
+        let dr_p99 = dr.victim_p99_us.expect("victim tracked");
+        assert!(
+            fs_p99 > dr_p99,
+            "seed {seed}: FirstSeen victim p99 {fs_p99} must exceed DRR {dr_p99}"
+        );
     }
 }
 

@@ -12,8 +12,10 @@
 # derived.clustered_vs_uniform_epochs). Finally run the deterministic
 # serving simulator (`repro sim`) and refresh BENCH_simserve.json
 # (derived.batching_latency_p99_ratio, derived.fault_recovery_rounds,
-# derived.swap_visibility_lag_us — all on virtual time, so identical
-# across machines and runs).
+# derived.swap_visibility_lag_us, plus the QoS quartet:
+# derived.fairness_p99_ratio, derived.edf_deadline_hit_rate,
+# derived.cancelled_flush_rows, derived.rebalance_p99_gain — all on
+# virtual time, so identical across machines and runs).
 #
 # Usage:
 #   scripts/bench.sh [extra cargo bench args]   full run (perf numbers)
@@ -42,9 +44,12 @@ fi
 
 if [[ "$SMOKE" == "1" ]]; then
   export SHOTGUN_BENCH_SMOKE=1
+  # smoke replays under deficit round-robin so the DRR flush path gets
+  # a real-threaded CLI exercise too (the sim suite A/Bs it on virtual
+  # time); the full run keeps the first-seen default
   SERVE_ARGS=(--data imaging:256x512:0.02 --lam 0.1 --solver shotgun
     --requests 2000 --max-batch 32 --max-wait-us 500 --clients 4
-    --models 4 --shards 4)
+    --models 4 --shards 4 --fairness drr:8)
   echo "== bench.sh --smoke: tiny sizes, CI plumbing check =="
 else
   SERVE_ARGS=(--data imaging:2048x4096:0.005 --lam 0.1 --solver shotgun

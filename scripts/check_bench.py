@@ -61,8 +61,18 @@ REQUIRED = {
         # always happen, hence > 0) and priority_queue_lead_jobs (batch
         # fillers still pending when the High job finished; > 0 proves the
         # priority lanes actually reorder work).
+        # PR-10 adds the QoS quartet: fairness_p99_ratio (the flooding
+        # scenario's victim p99 under FirstSeen over DeficitRr),
+        # edf_deadline_hit_rate (fraction of dated burst jobs completed
+        # inside their deadlines — the suite is built so EDF hits 1.0),
+        # cancelled_flush_rows (rows skipped at flush after their ticket
+        # was dropped — the scenario drops 3, so > 0), and
+        # rebalance_p99_gain (hot shard's read share before/after the
+        # rebalance re-homes names).
         "positive": ["batching_latency_p99_ratio", "fault_recovery_rounds",
-                     "overload_shed_requests", "priority_queue_lead_jobs"],
+                     "overload_shed_requests", "priority_queue_lead_jobs",
+                     "fairness_p99_ratio", "edf_deadline_hit_rate",
+                     "cancelled_flush_rows", "rebalance_p99_gain"],
         "finite": ["swap_visibility_lag_us"],
     },
 }

@@ -21,8 +21,9 @@ cargo fmt --all -- --check
 echo "== cargo clippy (deny warnings) =="
 cargo clippy --workspace --all-targets -- -D warnings
 
-echo "== cargo doc (deny warnings) =="
-RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
+echo "== cargo doc (deny warnings + broken intra-doc links) =="
+RUSTDOCFLAGS="-D warnings -D rustdoc::broken-intra-doc-links" \
+  cargo doc --no-deps --workspace
 
 echo "== feature-gated xla surface (stub + integration tests) =="
 cargo check --features xla --all-targets
@@ -44,8 +45,10 @@ cargo test -q --test serving --test golden_fixtures --test registry_capabilities
 echo "== sim-scenarios: deterministic traffic & fault simulator =="
 # run-to-run and cross-worker-count Outcome equality for the named
 # scenario suite (incl. the multi-tenant quartet: multi-model-routing,
-# shard-swap-under-load, priority-inversion, overload-shedding), fault
-# semantics, and the workload-generator laws
+# shard-swap-under-load, priority-inversion, overload-shedding, and the
+# PR-10 QoS scenarios: flooding-tenant A/B, edf-beats-fifo,
+# dropped-ticket-no-work, hot-shard-rebalance), fault semantics, and
+# the workload-generator laws
 cargo test -q --test simserve
 
 echo "== doctests: cargo test --doc =="
